@@ -1,0 +1,61 @@
+//! Cross-block-dependency sweep (paper Sec. 5.3 / Appendix D): vary the
+//! sliding-window size and overlap and watch reconstruction quality improve
+//! — the paper's central ablation, live.
+//!
+//!     cargo run --release --example cbd_sweep [model] [w4a4|w2a16]
+
+use cbq::calib::corpus::Style;
+use cbq::config::{BitSpec, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::report::{fmt_f, Table};
+use cbq::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "t".to_string());
+    let setting = std::env::args().nth(2).unwrap_or_else(|| "w4a4".to_string());
+    let bits = match setting.as_str() {
+        "w2a16" => BitSpec::w2a16(),
+        _ => BitSpec::w4a4(),
+    };
+    let art = Artifacts::discover()?;
+    let rt = Runtime::new(&art)?;
+    let mut pipe = Pipeline::new(&art, &rt, &model)?;
+    let windows = art.manifest.windows[&model].clone();
+
+    let mut table = Table::new(
+        format!("CBD sweep, {} on `{model}`", bits.label()),
+        &["#blocks", "overlap", "ppl c4", "ppl wiki", "quant s", "state KiB"],
+    );
+    for &w in &windows {
+        if w > pipe.cfg.n_layers {
+            continue;
+        }
+        // overlap points per the paper's Table 7 grid
+        let overlaps: Vec<usize> = match w {
+            1 => vec![0],
+            2 => vec![0, 1],
+            4 => vec![0, 2],
+            _ => vec![0, w / 2, w - 1],
+        };
+        for ov in overlaps {
+            let mut job = QuantJob::cbq(bits.clone());
+            job.window = w;
+            job.overlap = ov;
+            job.calib_sequences = 24;
+            job.epochs = 6;
+            let (m, summary) = pipe.run(&job)?;
+            table.row(&[
+                w.to_string(),
+                ov.to_string(),
+                fmt_f(pipe.perplexity(&m, Style::C4, 8)?, 3),
+                fmt_f(pipe.perplexity(&m, Style::Wiki, 8)?, 3),
+                fmt_f(summary.quant_seconds, 1),
+                (summary.state_bytes / 1024).to_string(),
+            ]);
+            println!("w={w} overlap={ov} done");
+        }
+    }
+    table.print();
+    println!("expected shape: ppl improves with window size, and with overlap at fixed window");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! END-TO-END DRIVER (DESIGN.md §End-to-end validation): exercises every
+//! layer of the stack on a real small workload and reports the paper's
+//! headline metrics.
+//!
+//! Pipeline: load the build-time-pretrained model -> calibrate on 128-style
+//! corpus segments -> CFP outlier pre-processing -> CBD sliding-window
+//! reconstruction with LoRA-Rounding (W4A4, the paper's hardest joint
+//! setting) -> evaluate perplexity on both corpora + the zero-shot task
+//! suite, against FP / RTN / GPTQ baselines.
+//!
+//!     cargo run --release --example e2e_pipeline [model] [calib_seqs]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use cbq::calib::corpus::Style;
+use cbq::config::{BitSpec, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::report::{fmt_f, Table};
+use cbq::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "s".to_string());
+    let calib: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let art = Artifacts::discover()?;
+    let rt = Runtime::new(&art)?;
+    let mut pipe = Pipeline::new(&art, &rt, &model)?;
+    println!(
+        "model `{model}`: d={} layers={} ({} quantizable params), calib={calib} sequences",
+        pipe.cfg.d_model,
+        pipe.cfg.n_layers,
+        pipe.cfg.quant_params(),
+    );
+
+    let bits = BitSpec::w4a4();
+    let mut jobs = vec![
+        ("RTN", QuantJob::rtn(bits.clone())),
+        ("GPTQ", QuantJob::gptq(bits.clone())),
+        ("CBQ (CFP+CBD+LoRA)", QuantJob::cbq(bits.clone())),
+    ];
+    for (_, j) in jobs.iter_mut() {
+        j.calib_sequences = calib;
+    }
+
+    let mut ppl_table = Table::new(
+        format!("e2e: {} on `{model}`", bits.label()),
+        &["method", "ppl c4", "ppl wiki", "quant s", "CFP trunc", "CFP ch"],
+    );
+    let mut task_table = Table::new(
+        "zero-shot accuracy (%) + Mutual MRR/R@1/R@2",
+        &["method", "TopicMatch", "CountRun", "Perturbed", "Shifted", "Mutual"],
+    );
+
+    let fp = pipe.fp_model();
+    let fp_tasks = pipe.zero_shot(&fp, 24)?;
+    ppl_table.row(&[
+        "FP".into(),
+        fmt_f(pipe.perplexity(&fp, Style::C4, 12)?, 3),
+        fmt_f(pipe.perplexity(&fp, Style::Wiki, 12)?, 3),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    task_table.row(&[
+        "FP".into(),
+        fmt_f(fp_tasks.accuracy["TopicMatch"] * 100.0, 1),
+        fmt_f(fp_tasks.accuracy["CountRun"] * 100.0, 1),
+        fmt_f(fp_tasks.accuracy["Perturbed"] * 100.0, 1),
+        fmt_f(fp_tasks.accuracy["Shifted"] * 100.0, 1),
+        format!(
+            "{}/{}/{}",
+            fmt_f(fp_tasks.mrr * 100.0, 1),
+            fmt_f(fp_tasks.recall1 * 100.0, 1),
+            fmt_f(fp_tasks.recall2 * 100.0, 1)
+        ),
+    ]);
+
+    for (name, job) in &jobs {
+        let t0 = std::time::Instant::now();
+        let (m, summary) = pipe.run(job)?;
+        println!("{name}: quantized in {:.1}s", t0.elapsed().as_secs_f64());
+        ppl_table.row(&[
+            (*name).into(),
+            fmt_f(pipe.perplexity(&m, Style::C4, 12)?, 3),
+            fmt_f(pipe.perplexity(&m, Style::Wiki, 12)?, 3),
+            fmt_f(summary.quant_seconds, 1),
+            summary.preproc_weights_truncated.to_string(),
+            summary.preproc_channels_scaled.to_string(),
+        ]);
+        let tasks = pipe.zero_shot(&m, 24)?;
+        task_table.row(&[
+            (*name).into(),
+            fmt_f(tasks.accuracy["TopicMatch"] * 100.0, 1),
+            fmt_f(tasks.accuracy["CountRun"] * 100.0, 1),
+            fmt_f(tasks.accuracy["Perturbed"] * 100.0, 1),
+            fmt_f(tasks.accuracy["Shifted"] * 100.0, 1),
+            format!(
+                "{}/{}/{}",
+                fmt_f(tasks.mrr * 100.0, 1),
+                fmt_f(tasks.recall1 * 100.0, 1),
+                fmt_f(tasks.recall2 * 100.0, 1)
+            ),
+        ]);
+    }
+    ppl_table.print();
+    task_table.print();
+
+    let stats = rt.stats();
+    println!(
+        "\nruntime totals: {} executions, {:.1}s execute, {:.1}s compile, {:.1} MiB uploaded",
+        stats.executions,
+        stats.execute_ms / 1e3,
+        stats.compile_ms / 1e3,
+        stats.upload_bytes as f64 / (1024.0 * 1024.0)
+    );
+    Ok(())
+}

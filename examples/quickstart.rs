@@ -1,0 +1,38 @@
+//! Quickstart: quantize the tiny model to W4A16 with CBQ defaults and
+//! compare perplexity against the FP baseline.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use cbq::calib::corpus::Style;
+use cbq::config::{BitSpec, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::report::{fmt_f, Table};
+use cbq::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let art = Artifacts::discover()?;
+    let rt = Runtime::new(&art)?;
+    let mut pipe = Pipeline::new(&art, &rt, "t")?;
+
+    // paper-default CBQ: 2-block sliding windows with overlap 1, CFP
+    // pre-processing, LoRA-Rounding rank 5, 3 epochs per window
+    let mut job = QuantJob::cbq(BitSpec::w4a16());
+    job.calib_sequences = 16; // keep the quickstart quick
+
+    println!("quantizing model `t` to {} ...", job.bits.label());
+    let (quantized, summary) = pipe.run(&job)?;
+    let fp = pipe.fp_model();
+
+    let mut table = Table::new(
+        format!("quickstart ({:.1}s quantization)", summary.quant_seconds),
+        &["model", "ppl synth-c4", "ppl synth-wiki"],
+    );
+    for (label, m) in [("FP", &fp), ("CBQ W4A16", &quantized)] {
+        let c4 = pipe.perplexity(m, Style::C4, 8)?;
+        let wiki = pipe.perplexity(m, Style::Wiki, 8)?;
+        table.row(&[label.into(), fmt_f(c4, 3), fmt_f(wiki, 3)]);
+    }
+    table.print();
+    println!("window reconstruction losses: {:?}", summary.window_losses);
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Ultra-low-bit weight-only quantization (the paper's hardest weight-only
+//! setting): W2A16 with plain CBQ and with CBQ* mixed precision (FC2 of the
+//! first and last block promoted to 4 bits), against RTN and GPTQ.
+//!
+//!     cargo run --release --example weight_only_w2 [model]
+
+use cbq::calib::corpus::Style;
+use cbq::config::{BitSpec, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::report::{fmt_f, Table};
+use cbq::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "t".to_string());
+    let art = Artifacts::discover()?;
+    let rt = Runtime::new(&art)?;
+    let mut pipe = Pipeline::new(&art, &rt, &model)?;
+    let n_layers = pipe.cfg.n_layers;
+
+    let mut jobs = vec![
+        ("RTN", QuantJob::rtn(BitSpec::w2a16())),
+        ("GPTQ", QuantJob::gptq(BitSpec::w2a16())),
+        ("CBQ", QuantJob::cbq(BitSpec::w2a16())),
+        ("CBQ*", QuantJob::cbq(BitSpec::w2a16_star(n_layers))),
+    ];
+    for (_, j) in jobs.iter_mut() {
+        j.calib_sequences = 24;
+        j.epochs = 8;
+    }
+
+    let mut table = Table::new(
+        format!("W2A16 weight-only on model `{model}`"),
+        &["method", "ppl synth-c4", "ppl synth-wiki", "quant s"],
+    );
+    let fp = pipe.fp_model();
+    table.row(&[
+        "FP".into(),
+        fmt_f(pipe.perplexity(&fp, Style::C4, 8)?, 3),
+        fmt_f(pipe.perplexity(&fp, Style::Wiki, 8)?, 3),
+        "-".into(),
+    ]);
+    for (name, job) in &jobs {
+        let (m, summary) = pipe.run(job)?;
+        table.row(&[
+            (*name).into(),
+            fmt_f(pipe.perplexity(&m, Style::C4, 8)?, 3),
+            fmt_f(pipe.perplexity(&m, Style::Wiki, 8)?, 3),
+            fmt_f(summary.quant_seconds, 1),
+        ]);
+        println!("{name} done");
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,215 @@
+"""AOT export: lower the L2 graphs to HLO **text** + write the manifest the
+Rust runtime binds against. Runs once inside `make artifacts`.
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model config this exports:
+  win_fwd_w{K}   quantized T_{i,k} forward + reconstruction loss
+  win_grad_w{K}  value-and-grad wrt (s_w, alpha, A1, A2)        (Eq. 9/13)
+  capture        single-block forward + per-linear input capture
+  lm_eval        final-norm + LM-head masked NLL
+plus weights_{cfg}.bin (pretrained + outlier-injected weights) and
+corpus_ref.json (cross-language PRNG parity vectors for the Rust tests).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, iobin, model, pretrain
+from .configs import CONFIGS, LINEAR_NAMES, WINDOWS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default ELIDES big constant arrays as
+    # `constant({...})`, which xla_extension 0.5.1's text parser silently
+    # mis-reads (RoPE tables became garbage). Positional bool = that flag.
+    return comp.as_hlo_text(True)
+
+
+def _spec_of(leaf):
+    arr = jnp.asarray(leaf)
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+def export_graph(name, graph_fn, cfg, example_inputs, out_dir, manifest):
+    """Lower graph_fn(inputs, cfg) with the flatten_spec contract and record
+    input/output names, shapes and dtypes in the manifest."""
+    flat = model.flatten_spec(example_inputs)
+    in_names = [n for n, _ in flat]
+    in_specs = [_spec_of(l) for _, l in flat]
+
+    def wrapped(*leaves):
+        inputs = model.unflatten_like(example_inputs, leaves)
+        out = graph_fn(inputs, cfg)
+        return tuple(l for _, l in model.flatten_spec(out))
+
+    t0 = time.time()
+    lowered = jax.jit(wrapped, keep_unused=True).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    # output spec via eval_shape (no execution)
+    out_shapes = jax.eval_shape(wrapped, *in_specs)
+    out_example = graph_fn(example_inputs, cfg)  # names from the dict
+    out_names = [n for n, _ in model.flatten_spec(out_example)]
+
+    def spec_list(names, specs):
+        return [{"name": n,
+                 "shape": [int(d) for d in s.shape],
+                 "dtype": str(np.dtype(s.dtype))}
+                for n, s in zip(names, specs)]
+
+    manifest["executables"][name] = {
+        "file": fname,
+        "inputs": spec_list(in_names, in_specs),
+        "outputs": spec_list(out_names, list(out_shapes)),
+    }
+    print(f"  exported {name}: {len(in_names)} inputs, "
+          f"{len(out_names)} outputs, {len(text) // 1024}KiB "
+          f"({time.time() - t0:.1f}s)")
+
+
+def example_window_inputs(cfg: ModelConfig, params, w: int):
+    blocks = params["blocks"][:w]
+    qblocks = [model.init_qparams_block(cfg, b) for b in blocks]
+    shape = (cfg.batch, cfg.seq, cfg.d_model)
+    return {
+        "h_in": jnp.zeros(shape, jnp.float32),
+        "target": jnp.zeros(shape, jnp.float32),
+        "blocks": blocks,
+        "qblocks": qblocks,
+        "globals": model.default_globals(),
+    }
+
+
+def export_config(cfg: ModelConfig, out_dir: str, manifest: dict,
+                  skip_pretrain: bool):
+    print(f"config {cfg.name}: d={cfg.d_model} L={cfg.n_layers}")
+    wpath = os.path.join(out_dir, f"weights_{cfg.name}.bin")
+    if skip_pretrain and os.path.exists(wpath):
+        tensors = iobin.read_tensors(wpath)
+        params = pretrain.tensors_to_params(tensors, cfg)
+        print("  reusing existing weights")
+    else:
+        params, final_loss = pretrain.pretrain(cfg)
+        params = pretrain.inject_outliers(cfg, params)
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        iobin.write_tensors(wpath, pretrain.params_to_tensors(params))
+        manifest["pretrain_loss"][cfg.name] = final_loss
+
+    for w in WINDOWS[cfg.name]:
+        ex = example_window_inputs(cfg, params, w)
+        export_graph(f"win_fwd_w{w}_{cfg.name}", model.window_forward,
+                     cfg, ex, out_dir, manifest)
+        export_graph(f"win_grad_w{w}_{cfg.name}", model.window_loss_grads,
+                     cfg, ex, out_dir, manifest)
+
+    # dense-AdaRound grad variant (Table 3b memory/speed baseline), w=2
+    ex_d = example_window_inputs(cfg, params, 2)
+    ex_d["qblocks"] = [
+        model.init_qparams_block_dense(cfg, b) for b in ex_d["blocks"]
+    ]
+    export_graph(f"win_grad_dense_w2_{cfg.name}", model.window_loss_grads_dense,
+                 cfg, ex_d, out_dir, manifest)
+
+    ex1 = example_window_inputs(cfg, params, 1)
+    export_graph(f"capture_{cfg.name}", model.block_capture, cfg, ex1,
+                 out_dir, manifest)
+
+    lm_ex = {
+        "h": jnp.zeros((cfg.batch, cfg.seq, cfg.d_model), jnp.float32),
+        "final_norm": params["final_norm"],
+        "head": params["head"],
+        "targets": jnp.zeros((cfg.batch, cfg.seq), jnp.int32),
+        "mask": jnp.ones((cfg.batch, cfg.seq), jnp.float32),
+    }
+    export_graph(f"lm_eval_{cfg.name}", model.lm_eval, cfg, lm_ex,
+                 out_dir, manifest)
+
+
+def test_reference(cfg: ModelConfig, out_dir: str):
+    """Cross-language parity tensors for rust/tests/integration.rs: tokens,
+    embedding, FP hidden states and per-sequence NLL on the eval stream."""
+    EVAL_SEED = 2002  # mirrors rust calib::EVAL_SEED
+    tensors = iobin.read_tensors(os.path.join(out_dir, f"weights_{cfg.name}.bin"))
+    params = pretrain.tensors_to_params(tensors, cfg)
+    toks = data.generate(data.STYLE_C4, EVAL_SEED, cfg.batch * (cfg.seq + 1))
+    rows = np.array(toks, dtype=np.int32).reshape(cfg.batch, cfg.seq + 1)
+    x, y = rows[:, :-1], rows[:, 1:]
+    h = params["embed"][jnp.asarray(x)]
+    ref = {"tokens_x": x, "tokens_y": y,
+           "h_embed": np.asarray(h, np.float32)}
+    for i, b in enumerate(params["blocks"]):
+        h = model.fp_block(b, h, cfg)
+        if i < 2:
+            ref[f"h_block{i}"] = np.asarray(h, np.float32)
+    ref["h_final"] = np.asarray(h, np.float32)
+    hn = model._fp_rmsnorm(h, params["final_norm"])
+    logits = hn @ params["head"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -np.take_along_axis(np.asarray(logp), y[..., None], axis=-1)[..., 0]
+    ref["nll_per_seq"] = nll.sum(axis=1).astype(np.float32)
+    iobin.write_tensors(os.path.join(out_dir, f"test_ref_{cfg.name}.bin"), ref)
+    print(f"  test reference for {cfg.name} written")
+
+
+def corpus_reference():
+    """Cross-language parity vectors for rust/src/calib/corpus.rs tests."""
+    return {
+        style: data.generate(style, pretrain.CORPUS_SEED, 2048)
+        for style in (data.STYLE_C4, data.STYLE_WIKI)
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory (manifest.json written here)")
+    ap.add_argument("--configs", default="t,s,m")
+    ap.add_argument("--skip-pretrain", action="store_true",
+                    help="reuse existing weights_*.bin if present")
+    args = ap.parse_args()
+    out_dir = args.out if os.path.isabs(args.out) else os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "configs": {},
+        "executables": {},
+        "pretrain_loss": {},
+        "linears": list(LINEAR_NAMES),
+        "windows": {},
+        "capture_sources": model.CAPTURE_SOURCES,
+    }
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        manifest["configs"][name] = cfg.to_dict()
+        manifest["windows"][name] = list(WINDOWS[name])
+        export_config(cfg, out_dir, manifest, args.skip_pretrain)
+        if name == "t":
+            test_reference(cfg, out_dir)
+
+    with open(os.path.join(out_dir, "corpus_ref.json"), "w") as f:
+        json.dump(corpus_reference(), f)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['executables'])} executables")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Model configurations shared between the Python compile path and the Rust
+coordinator (mirrored via artifacts/manifest.json).
+
+Three sizes stand in for the paper's OPT/LLAMA families (see DESIGN.md
+§Substitutions): quantization-error *dynamics* need trained weights with real
+curvature, not the 7B parameter count.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ffn: int
+    vocab: int
+    seq: int
+    # calibration / eval batch (paper uses minibatch 1; we keep a small batch
+    # so one executable call covers several calibration sequences)
+    batch: int
+    # LoRA-Rounding padded rank: artifacts are exported at this rank and the
+    # Rust coordinator projects to the requested effective rank r <= rank_pad
+    # after every optimizer step (this is how Table 12's rank sweep runs
+    # against a single artifact).
+    rank_pad: int
+    # pretraining
+    pretrain_steps: int
+    pretrain_batch: int
+    pretrain_lr: float
+    # function-preserving activation-outlier injection (DESIGN.md)
+    outlier_channels: int
+    outlier_gain: float
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+CONFIGS = {
+    "t": ModelConfig(
+        name="t", d_model=64, n_layers=4, n_heads=4, d_ffn=128,
+        vocab=256, seq=96, batch=4, rank_pad=8,
+        pretrain_steps=400, pretrain_batch=16, pretrain_lr=1e-3,
+        outlier_channels=4, outlier_gain=8.0,
+    ),
+    "s": ModelConfig(
+        name="s", d_model=128, n_layers=8, n_heads=4, d_ffn=256,
+        vocab=256, seq=96, batch=4, rank_pad=8,
+        pretrain_steps=700, pretrain_batch=16, pretrain_lr=1e-3,
+        outlier_channels=6, outlier_gain=10.0,
+    ),
+    "m": ModelConfig(
+        name="m", d_model=192, n_layers=12, n_heads=6, d_ffn=384,
+        vocab=256, seq=96, batch=4, rank_pad=8,
+        pretrain_steps=700, pretrain_batch=16, pretrain_lr=8e-4,
+        outlier_channels=8, outlier_gain=10.0,
+    ),
+}
+
+# Linear layers quantized inside one transformer block, in forward order.
+# Attention internals (QK^T, PV) stay FP like the paper's per-linear scheme.
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown")
+
+# Window sizes exported per config. "s" additionally gets w=8 (= whole model,
+# the largest point in the paper's Table 7 CBD-scaling study).
+WINDOWS = {"t": (1, 2, 4), "s": (1, 2, 4, 8), "m": (1, 2, 4)}
+
+# AdaRound stretch parameters (Eq. 8) — fixed by the paper.
+ZETA = 1.1
+GAMMA = -0.1

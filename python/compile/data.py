@@ -1,0 +1,108 @@
+"""Synthetic corpus generator, bit-exact mirrored in rust/src/calib/corpus.rs.
+
+Stand-in for C4 / WikiText2 (DESIGN.md §Substitutions): two corpus *styles*
+with different statistics over a shared 256-token vocabulary, generated from
+an xorshift64* PRNG using only integer ops so Python (pretraining, build time)
+and Rust (calibration + eval, run time) produce identical streams.
+
+Structure (what makes it learnable by a small transformer):
+  * each SEGMENT_LEN-token segment opens with a topic-marker token
+    (TOPIC_BASE + topic), then tokens follow a per-topic mixture of
+      - a deterministic affine map  next = (a_t * cur + b_t) mod CONTENT_V
+      - a "counting" continuation   next = cur + 1 mod CONTENT_V
+      - a zipf-ish random draw (min of two uniforms biases low ids)
+    so the model must infer the topic from context — an in-context task whose
+    logits are sharp enough for quantization error to be measurable.
+  * style "wiki" interleaves a rigid template (header tokens every 8
+    positions) with lower-entropy content — a second, distinct distribution.
+"""
+
+SEGMENT_LEN = 32
+CONTENT_V = 240      # content tokens are 0..CONTENT_V-1
+TOPIC_BASE = 240     # topic markers are TOPIC_BASE..TOPIC_BASE+N_TOPICS-1
+N_TOPICS = 8
+HEADER_TOK = 250     # style-"wiki" template tokens
+SEP_TOK = 251
+
+MASK64 = (1 << 64) - 1
+
+STYLE_C4 = "c4"
+STYLE_WIKI = "wiki"
+
+
+class XorShift64Star:
+    """xorshift64* — trivially portable; mirrored in Rust."""
+
+    def __init__(self, seed: int):
+        self.state = (seed | 1) & MASK64
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x ^= (x << 25) & MASK64
+        x ^= (x >> 27)
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def next_below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def _topic_params(topic: int):
+    # multiplier must be coprime with CONTENT_V=240 (avoid factors 2,3,5)
+    a = (7 * topic + 11) % CONTENT_V
+    while a % 2 == 0 or a % 3 == 0 or a % 5 == 0:
+        a = (a + 1) % CONTENT_V
+    b = (13 * topic + 3) % CONTENT_V
+    return a, b
+
+
+def _zipfish(rng: XorShift64Star) -> int:
+    r = rng.next_u64()
+    t1 = r & 0xFF
+    t2 = (r >> 8) & 0xFF
+    return min(t1, t2) % CONTENT_V
+
+
+def generate(style: str, seed: int, n_tokens: int) -> list:
+    """Generate `n_tokens` tokens of the given style. Deterministic in
+    (style, seed); mirrored bit-for-bit by rust/src/calib/corpus.rs."""
+    rng = XorShift64Star(seed if style == STYLE_C4 else seed ^ 0x9E3779B97F4A7C15)
+    out = []
+    cur = 0
+    topic = 0
+    pos_in_seg = SEGMENT_LEN  # force topic draw at position 0
+    while len(out) < n_tokens:
+        if pos_in_seg >= SEGMENT_LEN:
+            pos_in_seg = 0
+            topic = rng.next_below(N_TOPICS)
+            out.append(TOPIC_BASE + topic)
+            cur = rng.next_below(CONTENT_V)
+            pos_in_seg += 1
+            continue
+        if style == STYLE_WIKI and pos_in_seg % 8 == 0:
+            out.append(HEADER_TOK if (pos_in_seg // 8) % 2 == 0 else SEP_TOK)
+            pos_in_seg += 1
+            continue
+        a, b = _topic_params(topic)
+        r = rng.next_below(100)
+        # style-dependent mixture: wiki content is lower-entropy
+        det_p, cnt_p = (55, 25) if style == STYLE_C4 else (70, 20)
+        if r < det_p:
+            cur = (a * cur + b) % CONTENT_V
+        elif r < det_p + cnt_p:
+            cur = (cur + 1) % CONTENT_V
+        else:
+            cur = _zipfish(rng)
+        out.append(cur)
+        pos_in_seg += 1
+    return out[:n_tokens]
+
+
+def batches(style: str, seed: int, n_batches: int, batch: int, seq: int):
+    """Yield (n_batches, batch, seq+1) int token arrays (input + next-token
+    target via shift), as nested lists."""
+    toks = generate(style, seed, n_batches * batch * (seq + 1))
+    it = iter(toks)
+    for _ in range(n_batches):
+        yield [[next(it) for _ in range(seq + 1)] for _ in range(batch)]

@@ -1,0 +1,52 @@
+"""CBQW binary tensor container — written here, read by rust/src/tensor/io.rs.
+
+Layout (little-endian):
+  magic  b"CBQW" | u32 version=1 | u32 n_tensors
+  per tensor: u32 name_len | name utf-8 | u8 dtype (0=f32, 1=i32)
+              | u8 ndim | u32 dims[ndim] | raw row-major data
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CBQW"
+VERSION = 1
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensors(path: str, tensors: dict):
+    """tensors: {name: np.ndarray (f32 or i32)}."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name])
+            if arr.dtype not in DTYPES:
+                arr = arr.astype(np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_tensors(path: str) -> dict:
+    """Python-side reader (round-trip tests)."""
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        version, n = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(n):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.float32 if dt == 0 else np.int32
+            count = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(count * 4), dtype=dtype)
+            out[name] = data.reshape(dims)
+    return out

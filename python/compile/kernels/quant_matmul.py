@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused per-token activation fake-quant + matmul.
+
+This is the paper-system's compute hot-spot: every quantized linear in the
+transformer runs through it (W4A4/W4A8 inference and every reconstruction
+forward during CBQ optimization).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles rows of the
+activation matrix; each program stages an (TM, K) activation tile and the
+full (K, N) fake-quantized weight panel into VMEM, computes the per-token
+scale with one VPU pass over the tile, quantize-dequantizes in registers and
+feeds the MXU with an f32-accumulated matmul. K, N <= 384 for all shipped
+configs, so the weight panel fits VMEM comfortably (see EXPERIMENTS.md §Perf
+for the footprint table); for larger models the index_map generalizes to an
+(i, j) grid with a K-loop.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime while preserving the block structure
+we estimate TPU performance from.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_TM = 64
+
+
+def pick_tile(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= `want` (grid must cover exactly)."""
+    t = min(want, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _kernel(x_ref, w_ref, alpha_ref, qmax_ref, a_en_ref, o_ref):
+    x = x_ref[...]                      # (TM, K) activation tile in VMEM
+    w = w_ref[...]                      # (K, N) fake-quantized weight panel
+    alpha = alpha_ref[0]
+    qmax = qmax_ref[0]
+    a_en = a_en_ref[0]
+    # per-token (row) dynamic scale with learnable clip alpha
+    m = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(alpha * m / qmax, ref.EPS)
+    q = jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax) * s
+    x_eff = x + a_en * (q - x)          # enable-blend: a_en=0 -> FP path
+    o_ref[...] = jnp.dot(x_eff, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def quant_matmul(x, w_hat, alpha, qmax, a_en, tm=DEFAULT_TM):
+    """x: [M, K] f32, w_hat: [K, N] f32 (weight fake-quant already applied),
+    alpha/qmax/a_en: [1] f32. Returns [M, N] f32.
+
+    M must be divisible by the row tile; callers pad (model.py shapes are
+    B*S = multiples of 32)."""
+    m, k = x.shape
+    n = w_hat.shape[1]
+    tm = pick_tile(m, tm)
+    grid = (m // tm,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_hat, alpha, qmax, a_en)

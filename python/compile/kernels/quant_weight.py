@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: per-output-channel weight fake-quant with an
+AdaRound/LoRA-Rounding offset rho (Eq. 8/11 of the paper).
+
+Grid tiles the output-channel (N) dimension: each program owns a (K, TN)
+weight panel plus its (TN,) scale slice and (K, TN) rho slice — on TPU the
+per-channel scale is a lane broadcast across the panel, and the whole
+quantize-dequantize is a VPU elementwise pass (no MXU involvement), so this
+kernel is bandwidth-bound and fuses cleanly ahead of the matmul.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_TN = 64
+
+
+def _kernel(w_ref, s_ref, rho_ref, qmax_ref, w_en_ref, o_ref):
+    w = w_ref[...]                      # (K, TN)
+    s = jnp.maximum(s_ref[...], ref.EPS)[None, :]
+    rho = rho_ref[...]
+    qmax = qmax_ref[0]
+    w_en = w_en_ref[0]
+    q = jnp.clip(jnp.floor(w / s) + rho, -qmax - 1.0, qmax) * s
+    o_ref[...] = w + w_en * (q - w)
+
+
+@functools.partial(jax.jit, static_argnames=("tn",))
+def quant_weight(w, s_w, rho, qmax, w_en, tn=DEFAULT_TN):
+    """w: [K, N], s_w: [N], rho: [K, N] in [0,1], qmax/w_en: [1] f32."""
+    from .quant_matmul import pick_tile
+
+    k, n = w.shape
+    tn = pick_tile(n, tn)
+    grid = (n // tn,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, tn), lambda j: (0, j)),
+            pl.BlockSpec((tn,), lambda j: (j,)),
+            pl.BlockSpec((k, tn), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, tn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.float32),
+        interpret=True,
+    )(w, s_w, rho, qmax, w_en)

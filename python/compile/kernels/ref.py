@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/) asserts each Pallas kernel (interpret mode) matches
+these to tight tolerance over hypothesis-swept shapes/values; the Rust side
+inherits correctness transitively because the AOT graphs are built from the
+same functions.
+
+Quantization semantics (DESIGN.md §Quantization semantics):
+  * weights: symmetric per-output-channel, learnable step s_w, AdaRound-style
+    rounding offset rho in [0,1]:  q = clip(floor(W/s_w) + rho, -qmax-1, qmax)
+  * activations: per-token dynamic symmetric with learnable clip alpha:
+    s = alpha * max|x_token| / qmax
+  * enable flags blend quantized/raw (x + en*(fq(x)-x)) so one graph serves
+    all bit settings including the FP path.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def rmsnorm(x, g, eps=1e-5):
+    """x: [M, D], g: [D]."""
+    r = jnp.reciprocal(jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps))
+    return x * r * g
+
+
+def act_scale(x, alpha, qmax):
+    """Per-token (row) step size. x: [M, K] -> [M, 1]."""
+    m = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return jnp.maximum(alpha * m / qmax, EPS)
+
+
+def fake_quant_act(x, alpha, qmax):
+    s = act_scale(x, alpha, qmax)
+    q = jnp.clip(jnp.round(x / s), -qmax - 1.0, qmax)
+    return q * s
+
+
+def blend_act(x, alpha, qmax, a_en):
+    return x + a_en * (fake_quant_act(x, alpha, qmax) - x)
+
+
+def fake_quant_weight(w, s_w, rho, qmax):
+    """w: [K, N], s_w: [N] per-output-channel, rho: [K, N] in [0, 1]."""
+    s = jnp.maximum(s_w, EPS)[None, :]
+    q = jnp.clip(jnp.floor(w / s) + rho, -qmax - 1.0, qmax)
+    return q * s
+
+
+def blend_weight(w, s_w, rho, qmax, w_en):
+    return w + w_en * (fake_quant_weight(w, s_w, rho, qmax) - w)
+
+
+def quant_matmul(x, w_hat, alpha, qmax, a_en):
+    """The fused hot-spot: per-token activation fake-quant + matmul.
+    x: [M, K], w_hat: [K, N] (already weight-fake-quantized)."""
+    return blend_act(x, alpha, qmax, a_en) @ w_hat
+
+
+def round_ste_rho(w, s_w):
+    """Nearest-rounding offset (the rho used when LoRA-Rounding is off):
+    rho = 1 if frac(W/s) >= 0.5 else 0."""
+    s = jnp.maximum(s_w, EPS)[None, :]
+    wn = w / s
+    return (wn - jnp.floor(wn) >= 0.5).astype(w.dtype)

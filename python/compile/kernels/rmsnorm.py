@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: RMSNorm over the hidden dimension.
+
+Row-tiled like quant_matmul; the mean-square reduction is a single VPU pass
+per tile. Kept as a kernel (rather than leaving it to XLA fusion) because it
+is the producer of every quantized linear's input — on TPU the norm output
+stays resident in VMEM for the fused quant-matmul that follows.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TM = 64
+EPS = 1e-5
+
+
+def _kernel(x_ref, g_ref, o_ref):
+    x = x_ref[...]
+    g = g_ref[...]
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+    o_ref[...] = x * r * g[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tm",))
+def rmsnorm(x, g, tm=DEFAULT_TM):
+    """x: [M, D], g: [D] -> [M, D]."""
+    from .quant_matmul import pick_tile
+
+    m, d = x.shape
+    tm = pick_tile(m, tm)
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, g)

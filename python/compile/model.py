@@ -1,0 +1,433 @@
+"""L2: LLaMA-style transformer (RMSNorm + causal MHA with RoPE + SwiGLU),
+in two flavours:
+
+  * `fp_forward`   — pure-jnp full-model forward used by build-time
+                     pretraining (fast on CPU, no Pallas indirection);
+  * quantized window graphs — the CBQ compute graphs built from the L1
+    Pallas kernels through the STE custom_vjp seams (ste.py). These are what
+    aot.py lowers to HLO text for the Rust coordinator:
+      - window_forward:   T_{i,k} fake-quant forward + reconstruction loss
+      - window_loss_grads: value-and-grad wrt (s_w, alpha, A1, A2) (Eq. 9)
+      - block_capture:    per-linear input capture (GPTQ / SmoothQuant / CFP
+                          activation statistics)
+      - lm_eval:          final-norm + LM-head masked NLL (perplexity and
+                          choice-task scoring)
+
+Every graph takes *enable flags* and qmax values as runtime scalars so a
+single artifact family serves W2..W8 x A4..A16, the FP path, and CBQ*'s
+per-layer mixed precision (see DESIGN.md).
+
+Parameter pytrees are flattened to an explicitly-ordered flat list by
+`flatten_spec` — aot.py records the ordering in artifacts/manifest.json and
+the Rust runtime binds inputs by those names.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ste
+from .configs import LINEAR_NAMES, ModelConfig
+
+# attention-projection linears read the post-norm hidden; gate/up read the
+# mlp post-norm; o reads the attention mixer output; down reads the SwiGLU.
+CAPTURE_SOURCES = {
+    "wq": "attn_in", "wk": "attn_in", "wv": "attn_in", "wo": "attn_mix",
+    "wgate": "mlp_in", "wup": "mlp_in", "wdown": "mlp_act",
+}
+
+
+# ---------------------------------------------------------------------------
+# pytree flattening contract (shared with aot.py / the Rust runtime)
+# ---------------------------------------------------------------------------
+
+def flatten_spec(tree, prefix=""):
+    """Deterministic (name, leaf) flattening: dicts sorted by key, lists by
+    index. The manifest records these names; Rust binds by them."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(flatten_spec(tree[k], f"{prefix}{k}."))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(flatten_spec(v, f"{prefix}{i}."))
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def unflatten_like(tree, leaves):
+    """Rebuild `tree`'s structure from an iterable of leaves (flatten_spec
+    order)."""
+    it = iter(leaves)
+
+    def rec(t):
+        if isinstance(t, dict):
+            return {k: rec(t[k]) for k in sorted(t)}
+        if isinstance(t, (list, tuple)):
+            return [rec(v) for v in t]
+        return next(it)
+
+    return rec(tree)
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def linear_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ffn
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "wgate": (d, f), "wup": (d, f), "wdown": (f, d),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    """FP model parameters (pretraining starting point)."""
+    shapes = linear_shapes(cfg)
+    keys = jax.random.split(key, cfg.n_layers * len(LINEAR_NAMES) + 2)
+    ki = iter(range(len(keys)))
+    blocks = []
+    for _ in range(cfg.n_layers):
+        b = {"attn_norm": jnp.ones((cfg.d_model,), jnp.float32),
+             "mlp_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+        for name in LINEAR_NAMES:
+            fan_in, fan_out = shapes[name]
+            w = jax.random.normal(keys[next(ki)], (fan_in, fan_out)) / np.sqrt(fan_in)
+            b[name] = w.astype(jnp.float32)
+        blocks.append(b)
+    embed = jax.random.normal(keys[next(ki)], (cfg.vocab, cfg.d_model)) * 0.02
+    head = jax.random.normal(keys[next(ki)], (cfg.d_model, cfg.vocab)) / np.sqrt(cfg.d_model)
+    return {
+        "embed": embed.astype(jnp.float32),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": head.astype(jnp.float32),
+        "blocks": blocks,
+    }
+
+
+def _v0_init(w, s_w):
+    """V0 with rectified-sigmoid(V0) == frac(W/s_w): zero soft-quant error
+    at the start of optimization (AdaRound Sec. 4 initialization)."""
+    from .configs import ZETA, GAMMA
+    frac = w / np.maximum(s_w, 1e-8)[None, :]
+    frac = frac - np.floor(frac)
+    p = np.clip((frac - GAMMA) / (ZETA - GAMMA), 1e-4, 1.0 - 1e-4)
+    return np.log(p / (1.0 - p))
+
+
+def init_qparams_block(cfg: ModelConfig, block_params, bits_w=4, bits_a=16,
+                       w_en=1.0, a_en=0.0):
+    """Per-linear quantization parameters with paper initialization:
+    s_w = max|W_col| / qmax (per output channel), alpha = 1, A1 gaussian,
+    A2 zero (Sec. 3.2: rho starts uniform ~0.55, i.e. near-round)."""
+    qp = {}
+    rng = np.random.default_rng(17)
+    for name in LINEAR_NAMES:
+        w = np.asarray(block_params[name])
+        fan_in, fan_out = w.shape
+        qmax_w = float(2 ** (bits_w - 1) - 1)
+        qmax_a = float(2 ** (bits_a - 1) - 1)
+        s_w = np.maximum(np.abs(w).max(axis=0) / qmax_w, 1e-6)
+        qp[name] = {
+            "s_w": jnp.asarray(s_w, jnp.float32),
+            "alpha": jnp.asarray(1.0, jnp.float32),
+            "a1": jnp.asarray(rng.normal(size=(fan_in, cfg.rank_pad)) * 0.01,
+                              jnp.float32),
+            "a2": jnp.zeros((cfg.rank_pad, fan_out), jnp.float32),
+            # AdaRound warm-start offset, rho(init) = frac(W/s_w)
+            "v0": jnp.asarray(_v0_init(w, s_w), jnp.float32),
+            "qmax_w": jnp.asarray(qmax_w, jnp.float32),
+            "qmax_a": jnp.asarray(qmax_a, jnp.float32),
+            "w_en": jnp.asarray(w_en, jnp.float32),
+            "a_en": jnp.asarray(a_en, jnp.float32),
+        }
+    return qp
+
+
+def default_globals():
+    return {
+        "use_lora": jnp.asarray(1.0, jnp.float32),
+        "beta": jnp.asarray(20.0, jnp.float32),
+        "gamma_c": jnp.asarray(0.01, jnp.float32),
+        "l2_w": jnp.asarray(1.0, jnp.float32),
+        "kld_w": jnp.asarray(1.0, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RoPE + attention (shared by FP and quantized paths)
+# ---------------------------------------------------------------------------
+
+def rope_tables(seq, head_dim):
+    pos = np.arange(seq)[:, None]
+    freqs = 10000.0 ** (-np.arange(0, head_dim, 2) / head_dim)[None, :]
+    ang = pos * freqs
+    return (jnp.asarray(np.cos(ang), jnp.float32),
+            jnp.asarray(np.sin(ang), jnp.float32))
+
+
+def apply_rope(x, cos, sin):
+    """x: [B, S, H, hd]."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[None, :, None, :], sin[None, :, None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x1 * s + x2 * c
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+
+
+def attention(q, k, v, cfg: ModelConfig):
+    """q/k/v: [B, S, d] -> [B, S, d]; causal, RoPE."""
+    b, s, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, h, hd)
+    v = v.reshape(b, s, h, hd)
+    cos, sin = rope_tables(s, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# FP forward (pretraining path, pure jnp)
+# ---------------------------------------------------------------------------
+
+def _fp_rmsnorm(x, g, eps=1e-5):
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x * r * g
+
+
+def fp_block(b, h, cfg: ModelConfig):
+    a = _fp_rmsnorm(h, b["attn_norm"])
+    att = attention(a @ b["wq"], a @ b["wk"], a @ b["wv"], cfg)
+    h = h + att @ b["wo"]
+    m = _fp_rmsnorm(h, b["mlp_norm"])
+    h = h + (jax.nn.silu(m @ b["wgate"]) * (m @ b["wup"])) @ b["wdown"]
+    return h
+
+
+def fp_forward(params, tokens, cfg: ModelConfig):
+    """tokens: [B, S] int32 -> logits [B, S, V]."""
+    h = params["embed"][tokens]
+    for b in params["blocks"]:
+        h = fp_block(b, h, cfg)
+    h = _fp_rmsnorm(h, params["final_norm"])
+    return h @ params["head"]
+
+
+def xent(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# quantized path (Pallas kernels through STE seams)
+# ---------------------------------------------------------------------------
+
+def _round_rho(w, s_w):
+    s = jnp.maximum(s_w, 1e-8)[None, :]
+    wn = w / s
+    return (wn - jnp.floor(wn) >= 0.5).astype(w.dtype)
+
+
+def _rho(lin_q, w, glob):
+    """Rounding offset. soft path: rho = h(V0 + A1 @ A2) where V0 is the
+    AdaRound warm-start constant chosen by the coordinator so that
+    h(V0) = frac(W/s) at init (soft-quantized weights == FP weights, the
+    standard AdaRound initialization); the LoRA product learns a low-rank
+    *delta* on top. The paper's A2 = 0 init makes the product zero, so V0
+    fully determines the starting point."""
+    soft = ste.lora_rho_offset(lin_q["v0"], lin_q["a1"], lin_q["a2"])
+    hard = jax.lax.stop_gradient(_round_rho(w, lin_q["s_w"]))
+    return glob["use_lora"] * soft + (1.0 - glob["use_lora"]) * hard
+
+
+def qlinear(x2d, w, lin_q, glob):
+    rho = _rho(lin_q, w, glob)
+    w_hat = ste.qweight(w, lin_q["s_w"], rho, lin_q["qmax_w"], lin_q["w_en"])
+    return ste.qmatmul(x2d, w_hat, lin_q["alpha"], lin_q["qmax_a"],
+                       lin_q["a_en"])
+
+
+def quant_block(b, qb, h, cfg: ModelConfig, glob, capture=None):
+    bsz, s, d = h.shape
+    h2 = h.reshape(bsz * s, d)
+    a = ste.rmsnorm(h2, b["attn_norm"])
+    if capture is not None:
+        capture["attn_in"] = a
+    q = qlinear(a, b["wq"], qb["wq"], glob).reshape(bsz, s, d)
+    k = qlinear(a, b["wk"], qb["wk"], glob).reshape(bsz, s, d)
+    v = qlinear(a, b["wv"], qb["wv"], glob).reshape(bsz, s, d)
+    mix = attention(q, k, v, cfg).reshape(bsz * s, d)
+    if capture is not None:
+        capture["attn_mix"] = mix
+    h2 = h2 + qlinear(mix, b["wo"], qb["wo"], glob)
+    m = ste.rmsnorm(h2, b["mlp_norm"])
+    if capture is not None:
+        capture["mlp_in"] = m
+    gate = qlinear(m, b["wgate"], qb["wgate"], glob)
+    up = qlinear(m, b["wup"], qb["wup"], glob)
+    act = jax.nn.silu(gate) * up
+    if capture is not None:
+        capture["mlp_act"] = act
+    h2 = h2 + qlinear(act, b["wdown"], qb["wdown"], glob)
+    return h2.reshape(bsz, s, d)
+
+
+def recon_loss(h_q, target, glob):
+    """Eq. 7: L2 + KLD over softmax of hidden states."""
+    mse = jnp.mean((h_q - target) ** 2)
+    logp = jax.nn.log_softmax(target, axis=-1)
+    logq = jax.nn.log_softmax(h_q, axis=-1)
+    kld = jnp.mean(jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1))
+    return glob["l2_w"] * mse + glob["kld_w"] * kld, mse, kld
+
+
+def com_loss(qblocks, glob):
+    """Eq. 12, mean-normalized per linear for cross-layer scale stability."""
+    total = 0.0
+    for qb in qblocks:
+        for name in LINEAR_NAMES:
+            rho = ste.lora_rho_offset(qb[name]["v0"], qb[name]["a1"],
+                                      qb[name]["a2"])
+            total = total + jnp.mean(
+                1.0 - jnp.abs(2.0 * rho - 1.0) ** glob["beta"])
+    return total
+
+
+def window_forward(inputs, cfg: ModelConfig):
+    """inputs: {h_in, target, blocks: [...], qblocks: [...], globals}.
+    Quantized T_{i,k} forward + reconstruction loss (Eq. 6/7)."""
+    h = inputs["h_in"]
+    glob = inputs["globals"]
+    for b, qb in zip(inputs["blocks"], inputs["qblocks"]):
+        h = quant_block(b, qb, h, cfg, glob)
+    rec, mse, kld = recon_loss(h, inputs["target"], glob)
+    return {"h_out": h, "loss": rec, "mse": mse, "kld": kld}
+
+
+def window_loss_grads(inputs, cfg: ModelConfig):
+    """value-and-grad of L_total = L_rec + gamma_c*L_com (Eq. 13) wrt the
+    learnable quant params (s_w, alpha, a1, a2) of every window linear."""
+    learn = [{n: {k: qb[n][k] for k in ("s_w", "alpha", "a1", "a2")}
+              for n in LINEAR_NAMES} for qb in inputs["qblocks"]]
+
+    def loss_fn(learnable):
+        qblocks = []
+        for qb, lb in zip(inputs["qblocks"], learnable):
+            nqb = {n: dict(qb[n]) for n in LINEAR_NAMES}
+            for n in LINEAR_NAMES:
+                nqb[n].update(lb[n])
+            qblocks.append(nqb)
+        h = inputs["h_in"]
+        glob = inputs["globals"]
+        for b, qb in zip(inputs["blocks"], qblocks):
+            h = quant_block(b, qb, h, cfg, glob)
+        rec, mse, kld = recon_loss(h, inputs["target"], glob)
+        com = com_loss(qblocks, glob)
+        return rec + glob["gamma_c"] * com, (mse, kld, com)
+
+    (loss, (mse, kld, com)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(learn)
+    return {"loss": loss, "mse": mse, "kld": kld, "com": com, "grads": grads}
+
+
+def window_loss_grads_dense(inputs, cfg: ModelConfig):
+    """Dense-AdaRound variant (paper Table 3b baseline): the rounding matrix
+    V is a full [fan_in, fan_out] learnable per linear instead of A1 @ A2.
+    qblocks carry key "v" instead of ("a1", "a2")."""
+    learn = [{n: {k: qb[n][k] for k in ("s_w", "alpha", "v")}
+              for n in LINEAR_NAMES} for qb in inputs["qblocks"]]
+
+    def loss_fn(learnable):
+        qblocks = []
+        for qb, lb in zip(inputs["qblocks"], learnable):
+            nqb = {n: dict(qb[n]) for n in LINEAR_NAMES}
+            for n in LINEAR_NAMES:
+                nqb[n].update(lb[n])
+            qblocks.append(nqb)
+        h = inputs["h_in"]
+        glob = inputs["globals"]
+        for b, qb in zip(inputs["blocks"], qblocks):
+            h = quant_block_dense(b, qb, h, cfg, glob)
+        rec, mse, kld = recon_loss(h, inputs["target"], glob)
+        com = 0.0
+        for qb in qblocks:
+            for n in LINEAR_NAMES:
+                rho = ste.dense_rho(qb[n]["v0"] + qb[n]["v"])
+                com = com + jnp.mean(
+                    1.0 - jnp.abs(2.0 * rho - 1.0) ** glob["beta"])
+        return rec + glob["gamma_c"] * com, (mse, kld, com)
+
+    (loss, (mse, kld, com)), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(learn)
+    return {"loss": loss, "mse": mse, "kld": kld, "com": com, "grads": grads}
+
+
+def quant_block_dense(b, qb, h, cfg: ModelConfig, glob):
+    """quant_block with dense-V rounding offsets."""
+    def qlin(x2d, w, lin_q):
+        rho = (glob["use_lora"] * ste.dense_rho(lin_q["v0"] + lin_q["v"])
+               + (1.0 - glob["use_lora"])
+               * jax.lax.stop_gradient(_round_rho(w, lin_q["s_w"])))
+        w_hat = ste.qweight(w, lin_q["s_w"], rho, lin_q["qmax_w"],
+                            lin_q["w_en"])
+        return ste.qmatmul(x2d, w_hat, lin_q["alpha"], lin_q["qmax_a"],
+                           lin_q["a_en"])
+
+    bsz, s, d = h.shape
+    h2 = h.reshape(bsz * s, d)
+    a = ste.rmsnorm(h2, b["attn_norm"])
+    q = qlin(a, b["wq"], qb["wq"]).reshape(bsz, s, d)
+    k = qlin(a, b["wk"], qb["wk"]).reshape(bsz, s, d)
+    v = qlin(a, b["wv"], qb["wv"]).reshape(bsz, s, d)
+    mix = attention(q, k, v, cfg).reshape(bsz * s, d)
+    h2 = h2 + qlin(mix, b["wo"], qb["wo"])
+    m = ste.rmsnorm(h2, b["mlp_norm"])
+    act = jax.nn.silu(qlin(m, b["wgate"], qb["wgate"])) * qlin(
+        m, b["wup"], qb["wup"])
+    h2 = h2 + qlin(act, b["wdown"], qb["wdown"])
+    return h2.reshape(bsz, s, d)
+
+
+def init_qparams_block_dense(cfg: ModelConfig, block_params, bits_w=4,
+                             bits_a=16, w_en=1.0, a_en=0.0):
+    """Dense-V counterpart of init_qparams_block."""
+    qp = init_qparams_block(cfg, block_params, bits_w, bits_a, w_en, a_en)
+    for name in LINEAR_NAMES:
+        fan_in, fan_out = np.asarray(block_params[name]).shape
+        del qp[name]["a1"], qp[name]["a2"]
+        qp[name]["v"] = jnp.zeros((fan_in, fan_out), jnp.float32)  # keeps v0
+    return qp
+
+
+def block_capture(inputs, cfg: ModelConfig):
+    """Single-block quantized forward that also returns every linear's raw
+    input matrix (pre activation-quant) — the statistics feed for GPTQ,
+    SmoothQuant/OS and CFP-activation."""
+    cap = {}
+    h = quant_block(inputs["blocks"][0], inputs["qblocks"][0], inputs["h_in"],
+                    cfg, inputs["globals"], capture=cap)
+    return {"h_out": h,
+            "captures": {n: cap[CAPTURE_SOURCES[n]] for n in LINEAR_NAMES}}
+
+
+def lm_eval(inputs, cfg: ModelConfig):
+    """inputs: {h: [B,S,d], final_norm, head, targets int32 [B,S],
+    mask f32 [B,S]} -> per-sequence masked NLL sums + token counts."""
+    b, s, d = inputs["h"].shape
+    h2 = ste.rmsnorm(inputs["h"].reshape(b * s, d), inputs["final_norm"])
+    logits = (h2 @ inputs["head"]).reshape(b, s, -1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, inputs["targets"][..., None], axis=-1)[..., 0]
+    nll = nll * inputs["mask"]
+    return {"nll": jnp.sum(nll, axis=-1),
+            "count": jnp.sum(inputs["mask"], axis=-1)}

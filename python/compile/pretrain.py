@@ -1,0 +1,142 @@
+"""Build-time pretraining of the tiny-LLM substrate + function-preserving
+outlier injection (DESIGN.md §Substitutions).
+
+Why pretrain at all: CBQ's phenomena (inter/intra-layer Hessian dependencies,
+rounding-loss landscape, outlier channels) only exist on *trained* weights.
+This runs once inside `make artifacts`; Python never executes at
+quantization/serving time.
+
+Outlier injection (both transforms are exactly function-preserving):
+  * activation outliers — scale selected channels of each RMSNorm weight by
+    `gain` and the matching input rows of the consuming linears by 1/gain.
+    This is the inverse of the SmoothQuant/OS+ equivalent transform, i.e. it
+    plants exactly the per-channel activation outliers those methods (and
+    CFP-activation) are designed to remove.
+  * weight outliers — scale selected wv columns by `gain` and the matching
+    wo rows by 1/gain (v-channels pass linearly through attention mixing),
+    and likewise wup columns / wdown rows through the SwiGLU's linear `up`
+    path. This plants large-magnitude weight columns (CFP-weight targets).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .configs import LINEAR_NAMES, ModelConfig
+from .model import fp_forward, init_params, xent
+
+PRETRAIN_SEED = 42
+CORPUS_SEED = 42
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.asarray(0, jnp.int32)}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mc = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vc = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mc, vc)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def pretrain(cfg: ModelConfig, log=print):
+    params = init_params(cfg, jax.random.PRNGKey(PRETRAIN_SEED))
+
+    @jax.jit
+    def step(params, state, x, y):
+        def loss_fn(p):
+            return xent(fp_forward(p, x, cfg), y)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_step(params, grads, state, cfg.pretrain_lr)
+        return params, state, loss
+
+    state = adam_init(params)
+    # alternate corpus styles so the model learns both eval distributions
+    gens = {
+        s: data.batches(s, CORPUS_SEED, cfg.pretrain_steps // 2 + 1,
+                        cfg.pretrain_batch, cfg.seq)
+        for s in (data.STYLE_C4, data.STYLE_WIKI)
+    }
+    t0 = time.time()
+    loss = None
+    for i in range(cfg.pretrain_steps):
+        style = data.STYLE_C4 if i % 2 == 0 else data.STYLE_WIKI
+        batch = np.asarray(next(gens[style]), dtype=np.int32)
+        x, y = batch[:, :-1], batch[:, 1:]
+        params, state, loss = step(params, state, x, y)
+        if i % 100 == 0 or i == cfg.pretrain_steps - 1:
+            log(f"  [{cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params, float(loss)
+
+
+def inject_outliers(cfg: ModelConfig, params):
+    """Function-preserving activation + weight outlier injection. Returns a
+    new params tree; channel indices are deterministic per (layer, seed)."""
+    rng = np.random.default_rng(1234)
+    p = jax.tree_util.tree_map(np.asarray, params)
+    d, f = cfg.d_model, cfg.d_ffn
+    g = cfg.outlier_gain
+    for li, b in enumerate(p["blocks"]):
+        # activation outliers: attn path
+        ch = rng.choice(d, size=cfg.outlier_channels, replace=False)
+        b["attn_norm"] = b["attn_norm"].copy()
+        b["attn_norm"][ch] *= g
+        for name in ("wq", "wk", "wv"):
+            b[name] = b[name].copy()
+            b[name][ch, :] /= g
+        # activation outliers: mlp path
+        ch2 = rng.choice(d, size=cfg.outlier_channels, replace=False)
+        b["mlp_norm"] = b["mlp_norm"].copy()
+        b["mlp_norm"][ch2] *= g
+        for name in ("wgate", "wup"):
+            b[name] = b[name].copy()
+            b[name][ch2, :] /= g
+        # weight outliers: v-channel pairs + up-channel pairs
+        vc = rng.choice(d, size=max(1, cfg.outlier_channels // 2), replace=False)
+        b["wv"] = b["wv"].copy(); b["wo"] = b["wo"].copy()
+        b["wv"][:, vc] *= g
+        b["wo"][vc, :] /= g
+        uc = rng.choice(f, size=max(1, cfg.outlier_channels // 2), replace=False)
+        b["wup"] = b["wup"].copy(); b["wdown"] = b["wdown"].copy()
+        b["wup"][:, uc] *= g
+        b["wdown"][uc, :] /= g
+    return p
+
+
+def params_to_tensors(params) -> dict:
+    out = {"embed": np.asarray(params["embed"]),
+           "final_norm": np.asarray(params["final_norm"]),
+           "head": np.asarray(params["head"])}
+    for i, b in enumerate(params["blocks"]):
+        out[f"blocks.{i}.attn_norm"] = np.asarray(b["attn_norm"])
+        out[f"blocks.{i}.mlp_norm"] = np.asarray(b["mlp_norm"])
+        for name in LINEAR_NAMES:
+            out[f"blocks.{i}.{name}"] = np.asarray(b[name])
+    return out
+
+
+def tensors_to_params(tensors, cfg: ModelConfig):
+    blocks = []
+    for i in range(cfg.n_layers):
+        b = {"attn_norm": jnp.asarray(tensors[f"blocks.{i}.attn_norm"]),
+             "mlp_norm": jnp.asarray(tensors[f"blocks.{i}.mlp_norm"])}
+        for name in LINEAR_NAMES:
+            b[name] = jnp.asarray(tensors[f"blocks.{i}.{name}"])
+        blocks.append(b)
+    return {"embed": jnp.asarray(tensors["embed"]),
+            "final_norm": jnp.asarray(tensors["final_norm"]),
+            "head": jnp.asarray(tensors["head"]),
+            "blocks": blocks}

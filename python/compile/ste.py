@@ -1,0 +1,158 @@
+"""Straight-through-estimator seams between the L1 Pallas kernels and the
+L2 gradient graphs.
+
+round/floor have zero gradient, so the reconstruction optimization (Eq. 5/9)
+needs custom gradient rules regardless of the kernel backend — that makes
+`jax.custom_vjp` the natural interface: the *forward* runs the Pallas kernel
+(interpret mode, same code path the Rust runtime executes), the *backward*
+implements the LSQ-style step-size gradients and STE pass-through in jnp.
+
+Gradient rules (v = x/s, in-range mask Z = [lo <= round(v) <= hi]):
+  activations (learnable clip alpha, per-token s = alpha*max|x|/qmax):
+     dL/dx     = g_x * (1 - a_en + a_en * Z)            (STE, clip cuts flow)
+     dL/ds_tok = sum_k g_x * (round(v)-v) [in-range] or clip bound [clipped]
+     dL/dalpha = sum_tok dL/ds_tok * max|x_tok| / qmax
+  weights (per-channel s_w, rounding offset rho):
+     dL/ds_w  = sum_K g_w * (q - v) [in-range] or q [clipped]   (LSQ)
+     dL/drho  = g_w * s_w * Z   (flows into V = A1 @ A2 outside)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.quant_matmul import quant_matmul as _pl_quant_matmul
+from .kernels.quant_weight import quant_weight as _pl_quant_weight
+from .kernels.rmsnorm import rmsnorm as _pl_rmsnorm
+
+_one = lambda v: jnp.reshape(v, (1,)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused activation-quant matmul
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def qmatmul(x, w_hat, alpha, qmax, a_en):
+    """x: [M,K] @ w_hat: [K,N] with per-token activation fake-quant.
+    alpha/qmax/a_en are scalars (0-d arrays)."""
+    return _pl_quant_matmul(x, w_hat, _one(alpha), _one(qmax), _one(a_en))
+
+
+def _qmatmul_fwd(x, w_hat, alpha, qmax, a_en):
+    y = qmatmul(x, w_hat, alpha, qmax, a_en)
+    return y, (x, w_hat, alpha, qmax, a_en)
+
+
+def _qmatmul_bwd(res, g):
+    x, w_hat, alpha, qmax, a_en = res
+    s = ref.act_scale(x, alpha, qmax)                 # [M,1]
+    v = x / s
+    r = jnp.round(v)
+    lo, hi = -qmax - 1.0, qmax
+    z = ((r >= lo) & (r <= hi)).astype(x.dtype)       # in-range mask
+    rc = jnp.clip(r, lo, hi)
+    x_q = rc * s
+    x_eff = x + a_en * (x_q - x)
+
+    dxe = g @ w_hat.T                                  # grad wrt x_eff
+    dw_hat = x_eff.T @ g
+    # STE through round; clipped activations stop gradient on the quant path
+    dx = dxe * (1.0 - a_en + a_en * z)
+    # LSQ step-size gradient, chained to alpha through s = alpha*max|x|/qmax
+    dq_ds = jnp.where(z > 0, rc - v, rc)               # d x_q / d s
+    ds_tok = jnp.sum(dxe * a_en * dq_ds, axis=-1, keepdims=True)
+    m = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    dalpha = jnp.sum(ds_tok * m / qmax)
+    return dx, dw_hat, jnp.reshape(dalpha, jnp.shape(alpha)), None, None
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# weight fake-quant with rounding offset
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def qweight(w, s_w, rho, qmax, w_en):
+    """w: [K,N], s_w: [N], rho: [K,N]; qmax/w_en scalars."""
+    return _pl_quant_weight(w, s_w, rho, _one(qmax), _one(w_en))
+
+
+def _qweight_fwd(w, s_w, rho, qmax, w_en):
+    return qweight(w, s_w, rho, qmax, w_en), (w, s_w, rho, qmax, w_en)
+
+
+def _qweight_bwd(res, g):
+    w, s_w, rho, qmax, w_en = res
+    s = jnp.maximum(s_w, ref.EPS)[None, :]
+    v = w / s
+    q_unc = jnp.floor(v) + rho
+    lo, hi = -qmax - 1.0, qmax
+    z = ((q_unc >= lo) & (q_unc <= hi)).astype(w.dtype)
+    q = jnp.clip(q_unc, lo, hi)
+
+    # w_hat = w + w_en * (q*s - w)
+    dw = g * (1.0 - w_en + w_en * z)                   # STE pass-through
+    dq_ds = jnp.where(z > 0, q - v, q)                 # LSQ per-channel
+    ds_w = jnp.sum(g * w_en * dq_ds, axis=0)
+    drho = g * w_en * s * z
+    return dw, ds_w, drho, None, None
+
+
+qweight.defvjp(_qweight_fwd, _qweight_bwd)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm (analytic backward; forward runs the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def rmsnorm(x, g):
+    return _pl_rmsnorm(x, g)
+
+
+def _rmsnorm_fwd(x, g):
+    return rmsnorm(x, g), (x, g)
+
+
+def _rmsnorm_bwd(res, gy):
+    x, g = res
+    d = x.shape[-1]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True) + 1e-5
+    r = jax.lax.rsqrt(ms)
+    gg = gy * g[None, :]
+    dx = r * gg - x * (r ** 3) * jnp.mean(x * gg, axis=-1, keepdims=True)
+    dgamma = jnp.sum(gy * x * r, axis=0)
+    return dx, dgamma
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def lora_rho(a1, a2):
+    """rho = rectified-sigmoid(V), V = A1 @ A2 (Eq. 8 + 11).
+    zeta/gamma fixed to the paper's 1.1 / -0.1."""
+    from .configs import ZETA, GAMMA
+    v = a1 @ a2
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def lora_rho_offset(v0, a1, a2):
+    """rho = rectified-sigmoid(V0 + A1 @ A2): AdaRound warm-start constant
+    V0 plus the learnable low-rank delta (see model._rho)."""
+    from .configs import ZETA, GAMMA
+    v = v0 + a1 @ a2
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def dense_rho(v):
+    """Dense-AdaRound rho = rectified-sigmoid(V) with a full V matrix."""
+    from .configs import ZETA, GAMMA
+    return jnp.clip(jax.nn.sigmoid(v) * (ZETA - GAMMA) + GAMMA, 0.0, 1.0)
+
+
+def rho_regularizer(rho, beta):
+    """L_com = sum 1 - |2*rho - 1|^beta (Eq. 12), annealed via beta."""
+    return jnp.sum(1.0 - jnp.abs(2.0 * rho - 1.0) ** beta)

@@ -1,0 +1,129 @@
+"""L1 correctness: every Pallas kernel (interpret mode) vs its pure-jnp
+oracle in kernels/ref.py, with hypothesis sweeping shapes and value ranges.
+This is the core correctness signal for the whole stack — the AOT graphs are
+built from exactly these kernels.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant_matmul import quant_matmul
+from compile.kernels.quant_weight import quant_weight
+from compile.kernels.rmsnorm import rmsnorm
+
+one = lambda v: jnp.asarray([v], dtype=jnp.float32)
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+dims = st.sampled_from([32, 64, 96, 128])
+qmaxes = st.sampled_from([1.0, 3.0, 7.0, 31.0, 127.0])
+seeds = st.integers(0, 2 ** 31 - 1)
+
+
+class TestQuantMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims, qmax=qmaxes, seed=seeds,
+           alpha=st.floats(0.3, 1.5), a_en=st.sampled_from([0.0, 1.0]))
+    def test_matches_ref(self, m, k, n, qmax, seed, alpha, a_en):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        w = rand(rng, k, n)
+        got = quant_matmul(x, w, one(alpha), one(qmax), one(a_en))
+        want = ref.quant_matmul(x, w, alpha, qmax, a_en)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_fp_path_is_exact_matmul(self):
+        rng = np.random.default_rng(0)
+        x, w = rand(rng, 64, 32), rand(rng, 32, 64)
+        got = quant_matmul(x, w, one(1.0), one(7.0), one(0.0))
+        np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-6)
+
+    def test_tile_size_invariance(self):
+        rng = np.random.default_rng(1)
+        x, w = rand(rng, 128, 64), rand(rng, 64, 64)
+        a = quant_matmul(x, w, one(0.9), one(7.0), one(1.0), tm=32)
+        b = quant_matmul(x, w, one(0.9), one(7.0), one(1.0), tm=128)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+    def test_quantized_output_changes(self):
+        """W4-A2-style quantization must actually perturb the output."""
+        rng = np.random.default_rng(2)
+        x, w = rand(rng, 64, 64), rand(rng, 64, 64)
+        fp = quant_matmul(x, w, one(1.0), one(7.0), one(0.0))
+        q = quant_matmul(x, w, one(1.0), one(1.0), one(1.0))
+        assert float(jnp.max(jnp.abs(fp - q))) > 1e-3
+
+    def test_zero_input_safe(self):
+        x = jnp.zeros((32, 32), jnp.float32)
+        w = jnp.ones((32, 32), jnp.float32)
+        got = quant_matmul(x, w, one(1.0), one(7.0), one(1.0))
+        assert bool(jnp.all(jnp.isfinite(got)))
+        np.testing.assert_allclose(got, 0.0, atol=1e-6)
+
+
+class TestQuantWeight:
+    @settings(max_examples=25, deadline=None)
+    @given(k=dims, n=dims, qmax=qmaxes, seed=seeds,
+           w_en=st.sampled_from([0.0, 1.0]))
+    def test_matches_ref(self, k, n, qmax, seed, w_en):
+        rng = np.random.default_rng(seed)
+        w = rand(rng, k, n)
+        s = jnp.asarray(np.abs(rng.normal(size=n)).astype(np.float32)
+                        * 0.05 + 0.02)
+        rho = jnp.asarray(rng.uniform(size=(k, n)).astype(np.float32))
+        got = quant_weight(w, s, rho, one(qmax), one(w_en))
+        want = ref.blend_weight(w, s, rho, qmax, w_en)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_grid_levels(self):
+        """Quantized weights with integer rho land on the integer grid."""
+        rng = np.random.default_rng(3)
+        w = rand(rng, 32, 32)
+        s = jnp.full((32,), 0.1, jnp.float32)
+        rho = ref.round_ste_rho(w, s)
+        q = quant_weight(w, s, rho, one(7.0), one(1.0))
+        lev = np.asarray(q) / 0.1
+        np.testing.assert_allclose(lev, np.round(lev), atol=1e-4)
+        assert lev.min() >= -8.0 - 1e-4 and lev.max() <= 7.0 + 1e-4
+
+    def test_rho_moves_rounding(self):
+        """rho=0 floors, rho=1 ceils: differ by exactly one step where the
+        value is fractional."""
+        w = jnp.asarray([[0.149, -0.151]], jnp.float32)
+        s = jnp.asarray([0.1, 0.1], jnp.float32)
+        lo = quant_weight(w, s, jnp.zeros((1, 2)), one(7.0), one(1.0))
+        hi = quant_weight(w, s, jnp.ones((1, 2)), one(7.0), one(1.0))
+        np.testing.assert_allclose(np.asarray(hi - lo), 0.1, atol=1e-6)
+
+    def test_disable_is_identity(self):
+        rng = np.random.default_rng(4)
+        w = rand(rng, 64, 32)
+        s = jnp.full((32,), 0.07, jnp.float32)
+        rho = jnp.full((64, 32), 0.5, jnp.float32)
+        got = quant_weight(w, s, rho, one(7.0), one(0.0))
+        np.testing.assert_allclose(got, w, atol=0)
+
+
+class TestRmsNorm:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, d=dims, seed=seeds, scale=st.floats(0.1, 10.0))
+    def test_matches_ref(self, m, d, seed, scale):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, d, scale=scale)
+        g = rand(rng, d)
+        got = rmsnorm(x, g)
+        want = ref.rmsnorm(x, g)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_unit_rms(self):
+        rng = np.random.default_rng(5)
+        x = rand(rng, 64, 128, scale=3.0)
+        y = rmsnorm(x, jnp.ones((128,), jnp.float32))
+        rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, atol=1e-2)

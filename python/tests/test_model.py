@@ -1,0 +1,259 @@
+"""L2 model-level correctness: FP/quant path parity, loss properties,
+window semantics, capture wiring, lm_eval, and the flatten contract that the
+Rust runtime depends on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+from compile.configs import CONFIGS, LINEAR_NAMES
+
+CFG = CONFIGS["t"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def window_inputs(params, w, bits_w=4, bits_a=16, w_en=1.0, a_en=0.0,
+                  seed=0, use_lora=1.0):
+    rng = np.random.default_rng(seed)
+    shape = (CFG.batch, CFG.seq, CFG.d_model)
+    blocks = params["blocks"][:w]
+    glob = model.default_globals()
+    # use_lora=0 selects the nearest-rounding rho path; with the AdaRound
+    # warm-start (V0), the soft path is near-lossless at init by design.
+    glob["use_lora"] = jnp.asarray(use_lora, jnp.float32)
+    return {
+        "h_in": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+        "target": jnp.asarray(rng.normal(size=shape).astype(np.float32)),
+        "blocks": blocks,
+        "qblocks": [model.init_qparams_block(CFG, b, bits_w, bits_a,
+                                             w_en, a_en) for b in blocks],
+        "globals": glob,
+    }
+
+
+class TestFlattenContract:
+    def test_roundtrip(self, params):
+        ins = window_inputs(params, 2)
+        flat = model.flatten_spec(ins)
+        rebuilt = model.unflatten_like(ins, [l for _, l in flat])
+        flat2 = model.flatten_spec(rebuilt)
+        assert [n for n, _ in flat] == [n for n, _ in flat2]
+        for (_, a), (_, b) in zip(flat, flat2):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_names_deterministic_and_unique(self, params):
+        ins = window_inputs(params, 2)
+        names = [n for n, _ in model.flatten_spec(ins)]
+        assert names == sorted(set(names), key=names.index)
+        assert len(set(names)) == len(names)
+        assert "blocks.0.wq" in names
+        assert "qblocks.1.wdown.s_w" in names
+        assert "globals.use_lora" in names
+
+
+class TestQuantFpParity:
+    def test_disabled_quant_matches_fp_block(self, params):
+        """w_en=a_en=0 through the Pallas/STE path must equal the pure-jnp
+        FP block — the contract that lets one artifact serve the FP path."""
+        ins = window_inputs(params, 2, w_en=0.0, a_en=0.0)
+        out = model.window_forward(ins, CFG)
+        h = ins["h_in"]
+        for b in ins["blocks"]:
+            h = model.fp_block(b, h, CFG)
+        np.testing.assert_allclose(np.asarray(out["h_out"]), np.asarray(h),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_quant_perturbs_output(self, params):
+        fp = model.window_forward(window_inputs(params, 1, w_en=0.0), CFG)
+        q2 = model.window_forward(
+            window_inputs(params, 1, bits_w=2, w_en=1.0, use_lora=0.0), CFG)
+        delta = float(jnp.mean(jnp.abs(fp["h_out"] - q2["h_out"])))
+        assert delta > 1e-3
+
+    def test_more_bits_less_error(self, params):
+        """W8 reconstruction error << W2 error vs the FP output."""
+        fp = model.window_forward(window_inputs(params, 1, w_en=0.0), CFG)
+        errs = {}
+        for bits in (2, 8):
+            q = model.window_forward(
+                window_inputs(params, 1, bits_w=bits, w_en=1.0,
+                              use_lora=0.0), CFG)
+            errs[bits] = float(jnp.mean((q["h_out"] - fp["h_out"]) ** 2))
+        assert errs[8] < errs[2] * 0.05
+
+
+class TestLosses:
+    def test_recon_loss_zero_at_target(self):
+        glob = model.default_globals()
+        h = jnp.ones((2, 4, 8))
+        loss, mse, kld = model.recon_loss(h, h, glob)
+        assert float(loss) < 1e-6
+
+    def test_kld_nonnegative(self):
+        rng = np.random.default_rng(0)
+        glob = model.default_globals()
+        a = jnp.asarray(rng.normal(size=(2, 4, 8)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(2, 4, 8)).astype(np.float32))
+        _, _, kld = model.recon_loss(a, b, glob)
+        assert float(kld) >= 0.0
+
+    def test_loss_weights_gate_terms(self):
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.normal(size=(2, 4, 8)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(2, 4, 8)).astype(np.float32))
+        g = model.default_globals()
+        g_l2 = dict(g, l2_w=jnp.asarray(1.0), kld_w=jnp.asarray(0.0))
+        g_kl = dict(g, l2_w=jnp.asarray(0.0), kld_w=jnp.asarray(1.0))
+        l2only, mse, _ = model.recon_loss(a, b, g_l2)
+        klonly, _, kld = model.recon_loss(a, b, g_kl)
+        np.testing.assert_allclose(float(l2only), float(mse), rtol=1e-6)
+        np.testing.assert_allclose(float(klonly), float(kld), rtol=1e-6)
+
+
+class TestWindowGrads:
+    def test_grad_shapes_and_nonzero(self, params):
+        ins = window_inputs(params, 2, bits_w=4, w_en=1.0, a_en=1.0,
+                            bits_a=8)
+        out = model.window_loss_grads(ins, CFG)
+        assert np.isfinite(float(out["loss"]))
+        g0 = out["grads"][0]["wq"]
+        assert g0["s_w"].shape == (CFG.d_model,)
+        assert g0["a1"].shape == (CFG.d_model, CFG.rank_pad)
+        total = sum(float(jnp.sum(jnp.abs(g[n][k])))
+                    for g in out["grads"] for n in LINEAR_NAMES
+                    for k in ("s_w", "alpha", "a1", "a2"))
+        assert total > 0.0
+
+    def test_adam_on_quant_params_reduces_loss(self, params):
+        """Adam steps on (s_w, alpha) under the nearest-rounding path must
+        reduce the window reconstruction loss — the LSQ scale-learning
+        mechanic the Rust coordinator implements. (The LoRA path starts
+        near-lossless by the V0 warm-start, so its loss has no room to
+        fall; rounding learning is validated end-to-end in rust/tests.)"""
+        ins = window_inputs(params, 1, bits_w=3, w_en=1.0, a_en=0.0,
+                            use_lora=0.0)
+        fp = model.window_forward(window_inputs(params, 1, w_en=0.0), CFG)
+        ins["target"] = fp["h_out"]
+        ins["h_in"] = window_inputs(params, 1)["h_in"]
+
+        gfn = jax.jit(lambda i: model.window_loss_grads(i, CFG))
+        mom = {}
+
+        def adam(key, p, g, lr, t):
+            m, v = mom.get(key, (jnp.zeros_like(p), jnp.zeros_like(p)))
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * g * g
+            mom[key] = (m, v)
+            mh, vh = m / (1 - 0.9 ** t), v / (1 - 0.999 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+
+        lrs = {"s_w": 1e-4, "alpha": 1e-3}
+        losses = []
+        for step in range(30):
+            out = gfn(ins)
+            losses.append(float(out["loss"]))
+            for bi, gb in enumerate(out["grads"]):
+                for n in LINEAR_NAMES:
+                    for k in ("s_w", "alpha"):
+                        ins["qblocks"][bi][n][k] = adam(
+                            (bi, n, k), ins["qblocks"][bi][n][k],
+                            gb[n][k], lrs[k], step + 1)
+        assert losses[-1] < losses[0]
+
+    def test_lora_warm_start_is_near_lossless(self, params):
+        """With the V0 warm-start (soft rho == frac(W/s) at init), the soft
+        quantized forward matches FP closely even at 3 bits — the property
+        that makes short calibration schedules viable."""
+        soft = model.window_forward(
+            window_inputs(params, 1, bits_w=3, w_en=1.0, use_lora=1.0), CFG)
+        hard = model.window_forward(
+            window_inputs(params, 1, bits_w=3, w_en=1.0, use_lora=0.0), CFG)
+        fp = model.window_forward(window_inputs(params, 1, w_en=0.0), CFG)
+        err_soft = float(jnp.mean((soft["h_out"] - fp["h_out"]) ** 2))
+        err_hard = float(jnp.mean((hard["h_out"] - fp["h_out"]) ** 2))
+        assert err_soft < err_hard * 0.05, (err_soft, err_hard)
+
+
+class TestCapture:
+    def test_capture_shapes_and_consistency(self, params):
+        ins = window_inputs(params, 1)
+        out = model.block_capture(ins, CFG)
+        m = CFG.batch * CFG.seq
+        for n in LINEAR_NAMES:
+            fan_in = model.linear_shapes(CFG)[n][0]
+            assert out["captures"][n].shape == (m, fan_in)
+        fwd = model.window_forward(ins, CFG)
+        np.testing.assert_allclose(np.asarray(out["h_out"]),
+                                   np.asarray(fwd["h_out"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestLmEval:
+    def test_nll_matches_xent(self, params):
+        rng = np.random.default_rng(2)
+        h = jnp.asarray(rng.normal(
+            size=(CFG.batch, CFG.seq, CFG.d_model)).astype(np.float32))
+        tgt = jnp.asarray(rng.integers(
+            0, CFG.vocab, size=(CFG.batch, CFG.seq)), jnp.int32)
+        ins = {"h": h, "final_norm": params["final_norm"],
+               "head": params["head"], "targets": tgt,
+               "mask": jnp.ones((CFG.batch, CFG.seq), jnp.float32)}
+        out = model.lm_eval(ins, CFG)
+        logits = model._fp_rmsnorm(h, params["final_norm"]) @ params["head"]
+        want = model.xent(logits, tgt) * CFG.seq
+        np.testing.assert_allclose(float(jnp.mean(out["nll"])), float(want),
+                                   rtol=1e-4)
+
+    def test_mask_gates_positions(self, params):
+        rng = np.random.default_rng(3)
+        h = jnp.asarray(rng.normal(
+            size=(CFG.batch, CFG.seq, CFG.d_model)).astype(np.float32))
+        tgt = jnp.zeros((CFG.batch, CFG.seq), jnp.int32)
+        half = jnp.concatenate([
+            jnp.zeros((CFG.batch, CFG.seq // 2)),
+            jnp.ones((CFG.batch, CFG.seq - CFG.seq // 2))], axis=1
+        ).astype(jnp.float32)
+        ins = {"h": h, "final_norm": params["final_norm"],
+               "head": params["head"], "targets": tgt, "mask": half}
+        out = model.lm_eval(ins, CFG)
+        np.testing.assert_allclose(np.asarray(out["count"]),
+                                   CFG.seq - CFG.seq // 2)
+
+
+class TestCorpus:
+    def test_deterministic(self):
+        a = data.generate(data.STYLE_C4, 7, 512)
+        b = data.generate(data.STYLE_C4, 7, 512)
+        assert a == b
+
+    def test_styles_differ(self):
+        a = data.generate(data.STYLE_C4, 7, 512)
+        b = data.generate(data.STYLE_WIKI, 7, 512)
+        assert a != b
+
+    def test_token_range_and_structure(self):
+        toks = data.generate(data.STYLE_WIKI, 11, 1024)
+        assert all(0 <= t < 256 for t in toks)
+        # every segment opens with a topic marker
+        for i in range(0, 1024, data.SEGMENT_LEN):
+            assert data.TOPIC_BASE <= toks[i] < data.TOPIC_BASE + data.N_TOPICS
+
+    def test_learnable_structure(self):
+        """The affine-map component makes bigram entropy well below uniform."""
+        toks = data.generate(data.STYLE_C4, 5, 20000)
+        from collections import Counter
+        big = Counter(zip(toks, toks[1:]))
+        uni = Counter(toks)
+        h = 0.0
+        for (a, b), c in big.items():
+            p = c / uni[a]
+            h -= c * np.log2(p)
+        h /= len(toks) - 1
+        assert h < 5.0  # uniform over 240 would be ~7.9 bits

@@ -1,0 +1,181 @@
+"""Gradient-rule correctness for the STE custom_vjp seams (ste.py).
+
+The analytic LSQ/STE backward rules are validated against finite differences
+of the *smooth surrogate* where one exists (loss through fake-quant is
+piecewise-smooth; we test away from rounding boundaries), and against known
+closed forms (rmsnorm).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import ste
+from compile.kernels import ref
+
+
+def rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+def fd_grad(f, x, eps=1e-3):
+    """Central finite differences on a scalar function of one array."""
+    x = np.asarray(x, np.float64)
+    g = np.zeros_like(x)
+    it = np.nditer(x, flags=["multi_index"])
+    while not it.finished:
+        idx = it.multi_index
+        xp, xm = x.copy(), x.copy()
+        xp[idx] += eps
+        xm[idx] -= eps
+        g[idx] = (f(jnp.asarray(xp, jnp.float32))
+                  - f(jnp.asarray(xm, jnp.float32))) / (2 * eps)
+        it.iternext()
+    return g
+
+
+class TestQmatmulGrads:
+    def test_w_hat_grad_exact(self):
+        """d/dw_hat is exact (no STE involved): x_eff^T @ g."""
+        rng = np.random.default_rng(0)
+        x, w = rand(rng, 8, 4), rand(rng, 4, 6)
+
+        def loss(w_):
+            return jnp.sum(ste.qmatmul(x, w_, jnp.asarray(0.9),
+                                       jnp.asarray(7.0), jnp.asarray(1.0)))
+
+        g = jax.grad(loss)(w)
+        x_eff = ref.blend_act(x, 0.9, 7.0, 1.0)
+        want = x_eff.T @ jnp.ones((8, 6))
+        np.testing.assert_allclose(g, want, rtol=1e-5, atol=1e-5)
+
+    def test_fp_path_grads_are_plain_matmul(self):
+        rng = np.random.default_rng(1)
+        x, w = rand(rng, 8, 4), rand(rng, 4, 6)
+
+        def loss(x_):
+            return jnp.sum(ste.qmatmul(x_, w, jnp.asarray(1.0),
+                                       jnp.asarray(7.0), jnp.asarray(0.0)))
+
+        g = jax.grad(loss)(x)
+        np.testing.assert_allclose(g, jnp.ones((8, 6)) @ w.T,
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_alpha_grad_sign_reduces_loss(self):
+        """Following -grad(alpha) on a pure reconstruction loss must reduce
+        it (sanity for the LSQ chain rule through the per-token scale)."""
+        rng = np.random.default_rng(2)
+        x, w = rand(rng, 32, 16), rand(rng, 16, 16)
+        y_fp = x @ w
+
+        def loss(alpha):
+            y = ste.qmatmul(x, w, alpha, jnp.asarray(1.0), jnp.asarray(1.0))
+            return jnp.mean((y - y_fp) ** 2)
+
+        a0 = jnp.asarray(1.0)
+        l0 = loss(a0)
+        g = jax.grad(loss)(a0)
+        a1 = a0 - 0.05 * jnp.sign(g)
+        assert float(loss(a1)) < float(l0) + 1e-6
+
+    def test_alpha_grad_nonzero_when_quantizing(self):
+        rng = np.random.default_rng(3)
+        x, w = rand(rng, 16, 8), rand(rng, 8, 8)
+
+        def loss(alpha):
+            return jnp.sum(ste.qmatmul(x, w, alpha, jnp.asarray(3.0),
+                                       jnp.asarray(1.0)) ** 2)
+
+        assert abs(float(jax.grad(loss)(jnp.asarray(0.8)))) > 0.0
+
+
+class TestQweightGrads:
+    def test_rho_grad_matches_fd(self):
+        """rho enters w_hat linearly (in-range): analytic grad = s_w * g."""
+        rng = np.random.default_rng(4)
+        w = rand(rng, 6, 4, scale=0.3)
+        s = jnp.full((4,), 0.11, jnp.float32)
+        rho = jnp.asarray(rng.uniform(0.2, 0.8, size=(6, 4)), jnp.float32)
+
+        def loss(r):
+            return jnp.sum(ste.qweight(w, s, r, jnp.asarray(7.0),
+                                       jnp.asarray(1.0)) ** 2) * 0.5
+
+        g = jax.grad(loss)(rho)
+        w_hat = ref.fake_quant_weight(w, s, rho, 7.0)
+        fd = fd_grad(lambda r: float(loss(r)), rho, eps=1e-3)
+        np.testing.assert_allclose(g, fd, rtol=2e-2, atol=2e-3)
+        # in-range entries: d w_hat / d rho = s
+        np.testing.assert_allclose(g, np.asarray(w_hat) * 0.11, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_s_w_grad_direction(self):
+        """Minimizing ||fq(W)-W||^2 over s_w via the LSQ gradient must make
+        progress from a deliberately-wrong init."""
+        rng = np.random.default_rng(5)
+        w = rand(rng, 32, 16, scale=0.5)
+        rho = ref.round_ste_rho(w, jnp.full((16,), 0.2, jnp.float32))
+
+        def loss(s):
+            r = ref.round_ste_rho(w, s)
+            return jnp.mean((ste.qweight(w, s, r, jnp.asarray(7.0),
+                                         jnp.asarray(1.0)) - w) ** 2)
+
+        s = jnp.full((16,), 0.2, jnp.float32)  # too coarse
+        l0 = float(loss(s))
+        for _ in range(50):
+            g = jax.grad(loss)(s)
+            s = s - 0.01 * g
+        assert float(loss(s)) < l0
+
+    def test_disabled_weight_quant_passes_grad_through(self):
+        rng = np.random.default_rng(6)
+        w = rand(rng, 8, 8)
+        s = jnp.full((8,), 0.1, jnp.float32)
+        rho = jnp.full((8, 8), 0.5, jnp.float32)
+
+        def loss(w_):
+            return jnp.sum(ste.qweight(w_, s, rho, jnp.asarray(7.0),
+                                       jnp.asarray(0.0)))
+
+        np.testing.assert_allclose(jax.grad(loss)(w), 1.0, atol=0)
+
+
+class TestRmsnormGrads:
+    def test_matches_jax_autodiff(self):
+        rng = np.random.default_rng(7)
+        x = rand(rng, 16, 8)
+        g = rand(rng, 8)
+
+        def ours(x_, g_):
+            return jnp.sum(jnp.sin(ste.rmsnorm(x_, g_)))
+
+        def theirs(x_, g_):
+            return jnp.sum(jnp.sin(ref.rmsnorm(x_, g_)))
+
+        gx1, gg1 = jax.grad(ours, argnums=(0, 1))(x, g)
+        gx2, gg2 = jax.grad(theirs, argnums=(0, 1))(x, g)
+        np.testing.assert_allclose(gx1, gx2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gg1, gg2, rtol=1e-4, atol=1e-5)
+
+
+class TestLoraRho:
+    def test_range_and_regularizer(self):
+        rng = np.random.default_rng(8)
+        a1 = rand(rng, 16, 4, scale=2.0)
+        a2 = rand(rng, 4, 8, scale=2.0)
+        rho = ste.lora_rho(a1, a2)
+        assert float(jnp.min(rho)) >= 0.0 and float(jnp.max(rho)) <= 1.0
+        # regularizer: zero iff rho is exactly binary
+        binary = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])
+        assert float(ste.rho_regularizer(binary, 2.0)) < 1e-6
+        mid = jnp.full((2, 2), 0.5)
+        assert float(ste.rho_regularizer(mid, 2.0)) > 3.9
+
+    def test_zero_a2_gives_near_round_init(self):
+        """A2=0 => V=0 => rho ~ 0.55: the paper's zero-offset init."""
+        a1 = jnp.ones((4, 2))
+        a2 = jnp.zeros((2, 4))
+        rho = ste.lora_rho(a1, a2)
+        np.testing.assert_allclose(rho, 0.5, atol=0.06)

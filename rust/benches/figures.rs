@@ -1,0 +1,121 @@
+//! Paper-figure regeneration harness (`cargo bench --bench figures`).
+//!
+//! Figure 1 (a/b/c): Hessian dependency analysis — off-diagonal mass grows
+//! as bits shrink (the paper's Sec. 2 motivation).
+//! Figure 3: weight/activation outlier distributions before/after CFP.
+//!
+//! Output: ASCII heatmaps + histograms to stdout, CSV matrices to
+//! `bench_out/` for external plotting.
+
+use std::fs;
+use std::time::Instant;
+
+use cbq::calib;
+use cbq::cfp;
+use cbq::config::{BitSpec, PreprocMethod, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::hessian::{offdiag_ratio, HessianProbe};
+use cbq::model_state::ActStats;
+use cbq::report::{heatmap, magnitude_histogram, matrix_csv, Table};
+use cbq::runtime::{Artifacts, Runtime};
+
+fn out_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("bench_out");
+    fs::create_dir_all(&p).ok();
+    p
+}
+
+/// Figure 1(b): inter-block scale Hessian at W8 / W4 / W2, plus the
+/// summary off-diagonal-mass trend; 1(a): intra-layer weight Hessian block;
+/// 1(c): pairwise loss surface over two adjacent blocks' scales.
+fn fig1(art: &Artifacts, model: &str) {
+    let rt = Runtime::new(art).unwrap();
+    let pipe = Pipeline::new(art, &rt, model).unwrap();
+    let mut trend = Table::new(
+        format!("Fig. 1 — dependency strength vs bits (`{model}`)"),
+        &["bits", "inter-block offdiag ratio", "intra-layer offdiag ratio"],
+    );
+    for bits in [8u8, 4, 2] {
+        let probe = HessianProbe::new(&pipe, BitSpec::new(bits, 16)).unwrap();
+        let inter = probe.inter_block_hessian(0.05).unwrap();
+        println!("{}", heatmap(&format!("Fig 1b: inter-block scale Hessian, W{bits}"), &inter));
+        fs::write(out_dir().join(format!("fig1b_w{bits}.csv")), matrix_csv(&inter)).unwrap();
+
+        let intra = probe.intra_layer_hessian(0, "wq", 12, 0.02).unwrap();
+        println!("{}", heatmap(&format!("Fig 1a: intra-layer weight Hessian (block0.wq), W{bits}"), &intra));
+        fs::write(out_dir().join(format!("fig1a_w{bits}.csv")), matrix_csv(&intra)).unwrap();
+
+        trend.row(&[
+            format!("W{bits}"),
+            format!("{:.4}", offdiag_ratio(&inter)),
+            format!("{:.4}", offdiag_ratio(&intra)),
+        ]);
+    }
+    trend.print();
+    println!("expected shape: both ratios grow as bits shrink (Sec. 2)");
+
+    // 1(c): loss surface over joint scale multipliers of blocks 0 and 1
+    let probe = HessianProbe::new(&pipe, BitSpec::new(4, 16)).unwrap();
+    let grid: Vec<f32> = (0..7).map(|i| 0.7 + 0.1 * i as f32).collect();
+    let surface = probe.pairwise_loss_surface(0, 1, &grid).unwrap();
+    println!("{}", heatmap("Fig 1c: loss vs (scale b0, scale b1) @ W4", &surface));
+    fs::write(out_dir().join("fig1c.csv"), matrix_csv(&surface)).unwrap();
+}
+
+/// Figure 3: outlier distributions in weights and activations, before and
+/// after CFP pre-processing.
+fn fig3(art: &Artifacts, model: &str) {
+    let rt = Runtime::new(art).unwrap();
+    let mut pipe = Pipeline::new(art, &rt, model).unwrap();
+    let calib_set = calib::calibration(8, pipe.cfg.batch, pipe.cfg.seq);
+    let fp_hidden = pipe.fp_hidden_states(&calib_set).unwrap();
+    let stats: ActStats = pipe.capture_stats(&pipe.fp.clone(), &calib_set, &fp_hidden).unwrap();
+
+    // weights: block 0 wup (one of the injected weight-outlier carriers)
+    let w = &pipe.fp.blocks[0].linears["wup"];
+    println!("{}", magnitude_histogram("Fig 3: |W| block0.wup BEFORE CFP", &w.data, 16));
+    let det = cfp::detect_default(&w.data);
+    println!(
+        "CFP weight detection: {} candidates, {} outliers, threshold {:?}, reserved max {:.4}",
+        det.n_candidates, det.n_outliers, det.threshold, det.reserved_max
+    );
+
+    // activations: per-channel maxima of the attn input of block 0
+    let maxima = stats.max_of(0, "wq").to_vec();
+    println!("{}", magnitude_histogram("Fig 3: act channel max |X| block0.attn_in BEFORE CFP", &maxima, 16));
+
+    // run CFP + re-capture to show the post-state
+    let mut job = QuantJob::rtn(BitSpec::w4a4());
+    job.preproc = PreprocMethod::CfpFull;
+    job.calib_sequences = 8;
+    let (m, summary) = pipe.run(&job).unwrap();
+    println!(
+        "CFP applied: {} weights truncated, {} activation channels scaled",
+        summary.preproc_weights_truncated, summary.preproc_channels_scaled
+    );
+    let w_after = &m.params.blocks[0].linears["wup"];
+    println!("{}", magnitude_histogram("Fig 3: |W| block0.wup AFTER CFP (then RTN)", &w_after.data, 16));
+
+    let stats_after = {
+        // capture on the preprocessed weights (before fake-quant would be
+        // ideal; the RTN grid only coarsens magnitudes slightly)
+        pipe.capture_stats(&m.params, &calib_set, &fp_hidden).unwrap()
+    };
+    let maxima_after = stats_after.max_of(0, "wq").to_vec();
+    println!("{}", magnitude_histogram("Fig 3: act channel max |X| AFTER CFP", &maxima_after, 16));
+}
+
+fn main() {
+    let art = Artifacts::discover().expect("run `make artifacts` first");
+    let model = std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| "t".into());
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let run_all = args.is_empty();
+    let t0 = Instant::now();
+    if run_all || args.iter().any(|a| a == "fig1") {
+        fig1(&art, &model);
+    }
+    if run_all || args.iter().any(|a| a == "fig3") {
+        fig3(&art, &model);
+    }
+    println!("\n[figures took {:.1}s; CSVs in bench_out/]", t0.elapsed().as_secs_f64());
+}

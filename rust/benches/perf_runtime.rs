@@ -1,0 +1,141 @@
+//! Runtime hot-path benchmark (`cargo bench --bench perf_runtime`) — the
+//! §Perf instrument for the L3 layer.
+//!
+//! Measures, per model config:
+//!   * executable compile time (one-off)
+//!   * window-grad step latency (the CBD optimization inner loop)
+//!   * full-upload vs pinned-weight execution (weights as persistent device
+//!     buffers; only learnable tensors re-uploaded per step)
+//!   * quantized-eval throughput (tokens/s through the block chain + head)
+//!
+//! Results recorded in EXPERIMENTS.md §Perf.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use cbq::calib::{self, corpus::Style};
+use cbq::config::{BitSpec, QuantJob, RoundingMode};
+use cbq::coordinator::Pipeline;
+use cbq::report::{fmt_f, Table};
+use cbq::runtime::{Artifacts, Bindings, Runtime, Value};
+use cbq::tensor::Tensor;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / n as f64
+}
+
+fn main() {
+    let art = Artifacts::discover().expect("run `make artifacts` first");
+    let model = std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| "s".into());
+    let reps: usize = std::env::var("CBQ_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let rt = Runtime::new(&art).unwrap();
+    let pipe = Pipeline::new(&art, &rt, &model).unwrap();
+    let cfg = pipe.cfg.clone();
+    println!("perf_runtime on model `{model}` (d={} L={}), {reps} reps", cfg.d_model, cfg.n_layers);
+
+    // ---- compile costs ----------------------------------------------------
+    let mut t = Table::new("compile time (first use)", &["executable", "ms"]);
+    for name in [
+        format!("win_fwd_w1_{model}"),
+        format!("win_grad_w1_{model}"),
+        format!("win_grad_w2_{model}"),
+        format!("lm_eval_{model}"),
+    ] {
+        let before = rt.stats().compile_ms;
+        rt.warmup(&name).unwrap();
+        let after = rt.stats().compile_ms;
+        t.row(&[name, fmt_f(after - before, 1)]);
+    }
+    t.print();
+
+    // ---- window-grad step latency: full upload vs pinned weights ----------
+    let job = QuantJob::cbq(BitSpec::w4a4());
+    let qstate = pipe.init_qstate(&pipe.fp, &job.bits, job.rank, RoundingMode::Lora);
+    let batch = &calib::calibration(cfg.batch, cfg.batch, cfg.seq)[0];
+    let h0 = pipe.fp.embed_tokens(&batch.inputs().data, cfg.batch, cfg.seq);
+
+    let build_bindings = |w: usize| -> Bindings {
+        let mut b = Bindings::new();
+        b.set("h_in", h0.clone());
+        b.set("target", Tensor::zeros(&h0.dims));
+        for j in 0..w {
+            Pipeline::bind_block_weights(&mut b, j, &pipe.fp.blocks[j]);
+            Pipeline::bind_qblock(&mut b, j, &qstate[j], 7.0, 1.0, 1.0, false);
+        }
+        Pipeline::bind_globals(&mut b, 1.0, 10.0, 1e-3, 1.0, 1.0);
+        b
+    };
+
+    let mut t = Table::new(
+        "window-grad step latency (ms)",
+        &["window", "full upload", "pinned weights", "speedup"],
+    );
+    for w in [1usize, 2] {
+        let exec = format!("win_grad_w{w}_{model}");
+        if rt.spec(&exec).is_err() {
+            continue;
+        }
+        let b = build_bindings(w);
+        let full = time_n(reps, || {
+            rt.run(&exec, b.inner()).unwrap();
+        });
+        // pin the static inputs: weights + v0 (constant per job)
+        let static_names: BTreeMap<String, Value> = b
+            .inner()
+            .iter()
+            .filter(|(k, _)| {
+                k.starts_with("blocks.") || k.ends_with(".v0")
+            })
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let pinned = rt.pin(&exec, &static_names).unwrap();
+        let dynamic: BTreeMap<String, Value> = b
+            .inner()
+            .iter()
+            .filter(|(k, _)| !static_names.contains_key(*k))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let pin_t = time_n(reps, || {
+            rt.run_pinned(&pinned, &dynamic).unwrap();
+        });
+        t.row(&[
+            w.to_string(),
+            fmt_f(full * 1e3, 2),
+            fmt_f(pin_t * 1e3, 2),
+            format!("{:.2}x", full / pin_t),
+        ]);
+    }
+    t.print();
+
+    // ---- quantized eval throughput ----------------------------------------
+    let mut pipe2 = Pipeline::new(&art, &rt, &model).unwrap();
+    let mut job = QuantJob::rtn(BitSpec::w4a4());
+    job.calib_sequences = 4;
+    let (qm, _) = pipe2.run(&job).unwrap();
+    let eval_batches = calib::eval_stream(Style::C4, 4, cfg.batch, cfg.seq);
+    let toks_per_batch = (cfg.batch * cfg.seq) as f64;
+    let per_batch = time_n(3, || {
+        for b in &eval_batches {
+            let mask = Tensor::full(&[cfg.batch, cfg.seq], 1.0);
+            pipe2.lm_nll(&qm, &b.inputs(), &b.targets(), &mask).unwrap();
+        }
+    }) / eval_batches.len() as f64;
+    let mut t = Table::new("quantized eval throughput", &["metric", "value"]);
+    t.row(&["batch latency (ms)".into(), fmt_f(per_batch * 1e3, 2)]);
+    t.row(&["tokens/s".into(), fmt_f(toks_per_batch / per_batch, 0)]);
+    t.print();
+
+    let stats = rt.stats();
+    println!(
+        "\ntotals: {} execs, {:.1}ms exec time, {:.1} MiB uploaded",
+        stats.executions,
+        stats.execute_ms,
+        stats.upload_bytes as f64 / (1024.0 * 1024.0)
+    );
+}

@@ -1,0 +1,431 @@
+//! Paper-table regeneration harness (`cargo bench --bench tables`).
+//!
+//! One function per table of the CBQ paper's evaluation; each prints the
+//! same rows the paper reports, measured on this repo's testbed (synthetic
+//! corpora + build-time-pretrained models — see DESIGN.md §Substitutions).
+//! Absolute numbers differ from the paper's A100 runs; the *shape* (who
+//! wins, by roughly what factor, where the crossovers fall) is the
+//! reproduction target, recorded in EXPERIMENTS.md.
+//!
+//! Select tables:   cargo bench --bench tables -- table2 table5
+//! Scale knobs:     CBQ_BENCH_MODEL=s CBQ_BENCH_CALIB=32 CBQ_BENCH_EVAL=16
+//!
+//! Defaults run every table on the `t` model in a few minutes.
+
+use std::time::Instant;
+
+use cbq::calib::corpus::Style;
+use cbq::config::{BitSpec, Method, PreprocMethod, QuantJob, RoundingMode};
+use cbq::coordinator::Pipeline;
+use cbq::report::{fmt_f, Table};
+use cbq::runtime::{Artifacts, Runtime};
+
+struct Bench {
+    art: Artifacts,
+    model: String,
+    calib: usize,
+    eval_batches: usize,
+    items: usize,
+    epochs: usize,
+}
+
+fn envu(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl Bench {
+    fn new() -> Self {
+        let art = Artifacts::discover().expect("run `make artifacts` first");
+        Self {
+            art,
+            model: std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| "t".into()),
+            calib: envu("CBQ_BENCH_CALIB", 32),
+            eval_batches: envu("CBQ_BENCH_EVAL", 8),
+            items: envu("CBQ_BENCH_ITEMS", 16),
+            epochs: envu("CBQ_BENCH_EPOCHS", 8),
+        }
+    }
+
+    fn pipe<'a>(&'a self, rt: &'a Runtime) -> Pipeline<'a> {
+        Pipeline::new(&self.art, rt, &self.model).unwrap()
+    }
+
+    fn job(&self, mut j: QuantJob) -> QuantJob {
+        j.calib_sequences = self.calib;
+        j.epochs = self.epochs;
+        j
+    }
+
+    /// quantize + ppl on both corpora; returns (c4, wiki, quant_s, summary)
+    fn run_ppl(
+        &self,
+        pipe: &mut Pipeline,
+        job: &QuantJob,
+    ) -> (f64, f64, f64, cbq::coordinator::QuantSummary) {
+        let (m, s) = pipe.run(job).unwrap();
+        let c4 = pipe.perplexity(&m, Style::C4, self.eval_batches).unwrap();
+        let wiki = pipe.perplexity(&m, Style::Wiki, self.eval_batches).unwrap();
+        (c4, wiki, s.quant_seconds, s)
+    }
+}
+
+fn star(bits: &BitSpec, n_layers: usize) -> BitSpec {
+    let _ = bits;
+    BitSpec::w2a16_star(n_layers)
+}
+
+// ---------------------------------------------------------------------------
+
+/// Table 1: zero-shot accuracy across methods x bit settings.
+fn table1(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let n_layers = pipe.cfg.n_layers;
+    let settings: Vec<(&str, BitSpec)> = vec![
+        ("W4A16", BitSpec::w4a16()),
+        ("W2A16", BitSpec::w2a16()),
+        ("W4A8", BitSpec::w4a8()),
+        ("W4A4", BitSpec::w4a4()),
+    ];
+    let mut t = Table::new(
+        format!("Table 1 — zero-shot accuracy (%), model `{}`", b.model),
+        &["#Bits", "Method", "TopicMatch", "CountRun", "Perturbed", "Shifted",
+          "Mutual MRR/R@1/R@2"],
+    );
+    let fp = pipe.fp_model();
+    let r = pipe.zero_shot(&fp, b.items).unwrap();
+    t.row(&["FP".into(), "-".into(),
+        fmt_f(r.accuracy["TopicMatch"] * 100.0, 1),
+        fmt_f(r.accuracy["CountRun"] * 100.0, 1),
+        fmt_f(r.accuracy["Perturbed"] * 100.0, 1),
+        fmt_f(r.accuracy["Shifted"] * 100.0, 1),
+        format!("{}/{}/{}", fmt_f(r.mrr * 100.0, 1), fmt_f(r.recall1 * 100.0, 1),
+                fmt_f(r.recall2 * 100.0, 1))]);
+    for (label, bits) in &settings {
+        let mut jobs: Vec<(String, QuantJob)> = vec![
+            ("GPTQ".into(), b.job(QuantJob::gptq(bits.clone()))),
+            ("OmniQ-like".into(), b.job(QuantJob::omniquant_like(bits.clone()))),
+            ("CBQ".into(), b.job(QuantJob::cbq(bits.clone()))),
+        ];
+        if *label == "W2A16" {
+            jobs.push(("CBQ*".into(), b.job(QuantJob::cbq(star(bits, n_layers)))));
+        }
+        for (name, job) in jobs {
+            let (m, _) = pipe.run(&job).unwrap();
+            let r = pipe.zero_shot(&m, b.items).unwrap();
+            t.row(&[label.to_string(), name,
+                fmt_f(r.accuracy["TopicMatch"] * 100.0, 1),
+                fmt_f(r.accuracy["CountRun"] * 100.0, 1),
+                fmt_f(r.accuracy["Perturbed"] * 100.0, 1),
+                fmt_f(r.accuracy["Shifted"] * 100.0, 1),
+                format!("{}/{}/{}", fmt_f(r.mrr * 100.0, 1),
+                        fmt_f(r.recall1 * 100.0, 1), fmt_f(r.recall2 * 100.0, 1))]);
+        }
+    }
+    t.print();
+}
+
+/// Table 2 (+ Table 13 columns): perplexity across methods x bit settings.
+fn table2(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let n_layers = pipe.cfg.n_layers;
+    let mut t = Table::new(
+        format!("Table 2 — perplexity, model `{}`", b.model),
+        &["#Bits", "Method", "synth-c4", "synth-wiki"],
+    );
+    let fp = pipe.fp_model();
+    t.row(&["FP".into(), "-".into(),
+        fmt_f(pipe.perplexity(&fp, Style::C4, b.eval_batches).unwrap(), 2),
+        fmt_f(pipe.perplexity(&fp, Style::Wiki, b.eval_batches).unwrap(), 2)]);
+    let rows: Vec<(&str, &str, QuantJob)> = vec![
+        ("W4A16", "RTN", b.job(QuantJob::rtn(BitSpec::w4a16()))),
+        ("W4A16", "GPTQ", b.job(QuantJob::gptq(BitSpec::w4a16()))),
+        ("W4A16", "OmniQ-like", b.job(QuantJob::omniquant_like(BitSpec::w4a16()))),
+        ("W4A16", "CBQ", b.job(QuantJob::cbq(BitSpec::w4a16()))),
+        ("W2A16", "RTN", b.job(QuantJob::rtn(BitSpec::w2a16()))),
+        ("W2A16", "GPTQ", b.job(QuantJob::gptq(BitSpec::w2a16()))),
+        ("W2A16", "OmniQ-like", b.job(QuantJob::omniquant_like(BitSpec::w2a16()))),
+        ("W2A16", "CBQ", b.job(QuantJob::cbq(BitSpec::w2a16()))),
+        ("W2A16", "CBQ*", b.job(QuantJob::cbq(BitSpec::w2a16_star(n_layers)))),
+        ("W4A8", "OmniQ-like", b.job(QuantJob::omniquant_like(BitSpec::w4a8()))),
+        ("W4A8", "CBQ", b.job(QuantJob::cbq(BitSpec::w4a8()))),
+        ("W4A4", "OmniQ-like", b.job(QuantJob::omniquant_like(BitSpec::w4a4()))),
+        ("W4A4", "CBQ", b.job(QuantJob::cbq(BitSpec::w4a4()))),
+    ];
+    for (bits, name, job) in rows {
+        let (c4, wiki, _, _) = b.run_ppl(&mut pipe, &job);
+        t.row(&[bits.into(), name.into(), fmt_f(c4, 2), fmt_f(wiki, 2)]);
+    }
+    t.print();
+}
+
+/// Table 3a / Table 10: CFP vs baseline pre-processors, +- CBQ-Recon, W4A4.
+fn table3a(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let methods = [
+        PreprocMethod::None,
+        PreprocMethod::Omse,
+        PreprocMethod::Percentile,
+        PreprocMethod::OutlierSuppression,
+        PreprocMethod::SmoothQuant,
+        PreprocMethod::CfpActivation,
+        PreprocMethod::CfpFull,
+    ];
+    let mut t = Table::new(
+        format!("Table 3a — outlier pre-processing ablation (W4A4, `{}`)", b.model),
+        &["Pre-processing", "Recon", "ppl c4", "ppl wiki"],
+    );
+    for recon in [false, true] {
+        for pm in methods {
+            let mut job = if recon {
+                b.job(QuantJob::cbq(BitSpec::w4a4()))
+            } else {
+                b.job(QuantJob::rtn(BitSpec::w4a4()))
+            };
+            job.preproc = pm;
+            let (c4, wiki, _, _) = b.run_ppl(&mut pipe, &job);
+            t.row(&[pm.name().into(),
+                if recon { "+CBQ-Recon" } else { "-" }.into(),
+                fmt_f(c4, 2), fmt_f(wiki, 2)]);
+        }
+    }
+    t.print();
+}
+
+/// Table 3b: rounding ablation — none vs dense AdaRound vs LoRA-Rounding.
+fn table3b(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let e = b.epochs;
+    let rows: Vec<(&str, RoundingMode, usize)> = vec![
+        ("w/o Rounding", RoundingMode::Nearest, e),
+        ("w/ Dense AdaRound", RoundingMode::DenseAdaRound, e),
+        ("w/ LoRA-Rounding", RoundingMode::Lora, e),
+        ("w/ LoRA-Rounding (2x ep)", RoundingMode::Lora, 2 * e),
+    ];
+    let mut t = Table::new(
+        format!("Table 3b — LoRA-Rounding ablation (W4A4, `{}`)", b.model),
+        &["Method", "ppl c4", "ppl wiki", "epochs", "state KiB", "quant s"],
+    );
+    for (name, mode, epochs) in rows {
+        let mut job = b.job(QuantJob::cbq(BitSpec::w4a4()));
+        job.rounding = mode;
+        job.epochs = epochs;
+        let (c4, wiki, secs, s) = b.run_ppl(&mut pipe, &job);
+        t.row(&[name.into(), fmt_f(c4, 2), fmt_f(wiki, 2), epochs.to_string(),
+                (s.state_bytes / 1024).to_string(), fmt_f(secs, 1)]);
+    }
+    t.print();
+}
+
+/// Tables 3c / 7 / 8 / 9: CBD window x overlap grid with cost columns.
+fn table3c(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let windows = b.art.manifest.windows[&b.model].clone();
+    for bits in [BitSpec::w4a4(), BitSpec::w2a16()] {
+        let mut t = Table::new(
+            format!("Table 3c/7/9 — CBD ablation ({}, `{}`)", bits.label(), b.model),
+            &["#blocks", "overlap", "ppl c4", "ppl wiki", "time s", "state KiB", "act-cache KiB"],
+        );
+        for &w in &windows {
+            if w > pipe.cfg.n_layers {
+                continue;
+            }
+            let overlaps: Vec<usize> = match w {
+                1 => vec![0],
+                2 => vec![0, 1],
+                4 => vec![0, 1, 2, 3],
+                _ => vec![0, w / 2, w - 1],
+            };
+            for ov in overlaps {
+                let mut job = b.job(QuantJob::cbq(bits.clone()));
+                job.window = w;
+                job.overlap = ov;
+                let (c4, wiki, secs, s) = b.run_ppl(&mut pipe, &job);
+                t.row(&[w.to_string(), ov.to_string(), fmt_f(c4, 2), fmt_f(wiki, 2),
+                        fmt_f(secs, 1), (s.state_bytes / 1024).to_string(),
+                        (s.act_cache_bytes / 1024).to_string()]);
+            }
+        }
+        t.print();
+    }
+}
+
+/// Table 5: reconstruction-loss ablation (L2 / KLD / both).
+fn table5(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let rows: Vec<(&str, f32, f32)> =
+        vec![("L2 only", 1.0, 0.0), ("KLD only", 0.0, 1.0), ("L2 + KLD", 1.0, 1.0)];
+    let mut t = Table::new(
+        format!("Table 5 — loss ablation (W4A4, `{}`)", b.model),
+        &["Loss", "ppl c4", "ppl wiki"],
+    );
+    for (name, l2, kld) in rows {
+        let mut job = b.job(QuantJob::cbq(BitSpec::w4a4()));
+        job.l2_weight = l2;
+        job.kld_weight = kld;
+        let (c4, wiki, _, _) = b.run_ppl(&mut pipe, &job);
+        t.row(&[name.into(), fmt_f(c4, 2), fmt_f(wiki, 2)]);
+    }
+    t.print();
+}
+
+/// Table 11: quantization wall-clock, CBQ vs OmniQuant-like, across sizes.
+fn table11(b: &Bench) {
+    let mut t = Table::new(
+        "Table 11 — quantization time (s), weight-only W4A16",
+        &["model", "quant params", "OmniQ-like", "CBQ"],
+    );
+    for name in ["t", "s", "m"] {
+        if !b.art.manifest.configs.contains_key(name) {
+            continue;
+        }
+        let rt = Runtime::new(&b.art).unwrap();
+        let mut pipe = Pipeline::new(&b.art, &rt, name).unwrap();
+        let mut cells = vec![name.to_string(), pipe.cfg.quant_params().to_string()];
+        for job in [
+            b.job(QuantJob::omniquant_like(BitSpec::w4a16())),
+            b.job(QuantJob::cbq(BitSpec::w4a16())),
+        ] {
+            let t0 = Instant::now();
+            let _ = pipe.run(&job).unwrap();
+            cells.push(fmt_f(t0.elapsed().as_secs_f64(), 1));
+        }
+        t.row(&cells);
+    }
+    t.print();
+}
+
+/// Table 12: LoRA-Rounding rank sweep.
+fn table12(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let mut t = Table::new(
+        format!("Table 12 — LoRA rank sweep (W4A4, `{}`)", b.model),
+        &["rank", "ppl c4", "ppl wiki"],
+    );
+    for rank in [3usize, 4, 5, 6, 7] {
+        let mut job = b.job(QuantJob::cbq(BitSpec::w4a4()));
+        job.rank = rank;
+        let (c4, wiki, _, _) = b.run_ppl(&mut pipe, &job);
+        t.row(&[rank.to_string(), fmt_f(c4, 2), fmt_f(wiki, 2)]);
+    }
+    t.print();
+}
+
+/// Table 13: model-size series (the OPT-family analog).
+fn table13(b: &Bench) {
+    let mut t = Table::new(
+        "Table 13 — model-size series, perplexity",
+        &["model", "#Bits", "Method", "synth-c4", "synth-wiki"],
+    );
+    for name in ["t", "s", "m"] {
+        if !b.art.manifest.configs.contains_key(name) {
+            continue;
+        }
+        let rt = Runtime::new(&b.art).unwrap();
+        let mut pipe = Pipeline::new(&b.art, &rt, name).unwrap();
+        let fp = pipe.fp_model();
+        t.row(&[name.into(), "FP".into(), "-".into(),
+            fmt_f(pipe.perplexity(&fp, Style::C4, b.eval_batches).unwrap(), 2),
+            fmt_f(pipe.perplexity(&fp, Style::Wiki, b.eval_batches).unwrap(), 2)]);
+        for (bits, method, job) in [
+            ("W4A16", "GPTQ", b.job(QuantJob::gptq(BitSpec::w4a16()))),
+            ("W4A16", "CBQ", b.job(QuantJob::cbq(BitSpec::w4a16()))),
+            ("W2A16", "OmniQ-like", b.job(QuantJob::omniquant_like(BitSpec::w2a16()))),
+            ("W2A16", "CBQ", b.job(QuantJob::cbq(BitSpec::w2a16()))),
+        ] {
+            let (m, _) = pipe.run(&job).unwrap();
+            t.row(&[name.into(), bits.into(), method.into(),
+                fmt_f(pipe.perplexity(&m, Style::C4, b.eval_batches).unwrap(), 2),
+                fmt_f(pipe.perplexity(&m, Style::Wiki, b.eval_batches).unwrap(), 2)]);
+        }
+    }
+    t.print();
+}
+
+/// Table 14: W6A6.
+fn table14(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let mut t = Table::new(
+        format!("Table 14 — W6A6, model `{}`", b.model),
+        &["Method", "ppl c4", "ppl wiki"],
+    );
+    let fp = pipe.fp_model();
+    t.row(&["FP".into(),
+        fmt_f(pipe.perplexity(&fp, Style::C4, b.eval_batches).unwrap(), 2),
+        fmt_f(pipe.perplexity(&fp, Style::Wiki, b.eval_batches).unwrap(), 2)]);
+    for (name, job) in [
+        ("OmniQ-like", b.job(QuantJob::omniquant_like(BitSpec::w6a6()))),
+        ("CBQ", b.job(QuantJob::cbq(BitSpec::w6a6()))),
+    ] {
+        let (c4, wiki, _, _) = b.run_ppl(&mut pipe, &job);
+        t.row(&[name.into(), fmt_f(c4, 2), fmt_f(wiki, 2)]);
+    }
+    t.print();
+}
+
+/// Table 15: CFP-only vs CBD-only contribution split at W4A16.
+fn table15(b: &Bench) {
+    let rt = Runtime::new(&b.art).unwrap();
+    let mut pipe = b.pipe(&rt);
+    let mut t = Table::new(
+        format!("Table 15 — CFP vs CBD at W4A16, model `{}`", b.model),
+        &["Config", "ppl c4", "ppl wiki"],
+    );
+    // CFP only: preproc + RTN
+    let mut cfp_only = b.job(QuantJob::rtn(BitSpec::w4a16()));
+    cfp_only.preproc = PreprocMethod::CfpFull;
+    // CBD only: reconstruction without preprocessing
+    let mut cbd_only = b.job(QuantJob::cbq(BitSpec::w4a16()));
+    cbd_only.preproc = PreprocMethod::None;
+    for (name, job) in [("CFP", cfp_only), ("CBD", cbd_only)] {
+        let (c4, wiki, _, _) = b.run_ppl(&mut pipe, &job);
+        t.row(&[name.into(), fmt_f(c4, 2), fmt_f(wiki, 2)]);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let b = Bench::new();
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let all: Vec<(&str, fn(&Bench))> = vec![
+        ("table1", table1),
+        ("table2", table2),
+        ("table3a", table3a),
+        ("table3b", table3b),
+        ("table3c", table3c),
+        ("table5", table5),
+        ("table11", table11),
+        ("table12", table12),
+        ("table13", table13),
+        ("table14", table14),
+        ("table15", table15),
+    ];
+    let selected: Vec<&(&str, fn(&Bench))> = if args.is_empty() {
+        all.iter().collect()
+    } else {
+        all.iter().filter(|(n, _)| args.iter().any(|a| a == n)).collect()
+    };
+    println!(
+        "benching {} tables on model `{}` (calib={}, eval={}, items={})",
+        selected.len(),
+        b.model,
+        b.calib,
+        b.eval_batches,
+        b.items
+    );
+    for (name, f) in selected {
+        let t0 = Instant::now();
+        println!("\n################ {name} ################");
+        f(&b);
+        println!("[{name} took {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,160 @@
+//! Synthetic corpus generator — bit-exact mirror of python/compile/data.py.
+//!
+//! The pretrained models (built in Python) and the calibration/eval sets
+//! (generated here at run time) must come from the *same* distribution, so
+//! both sides implement the identical xorshift64*-driven generator; parity
+//! is asserted against artifacts/corpus_ref.json in the integration tests.
+
+pub const SEGMENT_LEN: usize = 32;
+pub const CONTENT_V: u64 = 240;
+pub const TOPIC_BASE: u32 = 240;
+pub const N_TOPICS: u64 = 8;
+pub const HEADER_TOK: u32 = 250;
+pub const SEP_TOK: u32 = 251;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Style {
+    C4,
+    Wiki,
+}
+
+impl Style {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Style::C4 => "c4",
+            Style::Wiki => "wiki",
+        }
+    }
+}
+
+/// xorshift64* — mirrored in data.py.
+#[derive(Clone, Debug)]
+pub struct XorShift64Star {
+    state: u64,
+}
+
+impl XorShift64Star {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+pub fn topic_params(topic: u64) -> (u64, u64) {
+    let mut a = (7 * topic + 11) % CONTENT_V;
+    while a % 2 == 0 || a % 3 == 0 || a % 5 == 0 {
+        a = (a + 1) % CONTENT_V;
+    }
+    let b = (13 * topic + 3) % CONTENT_V;
+    (a, b)
+}
+
+fn zipfish(rng: &mut XorShift64Star) -> u64 {
+    let r = rng.next_u64();
+    let t1 = r & 0xFF;
+    let t2 = (r >> 8) & 0xFF;
+    t1.min(t2) % CONTENT_V
+}
+
+/// Generate `n_tokens` tokens; deterministic in (style, seed).
+pub fn generate(style: Style, seed: u64, n_tokens: usize) -> Vec<u32> {
+    let seed = match style {
+        Style::C4 => seed,
+        Style::Wiki => seed ^ 0x9E37_79B9_7F4A_7C15,
+    };
+    let mut rng = XorShift64Star::new(seed);
+    let mut out = Vec::with_capacity(n_tokens);
+    let mut cur: u64 = 0;
+    let mut topic: u64 = 0;
+    let mut pos_in_seg = SEGMENT_LEN; // force a topic draw at position 0
+    while out.len() < n_tokens {
+        if pos_in_seg >= SEGMENT_LEN {
+            pos_in_seg = 0;
+            topic = rng.next_below(N_TOPICS);
+            out.push(TOPIC_BASE + topic as u32);
+            cur = rng.next_below(CONTENT_V);
+            pos_in_seg += 1;
+            continue;
+        }
+        if style == Style::Wiki && pos_in_seg % 8 == 0 {
+            out.push(if (pos_in_seg / 8) % 2 == 0 { HEADER_TOK } else { SEP_TOK });
+            pos_in_seg += 1;
+            continue;
+        }
+        let (a, b) = topic_params(topic);
+        let r = rng.next_below(100);
+        let (det_p, cnt_p) = match style {
+            Style::C4 => (55, 25),
+            Style::Wiki => (70, 20),
+        };
+        cur = if r < det_p {
+            (a * cur + b) % CONTENT_V
+        } else if r < det_p + cnt_p {
+            (cur + 1) % CONTENT_V
+        } else {
+            zipfish(&mut rng)
+        };
+        out.push(cur as u32);
+        pos_in_seg += 1;
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(Style::C4, 7, 256), generate(Style::C4, 7, 256));
+    }
+
+    #[test]
+    fn styles_and_seeds_differ() {
+        assert_ne!(generate(Style::C4, 7, 256), generate(Style::Wiki, 7, 256));
+        assert_ne!(generate(Style::C4, 7, 256), generate(Style::C4, 8, 256));
+    }
+
+    #[test]
+    fn segment_structure() {
+        let t = generate(Style::Wiki, 11, 1024);
+        for seg in t.chunks(SEGMENT_LEN) {
+            assert!(seg[0] >= TOPIC_BASE && seg[0] < TOPIC_BASE + N_TOPICS as u32);
+        }
+        assert!(t.iter().all(|&x| x < 256));
+    }
+
+    #[test]
+    fn wiki_has_template_tokens() {
+        let t = generate(Style::Wiki, 3, 4096);
+        assert!(t.iter().any(|&x| x == HEADER_TOK));
+        assert!(t.iter().any(|&x| x == SEP_TOK));
+        // c4 style never emits them
+        let c = generate(Style::C4, 3, 4096);
+        assert!(c.iter().all(|&x| x != HEADER_TOK && x != SEP_TOK));
+    }
+
+    #[test]
+    fn xorshift_known_sequence_stability() {
+        // Guard against accidental edits: fixed seed, fixed prefix.
+        let mut r = XorShift64Star::new(42);
+        let v: Vec<u64> = (0..4).map(|_| r.next_below(1000)).collect();
+        assert_eq!(v, {
+            let mut r2 = XorShift64Star::new(42);
+            (0..4).map(|_| r2.next_below(1000)).collect::<Vec<_>>()
+        });
+    }
+}

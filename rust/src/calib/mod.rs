@@ -1,0 +1,265 @@
+//! Calibration & evaluation data pipeline.
+//!
+//! Mirrors the paper's protocol (Sec. 5.1): calibration uses 128 randomly
+//! selected segments of the C4-style corpus; evaluation uses held-out
+//! streams of both corpora (perplexity) plus synthetic two-choice
+//! continuation tasks (the zero-shot accuracy analog — lm-eval scores
+//! PIQA/HellaSwag/ARC exactly this way, by comparing continuation NLLs).
+
+pub mod corpus;
+
+use corpus::{Style, XorShift64Star, CONTENT_V, N_TOPICS, SEGMENT_LEN, TOPIC_BASE};
+
+use crate::tensor::TensorI32;
+
+/// Seeds: calibration draws from a different stream than pretraining
+/// (python uses seed 42 for training) and eval uses yet another.
+pub const CALIB_SEED: u64 = 1001;
+pub const EVAL_SEED: u64 = 2002;
+pub const TASK_SEED: u64 = 3003;
+
+/// A [B, S+1] token batch: inputs are `[.., :S]`, next-token targets `[.., 1:]`.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq: usize,
+    tokens: Vec<u32>,
+}
+
+impl Batch {
+    pub fn inputs(&self) -> TensorI32 {
+        self.select(0)
+    }
+
+    pub fn targets(&self) -> TensorI32 {
+        self.select(1)
+    }
+
+    fn select(&self, off: usize) -> TensorI32 {
+        let mut data = Vec::with_capacity(self.batch * self.seq);
+        for b in 0..self.batch {
+            let row = &self.tokens[b * (self.seq + 1)..(b + 1) * (self.seq + 1)];
+            data.extend(row[off..off + self.seq].iter().map(|&t| t as i32));
+        }
+        TensorI32::new(vec![self.batch, self.seq], data)
+    }
+
+    pub fn row(&self, b: usize) -> &[u32] {
+        &self.tokens[b * (self.seq + 1)..(b + 1) * (self.seq + 1)]
+    }
+}
+
+/// Contiguous batches of (seq+1)-token rows from one corpus stream.
+pub fn batches(style: Style, seed: u64, n_batches: usize, batch: usize, seq: usize) -> Vec<Batch> {
+    let toks = corpus::generate(style, seed, n_batches * batch * (seq + 1));
+    toks.chunks(batch * (seq + 1))
+        .take(n_batches)
+        .map(|c| Batch { batch, seq, tokens: c.to_vec() })
+        .collect()
+}
+
+/// Calibration set: `n_sequences` rows of the C4-style corpus, grouped into
+/// executable-sized batches.
+pub fn calibration(n_sequences: usize, batch: usize, seq: usize) -> Vec<Batch> {
+    let n_batches = n_sequences.div_ceil(batch);
+    batches(Style::C4, CALIB_SEED, n_batches, batch, seq)
+}
+
+/// Held-out evaluation stream for perplexity.
+pub fn eval_stream(style: Style, n_batches: usize, batch: usize, seq: usize) -> Vec<Batch> {
+    batches(style, EVAL_SEED, n_batches, batch, seq)
+}
+
+// ---------------------------------------------------------------------------
+// zero-shot choice tasks (Table 1 analog)
+// ---------------------------------------------------------------------------
+
+/// One two-choice item: a shared prompt and two candidate continuations,
+/// of which `correct` follows the true topic process and the other is a
+/// corrupted continuation.
+#[derive(Clone, Debug)]
+pub struct ChoiceItem {
+    pub prompt: Vec<u32>,
+    pub cands: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+/// Task flavours — each stresses a different aspect of the distribution,
+/// standing in for the paper's PIQA/HellaSwag/ARC-C/ARC-E spread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// continuation follows the same topic's affine process vs a different
+    /// topic's (PIQA-like: easy, local evidence)
+    TopicMatch,
+    /// continuation continues the counting run vs breaks it
+    /// (HellaSwag-like: longer-range consistency)
+    CountRun,
+    /// corrupted candidate is the true one with a few tokens resampled
+    /// (ARC-C-like: harder, fine-grained)
+    Perturbed,
+    /// candidate shifted by a constant offset (ARC-E-like)
+    Shifted,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 4] =
+        [TaskKind::TopicMatch, TaskKind::CountRun, TaskKind::Perturbed, TaskKind::Shifted];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::TopicMatch => "TopicMatch",
+            TaskKind::CountRun => "CountRun",
+            TaskKind::Perturbed => "Perturbed",
+            TaskKind::Shifted => "Shifted",
+        }
+    }
+}
+
+fn gen_segment(rng: &mut XorShift64Star, topic: u64, len: usize) -> Vec<u32> {
+    // topic-marker + affine/count/zipf mixture, c4 parameters
+    let mut out = Vec::with_capacity(len);
+    out.push(TOPIC_BASE + topic as u32);
+    let mut cur = rng.next_below(CONTENT_V);
+    let (a, b) = corpus::topic_params(topic);
+    while out.len() < len {
+        let r = rng.next_below(100);
+        cur = if r < 55 {
+            (a * cur + b) % CONTENT_V
+        } else if r < 80 {
+            (cur + 1) % CONTENT_V
+        } else {
+            rng.next_below(CONTENT_V)
+        };
+        out.push(cur as u32);
+    }
+    out
+}
+
+/// Build `n` two-choice items for a task kind. Prompt+continuation lengths
+/// always total `seq` tokens so one lm_eval call scores one candidate row.
+pub fn choice_task(kind: TaskKind, n: usize, seq: usize) -> Vec<ChoiceItem> {
+    let mut rng = XorShift64Star::new(TASK_SEED ^ (kind as u64).wrapping_mul(0x9E37));
+    let cont_len = SEGMENT_LEN / 2;
+    let prompt_len = seq - cont_len;
+    (0..n)
+        .map(|_| {
+            let topic = rng.next_below(N_TOPICS);
+            let full = gen_segment(&mut rng, topic, seq);
+            let prompt = full[..prompt_len].to_vec();
+            let true_cont = full[prompt_len..].to_vec();
+            let wrong = match kind {
+                TaskKind::TopicMatch => {
+                    let other = (topic + 1 + rng.next_below(N_TOPICS - 1)) % N_TOPICS;
+                    let alt = gen_segment(&mut rng, other, seq);
+                    alt[prompt_len..].to_vec()
+                }
+                TaskKind::CountRun => {
+                    // break local structure by reversing the continuation
+                    let mut w = true_cont.clone();
+                    w.reverse();
+                    w
+                }
+                TaskKind::Perturbed => {
+                    let mut w = true_cont.clone();
+                    for _ in 0..3 {
+                        let i = rng.next_below(w.len() as u64) as usize;
+                        w[i] = rng.next_below(CONTENT_V) as u32;
+                    }
+                    w
+                }
+                TaskKind::Shifted => true_cont
+                    .iter()
+                    .map(|&t| ((t as u64 + 17) % CONTENT_V) as u32)
+                    .collect(),
+            };
+            let correct = (rng.next_below(2)) as usize;
+            let cands = if correct == 0 {
+                vec![true_cont, wrong]
+            } else {
+                vec![wrong, true_cont]
+            };
+            ChoiceItem { prompt, cands, correct }
+        })
+        .collect()
+}
+
+/// Ranking task (Mutual analog): one true continuation ranked against
+/// `n_cands-1` distractors; scored by MRR / R@1 / R@2.
+pub fn ranking_task(n: usize, n_cands: usize, seq: usize) -> Vec<ChoiceItem> {
+    let mut rng = XorShift64Star::new(TASK_SEED ^ 0xABCD);
+    let cont_len = SEGMENT_LEN / 2;
+    let prompt_len = seq - cont_len;
+    (0..n)
+        .map(|_| {
+            let topic = rng.next_below(N_TOPICS);
+            let full = gen_segment(&mut rng, topic, seq);
+            let prompt = full[..prompt_len].to_vec();
+            let true_cont = full[prompt_len..].to_vec();
+            let correct = rng.next_below(n_cands as u64) as usize;
+            let mut cands = Vec::with_capacity(n_cands);
+            for i in 0..n_cands {
+                if i == correct {
+                    cands.push(true_cont.clone());
+                } else {
+                    let other = (topic + 1 + rng.next_below(N_TOPICS - 1)) % N_TOPICS;
+                    let alt = gen_segment(&mut rng, other, seq);
+                    cands.push(alt[prompt_len..].to_vec());
+                }
+            }
+            ChoiceItem { prompt, cands, correct }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_shift() {
+        let bs = batches(Style::C4, 1, 2, 4, 16);
+        assert_eq!(bs.len(), 2);
+        let x = bs[0].inputs();
+        let y = bs[0].targets();
+        assert_eq!(x.dims, vec![4, 16]);
+        // target row is input row shifted by one
+        assert_eq!(x.data[1], y.data[0]);
+    }
+
+    #[test]
+    fn calibration_row_count() {
+        let c = calibration(10, 4, 8);
+        assert_eq!(c.len(), 3); // ceil(10/4)
+    }
+
+    #[test]
+    fn choice_items_well_formed() {
+        for kind in TaskKind::ALL {
+            let items = choice_task(kind, 16, 96);
+            assert_eq!(items.len(), 16);
+            for it in &items {
+                assert_eq!(it.cands.len(), 2);
+                assert!(it.correct < 2);
+                assert_eq!(it.prompt.len() + it.cands[0].len(), 96);
+                assert_ne!(it.cands[0], it.cands[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn ranking_items_well_formed() {
+        let items = ranking_task(8, 4, 96);
+        for it in &items {
+            assert_eq!(it.cands.len(), 4);
+            assert!(it.correct < 4);
+        }
+    }
+
+    #[test]
+    fn tasks_deterministic() {
+        let a = choice_task(TaskKind::TopicMatch, 4, 96);
+        let b = choice_task(TaskKind::TopicMatch, 4, 96);
+        assert_eq!(a[0].prompt, b[0].prompt);
+        assert_eq!(a[0].correct, b[0].correct);
+    }
+}

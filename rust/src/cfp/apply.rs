@@ -1,0 +1,296 @@
+//! Model surgery: apply outlier pre-processing to [`ModelParams`] as exact
+//! equivalent transforms, per method.
+//!
+//! Channel-scaling migration paths (all function-preserving):
+//!   * `wq/wk/wv`  input = attn RMSNorm output -> fold 1/s into `attn_norm`
+//!     weight, s into the linears' input rows;
+//!   * `wgate/wup` input = mlp RMSNorm output -> fold via `mlp_norm`;
+//!   * `wo`        input = attention value mix -> fold via `wv` columns
+//!     (v-channels pass linearly through softmax mixing);
+//!   * `wdown`     input = silu(gate) * up    -> fold via `wup` columns
+//!     (the `up` factor is linear in the channel).
+
+use std::collections::BTreeMap;
+
+use crate::config::PreprocMethod;
+use crate::model_state::{ActStats, ModelParams};
+use crate::quant::LINEARS;
+
+use super::{activation_scales, baselines, detect_default, truncate_weights, Detection};
+
+/// Report of what pre-processing did (Fig. 3 + Table 3a diagnostics).
+#[derive(Clone, Debug, Default)]
+pub struct PreprocReport {
+    pub weights_truncated: usize,
+    pub channels_scaled: usize,
+    /// per (block, linear): detection summary on weights
+    pub weight_detections: Vec<(usize, String, Detection)>,
+    /// per (block, linear): detection summary on activation channel maxima
+    pub act_detections: Vec<(usize, String, Detection)>,
+}
+
+/// Apply `method` to the model in place. `stats` must hold calibration
+/// activation statistics for every (block, linear).
+pub fn apply(
+    method: PreprocMethod,
+    params: &mut ModelParams,
+    stats: &ActStats,
+    sq_alpha: f32,
+) -> PreprocReport {
+    match method {
+        PreprocMethod::None => PreprocReport::default(),
+        PreprocMethod::Omse => baselines::apply_omse(params),
+        PreprocMethod::Percentile => baselines::apply_percentile(params, stats),
+        PreprocMethod::OutlierSuppression => baselines::apply_os(params),
+        PreprocMethod::SmoothQuant => baselines::apply_smoothquant(params, stats, sq_alpha),
+        PreprocMethod::CfpActivation => apply_cfp(params, stats, false, true),
+        PreprocMethod::CfpWeight => apply_cfp(params, stats, true, false),
+        PreprocMethod::CfpFull => apply_cfp(params, stats, true, true),
+    }
+}
+
+/// CFP proper (Sec. 3.4): weight truncation and/or activation scaling.
+pub fn apply_cfp(
+    params: &mut ModelParams,
+    stats: &ActStats,
+    weights_too: bool,
+    activations_too: bool,
+) -> PreprocReport {
+    let mut report = PreprocReport::default();
+    for bi in 0..params.blocks.len() {
+        // ----- weights: detect + truncate PER OUTPUT COLUMN ---------------
+        // Weight quantization is per-output-channel (one step size per
+        // column), so outlier handling must match that granularity: an
+        // entry is an outlier relative to *its own quantization group*.
+        // Whole-matrix detection would flag uniformly-large columns whose
+        // truncation buys no resolution (their scale is theirs alone) and
+        // only destroys signal.
+        if weights_too {
+            for lin in LINEARS {
+                let w = params.blocks[bi].linear_mut(lin);
+                let (k, n) = (w.rows(), w.cols());
+                let mut truncated = 0usize;
+                let mut col = vec![0.0f32; k];
+                for j in 0..n {
+                    for i in 0..k {
+                        col[i] = w.at2(i, j);
+                    }
+                    let det = detect_default(&col);
+                    if det.n_outliers > 0 {
+                        truncated += truncate_weights(&mut col, &det);
+                        for i in 0..k {
+                            w.set2(i, j, col[i]);
+                        }
+                    }
+                    if j == 0 {
+                        report.weight_detections.push((bi, lin.to_string(), det));
+                    }
+                }
+                report.weights_truncated += truncated;
+            }
+        }
+        // ----- activations: detect outlier channels + migrate scaling -----
+        if !activations_too {
+            continue;
+        }
+        for lin in LINEARS {
+            let maxima = stats.max_of(bi, lin).to_vec();
+            let det = detect_default(&maxima);
+            if det.n_outliers > 0 {
+                let scales = activation_scales(&maxima, &det);
+                report.channels_scaled +=
+                    scales.iter().filter(|&&s| (s - 1.0).abs() > 1e-6).count();
+                migrate_channel_scales(params, bi, lin, &scales);
+            }
+            report.act_detections.push((bi, lin.to_string(), det));
+        }
+    }
+    report
+}
+
+/// Divide activation channel `i` by `scales[i]` and compensate in weights —
+/// exact equivalent transform per the module docs. Applying for a linear
+/// whose input is shared (wq/wk/wv share attn_in; wgate/wup share mlp_in)
+/// touches all consumers, so callers pass the same scales for the group:
+/// we divide the *producer* once and multiply every consumer's rows.
+pub fn migrate_channel_scales(
+    params: &mut ModelParams,
+    block: usize,
+    linear: &str,
+    scales: &[f32],
+) {
+    // producer division
+    match linear {
+        "wq" | "wk" | "wv" => {
+            for (i, &s) in scales.iter().enumerate() {
+                params.blocks[block].attn_norm.data[i] /= s;
+            }
+            for consumer in ["wq", "wk", "wv"] {
+                scale_rows(params, block, consumer, scales);
+            }
+        }
+        "wgate" | "wup" => {
+            for (i, &s) in scales.iter().enumerate() {
+                params.blocks[block].mlp_norm.data[i] /= s;
+            }
+            for consumer in ["wgate", "wup"] {
+                scale_rows(params, block, consumer, scales);
+            }
+        }
+        "wo" => {
+            // v-channel: wv column /= s, wo row *= s
+            for (i, &s) in scales.iter().enumerate() {
+                if (s - 1.0).abs() > 1e-9 {
+                    params.blocks[block].linear_mut("wv").scale_col(i, 1.0 / s);
+                }
+            }
+            scale_rows(params, block, "wo", scales);
+        }
+        "wdown" => {
+            for (i, &s) in scales.iter().enumerate() {
+                if (s - 1.0).abs() > 1e-9 {
+                    params.blocks[block].linear_mut("wup").scale_col(i, 1.0 / s);
+                }
+            }
+            scale_rows(params, block, "wdown", scales);
+        }
+        other => panic!("unknown linear {other}"),
+    }
+}
+
+fn scale_rows(params: &mut ModelParams, block: usize, linear: &str, scales: &[f32]) {
+    let w = params.blocks[block].linear_mut(linear);
+    for (i, &s) in scales.iter().enumerate() {
+        if (s - 1.0).abs() > 1e-9 {
+            w.scale_row(i, s);
+        }
+    }
+}
+
+/// Post-preprocessing activation statistics prediction: channel maxima
+/// divided by the applied scales — used to re-derive stats without a second
+/// capture pass for grouped consumers.
+pub fn scaled_stats(stats: &ActStats, scale_map: &BTreeMap<(usize, String), Vec<f32>>) -> ActStats {
+    let mut out = stats.clone();
+    for ((bi, lin), scales) in scale_map {
+        if let Some(v) = out.channel_max[*bi].get_mut(lin) {
+            for (m, s) in v.iter_mut().zip(scales) {
+                *m /= s;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_state::BlockParams;
+    use crate::tensor::Tensor;
+
+    fn tiny_params() -> ModelParams {
+        let d = 4usize;
+        let f = 8usize;
+        let lin = |k: usize, n: usize, seed: usize| {
+            Tensor::new(
+                vec![k, n],
+                (0..k * n).map(|i| ((i * 37 + seed) % 11) as f32 / 11.0 - 0.5).collect(),
+            )
+        };
+        let mut linears = BTreeMap::new();
+        for (i, l) in LINEARS.iter().enumerate() {
+            let (fi, fo) = match *l {
+                "wgate" | "wup" => (d, f),
+                "wdown" => (f, d),
+                _ => (d, d),
+            };
+            linears.insert(l.to_string(), lin(fi, fo, i));
+        }
+        ModelParams {
+            embed: Tensor::zeros(&[16, d]),
+            final_norm: Tensor::full(&[d], 1.0),
+            head: Tensor::zeros(&[d, 16]),
+            blocks: vec![BlockParams {
+                attn_norm: Tensor::full(&[d], 1.0),
+                mlp_norm: Tensor::full(&[d], 1.0),
+                linears,
+            }],
+        }
+    }
+
+    /// Functional check: y = norm_diag(x) @ W must be invariant under the
+    /// migration for the norm-fed linears.
+    #[test]
+    fn migration_preserves_norm_linear_product() {
+        let mut p = tiny_params();
+        let before_norm = p.blocks[0].attn_norm.clone();
+        let before_w = p.blocks[0].linears["wq"].clone();
+        let scales = vec![2.0, 1.0, 4.0, 1.0];
+        migrate_channel_scales(&mut p, 0, "wq", &scales);
+        // effective op on a post-norm vector a: (a/s) fed to (s*W) rows
+        // == a fed to W when the norm weight absorbs 1/s.
+        let a = [0.3f32, -0.7, 1.1, 0.25];
+        let d = 4;
+        let mut y_before = vec![0.0f32; d];
+        let mut y_after = vec![0.0f32; d];
+        for j in 0..d {
+            for i in 0..d {
+                y_before[j] += a[i] * before_norm.data[i] * before_w.at2(i, j);
+                y_after[j] += a[i] * p.blocks[0].attn_norm.data[i]
+                    * p.blocks[0].linears["wq"].at2(i, j);
+            }
+        }
+        for (x, y) in y_before.iter().zip(&y_after) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn wo_migration_balances_wv() {
+        let mut p = tiny_params();
+        let wv0 = p.blocks[0].linears["wv"].clone();
+        let wo0 = p.blocks[0].linears["wo"].clone();
+        let scales = vec![3.0, 1.0, 1.0, 1.0];
+        migrate_channel_scales(&mut p, 0, "wo", &scales);
+        // column 0 of wv divided, row 0 of wo multiplied
+        assert!((p.blocks[0].linears["wv"].at2(1, 0) - wv0.at2(1, 0) / 3.0).abs() < 1e-6);
+        assert!((p.blocks[0].linears["wo"].at2(0, 2) - wo0.at2(0, 2) * 3.0).abs() < 1e-6);
+        // untouched elsewhere
+        assert_eq!(p.blocks[0].linears["wv"].at2(1, 1), wv0.at2(1, 1));
+    }
+
+    #[test]
+    fn cfp_full_truncates_planted_weight_outlier() {
+        let mut p = tiny_params();
+        p.blocks[0].linear_mut("wup").data[3] = 500.0;
+        let mut stats = ActStats::new(1);
+        for l in LINEARS {
+            let k = p.blocks[0].linears[l].rows();
+            stats.accumulate(0, l, &Tensor::full(&[2, k], 0.5));
+        }
+        let rep = apply_cfp(&mut p, &stats, true, true);
+        assert!(rep.weights_truncated >= 1);
+        assert!(p.blocks[0].linears["wup"].data[3] < 500.0);
+    }
+
+    #[test]
+    fn cfp_activation_scales_planted_channel() {
+        let mut p = tiny_params();
+        let mut stats = ActStats::new(1);
+        for l in LINEARS {
+            let k = p.blocks[0].linears[l].rows();
+            let mut x = Tensor::full(&[8, k], 0.4);
+            if l == "wq" {
+                // plant a hot input channel
+                for r in 0..8 {
+                    x.set2(r, 2, 64.0);
+                }
+            }
+            stats.accumulate(0, l, &x);
+        }
+        let norm_before = p.blocks[0].attn_norm.data[2];
+        let rep = apply_cfp(&mut p, &stats, false, true);
+        assert!(rep.channels_scaled >= 1);
+        assert!(p.blocks[0].attn_norm.data[2] < norm_before);
+    }
+}

@@ -1,0 +1,285 @@
+//! Baseline outlier pre-processors — the comparators of paper Table 3a:
+//! OMSE (Choukroun et al. 2019), Percentile (Zhou et al. 2017),
+//! Outlier Suppression (Wei et al. 2022b) and SmoothQuant (Xiao et al.
+//! 2022). All are implemented as equivalent transforms / clipping on
+//! [`ModelParams`], mirroring how the paper's ablation applies them before
+//! the (optional) reconstruction stage.
+
+use crate::config::qmax;
+use crate::model_state::{ActStats, ModelParams};
+use crate::quant::{init_scales, quant_mse, LINEARS};
+use crate::tensor::Tensor;
+
+use super::apply::{migrate_channel_scales, PreprocReport};
+
+/// OMSE: per-linear search over clip ratios minimizing weight quantization
+/// MSE at 4 bits, then clip weights to the chosen range. (Weight-only; OMSE
+/// has no activation handling — exactly why it underperforms in Table 3a.)
+pub fn apply_omse(params: &mut ModelParams) -> PreprocReport {
+    let mut report = PreprocReport::default();
+    // search at a low-bit target (3-bit) where range/resolution trade-offs
+    // actually bite; the chosen clip then helps every bit-width above it.
+    let qm = qmax(3);
+    for b in &mut params.blocks {
+        for lin in LINEARS {
+            let w = b.linear(lin).clone();
+            let full = init_scales(&w, qm);
+            let mut best = (f32::INFINITY, 1.0f32);
+            for step in 0..=16 {
+                let ratio = 0.2 + 0.05 * step as f32;
+                let s = full.map(|v| v * ratio);
+                let e = quant_mse(&w, &s, qm);
+                if e < best.0 {
+                    best = (e, ratio);
+                }
+            }
+            if best.1 < 0.999 {
+                // clip weights into the chosen range
+                let wt = b.linear_mut(lin);
+                let caps: Vec<f32> = full.data.iter().map(|s| s * best.1 * qm).collect();
+                let n = wt.cols();
+                let mut clipped = 0;
+                for i in 0..wt.rows() {
+                    for j in 0..n {
+                        let v = wt.at2(i, j);
+                        if v.abs() > caps[j] {
+                            wt.set2(i, j, v.signum() * caps[j]);
+                            clipped += 1;
+                        }
+                    }
+                }
+                report.weights_truncated += clipped;
+            }
+        }
+    }
+    report
+}
+
+/// Percentile: clip weights at the 99.9th magnitude percentile and scale
+/// activation channels above the 99.9th percentile of channel maxima.
+pub fn apply_percentile(params: &mut ModelParams, stats: &ActStats) -> PreprocReport {
+    let mut report = PreprocReport::default();
+    const PCT: f32 = 0.999;
+    for bi in 0..params.blocks.len() {
+        for lin in LINEARS {
+            // weights
+            let w = params.blocks[bi].linear_mut(lin);
+            let mut mags: Vec<f32> = w.data.iter().map(|v| v.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let cap = mags[((mags.len() - 1) as f32 * PCT) as usize];
+            for v in w.data.iter_mut() {
+                if v.abs() > cap {
+                    *v = v.signum() * cap;
+                    report.weights_truncated += 1;
+                }
+            }
+            // activations: everything above the percentile of channel maxima
+            // is scaled fully down to the cap (no sqrt migration — the
+            // cruder handling is the point of the baseline)
+            let maxima = stats.max_of(bi, lin);
+            let mut sorted = maxima.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let acap = sorted[((sorted.len() - 1) as f32 * PCT) as usize].max(1e-6);
+            let scales: Vec<f32> =
+                maxima.iter().map(|&m| if m > acap { m / acap } else { 1.0 }).collect();
+            if scales.iter().any(|&s| s > 1.0) {
+                report.channels_scaled += scales.iter().filter(|&&s| s > 1.0).count();
+                migrate_channel_scales(params, bi, lin, &scales);
+            }
+        }
+    }
+    report
+}
+
+/// Outlier Suppression: migrate the *entire* norm weight gamma into the
+/// consuming linears (gamma -> 1), removing the norm-amplified activation
+/// outliers Wei et al. attribute to LayerNorm's gamma.
+pub fn apply_os(params: &mut ModelParams) -> PreprocReport {
+    let mut report = PreprocReport::default();
+    for bi in 0..params.blocks.len() {
+        let groups: [(&str, &[&str]); 2] =
+            [("attn", &["wq", "wk", "wv"]), ("mlp", &["wgate", "wup"])];
+        for (norm_key, consumers) in groups {
+            let gamma = if norm_key == "attn" {
+                params.blocks[bi].attn_norm.clone()
+            } else {
+                params.blocks[bi].mlp_norm.clone()
+            };
+            // scales = |gamma| (sign folded into weights too); gamma -> 1
+            for consumer in consumers {
+                let w = params.blocks[bi].linear_mut(consumer);
+                for (i, &g) in gamma.data.iter().enumerate() {
+                    w.scale_row(i, g);
+                }
+            }
+            let norm = if norm_key == "attn" {
+                &mut params.blocks[bi].attn_norm
+            } else {
+                &mut params.blocks[bi].mlp_norm
+            };
+            for v in norm.data.iter_mut() {
+                *v = 1.0;
+            }
+            report.channels_scaled += gamma.len();
+        }
+    }
+    report
+}
+
+/// SmoothQuant: per-channel migration `s_i = max|X_i|^a / max|W_i|^(1-a)`
+/// applied to every channel of every quantized linear input.
+pub fn apply_smoothquant(
+    params: &mut ModelParams,
+    stats: &ActStats,
+    alpha: f32,
+) -> PreprocReport {
+    let mut report = PreprocReport::default();
+    for bi in 0..params.blocks.len() {
+        // group the shared-input linears so the producer is divided once
+        for group in [vec!["wq", "wk", "wv"], vec!["wgate", "wup"], vec!["wo"], vec!["wdown"]] {
+            let lead = group[0];
+            let maxima = stats.max_of(bi, lead);
+            let k = maxima.len();
+            // per-input-row weight maxima across the group
+            let mut wmax = vec![0.0f32; k];
+            for lin in &group {
+                let w = params.blocks[bi].linear(lin);
+                for i in 0..k {
+                    let m = w.row(i).iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                    if m > wmax[i] {
+                        wmax[i] = m;
+                    }
+                }
+            }
+            let scales: Vec<f32> = maxima
+                .iter()
+                .zip(&wmax)
+                .map(|(&xm, &wm)| {
+                    let s = xm.max(1e-5).powf(alpha) / wm.max(1e-5).powf(1.0 - alpha);
+                    s.clamp(0.1, 1e4)
+                })
+                .collect();
+            report.channels_scaled += scales.iter().filter(|&&s| (s - 1.0).abs() > 1e-3).count();
+            migrate_channel_scales(params, bi, lead, &scales);
+        }
+    }
+    report
+}
+
+/// Helper shared with tests: max |W| per input row.
+pub fn row_maxima(w: &Tensor) -> Vec<f32> {
+    (0..w.rows())
+        .map(|i| w.row(i).iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model_state::BlockParams;
+    use std::collections::BTreeMap;
+
+    fn params_with(f: impl Fn(&str) -> Tensor) -> ModelParams {
+        let mut linears = BTreeMap::new();
+        for l in LINEARS {
+            linears.insert(l.to_string(), f(l));
+        }
+        ModelParams {
+            embed: Tensor::zeros(&[8, 4]),
+            final_norm: Tensor::full(&[4], 1.0),
+            head: Tensor::zeros(&[4, 8]),
+            blocks: vec![BlockParams {
+                attn_norm: Tensor::new(vec![4], vec![1.0, 8.0, 1.0, 0.5]),
+                mlp_norm: Tensor::full(&[4], 1.0),
+                linears,
+            }],
+        }
+    }
+
+    fn shape_of(l: &str) -> (usize, usize) {
+        match l {
+            "wgate" | "wup" => (4, 8),
+            "wdown" => (8, 4),
+            _ => (4, 4),
+        }
+    }
+
+    fn default_params() -> ModelParams {
+        params_with(|l| {
+            let (k, n) = shape_of(l);
+            Tensor::new(
+                vec![k, n],
+                (0..k * n).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect(),
+            )
+        })
+    }
+
+    fn flat_stats(p: &ModelParams) -> ActStats {
+        let mut st = ActStats::new(1);
+        for l in LINEARS {
+            let k = p.blocks[0].linears[l].rows();
+            st.accumulate(0, l, &Tensor::full(&[2, k], 1.0));
+        }
+        st
+    }
+
+    #[test]
+    fn os_normalizes_gamma() {
+        let mut p = default_params();
+        let wq_before = p.blocks[0].linears["wq"].clone();
+        apply_os(&mut p);
+        assert!(p.blocks[0].attn_norm.data.iter().all(|&v| v == 1.0));
+        // row 1 scaled by old gamma 8.0
+        assert!((p.blocks[0].linears["wq"].at2(1, 0) - wq_before.at2(1, 0) * 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn smoothquant_balances_hot_channel() {
+        let mut p = default_params();
+        let mut st = flat_stats(&p);
+        // hot activation channel 2 for the attn group
+        st.channel_max[0].get_mut("wq").unwrap()[2] = 100.0;
+        apply_smoothquant(&mut p, &st, 0.5);
+        // norm weight channel 2 got divided (producer side)
+        assert!(p.blocks[0].attn_norm.data[2] < 1.0);
+    }
+
+    #[test]
+    fn omse_reduces_quant_mse_with_heavy_tail() {
+        // tall matrices: clipping one heavy-tail entry per column buys
+        // resolution for 63 bulk values — the regime OMSE targets
+        let mut p = params_with(|_l| {
+            let (k, n) = (512usize, 2usize);
+            let mut d: Vec<f32> = (0..k * n)
+                .map(|i| ((i * 131) % 100) as f32 / 100.0 * 4.0 - 2.0)
+                .collect();
+            for j in 0..n {
+                d[j] = 20.0;
+            }
+            Tensor::new(vec![k, n], d)
+        });
+        let before = {
+            let w = p.blocks[0].linears["wq"].clone();
+            quant_mse(&w, &init_scales(&w, 3.0), 3.0)
+        };
+        let rep = apply_omse(&mut p);
+        let w = p.blocks[0].linears["wq"].clone();
+        let after = quant_mse(&w, &init_scales(&w, 3.0), 3.0);
+        assert!(rep.weights_truncated > 0);
+        assert!(after < before, "{after} !< {before}");
+    }
+
+    #[test]
+    fn percentile_clips_extremes() {
+        let mut p = params_with(|l| {
+            let (k, n) = shape_of(l);
+            let mut d: Vec<f32> = vec![0.01; k * n];
+            d[1] = 50.0;
+            Tensor::new(vec![k, n], d)
+        });
+        let st = flat_stats(&p);
+        let rep = apply_percentile(&mut p, &st);
+        assert!(rep.weights_truncated > 0);
+        assert!(p.blocks[0].linears["wq"].data[1] < 50.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! CFP — coarse-to-fine pre-processing (paper Sec. 3.4 + Appendix F/K).
+//!
+//! Distribution-free outlier detection in two stages (Algorithm 1):
+//!   1. coarse: quartile criterion `T = Q3 + lambda1 * IQR` over |x| — cheap,
+//!      assumption-free candidate set;
+//!   2. fine: scan split points of the sorted candidate set maximizing
+//!      `M = M_inter - lambda2 * M_intra` where `M_inter` is the squared gap
+//!      between reserved and outlier subsets and `M_intra = Var(O_reserved)`.
+//!
+//! Downstream handling (Sec. 3.4):
+//!   * weights   -> truncate outliers to the reserved maximum;
+//!   * activations -> per-channel scaling `s_i = sqrt(max|X_i| / max O*)`
+//!     migrated into adjacent weights as an exact equivalent transform
+//!     (see [`apply`]).
+
+pub mod apply;
+pub mod baselines;
+
+/// Paper defaults: lambda1 = 1.5 (coarse IQR factor), lambda2 = 1.0.
+pub const LAMBDA1: f32 = 1.5;
+pub const LAMBDA2: f32 = 1.0;
+
+/// Result of outlier detection over a set of magnitudes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Detection {
+    /// Values >= this are outliers (min of the outlier subset). `None` if
+    /// no outliers were detected.
+    pub threshold: Option<f32>,
+    /// Truncation level: maximum of the reserved (non-outlier) data.
+    pub reserved_max: f32,
+    /// Number of detected outliers.
+    pub n_outliers: usize,
+    /// Coarse-stage candidate count (before the fine split).
+    pub n_candidates: usize,
+}
+
+impl Detection {
+    pub fn is_outlier(&self, v: f32) -> bool {
+        match self.threshold {
+            Some(t) => v.abs() >= t,
+            None => false,
+        }
+    }
+}
+
+/// Algorithm 1 over the magnitudes of `values`.
+pub fn detect(values: &[f32], lambda1: f32, lambda2: f32) -> Detection {
+    let mut mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = mags.len();
+    if n < 4 {
+        return Detection {
+            threshold: None,
+            reserved_max: mags.last().copied().unwrap_or(0.0),
+            n_outliers: 0,
+            n_candidates: 0,
+        };
+    }
+    // --- coarse: quartile criterion --------------------------------------
+    // (n-1)-based quantile indices so small sets (e.g. per-channel maxima
+    // of narrow layers) don't land Q3 on the extreme value itself
+    let q1 = mags[(n - 1) / 4];
+    let q3 = mags[3 * (n - 1) / 4];
+    let iqr = q3 - q1;
+    let t = q3 + lambda1 * iqr;
+    let first = mags.partition_point(|&v| v <= t);
+    let candidates = &mags[first..];
+    let below_max = if first == 0 { 0.0 } else { mags[first - 1] };
+    if candidates.len() < 2 {
+        // 0 or 1 candidate: a single extreme point is an outlier iff it is
+        // clearly separated from the bulk (gap > its own IQR distance).
+        if candidates.len() == 1 {
+            return Detection {
+                threshold: Some(candidates[0]),
+                reserved_max: below_max,
+                n_outliers: 1,
+                n_candidates: 1,
+            };
+        }
+        return Detection {
+            threshold: None,
+            reserved_max: below_max.max(mags[n - 1].min(t)),
+            n_outliers: 0,
+            n_candidates: 0,
+        };
+    }
+    // --- fine: maximize M = M_inter - lambda2 * M_intra -------------------
+    // Split i: O_outlier = candidates[i..], O_reserved = bulk + candidates[..i]
+    // (Algorithm 1 iterates i = 0..N; the reserved subset rejoins the
+    // non-candidate bulk, so its variance is computed over everything kept).
+    let m_c = candidates.len();
+    let bulk = &mags[..first];
+    let (mut rs, mut rq) = bulk
+        .iter()
+        .fold((0.0f64, 0.0f64), |(s, q), &v| (s + v as f64, q + (v * v) as f64));
+    let mut rn = bulk.len() as f64;
+    let mut best_m = f32::NEG_INFINITY;
+    let mut best_i = m_c; // default: nothing declared outlier
+    for i in 0..m_c {
+        let var = if rn > 0.0 {
+            let mean = rs / rn;
+            (rq / rn - mean * mean).max(0.0) as f32
+        } else {
+            0.0
+        };
+        let reserved_max = if i > 0 { candidates[i - 1] } else { below_max };
+        let gap = candidates[i] - reserved_max;
+        let m = gap * gap - lambda2 * var;
+        if m > best_m {
+            best_m = m;
+            best_i = i;
+        }
+        // candidate i joins the reserved set for the next split
+        rs += candidates[i] as f64;
+        rq += (candidates[i] * candidates[i]) as f64;
+        rn += 1.0;
+    }
+    // accept only if the inter-class separation beats the intra-class
+    // variance (M > 0) — a smooth tail yields no outliers.
+    let (threshold, reserved_max, n_outliers) = if best_i == m_c || best_m <= 0.0 {
+        (None, candidates[m_c - 1], 0)
+    } else {
+        let rmax = if best_i > 0 { candidates[best_i - 1] } else { below_max };
+        (Some(candidates[best_i]), rmax, m_c - best_i)
+    };
+    Detection { threshold, reserved_max, n_outliers, n_candidates: m_c }
+}
+
+/// Detect with the paper's default lambdas.
+pub fn detect_default(values: &[f32]) -> Detection {
+    detect(values, LAMBDA1, LAMBDA2)
+}
+
+/// Truncate weight outliers in place: `|w| > reserved_max` clipped to
+/// `sign(w) * reserved_max` (Sec. 3.4: "truncating weight outliers").
+pub fn truncate_weights(data: &mut [f32], det: &Detection) -> usize {
+    let Some(_t) = det.threshold else { return 0 };
+    let cap = det.reserved_max;
+    let mut n = 0;
+    for v in data.iter_mut() {
+        if det.is_outlier(*v) {
+            *v = v.signum() * cap;
+            n += 1;
+        }
+    }
+    n
+}
+
+/// Per-channel activation scaling factors (Eq. 14): outlier channels get
+/// `s_i = sqrt(max|X_i| / max O*)` (> 1), others 1.0. `channel_maxima` are
+/// the per-channel max |X_i| statistics from calibration capture.
+pub fn activation_scales(channel_maxima: &[f32], det: &Detection) -> Vec<f32> {
+    let t_star = det.reserved_max.max(crate::quant::EPS);
+    channel_maxima
+        .iter()
+        .map(|&m| {
+            if det.is_outlier(m) && m > t_star {
+                (m / t_star).sqrt()
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bulk_plus_outliers(n: usize, outliers: &[f32]) -> Vec<f32> {
+        // deterministic bulk in [-1, 1]
+        let mut v: Vec<f32> =
+            (0..n).map(|i| ((i * 2654435761) % 2000) as f32 / 1000.0 - 1.0).collect();
+        v.extend_from_slice(outliers);
+        v
+    }
+
+    #[test]
+    fn detects_clear_outliers() {
+        let data = bulk_plus_outliers(1000, &[25.0, -30.0, 28.0]);
+        let det = detect_default(&data);
+        assert_eq!(det.n_outliers, 3);
+        assert!(det.threshold.unwrap() > 1.0);
+        assert!(det.reserved_max <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn no_outliers_in_uniform_bulk() {
+        let data = bulk_plus_outliers(1000, &[]);
+        let det = detect_default(&data);
+        assert_eq!(det.n_outliers, 0);
+        assert!(det.threshold.is_none());
+    }
+
+    #[test]
+    fn fine_stage_rejects_smooth_tail() {
+        // heavy but *smooth* tail: coarse flags candidates, the fine split
+        // finds no strong gap and (gap^2 - var) peaks at the true break.
+        let mut data = bulk_plus_outliers(500, &[]);
+        data.extend((0..50).map(|i| 1.0 + i as f32 * 0.01)); // smooth ramp
+        data.push(50.0); // one real outlier
+        let det = detect_default(&data);
+        assert_eq!(det.n_outliers, 1);
+        assert!(det.threshold.unwrap() > 10.0);
+    }
+
+    #[test]
+    fn truncation_caps_only_outliers() {
+        let mut data = bulk_plus_outliers(800, &[40.0, -44.0]);
+        let det = detect_default(&data);
+        let n = truncate_weights(&mut data, &det);
+        assert_eq!(n, 2);
+        let mx = data.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!(mx <= det.reserved_max + 1e-6);
+        // signs preserved
+        assert!(data[801] < 0.0);
+    }
+
+    #[test]
+    fn activation_scales_selective() {
+        let maxima = vec![1.0, 1.2, 0.9, 30.0, 1.1, 26.0];
+        let det = detect_default(&bulk_plus_outliers(500, &[30.0, 26.0]));
+        let s = activation_scales(&maxima, &det);
+        assert_eq!(s[0], 1.0);
+        assert!(s[3] > 3.0 && s[3] < 8.0);
+        assert!(s[5] > 3.0);
+        // sqrt migration: scaled channel max becomes sqrt(m * t*)
+        let migrated = maxima[3] / s[3];
+        assert!(migrated < maxima[3] && migrated > det.reserved_max * 0.9);
+    }
+
+    #[test]
+    fn small_input_safe() {
+        let det = detect_default(&[1.0, 2.0]);
+        assert!(det.threshold.is_none());
+        let det = detect_default(&[]);
+        assert_eq!(det.reserved_max, 0.0);
+    }
+
+    #[test]
+    fn single_extreme_candidate() {
+        let data = bulk_plus_outliers(1000, &[100.0]);
+        let det = detect_default(&data);
+        assert_eq!(det.n_outliers, 1);
+        assert!(det.is_outlier(100.0));
+        assert!(!det.is_outlier(0.5));
+    }
+}

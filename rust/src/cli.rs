@@ -1,0 +1,101 @@
+//! Tiny `--flag value` argument parser (clap is not vendored in this build
+//! environment). Grammar: `[global flags] <command> [--key value | --switch]*`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    command: Option<String>,
+    kv: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let items: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // a flag with a value unless the next token is missing or
+                // itself a flag (then it's a switch)
+                if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    out.kv.insert(key.to_string(), items[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.command.is_none() {
+                    out.command = Some(a.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.command.as_deref()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got `{v}`")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a float, got `{v}`")),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_command_kv_switches() {
+        let a = args("--artifacts /tmp/x quantize --model s --w 4 --star --epochs 3");
+        assert_eq!(a.command(), Some("quantize"));
+        assert_eq!(a.get("artifacts"), Some("/tmp/x"));
+        assert_eq!(a.get("model"), Some("s"));
+        assert_eq!(a.get_usize("w", 0).unwrap(), 4);
+        assert!(a.flag("star"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = args("eval --verbose");
+        assert_eq!(a.command(), Some("eval"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = args("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Quantization job configuration: bit specs (including CBQ*'s per-layer
+//! mixed precision), method selection, pre-processing choice and the CBD /
+//! LoRA-Rounding hyper-parameters — the knobs every table in the paper
+//! sweeps.
+
+
+/// Bit-width specification. `bits_a = 16` disables activation quantization
+/// (weight-only mode); per-layer overrides implement CBQ* (Table 1: FC2 of
+/// the first and last block promoted to 4-bit under W2A16).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitSpec {
+    pub bits_w: u8,
+    pub bits_a: u8,
+    /// (block index, linear name, weight bits) overrides.
+    pub overrides: Vec<(usize, String, u8)>,
+}
+
+impl BitSpec {
+    pub fn new(bits_w: u8, bits_a: u8) -> Self {
+        Self { bits_w, bits_a, overrides: Vec::new() }
+    }
+    pub fn w4a16() -> Self {
+        Self::new(4, 16)
+    }
+    pub fn w3a16() -> Self {
+        Self::new(3, 16)
+    }
+    pub fn w2a16() -> Self {
+        Self::new(2, 16)
+    }
+    pub fn w4a8() -> Self {
+        Self::new(4, 8)
+    }
+    pub fn w4a4() -> Self {
+        Self::new(4, 4)
+    }
+    pub fn w6a6() -> Self {
+        Self::new(6, 6)
+    }
+
+    /// CBQ* (paper Table 1 footnote): W2A16 but the FC2 (`wdown`) of the
+    /// first and last transformer block kept at 4 bits.
+    pub fn w2a16_star(n_layers: usize) -> Self {
+        let mut s = Self::new(2, 16);
+        s.overrides.push((0, "wdown".to_string(), 4));
+        s.overrides.push((n_layers - 1, "wdown".to_string(), 4));
+        s
+    }
+
+    pub fn weight_bits(&self, block: usize, linear: &str) -> u8 {
+        self.overrides
+            .iter()
+            .find(|(b, l, _)| *b == block && l == linear)
+            .map(|&(_, _, bits)| bits)
+            .unwrap_or(self.bits_w)
+    }
+
+    pub fn qmax_w(&self, block: usize, linear: &str) -> f32 {
+        qmax(self.weight_bits(block, linear))
+    }
+
+    pub fn qmax_a(&self) -> f32 {
+        qmax(self.bits_a)
+    }
+
+    /// Activation quantization enabled?
+    pub fn act_enabled(&self) -> bool {
+        self.bits_a < 16
+    }
+
+    pub fn label(&self) -> String {
+        let star = if self.overrides.is_empty() { "" } else { "*" };
+        format!("W{}A{}{}", self.bits_w, self.bits_a, star)
+    }
+}
+
+pub fn qmax(bits: u8) -> f32 {
+    ((1u32 << (bits - 1)) - 1) as f32
+}
+
+/// Outlier pre-processing strategy (paper Table 3a comparators + CFP).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreprocMethod {
+    None,
+    /// OMSE-style: per-channel clip minimizing quantization MSE.
+    Omse,
+    /// Percentile clipping (Zhou et al. 2017).
+    Percentile,
+    /// Outlier Suppression: fold norm weights into consumers.
+    OutlierSuppression,
+    /// SmoothQuant: alpha-balanced activation->weight scale migration.
+    SmoothQuant,
+    /// CFP on activations only (Table 3a row "CFP-Activation").
+    CfpActivation,
+    /// CFP weight truncation only (the weight-only-quantization variant).
+    CfpWeight,
+    /// Full CFP: weight truncation + activation scaling (Sec. 3.4).
+    CfpFull,
+}
+
+impl PreprocMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Omse => "OMSE",
+            Self::Percentile => "Percentile",
+            Self::OutlierSuppression => "OS",
+            Self::SmoothQuant => "SmoothQuant",
+            Self::CfpActivation => "CFP-Act",
+            Self::CfpWeight => "CFP-W",
+            Self::CfpFull => "CFP-W+A",
+        }
+    }
+}
+
+/// Weight rounding strategy (paper Table 3b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundingMode {
+    /// Round-to-nearest: no learned offsets.
+    Nearest,
+    /// Dense AdaRound: a full-size V matrix per linear (memory baseline).
+    DenseAdaRound,
+    /// LoRA-Rounding: V = A1 @ A2 at effective rank `rank` (Sec. 3.2).
+    Lora,
+}
+
+/// Top-level method selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Round-to-nearest, no reconstruction.
+    Rtn,
+    /// GPTQ on captured calibration activations.
+    Gptq,
+    /// Block/cross-block reconstruction (CBQ; window=1, overlap=0, no
+    /// rounding learn ~= an OmniQuant-style baseline).
+    Cbq,
+}
+
+/// A full quantization job — everything a bench row needs.
+#[derive(Clone, Debug)]
+pub struct QuantJob {
+    pub method: Method,
+    pub bits: BitSpec,
+    pub preproc: PreprocMethod,
+    pub rounding: RoundingMode,
+    /// CBD window size (#blocks optimized jointly, Sec. 3.1).
+    pub window: usize,
+    /// CBD overlap between consecutive windows.
+    pub overlap: usize,
+    /// Optimization epochs per window (paper: 3).
+    pub epochs: usize,
+    /// Effective LoRA rank r (paper: 5); projected from the padded rank.
+    pub rank: usize,
+    /// Calibration segments (paper: 128 x 2048 tokens of C4; here 128
+    /// batch-rows of the synthetic C4-style corpus).
+    pub calib_sequences: usize,
+    pub lr_s_w: f32,
+    pub lr_alpha: f32,
+    pub lr_lora: f32,
+    pub l2_weight: f32,
+    pub kld_weight: f32,
+    /// gamma in Eq. 13 balancing L_com.
+    pub gamma_c: f32,
+    /// Fraction of each window's steps run with HARD rounding at the end
+    /// (the paper's late-phase DeltaW-forcing): rounding offsets freeze and
+    /// the step sizes adapt to the rounding the finalized model will use.
+    pub hard_frac: f32,
+    /// SmoothQuant migration strength (only for PreprocMethod::SmoothQuant).
+    pub sq_alpha: f32,
+}
+
+impl QuantJob {
+    /// Paper-default CBQ configuration (Sec. 5.1 implementation details):
+    /// 2-block windows with overlap 1, 3 epochs, rank 5, CFP on.
+    pub fn cbq(bits: BitSpec) -> Self {
+        Self {
+            method: Method::Cbq,
+            bits,
+            preproc: PreprocMethod::CfpFull,
+            rounding: RoundingMode::Lora,
+            window: 2,
+            overlap: 1,
+            epochs: 3,
+            rank: 5,
+            calib_sequences: 128,
+            lr_s_w: 3e-3,
+            lr_alpha: 1e-4,
+            lr_lora: 1e-2,
+            l2_weight: 1.0,
+            kld_weight: 1.0,
+            gamma_c: 1e-2,
+            hard_frac: 0.7,
+            sq_alpha: 0.5,
+        }
+    }
+
+    /// OmniQuant-style baseline: single-block reconstruction, learnable
+    /// scales only, no rounding learning, SmoothQuant-style preprocessing.
+    pub fn omniquant_like(bits: BitSpec) -> Self {
+        Self {
+            window: 1,
+            overlap: 0,
+            rounding: RoundingMode::Nearest,
+            preproc: PreprocMethod::SmoothQuant,
+            ..Self::cbq(bits)
+        }
+    }
+
+    pub fn rtn(bits: BitSpec) -> Self {
+        Self { method: Method::Rtn, preproc: PreprocMethod::None, ..Self::cbq(bits) }
+    }
+
+    pub fn gptq(bits: BitSpec) -> Self {
+        Self { method: Method::Gptq, preproc: PreprocMethod::None, ..Self::cbq(bits) }
+    }
+
+    pub fn label(&self) -> String {
+        let m = match self.method {
+            Method::Rtn => "RTN",
+            Method::Gptq => "GPTQ",
+            Method::Cbq => "CBQ",
+        };
+        format!("{m} {}", self.bits.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(2), 1.0);
+        assert_eq!(qmax(3), 3.0);
+        assert_eq!(qmax(4), 7.0);
+        assert_eq!(qmax(8), 127.0);
+        assert_eq!(qmax(16), 32767.0);
+    }
+
+    #[test]
+    fn star_overrides() {
+        let s = BitSpec::w2a16_star(8);
+        assert_eq!(s.weight_bits(0, "wdown"), 4);
+        assert_eq!(s.weight_bits(7, "wdown"), 4);
+        assert_eq!(s.weight_bits(3, "wdown"), 2);
+        assert_eq!(s.weight_bits(0, "wq"), 2);
+        assert_eq!(s.label(), "W2A16*");
+    }
+
+    #[test]
+    fn act_enable() {
+        assert!(!BitSpec::w4a16().act_enabled());
+        assert!(BitSpec::w4a4().act_enabled());
+        assert_eq!(BitSpec::w4a16().qmax_a(), 32767.0);
+    }
+}

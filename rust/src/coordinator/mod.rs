@@ -1,0 +1,577 @@
+//! The paper's system contribution, as the L3 coordinator:
+//!
+//! * **CBD** (Sec. 3.1) — sliding windows of `window` transformer blocks
+//!   with `overlap`, jointly optimized against the full-precision model's
+//!   block-boundary hidden states;
+//! * **LoRA-Rounding** (Sec. 3.2) — low-rank rounding offsets optimized
+//!   jointly with the step sizes, with the effective-rank projection and
+//!   beta-annealed regularizer schedule;
+//! * the **RTN / GPTQ** baselines and the capture-driven pre-processing
+//!   stage (CFP & friends) that precede reconstruction.
+//!
+//! All model compute runs through the AOT HLO executables; this module owns
+//! state, scheduling, optimization and bookkeeping.
+
+pub mod qstate;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::calib::{self, Batch};
+use crate::cfp::apply as preproc;
+use crate::config::{Method, QuantJob, RoundingMode};
+use crate::gptq::{gptq_quantize, GptqHessian};
+use crate::model_state::{ActStats, ModelParams};
+use crate::quant::{self, LINEARS};
+use crate::runtime::{Artifacts, Bindings, ModelCfg, Runtime};
+use crate::tensor::Tensor;
+
+pub use qstate::LinearQ;
+
+/// A fully-quantized model: baked (fake-quantized) weights + the activation
+/// quantization state eval needs.
+pub struct QuantizedModel {
+    pub params: ModelParams,
+    pub qstate: Vec<BTreeMap<String, LinearQ>>,
+    pub bits: crate::config::BitSpec,
+    pub rounding: RoundingMode,
+}
+
+/// Everything a bench table row reports.
+#[derive(Clone, Debug)]
+pub struct QuantSummary {
+    pub label: String,
+    /// perplexity per corpus style name
+    pub ppl: BTreeMap<String, f64>,
+    pub quant_seconds: f64,
+    /// learnable + optimizer state bytes at the peak window
+    pub state_bytes: usize,
+    /// activation cache bytes (hidden-state caches for the window)
+    pub act_cache_bytes: usize,
+    /// mean reconstruction loss per window (diagnostics / ablations)
+    pub window_losses: Vec<f32>,
+    pub preproc_weights_truncated: usize,
+    pub preproc_channels_scaled: usize,
+}
+
+pub struct Pipeline<'a> {
+    pub art: &'a Artifacts,
+    pub rt: &'a Runtime,
+    pub cfg: ModelCfg,
+    pub cfg_name: String,
+    pub fp: ModelParams,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(art: &'a Artifacts, rt: &'a Runtime, cfg_name: &str) -> Result<Self> {
+        let cfg = art.cfg(cfg_name)?.clone();
+        let weights = art.weights(cfg_name)?;
+        let fp = ModelParams::from_tensors(&weights, &cfg)?;
+        Ok(Self { art, rt, cfg, cfg_name: cfg_name.to_string(), fp })
+    }
+
+    // ------------------------------------------------------------------
+    // binding builders (flatten_spec contract, see python/compile/model.py)
+    // ------------------------------------------------------------------
+
+    pub fn bind_block_weights(b: &mut Bindings, j: usize, blk: &crate::model_state::BlockParams) {
+        b.set(format!("blocks.{j}.attn_norm"), blk.attn_norm.clone());
+        b.set(format!("blocks.{j}.mlp_norm"), blk.mlp_norm.clone());
+        for l in LINEARS {
+            b.set(format!("blocks.{j}.{l}"), blk.linears[l].clone());
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn bind_qblock(
+        b: &mut Bindings,
+        j: usize,
+        q: &BTreeMap<String, LinearQ>,
+        qmax_a: f32,
+        w_en: f32,
+        a_en: f32,
+        dense: bool,
+    ) {
+        for l in LINEARS {
+            let lq = &q[l];
+            let p = format!("qblocks.{j}.{l}");
+            b.set(format!("{p}.s_w"), lq.s_w.clone());
+            b.scalar(format!("{p}.alpha"), lq.alpha);
+            if dense {
+                b.set(
+                    format!("{p}.v"),
+                    lq.v_dense.clone().expect("dense mode requires v_dense"),
+                );
+            } else {
+                b.set(format!("{p}.a1"), lq.a1.clone());
+                b.set(format!("{p}.a2"), lq.a2.clone());
+            }
+            b.set(format!("{p}.v0"), lq.v0.clone());
+            b.scalar(format!("{p}.qmax_w"), lq.qmax_w);
+            b.scalar(format!("{p}.qmax_a"), qmax_a);
+            b.scalar(format!("{p}.w_en"), w_en);
+            b.scalar(format!("{p}.a_en"), a_en);
+        }
+    }
+
+    pub fn bind_globals(b: &mut Bindings, use_lora: f32, beta: f32, gamma_c: f32, l2: f32, kld: f32) {
+        b.scalar("globals.use_lora", use_lora);
+        b.scalar("globals.beta", beta);
+        b.scalar("globals.gamma_c", gamma_c);
+        b.scalar("globals.l2_w", l2);
+        b.scalar("globals.kld_w", kld);
+    }
+
+    /// Default qstate for a span of blocks (used both by training init and
+    /// by the FP/eval paths that only need benign placeholder values).
+    pub fn init_qstate(
+        &self,
+        params: &ModelParams,
+        bits: &crate::config::BitSpec,
+        rank: usize,
+        mode: RoundingMode,
+    ) -> Vec<BTreeMap<String, LinearQ>> {
+        params
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(bi, blk)| {
+                LINEARS
+                    .iter()
+                    .map(|&l| {
+                        let lq = LinearQ::init(
+                            &blk.linears[l],
+                            bits.weight_bits(bi, l),
+                            self.cfg.rank_pad,
+                            rank,
+                            mode,
+                        );
+                        (l.to_string(), lq)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Run one window-sized forward (loss vs target ignored unless needed);
+    /// returns h_out.
+    #[allow(clippy::too_many_arguments)]
+    pub fn window_forward(
+        &self,
+        exec: &str,
+        blocks: &[crate::model_state::BlockParams],
+        qblocks: &[BTreeMap<String, LinearQ>],
+        h_in: &Tensor,
+        target: &Tensor,
+        qmax_a: f32,
+        w_en: f32,
+        a_en: f32,
+    ) -> Result<(Tensor, f32)> {
+        let mut b = Bindings::new();
+        b.set("h_in", h_in.clone());
+        b.set("target", target.clone());
+        for (j, blk) in blocks.iter().enumerate() {
+            Self::bind_block_weights(&mut b, j, blk);
+            Self::bind_qblock(&mut b, j, &qblocks[j], qmax_a, w_en, a_en, false);
+        }
+        Self::bind_globals(&mut b, 0.0, 2.0, 0.0, 1.0, 1.0);
+        let out = self.rt.run(exec, b.inner())?;
+        Ok((out["h_out"].clone(), out["loss"].item()))
+    }
+
+    /// FP hidden states at every block boundary for every calibration batch:
+    /// `fp_hidden[k][batch]` is the input to block k (k = n_layers => final).
+    pub fn fp_hidden_states(&self, calib: &[Batch]) -> Result<Vec<Vec<Tensor>>> {
+        let exec = format!("win_fwd_w1_{}", self.cfg_name);
+        let qs = self.init_qstate(&self.fp, &crate::config::BitSpec::w4a16(), 5, RoundingMode::Nearest);
+        let mut all = vec![Vec::with_capacity(calib.len())];
+        for batch in calib {
+            let x = batch.inputs();
+            all[0].push(self.fp.embed_tokens(&x.data, batch.batch, batch.seq));
+        }
+        for k in 0..self.cfg.n_layers {
+            let mut next = Vec::with_capacity(calib.len());
+            for h in &all[k] {
+                let zeros = Tensor::zeros(&h.dims);
+                let (h_out, _) = self.window_forward(
+                    &exec,
+                    &self.fp.blocks[k..k + 1],
+                    &qs[k..k + 1],
+                    h,
+                    &zeros,
+                    32767.0,
+                    0.0,
+                    0.0,
+                )?;
+                next.push(h_out);
+            }
+            all.push(next);
+        }
+        Ok(all)
+    }
+
+    /// Capture per-linear input statistics with given weights, propagating
+    /// given hidden states (FP path: weights unquantized).
+    pub fn capture_stats(
+        &self,
+        params: &ModelParams,
+        calib: &[Batch],
+        fp_hidden: &[Vec<Tensor>],
+    ) -> Result<ActStats> {
+        let exec = format!("capture_{}", self.cfg_name);
+        let qs = self.init_qstate(params, &crate::config::BitSpec::w4a16(), 5, RoundingMode::Nearest);
+        let mut stats = ActStats::new(self.cfg.n_layers);
+        for k in 0..self.cfg.n_layers {
+            for (bi, _batch) in calib.iter().enumerate() {
+                let h = &fp_hidden[k][bi];
+                let mut b = Bindings::new();
+                b.set("h_in", h.clone());
+                b.set("target", Tensor::zeros(&h.dims));
+                Self::bind_block_weights(&mut b, 0, &params.blocks[k]);
+                Self::bind_qblock(&mut b, 0, &qs[k], 32767.0, 0.0, 0.0, false);
+                Self::bind_globals(&mut b, 0.0, 2.0, 0.0, 1.0, 1.0);
+                let out = self.rt.run(&exec, b.inner())?;
+                for l in LINEARS {
+                    stats.accumulate(k, l, &out[&format!("captures.{l}")]);
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    // ------------------------------------------------------------------
+    // top-level quantization entry
+    // ------------------------------------------------------------------
+
+    pub fn run(&mut self, job: &QuantJob) -> Result<(QuantizedModel, QuantSummary)> {
+        let t0 = Instant::now();
+        let calib = calib::calibration(job.calib_sequences, self.cfg.batch, self.cfg.seq);
+        let mut work = self.fp.clone();
+
+        // FP targets + activation statistics (pre-processing feed)
+        let fp_hidden = self.fp_hidden_states(&calib)?;
+        let stats = self.capture_stats(&self.fp, &calib, &fp_hidden)?;
+
+        // outlier pre-processing (function-preserving => fp_hidden stays valid).
+        // Activation-side handling exists to protect *activation* quantization;
+        // in weight-only mode (A16) migrating activation magnitude into the
+        // weights only makes weight quantization harder, so downgrade to the
+        // weight-side part (CFP-Weight) / no-op, mirroring how the paper
+        // applies CFP-Activation only under joint W-A settings.
+        let effective = if job.bits.act_enabled() {
+            job.preproc
+        } else {
+            match job.preproc {
+                crate::config::PreprocMethod::CfpFull => {
+                    crate::config::PreprocMethod::CfpWeight
+                }
+                crate::config::PreprocMethod::CfpActivation
+                | crate::config::PreprocMethod::SmoothQuant
+                | crate::config::PreprocMethod::OutlierSuppression => {
+                    crate::config::PreprocMethod::None
+                }
+                other => other,
+            }
+        };
+        let report = preproc::apply(effective, &mut work, &stats, job.sq_alpha);
+
+        let (model, window_losses, state_bytes) = match job.method {
+            Method::Rtn => (self.run_rtn(work, job)?, Vec::new(), 0),
+            Method::Gptq => (self.run_gptq(work, job, &calib)?, Vec::new(), 0),
+            Method::Cbq => {
+                let (m, losses, bytes) = self.run_cbd(work, job, &calib, &fp_hidden)?;
+                (m, losses, bytes)
+            }
+        };
+        let quant_seconds = t0.elapsed().as_secs_f64();
+
+        let hidden_bytes =
+            self.cfg.batch * self.cfg.seq * self.cfg.d_model * 4 * (job.window + 1);
+        let summary = QuantSummary {
+            label: job.label(),
+            ppl: BTreeMap::new(), // filled by eval
+            quant_seconds,
+            state_bytes,
+            act_cache_bytes: hidden_bytes * calib.len(),
+            window_losses,
+            preproc_weights_truncated: report.weights_truncated,
+            preproc_channels_scaled: report.channels_scaled,
+        };
+        Ok((model, summary))
+    }
+
+    fn run_rtn(&self, mut work: ModelParams, job: &QuantJob) -> Result<QuantizedModel> {
+        let qstate = self.init_qstate(&work, &job.bits, job.rank, RoundingMode::Nearest);
+        for (bi, blk) in work.blocks.iter_mut().enumerate() {
+            for l in LINEARS {
+                let qmax = job.bits.qmax_w(bi, l);
+                let w = blk.linear_mut(l);
+                let s = quant::init_scales(w, qmax);
+                *w = quant::fake_quant_rtn(w, &s, qmax);
+            }
+        }
+        Ok(QuantizedModel { params: work, qstate, bits: job.bits.clone(), rounding: RoundingMode::Nearest })
+    }
+
+    fn run_gptq(
+        &self,
+        mut work: ModelParams,
+        job: &QuantJob,
+        calib: &[Batch],
+    ) -> Result<QuantizedModel> {
+        let qstate = self.init_qstate(&work, &job.bits, job.rank, RoundingMode::Nearest);
+        let capture = format!("capture_{}", self.cfg_name);
+        let fwd = format!("win_fwd_w1_{}", self.cfg_name);
+        // current hidden per batch (through already-quantized prefix)
+        let mut hidden: Vec<Tensor> = calib
+            .iter()
+            .map(|b| work.embed_tokens(&b.inputs().data, b.batch, b.seq))
+            .collect();
+        for k in 0..self.cfg.n_layers {
+            // 1. capture linear inputs of block k under the current prefix
+            let mut hessians: BTreeMap<&str, GptqHessian> = LINEARS
+                .iter()
+                .map(|&l| (l, GptqHessian::new(self.cfg.linear_shape(l).0)))
+                .collect();
+            for h in &hidden {
+                let mut b = Bindings::new();
+                b.set("h_in", h.clone());
+                b.set("target", Tensor::zeros(&h.dims));
+                Self::bind_block_weights(&mut b, 0, &work.blocks[k]);
+                Self::bind_qblock(&mut b, 0, &qstate[k], 32767.0, 0.0, 0.0, false);
+                Self::bind_globals(&mut b, 0.0, 2.0, 0.0, 1.0, 1.0);
+                let out = self.rt.run(&capture, b.inner())?;
+                for l in LINEARS {
+                    hessians.get_mut(l).unwrap().accumulate(&out[&format!("captures.{l}")]);
+                }
+            }
+            // 2. GPTQ-quantize every linear of block k
+            for l in LINEARS {
+                let qmax = job.bits.qmax_w(k, l);
+                gptq_quantize(work.blocks[k].linear_mut(l), &hessians[l], qmax, 0.01)?;
+            }
+            // 3. propagate hidden through the quantized block
+            for h in hidden.iter_mut() {
+                let zeros = Tensor::zeros(&h.dims);
+                let (h_out, _) = self.window_forward(
+                    &fwd,
+                    &work.blocks[k..k + 1],
+                    &qstate[k..k + 1],
+                    h,
+                    &zeros,
+                    32767.0,
+                    0.0,
+                    0.0,
+                )?;
+                *h = h_out;
+            }
+        }
+        Ok(QuantizedModel { params: work, qstate, bits: job.bits.clone(), rounding: RoundingMode::Nearest })
+    }
+
+    // ------------------------------------------------------------------
+    // CBD: the cross-block sliding-window reconstruction (Sec. 3.1-3.3)
+    // ------------------------------------------------------------------
+
+    #[allow(clippy::type_complexity)]
+    fn run_cbd(
+        &self,
+        mut work: ModelParams,
+        job: &QuantJob,
+        calib: &[Batch],
+        fp_hidden: &[Vec<Tensor>],
+    ) -> Result<(QuantizedModel, Vec<f32>, usize)> {
+        let l_total = self.cfg.n_layers;
+        let w = job.window.min(l_total);
+        let overlap = job.overlap.min(w.saturating_sub(1));
+        let step = w - overlap;
+        let dense = matches!(job.rounding, RoundingMode::DenseAdaRound);
+        let grad_exec = if dense {
+            format!("win_grad_dense_w{w}_{}", self.cfg_name)
+        } else {
+            format!("win_grad_w{w}_{}", self.cfg_name)
+        };
+        if self.rt.spec(&grad_exec).is_err() {
+            return Err(anyhow!(
+                "no exported artifact for window={w} (exec {grad_exec}); available windows: {:?}",
+                self.art.manifest.windows.get(&self.cfg_name)
+            ));
+        }
+        let fwd1 = format!("win_fwd_w1_{}", self.cfg_name);
+
+        let mut qstate = self.init_qstate(&work, &job.bits, job.rank, job.rounding);
+        let qmax_a = job.bits.qmax_a();
+        let a_en = if job.bits.act_enabled() { 1.0 } else { 0.0 };
+        let use_lora = if matches!(job.rounding, RoundingMode::Nearest) { 0.0 } else { 1.0 };
+
+        // window start schedule: k*step, with a final clamped window so the
+        // last blocks always get optimized.
+        let mut starts: Vec<usize> = (0..).map(|k| k * step).take_while(|s| s + w <= l_total).collect();
+        if starts.last().map(|&s| s + w < l_total).unwrap_or(true) {
+            starts.push(l_total - w);
+        }
+
+        // quantized-path hidden states at the current frontier block
+        let mut frontier = 0usize;
+        let mut q_hidden: Vec<Tensor> = fp_hidden[0].clone();
+        let mut window_losses = Vec::new();
+
+        for &s in &starts {
+            // advance the quantized-path inputs to block s
+            while frontier < s {
+                for h in q_hidden.iter_mut() {
+                    let zeros = Tensor::zeros(&h.dims);
+                    let (h_out, _) = self.window_forward(
+                        &fwd1,
+                        &work.blocks[frontier..frontier + 1],
+                        &qstate[frontier..frontier + 1],
+                        h,
+                        &zeros,
+                        qmax_a,
+                        1.0,
+                        a_en,
+                    )?;
+                    *h = h_out;
+                }
+                frontier += 1;
+            }
+            // optimize window [s, s+w)
+            let total_steps = (job.epochs * calib.len()).max(1);
+            let mut step_idx = 0usize;
+            let mut loss_sum = 0.0f32;
+            let mut loss_n = 0usize;
+            for _epoch in 0..job.epochs {
+                for (bi, _batch) in calib.iter().enumerate() {
+                    // beta anneal 20 -> 2 across the window's steps (Eq. 12)
+                    let frac = step_idx as f32 / total_steps as f32;
+                    let beta = 20.0 - 18.0 * frac;
+                    // Two-phase schedule (the paper's late-phase
+                    // "DeltaW = |DeltaW|" forcing, adapted to the V0
+                    // warm-start): the soft phase trains the rounding
+                    // offsets (A1/A2) on the soft surrogate; the hard phase
+                    // switches the forward to hard rounding and trains the
+                    // step sizes. s_w must NOT train during the soft phase:
+                    // the V0 = frac(W/s_w-at-init) identity makes s_w = init
+                    // a loss attractor there (any movement re-introduces
+                    // soft error), which would pin the scales.
+                    let hard_phase = frac >= 1.0 - job.hard_frac && use_lora > 0.0;
+                    let step_lora = if hard_phase { 0.0 } else { use_lora };
+                    let soft_phase_lora = !hard_phase && use_lora > 0.0;
+                    step_idx += 1;
+
+                    let mut b = Bindings::new();
+                    b.set("h_in", q_hidden[bi].clone());
+                    b.set("target", fp_hidden[s + w][bi].clone());
+                    for (j, blk) in work.blocks[s..s + w].iter().enumerate() {
+                        Self::bind_block_weights(&mut b, j, blk);
+                        Self::bind_qblock(&mut b, j, &qstate[s + j], qmax_a, 1.0, a_en, dense);
+                    }
+                    Self::bind_globals(
+                        &mut b,
+                        step_lora,
+                        beta,
+                        job.gamma_c,
+                        job.l2_weight,
+                        job.kld_weight,
+                    );
+                    let out = self.rt.run(&grad_exec, b.inner())?;
+                    loss_sum += out["loss"].item();
+                    loss_n += 1;
+                    for j in 0..w {
+                        for l in LINEARS {
+                            let g = |p: &str| out.get(&format!("grads.{j}.{l}.{p}")).cloned();
+                            let (g1, g2, gv) = if hard_phase {
+                                (None, None, None)
+                            } else {
+                                (g("a1"), g("a2"), g("v"))
+                            };
+                            let lr_s = if soft_phase_lora { 0.0 } else { job.lr_s_w };
+                            let lq = qstate[s + j].get_mut(l).unwrap();
+                            lq.step(
+                                &g("s_w").ok_or_else(|| anyhow!("missing grad s_w"))?,
+                                g("alpha").map(|t| t.item()).unwrap_or(0.0),
+                                g1.as_ref(),
+                                g2.as_ref(),
+                                gv.as_ref(),
+                                (lr_s, job.lr_alpha, job.lr_lora),
+                                job.rank,
+                                job.rounding,
+                            );
+                            if lr_s > 0.0 {
+                                // the grid moved: re-anchor the rounding
+                                // baseline to the current scales
+                                lq.refresh_v0(&work.blocks[s + j].linears[l]);
+                            }
+                        }
+                    }
+                }
+            }
+            window_losses.push(loss_sum / loss_n.max(1) as f32);
+        }
+
+        // peak optimizer state (paper's "GPU memory" analog)
+        let state_bytes: usize = (0..w)
+            .flat_map(|j| LINEARS.iter().map(move |&l| (j, l)))
+            .map(|(j, l)| qstate[j][l].state_bytes(job.rounding, job.rank))
+            .sum();
+
+        // finalize: bake fake-quantized weights with hardened rounding
+        // (rho anchored to the final scales)
+        for (bi, blk) in work.blocks.iter_mut().enumerate() {
+            for l in LINEARS {
+                let w_cur = blk.linears[l].clone();
+                let lq = qstate[bi].get_mut(l).unwrap();
+                lq.refresh_v0(&w_cur);
+                let rho = lq.rho(job.rounding);
+                let w_t = blk.linear_mut(l);
+                *w_t = quant::finalize_weights(w_t, &lq.s_w, rho.as_ref(), lq.qmax_w);
+            }
+        }
+        Ok((
+            QuantizedModel {
+                params: work,
+                qstate,
+                bits: job.bits.clone(),
+                rounding: job.rounding,
+            },
+            window_losses,
+            state_bytes,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_schedule_covers_all_blocks() {
+        // mirror of the scheduling logic: every block must fall in >= 1 window
+        for l_total in [4usize, 8, 12] {
+            for w in [1usize, 2, 4] {
+                for overlap in 0..w {
+                    let step = w - overlap;
+                    let mut starts: Vec<usize> =
+                        (0..).map(|k| k * step).take_while(|s| s + w <= l_total).collect();
+                    if starts.last().map(|&s| s + w < l_total).unwrap_or(true) {
+                        starts.push(l_total - w);
+                    }
+                    let mut covered = vec![false; l_total];
+                    for &s in &starts {
+                        for c in covered.iter_mut().skip(s).take(w) {
+                            *c = true;
+                        }
+                    }
+                    assert!(
+                        covered.iter().all(|&c| c),
+                        "uncovered blocks at L={l_total} w={w} ov={overlap}: {starts:?}"
+                    );
+                    // monotone non-decreasing starts
+                    assert!(starts.windows(2).all(|p| p[0] <= p[1]));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Learnable quantization state per linear + the Adam optimizer that the
+//! coordinator applies to the gradients coming back from the `win_grad_*`
+//! executables (the L2 graphs compute gradients; L3 owns all state).
+
+use crate::config::RoundingMode;
+use crate::quant::{self, GAMMA, ZETA};
+use crate::tensor::Tensor;
+
+/// V0 with rectified-sigmoid(V0) == frac(W/s_w) — the AdaRound warm-start
+/// (mirrors python model._v0_init).
+pub fn v0_init(w: &Tensor, s_w: &Tensor) -> Tensor {
+    let (k, n) = (w.rows(), w.cols());
+    let mut out = vec![0.0f32; k * n];
+    for i in 0..k {
+        for j in 0..n {
+            let s = s_w.data[j].max(1e-8);
+            let v = w.at2(i, j) / s;
+            let frac = v - v.floor();
+            let p = ((frac - GAMMA) / (ZETA - GAMMA)).clamp(1e-4, 1.0 - 1e-4);
+            out[i * n + j] = (p / (1.0 - p)).ln();
+        }
+    }
+    Tensor::new(vec![k, n], out)
+}
+
+/// Adam moments for one parameter tensor.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u32,
+}
+
+impl Adam {
+    pub fn new(n: usize) -> Self {
+        Self { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    pub fn step(&mut self, param: &mut [f32], grad: &[f32], lr: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.t += 1;
+        let bc1 = 1.0 - B1.powi(self.t as i32);
+        let bc2 = 1.0 - B2.powi(self.t as i32);
+        for ((p, g), (m, v)) in param
+            .iter_mut()
+            .zip(grad)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            *m = B1 * *m + (1.0 - B1) * g;
+            *v = B2 * *v + (1.0 - B2) * g * g;
+            let mh = *m / bc1;
+            let vh = *v / bc2;
+            *p -= lr * mh / (vh.sqrt() + EPS);
+        }
+    }
+}
+
+/// Learnable state for one quantized linear.
+#[derive(Clone, Debug)]
+pub struct LinearQ {
+    pub s_w: Tensor,
+    pub alpha: f32,
+    /// LoRA factors (padded rank R; columns/rows >= `rank` kept at zero).
+    pub a1: Tensor,
+    pub a2: Tensor,
+    /// AdaRound warm-start constant: rho(init) = h(V0) = frac(W / s_w), so
+    /// soft-quantized weights equal the FP weights at step 0 and the LoRA
+    /// product learns a low-rank delta (see python model._rho).
+    pub v0: Tensor,
+    /// Dense rounding matrix (only for RoundingMode::DenseAdaRound).
+    pub v_dense: Option<Tensor>,
+    pub bits_w: u8,
+    pub qmax_w: f32,
+    adam_s: Adam,
+    adam_alpha: Adam,
+    adam_a1: Adam,
+    adam_a2: Adam,
+    adam_v: Option<Adam>,
+}
+
+impl LinearQ {
+    /// Paper init: s_w = max|W_col|/qmax, alpha = 1, A1 ~ N(0, 0.01), A2 = 0
+    /// (rho starts at 0.5). A1's deterministic pseudo-gaussian matches the
+    /// python init in spirit (exact values don't matter — A2 = 0 makes the
+    /// product zero either way).
+    pub fn init(
+        w: &Tensor,
+        bits_w: u8,
+        rank_pad: usize,
+        rank: usize,
+        mode: RoundingMode,
+    ) -> Self {
+        let (fan_in, fan_out) = (w.rows(), w.cols());
+        let qmax_w = crate::config::qmax(bits_w);
+        let s_w = quant::init_scales(w, qmax_w);
+        let mut a1 = Tensor::zeros(&[fan_in, rank_pad]);
+        let mut seed = 0x12345678u64;
+        for (i, v) in a1.data.iter_mut().enumerate() {
+            seed ^= seed >> 12;
+            seed ^= seed << 25;
+            seed ^= seed >> 27;
+            let u = (seed.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32
+                / (1u64 << 24) as f32;
+            let col = i % rank_pad;
+            // effective-rank projection applied at init too
+            *v = if col < rank { (u - 0.5) * 0.02 } else { 0.0 };
+        }
+        let a2 = Tensor::zeros(&[rank_pad, fan_out]);
+        let v_dense = matches!(mode, RoundingMode::DenseAdaRound)
+            .then(|| Tensor::zeros(&[fan_in, fan_out]));
+        let v0 = v0_init(w, &s_w);
+        Self {
+            adam_s: Adam::new(s_w.len()),
+            adam_alpha: Adam::new(1),
+            adam_a1: Adam::new(a1.len()),
+            adam_a2: Adam::new(a2.len()),
+            adam_v: v_dense.as_ref().map(|v| Adam::new(v.len())),
+            s_w,
+            alpha: 1.0,
+            a1,
+            a2,
+            v0,
+            v_dense,
+            bits_w,
+            qmax_w,
+        }
+    }
+
+    /// One optimizer step from executable gradients. `rank` enforces the
+    /// effective LoRA rank by zeroing the padded columns/rows after the
+    /// update (this is how Table 12's rank sweep shares one artifact).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        g_s: &Tensor,
+        g_alpha: f32,
+        g_a1: Option<&Tensor>,
+        g_a2: Option<&Tensor>,
+        g_v: Option<&Tensor>,
+        lrs: (f32, f32, f32),
+        rank: usize,
+        mode: RoundingMode,
+    ) {
+        let (lr_s, lr_alpha, lr_lora) = lrs;
+        self.adam_s.step(&mut self.s_w.data, &g_s.data, lr_s);
+        // keep scales positive
+        for s in self.s_w.data.iter_mut() {
+            *s = s.max(1e-6);
+        }
+        let mut a = [self.alpha];
+        self.adam_alpha.step(&mut a, &[g_alpha], lr_alpha);
+        self.alpha = a[0].clamp(0.05, 2.0);
+        match mode {
+            RoundingMode::Lora => {
+                if let (Some(g1), Some(g2)) = (g_a1, g_a2) {
+                    self.adam_a1.step(&mut self.a1.data, &g1.data, lr_lora);
+                    self.adam_a2.step(&mut self.a2.data, &g2.data, lr_lora);
+                    self.project_rank(rank);
+                }
+            }
+            RoundingMode::DenseAdaRound => {
+                if let (Some(gv), Some(v), Some(ad)) =
+                    (g_v, self.v_dense.as_mut(), self.adam_v.as_mut())
+                {
+                    ad.step(&mut v.data, &gv.data, lr_lora);
+                }
+            }
+            RoundingMode::Nearest => {}
+        }
+    }
+
+    /// Re-derive the warm-start offset from the *current* step sizes.
+    /// s_w training moves the quantization grid, so the frac(W/s_w)
+    /// baseline must follow it — otherwise rounding decisions harden
+    /// against a stale grid and land a full step off for every weight
+    /// whose fractional position crossed 0.5 (measured: ~30% of entries
+    /// after a few scale epochs, ~6 ppl at W4A16 on the `t` model).
+    pub fn refresh_v0(&mut self, w: &Tensor) {
+        self.v0 = v0_init(w, &self.s_w);
+    }
+
+    /// Zero A1 columns >= rank and A2 rows >= rank.
+    pub fn project_rank(&mut self, rank: usize) {
+        let rp = self.a1.cols();
+        if rank >= rp {
+            return;
+        }
+        for i in 0..self.a1.rows() {
+            for c in rank..rp {
+                self.a1.set2(i, c, 0.0);
+            }
+        }
+        for r in rank..rp {
+            for j in 0..self.a2.cols() {
+                self.a2.set2(r, j, 0.0);
+            }
+        }
+    }
+
+    /// Materialize the rounding offsets for finalization:
+    /// rho = h(V0 + A1 @ A2) (or h(V0 + V_dense)).
+    pub fn rho(&self, mode: RoundingMode) -> Option<Tensor> {
+        match mode {
+            RoundingMode::Nearest => None,
+            RoundingMode::Lora => {
+                let mut v = self.a1.matmul(&self.a2);
+                v.zip_mut(&self.v0, |d, o| d + o);
+                Some(v.map(quant::rect_sigmoid))
+            }
+            RoundingMode::DenseAdaRound => self.v_dense.as_ref().map(|v| {
+                let mut vv = v.clone();
+                vv.zip_mut(&self.v0, |d, o| d + o);
+                vv.map(quant::rect_sigmoid)
+            }),
+        }
+    }
+
+    /// Learnable + optimizer bytes (Tables 3b/9 memory accounting).
+    pub fn state_bytes(&self, mode: RoundingMode, rank: usize) -> usize {
+        let (fi, fo) = (self.a1.rows(), self.a2.cols());
+        quant::learnable_bytes(
+            fi,
+            fo,
+            rank,
+            match mode {
+                RoundingMode::Nearest => quant::RoundBytes::Nearest,
+                RoundingMode::DenseAdaRound => quant::RoundBytes::Dense,
+                RoundingMode::Lora => quant::RoundBytes::Lora(rank),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut p = vec![5.0f32];
+        let mut a = Adam::new(1);
+        for _ in 0..500 {
+            let g = vec![2.0 * p[0]];
+            a.step(&mut p, &g, 0.05);
+        }
+        assert!(p[0].abs() < 0.05, "ended at {}", p[0]);
+    }
+
+    #[test]
+    fn init_matches_paper() {
+        let w = Tensor::new(vec![4, 2], vec![0.7, -0.1, 0.2, 0.3, -0.7, 0.0, 0.1, 0.05]);
+        let q = LinearQ::init(&w, 4, 8, 5, RoundingMode::Lora);
+        assert!((q.s_w.data[0] - 0.1).abs() < 1e-6); // 0.7/7
+        assert_eq!(q.alpha, 1.0);
+        assert!(q.a2.data.iter().all(|&v| v == 0.0));
+        // padded columns zero
+        for i in 0..4 {
+            for c in 5..8 {
+                assert_eq!(q.a1.at2(i, c), 0.0);
+            }
+        }
+        assert!(q.v_dense.is_none());
+    }
+
+    #[test]
+    fn rank_projection_enforced_after_steps() {
+        let w = Tensor::full(&[6, 3], 0.4);
+        let mut q = LinearQ::init(&w, 4, 8, 2, RoundingMode::Lora);
+        let g1 = Tensor::full(&[6, 8], 0.1);
+        let g2 = Tensor::full(&[8, 3], 0.1);
+        let gs = Tensor::zeros(&[3]);
+        for _ in 0..3 {
+            q.step(&gs, 0.0, Some(&g1), Some(&g2), None, (0.0, 0.0, 1e-2), 2, RoundingMode::Lora);
+        }
+        for i in 0..6 {
+            for c in 2..8 {
+                assert_eq!(q.a1.at2(i, c), 0.0);
+            }
+        }
+        for r in 2..8 {
+            for j in 0..3 {
+                assert_eq!(q.a2.at2(r, j), 0.0);
+            }
+        }
+        // active part moved
+        assert!(q.a2.at2(0, 0) != 0.0);
+    }
+
+    #[test]
+    fn scales_stay_positive() {
+        let w = Tensor::full(&[2, 2], 0.01);
+        let mut q = LinearQ::init(&w, 4, 8, 5, RoundingMode::Nearest);
+        let g = Tensor::full(&[2], 100.0);
+        for _ in 0..50 {
+            q.step(&g, 0.0, None, None, None, (0.1, 0.0, 0.0), 5, RoundingMode::Nearest);
+        }
+        assert!(q.s_w.data.iter().all(|&s| s >= 1e-6));
+    }
+
+    #[test]
+    fn dense_mode_allocates_v() {
+        // realistic fan-in/out: LoRA's (fi+fo)*r << dense fi*fo
+        let w = Tensor::full(&[128, 128], 0.2);
+        let q = LinearQ::init(&w, 2, 8, 5, RoundingMode::DenseAdaRound);
+        assert!(q.v_dense.is_some());
+        assert!(q.state_bytes(RoundingMode::DenseAdaRound, 5)
+            > 10 * q.state_bytes(RoundingMode::Lora, 5));
+    }
+}

@@ -1,0 +1,181 @@
+//! GPTQ baseline (Frantar et al. 2022): Hessian-aware column-sequential
+//! weight quantization with error compensation, driven by the calibration
+//! activations captured through the `capture_*` executable.
+//!
+//! Layout note: our linears are `W[in, out]` with per-*output*-channel
+//! scales, so GPTQ walks the *input* index `i`, quantizing the row `W[i, :]`
+//! and propagating the compensated error to rows `j > i` via the Cholesky
+//! factor of the inverse Hessian `H^{-1}`, `H = X^T X + lambda I`.
+
+use anyhow::Result;
+
+use crate::linalg::{gram_accumulate, Mat};
+use crate::quant::{init_scales, EPS};
+use crate::tensor::Tensor;
+
+/// Accumulates the per-linear Gram matrix `X^T X` over calibration batches.
+pub struct GptqHessian {
+    pub gram: Mat,
+    pub rows_seen: usize,
+}
+
+impl GptqHessian {
+    pub fn new(fan_in: usize) -> Self {
+        Self { gram: Mat::zeros(fan_in), rows_seen: 0 }
+    }
+
+    pub fn accumulate(&mut self, x: &Tensor) {
+        assert_eq!(x.cols(), self.gram.n);
+        gram_accumulate(&mut self.gram, &x.data, x.cols());
+        self.rows_seen += x.rows();
+    }
+}
+
+/// GPTQ-quantize one linear in place. Returns the per-output-channel scales
+/// used (callers store them for eval-time bookkeeping).
+///
+/// `percdamp`-style damping: `lambda = damp * mean(diag(H))` (GPTQ default
+/// 0.01) keeps the Cholesky stable on rank-deficient calibration sets.
+pub fn gptq_quantize(w: &mut Tensor, hessian: &GptqHessian, qmax: f32, damp: f64) -> Result<Tensor> {
+    let k = w.rows();
+    let n = w.cols();
+    assert_eq!(k, hessian.gram.n);
+
+    let scales = init_scales(w, qmax);
+    let (lo, hi) = (-qmax - 1.0, qmax);
+
+    let mut h = hessian.gram.clone();
+    // dead inputs (never activated) would make H singular: give them unit
+    // curvature so their weights quantize independently.
+    for i in 0..k {
+        if h.at(i, i) == 0.0 {
+            h.set(i, i, 1.0);
+        }
+    }
+    let lambda = damp * h.mean_diag().max(1e-12);
+    h.add_diag(lambda);
+
+    // U = chol(H^{-1})^T, upper-triangular: d_i = U[i,i], update row U[i, j>i]
+    let hinv = h.spd_inverse()?;
+    let l = hinv.cholesky()?;
+
+    let mut err = vec![0.0f32; n];
+    for i in 0..k {
+        let d = l.at(i, i) as f32; // == U[i,i]
+        for c in 0..n {
+            let s = scales.data[c].max(EPS);
+            let v = w.at2(i, c);
+            let q = (v / s).round().clamp(lo, hi) * s;
+            w.set2(i, c, q);
+            err[c] = (v - q) / d;
+        }
+        // propagate compensated error to the not-yet-quantized rows
+        for j in i + 1..k {
+            let f = l.at(j, i) as f32; // == U[i,j]
+            if f == 0.0 {
+                continue;
+            }
+            let row = w.row_mut(j);
+            for (rv, &e) in row.iter_mut().zip(&err) {
+                *rv -= f * e;
+            }
+        }
+    }
+    Ok(scales)
+}
+
+/// Plain RTN on the same layout — the degenerate GPTQ (no compensation),
+/// used both as the Table-1 "RTN" baseline and in unit tests.
+pub fn rtn_quantize(w: &mut Tensor, qmax: f32) -> Tensor {
+    let scales = init_scales(w, qmax);
+    let q = crate::quant::fake_quant_rtn(w, &scales, qmax);
+    *w = q;
+    scales
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift_data(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s >> 12;
+                s ^= s << 25;
+                s ^= s >> 27;
+                let u = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 40) as f32 / (1u64 << 24) as f32;
+                (u - 0.5) * 2.0 * scale
+            })
+            .collect()
+    }
+
+    fn setup(k: usize, n: usize, rows: usize) -> (Tensor, GptqHessian, Tensor) {
+        let w = Tensor::new(vec![k, n], xorshift_data(k * n, 7, 0.5));
+        let x = Tensor::new(vec![rows, k], xorshift_data(rows * k, 99, 1.0));
+        let mut h = GptqHessian::new(k);
+        h.accumulate(&x);
+        (w, h, x)
+    }
+
+    fn output_mse(x: &Tensor, w_fp: &Tensor, w_q: &Tensor) -> f32 {
+        let y1 = x.matmul(w_fp);
+        let y2 = x.matmul(w_q);
+        let mut e = 0.0;
+        for (a, b) in y1.data.iter().zip(&y2.data) {
+            e += (a - b) * (a - b);
+        }
+        e / y1.data.len() as f32
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_output_mse() {
+        let (w0, h, x) = setup(24, 16, 256);
+        let mut w_rtn = w0.clone();
+        rtn_quantize(&mut w_rtn, 1.0); // 2-bit: plenty of error to shuffle
+        let mut w_gptq = w0.clone();
+        gptq_quantize(&mut w_gptq, &h, 1.0, 0.01).unwrap();
+        let e_rtn = output_mse(&x, &w0, &w_rtn);
+        let e_gptq = output_mse(&x, &w0, &w_gptq);
+        assert!(
+            e_gptq < e_rtn,
+            "gptq {e_gptq} should beat rtn {e_rtn} on calibration data"
+        );
+    }
+
+    #[test]
+    fn gptq_outputs_on_grid() {
+        let (mut w, h, _x) = setup(12, 8, 64);
+        let scales = gptq_quantize(&mut w, &h, 7.0, 0.01).unwrap();
+        for i in 0..w.rows() {
+            for c in 0..w.cols() {
+                let lev = w.at2(i, c) / scales.data[c].max(EPS);
+                assert!((lev - lev.round()).abs() < 1e-3, "off-grid at {i},{c}: {lev}");
+                assert!(lev.round() >= -8.0 && lev.round() <= 7.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_dead_inputs() {
+        let k = 10;
+        let mut w = Tensor::new(vec![k, 4], xorshift_data(k * 4, 3, 0.3));
+        // activations never touch input 5
+        let mut x = Tensor::new(vec![128, k], xorshift_data(128 * k, 11, 1.0));
+        for r in 0..128 {
+            x.set2(r, 5, 0.0);
+        }
+        let mut h = GptqHessian::new(k);
+        h.accumulate(&x);
+        gptq_quantize(&mut w, &h, 7.0, 0.01).unwrap();
+        assert!(w.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn high_bits_near_lossless() {
+        let (w0, h, x) = setup(16, 8, 128);
+        let mut w = w0.clone();
+        gptq_quantize(&mut w, &h, 127.0, 0.01).unwrap();
+        assert!(output_mse(&x, &w0, &w) < 1e-4);
+    }
+}

@@ -1,0 +1,260 @@
+//! Finite-difference dependency analysis — reproduces the paper's Figure 1:
+//! (a) intra-layer weight Hessian block of one linear,
+//! (b) inter-layer Hessian of the loss wrt per-block scale multipliers,
+//! (c) the loss surface over joint scale perturbations of two adjacent
+//!     blocks.
+//!
+//! The probe function is the quantized-model reconstruction loss (MSE of
+//! final hidden states vs the FP model) on a fixed calibration batch, with
+//! per-block scale multipliers applied to every `s_w` in the block — the
+//! same quantity the paper visualizes. Off-diagonal growth as bits shrink
+//! is the paper's motivating observation (Sec. 2).
+
+use anyhow::Result;
+
+use crate::calib;
+use crate::config::{BitSpec, RoundingMode};
+use crate::coordinator::Pipeline;
+use crate::quant::LINEARS;
+use crate::tensor::Tensor;
+
+pub struct HessianProbe<'p, 'a> {
+    pipe: &'p Pipeline<'a>,
+    h0: Tensor,
+    target: Tensor,
+    bits: BitSpec,
+}
+
+impl<'p, 'a> HessianProbe<'p, 'a> {
+    pub fn new(pipe: &'p Pipeline<'a>, bits: BitSpec) -> Result<Self> {
+        let batch = &calib::calibration(pipe.cfg.batch, pipe.cfg.batch, pipe.cfg.seq)[0];
+        let x = batch.inputs();
+        let h0 = pipe.fp.embed_tokens(&x.data, batch.batch, batch.seq);
+        // FP target: final hidden
+        let mut target = h0.clone();
+        let qs = pipe.init_qstate(&pipe.fp, &BitSpec::new(8, 16), 5, RoundingMode::Nearest);
+        let fwd = format!("win_fwd_w1_{}", pipe.cfg_name);
+        for k in 0..pipe.cfg.n_layers {
+            let zeros = Tensor::zeros(&target.dims);
+            let (h, _) = pipe.window_forward(
+                &fwd,
+                &pipe.fp.blocks[k..k + 1],
+                &qs[k..k + 1],
+                &target,
+                &zeros,
+                32767.0,
+                0.0,
+                0.0,
+            )?;
+            target = h;
+        }
+        Ok(Self { pipe, h0, target, bits })
+    }
+
+    /// Loss with per-block scale multipliers: block k's s_w scaled by
+    /// `mults[k]` (1.0 = learned/init scales).
+    pub fn loss_with_scale_mults(&self, mults: &[f32]) -> Result<f32> {
+        let pipe = self.pipe;
+        let mut qs = pipe.init_qstate(&pipe.fp, &self.bits, 5, RoundingMode::Nearest);
+        for (k, m) in mults.iter().enumerate() {
+            if (m - 1.0).abs() > 1e-12 {
+                for l in LINEARS {
+                    let lq = qs[k].get_mut(l).unwrap();
+                    for s in lq.s_w.data.iter_mut() {
+                        *s *= m;
+                    }
+                }
+            }
+        }
+        let fwd = format!("win_fwd_w1_{}", pipe.cfg_name);
+        let mut h = self.h0.clone();
+        for k in 0..pipe.cfg.n_layers {
+            let zeros = Tensor::zeros(&h.dims);
+            let (h_out, _) = pipe.window_forward(
+                &fwd,
+                &pipe.fp.blocks[k..k + 1],
+                &qs[k..k + 1],
+                &h,
+                &zeros,
+                self.bits.qmax_a(),
+                1.0,
+                if self.bits.act_enabled() { 1.0 } else { 0.0 },
+            )?;
+            h = h_out;
+        }
+        let mut mse = 0.0f64;
+        for (a, b) in h.data.iter().zip(&self.target.data) {
+            let d = (a - b) as f64;
+            mse += d * d;
+        }
+        Ok((mse / h.data.len() as f64) as f32)
+    }
+
+    /// (b): full inter-block scale Hessian via central finite differences.
+    pub fn inter_block_hessian(&self, eps: f32) -> Result<Vec<Vec<f32>>> {
+        let n = self.pipe.cfg.n_layers;
+        let mut h = vec![vec![0.0f32; n]; n];
+        let base = vec![1.0f32; n];
+        for i in 0..n {
+            for j in i..n {
+                let v = if i == j {
+                    // d2f/dxi2 = (f(+e) - 2 f(0) + f(-e)) / e^2
+                    let mut p = base.clone();
+                    p[i] = 1.0 + eps;
+                    let fp = self.loss_with_scale_mults(&p)?;
+                    p[i] = 1.0 - eps;
+                    let fm = self.loss_with_scale_mults(&p)?;
+                    let f0 = self.loss_with_scale_mults(&base)?;
+                    (fp - 2.0 * f0 + fm) / (eps * eps)
+                } else {
+                    let mut f = [0.0f32; 4];
+                    for (idx, (si, sj)) in
+                        [(1.0, 1.0), (1.0, -1.0), (-1.0, 1.0), (-1.0, -1.0)].iter().enumerate()
+                    {
+                        let mut p = base.clone();
+                        p[i] = 1.0 + si * eps;
+                        p[j] = 1.0 + sj * eps;
+                        f[idx] = self.loss_with_scale_mults(&p)?;
+                    }
+                    (f[0] - f[1] - f[2] + f[3]) / (4.0 * eps * eps)
+                };
+                h[i][j] = v;
+                h[j][i] = v;
+            }
+        }
+        Ok(h)
+    }
+
+    /// (c): loss grid over joint scale multipliers of two blocks.
+    pub fn pairwise_loss_surface(
+        &self,
+        block_a: usize,
+        block_b: usize,
+        grid: &[f32],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = self.pipe.cfg.n_layers;
+        let mut out = Vec::with_capacity(grid.len());
+        for &ma in grid {
+            let mut row = Vec::with_capacity(grid.len());
+            for &mb in grid {
+                let mut p = vec![1.0f32; n];
+                p[block_a] = ma;
+                p[block_b] = mb;
+                row.push(self.loss_with_scale_mults(&p)?);
+            }
+            out.push(row);
+        }
+        Ok(out)
+    }
+
+    /// (a): intra-layer Hessian over sampled weight entries of one linear.
+    /// Probes block-local reconstruction loss (cheaper, same structure).
+    pub fn intra_layer_hessian(
+        &self,
+        block: usize,
+        linear: &str,
+        n_entries: usize,
+        eps: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let pipe = self.pipe;
+        let fwd = format!("win_fwd_w1_{}", pipe.cfg_name);
+        // block-local FP target
+        let qs0 = pipe.init_qstate(&pipe.fp, &BitSpec::new(8, 16), 5, RoundingMode::Nearest);
+        let zeros = Tensor::zeros(&self.h0.dims);
+        let (target, _) = pipe.window_forward(
+            &fwd,
+            &pipe.fp.blocks[block..block + 1],
+            &qs0[block..block + 1],
+            &self.h0,
+            &zeros,
+            32767.0,
+            0.0,
+            0.0,
+        )?;
+        let w = &pipe.fp.blocks[block].linears[linear];
+        // strided entry sample across the matrix
+        let stride = (w.len() / n_entries).max(1);
+        let idxs: Vec<usize> = (0..n_entries).map(|i| (i * stride) % w.len()).collect();
+
+        let loss = |deltas: &[(usize, f32)]| -> Result<f32> {
+            let mut blk = pipe.fp.blocks[block].clone();
+            {
+                let wm = blk.linear_mut(linear);
+                for &(ix, d) in deltas {
+                    wm.data[ix] += d;
+                }
+            }
+            let mut qsb = pipe.init_qstate(&pipe.fp, &self.bits, 5, RoundingMode::Nearest);
+            let (h, _) = pipe.window_forward(
+                &fwd,
+                std::slice::from_ref(&blk),
+                &qsb[block..block + 1],
+                &self.h0,
+                &Tensor::zeros(&self.h0.dims),
+                self.bits.qmax_a(),
+                1.0,
+                if self.bits.act_enabled() { 1.0 } else { 0.0 },
+            )?;
+            let _ = &mut qsb;
+            let mut mse = 0.0f64;
+            for (a, b) in h.data.iter().zip(&target.data) {
+                let d = (a - b) as f64;
+                mse += d * d;
+            }
+            Ok((mse / h.data.len() as f64) as f32)
+        };
+
+        let n = idxs.len();
+        let mut hess = vec![vec![0.0f32; n]; n];
+        let f0 = loss(&[])?;
+        for a in 0..n {
+            for b in a..n {
+                let v = if a == b {
+                    let fp = loss(&[(idxs[a], eps)])?;
+                    let fm = loss(&[(idxs[a], -eps)])?;
+                    (fp - 2.0 * f0 + fm) / (eps * eps)
+                } else {
+                    let fpp = loss(&[(idxs[a], eps), (idxs[b], eps)])?;
+                    let fpm = loss(&[(idxs[a], eps), (idxs[b], -eps)])?;
+                    let fmp = loss(&[(idxs[a], -eps), (idxs[b], eps)])?;
+                    let fmm = loss(&[(idxs[a], -eps), (idxs[b], -eps)])?;
+                    (fpp - fpm - fmp + fmm) / (4.0 * eps * eps)
+                };
+                hess[a][b] = v;
+                hess[b][a] = v;
+            }
+        }
+        Ok(hess)
+    }
+}
+
+/// Off-diagonal mass ratio: sum |H_ij| (i != j) / sum |H_ii| — the summary
+/// statistic behind "dependencies intensify at low bits".
+pub fn offdiag_ratio(h: &[Vec<f32>]) -> f64 {
+    let n = h.len();
+    let mut diag = 0.0f64;
+    let mut off = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                diag += h[i][j].abs() as f64;
+            } else {
+                off += h[i][j].abs() as f64;
+            }
+        }
+    }
+    off / diag.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offdiag_ratio_known() {
+        let h = vec![vec![2.0, 1.0], vec![1.0, 2.0]];
+        assert!((offdiag_ratio(&h) - 0.5).abs() < 1e-9);
+        let d = vec![vec![3.0, 0.0], vec![0.0, 3.0]];
+        assert_eq!(offdiag_ratio(&d), 0.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! # CBQ: Cross-Block Quantization for Large Language Models
+//!
+//! Production-quality reproduction of CBQ (ICLR 2025) as a three-layer
+//! Rust + JAX + Pallas system. This crate is **Layer 3**: the quantization
+//! coordinator. It loads AOT-compiled HLO artifacts (lowered once, at build
+//! time, from the JAX/Pallas layers in `python/`) and runs the entire PTQ
+//! pipeline — calibration, coarse-to-fine pre-processing, cross-block
+//! sliding-window reconstruction with LoRA-Rounding, baselines (RTN, GPTQ,
+//! SmoothQuant/OS/percentile/OMSE, dense AdaRound), and evaluation — with
+//! Python never on the execution path.
+//!
+//! ## Quick tour
+//! - [`runtime`] — PJRT client + manifest-driven executable registry.
+//! - [`coordinator`] — the paper's contribution: CBD sliding windows
+//!   (Sec. 3.1), LoRA-Rounding (Sec. 3.2), Adam, schedules.
+//! - [`cfp`] — coarse-to-fine outlier pre-processing (Sec. 3.4, Alg. 1).
+//! - [`gptq`] — GPTQ baseline on captured calibration activations.
+//! - [`quant`] — shared fake-quant math (bit-exact with the L1 kernels).
+//! - [`eval`] — perplexity + zero-shot choice tasks.
+//! - [`hessian`] — finite-difference dependency analysis (paper Fig. 1).
+//!
+//! ```no_run
+//! use cbq::prelude::*;
+//! use cbq::calib::corpus::Style;
+//! let art = Artifacts::load("artifacts")?;
+//! let rt = Runtime::new(&art)?;
+//! let mut pipe = Pipeline::new(&art, &rt, "t")?;
+//! let (model, summary) = pipe.run(&QuantJob::cbq(BitSpec::w4a4()))?;
+//! println!("ppl: {:.2}", pipe.perplexity(&model, Style::C4, 8)?);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod calib;
+pub mod cfp;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod gptq;
+pub mod hessian;
+pub mod json;
+pub mod linalg;
+pub mod model_state;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+
+pub mod prelude {
+    pub use crate::config::{BitSpec, Method, PreprocMethod, QuantJob};
+    pub use crate::coordinator::{Pipeline, QuantSummary};
+    pub use crate::runtime::{Artifacts, Runtime};
+    pub use crate::tensor::Tensor;
+}

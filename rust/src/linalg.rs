@@ -1,0 +1,199 @@
+//! Small dense linear algebra substrate (f64 for stability) — what GPTQ's
+//! Hessian inverse needs: Cholesky factorization, triangular solves, and a
+//! damped inverse. Sizes here are fan-in x fan-in (<= 384), so simple O(n^3)
+//! loops are more than fast enough and keep the crate dependency-free.
+
+use anyhow::{ensure, Result};
+
+/// Row-major square f64 matrix.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+    }
+
+    pub fn add_diag(&mut self, v: f64) {
+        for i in 0..self.n {
+            self.data[i * self.n + i] += v;
+        }
+    }
+
+    pub fn mean_diag(&self) -> f64 {
+        (0..self.n).map(|i| self.at(i, i)).sum::<f64>() / self.n as f64
+    }
+
+    /// In-place lower Cholesky: returns L with `L L^T = A`. Fails on
+    /// non-positive-definite input.
+    pub fn cholesky(&self) -> Result<Mat> {
+        let n = self.n;
+        let mut l = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.at(i, j);
+                for k in 0..j {
+                    s -= l.at(i, k) * l.at(j, k);
+                }
+                if i == j {
+                    ensure!(s > 0.0, "cholesky: not PD at {i} (pivot {s})");
+                    l.set(i, j, s.sqrt());
+                } else {
+                    l.set(i, j, s / l.at(j, j));
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// `A^{-1}` via Cholesky (A symmetric positive definite).
+    pub fn spd_inverse(&self) -> Result<Mat> {
+        let l = self.cholesky()?;
+        let n = self.n;
+        let mut inv = Mat::zeros(n);
+        // solve A x = e_j for each basis vector
+        for j in 0..n {
+            let mut y = vec![0.0f64; n];
+            // forward L y = e_j
+            for i in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..i {
+                    s -= l.at(i, k) * y[k];
+                }
+                y[i] = s / l.at(i, i);
+            }
+            // backward L^T x = y
+            for i in (0..n).rev() {
+                let mut s = y[i];
+                for k in i + 1..n {
+                    s -= l.at(k, i) * inv.at(k, j);
+                }
+                inv.set(i, j, s / l.at(i, i));
+            }
+        }
+        Ok(inv)
+    }
+
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.data[i * n + j] += a * b.at(k, j);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Gram matrix `X^T X` accumulated over row-batches of activations
+/// (the GPTQ Hessian `H = 2 X X^T` up to a constant that cancels).
+pub fn gram_accumulate(h: &mut Mat, x_rows: &[f32], cols: usize) {
+    debug_assert_eq!(x_rows.len() % cols, 0);
+    for row in x_rows.chunks_exact(cols) {
+        for i in 0..cols {
+            let xi = row[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in 0..cols {
+                h.data[i * cols + j] += xi * row[j] as f64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize) -> Mat {
+        // A = B B^T + n I with B deterministic
+        let mut b = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                b.set(i, j, ((i * 31 + j * 17) % 13) as f64 / 13.0 - 0.4);
+            }
+        }
+        let mut a = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b.at(i, k) * b.at(j, k);
+                }
+                a.set(i, j, s);
+            }
+        }
+        a.add_diag(n as f64);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = spd(8);
+        let l = a.cholesky().unwrap();
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += l.at(i, k) * l.at(j, k);
+                }
+                assert!((s - a.at(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd(12);
+        let inv = a.spd_inverse().unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        a.set(2, 2, -1.0);
+        assert!(a.cholesky().is_err());
+    }
+
+    #[test]
+    fn gram_matches_manual() {
+        let mut h = Mat::zeros(2);
+        gram_accumulate(&mut h, &[1.0, 2.0, 3.0, 4.0], 2);
+        // rows (1,2),(3,4): X^T X = [[10,14],[14,20]]
+        assert_eq!(h.data, vec![10.0, 14.0, 14.0, 20.0]);
+    }
+}

@@ -1,0 +1,199 @@
+//! `cbq` — the CBQ quantization launcher.
+//!
+//! Subcommands:
+//!   quantize  run a full PTQ job (method x bits x preproc x CBD config)
+//!             and report perplexity vs the FP model
+//!   eval      evaluate the FP model (sanity baseline)
+//!   zeroshot  quantize then run the zero-shot task suite
+//!   hessian   finite-difference dependency analysis (paper Fig. 1)
+//!   info      print the artifact manifest summary
+//!
+//! Flag parsing is hand-rolled (`cbq::cli`) — the build environment vendors
+//! only the xla crate's dependency closure, so no clap.
+
+use anyhow::{bail, Result};
+
+use cbq::calib::corpus::Style;
+use cbq::cli::Args;
+use cbq::config::{BitSpec, PreprocMethod, QuantJob, RoundingMode};
+use cbq::coordinator::Pipeline;
+use cbq::hessian::{offdiag_ratio, HessianProbe};
+use cbq::report::{fmt_f, heatmap, Table};
+use cbq::runtime::{Artifacts, Runtime};
+
+const USAGE: &str = "\
+cbq — Cross-Block Quantization for LLMs (ICLR 2025 reproduction)
+
+USAGE: cbq [--artifacts DIR] <COMMAND> [flags]
+
+COMMANDS
+  info                         artifact manifest summary
+  eval      --model s          FP perplexity baseline
+  quantize  --model s --method cbq --w 4 --a 16 [--star]
+            --preproc cfp|none|omse|percentile|os|smoothquant|cfp-act
+            --window 2 --overlap 1 --epochs 3 --rank 5
+            --calib 32 --eval-batches 16
+  zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
+  hessian   --model t --bits 8,4,2
+";
+
+fn parse_method(args: &Args, bits: BitSpec) -> Result<QuantJob> {
+    Ok(match args.get("method").unwrap_or("cbq") {
+        "rtn" => QuantJob::rtn(bits),
+        "gptq" => QuantJob::gptq(bits),
+        "cbq" => QuantJob::cbq(bits),
+        "omniquant" => QuantJob::omniquant_like(bits),
+        m => bail!("unknown method `{m}`"),
+    })
+}
+
+fn parse_preproc(s: &str) -> Result<PreprocMethod> {
+    Ok(match s {
+        "none" => PreprocMethod::None,
+        "omse" => PreprocMethod::Omse,
+        "percentile" => PreprocMethod::Percentile,
+        "os" => PreprocMethod::OutlierSuppression,
+        "smoothquant" => PreprocMethod::SmoothQuant,
+        "cfp-act" => PreprocMethod::CfpActivation,
+        "cfp" => PreprocMethod::CfpFull,
+        p => bail!("unknown preproc `{p}`"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let Some(cmd) = args.command() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let art = match args.get("artifacts") {
+        Some(p) => Artifacts::load(p)?,
+        None => Artifacts::discover()?,
+    };
+    let rt = Runtime::new(&art)?;
+
+    match cmd {
+        "info" => {
+            println!("artifacts: {:?}", art.dir);
+            let mut t =
+                Table::new("configs", &["name", "d_model", "layers", "heads", "ffn", "windows"]);
+            for (name, c) in &art.manifest.configs {
+                t.row(&[
+                    name.clone(),
+                    c.d_model.to_string(),
+                    c.n_layers.to_string(),
+                    c.n_heads.to_string(),
+                    c.d_ffn.to_string(),
+                    format!("{:?}", art.manifest.windows.get(name).cloned().unwrap_or_default()),
+                ]);
+            }
+            t.print();
+            println!("\n{} executables", art.manifest.executables.len());
+        }
+        "eval" => {
+            let model = args.get("model").unwrap_or("s");
+            let n = args.get_usize("eval-batches", 16)?;
+            let pipe = Pipeline::new(&art, &rt, model)?;
+            let fp = pipe.fp_model();
+            let c4 = pipe.perplexity(&fp, Style::C4, n)?;
+            let wiki = pipe.perplexity(&fp, Style::Wiki, n)?;
+            println!("FP {model}: ppl(c4) = {c4:.3}, ppl(wiki) = {wiki:.3}");
+        }
+        "quantize" => {
+            let model = args.get("model").unwrap_or("s");
+            let mut pipe = Pipeline::new(&art, &rt, model)?;
+            let n_layers = pipe.cfg.n_layers;
+            let bits = if args.flag("star") {
+                BitSpec::w2a16_star(n_layers)
+            } else {
+                BitSpec::new(args.get_usize("w", 4)? as u8, args.get_usize("a", 16)? as u8)
+            };
+            let mut job = parse_method(&args, bits)?;
+            if let Some(p) = args.get("preproc") {
+                job.preproc = parse_preproc(p)?;
+            }
+            job.window = args.get_usize("window", job.window)?;
+            job.overlap = args.get_usize("overlap", job.overlap)?;
+            job.epochs = args.get_usize("epochs", job.epochs)?;
+            job.calib_sequences = args.get_usize("calib", 32)?;
+            let rank = args.get_usize("rank", job.rank)?;
+            if rank == 0 {
+                job.rounding = RoundingMode::Nearest;
+            } else {
+                job.rank = rank;
+            }
+            let eval_batches = args.get_usize("eval-batches", 16)?;
+            println!("running {} on model {model}...", job.label());
+            let (qm, summary) = pipe.run(&job)?;
+            let fp = pipe.fp_model();
+            let mut t = Table::new(
+                format!("{} (quantized in {:.1}s)", job.label(), summary.quant_seconds),
+                &["model", "ppl c4", "ppl wiki"],
+            );
+            let c4 = pipe.perplexity(&qm, Style::C4, eval_batches)?;
+            let wiki = pipe.perplexity(&qm, Style::Wiki, eval_batches)?;
+            let fc4 = pipe.perplexity(&fp, Style::C4, eval_batches)?;
+            let fwiki = pipe.perplexity(&fp, Style::Wiki, eval_batches)?;
+            t.row(&["FP".into(), fmt_f(fc4, 3), fmt_f(fwiki, 3)]);
+            t.row(&[job.label(), fmt_f(c4, 3), fmt_f(wiki, 3)]);
+            t.print();
+            if !summary.window_losses.is_empty() {
+                println!("window losses: {:?}", summary.window_losses);
+            }
+            let stats = rt.stats();
+            println!(
+                "runtime: {} executions, {:.1}ms exec, {:.1}ms compile",
+                stats.executions, stats.execute_ms, stats.compile_ms
+            );
+        }
+        "zeroshot" => {
+            let model = args.get("model").unwrap_or("s");
+            let mut pipe = Pipeline::new(&art, &rt, model)?;
+            let bits =
+                BitSpec::new(args.get_usize("w", 4)? as u8, args.get_usize("a", 16)? as u8);
+            let mut job = parse_method(&args, bits)?;
+            job.calib_sequences = args.get_usize("calib", 32)?;
+            let items = args.get_usize("items", 32)?;
+            let (qm, _) = pipe.run(&job)?;
+            let fp = pipe.fp_model();
+            let rq = pipe.zero_shot(&qm, items)?;
+            let rf = pipe.zero_shot(&fp, items)?;
+            let mut t = Table::new("zero-shot accuracy", &["task", "FP", &job.label()]);
+            for (k, v) in &rf.accuracy {
+                t.row(&[k.clone(), fmt_f(*v * 100.0, 2), fmt_f(rq.accuracy[k] * 100.0, 2)]);
+            }
+            t.row(&[
+                "Mutual MRR/R@1/R@2".into(),
+                format!(
+                    "{}/{}/{}",
+                    fmt_f(rf.mrr * 100.0, 1),
+                    fmt_f(rf.recall1 * 100.0, 1),
+                    fmt_f(rf.recall2 * 100.0, 1)
+                ),
+                format!(
+                    "{}/{}/{}",
+                    fmt_f(rq.mrr * 100.0, 1),
+                    fmt_f(rq.recall1 * 100.0, 1),
+                    fmt_f(rq.recall2 * 100.0, 1)
+                ),
+            ]);
+            t.print();
+        }
+        "hessian" => {
+            let model = args.get("model").unwrap_or("t");
+            let pipe = Pipeline::new(&art, &rt, model)?;
+            for b in args.get("bits").unwrap_or("8,4,2").split(',') {
+                let wb: u8 = b.trim().parse()?;
+                let probe = HessianProbe::new(&pipe, BitSpec::new(wb, 16))?;
+                let h = probe.inter_block_hessian(0.05)?;
+                println!("{}", heatmap(&format!("inter-block scale Hessian, W{wb}"), &h));
+                println!("off-diagonal mass ratio @ W{wb}: {:.4}", offdiag_ratio(&h));
+            }
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command `{other}`");
+        }
+    }
+    Ok(())
+}

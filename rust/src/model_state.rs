@@ -1,0 +1,153 @@
+//! Host-side model parameter state: the weights the coordinator owns,
+//! pre-processes (CFP / SmoothQuant / OS / truncation), quantizes and feeds
+//! to the AOT executables.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::quant::LINEARS;
+use crate::runtime::ModelCfg;
+use crate::tensor::Tensor;
+
+/// One transformer block's parameters.
+#[derive(Clone, Debug)]
+pub struct BlockParams {
+    pub attn_norm: Tensor,
+    pub mlp_norm: Tensor,
+    /// wq, wk, wv, wo, wgate, wup, wdown — keyed by name.
+    pub linears: BTreeMap<String, Tensor>,
+}
+
+impl BlockParams {
+    pub fn linear(&self, name: &str) -> &Tensor {
+        &self.linears[name]
+    }
+
+    pub fn linear_mut(&mut self, name: &str) -> &mut Tensor {
+        self.linears.get_mut(name).unwrap()
+    }
+}
+
+/// Full model parameters (FP master copy + a mutable working copy during
+/// pre-processing/quantization).
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub embed: Tensor,
+    pub final_norm: Tensor,
+    pub head: Tensor,
+    pub blocks: Vec<BlockParams>,
+}
+
+impl ModelParams {
+    pub fn from_tensors(map: &BTreeMap<String, Tensor>, cfg: &ModelCfg) -> Result<Self> {
+        let get = |k: &str| -> Result<Tensor> {
+            map.get(k).cloned().ok_or_else(|| anyhow!("missing weight {k}"))
+        };
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let mut linears = BTreeMap::new();
+            for l in LINEARS {
+                linears.insert(l.to_string(), get(&format!("blocks.{i}.{l}"))?);
+            }
+            blocks.push(BlockParams {
+                attn_norm: get(&format!("blocks.{i}.attn_norm"))?,
+                mlp_norm: get(&format!("blocks.{i}.mlp_norm"))?,
+                linears,
+            });
+        }
+        Ok(Self {
+            embed: get("embed")?,
+            final_norm: get("final_norm")?,
+            head: get("head")?,
+            blocks,
+        })
+    }
+
+    /// Embedding lookup — the only model compute the host performs
+    /// (a row gather; everything else runs through the HLO executables).
+    pub fn embed_tokens(&self, tokens: &[i32], batch: usize, seq: usize) -> Tensor {
+        let d = self.embed.cols();
+        let mut data = Vec::with_capacity(batch * seq * d);
+        for &t in tokens {
+            let row = self.embed.row(t as usize);
+            data.extend_from_slice(row);
+        }
+        Tensor::new(vec![batch, seq, d], data)
+    }
+}
+
+/// Per-linear activation statistics from calibration capture: per-input-
+/// channel max |X| (the SmoothQuant/OS/CFP-activation feed) plus mean
+/// absolute value (diagnostics / Fig. 3).
+#[derive(Clone, Debug, Default)]
+pub struct ActStats {
+    /// block -> linear name -> per-channel max |X_i|
+    pub channel_max: Vec<BTreeMap<String, Vec<f32>>>,
+    /// block -> linear name -> per-channel mean |X_i|
+    pub channel_mean: Vec<BTreeMap<String, Vec<f32>>>,
+}
+
+impl ActStats {
+    pub fn new(n_blocks: usize) -> Self {
+        Self {
+            channel_max: vec![BTreeMap::new(); n_blocks],
+            channel_mean: vec![BTreeMap::new(); n_blocks],
+        }
+    }
+
+    /// Accumulate a captured [M, K] activation matrix for (block, linear).
+    pub fn accumulate(&mut self, block: usize, linear: &str, x: &Tensor) {
+        let k = x.cols();
+        let maxv = self.channel_max[block]
+            .entry(linear.to_string())
+            .or_insert_with(|| vec![0.0; k]);
+        let meanv = self.channel_mean[block]
+            .entry(linear.to_string())
+            .or_insert_with(|| vec![0.0; k]);
+        let m = x.rows() as f32;
+        for row in x.data.chunks_exact(k) {
+            for (j, &v) in row.iter().enumerate() {
+                let a = v.abs();
+                if a > maxv[j] {
+                    maxv[j] = a;
+                }
+                meanv[j] += a / m;
+            }
+        }
+    }
+
+    pub fn max_of(&self, block: usize, linear: &str) -> &[f32] {
+        &self.channel_max[block][linear]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_stats_accumulate() {
+        let mut st = ActStats::new(1);
+        st.accumulate(0, "wq", &Tensor::new(vec![2, 3], vec![1., -5., 0., 2., 3., -1.]));
+        assert_eq!(st.max_of(0, "wq"), &[2.0, 5.0, 1.0]);
+        st.accumulate(0, "wq", &Tensor::new(vec![1, 3], vec![-9., 0., 0.]));
+        assert_eq!(st.max_of(0, "wq"), &[9.0, 5.0, 1.0]);
+    }
+
+    #[test]
+    fn embed_gather() {
+        let mut map: BTreeMap<String, Tensor> = BTreeMap::new();
+        map.insert("embed".into(), Tensor::new(vec![4, 2], vec![0., 1., 2., 3., 4., 5., 6., 7.]));
+        // minimal: direct construct
+        let mp = ModelParams {
+            embed: map["embed"].clone(),
+            final_norm: Tensor::zeros(&[2]),
+            head: Tensor::zeros(&[2, 4]),
+            blocks: vec![],
+        };
+        let h = mp.embed_tokens(&[3, 0, 1, 2], 2, 2);
+        assert_eq!(h.dims, vec![2, 2, 2]);
+        assert_eq!(h.data, vec![6., 7., 0., 1., 2., 3., 4., 5.]);
+    }
+}

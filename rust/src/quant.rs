@@ -1,0 +1,229 @@
+//! Shared fake-quantization math — bit-exact with the L1 Pallas kernels
+//! (python/compile/kernels/ref.py documents the semantics).
+//!
+//! The Rust side needs its own implementation for (a) the RTN / GPTQ
+//! baselines, (b) finalizing CBQ's learned parameters into quantized
+//! weights after optimization, and (c) the analytic memory/size accounting
+//! the paper's efficiency tables report.
+
+use crate::tensor::Tensor;
+
+pub const EPS: f32 = 1e-8;
+/// AdaRound stretch parameters (Eq. 8) — fixed by the paper.
+pub const ZETA: f32 = 1.1;
+pub const GAMMA: f32 = -0.1;
+
+pub const LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+
+/// Per-output-channel symmetric scale init: `max|W_col| / qmax`.
+pub fn init_scales(w: &Tensor, qmax: f32) -> Tensor {
+    let (_k, n) = (w.rows(), w.cols());
+    let mut s = vec![0.0f32; n];
+    for j in 0..n {
+        let m = w.col_iter(j).fold(0.0f32, |a, v| a.max(v.abs()));
+        s[j] = (m / qmax).max(1e-6);
+    }
+    Tensor::new(vec![n], s)
+}
+
+/// Fake-quantize with nearest rounding: `clip(round(W/s), lo, hi) * s`.
+pub fn fake_quant_rtn(w: &Tensor, s: &Tensor, qmax: f32) -> Tensor {
+    let (k, n) = (w.rows(), w.cols());
+    let mut out = vec![0.0f32; k * n];
+    let (lo, hi) = (-qmax - 1.0, qmax);
+    for i in 0..k {
+        for j in 0..n {
+            let sc = s.data[j].max(EPS);
+            let q = (w.at2(i, j) / sc).round().clamp(lo, hi);
+            out[i * n + j] = q * sc;
+        }
+    }
+    Tensor::new(vec![k, n], out)
+}
+
+/// The rectified sigmoid h(V) of Eq. 8.
+pub fn rect_sigmoid(v: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-v).exp());
+    (sig * (ZETA - GAMMA) + GAMMA).clamp(0.0, 1.0)
+}
+
+/// Materialize rho = h(A1 @ A2) for a linear (LoRA-Rounding, Eq. 11),
+/// with the effective-rank projection already applied to A1/A2.
+pub fn lora_rho(a1: &Tensor, a2: &Tensor) -> Tensor {
+    a1.matmul(a2).map(rect_sigmoid)
+}
+
+/// Hardening dead-zone: a learned rho within this band of 0.5 is treated as
+/// "no opinion" and falls back to nearest rounding. LoRA-Rounding starts at
+/// rho = 0.5 exactly (A2 = 0, Sec. 3.2); under short calibration schedules
+/// individual offsets may have barely moved — hardening those to ceil/floor
+/// on the sign of a 1e-3 nudge would randomize rounding and *lose* to RTN.
+/// Only offsets the optimizer actually pushed past the band override the
+/// nearest-rounding default.
+pub const RHO_DEADZONE: f32 = 0.1;
+
+/// Finalize learned quantization: `clip(floor(W/s) + rho_hard, lo, hi) * s`.
+pub fn finalize_weights(w: &Tensor, s: &Tensor, rho: Option<&Tensor>, qmax: f32) -> Tensor {
+    let (k, n) = (w.rows(), w.cols());
+    let mut out = vec![0.0f32; k * n];
+    let (lo, hi) = (-qmax - 1.0, qmax);
+    for i in 0..k {
+        for j in 0..n {
+            let sc = s.data[j].max(EPS);
+            let v = w.at2(i, j) / sc;
+            let nearest = if v - v.floor() >= 0.5 { 1.0 } else { 0.0 };
+            let r = match rho {
+                Some(r) => {
+                    let rv = r.at2(i, j);
+                    if (rv - 0.5).abs() <= RHO_DEADZONE {
+                        nearest
+                    } else if rv > 0.5 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                None => nearest,
+            };
+            let q = (v.floor() + r).clamp(lo, hi);
+            out[i * n + j] = q * sc;
+        }
+    }
+    Tensor::new(vec![k, n], out)
+}
+
+/// Quantization MSE of a weight matrix under a given scale vector — used by
+/// the OMSE pre-processing baseline's scale search.
+pub fn quant_mse(w: &Tensor, s: &Tensor, qmax: f32) -> f32 {
+    let q = fake_quant_rtn(w, s, qmax);
+    let mut e = 0.0f64;
+    for (a, b) in w.data.iter().zip(&q.data) {
+        let d = (a - b) as f64;
+        e += d * d;
+    }
+    (e / w.data.len() as f64) as f32
+}
+
+/// Per-token (row) activation fake-quant — mirrors ref.fake_quant_act.
+/// Used by host-side baselines operating on captured activations.
+pub fn fake_quant_act(x: &Tensor, alpha: f32, qmax: f32) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let row = x.row(i);
+        let mx = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let s = (alpha * mx / qmax).max(EPS);
+        for (j, &v) in row.iter().enumerate() {
+            out[i * k + j] = (v / s).round().clamp(-qmax - 1.0, qmax) * s;
+        }
+    }
+    Tensor::new(vec![m, k], out)
+}
+
+/// Learnable-parameter and optimizer-state accounting (paper Tables 3b/9:
+/// "GPU memory"): bytes of learnable state per linear for each rounding
+/// mode, including Adam moments (2x).
+pub fn learnable_bytes(fan_in: usize, fan_out: usize, rank: usize, mode: RoundBytes) -> usize {
+    let learnable = match mode {
+        RoundBytes::Nearest => fan_out + 1,                      // s_w + alpha
+        RoundBytes::Dense => fan_out + 1 + fan_in * fan_out,     // + dense V
+        RoundBytes::Lora(r) => fan_out + 1 + r * (fan_in + fan_out),
+    };
+    let _ = rank;
+    learnable * 4 * 3 // value + Adam m + Adam v
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum RoundBytes {
+    Nearest,
+    Dense,
+    Lora(usize),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(k: usize, n: usize, f: impl Fn(usize, usize) -> f32) -> Tensor {
+        let mut d = vec![0.0; k * n];
+        for i in 0..k {
+            for j in 0..n {
+                d[i * n + j] = f(i, j);
+            }
+        }
+        Tensor::new(vec![k, n], d)
+    }
+
+    #[test]
+    fn rtn_grid() {
+        let w = t2(4, 2, |i, j| (i as f32 - 1.5) * 0.1 + j as f32 * 0.01);
+        let s = Tensor::new(vec![2], vec![0.1, 0.1]);
+        let q = fake_quant_rtn(&w, &s, 7.0);
+        for v in &q.data {
+            let lev = v / 0.1;
+            assert!((lev - lev.round()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rtn_respects_clip() {
+        let w = t2(2, 1, |i, _| if i == 0 { 100.0 } else { -100.0 });
+        let s = Tensor::new(vec![1], vec![0.5]);
+        let q = fake_quant_rtn(&w, &s, 7.0);
+        assert_eq!(q.data[0], 3.5); // 7 * 0.5
+        assert_eq!(q.data[1], -4.0); // -8 * 0.5
+    }
+
+    #[test]
+    fn init_scales_cover_range() {
+        let w = t2(3, 2, |i, j| if i == 0 && j == 1 { -7.0 } else { 0.5 });
+        let s = init_scales(&w, 7.0);
+        assert!((s.data[1] - 1.0).abs() < 1e-6);
+        assert!((s.data[0] - 0.5 / 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rect_sigmoid_endpoints() {
+        assert_eq!(rect_sigmoid(0.0), 0.5);
+        assert_eq!(rect_sigmoid(50.0), 1.0);
+        assert_eq!(rect_sigmoid(-50.0), 0.0);
+    }
+
+    #[test]
+    fn finalize_nearest_equals_rtn_without_rho() {
+        let w = t2(8, 4, |i, j| ((i * 7 + j * 3) as f32).sin() * 0.3);
+        let s = init_scales(&w, 7.0);
+        let a = finalize_weights(&w, &s, None, 7.0);
+        let b = fake_quant_rtn(&w, &s, 7.0);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn finalize_mid_rho_falls_back_to_nearest() {
+        let w = t2(4, 2, |i, j| ((i + j) as f32) * 0.07 - 0.1);
+        let s = init_scales(&w, 7.0);
+        let rho = Tensor::full(&[4, 2], 0.5);
+        let a = finalize_weights(&w, &s, Some(&rho), 7.0);
+        let b = finalize_weights(&w, &s, None, 7.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn finalize_hard_rho_moves_grid() {
+        let w = Tensor::new(vec![1, 1], vec![0.14]);
+        let s = Tensor::new(vec![1], vec![0.1]);
+        let up = finalize_weights(&w, &s, Some(&Tensor::full(&[1, 1], 0.9)), 7.0);
+        let dn = finalize_weights(&w, &s, Some(&Tensor::full(&[1, 1], 0.1)), 7.0);
+        assert!((up.data[0] - 0.2).abs() < 1e-6);
+        assert!((dn.data[0] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lora_bytes_much_smaller_than_dense() {
+        let dense = learnable_bytes(4096, 4096, 5, RoundBytes::Dense);
+        let lora = learnable_bytes(4096, 4096, 5, RoundBytes::Lora(5));
+        assert!(lora * 100 < dense);
+    }
+}

@@ -1,0 +1,181 @@
+//! Table/figure rendering for the bench harnesses: fixed-width text tables
+//! (the same rows the paper prints) + ASCII heatmaps for the Hessian
+//! figures + CSV dumps for external plotting.
+
+use std::fmt::Write as _;
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n== {} ==", self.title);
+        let line = |out: &mut String| {
+            let _ = writeln!(
+                out,
+                "+{}+",
+                widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+")
+            );
+        };
+        line(&mut out);
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers
+                .iter()
+                .zip(&widths)
+                .map(|(h, w)| format!(" {h:<w$} "))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        line(&mut out);
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "|{}|",
+                row.iter()
+                    .zip(&widths)
+                    .map(|(c, w)| format!(" {c:<w$} "))
+                    .collect::<Vec<_>>()
+                    .join("|")
+            );
+        }
+        line(&mut out);
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    if !v.is_finite() {
+        return "inf".into();
+    }
+    if v >= 1e4 {
+        format!("{v:.1e}")
+    } else {
+        format!("{v:.prec$}")
+    }
+}
+
+/// ASCII heatmap of a matrix using log-scaled magnitude shades.
+pub fn heatmap(title: &str, m: &[Vec<f32>]) -> String {
+    const SHADES: [char; 10] = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut mx = 0.0f32;
+    for row in m {
+        for &v in row {
+            mx = mx.max(v.abs());
+        }
+    }
+    let mut out = format!("\n-- {title} (max |H| = {mx:.3e}) --\n");
+    for row in m {
+        for &v in row {
+            let t = if mx > 0.0 {
+                ((v.abs() / mx).powf(0.35) * (SHADES.len() - 1) as f32).round() as usize
+            } else {
+                0
+            };
+            out.push(SHADES[t.min(SHADES.len() - 1)]);
+            out.push(SHADES[t.min(SHADES.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV dump of a matrix.
+pub fn matrix_csv(m: &[Vec<f32>]) -> String {
+    m.iter()
+        .map(|row| row.iter().map(|v| format!("{v:.6e}")).collect::<Vec<_>>().join(","))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Histogram summary for Fig. 3-style outlier distribution dumps.
+pub fn magnitude_histogram(title: &str, data: &[f32], buckets: usize) -> String {
+    let mx = data.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-12);
+    let mut counts = vec![0usize; buckets];
+    for &v in data {
+        let b = ((v.abs() / mx) * (buckets - 1) as f32).round() as usize;
+        counts[b.min(buckets - 1)] += 1;
+    }
+    let peak = *counts.iter().max().unwrap_or(&1) as f32;
+    let mut out = format!("\n-- {title} (max |x| = {mx:.4}) --\n");
+    for (i, &c) in counts.iter().enumerate() {
+        let lo = mx * i as f32 / buckets as f32;
+        let bar = "#".repeat(((c as f32 / peak) * 50.0).ceil() as usize);
+        let _ = writeln!(out, "{lo:>9.4} | {bar} {c}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["long-cell".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("long-cell"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("demo", &["x", "y"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.to_csv().lines().count(), 2);
+    }
+
+    #[test]
+    fn heatmap_handles_zero_matrix() {
+        let s = heatmap("z", &[vec![0.0, 0.0], vec![0.0, 0.0]]);
+        assert!(s.contains("z"));
+    }
+
+    #[test]
+    fn histogram_counts_all() {
+        let s = magnitude_histogram("h", &[0.1, 0.2, 5.0], 4);
+        assert!(s.contains("5.0"));
+    }
+}

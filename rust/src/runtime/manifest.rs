@@ -1,0 +1,170 @@
+//! artifacts/manifest.json schema — written by python/compile/aot.py.
+//!
+//! The manifest is the single source of truth for executable input/output
+//! orderings (the flatten_spec contract), model configurations, and the
+//! window sizes exported per config. Parsed with the in-crate JSON parser
+//! (crate::json) since the build environment only vendors the xla closure.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::json::{self, Value};
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub configs: BTreeMap<String, ModelCfg>,
+    pub executables: BTreeMap<String, ExecSpec>,
+    pub pretrain_loss: BTreeMap<String, f64>,
+    pub linears: Vec<String>,
+    pub windows: BTreeMap<String, Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub rank_pad: usize,
+    pub head_dim: usize,
+    pub outlier_channels: usize,
+    pub outlier_gain: f64,
+}
+
+impl ModelCfg {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            d_ffn: v.get("d_ffn")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            seq: v.get("seq")?.as_usize()?,
+            batch: v.get("batch")?.as_usize()?,
+            rank_pad: v.get("rank_pad")?.as_usize()?,
+            head_dim: v.get("head_dim")?.as_usize()?,
+            outlier_channels: v
+                .opt("outlier_channels")
+                .map(|x| x.as_usize())
+                .transpose()?
+                .unwrap_or(0),
+            outlier_gain: v.opt("outlier_gain").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0),
+        })
+    }
+
+    /// Input fan-in/fan-out of a linear by name (mirrors model.linear_shapes).
+    pub fn linear_shape(&self, name: &str) -> (usize, usize) {
+        let (d, f) = (self.d_model, self.d_ffn);
+        match name {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "wgate" | "wup" => (d, f),
+            "wdown" => (f, d),
+            other => panic!("unknown linear {other}"),
+        }
+    }
+
+    /// Total quantizable weight parameters.
+    pub fn quant_params(&self) -> usize {
+        let per_block: usize = crate::quant::LINEARS
+            .iter()
+            .map(|l| {
+                let (i, o) = self.linear_shape(l);
+                i * o
+            })
+            .sum();
+        per_block * self.n_layers
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let raw = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading manifest {:?}", path.as_ref()))?;
+        let v = json::parse(&raw).context("parsing manifest.json")?;
+        let version = v.get("version")?.as_usize()? as u32;
+        ensure!(version == 1, "unsupported manifest version {version}");
+
+        let mut configs = BTreeMap::new();
+        for (k, c) in v.get("configs")?.as_obj()? {
+            configs.insert(k.clone(), ModelCfg::from_json(c)?);
+        }
+        let mut executables = BTreeMap::new();
+        for (k, e) in v.get("executables")?.as_obj()? {
+            executables.insert(
+                k.clone(),
+                ExecSpec {
+                    file: e.get("file")?.as_str()?.to_string(),
+                    inputs: e
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: e
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        let mut pretrain_loss = BTreeMap::new();
+        if let Some(pl) = v.opt("pretrain_loss") {
+            for (k, x) in pl.as_obj()? {
+                pretrain_loss.insert(k.clone(), x.as_f64()?);
+            }
+        }
+        let linears = v
+            .get("linears")?
+            .as_arr()?
+            .iter()
+            .map(|s| Ok(s.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let mut windows = BTreeMap::new();
+        for (k, arr) in v.get("windows")?.as_obj()? {
+            windows.insert(
+                k.clone(),
+                arr.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?,
+            );
+        }
+        Ok(Self { version, configs, executables, pretrain_loss, linears, windows })
+    }
+}

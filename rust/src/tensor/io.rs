@@ -1,0 +1,114 @@
+//! CBQW binary tensor container reader/writer — the weight interchange with
+//! the Python build path (python/compile/iobin.py documents the layout).
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Result};
+
+use super::Tensor;
+
+const MAGIC: &[u8; 4] = b"CBQW";
+const VERSION: u32 = 1;
+
+pub fn read_tensors(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let mut r = BufReader::new(File::open(path.as_ref())?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    ensure!(&magic == MAGIC, "bad magic {:?}", magic);
+    let version = read_u32(&mut r)?;
+    ensure!(version == VERSION, "unsupported version {version}");
+    let n = read_u32(&mut r)? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let count: usize = dims.iter().product::<usize>().max(1);
+        let mut raw = vec![0u8; count * 4];
+        r.read_exact(&mut raw)?;
+        match dtype {
+            0 => {
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                out.insert(name, Tensor::new(dims, data));
+            }
+            1 => {
+                // i32 tensors are converted to f32 on read; none of the
+                // weight files currently carry them.
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                    .collect();
+                out.insert(name, Tensor::new(dims, data));
+            }
+            d => bail!("unknown dtype {d} for {name}"),
+        }
+    }
+    Ok(out)
+}
+
+pub fn write_tensors(
+    path: impl AsRef<Path>,
+    tensors: &BTreeMap<String, Tensor>,
+) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path.as_ref())?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&[0u8, t.dims.len() as u8])?;
+        for &d in &t.dims {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a.b".to_string(), Tensor::new(vec![2, 3], vec![1., -2., 3., 4., 5., 6.5]));
+        m.insert("scalar".to_string(), Tensor::scalar(7.25));
+        let p = std::env::temp_dir().join("cbqw_roundtrip_test.bin");
+        write_tensors(&p, &m).unwrap();
+        let back = read_tensors(&p).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = std::env::temp_dir().join("cbqw_bad_magic.bin");
+        std::fs::write(&p, b"NOPE____").unwrap();
+        assert!(read_tensors(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,244 @@
+//! Minimal host-side f32 tensor: the substrate for everything the
+//! coordinator computes outside PJRT (CFP statistics, GPTQ, weight
+//! finalization, Adam state, Hessian probes).
+//!
+//! Deliberately simple — row-major `Vec<f32>` + shape — because every large
+//! matmul in the hot path runs through the AOT HLO executables; host math is
+//! statistics, bookkeeping and small dense linear algebra.
+
+pub mod io;
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.dims, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            dims,
+            data.len()
+        );
+        Self { dims, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        Self { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        Self { dims: dims.to_vec(), data: vec![v; dims.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// First element — for 0-d/1-element tensors (losses, counters).
+    pub fn item(&self) -> f32 {
+        self.data[0]
+    }
+
+    pub fn reshape(mut self, dims: Vec<usize>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims;
+        self
+    }
+
+    /// 2-D accessors ---------------------------------------------------
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.dims[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.dims[1]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.dims[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.dims[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.dims[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.dims[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f32> + '_ {
+        let c = self.dims[1];
+        self.data.iter().skip(j).step_by(c).copied()
+    }
+
+    /// Scale column `j` of a 2-D tensor in place.
+    pub fn scale_col(&mut self, j: usize, s: f32) {
+        let c = self.dims[1];
+        for i in 0..self.dims[0] {
+            self.data[i * c + j] *= s;
+        }
+    }
+
+    /// Scale row `i` of a 2-D tensor in place.
+    pub fn scale_row(&mut self, i: usize, s: f32) {
+        for v in self.row_mut(i) {
+            *v *= s;
+        }
+    }
+
+    /// whole-tensor ops ------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self { dims: self.dims.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    pub fn zip_mut(&mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) {
+        assert_eq!(self.dims, other.dims);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = f(*a, b);
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() { 0.0 } else { self.sum() / self.data.len() as f32 }
+    }
+
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum()
+    }
+
+    /// `A[m,k] @ B[k,n]` — host-side small dense matmul (GPTQ updates,
+    /// LoRA V materialization). The hot path never goes through this.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(b.rank(), 2);
+        let (m, k) = (self.dims[0], self.dims[1]);
+        let (k2, n) = (b.dims[0], b.dims[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = b.row(p);
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.dims[0], self.dims[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+}
+
+/// Int32 tensor (token ids, masks as counts). Kept separate from `Tensor`
+/// so dtype mistakes are compile errors, not runtime surprises.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn row_col_ops() {
+        let mut a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        a.scale_col(1, 10.0);
+        assert_eq!(a.data, vec![1., 20., 3., 40.]);
+        a.scale_row(0, 0.5);
+        assert_eq!(a.data, vec![0.5, 10., 3., 40.]);
+        assert_eq!(a.col_iter(0).collect::<Vec<_>>(), vec![0.5, 3.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,337 @@
+//! Property-based tests over the coordinator/quantization invariants.
+//!
+//! The build environment vendors no proptest crate, so the generators are
+//! hand-rolled around xorshift64* (the same PRNG the corpus substrate uses):
+//! each property is checked over a few hundred random cases with
+//! deterministic seeds, and failures print the seed for replay.
+
+use cbq::calib::corpus::XorShift64Star;
+use cbq::cfp;
+use cbq::config::{qmax, BitSpec, RoundingMode};
+use cbq::coordinator::qstate::LinearQ;
+use cbq::linalg::Mat;
+use cbq::quant;
+use cbq::tensor::Tensor;
+
+struct Gen(XorShift64Star);
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self(XorShift64Star::new(seed))
+    }
+
+    fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.0.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        lo + (hi - lo) * u
+    }
+
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.0.next_below((hi - lo + 1) as u64) as usize)
+    }
+
+    fn tensor(&mut self, k: usize, n: usize, scale: f32) -> Tensor {
+        let data = (0..k * n).map(|_| self.f32_in(-scale, scale)).collect();
+        Tensor::new(vec![k, n], data)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantizer invariants
+// ---------------------------------------------------------------------------
+
+/// Fake-quantized weights always land on the integer grid within clip range.
+#[test]
+fn prop_rtn_on_grid_and_in_range() {
+    for seed in 0..200u64 {
+        let mut g = Gen::new(seed + 1);
+        let (k, n) = (g.usize_in(1, 24), g.usize_in(1, 24));
+        let bits = [2u8, 3, 4, 8][g.usize_in(0, 3)];
+        let qm = qmax(bits);
+        let scale = g.f32_in(0.01, 5.0);
+        let w = g.tensor(k, n, scale);
+        let s = quant::init_scales(&w, qm);
+        let q = quant::fake_quant_rtn(&w, &s, qm);
+        for i in 0..k {
+            for j in 0..n {
+                let lev = q.at2(i, j) / s.data[j].max(quant::EPS);
+                assert!(
+                    (lev - lev.round()).abs() < 1e-3,
+                    "seed {seed}: off-grid {lev}"
+                );
+                assert!(lev.round() >= -qm - 1.0 && lev.round() <= qm, "seed {seed}");
+            }
+        }
+    }
+}
+
+/// RTN error is bounded by half a step for in-range weights.
+#[test]
+fn prop_rtn_error_bounded() {
+    for seed in 0..200u64 {
+        let mut g = Gen::new(seed + 1000);
+        let (k, n) = (g.usize_in(1, 16), g.usize_in(1, 16));
+        let qm = qmax(4);
+        let w = g.tensor(k, n, 1.0);
+        let s = quant::init_scales(&w, qm);
+        let q = quant::fake_quant_rtn(&w, &s, qm);
+        for i in 0..k {
+            for j in 0..n {
+                let err = (q.at2(i, j) - w.at2(i, j)).abs();
+                // max-init scales put every weight in range => err <= s/2
+                assert!(
+                    err <= 0.5 * s.data[j] + 1e-6,
+                    "seed {seed}: err {err} > half-step {}",
+                    0.5 * s.data[j]
+                );
+            }
+        }
+    }
+}
+
+/// More bits never increases the per-matrix quantization MSE.
+#[test]
+fn prop_monotone_in_bits() {
+    for seed in 0..100u64 {
+        let mut g = Gen::new(seed + 2000);
+        let (k, n) = (g.usize_in(2, 20), g.usize_in(2, 20));
+        let scale = g.f32_in(0.05, 3.0);
+        let w = g.tensor(k, n, scale);
+        let mut last = f32::INFINITY;
+        for bits in [2u8, 3, 4, 6, 8] {
+            let qm = qmax(bits);
+            let s = quant::init_scales(&w, qm);
+            let e = quant::quant_mse(&w, &s, qm);
+            assert!(
+                e <= last + 1e-9,
+                "seed {seed}: mse not monotone at {bits} bits ({e} > {last})"
+            );
+            last = e;
+        }
+    }
+}
+
+/// finalize_weights with any rho never leaves the clip range and moves each
+/// weight at most one step from the floor.
+#[test]
+fn prop_finalize_bounded() {
+    for seed in 0..200u64 {
+        let mut g = Gen::new(seed + 3000);
+        let (k, n) = (g.usize_in(1, 16), g.usize_in(1, 16));
+        let qm = qmax([2u8, 4][g.usize_in(0, 1)]);
+        let w = g.tensor(k, n, 1.0);
+        let s = quant::init_scales(&w, qm);
+        let rho = Tensor::new(
+            vec![k, n],
+            (0..k * n).map(|_| g.f32_in(0.0, 1.0)).collect(),
+        );
+        let q = quant::finalize_weights(&w, &s, Some(&rho), qm);
+        for i in 0..k {
+            for j in 0..n {
+                let sc = s.data[j].max(quant::EPS);
+                let lev = q.at2(i, j) / sc;
+                assert!(lev >= -qm - 1.0 - 1e-4 && lev <= qm + 1e-4, "seed {seed}");
+                let floor = (w.at2(i, j) / sc).floor();
+                assert!(
+                    (lev - floor).abs() <= 1.0 + 1e-4,
+                    "seed {seed}: moved more than one step"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CFP invariants
+// ---------------------------------------------------------------------------
+
+/// Truncation never increases any magnitude and preserves every sign.
+#[test]
+fn prop_cfp_truncation_contracts() {
+    for seed in 0..200u64 {
+        let mut g = Gen::new(seed + 4000);
+        let n = g.usize_in(16, 400);
+        let mut data: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        // sometimes plant outliers
+        for _ in 0..g.usize_in(0, 3) {
+            let i = g.usize_in(0, n - 1);
+            data[i] = g.f32_in(5.0, 50.0) * data[i].signum().max(0.1).signum();
+        }
+        let before = data.clone();
+        let det = cfp::detect_default(&data);
+        cfp::truncate_weights(&mut data, &det);
+        for (a, b) in data.iter().zip(&before) {
+            assert!(a.abs() <= b.abs() + 1e-6, "seed {seed}: magnitude grew");
+            if b.abs() > 1e-6 && a.abs() > 1e-6 {
+                assert_eq!(a.signum(), b.signum(), "seed {seed}: sign flip");
+            }
+        }
+    }
+}
+
+/// Detection threshold is always above the reserved maximum, and scales are
+/// always >= 1 (activation scaling only ever shrinks channels).
+#[test]
+fn prop_cfp_detection_consistent() {
+    for seed in 0..200u64 {
+        let mut g = Gen::new(seed + 5000);
+        let n = g.usize_in(8, 300);
+        let mut data: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 2.0)).collect();
+        for _ in 0..g.usize_in(0, 4) {
+            let i = g.usize_in(0, n - 1);
+            data[i] = g.f32_in(10.0, 100.0);
+        }
+        let det = cfp::detect_default(&data);
+        if let Some(t) = det.threshold {
+            assert!(t > det.reserved_max - 1e-6, "seed {seed}");
+            assert!(det.n_outliers > 0, "seed {seed}");
+        } else {
+            assert_eq!(det.n_outliers, 0, "seed {seed}");
+        }
+        let scales = cfp::activation_scales(&data, &det);
+        assert!(scales.iter().all(|&s| s >= 1.0), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator state invariants
+// ---------------------------------------------------------------------------
+
+/// Rank projection is idempotent and Adam steps never break it.
+#[test]
+fn prop_rank_projection_invariant() {
+    for seed in 0..60u64 {
+        let mut g = Gen::new(seed + 6000);
+        let (fi, fo) = (g.usize_in(2, 32), g.usize_in(2, 32));
+        let rank_pad = 8;
+        let rank = g.usize_in(1, rank_pad);
+        let w = g.tensor(fi, fo, 0.5);
+        let mut q = LinearQ::init(&w, 4, rank_pad, rank, RoundingMode::Lora);
+        for _ in 0..5 {
+            let g1 = g.tensor(fi, rank_pad, 0.1);
+            let g2 = g.tensor(rank_pad, fo, 0.1);
+            let gs = Tensor::zeros(&[fo]);
+            q.step(&gs, 0.0, Some(&g1), Some(&g2), None, (0.0, 0.0, 1e-2), rank,
+                   RoundingMode::Lora);
+        }
+        for i in 0..fi {
+            for c in rank..rank_pad {
+                assert_eq!(q.a1.at2(i, c), 0.0, "seed {seed}: a1 rank leak");
+            }
+        }
+        for r in rank..rank_pad {
+            for j in 0..fo {
+                assert_eq!(q.a2.at2(r, j), 0.0, "seed {seed}: a2 rank leak");
+            }
+        }
+        // effective rank of V = a1 @ a2 is <= rank by construction: every
+        // column of a1 beyond `rank` is zero
+        assert!(q.s_w.data.iter().all(|&s| s > 0.0), "seed {seed}");
+    }
+}
+
+/// BitSpec per-layer overrides only ever touch the named (block, linear).
+#[test]
+fn prop_bitspec_overrides_local() {
+    for seed in 0..200u64 {
+        let mut g = Gen::new(seed + 7000);
+        let n_layers = g.usize_in(2, 12);
+        let mut bits = BitSpec::new(2, 16);
+        let ob = g.usize_in(0, n_layers - 1);
+        let lin = quant::LINEARS[g.usize_in(0, 6)];
+        bits.overrides.push((ob, lin.to_string(), 8));
+        for blk in 0..n_layers {
+            for l in quant::LINEARS {
+                let want = if blk == ob && l == lin { 8 } else { 2 };
+                assert_eq!(bits.weight_bits(blk, l), want, "seed {seed}");
+            }
+        }
+    }
+}
+
+/// CBD window schedule covers every block, never exceeds bounds, and the
+/// number of windows matches ceil((L - w) / step) + 1.
+#[test]
+fn prop_window_schedule() {
+    for seed in 0..300u64 {
+        let mut g = Gen::new(seed + 8000);
+        let l_total = g.usize_in(1, 24);
+        let w = g.usize_in(1, l_total);
+        let overlap = g.usize_in(0, w - 1);
+        let step = w - overlap;
+        let mut starts: Vec<usize> =
+            (0..).map(|k| k * step).take_while(|s| s + w <= l_total).collect();
+        if starts.last().map(|&s| s + w < l_total).unwrap_or(true) {
+            starts.push(l_total - w);
+        }
+        let mut covered = vec![false; l_total];
+        for &s in &starts {
+            assert!(s + w <= l_total, "seed {seed}: window out of bounds");
+            for c in covered.iter_mut().skip(s).take(w) {
+                *c = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "seed {seed}: uncovered block");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// linalg invariants
+// ---------------------------------------------------------------------------
+
+/// Cholesky-based SPD inverse satisfies A * inv(A) = I for random SPD A.
+#[test]
+fn prop_spd_inverse() {
+    for seed in 0..60u64 {
+        let mut g = Gen::new(seed + 9000);
+        let n = g.usize_in(1, 16);
+        // A = B B^T + (n+1) I
+        let mut a = Mat::zeros(n);
+        let b: Vec<f64> = (0..n * n).map(|_| g.f32_in(-1.0, 1.0) as f64).collect();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a.set(i, j, s);
+            }
+        }
+        a.add_diag(n as f64 + 1.0);
+        let inv = a.spd_inverse().unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod.at(i, j) - want).abs() < 1e-7,
+                    "seed {seed}: inverse off at ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+/// V0 warm-start: h(V0) == frac(W/s) within tolerance for random weights.
+#[test]
+fn prop_v0_roundtrip() {
+    use cbq::coordinator::qstate::v0_init;
+    for seed in 0..100u64 {
+        let mut g = Gen::new(seed + 10000);
+        let (k, n) = (g.usize_in(1, 16), g.usize_in(1, 16));
+        let scale = g.f32_in(0.05, 2.0);
+        let w = g.tensor(k, n, scale);
+        let s = quant::init_scales(&w, qmax(4));
+        let v0 = v0_init(&w, &s);
+        for i in 0..k {
+            for j in 0..n {
+                let rho = quant::rect_sigmoid(v0.at2(i, j));
+                let v = w.at2(i, j) / s.data[j].max(1e-8);
+                let frac = v - v.floor();
+                assert!(
+                    (rho - frac).abs() < 2e-3,
+                    "seed {seed}: rho {rho} vs frac {frac}"
+                );
+            }
+        }
+    }
+}
