@@ -1,0 +1,72 @@
+//! Quantize-once / serve-forever: quantize the tiny model, export it as a
+//! CBQS snapshot, reload it (bit-exact), and serve a mixed request queue
+//! through the batched engine — comparing coalesced vs one-by-one dispatch.
+//!
+//!     make artifacts && cargo run --release --example export_and_serve
+
+use cbq::calib::corpus::Style;
+use cbq::config::{BitSpec, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::report::{fmt_bytes, fmt_f, Table};
+use cbq::runtime::{Artifacts, Runtime};
+use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor, ServeEngine};
+use cbq::snapshot;
+
+fn main() -> anyhow::Result<()> {
+    let art = Artifacts::discover()?;
+    let rt = Runtime::new(&art)?;
+    let mut pipe = Pipeline::new(&art, &rt, "t")?;
+
+    // --- quantize once ----------------------------------------------------
+    let mut job = QuantJob::cbq(BitSpec::w4a16());
+    job.calib_sequences = 16;
+    println!("quantizing model `t` to {} ...", job.bits.label());
+    let (quantized, summary) = pipe.run(&job)?;
+    let ppl_mem = pipe.perplexity(&quantized, Style::C4, 4)?;
+
+    // --- export the deliverable -------------------------------------------
+    let path = std::env::temp_dir().join("t_w4a16.cbqs");
+    let report = snapshot::save(&path, &pipe.cfg, &quantized)?;
+    println!(
+        "exported {:?}: {} ({:.1}% of the {} f32 representation)",
+        path,
+        fmt_bytes(report.file_bytes),
+        report.compression_ratio() * 100.0,
+        fmt_bytes(report.f32_equiv_bytes),
+    );
+
+    // --- reload: bit-exact ------------------------------------------------
+    let mut registry = ModelRegistry::new();
+    let snap = registry.load("t-w4a16", &path)?;
+    let ppl_disk = pipe.perplexity(&snap.model, Style::C4, 4)?;
+    println!("ppl(c4): in-memory {ppl_mem:.6} vs snapshot {ppl_disk:.6}");
+    assert_eq!(ppl_mem, ppl_disk, "snapshot round-trip must be bit-exact");
+
+    // --- serve forever ----------------------------------------------------
+    let mut engine = ServeEngine::new(&rt, &art, snap.clone())?;
+    let requests = batcher::standard_mix(snap.meta.cfg.seq, 16, 4, 4);
+    engine.execute(&requests[0].rows[..1])?; // warm-up
+
+    let (_, batched) = Batcher::coalescing(&engine).run(&mut engine, &requests)?;
+    let (_, oneby) = Batcher::sequential().run(&mut engine, &requests)?;
+
+    let mut t = Table::new(
+        format!("serving {} requests (quantized in {:.1}s)", requests.len(), summary.quant_seconds),
+        &["mode", "dispatches", "occupancy", "tok/s"],
+    );
+    for (mode, s) in [("batched", &batched), ("one-by-one", &oneby)] {
+        t.row(&[
+            mode.into(),
+            s.dispatches.to_string(),
+            format!("{:.1}%", s.occupancy() * 100.0),
+            fmt_f(s.tokens_per_s(), 0),
+        ]);
+    }
+    t.print();
+    println!(
+        "batched speedup: {:.2}x tokens/s",
+        batched.tokens_per_s() / oneby.tokens_per_s().max(1e-12)
+    );
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

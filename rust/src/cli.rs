@@ -1,5 +1,5 @@
-//! Tiny `--flag value` argument parser (clap is not vendored in this build
-//! environment). Grammar: `[global flags] <command> [--key value | --switch]*`.
+//! Tiny argument parser (clap is not vendored in this build environment).
+//! Grammar: `[global flags] <command> [--key value | --key=value | --switch]*`.
 
 use std::collections::BTreeMap;
 
@@ -20,6 +20,12 @@ impl Args {
         while i < items.len() {
             let a = &items[i];
             if let Some(key) = a.strip_prefix("--") {
+                // --key=value binds tighter than the lookahead form
+                if let Some((k, v)) = key.split_once('=') {
+                    out.kv.insert(k.to_string(), v.to_string());
+                    i += 1;
+                    continue;
+                }
                 // a flag with a value unless the next token is missing or
                 // itself a flag (then it's a switch)
                 if i + 1 < items.len() && !items[i + 1].starts_with("--") {
@@ -97,5 +103,32 @@ mod tests {
     fn bad_int_errors() {
         let a = args("x --n abc");
         assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("export --model=s --w=4 --out=/tmp/a.cbqs --verbose");
+        assert_eq!(a.command(), Some("export"));
+        assert_eq!(a.get("model"), Some("s"));
+        assert_eq!(a.get_usize("w", 0).unwrap(), 4);
+        assert_eq!(a.get("out"), Some("/tmp/a.cbqs"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_value_may_contain_equals_and_dashes() {
+        let a = args("serve-bench --json=path=with=equals --snapshot=--odd--");
+        assert_eq!(a.command(), Some("serve-bench"));
+        assert_eq!(a.get("json"), Some("path=with=equals"));
+        assert_eq!(a.get("snapshot"), Some("--odd--"));
+    }
+
+    #[test]
+    fn mixed_spacing_and_equals() {
+        let a = args("quantize --w 2 --a=16 --star --calib=8");
+        assert_eq!(a.get_usize("w", 0).unwrap(), 2);
+        assert_eq!(a.get_usize("a", 0).unwrap(), 16);
+        assert_eq!(a.get_usize("calib", 0).unwrap(), 8);
+        assert!(a.flag("star"));
     }
 }

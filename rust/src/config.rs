@@ -72,6 +72,44 @@ impl BitSpec {
         let star = if self.overrides.is_empty() { "" } else { "*" };
         format!("W{}A{}{}", self.bits_w, self.bits_a, star)
     }
+
+    /// JSON encoding for the CBQS snapshot header.
+    pub fn to_json(&self) -> crate::json::Value {
+        use crate::json::Value;
+        Value::obj(vec![
+            ("w", Value::num(self.bits_w as f64)),
+            ("a", Value::num(self.bits_a as f64)),
+            (
+                "overrides",
+                Value::arr(
+                    self.overrides
+                        .iter()
+                        .map(|(b, l, bits)| {
+                            Value::arr(vec![
+                                Value::num(*b as f64),
+                                Value::str(l.clone()),
+                                Value::num(*bits as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &crate::json::Value) -> anyhow::Result<Self> {
+        let mut s = Self::new(v.get("w")?.as_usize()? as u8, v.get("a")?.as_usize()? as u8);
+        for o in v.get("overrides")?.as_arr()? {
+            let o = o.as_arr()?;
+            anyhow::ensure!(o.len() == 3, "override must be [block, linear, bits]");
+            s.overrides.push((
+                o[0].as_usize()?,
+                o[1].as_str()?.to_string(),
+                o[2].as_usize()? as u8,
+            ));
+        }
+        Ok(s)
+    }
 }
 
 pub fn qmax(bits: u8) -> f32 {
@@ -122,6 +160,25 @@ pub enum RoundingMode {
     DenseAdaRound,
     /// LoRA-Rounding: V = A1 @ A2 at effective rank `rank` (Sec. 3.2).
     Lora,
+}
+
+impl RoundingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Nearest => "nearest",
+            Self::DenseAdaRound => "dense",
+            Self::Lora => "lora",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "nearest" => Self::Nearest,
+            "dense" => Self::DenseAdaRound,
+            "lora" => Self::Lora,
+            other => anyhow::bail!("unknown rounding mode `{other}`"),
+        })
+    }
 }
 
 /// Top-level method selector.
@@ -245,6 +302,22 @@ mod tests {
         assert_eq!(s.weight_bits(3, "wdown"), 2);
         assert_eq!(s.weight_bits(0, "wq"), 2);
         assert_eq!(s.label(), "W2A16*");
+    }
+
+    #[test]
+    fn bitspec_json_roundtrip() {
+        let s = BitSpec::w2a16_star(8);
+        let back = BitSpec::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(BitSpec::from_json(&BitSpec::w4a4().to_json()).unwrap(), BitSpec::w4a4());
+    }
+
+    #[test]
+    fn rounding_mode_names_roundtrip() {
+        for m in [RoundingMode::Nearest, RoundingMode::DenseAdaRound, RoundingMode::Lora] {
+            assert_eq!(RoundingMode::from_name(m.name()).unwrap(), m);
+        }
+        assert!(RoundingMode::from_name("banana").is_err());
     }
 
     #[test]

@@ -39,6 +39,25 @@ pub struct QuantizedModel {
     pub rounding: RoundingMode,
 }
 
+/// Greedy covering of an `n_layers` block chain with the largest exported
+/// window executables: the dispatch plan used by both quantized eval
+/// (`Pipeline::forward_hidden`) and the serving engine (`serve`). Returns
+/// `(start_block, width)` steps; falls back to width 1 when no exported
+/// window fits the remainder.
+pub fn window_plan(windows: &[usize], n_layers: usize) -> Vec<(usize, usize)> {
+    let mut sorted: Vec<usize> = windows.iter().copied().filter(|&w| w > 0).collect();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    let mut plan = Vec::new();
+    let mut k = 0usize;
+    while k < n_layers {
+        let remaining = n_layers - k;
+        let w = sorted.iter().copied().find(|&w| w <= remaining).unwrap_or(1);
+        plan.push((k, w));
+        k += w;
+    }
+    plan
+}
+
 /// Everything a bench table row reports.
 #[derive(Clone, Debug)]
 pub struct QuantSummary {
@@ -545,6 +564,29 @@ impl<'a> Pipeline<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn window_plan_greedy_covering() {
+        // prefers the largest window, covers exactly, falls back to 1
+        assert_eq!(window_plan(&[1, 2, 4], 8), vec![(0, 4), (4, 4)]);
+        assert_eq!(window_plan(&[1, 2, 4], 6), vec![(0, 4), (4, 2)]);
+        assert_eq!(window_plan(&[1, 2, 4], 7), vec![(0, 4), (4, 2), (6, 1)]);
+        assert_eq!(window_plan(&[4], 3), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(window_plan(&[], 2), vec![(0, 1), (1, 1)]);
+        // every plan covers [0, n) exactly once, in order
+        for n in 1..20usize {
+            for ws in [vec![1], vec![1, 2], vec![1, 2, 4, 8], vec![3, 5]] {
+                let plan = window_plan(&ws, n);
+                let mut at = 0usize;
+                for (s, w) in plan {
+                    assert_eq!(s, at);
+                    assert!(w >= 1);
+                    at += w;
+                }
+                assert_eq!(at, n);
+            }
+        }
+    }
 
     #[test]
     fn window_schedule_covers_all_blocks() {

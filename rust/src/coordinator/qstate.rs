@@ -128,6 +128,38 @@ impl LinearQ {
         }
     }
 
+    /// Rebuild eval-ready state from snapshot contents (crate::snapshot):
+    /// learned scales, activation clip and LoRA factors are restored
+    /// exactly; `v0` is re-derived from the dequantized weights (it only
+    /// matters for *training*, which a restored model never resumes — the
+    /// Adam moments start fresh for the same reason).
+    pub fn restore(
+        w_dequant: &Tensor,
+        s_w: Tensor,
+        alpha: f32,
+        a1: Tensor,
+        a2: Tensor,
+        bits_w: u8,
+    ) -> Self {
+        let qmax_w = crate::config::qmax(bits_w);
+        let v0 = v0_init(w_dequant, &s_w);
+        Self {
+            adam_s: Adam::new(s_w.len()),
+            adam_alpha: Adam::new(1),
+            adam_a1: Adam::new(a1.len()),
+            adam_a2: Adam::new(a2.len()),
+            adam_v: None,
+            s_w,
+            alpha,
+            a1,
+            a2,
+            v0,
+            v_dense: None,
+            bits_w,
+            qmax_w,
+        }
+    }
+
     /// One optimizer step from executable gradients. `rank` enforces the
     /// effective LoRA rank by zeroing the padded columns/rows after the
     /// update (this is how Table 12's rank sweep shares one artifact).

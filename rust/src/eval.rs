@@ -36,18 +36,8 @@ impl<'a> Pipeline<'a> {
         let mut h = model.params.embed_tokens(&tokens.data, batch, seq);
         let qmax_a = model.bits.qmax_a();
         let a_en = if model.bits.act_enabled() { 1.0 } else { 0.0 };
-        let mut windows: Vec<usize> = self
-            .art
-            .manifest
-            .windows
-            .get(&self.cfg_name)
-            .cloned()
-            .unwrap_or_else(|| vec![1]);
-        windows.sort_unstable_by(|a, b| b.cmp(a));
-        let mut k = 0usize;
-        while k < self.cfg.n_layers {
-            let remaining = self.cfg.n_layers - k;
-            let w = windows.iter().copied().find(|&w| w <= remaining).unwrap_or(1);
+        let windows = self.art.windows(&self.cfg_name);
+        for (k, w) in crate::coordinator::window_plan(&windows, self.cfg.n_layers) {
             let zeros = Tensor::zeros(&h.dims);
             // weights are already baked (fake-quantized) => w_en = 0;
             // activation quant stays dynamic with the learned alpha.
@@ -62,7 +52,6 @@ impl<'a> Pipeline<'a> {
                 a_en,
             )?;
             h = h_out;
-            k += w;
         }
         Ok(h)
     }

@@ -65,6 +65,91 @@ impl Value {
     }
 }
 
+impl Value {
+    /// Convenience constructors for building documents to [`dump`].
+    pub fn num(n: f64) -> Value {
+        Value::Num(n)
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    pub fn arr(items: Vec<Value>) -> Value {
+        Value::Arr(items)
+    }
+
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+}
+
+/// Serialize a [`Value`] to compact JSON (the inverse of [`parse`]): the
+/// snapshot header and the CLI `--json` outputs go through this.
+pub fn dump(v: &Value) -> String {
+    let mut out = String::new();
+    dump_into(v, &mut out);
+    out
+}
+
+fn dump_into(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => {
+            if n.is_finite() {
+                if *n == n.trunc() && n.abs() < 1e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            } else {
+                // JSON has no inf/nan; null is the least-wrong encoding
+                out.push_str("null");
+            }
+        }
+        Value::Str(s) => dump_str(s, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, item) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                dump_into(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(m) => {
+            out.push('{');
+            for (i, (k, item)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                dump_str(k, out);
+                out.push(':');
+                dump_into(item, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn dump_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
 pub fn parse(s: &str) -> Result<Value> {
     let mut p = Parser { b: s.as_bytes(), i: 0 };
     let v = p.value()?;
@@ -250,5 +335,24 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse(r#""A""#).unwrap(), Value::Str("A".into()));
+    }
+
+    #[test]
+    fn dump_parse_roundtrip() {
+        let v = Value::obj(vec![
+            ("name", Value::str("cbq \"snap\"\n")),
+            ("bits", Value::num(4.0)),
+            ("ratio", Value::num(0.1625)),
+            ("flags", Value::arr(vec![Value::Bool(true), Value::Null])),
+            ("nested", Value::obj(vec![("k", Value::num(-3.0))])),
+        ]);
+        let s = dump(&v);
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_integers_without_exponent() {
+        assert_eq!(dump(&Value::num(96.0)), "96");
+        assert_eq!(dump(&Value::num(1.5)), "1.5");
     }
 }

@@ -18,7 +18,13 @@
 //! - [`quant`] — shared fake-quant math (bit-exact with the L1 kernels).
 //! - [`eval`] — perplexity + zero-shot choice tasks.
 //! - [`hessian`] — finite-difference dependency analysis (paper Fig. 1).
+//! - [`snapshot`] — the `CBQS` store: a quantized model serialized with
+//!   true-bit-width packed codes + quant state, round-tripping bit-exactly
+//!   (`cbq export` / `cbq load-eval`).
+//! - [`serve`] — snapshot registry + batched serving engine with pinned
+//!   window bindings and a request batcher (`cbq serve-bench`).
 //!
+//! ## Quantize once…
 //! ```no_run
 //! use cbq::prelude::*;
 //! use cbq::calib::corpus::Style;
@@ -27,6 +33,24 @@
 //! let mut pipe = Pipeline::new(&art, &rt, "t")?;
 //! let (model, summary) = pipe.run(&QuantJob::cbq(BitSpec::w4a4()))?;
 //! println!("ppl: {:.2}", pipe.perplexity(&model, Style::C4, 8)?);
+//! // …persist the deliverable: packed codes + scales + quant state
+//! cbq::snapshot::save("t_w4a4.cbqs", &pipe.cfg, &model)?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! ## …serve forever
+//! ```no_run
+//! use cbq::prelude::*;
+//! use cbq::serve::{Batcher, ModelRegistry, ServeEngine};
+//! let art = Artifacts::load("artifacts")?;
+//! let rt = Runtime::new(&art)?;
+//! let mut reg = ModelRegistry::new();
+//! let snap = reg.load("t-w4a4", "t_w4a4.cbqs")?;
+//! let mut engine = ServeEngine::new(&rt, &art, snap)?;
+//! let requests = cbq::serve::batcher::standard_mix(96, 32, 8, 8);
+//! let (responses, stats) = Batcher::coalescing(&engine).run(&mut engine, &requests)?;
+//! println!("{:.0} tok/s at {:.0}% occupancy",
+//!          stats.tokens_per_s(), stats.occupancy() * 100.0);
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 
@@ -44,6 +68,8 @@ pub mod model_state;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
+pub mod snapshot;
 pub mod tensor;
 
 pub mod prelude {

@@ -1,30 +1,41 @@
 //! `cbq` — the CBQ quantization launcher.
 //!
 //! Subcommands:
-//!   quantize  run a full PTQ job (method x bits x preproc x CBD config)
-//!             and report perplexity vs the FP model
-//!   eval      evaluate the FP model (sanity baseline)
-//!   zeroshot  quantize then run the zero-shot task suite
-//!   hessian   finite-difference dependency analysis (paper Fig. 1)
-//!   info      print the artifact manifest summary
+//!   quantize    run a full PTQ job (method x bits x preproc x CBD config)
+//!               and report perplexity vs the FP model
+//!   export      quantize, then persist the model as a CBQS snapshot
+//!               (true-bit-width packed codes + quant state)
+//!   load-eval   load a CBQS snapshot and evaluate it (bit-exact vs the
+//!               in-memory pipeline that produced it)
+//!   serve-bench batched serving benchmark over a snapshot: coalesced vs
+//!               one-by-one dispatch, tokens/s + batch occupancy
+//!   eval        evaluate the FP model (sanity baseline)
+//!   zeroshot    quantize then run the zero-shot task suite
+//!   hessian     finite-difference dependency analysis (paper Fig. 1)
+//!   info        print the artifact manifest summary
 //!
 //! Flag parsing is hand-rolled (`cbq::cli`) — the build environment vendors
-//! only the xla crate's dependency closure, so no clap.
+//! only the xla crate's dependency closure, so no clap. Both `--key value`
+//! and `--key=value` work.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use cbq::calib::corpus::Style;
 use cbq::cli::Args;
 use cbq::config::{BitSpec, PreprocMethod, QuantJob, RoundingMode};
 use cbq::coordinator::Pipeline;
 use cbq::hessian::{offdiag_ratio, HessianProbe};
-use cbq::report::{fmt_f, heatmap, Table};
+use cbq::json::{self, Value};
+use cbq::report::{fmt_bytes, fmt_f, heatmap, Table};
 use cbq::runtime::{Artifacts, Runtime};
+use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor, ServeEngine, ServeStats};
+use cbq::snapshot;
 
 const USAGE: &str = "\
 cbq — Cross-Block Quantization for LLMs (ICLR 2025 reproduction)
 
 USAGE: cbq [--artifacts DIR] <COMMAND> [flags]
+       (flags accept both `--key value` and `--key=value`)
 
 COMMANDS
   info                         artifact manifest summary
@@ -33,6 +44,18 @@ COMMANDS
             --preproc cfp|none|omse|percentile|os|smoothquant|cfp-act
             --window 2 --overlap 1 --epochs 3 --rank 5
             --calib 32 --eval-batches 16
+  export    quantize + persist a CBQS snapshot (packed low-bit codes,
+            scales, LoRA offsets, activation clips, config fingerprint,
+            checksum). Same flags as quantize, plus:
+            --out snap.cbqs      output path (default <model>_<label>.cbqs)
+            --eval-batches 8     also record in-memory perplexity
+            --json report.json   machine-readable export report
+  load-eval --snapshot snap.cbqs [--eval-batches 16] [--json out.json]
+            load a snapshot, verify fingerprint + checksum, evaluate
+            perplexity (bit-exact vs the in-memory pipeline)
+  serve-bench --snapshot snap.cbqs [--ppl-requests 32]
+            [--choice-requests 8] [--hidden-requests 8] [--json out.json]
+            batched vs one-by-one serving throughput over a request mix
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
 ";
@@ -58,6 +81,62 @@ fn parse_preproc(s: &str) -> Result<PreprocMethod> {
         "cfp" => PreprocMethod::CfpFull,
         p => bail!("unknown preproc `{p}`"),
     })
+}
+
+/// Shared job construction for `quantize` and `export`.
+fn build_job(args: &Args, n_layers: usize) -> Result<QuantJob> {
+    let bits = if args.flag("star") {
+        BitSpec::w2a16_star(n_layers)
+    } else {
+        BitSpec::new(args.get_usize("w", 4)? as u8, args.get_usize("a", 16)? as u8)
+    };
+    let mut job = parse_method(args, bits)?;
+    if let Some(p) = args.get("preproc") {
+        job.preproc = parse_preproc(p)?;
+    }
+    job.window = args.get_usize("window", job.window)?;
+    job.overlap = args.get_usize("overlap", job.overlap)?;
+    job.epochs = args.get_usize("epochs", job.epochs)?;
+    job.calib_sequences = args.get_usize("calib", 32)?;
+    let rank = args.get_usize("rank", job.rank)?;
+    if rank == 0 {
+        job.rounding = RoundingMode::Nearest;
+    } else {
+        job.rank = rank;
+    }
+    Ok(job)
+}
+
+fn write_json(args: &Args, doc: &Value) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, json::dump(doc))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn serve_stats_row(t: &mut Table, mode: &str, s: &ServeStats) {
+    t.row(&[
+        mode.into(),
+        s.dispatches.to_string(),
+        format!("{:.1}%", s.occupancy() * 100.0),
+        fmt_f(s.tokens_per_s(), 0),
+        fmt_f(s.requests_per_s(), 1),
+        format!("{:.2}s", s.wall_seconds),
+    ]);
+}
+
+fn serve_stats_json(s: &ServeStats) -> Value {
+    Value::obj(vec![
+        ("requests", Value::num(s.requests as f64)),
+        ("dispatches", Value::num(s.dispatches as f64)),
+        ("rows", Value::num(s.rows as f64)),
+        ("tokens", Value::num(s.tokens as f64)),
+        ("occupancy", Value::num(s.occupancy())),
+        ("tokens_per_s", Value::num(s.tokens_per_s())),
+        ("requests_per_s", Value::num(s.requests_per_s())),
+        ("wall_seconds", Value::num(s.wall_seconds)),
+    ])
 }
 
 fn main() -> Result<()> {
@@ -102,26 +181,7 @@ fn main() -> Result<()> {
         "quantize" => {
             let model = args.get("model").unwrap_or("s");
             let mut pipe = Pipeline::new(&art, &rt, model)?;
-            let n_layers = pipe.cfg.n_layers;
-            let bits = if args.flag("star") {
-                BitSpec::w2a16_star(n_layers)
-            } else {
-                BitSpec::new(args.get_usize("w", 4)? as u8, args.get_usize("a", 16)? as u8)
-            };
-            let mut job = parse_method(&args, bits)?;
-            if let Some(p) = args.get("preproc") {
-                job.preproc = parse_preproc(p)?;
-            }
-            job.window = args.get_usize("window", job.window)?;
-            job.overlap = args.get_usize("overlap", job.overlap)?;
-            job.epochs = args.get_usize("epochs", job.epochs)?;
-            job.calib_sequences = args.get_usize("calib", 32)?;
-            let rank = args.get_usize("rank", job.rank)?;
-            if rank == 0 {
-                job.rounding = RoundingMode::Nearest;
-            } else {
-                job.rank = rank;
-            }
+            let job = build_job(&args, pipe.cfg.n_layers)?;
             let eval_batches = args.get_usize("eval-batches", 16)?;
             println!("running {} on model {model}...", job.label());
             let (qm, summary) = pipe.run(&job)?;
@@ -145,6 +205,165 @@ fn main() -> Result<()> {
                 "runtime: {} executions, {:.1}ms exec, {:.1}ms compile",
                 stats.executions, stats.execute_ms, stats.compile_ms
             );
+        }
+        "export" => {
+            let model = args.get("model").unwrap_or("s");
+            let mut pipe = Pipeline::new(&art, &rt, model)?;
+            let job = build_job(&args, pipe.cfg.n_layers)?;
+            println!("running {} on model {model}...", job.label());
+            let (qm, summary) = pipe.run(&job)?;
+
+            let eval_batches = args.get_usize("eval-batches", 8)?;
+            let ppl = if eval_batches > 0 {
+                Some(pipe.perplexity(&qm, Style::C4, eval_batches)?)
+            } else {
+                None
+            };
+
+            let default_out = format!(
+                "{model}_{}.cbqs",
+                job.bits.label().to_lowercase().replace('*', "s")
+            );
+            let out = args.get("out").unwrap_or(&default_out).to_string();
+            let report = snapshot::save(&out, &pipe.cfg, &qm)?;
+
+            let mut t = Table::new(
+                format!("export {} -> {out}", job.label()),
+                &["snapshot", "f32 equivalent", "ratio", "packed codes"],
+            );
+            t.row(&[
+                fmt_bytes(report.file_bytes),
+                fmt_bytes(report.f32_equiv_bytes),
+                format!("{:.1}%", report.compression_ratio() * 100.0),
+                fmt_bytes(report.packed_code_bytes),
+            ]);
+            t.print();
+            if let Some(p) = ppl {
+                println!("in-memory ppl(c4, {eval_batches} batches) = {p:.6}");
+                println!("verify with: cbq load-eval --snapshot={out} --eval-batches={eval_batches}");
+            }
+            println!("quantized in {:.1}s — serve forever.", summary.quant_seconds);
+
+            write_json(
+                &args,
+                &Value::obj(vec![
+                    ("command", Value::str("export")),
+                    ("model", Value::str(model)),
+                    ("label", Value::str(job.label())),
+                    ("out", Value::str(out.clone())),
+                    ("file_bytes", Value::num(report.file_bytes as f64)),
+                    ("f32_equiv_bytes", Value::num(report.f32_equiv_bytes as f64)),
+                    ("compression_ratio", Value::num(report.compression_ratio())),
+                    ("packed_code_bytes", Value::num(report.packed_code_bytes as f64)),
+                    ("quant_seconds", Value::num(summary.quant_seconds)),
+                    ("ppl_c4", ppl.map(Value::num).unwrap_or(Value::Null)),
+                ]),
+            )?;
+        }
+        "load-eval" => {
+            let path = args
+                .get("snapshot")
+                .ok_or_else(|| anyhow!("load-eval requires --snapshot PATH"))?;
+            let snap = snapshot::load(path)?;
+            let cfg_name = snap.meta.cfg.name.clone();
+            let mism = snapshot::fingerprint_mismatches(&snap.meta.cfg, art.cfg(&cfg_name)?);
+            if !mism.is_empty() {
+                bail!(
+                    "snapshot fingerprint does not match artifacts config `{cfg_name}`:\n  {}",
+                    mism.join("\n  ")
+                );
+            }
+            println!(
+                "loaded {path}: model {cfg_name}, {} {}-rounding, checksum OK, fingerprint OK",
+                snap.meta.label,
+                snap.meta.rounding.name()
+            );
+            let pipe = Pipeline::new(&art, &rt, &cfg_name)?;
+            let n = args.get_usize("eval-batches", 16)?;
+            let c4 = pipe.perplexity(&snap.model, Style::C4, n)?;
+            let wiki = pipe.perplexity(&snap.model, Style::Wiki, n)?;
+            let mut t = Table::new(
+                format!("load-eval {} ({n} batches)", snap.meta.label),
+                &["ppl c4", "ppl wiki"],
+            );
+            t.row(&[fmt_f(c4, 6), fmt_f(wiki, 6)]);
+            t.print();
+            println!("(bit-exact: these equal the in-memory pipeline's values)");
+            write_json(
+                &args,
+                &Value::obj(vec![
+                    ("command", Value::str("load-eval")),
+                    ("snapshot", Value::str(path)),
+                    ("model", Value::str(cfg_name.clone())),
+                    ("label", Value::str(snap.meta.label.clone())),
+                    ("eval_batches", Value::num(n as f64)),
+                    ("ppl_c4", Value::num(c4)),
+                    ("ppl_wiki", Value::num(wiki)),
+                ]),
+            )?;
+        }
+        "serve-bench" => {
+            let path = args
+                .get("snapshot")
+                .ok_or_else(|| anyhow!("serve-bench requires --snapshot PATH"))?;
+            let mut reg = ModelRegistry::new();
+            let snap = reg.load("bench", path)?;
+            let mism = snapshot::fingerprint_mismatches(&snap.meta.cfg, art.cfg(&snap.meta.cfg.name)?);
+            if !mism.is_empty() {
+                bail!("snapshot/artifacts mismatch:\n  {}", mism.join("\n  "));
+            }
+            let seq = snap.meta.cfg.seq;
+            let n_ppl = args.get_usize("ppl-requests", 32)?;
+            let n_choice = args.get_usize("choice-requests", 8)?;
+            let n_hidden = args.get_usize("hidden-requests", 8)?;
+            let requests = batcher::standard_mix(seq, n_ppl, n_choice, n_hidden);
+            anyhow::ensure!(!requests.is_empty(), "request mix is empty — raise --ppl-requests");
+            println!(
+                "serving {} requests ({} ppl / {} choice / {} hidden) from {}",
+                requests.len(),
+                n_ppl,
+                n_choice,
+                n_hidden,
+                snap.meta.label
+            );
+
+            let mut engine = ServeEngine::new(&rt, &art, snap.clone())?;
+            // warm-up dispatch so neither timed run pays first-call costs
+            engine.execute(&requests[0].rows[..1])?;
+
+            let (resp_b, stats_b) = Batcher::coalescing(&engine).run(&mut engine, &requests)?;
+            let (resp_s, stats_s) = Batcher::sequential().run(&mut engine, &requests)?;
+
+            // both schedules must produce identical answers (full structural
+            // compare: ppl sums, choice picks + scores, hidden token counts)
+            let agree = resp_b == resp_s;
+
+            let mut t = Table::new(
+                format!("serve-bench ({} window dispatches/forward)", engine.plan_len()),
+                &["mode", "dispatches", "occupancy", "tok/s", "req/s", "wall"],
+            );
+            serve_stats_row(&mut t, "batched", &stats_b);
+            serve_stats_row(&mut t, "one-by-one", &stats_s);
+            t.print();
+            let speedup = stats_b.tokens_per_s() / stats_s.tokens_per_s().max(1e-12);
+            println!(
+                "batched speedup: {speedup:.2}x tokens/s; responses identical: {}",
+                if agree { "yes" } else { "NO — serving bug" }
+            );
+
+            write_json(
+                &args,
+                &Value::obj(vec![
+                    ("command", Value::str("serve-bench")),
+                    ("snapshot", Value::str(path)),
+                    ("label", Value::str(snap.meta.label.clone())),
+                    ("requests", Value::num(requests.len() as f64)),
+                    ("batched", serve_stats_json(&stats_b)),
+                    ("sequential", serve_stats_json(&stats_s)),
+                    ("speedup_tokens_per_s", Value::num(speedup)),
+                    ("responses_identical", Value::Bool(agree)),
+                ]),
+            )?;
         }
         "zeroshot" => {
             let model = args.get("model").unwrap_or("s");

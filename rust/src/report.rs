@@ -82,6 +82,22 @@ impl Table {
     }
 }
 
+/// Human-readable byte counts for the snapshot/serve summaries.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = b as f64;
+    let mut u = 0usize;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
 pub fn fmt_f(v: f64, prec: usize) -> String {
     if !v.is_finite() {
         return "inf".into();
@@ -165,6 +181,13 @@ mod tests {
         let mut t = Table::new("demo", &["x", "y"]);
         t.row(&["1".into(), "2".into()]);
         assert_eq!(t.to_csv().lines().count(), 2);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
     }
 
     #[test]

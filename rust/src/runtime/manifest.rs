@@ -22,7 +22,7 @@ pub struct Manifest {
     pub windows: BTreeMap<String, Vec<usize>>,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelCfg {
     pub name: String,
     pub d_model: usize,
@@ -39,7 +39,27 @@ pub struct ModelCfg {
 }
 
 impl ModelCfg {
-    fn from_json(v: &Value) -> Result<Self> {
+    /// JSON encoding (the snapshot header embeds the full config as the
+    /// model fingerprint; `from_json` is its inverse and also parses the
+    /// manifest's `configs` entries).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("d_model", Value::num(self.d_model as f64)),
+            ("n_layers", Value::num(self.n_layers as f64)),
+            ("n_heads", Value::num(self.n_heads as f64)),
+            ("d_ffn", Value::num(self.d_ffn as f64)),
+            ("vocab", Value::num(self.vocab as f64)),
+            ("seq", Value::num(self.seq as f64)),
+            ("batch", Value::num(self.batch as f64)),
+            ("rank_pad", Value::num(self.rank_pad as f64)),
+            ("head_dim", Value::num(self.head_dim as f64)),
+            ("outlier_channels", Value::num(self.outlier_channels as f64)),
+            ("outlier_gain", Value::num(self.outlier_gain)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),
             d_model: v.get("d_model")?.as_usize()?,

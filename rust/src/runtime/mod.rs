@@ -117,6 +117,12 @@ impl Artifacts {
         io::read_tensors(self.dir.join(format!("weights_{cfg}.bin")))
     }
 
+    /// Exported window sizes for a config; `[1]` when the manifest lists
+    /// none (the single source of the fallback shared by eval and serve).
+    pub fn windows(&self, cfg: &str) -> Vec<usize> {
+        self.manifest.windows.get(cfg).cloned().unwrap_or_else(|| vec![1])
+    }
+
     /// Cross-language corpus parity vectors (first 2048 tokens per style).
     pub fn corpus_ref(&self) -> Result<BTreeMap<String, Vec<u32>>> {
         let raw = std::fs::read_to_string(self.dir.join("corpus_ref.json"))?;

@@ -1,0 +1,437 @@
+//! Request batcher: coalesces queued eval requests into maximal batches.
+//!
+//! The executable surface is fixed-shape (`[batch, seq]` rows), so serving
+//! throughput is won by *filling* those rows: a perplexity segment, one
+//! zero-shot candidate, and a forward-hidden call are all row-shaped work,
+//! and the batcher packs rows from different requests into one dispatch.
+//! Issuing the same rows one-by-one pays a full dispatch per row (the
+//! remaining `batch-1` rows ride along as padding) — the measured
+//! batched-vs-sequential gap `cbq serve-bench` reports.
+//!
+//! This module is deliberately runtime-free: it schedules over the
+//! [`RowExecutor`] trait, which the PJRT-backed engine (`serve::ServeEngine`)
+//! implements and tests mock.
+
+use anyhow::{ensure, Result};
+
+use crate::calib::{self, corpus::Style, TaskKind};
+
+/// One row of model work: `seq` input tokens, `seq` next-token targets and a
+/// per-position loss mask.
+#[derive(Clone, Debug)]
+pub struct WorkRow {
+    pub inputs: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl WorkRow {
+    /// Build from a (seq+1)-token row; positions before `score_from` are
+    /// masked out (0 scores everything, i.e. plain perplexity).
+    pub fn from_tokens(tokens: &[u32], score_from: usize) -> Self {
+        let seq = tokens.len() - 1;
+        let mut mask = vec![0.0f32; seq];
+        for (s, m) in mask.iter_mut().enumerate() {
+            if s + 1 >= score_from {
+                *m = 1.0;
+            }
+        }
+        Self {
+            inputs: tokens[..seq].iter().map(|&t| t as i32).collect(),
+            targets: tokens[1..].iter().map(|&t| t as i32).collect(),
+            mask,
+        }
+    }
+}
+
+/// Per-row result: masked NLL sum and masked position count.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RowOut {
+    pub nll: f32,
+    pub count: f32,
+}
+
+/// Anything that can run up to [`batch_rows`](Self::batch_rows) rows in one
+/// dispatch. Implementations pad short dispatches internally.
+pub trait RowExecutor {
+    fn batch_rows(&self) -> usize;
+    fn seq(&self) -> usize;
+    fn execute(&mut self, rows: &[WorkRow]) -> Result<Vec<RowOut>>;
+}
+
+/// What a queued request wants back.
+#[derive(Clone, Debug)]
+pub enum RequestKind {
+    /// Perplexity over the request's rows: responds with summed NLL/count.
+    Ppl,
+    /// Zero-shot choice: each row is one candidate; responds with the argmin
+    /// of per-row mean NLL.
+    Choice { correct: usize },
+    /// Forward pass only (downstream consumes hidden states); responds with
+    /// the token count pushed through.
+    Hidden,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub kind: RequestKind,
+    pub rows: Vec<WorkRow>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Ppl { nll: f64, count: f64 },
+    Choice { pick: usize, correct: usize, scores: Vec<f32> },
+    Hidden { tokens: usize },
+}
+
+impl Response {
+    pub fn perplexity(&self) -> Option<f64> {
+        match self {
+            Response::Ppl { nll, count } => Some((nll / count.max(1.0)).exp()),
+            _ => None,
+        }
+    }
+}
+
+/// Throughput accounting for one batcher run.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub dispatches: usize,
+    /// real (non-padding) rows executed
+    pub rows: usize,
+    /// dispatches * batch capacity
+    pub row_capacity: usize,
+    /// real tokens pushed through (rows * seq)
+    pub tokens: usize,
+    pub wall_seconds: f64,
+}
+
+impl ServeStats {
+    /// Fraction of executed batch rows that carried real work.
+    pub fn occupancy(&self) -> f64 {
+        self.rows as f64 / self.row_capacity.max(1) as f64
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.wall_seconds.max(1e-12)
+    }
+
+    pub fn requests_per_s(&self) -> f64 {
+        self.requests as f64 / self.wall_seconds.max(1e-12)
+    }
+}
+
+/// Coalescing request batcher.
+pub struct Batcher {
+    /// Upper bound on rows per dispatch: `batch_rows()` when coalescing,
+    /// 1 for the sequential baseline.
+    rows_per_dispatch: usize,
+}
+
+impl Batcher {
+    /// Coalesce rows from all requests into maximal dispatches.
+    pub fn coalescing(exec: &dyn RowExecutor) -> Self {
+        Self { rows_per_dispatch: exec.batch_rows().max(1) }
+    }
+
+    /// One row per dispatch (the naive serving baseline).
+    pub fn sequential() -> Self {
+        Self { rows_per_dispatch: 1 }
+    }
+
+    /// Run every request to completion, returning per-request responses (in
+    /// request order) and throughput stats.
+    pub fn run(
+        &self,
+        exec: &mut dyn RowExecutor,
+        requests: &[Request],
+    ) -> Result<(Vec<Response>, ServeStats)> {
+        let seq = exec.seq();
+        let cap = exec.batch_rows().max(1);
+        let per_dispatch = self.rows_per_dispatch.clamp(1, cap);
+
+        // flatten: (request index, row index within request)
+        let mut flat: Vec<(usize, usize)> = Vec::new();
+        for (ri, req) in requests.iter().enumerate() {
+            ensure!(!req.rows.is_empty(), "request {ri} has no rows");
+            for (qi, row) in req.rows.iter().enumerate() {
+                ensure!(
+                    row.inputs.len() == seq && row.targets.len() == seq && row.mask.len() == seq,
+                    "request {ri} row {qi}: row length != executor seq {seq}"
+                );
+                flat.push((ri, qi));
+            }
+        }
+
+        let mut outs: Vec<Vec<RowOut>> =
+            requests.iter().map(|r| vec![RowOut::default(); r.rows.len()]).collect();
+        let mut stats = ServeStats { requests: requests.len(), ..Default::default() };
+        let t0 = std::time::Instant::now();
+        for chunk in flat.chunks(per_dispatch) {
+            let rows: Vec<WorkRow> =
+                chunk.iter().map(|&(ri, qi)| requests[ri].rows[qi].clone()).collect();
+            let res = exec.execute(&rows)?;
+            ensure!(
+                res.len() == rows.len(),
+                "executor returned {} results for {} rows",
+                res.len(),
+                rows.len()
+            );
+            for (&(ri, qi), out) in chunk.iter().zip(res) {
+                outs[ri][qi] = out;
+            }
+            stats.dispatches += 1;
+            stats.rows += rows.len();
+            stats.row_capacity += cap;
+            stats.tokens += rows.len() * seq;
+        }
+        stats.wall_seconds = t0.elapsed().as_secs_f64();
+
+        let responses = requests
+            .iter()
+            .zip(&outs)
+            .map(|(req, rows)| match &req.kind {
+                RequestKind::Ppl => Response::Ppl {
+                    nll: rows.iter().map(|r| r.nll as f64).sum(),
+                    count: rows.iter().map(|r| r.count as f64).sum(),
+                },
+                RequestKind::Choice { correct } => {
+                    let scores: Vec<f32> =
+                        rows.iter().map(|r| r.nll / r.count.max(1.0)).collect();
+                    // total_cmp: NaN scores (broken model numerics) sort
+                    // last instead of panicking the serve loop
+                    let pick = scores
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    Response::Choice { pick, correct: *correct, scores }
+                }
+                RequestKind::Hidden => {
+                    Response::Hidden { tokens: rows.len() * seq }
+                }
+            })
+            .collect();
+        Ok((responses, stats))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request-mix builders (serve-bench workload)
+// ---------------------------------------------------------------------------
+
+/// Perplexity requests: each covers one held-out (seq+1)-token segment.
+pub fn ppl_requests(style: Style, n_segments: usize, seq: usize) -> Vec<Request> {
+    let rows_per_batch = 4;
+    let batches =
+        calib::eval_stream(style, n_segments.div_ceil(rows_per_batch), rows_per_batch, seq);
+    let mut out = Vec::with_capacity(n_segments);
+    'outer: for b in &batches {
+        for r in 0..b.batch {
+            if out.len() == n_segments {
+                break 'outer;
+            }
+            out.push(Request {
+                kind: RequestKind::Ppl,
+                rows: vec![WorkRow::from_tokens(b.row(r), 0)],
+            });
+        }
+    }
+    out
+}
+
+/// Zero-shot choice requests: one per item, one row per candidate.
+pub fn choice_requests(kind: TaskKind, n_items: usize, seq: usize) -> Vec<Request> {
+    calib::choice_task(kind, n_items, seq + 1)
+        .into_iter()
+        .map(|item| {
+            let rows = item
+                .cands
+                .iter()
+                .map(|c| {
+                    let mut toks = item.prompt.clone();
+                    toks.extend_from_slice(c);
+                    WorkRow::from_tokens(&toks, item.prompt.len())
+                })
+                .collect();
+            Request { kind: RequestKind::Choice { correct: item.correct }, rows }
+        })
+        .collect()
+}
+
+/// Forward-hidden requests over calibration-style segments.
+pub fn hidden_requests(n: usize, seq: usize) -> Vec<Request> {
+    let rows_per_batch = 4;
+    let batches = calib::batches(Style::Wiki, 7777, n.div_ceil(rows_per_batch), rows_per_batch, seq);
+    let mut out = Vec::with_capacity(n);
+    'outer: for b in &batches {
+        for r in 0..b.batch {
+            if out.len() == n {
+                break 'outer;
+            }
+            out.push(Request {
+                kind: RequestKind::Hidden,
+                rows: vec![WorkRow::from_tokens(b.row(r), 0)],
+            });
+        }
+    }
+    out
+}
+
+/// The standard mixed serve-bench workload.
+pub fn standard_mix(seq: usize, n_ppl: usize, n_choice: usize, n_hidden: usize) -> Vec<Request> {
+    let mut reqs = ppl_requests(Style::C4, n_ppl, seq);
+    reqs.extend(choice_requests(TaskKind::TopicMatch, n_choice, seq));
+    reqs.extend(hidden_requests(n_hidden, seq));
+    reqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock: nll = sum of masked targets, count = mask sum; records
+    /// dispatch sizes.
+    struct Mock {
+        batch: usize,
+        seq: usize,
+        dispatch_sizes: Vec<usize>,
+    }
+
+    impl RowExecutor for Mock {
+        fn batch_rows(&self) -> usize {
+            self.batch
+        }
+        fn seq(&self) -> usize {
+            self.seq
+        }
+        fn execute(&mut self, rows: &[WorkRow]) -> Result<Vec<RowOut>> {
+            assert!(rows.len() <= self.batch);
+            self.dispatch_sizes.push(rows.len());
+            Ok(rows
+                .iter()
+                .map(|r| RowOut {
+                    nll: r
+                        .targets
+                        .iter()
+                        .zip(&r.mask)
+                        .map(|(&t, &m)| t as f32 * m)
+                        .sum(),
+                    count: r.mask.iter().sum(),
+                })
+                .collect())
+        }
+    }
+
+    fn row(tokens: &[u32]) -> WorkRow {
+        WorkRow::from_tokens(tokens, 0)
+    }
+
+    #[test]
+    fn coalescing_fills_batches_and_sequential_does_not() {
+        let seq = 4;
+        let reqs: Vec<Request> = (0..10)
+            .map(|i| Request {
+                kind: RequestKind::Ppl,
+                rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
+            })
+            .collect();
+
+        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
+        let (resp_b, stats_b) = Batcher::coalescing(&m).run(&mut m, &reqs).unwrap();
+        assert_eq!(m.dispatch_sizes, vec![4, 4, 2]);
+        assert_eq!(stats_b.dispatches, 3);
+        assert_eq!(stats_b.rows, 10);
+        assert_eq!(stats_b.tokens, 40);
+        assert!((stats_b.occupancy() - 10.0 / 12.0).abs() < 1e-12);
+
+        let mut m1 = Mock { batch: 4, seq, dispatch_sizes: vec![] };
+        let (resp_s, stats_s) = Batcher::sequential().run(&mut m1, &reqs).unwrap();
+        assert_eq!(stats_s.dispatches, 10);
+        assert!((stats_s.occupancy() - 10.0 / 40.0).abs() < 1e-12);
+
+        // identical responses either way
+        for (a, b) in resp_b.iter().zip(&resp_s) {
+            match (a, b) {
+                (Response::Ppl { nll: n1, count: c1 }, Response::Ppl { nll: n2, count: c2 }) => {
+                    assert_eq!(n1, n2);
+                    assert_eq!(c1, c2);
+                }
+                _ => panic!("kind mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn choice_rows_coalesce_across_requests_and_pick_argmin() {
+        let seq = 3;
+        // candidate rows with known target sums: pick the smaller
+        let req = |a: [u32; 4], b: [u32; 4], correct: usize| Request {
+            kind: RequestKind::Choice { correct },
+            rows: vec![row(&a), row(&b)],
+        };
+        let reqs = vec![
+            req([0, 9, 9, 9], [0, 1, 1, 1], 1), // row1 smaller -> pick 1
+            req([0, 1, 0, 1], [0, 5, 5, 5], 0), // row0 smaller -> pick 0
+        ];
+        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
+        let (resp, stats) = Batcher::coalescing(&m).run(&mut m, &reqs).unwrap();
+        // 4 candidate rows from 2 requests fill exactly one dispatch
+        assert_eq!(stats.dispatches, 1);
+        match &resp[0] {
+            Response::Choice { pick, correct, scores } => {
+                assert_eq!(*pick, 1);
+                assert_eq!(*correct, 1);
+                assert_eq!(scores.len(), 2);
+            }
+            _ => panic!("wrong kind"),
+        }
+        match &resp[1] {
+            Response::Choice { pick, .. } => assert_eq!(*pick, 0),
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn masks_respect_prompt_boundary() {
+        let r = WorkRow::from_tokens(&[10, 11, 12, 13, 14], 3);
+        // seq = 4; positions scoring targets row[1..] = [11,12,13,14];
+        // score_from=3 masks predictions of tokens before index 3
+        assert_eq!(r.mask, vec![0.0, 0.0, 1.0, 1.0]);
+        assert_eq!(r.inputs, vec![10, 11, 12, 13]);
+        assert_eq!(r.targets, vec![11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn mix_builders_produce_well_formed_requests() {
+        let seq = 96;
+        let reqs = standard_mix(seq, 6, 3, 2);
+        assert_eq!(reqs.len(), 11);
+        for r in &reqs {
+            for row in &r.rows {
+                assert_eq!(row.inputs.len(), seq);
+                assert_eq!(row.targets.len(), seq);
+                assert_eq!(row.mask.len(), seq);
+            }
+        }
+        let n_choice = reqs
+            .iter()
+            .filter(|r| matches!(r.kind, RequestKind::Choice { .. }))
+            .count();
+        assert_eq!(n_choice, 3);
+        // choice requests carry 2 candidate rows each
+        for r in reqs.iter().filter(|r| matches!(r.kind, RequestKind::Choice { .. })) {
+            assert_eq!(r.rows.len(), 2);
+        }
+    }
+
+    #[test]
+    fn rejects_misshapen_rows() {
+        let mut m = Mock { batch: 2, seq: 4, dispatch_sizes: vec![] };
+        let reqs = vec![Request { kind: RequestKind::Ppl, rows: vec![row(&[1, 2, 3])] }];
+        assert!(Batcher::coalescing(&m).run(&mut m, &reqs).is_err());
+    }
+}

@@ -1,0 +1,154 @@
+//! Batched serving engine over snapshot-loaded quantized models.
+//!
+//! The quantize path (`coordinator`) produces a [`QuantizedModel`]; the
+//! snapshot store (`snapshot`) persists it; this module serves it:
+//!
+//! * [`registry::ModelRegistry`] — loads `CBQS` files by name and keeps the
+//!   reconstructed models resident;
+//! * [`ServeEngine`] — binds a resident model to the AOT executables,
+//!   covering the block chain with the *largest exported window
+//!   executables* (the same greedy covering `forward_hidden` uses) and
+//!   **pinning** every static input (weights, quant state, globals) as
+//!   device buffers once at engine build — steady-state dispatches upload
+//!   only the embedded token batch;
+//! * [`batcher::Batcher`] — coalesces queued eval requests (perplexity
+//!   segments, zero-shot choice items, forward-hidden calls) into maximal
+//!   batches and reports tokens/s, requests/s and batch occupancy.
+
+pub mod batcher;
+pub mod registry;
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{window_plan, Pipeline};
+use crate::runtime::{Artifacts, Bindings, Pinned, Runtime};
+use crate::tensor::{Tensor, TensorI32};
+
+pub use batcher::{Batcher, Request, RequestKind, Response, RowExecutor, RowOut, ServeStats, WorkRow};
+pub use registry::{LoadedSnapshot, ModelRegistry};
+
+/// A snapshot model bound to the runtime: per-window pinned weight buffers
+/// plus the pinned LM head, ready for row-batch execution.
+pub struct ServeEngine<'rt> {
+    rt: &'rt Runtime,
+    snap: Rc<LoadedSnapshot>,
+    /// (start block, window width, executable, pinned statics) per step of
+    /// the greedy covering.
+    steps: Vec<(usize, usize, String, Pinned)>,
+    lm_pinned: Pinned,
+}
+
+impl<'rt> ServeEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, art: &Artifacts, snap: Rc<LoadedSnapshot>) -> Result<Self> {
+        let cfg = &snap.meta.cfg;
+        let name = &cfg.name;
+        let model = &snap.model;
+        let windows = art.windows(name);
+        let plan = window_plan(&windows, cfg.n_layers);
+
+        let qmax_a = model.bits.qmax_a();
+        let a_en = if model.bits.act_enabled() { 1.0 } else { 0.0 };
+        let h_dims = [cfg.batch, cfg.seq, cfg.d_model];
+
+        let mut steps = Vec::with_capacity(plan.len());
+        for &(start, w) in &plan {
+            let exec = format!("win_fwd_w{w}_{name}");
+            rt.spec(&exec)
+                .with_context(|| format!("serve plan needs executable {exec}"))?;
+            let mut b = Bindings::new();
+            // everything except h_in is static for serving: pin it all,
+            // including the (ignored) reconstruction target.
+            b.set("target", Tensor::zeros(&h_dims));
+            for j in 0..w {
+                Pipeline::bind_block_weights(&mut b, j, &model.params.blocks[start + j]);
+                // weights are baked (fake-quantized) => w_en = 0; activation
+                // quant stays live with the learned alpha clips.
+                Pipeline::bind_qblock(&mut b, j, &model.qstate[start + j], qmax_a, 0.0, a_en, false);
+            }
+            Pipeline::bind_globals(&mut b, 0.0, 2.0, 0.0, 1.0, 1.0);
+            let pinned = rt.pin(&exec, b.inner())?;
+            steps.push((start, w, exec, pinned));
+        }
+
+        let lm_exec = format!("lm_eval_{name}");
+        rt.spec(&lm_exec)
+            .with_context(|| format!("serve plan needs executable {lm_exec}"))?;
+        let mut b = Bindings::new();
+        b.set("final_norm", model.params.final_norm.clone());
+        b.set("head", model.params.head.clone());
+        let lm_pinned = rt.pin(&lm_exec, b.inner())?;
+
+        Ok(Self { rt, snap, steps, lm_pinned })
+    }
+
+    pub fn snapshot(&self) -> &LoadedSnapshot {
+        &self.snap
+    }
+
+    /// Number of window dispatches per forward (the covering length).
+    pub fn plan_len(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Forward a full token batch through the pinned block chain. The
+    /// executables (and the pinned `target` buffer) are fixed-shape, so the
+    /// batch must be exactly `[cfg.batch, cfg.seq]` — partial batches are
+    /// padded by the [`RowExecutor`] path, not here.
+    pub fn forward_hidden(&self, tokens: &TensorI32) -> Result<Tensor> {
+        let cfg = &self.snap.meta.cfg;
+        anyhow::ensure!(
+            tokens.dims == [cfg.batch, cfg.seq],
+            "engine serves fixed [{}, {}] batches, got {:?}",
+            cfg.batch,
+            cfg.seq,
+            tokens.dims
+        );
+        let mut h = self.snap.model.params.embed_tokens(&tokens.data, cfg.batch, cfg.seq);
+        for (_start, _w, _exec, pinned) in &self.steps {
+            let mut b = Bindings::new();
+            b.set("h_in", h);
+            let out = self.rt.run_pinned(pinned, b.inner())?;
+            h = out["h_out"].clone();
+        }
+        Ok(h)
+    }
+}
+
+impl RowExecutor for ServeEngine<'_> {
+    fn batch_rows(&self) -> usize {
+        self.snap.meta.cfg.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.snap.meta.cfg.seq
+    }
+
+    fn execute(&mut self, rows: &[WorkRow]) -> Result<Vec<RowOut>> {
+        let cfg = &self.snap.meta.cfg;
+        let (bsz, seq) = (cfg.batch, cfg.seq);
+        anyhow::ensure!(rows.len() <= bsz, "{} rows exceed batch {bsz}", rows.len());
+        // pad the fixed-shape batch; padding rows are masked out entirely
+        let mut inputs = vec![0i32; bsz * seq];
+        let mut targets = vec![0i32; bsz * seq];
+        let mut mask = vec![0.0f32; bsz * seq];
+        for (r, row) in rows.iter().enumerate() {
+            inputs[r * seq..(r + 1) * seq].copy_from_slice(&row.inputs);
+            targets[r * seq..(r + 1) * seq].copy_from_slice(&row.targets);
+            mask[r * seq..(r + 1) * seq].copy_from_slice(&row.mask);
+        }
+        let h = self.forward_hidden(&TensorI32::new(vec![bsz, seq], inputs))?;
+        let mut b = Bindings::new();
+        b.set("h", h);
+        b.set_i32("targets", TensorI32::new(vec![bsz, seq], targets));
+        b.set("mask", Tensor::new(vec![bsz, seq], mask));
+        let out = self.rt.run_pinned(&self.lm_pinned, b.inner())?;
+        let (nll, count) = (&out["nll"], &out["count"]);
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(r, _)| RowOut { nll: nll.data[r], count: count.data[r] })
+            .collect())
+    }
+}

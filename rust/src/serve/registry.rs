@@ -1,0 +1,98 @@
+//! Model registry: loads CBQS snapshots by name/path and caches the
+//! reconstructed models for the serving engine.
+//!
+//! Loading a snapshot is the expensive part of cold-start (dequantize +
+//! qstate reconstruction); the registry makes it a one-time cost per model
+//! name, so a serve process can host several quantized variants (W4A16,
+//! W2A16*, ...) of the same base architecture side by side and route
+//! requests by name.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::snapshot::{self, SnapshotMeta};
+use crate::coordinator::QuantizedModel;
+
+/// One resident model.
+pub struct LoadedSnapshot {
+    pub name: String,
+    pub path: PathBuf,
+    pub meta: SnapshotMeta,
+    pub model: QuantizedModel,
+    pub file_bytes: u64,
+    pub load_seconds: f64,
+}
+
+/// Name-keyed snapshot cache.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, Rc<LoadedSnapshot>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load `path` under `name`, or return the cached model if `name` is
+    /// already resident (the path must then match — two different files
+    /// under one name is a routing bug, not a cache hit).
+    pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<Rc<LoadedSnapshot>> {
+        // canonicalize so "./m.cbqs" and its absolute path count as the same
+        // file; fall back to the raw path when the file does not exist yet
+        // (snapshot::load will produce the real error below)
+        let raw = path.as_ref().to_path_buf();
+        let path = raw.canonicalize().unwrap_or(raw);
+        if let Some(hit) = self.models.get(name) {
+            if hit.path != path {
+                bail!(
+                    "model `{name}` already resident from {:?}; refusing to shadow with {:?}",
+                    hit.path,
+                    path
+                );
+            }
+            return Ok(hit.clone());
+        }
+        let t0 = Instant::now();
+        let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        let snap = snapshot::load(&path)?;
+        let loaded = Rc::new(LoadedSnapshot {
+            name: name.to_string(),
+            path,
+            meta: snap.meta,
+            model: snap.model,
+            file_bytes,
+            load_seconds: t0.elapsed().as_secs_f64(),
+        });
+        self.models.insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    pub fn get(&self, name: &str) -> Result<Rc<LoadedSnapshot>> {
+        self.models
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("no model `{name}` in registry (resident: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Drop a resident model; returns whether it was present.
+    pub fn evict(&mut self, name: &str) -> bool {
+        self.models.remove(name).is_some()
+    }
+}

@@ -1,0 +1,210 @@
+//! `CBQS` binary container: the on-disk frame around a quantized-model
+//! snapshot.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! [magic "CBQS"][version u32][payload_len u32][payload][crc32(payload) u32]
+//! payload = [header_len u32][header JSON utf-8][n_entries u32][entry...]
+//! ```
+//!
+//! Entries use the shared codec in `tensor::io` (`write_entry`/`read_entry`),
+//! which is where the packed-integer dtype lives. The CRC covers the whole
+//! payload (header + entries), so a flipped bit anywhere — metadata or
+//! weights — is detected at load time before any tensor is interpreted.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::json::{self, Value};
+use crate::tensor::io::{read_entry, write_entry, ByteReader, Entry};
+
+pub const MAGIC: &[u8; 4] = b"CBQS";
+pub const VERSION: u32 = 1;
+
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven: the
+/// checksum runs over the whole payload on every save *and* load, and
+/// payloads scale with model size, so the 1 KiB table is worth it.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = (c >> 1) ^ (0xEDB8_8320 & (c & 1).wrapping_neg());
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ table[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Write a container. Returns bytes written.
+pub fn write_container(
+    path: impl AsRef<Path>,
+    header: &Value,
+    entries: &[(String, Entry)],
+) -> Result<u64> {
+    let header_json = json::dump(header);
+    ensure!(header_json.len() <= u32::MAX as usize, "snapshot header exceeds u32 framing");
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&(header_json.len() as u32).to_le_bytes());
+    payload.extend_from_slice(header_json.as_bytes());
+    payload.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (name, e) in entries {
+        write_entry(&mut payload, name, e)?;
+    }
+    ensure!(
+        payload.len() <= u32::MAX as usize,
+        "snapshot payload is {} bytes — exceeds the v1 u32 framing limit; \
+         shard the model before export",
+        payload.len()
+    );
+    let mut raw = Vec::with_capacity(payload.len() + 16);
+    raw.extend_from_slice(MAGIC);
+    raw.extend_from_slice(&VERSION.to_le_bytes());
+    raw.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    raw.extend_from_slice(&payload);
+    raw.extend_from_slice(&crc32(&payload).to_le_bytes());
+    std::fs::write(path.as_ref(), &raw)
+        .with_context(|| format!("writing snapshot {:?}", path.as_ref()))?;
+    Ok(raw.len() as u64)
+}
+
+/// Read and fully validate a container: magic, version, framing, checksum,
+/// and per-entry hardening (duplicates, truncation, overflow) all checked.
+pub fn read_container(path: impl AsRef<Path>) -> Result<(Value, BTreeMap<String, Entry>)> {
+    let raw = std::fs::read(path.as_ref())
+        .with_context(|| format!("reading snapshot {:?}", path.as_ref()))?;
+    let mut r = ByteReader::new(&raw);
+    let magic = r.take(4)?;
+    ensure!(magic == MAGIC, "not a CBQS snapshot (magic {:?})", magic);
+    let version = r.u32()?;
+    ensure!(version == VERSION, "unsupported CBQS version {version} (expected {VERSION})");
+    let payload_len = r.u32()? as usize;
+    ensure!(
+        r.remaining() == payload_len + 4,
+        "corrupt framing: payload {payload_len}B + crc vs {}B remaining",
+        r.remaining()
+    );
+    let payload = r.take(payload_len)?;
+    let stored_crc = r.u32()?;
+    let actual = crc32(payload);
+    ensure!(
+        stored_crc == actual,
+        "checksum mismatch: stored {stored_crc:#010x}, computed {actual:#010x} — snapshot corrupt"
+    );
+
+    let mut p = ByteReader::new(payload);
+    let header_len = p.u32()? as usize;
+    let header_raw = std::str::from_utf8(p.take(header_len)?)?;
+    let header = json::parse(header_raw).context("parsing snapshot header")?;
+    let n = p.u32()? as usize;
+    let mut entries = BTreeMap::new();
+    for _ in 0..n {
+        let (name, e) = read_entry(&mut p)?;
+        ensure!(entries.insert(name.clone(), e).is_none(), "duplicate entry `{name}`");
+    }
+    ensure!(p.is_done(), "{} trailing bytes after last entry", p.remaining());
+    Ok((header, entries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::io::PackedTensor;
+    use crate::tensor::Tensor;
+
+    fn sample() -> (Value, Vec<(String, Entry)>) {
+        let header = Value::obj(vec![("format", Value::str("CBQS")), ("v", Value::num(1.0))]);
+        let entries = vec![
+            ("w".to_string(), Entry::F32(Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]))),
+            (
+                "q".to_string(),
+                Entry::Packed(PackedTensor::pack(&[-8, 7, 0, 1, 2, -1], vec![6], 4).unwrap()),
+            ),
+        ];
+        (header, entries)
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // standard test vector: CRC-32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn container_roundtrip() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_roundtrip.bin");
+        write_container(&p, &header, &entries).unwrap();
+        let (h, m) = read_container(&p).unwrap();
+        assert_eq!(h, header);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["w"], entries[0].1);
+        assert_eq!(m["q"], entries[1].1);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn detects_bit_flip_anywhere() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_bitflip.bin");
+        write_container(&p, &header, &entries).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        // flip one bit in every payload byte position in turn
+        for pos in 12..clean.len() - 4 {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x10;
+            std::fs::write(&p, &bad).unwrap();
+            assert!(read_container(&p).is_err(), "bit flip at {pos} not detected");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_version_and_magic() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_ver.bin");
+        write_container(&p, &header, &entries).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+
+        let mut bad_magic = clean.clone();
+        bad_magic[0] = b'X';
+        std::fs::write(&p, &bad_magic).unwrap();
+        let e = read_container(&p).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+        let mut bad_ver = clean.clone();
+        bad_ver[4] = 99;
+        std::fs::write(&p, &bad_ver).unwrap();
+        let e = read_container(&p).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "{e:#}");
+
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_trunc.bin");
+        write_container(&p, &header, &entries).unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        for cut in [1usize, 5, clean.len() / 2] {
+            let bad = clean[..clean.len() - cut].to_vec();
+            std::fs::write(&p, &bad).unwrap();
+            assert!(read_container(&p).is_err(), "truncation by {cut} not detected");
+        }
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,358 @@
+//! Quantized-model snapshot store — the "quantize once, serve forever"
+//! deliverable (CBQ's headline tradeoff: hours of PTQ amortized over every
+//! later serving run).
+//!
+//! [`save`] serializes a finalized [`QuantizedModel`] into a versioned
+//! `CBQS` container (see [`format`]):
+//!
+//! * per-linear weight **codes at their true bit-width** (2/4/8-bit
+//!   bitpacked integers, not fake-quant f32) + the learned per-channel
+//!   scales — a w4 snapshot is ~1/8 the size of the f32 weights for the
+//!   quantized linears;
+//! * the activation-quant state eval needs (per-linear `alpha` clips),
+//!   the LoRA-Rounding factors, the [`BitSpec`] / [`RoundingMode`];
+//! * unquantized tensors (embeddings, LM head, norms) stored f32;
+//! * a header with the full model-config fingerprint and a CRC-32 content
+//!   checksum.
+//!
+//! [`load`] reverses it **bit-exactly**: the dequantized weights are the
+//! identical f32 values the in-memory pipeline produced (`w = q * s` in the
+//! same arithmetic `finalize_weights` used), so perplexity measured on a
+//! loaded snapshot equals the in-memory model's to the last bit.
+
+pub mod format;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::config::{BitSpec, RoundingMode};
+use crate::coordinator::{LinearQ, QuantizedModel};
+use crate::json::Value;
+use crate::model_state::{BlockParams, ModelParams};
+use crate::quant::{EPS, LINEARS};
+use crate::runtime::ModelCfg;
+use crate::tensor::io::{Entry, PackedTensor};
+use crate::tensor::Tensor;
+
+/// Everything the header records about a snapshot.
+#[derive(Clone, Debug)]
+pub struct SnapshotMeta {
+    pub cfg: ModelCfg,
+    pub bits: BitSpec,
+    pub rounding: RoundingMode,
+    /// Human label of the producing job (e.g. "CBQ W4A16").
+    pub label: String,
+}
+
+/// A loaded snapshot: metadata + the reconstructed model.
+pub struct Snapshot {
+    pub meta: SnapshotMeta,
+    pub model: QuantizedModel,
+}
+
+/// Size accounting returned by [`save`].
+#[derive(Clone, Debug)]
+pub struct SaveReport {
+    /// Bytes of the CBQS file on disk.
+    pub file_bytes: u64,
+    /// Bytes the same tensors occupy in f32 (the CBQW-equivalent payload).
+    pub f32_equiv_bytes: u64,
+    /// Bytes of bitpacked weight codes alone.
+    pub packed_code_bytes: u64,
+}
+
+impl SaveReport {
+    /// file size as a fraction of the f32 representation.
+    pub fn compression_ratio(&self) -> f64 {
+        self.file_bytes as f64 / self.f32_equiv_bytes.max(1) as f64
+    }
+}
+
+fn entry_f32(entries: &mut Vec<(String, Entry)>, name: String, t: Tensor) {
+    entries.push((name, Entry::F32(t)));
+}
+
+/// Derive the integer grid codes for a finalized weight matrix and verify
+/// the snapshot dequantization (`q * s`) reproduces it bit-exactly.
+fn codes_for(w: &Tensor, s_w: &Tensor, bits: u8, what: &str) -> Result<Vec<i32>> {
+    let (k, n) = (w.rows(), w.cols());
+    ensure!(s_w.len() == n, "{what}: {} scales for {n} output channels", s_w.len());
+    let half = 1i32 << (bits - 1);
+    let mut codes = vec![0i32; k * n];
+    for i in 0..k {
+        for j in 0..n {
+            let sc = s_w.data[j].max(EPS);
+            let v = w.at2(i, j);
+            let q = (v / sc).round();
+            ensure!(
+                q.is_finite() && q >= -(half as f32) && q < half as f32,
+                "{what}[{i},{j}]: code {q} outside signed {bits}-bit grid — \
+                 was this model finalized at these bits?"
+            );
+            let qi = q as i32;
+            // the round-trip contract: dequant must equal the baked weight
+            ensure!(
+                qi as f32 * sc == v,
+                "{what}[{i},{j}]: {v} is not on the quantization grid \
+                 (q={qi}, s={sc}) — only finalized quantized models export"
+            );
+            codes[i * n + j] = qi;
+        }
+    }
+    Ok(codes)
+}
+
+/// Serialize a finalized quantized model to `path`.
+pub fn save(path: impl AsRef<Path>, cfg: &ModelCfg, model: &QuantizedModel) -> Result<SaveReport> {
+    ensure!(
+        model.bits.bits_w <= 8,
+        "W{} is not a packable bit-width — snapshots hold quantized models \
+         (the FP reference stays in CBQW)",
+        model.bits.bits_w
+    );
+    ensure!(
+        model.params.blocks.len() == cfg.n_layers,
+        "model has {} blocks, config {} says {}",
+        model.params.blocks.len(),
+        cfg.name,
+        cfg.n_layers
+    );
+    let mut entries: Vec<(String, Entry)> = Vec::new();
+    let mut f32_equiv = 0u64;
+    let mut packed_bytes = 0u64;
+
+    for t in [&model.params.embed, &model.params.final_norm, &model.params.head] {
+        f32_equiv += 4 * t.len() as u64;
+    }
+    entry_f32(&mut entries, "embed".into(), model.params.embed.clone());
+    entry_f32(&mut entries, "final_norm".into(), model.params.final_norm.clone());
+    entry_f32(&mut entries, "head".into(), model.params.head.clone());
+
+    let store_lora = matches!(model.rounding, RoundingMode::Lora);
+    for (i, blk) in model.params.blocks.iter().enumerate() {
+        f32_equiv += 4 * (blk.attn_norm.len() + blk.mlp_norm.len()) as u64;
+        entry_f32(&mut entries, format!("blocks.{i}.attn_norm"), blk.attn_norm.clone());
+        entry_f32(&mut entries, format!("blocks.{i}.mlp_norm"), blk.mlp_norm.clone());
+        for l in LINEARS {
+            let w = &blk.linears[l];
+            let lq = model.qstate[i]
+                .get(l)
+                .ok_or_else(|| anyhow!("missing qstate for blocks.{i}.{l}"))?;
+            let bits = lq.bits_w;
+            if bits > 8 {
+                bail!(
+                    "blocks.{i}.{l} is {bits}-bit — snapshots pack at most 8 bits \
+                     (FP models stay in CBQW)"
+                );
+            }
+            ensure!(
+                bits == model.bits.weight_bits(i, l),
+                "blocks.{i}.{l}: qstate bits {bits} != spec {}",
+                model.bits.weight_bits(i, l)
+            );
+            let codes = codes_for(w, &lq.s_w, bits, &format!("blocks.{i}.{l}"))?;
+            let packed = PackedTensor::pack(&codes, w.dims.clone(), bits)?;
+            f32_equiv += 4 * w.len() as u64;
+            packed_bytes += packed.data.len() as u64;
+            entries.push((format!("blocks.{i}.{l}.q"), Entry::Packed(packed)));
+            entry_f32(&mut entries, format!("blocks.{i}.{l}.s_w"), lq.s_w.clone());
+            entry_f32(&mut entries, format!("blocks.{i}.{l}.alpha"), Tensor::scalar(lq.alpha));
+            if store_lora {
+                entry_f32(&mut entries, format!("blocks.{i}.{l}.a1"), lq.a1.clone());
+                entry_f32(&mut entries, format!("blocks.{i}.{l}.a2"), lq.a2.clone());
+            }
+        }
+    }
+
+    let header = Value::obj(vec![
+        ("format", Value::str("CBQS")),
+        ("version", Value::num(format::VERSION as f64)),
+        ("cfg", cfg.to_json()),
+        ("bits", model.bits.to_json()),
+        ("rounding", Value::str(model.rounding.name())),
+        ("label", Value::str(model.bits.label())),
+    ]);
+    let file_bytes = format::write_container(path, &header, &entries)?;
+    Ok(SaveReport { file_bytes, f32_equiv_bytes: f32_equiv, packed_code_bytes: packed_bytes })
+}
+
+fn take_f32(
+    entries: &mut BTreeMap<String, Entry>,
+    name: &str,
+    want_dims: Option<&[usize]>,
+) -> Result<Tensor> {
+    match entries.remove(name) {
+        Some(Entry::F32(t)) => {
+            if let Some(d) = want_dims {
+                ensure!(t.dims == d, "`{name}`: dims {:?}, config wants {:?}", t.dims, d);
+            }
+            Ok(t)
+        }
+        Some(Entry::Packed(_)) => bail!("`{name}`: expected f32, found packed"),
+        None => bail!("snapshot is missing tensor `{name}`"),
+    }
+}
+
+fn take_packed(entries: &mut BTreeMap<String, Entry>, name: &str) -> Result<PackedTensor> {
+    match entries.remove(name) {
+        Some(Entry::Packed(p)) => Ok(p),
+        Some(Entry::F32(_)) => bail!("`{name}`: expected packed codes, found f32"),
+        None => bail!("snapshot is missing tensor `{name}`"),
+    }
+}
+
+/// Load a snapshot, reconstructing the bit-exact [`QuantizedModel`].
+pub fn load(path: impl AsRef<Path>) -> Result<Snapshot> {
+    let (header, mut entries) = format::read_container(path)?;
+    ensure!(
+        header.get("format")?.as_str()? == "CBQS",
+        "header format field is not CBQS"
+    );
+    let cfg = ModelCfg::from_json(header.get("cfg")?)?;
+    // header numerics drive allocations (Vec::with_capacity, Tensor::zeros)
+    // before any entry is cross-checked, so bound them here: a crafted file
+    // with a valid CRC must produce an error, not an allocation abort.
+    for (field, v, cap) in [
+        ("n_layers", cfg.n_layers, 1usize << 10),
+        ("d_model", cfg.d_model, 1 << 17),
+        ("d_ffn", cfg.d_ffn, 1 << 19),
+        ("vocab", cfg.vocab, 1 << 21),
+        ("seq", cfg.seq, 1 << 17),
+        ("batch", cfg.batch, 1 << 12),
+        ("rank_pad", cfg.rank_pad, 1 << 10),
+    ] {
+        ensure!(v >= 1 && v <= cap, "snapshot header {field} = {v} outside sane range [1, {cap}]");
+    }
+    let bits = BitSpec::from_json(header.get("bits")?)?;
+    let rounding = RoundingMode::from_name(header.get("rounding")?.as_str()?)?;
+    let label = header.get("label")?.as_str()?.to_string();
+
+    let d = cfg.d_model;
+    let embed = take_f32(&mut entries, "embed", Some(&[cfg.vocab, d]))?;
+    let final_norm = take_f32(&mut entries, "final_norm", Some(&[d]))?;
+    let head = take_f32(&mut entries, "head", Some(&[d, cfg.vocab]))?;
+
+    let store_lora = matches!(rounding, RoundingMode::Lora);
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    let mut qstate: Vec<BTreeMap<String, LinearQ>> = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let attn_norm = take_f32(&mut entries, &format!("blocks.{i}.attn_norm"), Some(&[d]))?;
+        let mlp_norm = take_f32(&mut entries, &format!("blocks.{i}.mlp_norm"), Some(&[d]))?;
+        let mut linears = BTreeMap::new();
+        let mut lqs = BTreeMap::new();
+        for l in LINEARS {
+            let (fan_in, fan_out) = cfg.linear_shape(l);
+            let packed = take_packed(&mut entries, &format!("blocks.{i}.{l}.q"))?;
+            ensure!(
+                packed.dims == [fan_in, fan_out],
+                "blocks.{i}.{l}.q: dims {:?}, config wants [{fan_in}, {fan_out}]",
+                packed.dims
+            );
+            let spec_bits = bits.weight_bits(i, l);
+            ensure!(
+                packed.bits == spec_bits,
+                "blocks.{i}.{l}: packed at {} bits but spec says {spec_bits}",
+                packed.bits
+            );
+            let s_w =
+                take_f32(&mut entries, &format!("blocks.{i}.{l}.s_w"), Some(&[fan_out]))?;
+            let alpha =
+                take_f32(&mut entries, &format!("blocks.{i}.{l}.alpha"), Some(&[]))?.item();
+            let (a1, a2) = if store_lora {
+                (
+                    take_f32(
+                        &mut entries,
+                        &format!("blocks.{i}.{l}.a1"),
+                        Some(&[fan_in, cfg.rank_pad]),
+                    )?,
+                    take_f32(
+                        &mut entries,
+                        &format!("blocks.{i}.{l}.a2"),
+                        Some(&[cfg.rank_pad, fan_out]),
+                    )?,
+                )
+            } else {
+                (
+                    Tensor::zeros(&[fan_in, cfg.rank_pad]),
+                    Tensor::zeros(&[cfg.rank_pad, fan_out]),
+                )
+            };
+            // dequantize: the exact arithmetic finalize_weights used
+            let codes = packed.unpack();
+            let mut data = vec![0.0f32; fan_in * fan_out];
+            for r in 0..fan_in {
+                for c in 0..fan_out {
+                    let sc = s_w.data[c].max(EPS);
+                    data[r * fan_out + c] = codes[r * fan_out + c] as f32 * sc;
+                }
+            }
+            let w = Tensor::new(vec![fan_in, fan_out], data);
+            let lq = LinearQ::restore(&w, s_w, alpha, a1, a2, spec_bits);
+            linears.insert(l.to_string(), w);
+            lqs.insert(l.to_string(), lq);
+        }
+        blocks.push(BlockParams { attn_norm, mlp_norm, linears });
+        qstate.push(lqs);
+    }
+    ensure!(
+        entries.is_empty(),
+        "snapshot has {} unexpected extra tensors (first: `{}`)",
+        entries.len(),
+        entries.keys().next().unwrap()
+    );
+
+    let model = QuantizedModel {
+        params: ModelParams { embed, final_norm, head, blocks },
+        qstate,
+        bits: bits.clone(),
+        rounding,
+    };
+    Ok(Snapshot { meta: SnapshotMeta { cfg, bits, rounding, label }, model })
+}
+
+/// Compare a snapshot's config fingerprint against the artifacts' config.
+/// Returns the list of mismatched fields (empty = compatible).
+pub fn fingerprint_mismatches(snap: &ModelCfg, art: &ModelCfg) -> Vec<String> {
+    fn chk<T: PartialEq + std::fmt::Display>(
+        out: &mut Vec<String>,
+        field: &str,
+        a: &T,
+        b: &T,
+    ) {
+        if a != b {
+            out.push(format!("{field}: snapshot {a} vs artifacts {b}"));
+        }
+    }
+    // full destructuring, no `..`: adding a ModelCfg field fails to compile
+    // here until the fingerprint covers it
+    let ModelCfg {
+        name,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ffn,
+        vocab,
+        seq,
+        batch,
+        rank_pad,
+        head_dim,
+        outlier_channels,
+        outlier_gain,
+    } = snap;
+    let mut out = Vec::new();
+    chk(&mut out, "name", name, &art.name);
+    chk(&mut out, "d_model", d_model, &art.d_model);
+    chk(&mut out, "n_layers", n_layers, &art.n_layers);
+    chk(&mut out, "n_heads", n_heads, &art.n_heads);
+    chk(&mut out, "d_ffn", d_ffn, &art.d_ffn);
+    chk(&mut out, "vocab", vocab, &art.vocab);
+    chk(&mut out, "seq", seq, &art.seq);
+    chk(&mut out, "batch", batch, &art.batch);
+    chk(&mut out, "rank_pad", rank_pad, &art.rank_pad);
+    chk(&mut out, "head_dim", head_dim, &art.head_dim);
+    chk(&mut out, "outlier_channels", outlier_channels, &art.outlier_channels);
+    chk(&mut out, "outlier_gain", outlier_gain, &art.outlier_gain);
+    out
+}

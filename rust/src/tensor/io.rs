@@ -1,9 +1,21 @@
-//! CBQW binary tensor container reader/writer — the weight interchange with
-//! the Python build path (python/compile/iobin.py documents the layout).
+//! Binary tensor containers.
+//!
+//! * `CBQW` — the f32 weight interchange with the Python build path
+//!   (python/compile/iobin.py documents the layout): [`read_tensors`] /
+//!   [`write_tensors`].
+//! * The shared *entry codec* ([`Entry`], [`write_entry`], [`read_entry`])
+//!   that both CBQW and the `CBQS` quantized-model snapshot container
+//!   (crate::snapshot) use. CBQS adds a packed-integer dtype
+//!   ([`PackedTensor`]): weight codes stored at their true bit-width
+//!   (2/4/8-bit bitpacked), not fake-quant f32.
+//!
+//! The readers are hardened: duplicate tensor names, truncated payloads,
+//! dimension-product overflow, and absurd header values are rejected with
+//! errors instead of silent overwrites or panics.
 
 use std::collections::BTreeMap;
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{bail, ensure, Result};
@@ -13,49 +25,272 @@ use super::Tensor;
 const MAGIC: &[u8; 4] = b"CBQW";
 const VERSION: u32 = 1;
 
+/// Header sanity caps (hardening): no tensor name or rank in any CBQ
+/// container comes close to these.
+pub const MAX_NAME_LEN: usize = 4096;
+pub const MAX_NDIM: usize = 8;
+
+const DTYPE_F32: u8 = 0;
+const DTYPE_I32: u8 = 1;
+const DTYPE_PACKED: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// packed integer tensors
+// ---------------------------------------------------------------------------
+
+/// Integer codes bitpacked at their true bit-width `bits` (1..=8),
+/// offset-binary: stored code `u = q + 2^(bits-1)` for signed grid code
+/// `q in [-2^(bits-1), 2^(bits-1)-1]`. Bits are packed LSB-first into bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedTensor {
+    pub dims: Vec<usize>,
+    pub bits: u8,
+    pub data: Vec<u8>,
+}
+
+impl PackedTensor {
+    /// Number of logical elements.
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Packed payload size for `count` codes at `bits` width.
+    pub fn byte_len(bits: u8, count: usize) -> usize {
+        (count * bits as usize).div_ceil(8)
+    }
+
+    /// Pack signed grid codes. Errors if any code is outside the signed
+    /// `bits`-bit range.
+    pub fn pack(codes: &[i32], dims: Vec<usize>, bits: u8) -> Result<Self> {
+        ensure!((1..=8).contains(&bits), "packed bits must be 1..=8, got {bits}");
+        let count: usize = dims.iter().product();
+        ensure!(count == codes.len(), "dims {dims:?} != {} codes", codes.len());
+        let half = 1i32 << (bits - 1);
+        let mut data = vec![0u8; Self::byte_len(bits, count)];
+        let mut bitpos = 0usize;
+        for &q in codes {
+            ensure!(
+                (-half..half).contains(&q),
+                "code {q} outside signed {bits}-bit range [{}, {}]",
+                -half,
+                half - 1
+            );
+            let u = (q + half) as u32;
+            for b in 0..bits as usize {
+                if (u >> b) & 1 == 1 {
+                    data[(bitpos + b) / 8] |= 1 << ((bitpos + b) % 8);
+                }
+            }
+            bitpos += bits as usize;
+        }
+        Ok(Self { dims, bits, data })
+    }
+
+    /// Unpack back to signed grid codes.
+    pub fn unpack(&self) -> Vec<i32> {
+        let half = 1i32 << (self.bits - 1);
+        let count = self.len();
+        let mut out = Vec::with_capacity(count);
+        let mut bitpos = 0usize;
+        for _ in 0..count {
+            let mut u = 0u32;
+            for b in 0..self.bits as usize {
+                let bit = (self.data[(bitpos + b) / 8] >> ((bitpos + b) % 8)) & 1;
+                u |= (bit as u32) << b;
+            }
+            bitpos += self.bits as usize;
+            out.push(u as i32 - half);
+        }
+        out
+    }
+}
+
+/// One named tensor in a container.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Entry {
+    F32(Tensor),
+    Packed(PackedTensor),
+}
+
+// ---------------------------------------------------------------------------
+// byte-level reader (hardened)
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked reader over an in-memory buffer: every read is validated
+/// against the remaining length, so truncated files fail with an error
+/// instead of a panic or a short read.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "truncated payload: need {n} bytes, {} remain",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// Overflow-checked dimension product.
+fn checked_count(dims: &[usize]) -> Result<usize> {
+    let mut count = 1usize;
+    for &d in dims {
+        count = count
+            .checked_mul(d)
+            .ok_or_else(|| anyhow::anyhow!("dimension product overflow: {dims:?}"))?;
+    }
+    Ok(count)
+}
+
+// ---------------------------------------------------------------------------
+// entry codec (shared by CBQW and CBQS)
+// ---------------------------------------------------------------------------
+
+/// Append one named entry: `[name_len u32][name][dtype u8][ndim u8]
+/// [dims u32...][payload]`. f32 payloads are `count` little-endian floats;
+/// packed payloads are `[bits u8][byte_len u32][bytes]`.
+pub fn write_entry(out: &mut Vec<u8>, name: &str, entry: &Entry) -> Result<()> {
+    ensure!(name.len() <= MAX_NAME_LEN, "tensor name too long ({})", name.len());
+    out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    match entry {
+        Entry::F32(t) => {
+            ensure!(t.dims.len() <= MAX_NDIM, "rank {} too high for {name}", t.dims.len());
+            ensure!(
+                t.dims.iter().all(|&d| d > 0) || t.dims.is_empty(),
+                "zero-sized dim in {name}: {:?}",
+                t.dims
+            );
+            out.push(DTYPE_F32);
+            out.push(t.dims.len() as u8);
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Entry::Packed(p) => {
+            ensure!(p.dims.len() <= MAX_NDIM, "rank {} too high for {name}", p.dims.len());
+            ensure!((1..=8).contains(&p.bits), "bad packed bits {}", p.bits);
+            out.push(DTYPE_PACKED);
+            out.push(p.dims.len() as u8);
+            for &d in &p.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            out.push(p.bits);
+            out.extend_from_slice(&(p.data.len() as u32).to_le_bytes());
+            out.extend_from_slice(&p.data);
+        }
+    }
+    Ok(())
+}
+
+/// Parse one named entry written by [`write_entry`] (also accepts the CBQW
+/// legacy i32 dtype, converting to f32 as the v1 reader did).
+pub fn read_entry(r: &mut ByteReader) -> Result<(String, Entry)> {
+    let name_len = r.u32()? as usize;
+    ensure!(name_len <= MAX_NAME_LEN, "tensor name length {name_len} exceeds cap");
+    let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+    let dtype = r.u8()?;
+    let ndim = r.u8()? as usize;
+    ensure!(ndim <= MAX_NDIM, "rank {ndim} exceeds cap for {name}");
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(r.u32()? as usize);
+    }
+    ensure!(dims.iter().all(|&d| d > 0), "zero-sized dim in {name}: {dims:?}");
+    let count = checked_count(&dims)?.max(1);
+    match dtype {
+        DTYPE_F32 | DTYPE_I32 => {
+            ensure!(
+                count.checked_mul(4).is_some(),
+                "payload size overflow for {name}: {dims:?}"
+            );
+            let raw = r.take(count * 4)?;
+            let data: Vec<f32> = if dtype == DTYPE_F32 {
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            } else {
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                    .collect()
+            };
+            Ok((name, Entry::F32(Tensor::new(dims, data))))
+        }
+        DTYPE_PACKED => {
+            let bits = r.u8()?;
+            ensure!((1..=8).contains(&bits), "bad packed bits {bits} for {name}");
+            let byte_len = r.u32()? as usize;
+            let want = count
+                .checked_mul(bits as usize)
+                .map(|b| b.div_ceil(8))
+                .ok_or_else(|| anyhow::anyhow!("packed size overflow for {name}: {dims:?}"))?;
+            ensure!(
+                byte_len == want,
+                "packed payload of {name}: {byte_len} bytes, want {want}"
+            );
+            let data = r.take(byte_len)?.to_vec();
+            Ok((name, Entry::Packed(PackedTensor { dims, bits, data })))
+        }
+        d => bail!("unknown dtype {d} for {name}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CBQW container (f32 weight interchange, format v1 unchanged)
+// ---------------------------------------------------------------------------
+
 pub fn read_tensors(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
-    let mut r = BufReader::new(File::open(path.as_ref())?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    ensure!(&magic == MAGIC, "bad magic {:?}", magic);
-    let version = read_u32(&mut r)?;
+    let raw = std::fs::read(path.as_ref())?;
+    let mut r = ByteReader::new(&raw);
+    let magic = r.take(4)?;
+    ensure!(magic == MAGIC, "bad magic {:?}", magic);
+    let version = r.u32()?;
     ensure!(version == VERSION, "unsupported version {version}");
-    let n = read_u32(&mut r)? as usize;
+    let n = r.u32()? as usize;
     let mut out = BTreeMap::new();
     for _ in 0..n {
-        let name_len = read_u32(&mut r)? as usize;
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let name = String::from_utf8(name)?;
-        let mut hdr = [0u8; 2];
-        r.read_exact(&mut hdr)?;
-        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
-        let mut dims = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            dims.push(read_u32(&mut r)? as usize);
-        }
-        let count: usize = dims.iter().product::<usize>().max(1);
-        let mut raw = vec![0u8; count * 4];
-        r.read_exact(&mut raw)?;
-        match dtype {
-            0 => {
-                let data = raw
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
-                out.insert(name, Tensor::new(dims, data));
+        let (name, entry) = read_entry(&mut r)?;
+        let t = match entry {
+            Entry::F32(t) => t,
+            Entry::Packed(_) => {
+                bail!("packed tensor `{name}` in a CBQW container (use snapshot::load)")
             }
-            1 => {
-                // i32 tensors are converted to f32 on read; none of the
-                // weight files currently carry them.
-                let data = raw
-                    .chunks_exact(4)
-                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
-                    .collect();
-                out.insert(name, Tensor::new(dims, data));
-            }
-            d => bail!("unknown dtype {d} for {name}"),
-        }
+        };
+        ensure!(out.insert(name.clone(), t).is_none(), "duplicate tensor name `{name}`");
     }
     Ok(out)
 }
@@ -64,28 +299,16 @@ pub fn write_tensors(
     path: impl AsRef<Path>,
     tensors: &BTreeMap<String, Tensor>,
 ) -> Result<()> {
+    let mut payload = Vec::new();
+    for (name, t) in tensors {
+        write_entry(&mut payload, name, &Entry::F32(t.clone()))?;
+    }
     let mut w = BufWriter::new(File::create(path.as_ref())?);
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
     w.write_all(&(tensors.len() as u32).to_le_bytes())?;
-    for (name, t) in tensors {
-        w.write_all(&(name.len() as u32).to_le_bytes())?;
-        w.write_all(name.as_bytes())?;
-        w.write_all(&[0u8, t.dims.len() as u8])?;
-        for &d in &t.dims {
-            w.write_all(&(d as u32).to_le_bytes())?;
-        }
-        for &v in &t.data {
-            w.write_all(&v.to_le_bytes())?;
-        }
-    }
+    w.write_all(&payload)?;
     Ok(())
-}
-
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
 }
 
 #[cfg(test)]
@@ -110,5 +333,104 @@ mod tests {
         std::fs::write(&p, b"NOPE____").unwrap();
         assert!(read_tensors(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        // hand-build a container with the same name twice
+        let t = Tensor::scalar(1.0);
+        let mut payload = Vec::new();
+        write_entry(&mut payload, "dup", &Entry::F32(t.clone())).unwrap();
+        write_entry(&mut payload, "dup", &Entry::F32(t)).unwrap();
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&VERSION.to_le_bytes());
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        raw.extend_from_slice(&payload);
+        let p = std::env::temp_dir().join("cbqw_dup_test.bin");
+        std::fs::write(&p, &raw).unwrap();
+        let err = read_tensors(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut m = BTreeMap::new();
+        m.insert("w".to_string(), Tensor::new(vec![4, 4], vec![0.5; 16]));
+        let p = std::env::temp_dir().join("cbqw_trunc_test.bin");
+        write_tensors(&p, &m).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw.truncate(raw.len() - 7);
+        std::fs::write(&p, &raw).unwrap();
+        let err = read_tensors(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_dim_overflow() {
+        // header claims dims [2^31, 2^31, 2^31, 4]: usize product overflows
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&VERSION.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        raw.push(b'x');
+        raw.push(0); // dtype f32
+        raw.push(4); // ndim
+        for _ in 0..3 {
+            raw.extend_from_slice(&0x8000_0000u32.to_le_bytes());
+        }
+        raw.extend_from_slice(&4u32.to_le_bytes());
+        let p = std::env::temp_dir().join("cbqw_overflow_test.bin");
+        std::fs::write(&p, &raw).unwrap();
+        let err = read_tensors(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("overflow") || msg.contains("truncated"), "{msg}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_absurd_name_len() {
+        let mut raw = Vec::new();
+        raw.extend_from_slice(MAGIC);
+        raw.extend_from_slice(&VERSION.to_le_bytes());
+        raw.extend_from_slice(&1u32.to_le_bytes());
+        raw.extend_from_slice(&u32::MAX.to_le_bytes()); // name_len
+        let p = std::env::temp_dir().join("cbqw_namelen_test.bin");
+        std::fs::write(&p, &raw).unwrap();
+        assert!(read_tensors(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn pack_unpack_exact() {
+        for bits in [2u8, 3, 4, 8] {
+            let half = 1i32 << (bits - 1);
+            let codes: Vec<i32> = (0..97).map(|i| (i % (2 * half)) - half).collect();
+            let p = PackedTensor::pack(&codes, vec![97], bits).unwrap();
+            assert_eq!(p.data.len(), PackedTensor::byte_len(bits, 97));
+            assert_eq!(p.unpack(), codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn pack_rejects_out_of_range() {
+        assert!(PackedTensor::pack(&[8], vec![1], 4).is_err()); // w4 range is [-8, 7]
+        assert!(PackedTensor::pack(&[-9], vec![1], 4).is_err());
+        assert!(PackedTensor::pack(&[7, -8], vec![2], 4).is_ok());
+    }
+
+    #[test]
+    fn packed_entry_roundtrip() {
+        let p = PackedTensor::pack(&[-2, -1, 0, 1, -2, 1], vec![2, 3], 2).unwrap();
+        let mut buf = Vec::new();
+        write_entry(&mut buf, "codes", &Entry::Packed(p.clone())).unwrap();
+        let mut r = ByteReader::new(&buf);
+        let (name, back) = read_entry(&mut r).unwrap();
+        assert_eq!(name, "codes");
+        assert_eq!(back, Entry::Packed(p));
+        assert!(r.is_done());
     }
 }

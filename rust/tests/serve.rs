@@ -1,0 +1,271 @@
+//! Serving-engine tests that need no artifacts or PJRT backend: the model
+//! registry over real snapshot files, and the batcher end-to-end over the
+//! standard request mix with a mock executor (including the batched vs
+//! one-by-one dispatch accounting `cbq serve-bench` reports).
+
+use std::collections::BTreeMap;
+
+use cbq::calib::corpus::XorShift64Star;
+use cbq::config::{BitSpec, RoundingMode};
+use cbq::coordinator::{LinearQ, QuantizedModel};
+use cbq::model_state::{BlockParams, ModelParams};
+use cbq::quant::{self, LINEARS};
+use cbq::runtime::ModelCfg;
+use cbq::serve::{batcher, Batcher, ModelRegistry, Request, RequestKind, Response, RowExecutor, RowOut, WorkRow};
+use cbq::snapshot;
+use cbq::tensor::Tensor;
+
+// -- synthetic snapshot fixture (mirrors tests/snapshot.rs) -----------------
+
+fn rand_tensor(rng: &mut XorShift64Star, dims: &[usize], scale: f32) -> Tensor {
+    let n: usize = dims.iter().product();
+    let data = (0..n)
+        .map(|_| {
+            let u = (rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+            (u - 0.5) * 2.0 * scale
+        })
+        .collect();
+    Tensor::new(dims.to_vec(), data)
+}
+
+fn tiny_cfg() -> ModelCfg {
+    ModelCfg {
+        name: "tiny".into(),
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_ffn: 16,
+        vocab: 12,
+        seq: 6,
+        batch: 4,
+        rank_pad: 4,
+        head_dim: 4,
+        outlier_channels: 0,
+        outlier_gain: 0.0,
+    }
+}
+
+fn snapshot_file(name: &str, seed: u64) -> std::path::PathBuf {
+    let cfg = tiny_cfg();
+    let mut rng = XorShift64Star::new(seed);
+    let bits = BitSpec::new(4, 16);
+    let d = cfg.d_model;
+    let mut blocks = Vec::new();
+    let mut qstate = Vec::new();
+    for _ in 0..cfg.n_layers {
+        let mut linears = BTreeMap::new();
+        let mut lqs = BTreeMap::new();
+        for l in LINEARS {
+            let (fan_in, fan_out) = cfg.linear_shape(l);
+            let w = rand_tensor(&mut rng, &[fan_in, fan_out], 0.5);
+            let qmax = cbq::config::qmax(4);
+            let s = quant::init_scales(&w, qmax);
+            let wq = quant::fake_quant_rtn(&w, &s, qmax);
+            let lq = LinearQ::restore(
+                &wq,
+                s,
+                1.0,
+                Tensor::zeros(&[fan_in, cfg.rank_pad]),
+                Tensor::zeros(&[cfg.rank_pad, fan_out]),
+                4,
+            );
+            linears.insert(l.to_string(), wq);
+            lqs.insert(l.to_string(), lq);
+        }
+        blocks.push(BlockParams {
+            attn_norm: rand_tensor(&mut rng, &[d], 1.0),
+            mlp_norm: rand_tensor(&mut rng, &[d], 1.0),
+            linears,
+        });
+        qstate.push(lqs);
+    }
+    let model = QuantizedModel {
+        params: ModelParams {
+            embed: rand_tensor(&mut rng, &[cfg.vocab, d], 0.2),
+            final_norm: rand_tensor(&mut rng, &[d], 1.0),
+            head: rand_tensor(&mut rng, &[d, cfg.vocab], 0.2),
+            blocks,
+        },
+        qstate,
+        bits,
+        rounding: RoundingMode::Nearest,
+    };
+    let path = std::env::temp_dir().join(name);
+    snapshot::save(&path, &cfg, &model).unwrap();
+    path
+}
+
+// -- registry ---------------------------------------------------------------
+
+#[test]
+fn registry_loads_caches_and_evicts() {
+    let p = snapshot_file("serve_reg_a.cbqs", 21);
+    let mut reg = ModelRegistry::new();
+    assert!(reg.is_empty());
+
+    let a = reg.load("w4", &p).unwrap();
+    assert_eq!(a.meta.cfg.name, "tiny");
+    assert_eq!(a.name, "w4");
+    assert!(a.file_bytes > 0);
+    assert_eq!(reg.len(), 1);
+
+    // second load of the same name is a cache hit (same Rc)
+    let b = reg.load("w4", &p).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert_eq!(reg.len(), 1);
+
+    // same name, different path: refused, cache not clobbered
+    let p2 = snapshot_file("serve_reg_b.cbqs", 22);
+    let err = reg.load("w4", &p2).unwrap_err();
+    assert!(format!("{err:#}").contains("refusing"), "{err:#}");
+    assert!(std::rc::Rc::ptr_eq(&reg.get("w4").unwrap(), &a));
+
+    // a second name loads alongside
+    reg.load("w4-b", &p2).unwrap();
+    assert_eq!(reg.names(), vec!["w4".to_string(), "w4-b".to_string()]);
+
+    assert!(reg.get("nope").is_err());
+    assert!(reg.evict("w4"));
+    assert!(!reg.evict("w4"));
+    assert!(reg.get("w4").is_err());
+
+    std::fs::remove_file(p).ok();
+    std::fs::remove_file(p2).ok();
+}
+
+#[test]
+fn registry_propagates_snapshot_validation() {
+    let p = snapshot_file("serve_reg_bad.cbqs", 23);
+    let mut raw = std::fs::read(&p).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0x08;
+    std::fs::write(&p, &raw).unwrap();
+    let mut reg = ModelRegistry::new();
+    let err = reg.load("bad", &p).unwrap_err();
+    assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+    assert!(reg.is_empty());
+    std::fs::remove_file(p).ok();
+}
+
+// -- batcher over the standard mix ------------------------------------------
+
+/// Mock executor with a fixed per-dispatch overhead model: every dispatch
+/// "costs" one unit regardless of fill, which is exactly why coalescing
+/// wins on the fixed-shape executables.
+struct Mock {
+    batch: usize,
+    seq: usize,
+    dispatches: usize,
+}
+
+impl RowExecutor for Mock {
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn execute(&mut self, rows: &[WorkRow]) -> anyhow::Result<Vec<RowOut>> {
+        assert!(!rows.is_empty() && rows.len() <= self.batch);
+        self.dispatches += 1;
+        Ok(rows
+            .iter()
+            .map(|r| RowOut {
+                nll: r
+                    .targets
+                    .iter()
+                    .zip(&r.mask)
+                    .map(|(&t, &m)| (t % 17) as f32 * 0.1 * m)
+                    .sum(),
+                count: r.mask.iter().sum(),
+            })
+            .collect())
+    }
+}
+
+#[test]
+fn standard_mix_batched_vs_sequential_same_answers_fewer_dispatches() {
+    let seq = 96;
+    let requests = batcher::standard_mix(seq, 24, 6, 4);
+    assert_eq!(requests.len(), 34);
+    let total_rows: usize = requests.iter().map(|r| r.rows.len()).sum();
+    assert_eq!(total_rows, 24 + 6 * 2 + 4);
+
+    let mut mb = Mock { batch: 4, seq, dispatches: 0 };
+    let (resp_b, stats_b) = Batcher::coalescing(&mb).run(&mut mb, &requests).unwrap();
+    let mut ms = Mock { batch: 4, seq, dispatches: 0 };
+    let (resp_s, stats_s) = Batcher::sequential().run(&mut ms, &requests).unwrap();
+
+    // batched packs 4 rows/dispatch; sequential pays one dispatch per row
+    assert_eq!(stats_b.dispatches, total_rows.div_ceil(4));
+    assert_eq!(stats_s.dispatches, total_rows);
+    assert_eq!(stats_b.rows, total_rows);
+    assert_eq!(stats_s.rows, total_rows);
+    assert_eq!(stats_b.tokens, total_rows * seq);
+    assert!(stats_b.occupancy() > 0.99);
+    assert!(stats_s.occupancy() < 0.26);
+
+    // scheduling must not change any answer
+    assert_eq!(resp_b.len(), resp_s.len());
+    for (a, b) in resp_b.iter().zip(&resp_s) {
+        match (a, b) {
+            (Response::Ppl { nll: n1, count: c1 }, Response::Ppl { nll: n2, count: c2 }) => {
+                assert_eq!(n1, n2);
+                assert_eq!(c1, c2);
+            }
+            (
+                Response::Choice { pick: p1, scores: s1, .. },
+                Response::Choice { pick: p2, scores: s2, .. },
+            ) => {
+                assert_eq!(p1, p2);
+                assert_eq!(s1, s2);
+            }
+            (Response::Hidden { tokens: t1 }, Response::Hidden { tokens: t2 }) => {
+                assert_eq!(t1, t2)
+            }
+            _ => panic!("response kinds diverged between schedules"),
+        }
+    }
+}
+
+#[test]
+fn ppl_requests_are_deterministic_held_out_segments() {
+    let a = batcher::ppl_requests(cbq::calib::corpus::Style::C4, 8, 96);
+    let b = batcher::ppl_requests(cbq::calib::corpus::Style::C4, 8, 96);
+    assert_eq!(a.len(), 8);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.rows[0].inputs, y.rows[0].inputs);
+        assert!(matches!(x.kind, RequestKind::Ppl));
+        // full perplexity mask
+        assert!(x.rows[0].mask.iter().all(|&m| m == 1.0));
+    }
+    // wiki stream differs from c4
+    let w = batcher::ppl_requests(cbq::calib::corpus::Style::Wiki, 8, 96);
+    assert_ne!(a[0].rows[0].inputs, w[0].rows[0].inputs);
+}
+
+#[test]
+fn choice_requests_mask_prompts_and_keep_candidate_counts() {
+    let reqs = batcher::choice_requests(cbq::calib::TaskKind::Perturbed, 5, 96);
+    assert_eq!(reqs.len(), 5);
+    for r in &reqs {
+        let RequestKind::Choice { correct } = &r.kind else {
+            panic!("wrong kind")
+        };
+        assert!(*correct < r.rows.len());
+        assert_eq!(r.rows.len(), 2);
+        for row in &r.rows {
+            // prompt positions masked out, the 16-token continuation scored
+            // (prompt_len = 97 - SEGMENT_LEN/2 = 81 => ones at s >= 80)
+            assert_eq!(row.mask.iter().filter(|&&m| m == 0.0).count(), 80);
+            assert_eq!(row.mask.iter().filter(|&&m| m == 1.0).count(), 16);
+        }
+    }
+}
+
+#[test]
+fn empty_request_rows_are_rejected() {
+    let mut m = Mock { batch: 4, seq: 8, dispatches: 0 };
+    let reqs = vec![Request { kind: RequestKind::Ppl, rows: vec![] }];
+    assert!(Batcher::coalescing(&m).run(&mut m, &reqs).is_err());
+}

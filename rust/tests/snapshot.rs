@@ -1,0 +1,336 @@
+//! Snapshot store tests — all host-side (no artifacts or PJRT needed):
+//! save/load round-trips a quantized model **bit-exactly**, corruption /
+//! version / fingerprint mismatches are rejected, the packed dtype
+//! round-trips w2/w4/w8 codes, and a w4 snapshot is a small fraction of the
+//! f32 CBQW representation (true bitpacking, not fake-quant f32).
+
+use std::collections::BTreeMap;
+
+use cbq::calib::corpus::XorShift64Star;
+use cbq::config::{BitSpec, RoundingMode};
+use cbq::coordinator::{LinearQ, QuantizedModel};
+use cbq::model_state::{BlockParams, ModelParams};
+use cbq::quant::{self, LINEARS};
+use cbq::runtime::ModelCfg;
+use cbq::snapshot;
+use cbq::tensor::io::{self, PackedTensor};
+use cbq::tensor::Tensor;
+
+struct Gen(XorShift64Star);
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self(XorShift64Star::new(seed))
+    }
+
+    fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.0.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        lo + (hi - lo) * u
+    }
+
+    fn tensor(&mut self, dims: &[usize], scale: f32) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor::new(dims.to_vec(), (0..n).map(|_| self.f32_in(-scale, scale)).collect())
+    }
+}
+
+fn cfg(d_model: usize, d_ffn: usize, n_layers: usize, vocab: usize) -> ModelCfg {
+    ModelCfg {
+        name: "tiny".into(),
+        d_model,
+        n_layers,
+        n_heads: 2,
+        d_ffn,
+        vocab,
+        seq: 6,
+        batch: 2,
+        rank_pad: 4,
+        head_dim: d_model / 2,
+        outlier_channels: 0,
+        outlier_gain: 0.0,
+    }
+}
+
+/// Build a synthetic finalized quantized model the way the pipeline does:
+/// RTN-bake each linear with scales derived from the pre-quant weights, and
+/// install those *same* scales in the qstate (the run_rtn/run_gptq/run_cbd
+/// invariant the snapshot round-trip relies on).
+fn quantized_model(cfg: &ModelCfg, bits: BitSpec, rounding: RoundingMode, seed: u64) -> QuantizedModel {
+    let mut g = Gen::new(seed);
+    let d = cfg.d_model;
+    let mut blocks = Vec::new();
+    let mut qstate = Vec::new();
+    for bi in 0..cfg.n_layers {
+        let mut linears = BTreeMap::new();
+        let mut lqs = BTreeMap::new();
+        for l in LINEARS {
+            let (fan_in, fan_out) = cfg.linear_shape(l);
+            let w = g.tensor(&[fan_in, fan_out], 0.5);
+            let b = bits.weight_bits(bi, l);
+            let qmax = cbq::config::qmax(b);
+            let s = quant::init_scales(&w, qmax);
+            let wq = quant::fake_quant_rtn(&w, &s, qmax);
+            let (a1, a2) = if matches!(rounding, RoundingMode::Lora) {
+                (g.tensor(&[fan_in, cfg.rank_pad], 0.01), g.tensor(&[cfg.rank_pad, fan_out], 0.01))
+            } else {
+                (Tensor::zeros(&[fan_in, cfg.rank_pad]), Tensor::zeros(&[cfg.rank_pad, fan_out]))
+            };
+            let lq = LinearQ::restore(&wq, s, g.f32_in(0.3, 1.5), a1, a2, b);
+            linears.insert(l.to_string(), wq);
+            lqs.insert(l.to_string(), lq);
+        }
+        blocks.push(BlockParams {
+            attn_norm: g.tensor(&[d], 1.0),
+            mlp_norm: g.tensor(&[d], 1.0),
+            linears,
+        });
+        qstate.push(lqs);
+    }
+    QuantizedModel {
+        params: ModelParams {
+            embed: g.tensor(&[cfg.vocab, d], 0.2),
+            final_norm: g.tensor(&[d], 1.0),
+            head: g.tensor(&[d, cfg.vocab], 0.2),
+            blocks,
+        },
+        qstate,
+        bits,
+        rounding,
+    }
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(name)
+}
+
+// ---------------------------------------------------------------------------
+// round trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn roundtrip_is_bit_exact_across_bits_and_rounding() {
+    for (seed, bits, rounding) in [
+        (1u64, BitSpec::new(4, 16), RoundingMode::Lora),
+        (2, BitSpec::new(2, 16), RoundingMode::Nearest),
+        (3, BitSpec::new(8, 8), RoundingMode::Lora),
+        (4, BitSpec::new(3, 4), RoundingMode::Nearest),
+    ] {
+        let c = cfg(8, 16, 2, 12);
+        let m = quantized_model(&c, bits.clone(), rounding, seed);
+        let p = tmp(&format!("cbqs_rt_{seed}.cbqs"));
+        snapshot::save(&p, &c, &m).unwrap();
+        let snap = snapshot::load(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+
+        assert_eq!(snap.meta.bits, bits);
+        assert_eq!(snap.meta.rounding, rounding);
+        assert_eq!(snap.meta.cfg, c);
+        assert_eq!(snapshot::fingerprint_mismatches(&snap.meta.cfg, &c), Vec::<String>::new());
+
+        // every tensor the eval path touches must be IDENTICAL f32 values
+        let (a, b) = (&snap.model, &m);
+        assert_eq!(a.params.embed, b.params.embed);
+        assert_eq!(a.params.final_norm, b.params.final_norm);
+        assert_eq!(a.params.head, b.params.head);
+        for (ba, bb) in a.params.blocks.iter().zip(&b.params.blocks) {
+            assert_eq!(ba.attn_norm, bb.attn_norm);
+            assert_eq!(ba.mlp_norm, bb.mlp_norm);
+            for l in LINEARS {
+                assert_eq!(ba.linears[l], bb.linears[l], "weights of {l} not bit-exact");
+            }
+        }
+        for (qa, qb) in a.qstate.iter().zip(&b.qstate) {
+            for l in LINEARS {
+                assert_eq!(qa[l].s_w, qb[l].s_w, "{l} scales");
+                assert_eq!(qa[l].alpha, qb[l].alpha, "{l} alpha");
+                assert_eq!(qa[l].a1, qb[l].a1, "{l} a1");
+                assert_eq!(qa[l].a2, qb[l].a2, "{l} a2");
+                assert_eq!(qa[l].bits_w, qb[l].bits_w, "{l} bits");
+                assert_eq!(qa[l].qmax_w, qb[l].qmax_w, "{l} qmax");
+            }
+        }
+        assert_eq!(a.bits, b.bits);
+        assert_eq!(a.rounding, b.rounding);
+    }
+}
+
+#[test]
+fn roundtrip_preserves_per_layer_overrides() {
+    let c = cfg(8, 16, 3, 12);
+    let bits = BitSpec::w2a16_star(c.n_layers);
+    let m = quantized_model(&c, bits.clone(), RoundingMode::Nearest, 77);
+    let p = tmp("cbqs_star.cbqs");
+    snapshot::save(&p, &c, &m).unwrap();
+    let snap = snapshot::load(&p).unwrap();
+    std::fs::remove_file(&p).ok();
+    assert_eq!(snap.meta.bits, bits);
+    assert_eq!(snap.model.qstate[0]["wdown"].bits_w, 4);
+    assert_eq!(snap.model.qstate[1]["wdown"].bits_w, 2);
+    assert_eq!(snap.model.qstate[2]["wdown"].bits_w, 4);
+    assert_eq!(snap.model.params.blocks[0].linears["wdown"], m.params.blocks[0].linears["wdown"]);
+}
+
+// ---------------------------------------------------------------------------
+// size: true bitpacking
+// ---------------------------------------------------------------------------
+
+#[test]
+fn w4_snapshot_is_at_most_a_sixth_of_f32_cbqw() {
+    // a shape where the quantized linears dominate (as in any real LLM)
+    let c = cfg(64, 128, 4, 16);
+    let m = quantized_model(&c, BitSpec::new(4, 16), RoundingMode::Nearest, 5);
+
+    let p_snap = tmp("cbqs_size.cbqs");
+    let report = snapshot::save(&p_snap, &c, &m).unwrap();
+
+    // the equivalent f32 CBQW file
+    let mut all = BTreeMap::new();
+    all.insert("embed".to_string(), m.params.embed.clone());
+    all.insert("final_norm".to_string(), m.params.final_norm.clone());
+    all.insert("head".to_string(), m.params.head.clone());
+    for (i, blk) in m.params.blocks.iter().enumerate() {
+        all.insert(format!("blocks.{i}.attn_norm"), blk.attn_norm.clone());
+        all.insert(format!("blocks.{i}.mlp_norm"), blk.mlp_norm.clone());
+        for l in LINEARS {
+            all.insert(format!("blocks.{i}.{l}"), blk.linears[l].clone());
+        }
+    }
+    let p_cbqw = tmp("cbqs_size_ref.bin");
+    io::write_tensors(&p_cbqw, &all).unwrap();
+    let cbqw_bytes = std::fs::metadata(&p_cbqw).unwrap().len();
+    let snap_bytes = std::fs::metadata(&p_snap).unwrap().len();
+    std::fs::remove_file(&p_snap).ok();
+    std::fs::remove_file(&p_cbqw).ok();
+
+    assert_eq!(snap_bytes, report.file_bytes);
+    // true 4-bit packing: codes are exactly half a byte per weight
+    let linear_params: u64 = (c.quant_params()) as u64;
+    assert_eq!(report.packed_code_bytes, linear_params / 2);
+    assert!(
+        snap_bytes * 6 <= cbqw_bytes,
+        "w4 snapshot {snap_bytes}B should be <= 1/6 of CBQW {cbqw_bytes}B"
+    );
+
+    // w2 packs twice as tight again on the code payload
+    let m2 = quantized_model(&c, BitSpec::new(2, 16), RoundingMode::Nearest, 6);
+    let p2 = tmp("cbqs_size_w2.cbqs");
+    let r2 = snapshot::save(&p2, &c, &m2).unwrap();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(r2.packed_code_bytes, linear_params / 4);
+}
+
+// ---------------------------------------------------------------------------
+// rejection paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rejects_corruption_version_magic_and_fp_models() {
+    let c = cfg(8, 16, 2, 12);
+    let m = quantized_model(&c, BitSpec::new(4, 16), RoundingMode::Nearest, 9);
+    let p = tmp("cbqs_reject.cbqs");
+    snapshot::save(&p, &c, &m).unwrap();
+    let clean = std::fs::read(&p).unwrap();
+
+    // bad checksum: flip a bit deep in the payload
+    let mut bad = clean.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x40;
+    std::fs::write(&p, &bad).unwrap();
+    let e = snapshot::load(&p).unwrap_err();
+    assert!(format!("{e:#}").contains("checksum"), "{e:#}");
+
+    // version mismatch
+    let mut bad = clean.clone();
+    bad[4] = 0xEE;
+    std::fs::write(&p, &bad).unwrap();
+    let e = snapshot::load(&p).unwrap_err();
+    assert!(format!("{e:#}").contains("version"), "{e:#}");
+
+    // corrupt header magic
+    let mut bad = clean.clone();
+    bad[1] = b'!';
+    std::fs::write(&p, &bad).unwrap();
+    let e = snapshot::load(&p).unwrap_err();
+    assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+    // truncation
+    std::fs::write(&p, &clean[..clean.len() - 9]).unwrap();
+    assert!(snapshot::load(&p).is_err());
+    std::fs::remove_file(&p).ok();
+
+    // FP models don't export
+    let fp = quantized_model(&c, BitSpec::new(16, 16), RoundingMode::Nearest, 10);
+    let e = snapshot::save(tmp("cbqs_fp.cbqs"), &c, &fp).unwrap_err();
+    assert!(format!("{e:#}").contains("packable"), "{e:#}");
+}
+
+#[test]
+fn rejects_off_grid_weights() {
+    let c = cfg(8, 16, 1, 12);
+    let mut m = quantized_model(&c, BitSpec::new(4, 16), RoundingMode::Nearest, 11);
+    // nudge one baked weight off the quantization grid
+    m.params.blocks[0].linears.get_mut("wq").unwrap().data[3] += 1e-3;
+    let e = snapshot::save(tmp("cbqs_offgrid.cbqs"), &c, &m).unwrap_err();
+    assert!(format!("{e:#}").contains("grid"), "{e:#}");
+}
+
+#[test]
+fn fingerprint_mismatch_is_reported_per_field() {
+    let a = cfg(8, 16, 2, 12);
+    let mut b = a.clone();
+    b.d_model = 16;
+    b.n_layers = 4;
+    let mism = snapshot::fingerprint_mismatches(&a, &b);
+    assert_eq!(mism.len(), 2);
+    assert!(mism.iter().any(|m| m.contains("d_model")));
+    assert!(mism.iter().any(|m| m.contains("n_layers")));
+}
+
+// ---------------------------------------------------------------------------
+// packed dtype property tests (w2/w4/w8)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pack_unpack_roundtrips_random_codes() {
+    for seed in 0..100u64 {
+        let mut g = Gen::new(seed + 400);
+        for bits in [2u8, 4, 8] {
+            let half = 1i32 << (bits - 1);
+            let n = 1 + (g.0.next_below(64) as usize);
+            let codes: Vec<i32> = (0..n)
+                .map(|_| (g.0.next_below(2 * half as u64) as i32) - half)
+                .collect();
+            let packed = PackedTensor::pack(&codes, vec![n], bits).unwrap();
+            assert_eq!(packed.data.len(), PackedTensor::byte_len(bits, n), "seed {seed}");
+            assert_eq!(packed.unpack(), codes, "seed {seed} bits {bits}");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_grid_dequant_matches_fake_quant() {
+    // derive codes from random weights the way save() does, and check the
+    // dequantized values reproduce fake_quant_rtn exactly
+    for seed in 0..50u64 {
+        let mut g = Gen::new(seed + 900);
+        for bits in [2u8, 4, 8] {
+            let qmax = cbq::config::qmax(bits);
+            let w = g.tensor(&[5, 7], 1.0);
+            let s = quant::init_scales(&w, qmax);
+            let wq = quant::fake_quant_rtn(&w, &s, qmax);
+            let half = 1i32 << (bits - 1);
+            let codes: Vec<i32> = (0..5 * 7)
+                .map(|i| {
+                    let sc = s.data[i % 7].max(quant::EPS);
+                    (wq.data[i] / sc).round() as i32
+                })
+                .collect();
+            assert!(codes.iter().all(|&q| (-half..half).contains(&q)), "seed {seed}");
+            let packed = PackedTensor::pack(&codes, vec![5, 7], bits).unwrap();
+            for (i, q) in packed.unpack().into_iter().enumerate() {
+                let sc = s.data[i % 7].max(quant::EPS);
+                assert_eq!(q as f32 * sc, wq.data[i], "seed {seed} bits {bits} idx {i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Compile-time stub of the `xla` PJRT binding surface used by
+//! `cbq::runtime`.
+//!
+//! The offline build environment vendors no PJRT plugin or XLA shared
+//! library, so this crate supplies the exact API shape the coordinator
+//! compiles against — `Literal` is fully functional host-side (it is plain
+//! data), while anything that would require a real device backend
+//! ([`PjRtClient::cpu`]) returns a descriptive [`Error`]. Swapping in a real
+//! `xla` binding (same crate name, path patched in the workspace manifest)
+//! re-enables execution of the AOT HLO artifacts without touching the
+//! coordinator.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable — this build uses the in-tree xla stub \
+         (vendor/xla); link a real xla binding to execute HLO artifacts"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// literals (host-side data: fully functional)
+// ---------------------------------------------------------------------------
+
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: shaped typed data. This part of the stub is real — the
+/// runtime builds literals before upload, and tests exercise them.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+/// Element types the coordinator moves across the boundary.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn extract(p: &Payload) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Payload {
+        Payload::F32(data)
+    }
+    fn extract(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Payload {
+        Payload::I32(data)
+    }
+    fn extract(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], payload: T::wrap(vec![v]) }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], payload: T::wrap(v.to_vec()) }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], payload: Payload::Tuple(parts) }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        let len = match &self.payload {
+            Payload::F32(v) => v.len() as i64,
+            Payload::I32(v) => v.len() as i64,
+            Payload::Tuple(_) => return Err(Error("cannot reshape a tuple".into())),
+        };
+        if count != len {
+            return Err(Error(format!("reshape {dims:?} does not match {len} elements")));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(&self.payload).ok_or_else(|| Error("literal dtype mismatch".into()))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.payload {
+            Payload::Tuple(parts) => Ok(parts),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO + PJRT surface (stubbed: constructors work, execution is unavailable)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module text. The stub validates the file is readable and
+/// retains the text; compilation requires a real backend.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(Self { text })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+/// Device client. [`PjRtClient::cpu`] fails in the stub, so no value of this
+/// type is ever constructed; the methods exist purely so callers typecheck.
+pub struct PjRtClient(());
+
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_literal"))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        assert!(Literal::vec1(&[1i32]).reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable_with_clear_message() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
