@@ -8,18 +8,19 @@ use cbq::calib::corpus::Style;
 use cbq::config::{BitSpec, QuantJob};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_f, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, Artifacts};
 
 fn main() -> anyhow::Result<()> {
-    let model = std::env::args().nth(1).unwrap_or_else(|| "t".to_string());
     let setting = std::env::args().nth(2).unwrap_or_else(|| "w4a4".to_string());
     let bits = match setting.as_str() {
         "w2a16" => BitSpec::w2a16(),
         _ => BitSpec::w4a4(),
     };
     let art = Artifacts::discover()?;
-    let rt = Runtime::new(&art)?;
-    let mut pipe = Pipeline::new(&art, &rt, &model)?;
+    let model =
+        std::env::args().nth(1).unwrap_or_else(|| art.model_or_default("t").to_string());
+    let rt = runtime::create_selected(&art, None)?;
+    let mut pipe = Pipeline::new(&art, rt.as_ref(), &model)?;
     let windows = art.manifest.windows[&model].clone();
 
     let mut table = Table::new(

@@ -16,14 +16,15 @@ use cbq::calib::corpus::Style;
 use cbq::config::{BitSpec, QuantJob};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_f, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, Artifacts, Backend as _};
 
 fn main() -> anyhow::Result<()> {
-    let model = std::env::args().nth(1).unwrap_or_else(|| "s".to_string());
     let calib: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(32);
     let art = Artifacts::discover()?;
-    let rt = Runtime::new(&art)?;
-    let mut pipe = Pipeline::new(&art, &rt, &model)?;
+    let model = std::env::args().nth(1).unwrap_or_else(|| art.default_model().to_string());
+    let rt = runtime::create_selected(&art, None)?;
+    let rt = rt.as_ref();
+    let mut pipe = Pipeline::new(&art, rt, &model)?;
     println!(
         "model `{model}`: d={} layers={} ({} quantizable params), calib={calib} sequences",
         pipe.cfg.d_model,

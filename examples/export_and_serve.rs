@@ -2,25 +2,28 @@
 //! CBQS snapshot, reload it (bit-exact), and serve a mixed request queue
 //! through the batched engine — comparing coalesced vs one-by-one dispatch.
 //!
-//!     make artifacts && cargo run --release --example export_and_serve
+//!     cargo run --release -- synth   # or: make artifacts
+//!     cargo run --release --example export_and_serve
 
 use cbq::calib::corpus::Style;
 use cbq::config::{BitSpec, QuantJob};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_bytes, fmt_f, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, Artifacts, Backend as _};
 use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor, ServeEngine};
 use cbq::snapshot;
 
 fn main() -> anyhow::Result<()> {
     let art = Artifacts::discover()?;
-    let rt = Runtime::new(&art)?;
-    let mut pipe = Pipeline::new(&art, &rt, "t")?;
+    let rt = runtime::create_selected(&art, None)?;
+    let rt = rt.as_ref();
+    let model = art.model_or_default("t");
+    let mut pipe = Pipeline::new(&art, rt, model)?;
 
     // --- quantize once ----------------------------------------------------
     let mut job = QuantJob::cbq(BitSpec::w4a16());
     job.calib_sequences = 16;
-    println!("quantizing model `t` to {} ...", job.bits.label());
+    println!("quantizing model `{model}` to {} on {} ...", job.bits.label(), rt.name());
     let (quantized, summary) = pipe.run(&job)?;
     let ppl_mem = pipe.perplexity(&quantized, Style::C4, 4)?;
 
@@ -43,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(ppl_mem, ppl_disk, "snapshot round-trip must be bit-exact");
 
     // --- serve forever ----------------------------------------------------
-    let mut engine = ServeEngine::new(&rt, &art, snap.clone())?;
+    let mut engine = ServeEngine::new(rt, &art, snap.clone())?;
     let requests = batcher::standard_mix(snap.meta.cfg.seq, 16, 4, 4);
     engine.execute(&requests[0].rows[..1])?; // warm-up
 

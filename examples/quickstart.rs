@@ -1,25 +1,27 @@
 //! Quickstart: quantize the tiny model to W4A16 with CBQ defaults and
 //! compare perplexity against the FP baseline.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release -- synth   # or: make artifacts
+//!     cargo run --release --example quickstart
 
 use cbq::calib::corpus::Style;
 use cbq::config::{BitSpec, QuantJob};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_f, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, Artifacts, Backend as _};
 
 fn main() -> anyhow::Result<()> {
     let art = Artifacts::discover()?;
-    let rt = Runtime::new(&art)?;
-    let mut pipe = Pipeline::new(&art, &rt, "t")?;
+    let rt = runtime::create_selected(&art, None)?;
+    let model = art.model_or_default("t");
+    let mut pipe = Pipeline::new(&art, rt.as_ref(), model)?;
 
     // paper-default CBQ: 2-block sliding windows with overlap 1, CFP
     // pre-processing, LoRA-Rounding rank 5, 3 epochs per window
     let mut job = QuantJob::cbq(BitSpec::w4a16());
     job.calib_sequences = 16; // keep the quickstart quick
 
-    println!("quantizing model `t` to {} ...", job.bits.label());
+    println!("quantizing model `{model}` to {} on the {} backend ...", job.bits.label(), rt.name());
     let (quantized, summary) = pipe.run(&job)?;
     let fp = pipe.fp_model();
 

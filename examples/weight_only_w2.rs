@@ -8,13 +8,14 @@ use cbq::calib::corpus::Style;
 use cbq::config::{BitSpec, QuantJob};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_f, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, Artifacts};
 
 fn main() -> anyhow::Result<()> {
-    let model = std::env::args().nth(1).unwrap_or_else(|| "t".to_string());
     let art = Artifacts::discover()?;
-    let rt = Runtime::new(&art)?;
-    let mut pipe = Pipeline::new(&art, &rt, &model)?;
+    let model =
+        std::env::args().nth(1).unwrap_or_else(|| art.model_or_default("t").to_string());
+    let rt = runtime::create_selected(&art, None)?;
+    let mut pipe = Pipeline::new(&art, rt.as_ref(), &model)?;
     let n_layers = pipe.cfg.n_layers;
 
     let mut jobs = vec![

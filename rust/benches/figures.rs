@@ -17,7 +17,7 @@ use cbq::coordinator::Pipeline;
 use cbq::hessian::{offdiag_ratio, HessianProbe};
 use cbq::model_state::ActStats;
 use cbq::report::{heatmap, magnitude_histogram, matrix_csv, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, Artifacts};
 
 fn out_dir() -> std::path::PathBuf {
     let p = std::path::PathBuf::from("bench_out");
@@ -29,7 +29,7 @@ fn out_dir() -> std::path::PathBuf {
 /// summary off-diagonal-mass trend; 1(a): intra-layer weight Hessian block;
 /// 1(c): pairwise loss surface over two adjacent blocks' scales.
 fn fig1(art: &Artifacts, model: &str) {
-    let rt = Runtime::new(art).unwrap();
+    let rt = runtime::create_selected(art, None).unwrap();
     let pipe = Pipeline::new(art, &rt, model).unwrap();
     let mut trend = Table::new(
         format!("Fig. 1 — dependency strength vs bits (`{model}`)"),
@@ -65,7 +65,7 @@ fn fig1(art: &Artifacts, model: &str) {
 /// Figure 3: outlier distributions in weights and activations, before and
 /// after CFP pre-processing.
 fn fig3(art: &Artifacts, model: &str) {
-    let rt = Runtime::new(art).unwrap();
+    let rt = runtime::create_selected(art, None).unwrap();
     let mut pipe = Pipeline::new(art, &rt, model).unwrap();
     let calib_set = calib::calibration(8, pipe.cfg.batch, pipe.cfg.seq);
     let fp_hidden = pipe.fp_hidden_states(&calib_set).unwrap();
@@ -106,8 +106,9 @@ fn fig3(art: &Artifacts, model: &str) {
 }
 
 fn main() {
-    let art = Artifacts::discover().expect("run `make artifacts` first");
-    let model = std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| "t".into());
+    let art = Artifacts::discover().expect("run `make artifacts` or `cbq synth` first");
+    let model =
+        std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| art.model_or_default("t").to_string());
     let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let run_all = args.is_empty();
     let t0 = Instant::now();

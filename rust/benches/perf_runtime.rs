@@ -17,7 +17,7 @@ use cbq::calib::{self, corpus::Style};
 use cbq::config::{BitSpec, QuantJob, RoundingMode};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_f, Table};
-use cbq::runtime::{Artifacts, Bindings, Runtime, Value};
+use cbq::runtime::{self, Artifacts, Backend as _, Bindings, Value};
 use cbq::tensor::Tensor;
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
@@ -31,11 +31,12 @@ fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
 }
 
 fn main() {
-    let art = Artifacts::discover().expect("run `make artifacts` first");
-    let model = std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| "s".into());
+    let art = Artifacts::discover().expect("run `make artifacts` or `cbq synth` first");
+    let model = std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| art.default_model().to_string());
     let reps: usize = std::env::var("CBQ_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
-    let rt = Runtime::new(&art).unwrap();
-    let pipe = Pipeline::new(&art, &rt, &model).unwrap();
+    let rt = runtime::create_selected(&art, None).unwrap();
+    let rt = rt.as_ref();
+    let pipe = Pipeline::new(&art, rt, &model).unwrap();
     let cfg = pipe.cfg.clone();
     println!("perf_runtime on model `{model}` (d={} L={}), {reps} reps", cfg.d_model, cfg.n_layers);
 
@@ -114,7 +115,7 @@ fn main() {
     t.print();
 
     // ---- quantized eval throughput ----------------------------------------
-    let mut pipe2 = Pipeline::new(&art, &rt, &model).unwrap();
+    let mut pipe2 = Pipeline::new(&art, rt, &model).unwrap();
     let mut job = QuantJob::rtn(BitSpec::w4a4());
     job.calib_sequences = 4;
     let (qm, _) = pipe2.run(&job).unwrap();

@@ -18,7 +18,7 @@ use cbq::calib::corpus::Style;
 use cbq::config::{BitSpec, Method, PreprocMethod, QuantJob, RoundingMode};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_f, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, Artifacts, Backend};
 
 struct Bench {
     art: Artifacts,
@@ -35,10 +35,11 @@ fn envu(key: &str, default: usize) -> usize {
 
 impl Bench {
     fn new() -> Self {
-        let art = Artifacts::discover().expect("run `make artifacts` first");
+        let art = Artifacts::discover().expect("run `make artifacts` or `cbq synth` first");
+        let default_model = art.model_or_default("t").to_string();
         Self {
             art,
-            model: std::env::var("CBQ_BENCH_MODEL").unwrap_or_else(|_| "t".into()),
+            model: std::env::var("CBQ_BENCH_MODEL").unwrap_or(default_model),
             calib: envu("CBQ_BENCH_CALIB", 32),
             eval_batches: envu("CBQ_BENCH_EVAL", 8),
             items: envu("CBQ_BENCH_ITEMS", 16),
@@ -46,7 +47,11 @@ impl Bench {
         }
     }
 
-    fn pipe<'a>(&'a self, rt: &'a Runtime) -> Pipeline<'a> {
+    fn rt(&self) -> Box<dyn Backend> {
+        runtime::create_selected(&self.art, None).unwrap()
+    }
+
+    fn pipe<'a>(&'a self, rt: &'a dyn Backend) -> Pipeline<'a> {
         Pipeline::new(&self.art, rt, &self.model).unwrap()
     }
 
@@ -78,7 +83,7 @@ fn star(bits: &BitSpec, n_layers: usize) -> BitSpec {
 
 /// Table 1: zero-shot accuracy across methods x bit settings.
 fn table1(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let n_layers = pipe.cfg.n_layers;
     let settings: Vec<(&str, BitSpec)> = vec![
@@ -127,7 +132,7 @@ fn table1(b: &Bench) {
 
 /// Table 2 (+ Table 13 columns): perplexity across methods x bit settings.
 fn table2(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let n_layers = pipe.cfg.n_layers;
     let mut t = Table::new(
@@ -162,7 +167,7 @@ fn table2(b: &Bench) {
 
 /// Table 3a / Table 10: CFP vs baseline pre-processors, +- CBQ-Recon, W4A4.
 fn table3a(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let methods = [
         PreprocMethod::None,
@@ -196,7 +201,7 @@ fn table3a(b: &Bench) {
 
 /// Table 3b: rounding ablation — none vs dense AdaRound vs LoRA-Rounding.
 fn table3b(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let e = b.epochs;
     let rows: Vec<(&str, RoundingMode, usize)> = vec![
@@ -222,7 +227,7 @@ fn table3b(b: &Bench) {
 
 /// Tables 3c / 7 / 8 / 9: CBD window x overlap grid with cost columns.
 fn table3c(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let windows = b.art.manifest.windows[&b.model].clone();
     for bits in [BitSpec::w4a4(), BitSpec::w2a16()] {
@@ -256,7 +261,7 @@ fn table3c(b: &Bench) {
 
 /// Table 5: reconstruction-loss ablation (L2 / KLD / both).
 fn table5(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let rows: Vec<(&str, f32, f32)> =
         vec![("L2 only", 1.0, 0.0), ("KLD only", 0.0, 1.0), ("L2 + KLD", 1.0, 1.0)];
@@ -284,7 +289,7 @@ fn table11(b: &Bench) {
         if !b.art.manifest.configs.contains_key(name) {
             continue;
         }
-        let rt = Runtime::new(&b.art).unwrap();
+        let rt = b.rt();
         let mut pipe = Pipeline::new(&b.art, &rt, name).unwrap();
         let mut cells = vec![name.to_string(), pipe.cfg.quant_params().to_string()];
         for job in [
@@ -302,7 +307,7 @@ fn table11(b: &Bench) {
 
 /// Table 12: LoRA-Rounding rank sweep.
 fn table12(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let mut t = Table::new(
         format!("Table 12 — LoRA rank sweep (W4A4, `{}`)", b.model),
@@ -327,7 +332,7 @@ fn table13(b: &Bench) {
         if !b.art.manifest.configs.contains_key(name) {
             continue;
         }
-        let rt = Runtime::new(&b.art).unwrap();
+        let rt = b.rt();
         let mut pipe = Pipeline::new(&b.art, &rt, name).unwrap();
         let fp = pipe.fp_model();
         t.row(&[name.into(), "FP".into(), "-".into(),
@@ -350,7 +355,7 @@ fn table13(b: &Bench) {
 
 /// Table 14: W6A6.
 fn table14(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let mut t = Table::new(
         format!("Table 14 — W6A6, model `{}`", b.model),
@@ -372,7 +377,7 @@ fn table14(b: &Bench) {
 
 /// Table 15: CFP-only vs CBD-only contribution split at W4A16.
 fn table15(b: &Bench) {
-    let rt = Runtime::new(&b.art).unwrap();
+    let rt = b.rt();
     let mut pipe = b.pipe(&rt);
     let mut t = Table::new(
         format!("Table 15 — CFP vs CBD at W4A16, model `{}`", b.model),

@@ -9,8 +9,9 @@
 //! * the **RTN / GPTQ** baselines and the capture-driven pre-processing
 //!   stage (CFP & friends) that precede reconstruction.
 //!
-//! All model compute runs through the AOT HLO executables; this module owns
-//! state, scheduling, optimization and bookkeeping.
+//! All model compute runs through the executable surface of a
+//! [`Backend`] (PJRT-compiled AOT HLO, or the native CPU interpreter);
+//! this module owns state, scheduling, optimization and bookkeeping.
 
 pub mod qstate;
 
@@ -25,7 +26,7 @@ use crate::config::{Method, QuantJob, RoundingMode};
 use crate::gptq::{gptq_quantize, GptqHessian};
 use crate::model_state::{ActStats, ModelParams};
 use crate::quant::{self, LINEARS};
-use crate::runtime::{Artifacts, Bindings, ModelCfg, Runtime};
+use crate::runtime::{Artifacts, Backend, Bindings, ModelCfg};
 use crate::tensor::Tensor;
 
 pub use qstate::LinearQ;
@@ -77,14 +78,16 @@ pub struct QuantSummary {
 
 pub struct Pipeline<'a> {
     pub art: &'a Artifacts,
-    pub rt: &'a Runtime,
+    /// Execution backend (PJRT over AOT artifacts, or the native CPU
+    /// interpreter) — all model compute dispatches through this trait.
+    pub rt: &'a dyn Backend,
     pub cfg: ModelCfg,
     pub cfg_name: String,
     pub fp: ModelParams,
 }
 
 impl<'a> Pipeline<'a> {
-    pub fn new(art: &'a Artifacts, rt: &'a Runtime, cfg_name: &str) -> Result<Self> {
+    pub fn new(art: &'a Artifacts, rt: &'a dyn Backend, cfg_name: &str) -> Result<Self> {
         let cfg = art.cfg(cfg_name)?.clone();
         let weights = art.weights(cfg_name)?;
         let fp = ModelParams::from_tensors(&weights, &cfg)?;

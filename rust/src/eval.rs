@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::calib::{self, corpus::Style, ChoiceItem, TaskKind};
 use crate::coordinator::{Pipeline, QuantizedModel};
-use crate::runtime::Bindings;
+use crate::runtime::{Backend as _, Bindings};
 use crate::tensor::{Tensor, TensorI32};
 
 /// Zero-shot results: accuracy per task + Mutual-style ranking metrics.

@@ -2,15 +2,19 @@
 //!
 //! Production-quality reproduction of CBQ (ICLR 2025) as a three-layer
 //! Rust + JAX + Pallas system. This crate is **Layer 3**: the quantization
-//! coordinator. It loads AOT-compiled HLO artifacts (lowered once, at build
-//! time, from the JAX/Pallas layers in `python/`) and runs the entire PTQ
-//! pipeline — calibration, coarse-to-fine pre-processing, cross-block
-//! sliding-window reconstruction with LoRA-Rounding, baselines (RTN, GPTQ,
-//! SmoothQuant/OS/percentile/OMSE, dense AdaRound), and evaluation — with
-//! Python never on the execution path.
+//! coordinator. All model compute dispatches through an execution
+//! [`runtime::Backend`] — either PJRT over AOT-compiled HLO artifacts
+//! (lowered once, at build time, from the JAX/Pallas layers in `python/`)
+//! or the **native CPU backend**, which interprets the same executable
+//! semantics (including the `win_grad_*` STE gradients) directly in Rust so
+//! the entire PTQ pipeline — calibration, coarse-to-fine pre-processing,
+//! cross-block sliding-window reconstruction with LoRA-Rounding, baselines
+//! (RTN, GPTQ, SmoothQuant/OS/percentile/OMSE, dense AdaRound), and
+//! evaluation — runs on any machine, Python never on the execution path.
 //!
 //! ## Quick tour
-//! - [`runtime`] — PJRT client + manifest-driven executable registry.
+//! - [`runtime`] — artifacts + manifest, the [`runtime::Backend`] trait
+//!   (PJRT + native CPU), and the [`runtime::synth`] artifact generator.
 //! - [`coordinator`] — the paper's contribution: CBD sliding windows
 //!   (Sec. 3.1), LoRA-Rounding (Sec. 3.2), Adam, schedules.
 //! - [`cfp`] — coarse-to-fine outlier pre-processing (Sec. 3.4, Alg. 1).
@@ -20,21 +24,23 @@
 //! - [`hessian`] — finite-difference dependency analysis (paper Fig. 1).
 //! - [`snapshot`] — the `CBQS` store: a quantized model serialized with
 //!   true-bit-width packed codes + quant state, round-tripping bit-exactly
-//!   (`cbq export` / `cbq load-eval`).
+//!   (`cbq export` / `cbq load-eval` / `cbq snapshot-info`).
 //! - [`serve`] — snapshot registry + batched serving engine with pinned
-//!   window bindings and a request batcher (`cbq serve-bench`).
+//!   window bindings, a request batcher and a bounded admission queue
+//!   (`cbq serve-bench`).
 //!
 //! ## Quantize once…
 //! ```no_run
 //! use cbq::prelude::*;
 //! use cbq::calib::corpus::Style;
+//! // `cbq synth` (or make artifacts) produced this directory
 //! let art = Artifacts::load("artifacts")?;
-//! let rt = Runtime::new(&art)?;
-//! let mut pipe = Pipeline::new(&art, &rt, "t")?;
+//! let rt = cbq::runtime::create_selected(&art, None)?; // --backend / CBQ_BACKEND / auto
+//! let mut pipe = Pipeline::new(&art, rt.as_ref(), art.default_model())?;
 //! let (model, summary) = pipe.run(&QuantJob::cbq(BitSpec::w4a4()))?;
 //! println!("ppl: {:.2}", pipe.perplexity(&model, Style::C4, 8)?);
 //! // …persist the deliverable: packed codes + scales + quant state
-//! cbq::snapshot::save("t_w4a4.cbqs", &pipe.cfg, &model)?;
+//! cbq::snapshot::save("model_w4a4.cbqs", &pipe.cfg, &model)?;
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
@@ -43,16 +49,22 @@
 //! use cbq::prelude::*;
 //! use cbq::serve::{Batcher, ModelRegistry, ServeEngine};
 //! let art = Artifacts::load("artifacts")?;
-//! let rt = Runtime::new(&art)?;
+//! let rt = cbq::runtime::create_selected(&art, None)?;
 //! let mut reg = ModelRegistry::new();
-//! let snap = reg.load("t-w4a4", "t_w4a4.cbqs")?;
-//! let mut engine = ServeEngine::new(&rt, &art, snap)?;
-//! let requests = cbq::serve::batcher::standard_mix(96, 32, 8, 8);
-//! let (responses, stats) = Batcher::coalescing(&engine).run(&mut engine, &requests)?;
-//! println!("{:.0} tok/s at {:.0}% occupancy",
-//!          stats.tokens_per_s(), stats.occupancy() * 100.0);
+//! let snap = reg.load("w4a4", "model_w4a4.cbqs")?;
+//! let mut engine = ServeEngine::new(rt.as_ref(), &art, snap)?;
+//! let requests = cbq::serve::batcher::standard_mix(32, 32, 8, 8);
+//! let (responses, stats) = Batcher::coalescing(&engine)
+//!     .with_queue_cap(256) // bounded admission: overload is rejected, not queued
+//!     .run(&mut engine, &requests)?;
+//! println!("{:.0} tok/s at {:.0}% occupancy, {} rejected",
+//!          stats.tokens_per_s(), stats.occupancy() * 100.0, stats.rejected);
 //! # Ok::<(), anyhow::Error>(())
 //! ```
+
+// Index-heavy numerical kernels read clearer with explicit loops; several
+// executables take wide-but-flat argument lists mirroring the manifest.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
 pub mod calib;
 pub mod cfp;
@@ -75,6 +87,6 @@ pub mod tensor;
 pub mod prelude {
     pub use crate::config::{BitSpec, Method, PreprocMethod, QuantJob};
     pub use crate::coordinator::{Pipeline, QuantSummary};
-    pub use crate::runtime::{Artifacts, Runtime};
+    pub use crate::runtime::{Artifacts, Backend, BackendKind, NativeBackend, PjrtBackend};
     pub use crate::tensor::Tensor;
 }

@@ -1,18 +1,28 @@
 //! `cbq` — the CBQ quantization launcher.
 //!
 //! Subcommands:
+//!   synth       generate synthetic artifacts (manifest + host-pretrained
+//!               weights + corpus reference) so everything below runs
+//!               end-to-end offline on the native backend
 //!   quantize    run a full PTQ job (method x bits x preproc x CBD config)
 //!               and report perplexity vs the FP model
 //!   export      quantize, then persist the model as a CBQS snapshot
 //!               (true-bit-width packed codes + quant state)
 //!   load-eval   load a CBQS snapshot and evaluate it (bit-exact vs the
 //!               in-memory pipeline that produced it)
+//!   snapshot-info  inspect a CBQS file: header, per-tensor bit widths,
+//!               packed sizes, checksum + fingerprint status
 //!   serve-bench batched serving benchmark over a snapshot: coalesced vs
 //!               one-by-one dispatch, tokens/s + batch occupancy
 //!   eval        evaluate the FP model (sanity baseline)
 //!   zeroshot    quantize then run the zero-shot task suite
 //!   hessian     finite-difference dependency analysis (paper Fig. 1)
 //!   info        print the artifact manifest summary
+//!
+//! Execution backend: `--backend native|pjrt|auto` (or `CBQ_BACKEND`).
+//! `native` interprets the manifest semantics on the host CPU — no HLO
+//! artifacts or PJRT plugin needed; `pjrt` compiles the AOT HLO; `auto`
+//! (default) prefers PJRT when a real client comes up.
 //!
 //! Flag parsing is hand-rolled (`cbq::cli`) — the build environment vendors
 //! only the xla crate's dependency closure, so no clap. Both `--key value`
@@ -27,17 +37,22 @@ use cbq::coordinator::Pipeline;
 use cbq::hessian::{offdiag_ratio, HessianProbe};
 use cbq::json::{self, Value};
 use cbq::report::{fmt_bytes, fmt_f, heatmap, Table};
-use cbq::runtime::{Artifacts, Runtime};
+use cbq::runtime::{self, synth, Artifacts, Backend};
 use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor, ServeEngine, ServeStats};
 use cbq::snapshot;
 
 const USAGE: &str = "\
 cbq — Cross-Block Quantization for LLMs (ICLR 2025 reproduction)
 
-USAGE: cbq [--artifacts DIR] <COMMAND> [flags]
-       (flags accept both `--key value` and `--key=value`)
+USAGE: cbq [--artifacts DIR] [--backend native|pjrt|auto] <COMMAND> [flags]
+       (flags accept both `--key value` and `--key=value`;
+        CBQ_BACKEND selects the backend when --backend is absent)
 
 COMMANDS
+  synth     --out artifacts [--steps 400] [--seed 7]
+            generate synthetic artifacts: tiny manifest + weights pretrained
+            on-host + corpus reference — the whole pipeline then runs
+            offline via `--backend native` (no JAX, no PJRT)
   info                         artifact manifest summary
   eval      --model s          FP perplexity baseline
   quantize  --model s --method cbq --w 4 --a 16 [--star]
@@ -53,9 +68,15 @@ COMMANDS
   load-eval --snapshot snap.cbqs [--eval-batches 16] [--json out.json]
             load a snapshot, verify fingerprint + checksum, evaluate
             perplexity (bit-exact vs the in-memory pipeline)
+  snapshot-info --snapshot snap.cbqs [--json out.json]
+            header, per-tensor bit widths + packed sizes, checksum status,
+            fingerprint check against the artifacts config when available
   serve-bench --snapshot snap.cbqs [--ppl-requests 32]
-            [--choice-requests 8] [--hidden-requests 8] [--json out.json]
-            batched vs one-by-one serving throughput over a request mix
+            [--choice-requests 8] [--hidden-requests 8] [--queue-cap 0]
+            [--json out.json]
+            batched vs one-by-one serving throughput over a request mix;
+            --queue-cap bounds the admission queue in rows (0 = unlimited),
+            overflow requests are rejected and counted
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
 ";
@@ -122,6 +143,7 @@ fn serve_stats_row(t: &mut Table, mode: &str, s: &ServeStats) {
         format!("{:.1}%", s.occupancy() * 100.0),
         fmt_f(s.tokens_per_s(), 0),
         fmt_f(s.requests_per_s(), 1),
+        s.rejected.to_string(),
         format!("{:.2}s", s.wall_seconds),
     ]);
 }
@@ -135,8 +157,143 @@ fn serve_stats_json(s: &ServeStats) -> Value {
         ("occupancy", Value::num(s.occupancy())),
         ("tokens_per_s", Value::num(s.tokens_per_s())),
         ("requests_per_s", Value::num(s.requests_per_s())),
+        ("rejected", Value::num(s.rejected as f64)),
         ("wall_seconds", Value::num(s.wall_seconds)),
     ])
+}
+
+/// `--model` with a sensible default: the artifacts' sole config when
+/// there is exactly one (the `cbq synth` case).
+fn model_arg<'a>(args: &'a Args, art: &'a Artifacts) -> &'a str {
+    args.get("model").unwrap_or_else(|| art.default_model())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let out = args.get("out").unwrap_or("artifacts");
+    let mut spec = synth::SynthSpec::tiny();
+    spec.pretrain_steps = args.get_usize("steps", spec.pretrain_steps)?;
+    spec.seed = args.get_usize("seed", spec.seed as usize)? as u64;
+    let t0 = std::time::Instant::now();
+    let report = synth::generate(out, &spec)?;
+    println!(
+        "synthetic artifacts at {out}: model `{}` (d={} L={} heads={} ffn={} vocab={} seq={}),",
+        report.cfg.name,
+        report.cfg.d_model,
+        report.cfg.n_layers,
+        report.cfg.n_heads,
+        report.cfg.d_ffn,
+        report.cfg.vocab,
+        report.cfg.seq,
+    );
+    println!(
+        "  {} executables, {} quantizable weights, pretrain loss {:.3} ({:.1}s)",
+        report.n_executables,
+        report.weight_params,
+        report.pretrain_loss,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("next: cbq --artifacts {out} quantize --backend native");
+    Ok(())
+}
+
+fn cmd_snapshot_info(args: &Args) -> Result<()> {
+    let path = args
+        .get("snapshot")
+        .ok_or_else(|| anyhow!("snapshot-info requires --snapshot PATH"))?;
+    let info = snapshot::inspect(path)?;
+    println!(
+        "{path}: CBQS v{} — model `{}` {} ({}-rounding), {} tensors, {}",
+        info.version,
+        info.meta.cfg.name,
+        info.meta.label,
+        info.meta.rounding.name(),
+        info.tensors.len(),
+        fmt_bytes(info.file_bytes),
+    );
+    println!("checksum: OK (CRC-32 verified over header + payload)");
+    let c = &info.meta.cfg;
+    println!(
+        "config fingerprint: d_model={} n_layers={} n_heads={} d_ffn={} vocab={} seq={} batch={}",
+        c.d_model, c.n_layers, c.n_heads, c.d_ffn, c.vocab, c.seq, c.batch
+    );
+    // fingerprint check is best-effort: snapshot-info works without artifacts
+    match args
+        .get("artifacts")
+        .map(Artifacts::load)
+        .unwrap_or_else(Artifacts::discover)
+    {
+        Ok(art) => match art.cfg(&c.name) {
+            Ok(acfg) => {
+                let mism = snapshot::fingerprint_mismatches(c, acfg);
+                if mism.is_empty() {
+                    println!("fingerprint vs artifacts `{}`: OK", c.name);
+                } else {
+                    println!("fingerprint vs artifacts `{}`: MISMATCH", c.name);
+                    for m in &mism {
+                        println!("  {m}");
+                    }
+                }
+            }
+            Err(_) => println!("fingerprint: artifacts have no config `{}`", c.name),
+        },
+        Err(_) => println!("fingerprint: no artifacts directory to compare against"),
+    }
+
+    let mut t = Table::new("packed weight codes", &["bits", "tensors", "packed bytes"]);
+    for (bits, n, bytes) in info.packed_by_bits() {
+        t.row(&[format!("w{bits}"), n.to_string(), fmt_bytes(bytes)]);
+    }
+    t.print();
+    println!(
+        "payload: {} packed codes + {} f32 (scales/LoRA/clips/embeddings)",
+        fmt_bytes(info.packed_code_bytes),
+        fmt_bytes(info.f32_bytes)
+    );
+    let mut largest: Vec<_> = info.tensors.iter().collect();
+    largest.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.name.cmp(&b.name)));
+    let mut t = Table::new("largest tensors", &["name", "dtype", "dims", "bytes"]);
+    for ti in largest.iter().take(8) {
+        t.row(&[
+            ti.name.clone(),
+            if ti.dtype == "packed" { format!("w{}", ti.bits) } else { "f32".into() },
+            format!("{:?}", ti.dims),
+            fmt_bytes(ti.bytes as u64),
+        ]);
+    }
+    t.print();
+
+    write_json(
+        args,
+        &Value::obj(vec![
+            ("command", Value::str("snapshot-info")),
+            ("snapshot", Value::str(path)),
+            ("version", Value::num(info.version as f64)),
+            ("model", Value::str(info.meta.cfg.name.clone())),
+            ("label", Value::str(info.meta.label.clone())),
+            ("rounding", Value::str(info.meta.rounding.name())),
+            ("tensors", Value::num(info.tensors.len() as f64)),
+            ("file_bytes", Value::num(info.file_bytes as f64)),
+            ("packed_code_bytes", Value::num(info.packed_code_bytes as f64)),
+            ("f32_bytes", Value::num(info.f32_bytes as f64)),
+            ("checksum_ok", Value::Bool(info.checksum_ok)),
+            (
+                "packed_by_bits",
+                Value::arr(
+                    info.packed_by_bits()
+                        .into_iter()
+                        .map(|(bits, n, bytes)| {
+                            Value::obj(vec![
+                                ("bits", Value::num(bits as f64)),
+                                ("tensors", Value::num(n as f64)),
+                                ("bytes", Value::num(bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )?;
+    Ok(())
 }
 
 fn main() -> Result<()> {
@@ -145,15 +302,24 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+
+    // commands that need no artifacts directory come first
+    match cmd {
+        "synth" => return cmd_synth(&args),
+        "snapshot-info" => return cmd_snapshot_info(&args),
+        _ => {}
+    }
+
     let art = match args.get("artifacts") {
         Some(p) => Artifacts::load(p)?,
         None => Artifacts::discover()?,
     };
-    let rt = Runtime::new(&art)?;
+    let rt: Box<dyn Backend> = runtime::create_selected(&art, args.get("backend"))?;
+    let rt = rt.as_ref();
 
     match cmd {
         "info" => {
-            println!("artifacts: {:?}", art.dir);
+            println!("artifacts: {:?} (backend: {})", art.dir, rt.name());
             let mut t =
                 Table::new("configs", &["name", "d_model", "layers", "heads", "ffn", "windows"]);
             for (name, c) in &art.manifest.configs {
@@ -170,20 +336,20 @@ fn main() -> Result<()> {
             println!("\n{} executables", art.manifest.executables.len());
         }
         "eval" => {
-            let model = args.get("model").unwrap_or("s");
+            let model = model_arg(&args, &art);
             let n = args.get_usize("eval-batches", 16)?;
-            let pipe = Pipeline::new(&art, &rt, model)?;
+            let pipe = Pipeline::new(&art, rt, model)?;
             let fp = pipe.fp_model();
             let c4 = pipe.perplexity(&fp, Style::C4, n)?;
             let wiki = pipe.perplexity(&fp, Style::Wiki, n)?;
             println!("FP {model}: ppl(c4) = {c4:.3}, ppl(wiki) = {wiki:.3}");
         }
         "quantize" => {
-            let model = args.get("model").unwrap_or("s");
-            let mut pipe = Pipeline::new(&art, &rt, model)?;
+            let model = model_arg(&args, &art);
+            let mut pipe = Pipeline::new(&art, rt, model)?;
             let job = build_job(&args, pipe.cfg.n_layers)?;
             let eval_batches = args.get_usize("eval-batches", 16)?;
-            println!("running {} on model {model}...", job.label());
+            println!("running {} on model {model} ({} backend)...", job.label(), rt.name());
             let (qm, summary) = pipe.run(&job)?;
             let fp = pipe.fp_model();
             let mut t = Table::new(
@@ -202,15 +368,18 @@ fn main() -> Result<()> {
             }
             let stats = rt.stats();
             println!(
-                "runtime: {} executions, {:.1}ms exec, {:.1}ms compile",
-                stats.executions, stats.execute_ms, stats.compile_ms
+                "runtime[{}]: {} executions, {:.1}ms exec, {:.1}ms compile",
+                rt.name(),
+                stats.executions,
+                stats.execute_ms,
+                stats.compile_ms
             );
         }
         "export" => {
-            let model = args.get("model").unwrap_or("s");
-            let mut pipe = Pipeline::new(&art, &rt, model)?;
+            let model = model_arg(&args, &art);
+            let mut pipe = Pipeline::new(&art, rt, model)?;
             let job = build_job(&args, pipe.cfg.n_layers)?;
-            println!("running {} on model {model}...", job.label());
+            println!("running {} on model {model} ({} backend)...", job.label(), rt.name());
             let (qm, summary) = pipe.run(&job)?;
 
             let eval_batches = args.get_usize("eval-batches", 8)?;
@@ -250,6 +419,7 @@ fn main() -> Result<()> {
                     ("command", Value::str("export")),
                     ("model", Value::str(model)),
                     ("label", Value::str(job.label())),
+                    ("backend", Value::str(rt.name())),
                     ("out", Value::str(out.clone())),
                     ("file_bytes", Value::num(report.file_bytes as f64)),
                     ("f32_equiv_bytes", Value::num(report.f32_equiv_bytes as f64)),
@@ -278,7 +448,7 @@ fn main() -> Result<()> {
                 snap.meta.label,
                 snap.meta.rounding.name()
             );
-            let pipe = Pipeline::new(&art, &rt, &cfg_name)?;
+            let pipe = Pipeline::new(&art, rt, &cfg_name)?;
             let n = args.get_usize("eval-batches", 16)?;
             let c4 = pipe.perplexity(&snap.model, Style::C4, n)?;
             let wiki = pipe.perplexity(&snap.model, Style::Wiki, n)?;
@@ -296,6 +466,7 @@ fn main() -> Result<()> {
                     ("snapshot", Value::str(path)),
                     ("model", Value::str(cfg_name.clone())),
                     ("label", Value::str(snap.meta.label.clone())),
+                    ("backend", Value::str(rt.name())),
                     ("eval_batches", Value::num(n as f64)),
                     ("ppl_c4", Value::num(c4)),
                     ("ppl_wiki", Value::num(wiki)),
@@ -316,23 +487,29 @@ fn main() -> Result<()> {
             let n_ppl = args.get_usize("ppl-requests", 32)?;
             let n_choice = args.get_usize("choice-requests", 8)?;
             let n_hidden = args.get_usize("hidden-requests", 8)?;
+            let queue_cap = args.get_usize("queue-cap", 0)?;
             let requests = batcher::standard_mix(seq, n_ppl, n_choice, n_hidden);
             anyhow::ensure!(!requests.is_empty(), "request mix is empty — raise --ppl-requests");
             println!(
-                "serving {} requests ({} ppl / {} choice / {} hidden) from {}",
+                "serving {} requests ({} ppl / {} choice / {} hidden) from {} on {} backend",
                 requests.len(),
                 n_ppl,
                 n_choice,
                 n_hidden,
-                snap.meta.label
+                snap.meta.label,
+                rt.name()
             );
 
-            let mut engine = ServeEngine::new(&rt, &art, snap.clone())?;
+            let mut engine = ServeEngine::new(rt, &art, snap.clone())?;
             // warm-up dispatch so neither timed run pays first-call costs
             engine.execute(&requests[0].rows[..1])?;
 
-            let (resp_b, stats_b) = Batcher::coalescing(&engine).run(&mut engine, &requests)?;
-            let (resp_s, stats_s) = Batcher::sequential().run(&mut engine, &requests)?;
+            let (resp_b, stats_b) = Batcher::coalescing(&engine)
+                .with_queue_cap(queue_cap)
+                .run(&mut engine, &requests)?;
+            let (resp_s, stats_s) = Batcher::sequential()
+                .with_queue_cap(queue_cap)
+                .run(&mut engine, &requests)?;
 
             // both schedules must produce identical answers (full structural
             // compare: ppl sums, choice picks + scores, hidden token counts)
@@ -340,7 +517,7 @@ fn main() -> Result<()> {
 
             let mut t = Table::new(
                 format!("serve-bench ({} window dispatches/forward)", engine.plan_len()),
-                &["mode", "dispatches", "occupancy", "tok/s", "req/s", "wall"],
+                &["mode", "dispatches", "occupancy", "tok/s", "req/s", "rejected", "wall"],
             );
             serve_stats_row(&mut t, "batched", &stats_b);
             serve_stats_row(&mut t, "one-by-one", &stats_s);
@@ -357,7 +534,9 @@ fn main() -> Result<()> {
                     ("command", Value::str("serve-bench")),
                     ("snapshot", Value::str(path)),
                     ("label", Value::str(snap.meta.label.clone())),
+                    ("backend", Value::str(rt.name())),
                     ("requests", Value::num(requests.len() as f64)),
+                    ("queue_cap", Value::num(queue_cap as f64)),
                     ("batched", serve_stats_json(&stats_b)),
                     ("sequential", serve_stats_json(&stats_s)),
                     ("speedup_tokens_per_s", Value::num(speedup)),
@@ -366,8 +545,8 @@ fn main() -> Result<()> {
             )?;
         }
         "zeroshot" => {
-            let model = args.get("model").unwrap_or("s");
-            let mut pipe = Pipeline::new(&art, &rt, model)?;
+            let model = model_arg(&args, &art);
+            let mut pipe = Pipeline::new(&art, rt, model)?;
             let bits =
                 BitSpec::new(args.get_usize("w", 4)? as u8, args.get_usize("a", 16)? as u8);
             let mut job = parse_method(&args, bits)?;
@@ -399,8 +578,8 @@ fn main() -> Result<()> {
             t.print();
         }
         "hessian" => {
-            let model = args.get("model").unwrap_or("t");
-            let pipe = Pipeline::new(&art, &rt, model)?;
+            let model = args.get("model").unwrap_or_else(|| art.model_or_default("t"));
+            let pipe = Pipeline::new(&art, rt, model)?;
             for b in args.get("bits").unwrap_or("8,4,2").split(',') {
                 let wb: u8 = b.trim().parse()?;
                 let probe = HessianProbe::new(&pipe, BitSpec::new(wb, 16))?;

@@ -1,0 +1,994 @@
+//! Native CPU kernels for the manifest's executable semantics.
+//!
+//! These implement, in plain Rust, the same math the AOT HLO graphs encode
+//! (python/compile/model.py + kernels/ref.py document the contracts):
+//! rmsnorm, causal RoPE attention, SwiGLU, the fake-quant weight/activation
+//! blends, the reconstruction and rounding-commitment losses — plus the
+//! *backward* rules the STE seams define (python/compile/ste.py):
+//!
+//! * activations: STE through round, LSQ step-size gradient chained into
+//!   the learnable clip `alpha`;
+//! * weights: STE pass-through, per-channel LSQ gradient for `s_w`, and
+//!   `drho = g * s * Z` flowing into the LoRA factors.
+//!
+//! Parallelism: a `std::thread::scope`d pool (no crates.io in this build
+//! environment) splits work across batch rows for the matmuls and across
+//! `(batch, head)` pairs for attention. Every output row/head is written by
+//! exactly one thread and reduced sequentially within it, so results are
+//! bit-deterministic regardless of thread count.
+
+use crate::quant::{rect_sigmoid, EPS, GAMMA, ZETA};
+
+// ---------------------------------------------------------------------------
+// scoped thread pool helpers
+// ---------------------------------------------------------------------------
+
+/// Worker thread count: `CBQ_THREADS` override, else available parallelism
+/// capped at 16 (diminishing returns for the small reproduction models).
+/// Resolved once per process — this sits on the hot path of every kernel,
+/// and both the env var and the core count are fixed for the run.
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("CBQ_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.clamp(1, 64);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
+    })
+}
+
+/// Apply `f(row_index, row)` to every `row_len` chunk of `out`, splitting
+/// the rows across scoped threads. Falls back to the serial loop when the
+/// total work is too small to amortize thread spawns.
+pub fn par_rows<F>(out: &mut [f32], row_len: usize, work_per_row: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let threads = num_threads().min(rows.max(1));
+    // below ~64k flops total the spawn overhead dominates
+    if threads <= 1 || rows * work_per_row < 65_536 {
+        for (i, row) in out.chunks_mut(row_len).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, chunk) in out.chunks_mut(per * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, row) in chunk.chunks_mut(row_len).enumerate() {
+                    f(ti * per + j, row);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` across scoped threads, collecting owned results in
+/// index order (used for per-head attention work, where each item returns
+/// several buffers).
+pub fn par_map<T, F>(n: usize, min_serial: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= min_serial {
+        return (0..n).map(f).collect();
+    }
+    let per = n.div_ceil(threads);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (ti, chunk) in out.chunks_mut(per).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(ti * per + j));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+// ---------------------------------------------------------------------------
+// dense matmuls (row-parallel)
+// ---------------------------------------------------------------------------
+
+/// `A[m,k] @ B[k,n] -> [m,n]`, parallel over output rows.
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    par_rows(&mut out, n.max(1), 2 * k * n, |i, orow| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    });
+    out
+}
+
+/// `A[m,k] @ B^T` with `B: [n,k]` -> `[m,n]`, parallel over output rows.
+pub fn matmul_transb(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    par_rows(&mut out, n.max(1), 2 * k * n, |i, orow| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    });
+    out
+}
+
+/// `A^T @ B` with `A: [m,k]`, `B: [m,n]` -> `[k,n]`, parallel over the `k`
+/// output rows (each reduces over `m` sequentially: deterministic).
+pub fn matmul_transa(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    let mut out = vec![0.0f32; k * n];
+    par_rows(&mut out, n.max(1), 2 * m * n, |kk, orow| {
+        for i in 0..m {
+            let av = a[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rmsnorm
+// ---------------------------------------------------------------------------
+
+pub const RMS_EPS: f32 = 1e-5;
+
+/// `x: [rows, d]`, `g: [d]` -> normalized `[rows, d]`.
+pub fn rmsnorm(x: &[f32], d: usize, g: &[f32]) -> Vec<f32> {
+    assert_eq!(g.len(), d);
+    let mut out = vec![0.0f32; x.len()];
+    par_rows(&mut out, d, 4 * d, |i, orow| {
+        let row = &x[i * d..(i + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32 + RMS_EPS;
+        let r = 1.0 / ms.sqrt();
+        for ((o, &v), &gv) in orow.iter_mut().zip(row).zip(g) {
+            *o = v * r * gv;
+        }
+    });
+    out
+}
+
+/// Backward of [`rmsnorm`] (python/compile/ste.py `_rmsnorm_bwd`):
+/// returns `dx`; when `dgamma` is given, accumulates `sum_rows gy * x * r`.
+pub fn rmsnorm_bwd(
+    x: &[f32],
+    d: usize,
+    g: &[f32],
+    gy: &[f32],
+    mut dgamma: Option<&mut [f32]>,
+) -> Vec<f32> {
+    assert_eq!(x.len(), gy.len());
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    // serial over rows when accumulating dgamma (shared accumulator);
+    // row-parallel otherwise.
+    let row_dx = |i: usize, out: &mut [f32]| -> f32 {
+        let row = &x[i * d..(i + 1) * d];
+        let gyr = &gy[i * d..(i + 1) * d];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32 + RMS_EPS;
+        let r = 1.0 / ms.sqrt();
+        let mut mean_xgg = 0.0f32;
+        for ((&v, &gv), &gyv) in row.iter().zip(g).zip(gyr) {
+            mean_xgg += v * gyv * gv;
+        }
+        mean_xgg /= d as f32;
+        for (j, o) in out.iter_mut().enumerate() {
+            let gg = gyr[j] * g[j];
+            *o = r * gg - row[j] * r * r * r * mean_xgg;
+        }
+        r
+    };
+    if let Some(dg) = dgamma.as_deref_mut() {
+        assert_eq!(dg.len(), d);
+        for i in 0..rows {
+            let r = {
+                let out = &mut dx[i * d..(i + 1) * d];
+                row_dx(i, out)
+            };
+            let row = &x[i * d..(i + 1) * d];
+            let gyr = &gy[i * d..(i + 1) * d];
+            for ((dgj, &v), &gyv) in dg.iter_mut().zip(row).zip(gyr) {
+                *dgj += gyv * v * r;
+            }
+        }
+    } else {
+        par_rows(&mut dx, d, 6 * d, |i, out| {
+            row_dx(i, out);
+        });
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// activation fake-quant (per-token dynamic, learnable clip alpha)
+// ---------------------------------------------------------------------------
+
+/// `x_eff = x + a_en * (fq(x) - x)` with per-row `s = max(alpha*max|x|/qmax,
+/// EPS)` (kernels/ref.py `blend_act`).
+pub fn blend_act(x: &[f32], k: usize, alpha: f32, qmax: f32, a_en: f32) -> Vec<f32> {
+    if a_en == 0.0 {
+        return x.to_vec();
+    }
+    let (lo, hi) = (-qmax - 1.0, qmax);
+    let mut out = vec![0.0f32; x.len()];
+    par_rows(&mut out, k, 6 * k, |i, orow| {
+        let row = &x[i * k..(i + 1) * k];
+        let m = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let s = (alpha * m / qmax).max(EPS);
+        for (o, &v) in orow.iter_mut().zip(row) {
+            let q = (v / s).round().clamp(lo, hi);
+            *o = v + a_en * (q * s - v);
+        }
+    });
+    out
+}
+
+/// Backward of [`blend_act`] given `dxe` (grad wrt `x_eff`): returns
+/// `(dx, dalpha)` per ste.py `_qmatmul_bwd`'s activation-side rules.
+pub fn blend_act_bwd(
+    x: &[f32],
+    k: usize,
+    alpha: f32,
+    qmax: f32,
+    a_en: f32,
+    dxe: &[f32],
+) -> (Vec<f32>, f32) {
+    if a_en == 0.0 {
+        return (dxe.to_vec(), 0.0);
+    }
+    assert_eq!(x.len(), dxe.len());
+    let rows = x.len() / k;
+    let (lo, hi) = (-qmax - 1.0, qmax);
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dalpha = 0.0f32;
+    for i in 0..rows {
+        let row = &x[i * k..(i + 1) * k];
+        let grow = &dxe[i * k..(i + 1) * k];
+        let m = row.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        let s = (alpha * m / qmax).max(EPS);
+        let mut ds_tok = 0.0f32;
+        for (j, (&v, &g)) in row.iter().zip(grow).enumerate() {
+            let vv = v / s;
+            let r = vv.round();
+            let in_range = r >= lo && r <= hi;
+            let rc = r.clamp(lo, hi);
+            let z = if in_range { 1.0 } else { 0.0 };
+            dx[i * k + j] = g * (1.0 - a_en + a_en * z);
+            let dq_ds = if in_range { rc - vv } else { rc };
+            ds_tok += g * a_en * dq_ds;
+        }
+        dalpha += ds_tok * m / qmax;
+    }
+    (dx, dalpha)
+}
+
+// ---------------------------------------------------------------------------
+// weight fake-quant (per-output-channel scale, AdaRound offset rho)
+// ---------------------------------------------------------------------------
+
+/// `w_hat = w + w_en * (fq(w) - w)` with `fq = clip(floor(w/s)+rho, lo, hi)
+/// * s`, `s = max(s_w, EPS)` per output channel (column). `rho = None`
+/// means nearest rounding.
+pub fn blend_weight(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    s_w: &[f32],
+    rho: Option<&[f32]>,
+    qmax: f32,
+    w_en: f32,
+) -> Vec<f32> {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(s_w.len(), n);
+    if w_en == 0.0 {
+        return w.to_vec();
+    }
+    let (lo, hi) = (-qmax - 1.0, qmax);
+    let mut out = vec![0.0f32; w.len()];
+    par_rows(&mut out, n, 6 * n, |i, orow| {
+        let row = &w[i * n..(i + 1) * n];
+        for (j, (o, &v)) in orow.iter_mut().zip(row).enumerate() {
+            let s = s_w[j].max(EPS);
+            let vv = v / s;
+            let r = match rho {
+                Some(rh) => rh[i * n + j],
+                None => {
+                    if vv - vv.floor() >= 0.5 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+            };
+            let q = (vv.floor() + r).clamp(lo, hi);
+            *o = v + w_en * (q * s - v);
+        }
+    });
+    out
+}
+
+/// Gradients of [`blend_weight`] given `g` (grad wrt `w_hat`), per ste.py
+/// `_qweight_bwd` (STE + per-channel LSQ). The weight matrix itself is not
+/// learnable in the `win_grad_*` graphs, so `dw` (the STE pass-through
+/// `g * (1 - w_en + w_en*z)`) is deliberately not materialized.
+pub struct WeightGrads {
+    pub ds_w: Vec<f32>,
+    pub drho: Vec<f32>,
+}
+
+pub fn blend_weight_bwd(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    s_w: &[f32],
+    rho: Option<&[f32]>,
+    qmax: f32,
+    w_en: f32,
+    g: &[f32],
+) -> WeightGrads {
+    assert_eq!(w.len(), g.len());
+    let mut ds_w = vec![0.0f32; n];
+    let mut drho = vec![0.0f32; k * n];
+    if w_en == 0.0 {
+        return WeightGrads { ds_w, drho };
+    }
+    let (lo, hi) = (-qmax - 1.0, qmax);
+    for i in 0..k {
+        for j in 0..n {
+            let s = s_w[j].max(EPS);
+            let v = w[i * n + j] / s;
+            let r = match rho {
+                Some(rh) => rh[i * n + j],
+                None => {
+                    if v - v.floor() >= 0.5 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+            };
+            let q_unc = v.floor() + r;
+            let in_range = q_unc >= lo && q_unc <= hi;
+            let q = q_unc.clamp(lo, hi);
+            let gv = g[i * n + j];
+            let z = if in_range { 1.0 } else { 0.0 };
+            let dq_ds = if in_range { q - v } else { q };
+            ds_w[j] += gv * w_en * dq_ds;
+            drho[i * n + j] = gv * w_en * s * z;
+        }
+    }
+    WeightGrads { ds_w, drho }
+}
+
+// ---------------------------------------------------------------------------
+// rectified sigmoid (AdaRound Eq. 8) + derivative
+// ---------------------------------------------------------------------------
+
+/// d rect_sigmoid / dv: zero where the pre-clip value left [0, 1].
+pub fn rect_sigmoid_d(v: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-v).exp());
+    let pre = sig * (ZETA - GAMMA) + GAMMA;
+    if !(0.0..=1.0).contains(&pre) {
+        return 0.0;
+    }
+    sig * (1.0 - sig) * (ZETA - GAMMA)
+}
+
+/// rho = rect_sigmoid(v0 + delta) elementwise; returns (v_pre, rho).
+pub fn rho_soft(v0: &[f32], delta: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(v0.len(), delta.len());
+    let v_pre: Vec<f32> = v0.iter().zip(delta).map(|(&a, &b)| a + b).collect();
+    let rho = v_pre.iter().map(|&v| rect_sigmoid(v)).collect();
+    (v_pre, rho)
+}
+
+/// Nearest-rounding offset (kernels/ref.py `round_ste_rho`).
+pub fn rho_hard(w: &[f32], n: usize, s_w: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; w.len()];
+    for (idx, (&v, o)) in w.iter().zip(out.iter_mut()).enumerate() {
+        let s = s_w[idx % n].max(EPS);
+        let vv = v / s;
+        *o = if vv - vv.floor() >= 0.5 { 1.0 } else { 0.0 };
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// softmax / silu
+// ---------------------------------------------------------------------------
+
+/// In-place row softmax over the last `d` elements of each row.
+pub fn softmax_rows(x: &mut [f32], d: usize) {
+    for row in x.chunks_mut(d) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row log-softmax: returns a new buffer.
+pub fn log_softmax_rows(x: &[f32], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    par_rows(&mut out, d, 6 * d, |i, orow| {
+        let row = &x[i * d..(i + 1) * d];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let lse = row.iter().map(|&v| (v - m).exp()).sum::<f32>().ln() + m;
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = v - lse;
+        }
+    });
+    out
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+pub fn silu_d(x: f32) -> f32 {
+    let sig = 1.0 / (1.0 + (-x).exp());
+    sig * (1.0 + x * (1.0 - sig))
+}
+
+// ---------------------------------------------------------------------------
+// causal RoPE attention
+// ---------------------------------------------------------------------------
+
+/// Per-(batch, head) backward cache.
+pub struct HeadCache {
+    /// RoPE-rotated query/key, `[s, hd]`.
+    pub q_r: Vec<f32>,
+    pub k_r: Vec<f32>,
+    /// raw values, `[s, hd]`.
+    pub v_h: Vec<f32>,
+    /// softmax probabilities, `[s, s]` (zero above the diagonal).
+    pub probs: Vec<f32>,
+}
+
+/// Causal multi-head attention with RoPE (python/compile/model.py
+/// `attention`). Inputs/outputs are `[b, s, h*hd]`.
+pub struct Attention {
+    pub b: usize,
+    pub s: usize,
+    pub h: usize,
+    pub hd: usize,
+    /// `[s, hd/2]` RoPE tables.
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl Attention {
+    pub fn new(b: usize, s: usize, h: usize, hd: usize) -> Self {
+        assert!(hd % 2 == 0, "head_dim must be even for RoPE");
+        let half = hd / 2;
+        let mut cos = vec![0.0f32; s * half];
+        let mut sin = vec![0.0f32; s * half];
+        for pos in 0..s {
+            for p in 0..half {
+                let freq = (10000.0f64).powf(-2.0 * p as f64 / hd as f64);
+                let ang = pos as f64 * freq;
+                cos[pos * half + p] = ang.cos() as f32;
+                sin[pos * half + p] = ang.sin() as f32;
+            }
+        }
+        Self { b, s, h, hd, cos, sin }
+    }
+
+    /// Gather head `hh` of `x [b,s,h*hd]` for batch `bb` into `[s, hd]`.
+    fn gather(&self, x: &[f32], bb: usize, hh: usize) -> Vec<f32> {
+        let d = self.h * self.hd;
+        let mut out = vec![0.0f32; self.s * self.hd];
+        for ss in 0..self.s {
+            let src = (bb * self.s + ss) * d + hh * self.hd;
+            out[ss * self.hd..(ss + 1) * self.hd].copy_from_slice(&x[src..src + self.hd]);
+        }
+        out
+    }
+
+    fn scatter(&self, out: &mut [f32], bb: usize, hh: usize, head: &[f32]) {
+        let d = self.h * self.hd;
+        for ss in 0..self.s {
+            let dst = (bb * self.s + ss) * d + hh * self.hd;
+            out[dst..dst + self.hd].copy_from_slice(&head[ss * self.hd..(ss + 1) * self.hd]);
+        }
+    }
+
+    /// Apply RoPE in place to `[s, hd]` (interleaved even/odd pairs).
+    fn rope(&self, x: &mut [f32], inverse: bool) {
+        let half = self.hd / 2;
+        for ss in 0..self.s {
+            for p in 0..half {
+                let c = self.cos[ss * half + p];
+                let sn = if inverse { -self.sin[ss * half + p] } else { self.sin[ss * half + p] };
+                let i0 = ss * self.hd + 2 * p;
+                let (x1, x2) = (x[i0], x[i0 + 1]);
+                x[i0] = x1 * c - x2 * sn;
+                x[i0 + 1] = x1 * sn + x2 * c;
+            }
+        }
+    }
+
+    /// Forward. Returns `(context [b,s,h*hd], per-(b,h) caches)`; caches are
+    /// empty when `want_cache` is false.
+    pub fn forward(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        want_cache: bool,
+    ) -> (Vec<f32>, Vec<HeadCache>) {
+        let (s, hd) = (self.s, self.hd);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let n_bh = self.b * self.h;
+        // each (batch, head) item is independent: scoped-thread map
+        let per_head = par_map(n_bh, 1, |bh| {
+            let (bb, hh) = (bh / self.h, bh % self.h);
+            let mut q_r = self.gather(q, bb, hh);
+            let mut k_r = self.gather(k, bb, hh);
+            let v_h = self.gather(v, bb, hh);
+            self.rope(&mut q_r, false);
+            self.rope(&mut k_r, false);
+            let mut probs = vec![0.0f32; s * s];
+            for sq in 0..s {
+                let qrow = &q_r[sq * hd..(sq + 1) * hd];
+                let mut m = f32::NEG_INFINITY;
+                for sk in 0..=sq {
+                    let krow = &k_r[sk * hd..(sk + 1) * hd];
+                    let mut dot = 0.0f32;
+                    for (&a, &b) in qrow.iter().zip(krow) {
+                        dot += a * b;
+                    }
+                    let sc = dot * inv_sqrt;
+                    probs[sq * s + sk] = sc;
+                    m = m.max(sc);
+                }
+                let mut sum = 0.0f32;
+                for sk in 0..=sq {
+                    let e = (probs[sq * s + sk] - m).exp();
+                    probs[sq * s + sk] = e;
+                    sum += e;
+                }
+                let inv = 1.0 / sum;
+                for sk in 0..=sq {
+                    probs[sq * s + sk] *= inv;
+                }
+            }
+            let mut ctx = vec![0.0f32; s * hd];
+            for sq in 0..s {
+                let crow = &mut ctx[sq * hd..(sq + 1) * hd];
+                for sk in 0..=sq {
+                    let p = probs[sq * s + sk];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v_h[sk * hd..(sk + 1) * hd];
+                    for (c, &vv) in crow.iter_mut().zip(vrow) {
+                        *c += p * vv;
+                    }
+                }
+            }
+            (ctx, HeadCache { q_r, k_r, v_h, probs })
+        });
+        let d = self.h * self.hd;
+        let mut out = vec![0.0f32; self.b * s * d];
+        let mut caches = Vec::with_capacity(if want_cache { n_bh } else { 0 });
+        for (bh, (ctx, cache)) in per_head.into_iter().enumerate() {
+            self.scatter(&mut out, bh / self.h, bh % self.h, &ctx);
+            if want_cache {
+                caches.push(cache);
+            }
+        }
+        (out, caches)
+    }
+
+    /// Backward: `dout [b,s,h*hd]` -> `(dq, dk, dv)` (grads wrt the
+    /// *pre-RoPE* q/k and raw v).
+    pub fn backward(&self, caches: &[HeadCache], dout: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (s, hd) = (self.s, self.hd);
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let n_bh = self.b * self.h;
+        assert_eq!(caches.len(), n_bh);
+        let per_head = par_map(n_bh, 1, |bh| {
+            let cache = &caches[bh];
+            let dctx = self.gather(dout, bh / self.h, bh % self.h);
+            let mut dv = vec![0.0f32; s * hd];
+            let mut dq_r = vec![0.0f32; s * hd];
+            let mut dk_r = vec![0.0f32; s * hd];
+            let mut dscores = vec![0.0f32; s * s];
+            for sq in 0..s {
+                let drow = &dctx[sq * hd..(sq + 1) * hd];
+                // dprobs and the softmax-row reduction
+                let mut dp = vec![0.0f32; sq + 1];
+                let mut dot_pp = 0.0f32;
+                for (sk, dpv) in dp.iter_mut().enumerate() {
+                    let vrow = &cache.v_h[sk * hd..(sk + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for (&a, &b) in drow.iter().zip(vrow) {
+                        acc += a * b;
+                    }
+                    *dpv = acc;
+                    dot_pp += cache.probs[sq * s + sk] * acc;
+                }
+                for (sk, &dpv) in dp.iter().enumerate() {
+                    let p = cache.probs[sq * s + sk];
+                    dscores[sq * s + sk] = p * (dpv - dot_pp);
+                    // dv accumulation
+                    let dvrow = &mut dv[sk * hd..(sk + 1) * hd];
+                    for (o, &g) in dvrow.iter_mut().zip(drow) {
+                        *o += p * g;
+                    }
+                }
+            }
+            for sq in 0..s {
+                let dqrow_start = sq * hd;
+                for sk in 0..=sq {
+                    let ds = dscores[sq * s + sk] * inv_sqrt;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let krow = &cache.k_r[sk * hd..(sk + 1) * hd];
+                    let qrow = &cache.q_r[sq * hd..(sq + 1) * hd];
+                    for e in 0..hd {
+                        dq_r[dqrow_start + e] += ds * krow[e];
+                        dk_r[sk * hd + e] += ds * qrow[e];
+                    }
+                }
+            }
+            // un-rotate: RoPE backward is the inverse rotation
+            self.rope(&mut dq_r, true);
+            self.rope(&mut dk_r, true);
+            (dq_r, dk_r, dv)
+        });
+        let d = self.h * self.hd;
+        let mut dq = vec![0.0f32; self.b * s * d];
+        let mut dk = vec![0.0f32; self.b * s * d];
+        let mut dv = vec![0.0f32; self.b * s * d];
+        for (bh, (dq_h, dk_h, dv_h)) in per_head.into_iter().enumerate() {
+            let (bb, hh) = (bh / self.h, bh % self.h);
+            self.scatter(&mut dq, bb, hh, &dq_h);
+            self.scatter(&mut dk, bb, hh, &dk_h);
+            self.scatter(&mut dv, bb, hh, &dv_h);
+        }
+        (dq, dk, dv)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// losses
+// ---------------------------------------------------------------------------
+
+/// Reconstruction loss (Eq. 7): `l2_w * mse + kld_w * kld` with the KLD
+/// taken over softmax of the hidden dimension. Returns (loss, mse, kld).
+pub fn recon_loss(h: &[f32], target: &[f32], d: usize, l2_w: f32, kld_w: f32) -> (f32, f32, f32) {
+    assert_eq!(h.len(), target.len());
+    let n = h.len();
+    let rows = n / d;
+    let mut mse = 0.0f64;
+    for (&a, &b) in h.iter().zip(target) {
+        let diff = (a - b) as f64;
+        mse += diff * diff;
+    }
+    let mse = (mse / n as f64) as f32;
+    let logp = log_softmax_rows(target, d);
+    let logq = log_softmax_rows(h, d);
+    let mut kld = 0.0f64;
+    for i in 0..rows {
+        let mut row = 0.0f64;
+        for j in 0..d {
+            let lp = logp[i * d + j] as f64;
+            let lq = logq[i * d + j] as f64;
+            row += lp.exp() * (lp - lq);
+        }
+        kld += row;
+    }
+    let kld = (kld / rows as f64) as f32;
+    (l2_w * mse + kld_w * kld, mse, kld)
+}
+
+/// d(recon_loss)/dh.
+pub fn recon_loss_bwd(h: &[f32], target: &[f32], d: usize, l2_w: f32, kld_w: f32) -> Vec<f32> {
+    let n = h.len();
+    let rows = n / d;
+    let logp = log_softmax_rows(target, d);
+    let logq = log_softmax_rows(h, d);
+    let mut dh = vec![0.0f32; n];
+    let inv_n = 1.0 / n as f32;
+    let inv_rows = 1.0 / rows as f32;
+    for i in 0..n {
+        let p = logp[i].exp();
+        let q = logq[i].exp();
+        dh[i] = l2_w * 2.0 * (h[i] - target[i]) * inv_n + kld_w * (q - p) * inv_rows;
+    }
+    dh
+}
+
+/// Rounding-commitment regularizer for one linear:
+/// `mean(1 - |2 rho - 1|^beta)` (Eq. 12, mean-normalized as in
+/// model.com_loss). When `drho` is given, *adds* `scale * d/drho`.
+pub fn com_loss(rho: &[f32], beta: f32, scale: f32, drho: Option<&mut [f32]>) -> f32 {
+    let n = rho.len();
+    let inv_n = 1.0 / n as f32;
+    let mut total = 0.0f64;
+    for &r in rho {
+        let u = (2.0 * r - 1.0).abs();
+        total += (1.0 - u.powf(beta)) as f64;
+    }
+    if let Some(d) = drho {
+        assert_eq!(d.len(), n);
+        for (o, &r) in d.iter_mut().zip(rho) {
+            let u = 2.0 * r - 1.0;
+            let au = u.abs();
+            if au > 0.0 {
+                *o += scale * (-2.0 * beta * au.powf(beta - 1.0) * u.signum()) * inv_n;
+            }
+        }
+    }
+    (total * inv_n as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_tensor_matmul() {
+        let a: Vec<f32> = (0..6).map(|v| v as f32 * 0.5 - 1.0).collect();
+        let b: Vec<f32> = (0..12).map(|v| (v as f32).sin()).collect();
+        let got = matmul(&a, 2, 3, &b, 4);
+        let ta = crate::tensor::Tensor::new(vec![2, 3], a.clone());
+        let tb = crate::tensor::Tensor::new(vec![3, 4], b.clone());
+        let want = ta.matmul(&tb);
+        for (x, y) in got.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transposed_matmuls_consistent() {
+        let a: Vec<f32> = (0..8).map(|v| (v as f32 * 0.37).cos()).collect(); // [2,4]
+        let b: Vec<f32> = (0..6).map(|v| (v as f32 * 0.11).sin()).collect(); // [2,3]
+        // a^T @ b = [4,3]
+        let got = matmul_transa(&a, 2, 4, &b, 3);
+        let ta = crate::tensor::Tensor::new(vec![2, 4], a.clone()).transpose2();
+        let tb = crate::tensor::Tensor::new(vec![2, 3], b.clone());
+        let want = ta.matmul(&tb);
+        for (x, y) in got.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+        // a [2,4] @ (b' [3,4])^T = [2,3]
+        let b2: Vec<f32> = (0..12).map(|v| (v as f32 * 0.21).cos()).collect();
+        let got2 = matmul_transb(&a, 2, 4, &b2, 3);
+        let tb2 = crate::tensor::Tensor::new(vec![3, 4], b2).transpose2();
+        let want2 = crate::tensor::Tensor::new(vec![2, 4], a).matmul(&tb2);
+        for (x, y) in got2.iter().zip(&want2.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_matches_reference() {
+        let x = vec![1.0f32, -2.0, 3.0, 0.5, 0.0, -1.5];
+        let g = vec![1.0f32, 0.5, 2.0];
+        let y = rmsnorm(&x, 3, &g);
+        for i in 0..2 {
+            let row = &x[i * 3..(i + 1) * 3];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / 3.0 + RMS_EPS;
+            let r = 1.0 / ms.sqrt();
+            for j in 0..3 {
+                assert!((y[i * 3 + j] - row[j] * r * g[j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_bwd_finite_difference() {
+        // rmsnorm is smooth: FD must match the analytic backward closely
+        let x = vec![0.3f32, -0.7, 1.1, 0.2, -0.1, 0.9, 0.4, -0.5];
+        let d = 4;
+        let g = vec![1.0f32, 0.8, 1.2, 0.9];
+        let gy = vec![0.5f32, -0.2, 0.1, 0.7, -0.3, 0.4, 0.2, -0.6];
+        let dx = rmsnorm_bwd(&x, d, &g, &gy, None);
+        let loss = |xs: &[f32]| -> f32 {
+            rmsnorm(xs, d, &g).iter().zip(&gy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[i]).abs() < 2e-3,
+                "rmsnorm dx[{i}]: fd {fd} vs analytic {}",
+                dx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn blend_act_disabled_is_identity() {
+        let x = vec![0.1f32, -0.2, 0.3];
+        assert_eq!(blend_act(&x, 3, 1.0, 7.0, 0.0), x);
+        let (dx, da) = blend_act_bwd(&x, 3, 1.0, 7.0, 0.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(dx, vec![1.0, 1.0, 1.0]);
+        assert_eq!(da, 0.0);
+    }
+
+    #[test]
+    fn blend_act_matches_host_quant() {
+        let x = vec![0.11f32, -0.52, 0.93, -0.04, 0.7, 0.2, -0.9, 0.45];
+        let t = crate::tensor::Tensor::new(vec![2, 4], x.clone());
+        let want = crate::quant::fake_quant_act(&t, 0.9, 7.0);
+        let got = blend_act(&x, 4, 0.9, 7.0, 1.0);
+        for (a, b) in got.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn blend_weight_nearest_matches_rtn() {
+        let w: Vec<f32> = (0..12).map(|v| ((v * 7 % 5) as f32 - 2.0) * 0.13).collect();
+        let tw = crate::tensor::Tensor::new(vec![4, 3], w.clone());
+        let s = crate::quant::init_scales(&tw, 7.0);
+        let want = crate::quant::fake_quant_rtn(&tw, &s, 7.0);
+        let got = blend_weight(&w, 4, 3, &s.data, None, 7.0, 1.0);
+        for (a, b) in got.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn attention_is_causal_and_deterministic() {
+        let (b, s, h, hd) = (2usize, 5usize, 2usize, 4usize);
+        let d = h * hd;
+        let n = b * s * d;
+        let mk = |seed: u32| -> Vec<f32> {
+            (0..n).map(|i| ((i as f32 + seed as f32) * 0.7).sin() * 0.3).collect()
+        };
+        let attn = Attention::new(b, s, h, hd);
+        let (q, k, v) = (mk(1), mk(2), mk(3));
+        let (o1, _) = attn.forward(&q, &k, &v, false);
+        let (o2, _) = attn.forward(&q, &k, &v, true);
+        assert_eq!(o1, o2, "attention must be deterministic");
+        // causality: position 0 output depends only on position 0 inputs
+        let mut v2 = v.clone();
+        for bb in 0..b {
+            // mutate the last position's values only
+            let base = (bb * s + (s - 1)) * d;
+            for e in 0..d {
+                v2[base + e] += 1.0;
+            }
+        }
+        let (o3, _) = attn.forward(&q, &k, &v2, false);
+        for bb in 0..b {
+            for ss in 0..s - 1 {
+                let base = (bb * s + ss) * d;
+                for e in 0..d {
+                    assert_eq!(o1[base + e], o3[base + e], "future leaked into position {ss}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_backward_finite_difference() {
+        // attention is smooth: directional FD must match <dout, dq/dk/dv>
+        let (b, s, h, hd) = (1usize, 4usize, 1usize, 4usize);
+        let d = h * hd;
+        let n = b * s * d;
+        let mk = |seed: u32| -> Vec<f32> {
+            (0..n).map(|i| ((i as f32 * 1.3 + seed as f32) * 0.9).sin() * 0.5).collect()
+        };
+        let attn = Attention::new(b, s, h, hd);
+        let (q, k, v) = (mk(1), mk(2), mk(3));
+        let dout = mk(4);
+        let (_, caches) = attn.forward(&q, &k, &v, true);
+        let (dq, dk, dv) = attn.backward(&caches, &dout);
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            let (o, _) = attn.forward(q, k, v, false);
+            o.iter().zip(&dout).map(|(a, b)| (a * b) as f64).sum()
+        };
+        let eps = 1e-3f32;
+        let dir = mk(9);
+        for (buf, grad, which) in [(&q, &dq, "q"), (&k, &dk, "k"), (&v, &dv, "v")] {
+            let plus: Vec<f32> = buf.iter().zip(&dir).map(|(&a, &b)| a + eps * b).collect();
+            let minus: Vec<f32> = buf.iter().zip(&dir).map(|(&a, &b)| a - eps * b).collect();
+            let (lp, lm) = match which {
+                "q" => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                "k" => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+            };
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let analytic: f64 = grad.iter().zip(&dir).map(|(&a, &b)| (a * b) as f64).sum();
+            assert!(
+                (fd - analytic).abs() < 1e-2 * (1.0 + analytic.abs()),
+                "d{which}: fd {fd} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn recon_loss_bwd_finite_difference() {
+        let d = 4;
+        let h: Vec<f32> = (0..8).map(|i| (i as f32 * 0.61).sin()).collect();
+        let t: Vec<f32> = (0..8).map(|i| (i as f32 * 0.43).cos()).collect();
+        let (l0, _, _) = recon_loss(&h, &t, d, 1.0, 1.0);
+        assert!(l0.is_finite());
+        let dh = recon_loss_bwd(&h, &t, d, 1.0, 1.0);
+        let eps = 1e-3;
+        for i in 0..h.len() {
+            let mut hp = h.clone();
+            hp[i] += eps;
+            let mut hm = h.clone();
+            hm[i] -= eps;
+            let (lp, _, _) = recon_loss(&hp, &t, d, 1.0, 1.0);
+            let (lm, _, _) = recon_loss(&hm, &t, d, 1.0, 1.0);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dh[i]).abs() < 2e-3, "dh[{i}]: fd {fd} vs {}", dh[i]);
+        }
+    }
+
+    #[test]
+    fn com_loss_value_and_grad() {
+        let rho = vec![0.5f32, 0.9, 0.1, 0.7];
+        let mut drho = vec![0.0f32; 4];
+        let c = com_loss(&rho, 2.0, 1.0, Some(&mut drho));
+        // mean(1 - (2r-1)^2) = 1 - mean([0, .64, .64, .16]) = 1 - 0.36
+        assert!((c - 0.64).abs() < 1e-6, "{c}");
+        // d/drho at 0.5 is 0; at 0.9 it is -2*2*0.8/4 = -0.8
+        assert_eq!(drho[0], 0.0);
+        assert!((drho[1] + 0.8).abs() < 1e-6, "{}", drho[1]);
+        assert!((drho[2] - 0.8).abs() < 1e-6, "{}", drho[2]);
+    }
+
+    #[test]
+    fn log_softmax_rows_normalized() {
+        let x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let ls = log_softmax_rows(&x, 3);
+        for row in ls.chunks(3) {
+            let sum: f32 = row.iter().map(|v| v.exp()).sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Execution backends: the seam between the coordinator and whatever
+//! actually runs the manifest's executables.
+//!
+//! Everything above this module (coordinator, eval, serve, hessian) talks
+//! to a [`Backend`] trait object: name-bound inputs in, name-bound f32
+//! tensors out, with optional pinning of static inputs. Two
+//! implementations exist:
+//!
+//! * [`PjrtBackend`] (`backend/pjrt.rs`) — compiles and executes the AOT
+//!   HLO artifacts on a PJRT client (the original `Runtime`, semantics
+//!   unchanged). Requires a real `xla` binding; the vendored stub errors at
+//!   client construction.
+//! * [`NativeBackend`] (`backend/native.rs`) — interprets the manifest's
+//!   executable *semantics* directly on the host CPU (`backend/kernels.rs`),
+//!   including the analytic STE gradients of the `win_grad_*` graphs, so
+//!   the full CBQ pipeline runs on any machine with no artifacts compiled.
+//!
+//! Selection: [`BackendKind::select`] honours an explicit request
+//! (`--backend` / `CBQ_BACKEND`), else auto-detects — PJRT when a real
+//! client comes up, the native interpreter otherwise.
+
+pub mod kernels;
+pub mod native;
+pub mod pjrt;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{ExecSpec, Manifest, TensorSpec};
+use super::{Artifacts, Value};
+use crate::tensor::Tensor;
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+/// Runtime statistics (coordinator overhead accounting for §Perf).
+#[derive(Default, Debug, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compile_ms: f64,
+    pub execute_ms: f64,
+    pub upload_bytes: u64,
+}
+
+/// Pinned static inputs for one executable. The payload is backend-
+/// specific: device buffers for PJRT, retained host tensors for native.
+pub struct Pinned {
+    pub exec_name: String,
+    pub(crate) inner: PinnedInner,
+}
+
+pub(crate) enum PinnedInner {
+    Pjrt(pjrt::PjrtPinned),
+    Native(BTreeMap<String, Value>),
+}
+
+/// An execution backend over the manifest's executables.
+pub trait Backend {
+    /// Short backend identifier ("pjrt" / "native").
+    fn name(&self) -> &'static str;
+
+    /// The manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Input/output contract of an executable.
+    fn spec(&self, name: &str) -> Result<&ExecSpec> {
+        self.manifest()
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown executable {name}"))
+    }
+
+    /// Eagerly prepare an executable (compile for PJRT, no-op for native).
+    fn warmup(&self, name: &str) -> Result<()>;
+
+    /// Pin a set of inputs (by name) for repeated execution.
+    fn pin(&self, exec_name: &str, values: &BTreeMap<String, Value>) -> Result<Pinned>;
+
+    /// Execute with every input bound by name from `values`.
+    fn run(
+        &self,
+        exec_name: &str,
+        values: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Tensor>>;
+
+    /// Execute with `pinned` supplying the static inputs and `values` the
+    /// dynamic remainder.
+    fn run_pinned(
+        &self,
+        pinned: &Pinned,
+        values: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Tensor>>;
+
+    fn stats(&self) -> RuntimeStats;
+}
+
+/// Which backend to construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT if a real client initializes, else native.
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "auto" => Self::Auto,
+            "native" => Self::Native,
+            "pjrt" => Self::Pjrt,
+            other => bail!("unknown backend `{other}` (expected native|pjrt|auto)"),
+        })
+    }
+
+    /// Resolve a selection: explicit argument wins, then `CBQ_BACKEND`,
+    /// then auto.
+    pub fn select(explicit: Option<&str>) -> Result<Self> {
+        if let Some(s) = explicit {
+            return Self::parse(s);
+        }
+        if let Ok(env) = std::env::var("CBQ_BACKEND") {
+            if !env.is_empty() {
+                return Self::parse(&env);
+            }
+        }
+        Ok(Self::Auto)
+    }
+}
+
+/// Do the artifacts carry compiled HLO text the PJRT backend could load?
+/// Synthetic artifacts (`cbq synth`) list placeholder file names and write
+/// no HLO, and an interrupted `make artifacts` leaves holes — auto must
+/// only commit to PJRT when *every* listed executable is actually present.
+fn hlo_present(artifacts: &Artifacts) -> bool {
+    !artifacts.manifest.executables.is_empty()
+        && artifacts
+            .manifest
+            .executables
+            .values()
+            .all(|e| artifacts.dir.join(&e.file).exists())
+}
+
+/// Construct a backend over `artifacts`.
+pub fn create(artifacts: &Artifacts, kind: BackendKind) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::new(artifacts)?)),
+        BackendKind::Native => Ok(Box::new(NativeBackend::new(artifacts)?)),
+        BackendKind::Auto => {
+            if hlo_present(artifacts) {
+                if let Ok(b) = PjrtBackend::new(artifacts) {
+                    return Ok(Box::new(b));
+                }
+            }
+            Ok(Box::new(NativeBackend::new(artifacts)?))
+        }
+    }
+}
+
+/// `create` with `--backend`/`CBQ_BACKEND`/auto resolution in one call.
+pub fn create_selected(artifacts: &Artifacts, explicit: Option<&str>) -> Result<Box<dyn Backend>> {
+    create(artifacts, BackendKind::select(explicit)?)
+}
+
+/// Shared input validation: shape and dtype against the manifest spec.
+pub(crate) fn check_shape(spec: &TensorSpec, v: &Value) -> Result<()> {
+    let want: &[usize] = &spec.shape;
+    let got = v.dims();
+    anyhow::ensure!(got == want, "shape mismatch: got {:?}, manifest wants {:?}", got, want);
+    let is_i32 = matches!(v, Value::I32(_));
+    let want_i32 = spec.dtype == "int32";
+    anyhow::ensure!(
+        is_i32 == want_i32,
+        "dtype mismatch: got {}, manifest wants {}",
+        if is_i32 { "int32" } else { "float32" },
+        spec.dtype
+    );
+    Ok(())
+}
+
+/// The executable families the manifest names (aot.py's export set).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ExecKind {
+    /// `win_fwd_w{K}_{cfg}`: quantized window forward + reconstruction loss.
+    WinFwd { w: usize },
+    /// `win_grad_w{K}_{cfg}` / `win_grad_dense_w{K}_{cfg}`: value-and-grad
+    /// wrt the learnable quant params.
+    WinGrad { w: usize, dense: bool },
+    /// `capture_{cfg}`: single-block forward + per-linear input capture.
+    Capture,
+    /// `lm_eval_{cfg}`: final-norm + LM-head masked NLL.
+    LmEval,
+}
+
+impl ExecKind {
+    /// Parse an executable name into `(kind, config name)`.
+    pub fn parse(name: &str) -> Option<(ExecKind, &str)> {
+        fn split_w(rest: &str) -> Option<(usize, &str)> {
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            let w: usize = digits.parse().ok()?;
+            let tail = &rest[digits.len()..];
+            let cfg = tail.strip_prefix('_')?;
+            if cfg.is_empty() {
+                return None;
+            }
+            Some((w, cfg))
+        }
+        if let Some(rest) = name.strip_prefix("win_fwd_w") {
+            let (w, cfg) = split_w(rest)?;
+            return Some((ExecKind::WinFwd { w }, cfg));
+        }
+        if let Some(rest) = name.strip_prefix("win_grad_dense_w") {
+            let (w, cfg) = split_w(rest)?;
+            return Some((ExecKind::WinGrad { w, dense: true }, cfg));
+        }
+        if let Some(rest) = name.strip_prefix("win_grad_w") {
+            let (w, cfg) = split_w(rest)?;
+            return Some((ExecKind::WinGrad { w, dense: false }, cfg));
+        }
+        if let Some(cfg) = name.strip_prefix("capture_") {
+            if !cfg.is_empty() {
+                return Some((ExecKind::Capture, cfg));
+            }
+        }
+        if let Some(cfg) = name.strip_prefix("lm_eval_") {
+            if !cfg.is_empty() {
+                return Some((ExecKind::LmEval, cfg));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_name_parsing() {
+        assert_eq!(ExecKind::parse("win_fwd_w2_t"), Some((ExecKind::WinFwd { w: 2 }, "t")));
+        assert_eq!(
+            ExecKind::parse("win_grad_w12_tiny"),
+            Some((ExecKind::WinGrad { w: 12, dense: false }, "tiny"))
+        );
+        assert_eq!(
+            ExecKind::parse("win_grad_dense_w2_s"),
+            Some((ExecKind::WinGrad { w: 2, dense: true }, "s"))
+        );
+        assert_eq!(ExecKind::parse("capture_m"), Some((ExecKind::Capture, "m")));
+        assert_eq!(ExecKind::parse("lm_eval_t"), Some((ExecKind::LmEval, "t")));
+        assert_eq!(ExecKind::parse("lm_eval_"), None);
+        assert_eq!(ExecKind::parse("win_fwd_w_t"), None);
+        assert_eq!(ExecKind::parse("unrelated"), None);
+    }
+
+    #[test]
+    fn backend_kind_parse_and_select() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(BackendKind::select(Some("native")).unwrap(), BackendKind::Native);
+    }
+}

@@ -1,0 +1,753 @@
+//! Native CPU execution backend: interprets the manifest's executable
+//! *semantics* directly on the host, so the whole CBQ pipeline (quantize,
+//! eval, export, serve, hessian probes) runs without compiled HLO
+//! artifacts or a PJRT plugin.
+//!
+//! The executable families are dispatched by name (the same names aot.py
+//! exports — `win_fwd_w{K}_{cfg}`, `win_grad_w{K}_{cfg}`,
+//! `win_grad_dense_w{K}_{cfg}`, `capture_{cfg}`, `lm_eval_{cfg}`), with the
+//! manifest's `ModelCfg` supplying shapes and the bindings supplying every
+//! tensor — the backend itself is stateless between calls, exactly like
+//! the PJRT path, so `pin` simply retains host tensors. Gradients
+//! implement the STE/LSQ rules documented in python/compile/ste.py (see
+//! `backend/kernels.rs`).
+//!
+//! Parallelism: matmuls split across batch rows, attention across
+//! (batch, head) pairs — a scoped `std::thread` pool, bit-deterministic.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::kernels::{self, Attention, HeadCache};
+use super::{check_shape, Backend, ExecKind, Pinned, PinnedInner, RuntimeStats};
+use crate::quant::LINEARS;
+use crate::runtime::manifest::{Manifest, ModelCfg};
+use crate::runtime::{Artifacts, Value};
+use crate::tensor::Tensor;
+
+/// Which intermediate feeds each linear's capture (model.CAPTURE_SOURCES).
+fn capture_source(linear: &str) -> &'static str {
+    match linear {
+        "wq" | "wk" | "wv" => "attn_in",
+        "wo" => "attn_mix",
+        "wgate" | "wup" => "mlp_in",
+        "wdown" => "mlp_act",
+        other => panic!("unknown linear {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// name-bound input views
+// ---------------------------------------------------------------------------
+
+struct In<'a> {
+    map: &'a BTreeMap<&'a str, &'a Value>,
+    exec: &'a str,
+}
+
+impl<'a> In<'a> {
+    fn value(&self, name: &str) -> Result<&'a Value> {
+        self.map
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("missing input `{name}` for executable {}", self.exec))
+    }
+
+    fn f32(&self, name: &str) -> Result<&'a Tensor> {
+        match self.value(name)? {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => Err(anyhow!("input `{name}` of {}: expected f32", self.exec)),
+        }
+    }
+
+    fn i32(&self, name: &str) -> Result<&'a crate::tensor::TensorI32> {
+        match self.value(name)? {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => Err(anyhow!("input `{name}` of {}: expected i32", self.exec)),
+        }
+    }
+
+    fn scalar(&self, name: &str) -> Result<f32> {
+        let t = self.f32(name)?;
+        ensure!(!t.data.is_empty(), "input `{name}` of {}: empty scalar", self.exec);
+        Ok(t.data[0])
+    }
+}
+
+struct Glob {
+    use_lora: f32,
+    beta: f32,
+    gamma_c: f32,
+    l2_w: f32,
+    kld_w: f32,
+}
+
+impl Glob {
+    fn parse(inp: &In) -> Result<Self> {
+        Ok(Self {
+            use_lora: inp.scalar("globals.use_lora")?,
+            beta: inp.scalar("globals.beta")?,
+            gamma_c: inp.scalar("globals.gamma_c")?,
+            l2_w: inp.scalar("globals.l2_w")?,
+            kld_w: inp.scalar("globals.kld_w")?,
+        })
+    }
+}
+
+struct BlockRef<'a> {
+    attn_norm: &'a Tensor,
+    mlp_norm: &'a Tensor,
+    linears: BTreeMap<&'static str, &'a Tensor>,
+}
+
+impl<'a> BlockRef<'a> {
+    fn parse(inp: &In<'a>, j: usize) -> Result<Self> {
+        let mut linears = BTreeMap::new();
+        for l in LINEARS {
+            linears.insert(l, inp.f32(&format!("blocks.{j}.{l}"))?);
+        }
+        Ok(Self {
+            attn_norm: inp.f32(&format!("blocks.{j}.attn_norm"))?,
+            mlp_norm: inp.f32(&format!("blocks.{j}.mlp_norm"))?,
+            linears,
+        })
+    }
+
+    fn lin(&self, l: &str) -> &'a Tensor {
+        self.linears[l]
+    }
+}
+
+/// Quantization parameters of one linear, as bound by
+/// `Pipeline::bind_qblock` (dense mode carries `v` instead of `a1`/`a2`).
+struct QLinRef<'a> {
+    s_w: &'a Tensor,
+    alpha: f32,
+    a1: Option<&'a Tensor>,
+    a2: Option<&'a Tensor>,
+    v_dense: Option<&'a Tensor>,
+    v0: &'a Tensor,
+    qmax_w: f32,
+    qmax_a: f32,
+    w_en: f32,
+    a_en: f32,
+}
+
+struct QBlockRef<'a> {
+    lin: BTreeMap<&'static str, QLinRef<'a>>,
+}
+
+impl<'a> QBlockRef<'a> {
+    fn parse(inp: &In<'a>, j: usize, dense: bool) -> Result<Self> {
+        let mut lin = BTreeMap::new();
+        for l in LINEARS {
+            let p = format!("qblocks.{j}.{l}");
+            let (a1, a2, v_dense) = if dense {
+                (None, None, Some(inp.f32(&format!("{p}.v"))?))
+            } else {
+                (
+                    Some(inp.f32(&format!("{p}.a1"))?),
+                    Some(inp.f32(&format!("{p}.a2"))?),
+                    None,
+                )
+            };
+            lin.insert(
+                l,
+                QLinRef {
+                    s_w: inp.f32(&format!("{p}.s_w"))?,
+                    alpha: inp.scalar(&format!("{p}.alpha"))?,
+                    a1,
+                    a2,
+                    v_dense,
+                    v0: inp.f32(&format!("{p}.v0"))?,
+                    qmax_w: inp.scalar(&format!("{p}.qmax_w"))?,
+                    qmax_a: inp.scalar(&format!("{p}.qmax_a"))?,
+                    w_en: inp.scalar(&format!("{p}.w_en"))?,
+                    a_en: inp.scalar(&format!("{p}.a_en"))?,
+                },
+            );
+        }
+        Ok(Self { lin })
+    }
+
+    fn get(&self, l: &str) -> &QLinRef<'a> {
+        &self.lin[l]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fake-quantized linear: forward (+ cache) and backward
+// ---------------------------------------------------------------------------
+
+struct QlCache {
+    /// raw input `[rows, k]`
+    x: Vec<f32>,
+    /// activation-fake-quantized input
+    x_eff: Vec<f32>,
+    /// weight-fake-quantized matrix `[k, n]`
+    w_hat: Vec<f32>,
+    /// the rho actually used in the forward blend (None when w_en == 0)
+    rho_blend: Option<Vec<f32>>,
+    /// soft-rho pre-sigmoid (v0 + delta) and soft rho, for the LoRA/dense
+    /// gradient path and the commitment regularizer
+    v_pre: Option<Vec<f32>>,
+    rho_soft: Option<Vec<f32>>,
+}
+
+/// `y = blend_act(x) @ blend_weight(w)` with the rounding offset
+/// `rho = use_lora * h(v0 + delta) + (1 - use_lora) * nearest`.
+fn qlinear_fwd(
+    x: &[f32],
+    rows: usize,
+    w: &Tensor,
+    q: &QLinRef,
+    use_lora: f32,
+    grad: bool,
+) -> (Vec<f32>, Option<QlCache>) {
+    let (k, n) = (w.rows(), w.cols());
+    debug_assert_eq!(x.len(), rows * k);
+    let need_soft = grad || (use_lora > 0.0 && q.w_en != 0.0);
+    let (v_pre, rho_soft) = if need_soft {
+        let delta = match (q.a1, q.a2, q.v_dense) {
+            (Some(a1), Some(a2), _) => kernels::matmul(&a1.data, k, a1.cols(), &a2.data, n),
+            (_, _, Some(v)) => v.data.clone(),
+            _ => unreachable!("qblock carries either a1/a2 or v"),
+        };
+        let (vp, rs) = kernels::rho_soft(&q.v0.data, &delta);
+        (Some(vp), Some(rs))
+    } else {
+        (None, None)
+    };
+    let rho_blend: Option<Vec<f32>> = if q.w_en != 0.0 {
+        if use_lora >= 1.0 {
+            rho_soft.clone()
+        } else {
+            let hard = kernels::rho_hard(&w.data, n, &q.s_w.data);
+            if use_lora <= 0.0 {
+                Some(hard)
+            } else {
+                let rs = rho_soft.as_ref().expect("soft rho computed when use_lora > 0");
+                Some(
+                    rs.iter()
+                        .zip(&hard)
+                        .map(|(&s, &h)| use_lora * s + (1.0 - use_lora) * h)
+                        .collect(),
+                )
+            }
+        }
+    } else {
+        None
+    };
+    let w_hat =
+        kernels::blend_weight(&w.data, k, n, &q.s_w.data, rho_blend.as_deref(), q.qmax_w, q.w_en);
+    let x_eff = kernels::blend_act(x, k, q.alpha, q.qmax_a, q.a_en);
+    let y = kernels::matmul(&x_eff, rows, k, &w_hat, n);
+    let cache = if grad {
+        Some(QlCache { x: x.to_vec(), x_eff, w_hat, rho_blend, v_pre, rho_soft })
+    } else {
+        None
+    };
+    (y, cache)
+}
+
+/// Gradients of one quantized linear wrt its learnables.
+struct LinGrads {
+    ds_w: Tensor,
+    dalpha: f32,
+    da1: Option<Tensor>,
+    da2: Option<Tensor>,
+    dv: Option<Tensor>,
+}
+
+/// Backward through `qlinear_fwd` given `g = dL/dy`. Adds this linear's
+/// commitment-loss value to `com_total` and folds `gamma_c * dcom/drho`
+/// into the LoRA/dense gradient path. Returns `dL/dx`.
+#[allow(clippy::too_many_arguments)]
+fn qlinear_bwd(
+    g: &[f32],
+    rows: usize,
+    w: &Tensor,
+    q: &QLinRef,
+    cache: &QlCache,
+    use_lora: f32,
+    beta: f32,
+    gamma_c: f32,
+    com_total: &mut f32,
+) -> (Vec<f32>, LinGrads) {
+    let (k, n) = (w.rows(), w.cols());
+    debug_assert_eq!(g.len(), rows * n);
+    // matmul backward
+    let dxe = kernels::matmul_transb(g, rows, n, &cache.w_hat, k);
+    let dw_hat = kernels::matmul_transa(&cache.x_eff, rows, k, g, n);
+    // activation side: STE + LSQ-into-alpha
+    let (dx, dalpha) = kernels::blend_act_bwd(&cache.x, k, q.alpha, q.qmax_a, q.a_en, &dxe);
+    // weight side: LSQ for s_w, drho for the rounding offset
+    let wg = kernels::blend_weight_bwd(
+        &w.data,
+        k,
+        n,
+        &q.s_w.data,
+        cache.rho_blend.as_deref(),
+        q.qmax_w,
+        q.w_en,
+        &dw_hat,
+    );
+    // rho chain: the reconstruction path reaches the soft rho through the
+    // `use_lora` blend (the hard branch is stop-gradient); the commitment
+    // regularizer always reads the soft rho.
+    let rho_soft = cache.rho_soft.as_ref().expect("grad cache holds soft rho");
+    let v_pre = cache.v_pre.as_ref().expect("grad cache holds v_pre");
+    let mut drho_soft: Vec<f32> = wg.drho.iter().map(|&v| v * use_lora).collect();
+    *com_total += kernels::com_loss(rho_soft, beta, gamma_c, Some(&mut drho_soft));
+    let dv: Vec<f32> = drho_soft
+        .iter()
+        .zip(v_pre)
+        .map(|(&dr, &vp)| dr * kernels::rect_sigmoid_d(vp))
+        .collect();
+    let (da1, da2, dv_dense) = match (q.a1, q.a2, q.v_dense) {
+        (Some(a1), Some(a2), _) => {
+            let r = a1.cols();
+            // da1 = dv @ a2^T  [k, r];  da2 = a1^T @ dv  [r, n]
+            let da1 = kernels::matmul_transb(&dv, k, n, &a2.data, r);
+            let da2 = kernels::matmul_transa(&a1.data, k, r, &dv, n);
+            (
+                Some(Tensor::new(vec![k, r], da1)),
+                Some(Tensor::new(vec![r, n], da2)),
+                None,
+            )
+        }
+        (_, _, Some(_)) => (None, None, Some(Tensor::new(vec![k, n], dv))),
+        _ => unreachable!(),
+    };
+    (
+        dx,
+        LinGrads {
+            ds_w: Tensor::new(vec![n], wg.ds_w),
+            dalpha,
+            da1,
+            da2,
+            dv: dv_dense,
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// per-block cache
+// ---------------------------------------------------------------------------
+
+struct BlockCache {
+    h_in: Vec<f32>,
+    h_mid: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    heads: Vec<HeadCache>,
+    ql: BTreeMap<&'static str, QlCache>,
+}
+
+// ---------------------------------------------------------------------------
+// the backend
+// ---------------------------------------------------------------------------
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    stats: RefCell<RuntimeStats>,
+    /// RoPE-table cache keyed by (batch, seq, heads, head_dim).
+    attn: RefCell<HashMap<(usize, usize, usize, usize), Rc<Attention>>>,
+}
+
+impl NativeBackend {
+    pub fn new(artifacts: &Artifacts) -> Result<Self> {
+        Ok(Self {
+            manifest: artifacts.manifest.clone(),
+            stats: RefCell::new(RuntimeStats::default()),
+            attn: RefCell::new(HashMap::new()),
+        })
+    }
+
+    fn attention(&self, b: usize, s: usize, h: usize, hd: usize) -> Rc<Attention> {
+        let key = (b, s, h, hd);
+        if let Some(a) = self.attn.borrow().get(&key) {
+            return a.clone();
+        }
+        let a = Rc::new(Attention::new(b, s, h, hd));
+        self.attn.borrow_mut().insert(key, a.clone());
+        a
+    }
+
+    fn execute(
+        &self,
+        exec_name: &str,
+        values: &BTreeMap<&str, &Value>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let spec = self.spec(exec_name)?;
+        for ispec in &spec.inputs {
+            let v = values.get(ispec.name.as_str()).ok_or_else(|| {
+                anyhow!("missing input `{}` for executable {exec_name}", ispec.name)
+            })?;
+            check_shape(ispec, v)
+                .with_context(|| format!("input `{}` of {exec_name}", ispec.name))?;
+        }
+        let (kind, cfg_name) = ExecKind::parse(exec_name).ok_or_else(|| {
+            anyhow!("native backend cannot interpret executable name `{exec_name}`")
+        })?;
+        let cfg = self
+            .manifest
+            .configs
+            .get(cfg_name)
+            .ok_or_else(|| anyhow!("executable {exec_name}: unknown config `{cfg_name}`"))?;
+        let inp = In { map: values, exec: exec_name };
+        let t0 = std::time::Instant::now();
+        let out = match kind {
+            ExecKind::WinFwd { w } => self.win_fwd(&inp, cfg, w),
+            ExecKind::WinGrad { w, dense } => self.win_grad(&inp, cfg, w, dense),
+            ExecKind::Capture => self.capture(&inp, cfg),
+            ExecKind::LmEval => self.lm_eval(&inp, cfg),
+        }?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(out)
+    }
+
+    // -- executables ----------------------------------------------------
+
+    fn win_fwd(&self, inp: &In, cfg: &ModelCfg, w: usize) -> Result<BTreeMap<String, Tensor>> {
+        let glob = Glob::parse(inp)?;
+        let h_in = inp.f32("h_in")?;
+        let target = inp.f32("target")?;
+        let rows = cfg.batch * cfg.seq;
+        let mut h = h_in.data.clone();
+        for j in 0..w {
+            let blk = BlockRef::parse(inp, j)?;
+            let qb = QBlockRef::parse(inp, j, false)?;
+            let (h_out, _) = self.block_fwd(&h, rows, cfg, &blk, &qb, &glob, false, None)?;
+            h = h_out;
+        }
+        let (loss, mse, kld) =
+            kernels::recon_loss(&h, &target.data, cfg.d_model, glob.l2_w, glob.kld_w);
+        let mut out = BTreeMap::new();
+        out.insert("h_out".into(), Tensor::new(h_in.dims.clone(), h));
+        out.insert("loss".into(), Tensor::scalar(loss));
+        out.insert("mse".into(), Tensor::scalar(mse));
+        out.insert("kld".into(), Tensor::scalar(kld));
+        Ok(out)
+    }
+
+    fn win_grad(
+        &self,
+        inp: &In,
+        cfg: &ModelCfg,
+        w: usize,
+        dense: bool,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let glob = Glob::parse(inp)?;
+        let h_in = inp.f32("h_in")?;
+        let target = inp.f32("target")?;
+        let rows = cfg.batch * cfg.seq;
+        let d = cfg.d_model;
+
+        // forward with caches
+        let mut blocks = Vec::with_capacity(w);
+        let mut qblocks = Vec::with_capacity(w);
+        let mut caches = Vec::with_capacity(w);
+        let mut h = h_in.data.clone();
+        for j in 0..w {
+            let blk = BlockRef::parse(inp, j)?;
+            let qb = QBlockRef::parse(inp, j, dense)?;
+            let (h_out, cache) = self.block_fwd(&h, rows, cfg, &blk, &qb, &glob, true, None)?;
+            h = h_out;
+            blocks.push(blk);
+            qblocks.push(qb);
+            caches.push(cache.expect("grad forward must cache"));
+        }
+        let (rec, mse, kld) = kernels::recon_loss(&h, &target.data, d, glob.l2_w, glob.kld_w);
+
+        // backward
+        let mut dh = kernels::recon_loss_bwd(&h, &target.data, d, glob.l2_w, glob.kld_w);
+        let mut com_total = 0.0f32;
+        let mut out = BTreeMap::new();
+        for j in (0..w).rev() {
+            let (dh_in, grads) = self.block_bwd(
+                rows,
+                cfg,
+                &blocks[j],
+                &qblocks[j],
+                &caches[j],
+                &glob,
+                &dh,
+                &mut com_total,
+            );
+            dh = dh_in;
+            for (l, gr) in grads {
+                let p = format!("grads.{j}.{l}");
+                out.insert(format!("{p}.s_w"), gr.ds_w);
+                out.insert(format!("{p}.alpha"), Tensor::scalar(gr.dalpha));
+                if let Some(a1) = gr.da1 {
+                    out.insert(format!("{p}.a1"), a1);
+                }
+                if let Some(a2) = gr.da2 {
+                    out.insert(format!("{p}.a2"), a2);
+                }
+                if let Some(v) = gr.dv {
+                    out.insert(format!("{p}.v"), v);
+                }
+            }
+        }
+        out.insert("loss".into(), Tensor::scalar(rec + glob.gamma_c * com_total));
+        out.insert("mse".into(), Tensor::scalar(mse));
+        out.insert("kld".into(), Tensor::scalar(kld));
+        out.insert("com".into(), Tensor::scalar(com_total));
+        Ok(out)
+    }
+
+    fn capture(&self, inp: &In, cfg: &ModelCfg) -> Result<BTreeMap<String, Tensor>> {
+        let glob = Glob::parse(inp)?;
+        let h_in = inp.f32("h_in")?;
+        let rows = cfg.batch * cfg.seq;
+        let blk = BlockRef::parse(inp, 0)?;
+        let qb = QBlockRef::parse(inp, 0, false)?;
+        let mut cap: BTreeMap<&'static str, Vec<f32>> = BTreeMap::new();
+        let (h, _) =
+            self.block_fwd(&h_in.data, rows, cfg, &blk, &qb, &glob, false, Some(&mut cap))?;
+        let mut out = BTreeMap::new();
+        out.insert("h_out".into(), Tensor::new(h_in.dims.clone(), h));
+        for l in LINEARS {
+            let (fan_in, _) = cfg.linear_shape(l);
+            let src = capture_source(l);
+            let data = cap
+                .get(src)
+                .ok_or_else(|| anyhow!("capture source `{src}` missing for {l}"))?
+                .clone();
+            out.insert(format!("captures.{l}"), Tensor::new(vec![rows, fan_in], data));
+        }
+        Ok(out)
+    }
+
+    fn lm_eval(&self, inp: &In, cfg: &ModelCfg) -> Result<BTreeMap<String, Tensor>> {
+        let h = inp.f32("h")?;
+        let final_norm = inp.f32("final_norm")?;
+        let head = inp.f32("head")?;
+        let targets = inp.i32("targets")?;
+        let mask = inp.f32("mask")?;
+        let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+        let v = cfg.vocab;
+        let rows = b * s;
+        let hn = kernels::rmsnorm(&h.data, d, &final_norm.data);
+        let logits = kernels::matmul(&hn, rows, d, &head.data, v);
+        let logp = kernels::log_softmax_rows(&logits, v);
+        let mut nll = vec![0.0f32; b];
+        let mut count = vec![0.0f32; b];
+        for bi in 0..b {
+            for si in 0..s {
+                let row = bi * s + si;
+                let m = mask.data[row];
+                let t = targets.data[row];
+                ensure!(
+                    t >= 0 && (t as usize) < v,
+                    "lm_eval target {t} outside vocab {v} (row {row})"
+                );
+                nll[bi] += -logp[row * v + t as usize] * m;
+                count[bi] += m;
+            }
+        }
+        let mut out = BTreeMap::new();
+        out.insert("nll".into(), Tensor::new(vec![b], nll));
+        out.insert("count".into(), Tensor::new(vec![b], count));
+        Ok(out)
+    }
+
+    // -- quantized transformer block ------------------------------------
+
+    #[allow(clippy::too_many_arguments)]
+    fn block_fwd(
+        &self,
+        h_in: &[f32],
+        rows: usize,
+        cfg: &ModelCfg,
+        blk: &BlockRef,
+        qb: &QBlockRef,
+        glob: &Glob,
+        grad: bool,
+        mut capture: Option<&mut BTreeMap<&'static str, Vec<f32>>>,
+    ) -> Result<(Vec<f32>, Option<BlockCache>)> {
+        let d = cfg.d_model;
+        ensure!(h_in.len() == rows * d, "block input len {} != rows*d", h_in.len());
+        let ul = glob.use_lora;
+        let a = kernels::rmsnorm(h_in, d, &blk.attn_norm.data);
+        if let Some(c) = capture.as_deref_mut() {
+            c.insert("attn_in", a.clone());
+        }
+        let (q_y, c_wq) = qlinear_fwd(&a, rows, blk.lin("wq"), qb.get("wq"), ul, grad);
+        let (k_y, c_wk) = qlinear_fwd(&a, rows, blk.lin("wk"), qb.get("wk"), ul, grad);
+        let (v_y, c_wv) = qlinear_fwd(&a, rows, blk.lin("wv"), qb.get("wv"), ul, grad);
+        let attn = self.attention(cfg.batch, cfg.seq, cfg.n_heads, cfg.head_dim);
+        let (mix, heads) = attn.forward(&q_y, &k_y, &v_y, grad);
+        if let Some(c) = capture.as_deref_mut() {
+            c.insert("attn_mix", mix.clone());
+        }
+        let (wo_y, c_wo) = qlinear_fwd(&mix, rows, blk.lin("wo"), qb.get("wo"), ul, grad);
+        let h_mid: Vec<f32> = h_in.iter().zip(&wo_y).map(|(&x, &y)| x + y).collect();
+        let m = kernels::rmsnorm(&h_mid, d, &blk.mlp_norm.data);
+        if let Some(c) = capture.as_deref_mut() {
+            c.insert("mlp_in", m.clone());
+        }
+        let (gate, c_wgate) = qlinear_fwd(&m, rows, blk.lin("wgate"), qb.get("wgate"), ul, grad);
+        let (up, c_wup) = qlinear_fwd(&m, rows, blk.lin("wup"), qb.get("wup"), ul, grad);
+        let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| kernels::silu(g) * u).collect();
+        if let Some(c) = capture.as_deref_mut() {
+            c.insert("mlp_act", act.clone());
+        }
+        let (down_y, c_wdown) = qlinear_fwd(&act, rows, blk.lin("wdown"), qb.get("wdown"), ul, grad);
+        let h_out: Vec<f32> = h_mid.iter().zip(&down_y).map(|(&x, &y)| x + y).collect();
+        let cache = if grad {
+            let mut ql = BTreeMap::new();
+            for (name, c) in [
+                ("wq", c_wq),
+                ("wk", c_wk),
+                ("wv", c_wv),
+                ("wo", c_wo),
+                ("wgate", c_wgate),
+                ("wup", c_wup),
+                ("wdown", c_wdown),
+            ] {
+                ql.insert(name, c.expect("grad forward caches every linear"));
+            }
+            Some(BlockCache { h_in: h_in.to_vec(), h_mid, gate, up, heads, ql })
+        } else {
+            None
+        };
+        Ok((h_out, cache))
+    }
+
+    /// Backward through one block. Returns `(dh_in, per-linear grads)`.
+    #[allow(clippy::too_many_arguments)]
+    fn block_bwd(
+        &self,
+        rows: usize,
+        cfg: &ModelCfg,
+        blk: &BlockRef,
+        qb: &QBlockRef,
+        cache: &BlockCache,
+        glob: &Glob,
+        dh_out: &[f32],
+        com_total: &mut f32,
+    ) -> (Vec<f32>, Vec<(&'static str, LinGrads)>) {
+        let d = cfg.d_model;
+        let ul = glob.use_lora;
+        let (beta, gc) = (glob.beta, glob.gamma_c);
+        let mut grads: Vec<(&'static str, LinGrads)> = Vec::with_capacity(7);
+        let mut bwd = |name: &'static str, g: &[f32]| -> Vec<f32> {
+            let (dx, lg) = qlinear_bwd(
+                g,
+                rows,
+                blk.lin(name),
+                qb.get(name),
+                &cache.ql[name],
+                ul,
+                beta,
+                gc,
+                com_total,
+            );
+            grads.push((name, lg));
+            dx
+        };
+
+        // h_out = h_mid + wdown(act)
+        let dact = bwd("wdown", dh_out);
+        // act = silu(gate) * up
+        let mut dgate = vec![0.0f32; dact.len()];
+        let mut dup = vec![0.0f32; dact.len()];
+        for i in 0..dact.len() {
+            dgate[i] = dact[i] * cache.up[i] * kernels::silu_d(cache.gate[i]);
+            dup[i] = dact[i] * kernels::silu(cache.gate[i]);
+        }
+        let dm1 = bwd("wgate", &dgate);
+        let dm2 = bwd("wup", &dup);
+        let dm: Vec<f32> = dm1.iter().zip(&dm2).map(|(&a, &b)| a + b).collect();
+        // m = rmsnorm(h_mid, mlp_norm); h_mid also feeds the residual
+        let dmid_norm = kernels::rmsnorm_bwd(&cache.h_mid, d, &blk.mlp_norm.data, &dm, None);
+        let dh_mid: Vec<f32> = dh_out.iter().zip(&dmid_norm).map(|(&a, &b)| a + b).collect();
+        // h_mid = h_in + wo(mix)
+        let dmix = bwd("wo", &dh_mid);
+        let attn = self.attention(cfg.batch, cfg.seq, cfg.n_heads, cfg.head_dim);
+        let (dq3, dk3, dv3) = attn.backward(&cache.heads, &dmix);
+        let da_q = bwd("wq", &dq3);
+        let da_k = bwd("wk", &dk3);
+        let da_v = bwd("wv", &dv3);
+        let da: Vec<f32> = da_q
+            .iter()
+            .zip(&da_k)
+            .zip(&da_v)
+            .map(|((&a, &b), &c)| a + b + c)
+            .collect();
+        // a = rmsnorm(h_in, attn_norm); h_in also feeds the residual
+        let din_norm = kernels::rmsnorm_bwd(&cache.h_in, d, &blk.attn_norm.data, &da, None);
+        let dh_in: Vec<f32> = dh_mid.iter().zip(&din_norm).map(|(&a, &b)| a + b).collect();
+        (dh_in, grads)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn warmup(&self, name: &str) -> Result<()> {
+        self.spec(name).map(|_| ())
+    }
+
+    fn pin(&self, exec_name: &str, values: &BTreeMap<String, Value>) -> Result<Pinned> {
+        let spec = self.spec(exec_name)?;
+        // retain only inputs the executable actually declares, validated now
+        let mut kept = BTreeMap::new();
+        for ispec in &spec.inputs {
+            if let Some(v) = values.get(&ispec.name) {
+                check_shape(ispec, v)
+                    .with_context(|| format!("pinning `{}` of {exec_name}", ispec.name))?;
+                kept.insert(ispec.name.clone(), v.clone());
+            }
+        }
+        Ok(Pinned { exec_name: exec_name.to_string(), inner: PinnedInner::Native(kept) })
+    }
+
+    fn run(
+        &self,
+        exec_name: &str,
+        values: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let merged: BTreeMap<&str, &Value> =
+            values.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        self.execute(exec_name, &merged)
+    }
+
+    fn run_pinned(
+        &self,
+        pinned: &Pinned,
+        values: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let stat = match &pinned.inner {
+            PinnedInner::Native(m) => m,
+            PinnedInner::Pjrt(_) => anyhow::bail!(
+                "pinned handle for executable {} belongs to the pjrt backend",
+                pinned.exec_name
+            ),
+        };
+        let mut merged: BTreeMap<&str, &Value> =
+            stat.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        for (k, v) in values {
+            merged.insert(k.as_str(), v);
+        }
+        self.execute(&pinned.exec_name, &merged)
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT execution backend: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! executes them via the name-bound `Backend` interface driven by the
+//! manifest's flatten_spec contract. Semantics identical to the pre-trait
+//! `Runtime` — this file is the old implementation behind the new seam.
+//!
+//! Hot-path notes (see EXPERIMENTS.md §Perf): executables are compiled
+//! lazily and cached for the process lifetime; static inputs (model
+//! weights) can be pinned as device buffers via [`Backend::pin`] so
+//! steady-state window steps only upload the small learnable tensors.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{check_shape, Backend, Pinned, PinnedInner, RuntimeStats};
+use crate::runtime::manifest::{ExecSpec, Manifest};
+use crate::runtime::{Artifacts, Value};
+use crate::tensor::Tensor;
+
+fn xerr(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+impl Value {
+    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32(t) => {
+                if t.dims.is_empty() {
+                    xla::Literal::scalar(t.data[0])
+                } else {
+                    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data).reshape(&dims).map_err(xerr)?
+                }
+            }
+            Value::I32(t) => {
+                if t.dims.is_empty() {
+                    xla::Literal::scalar(t.data[0])
+                } else {
+                    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&t.data).reshape(&dims).map_err(xerr)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+}
+
+struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ExecSpec,
+}
+
+/// Pinned device buffers for an executable's static inputs (weights): the
+/// steady-state optimization loop re-uploads only learnable tensors.
+///
+/// The source literals are retained: TfrtCpuBuffer's CopyFromLiteral is
+/// asynchronous and reads the literal after `buffer_from_host_literal`
+/// returns — dropping the literal early is a use-after-free.
+pub struct PjrtPinned {
+    /// input index -> device buffer
+    buffers: HashMap<usize, xla::PjRtBuffer>,
+    _literals: Vec<xla::Literal>,
+}
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    execs: RefCell<HashMap<String, Rc<LoadedExec>>>,
+    manifest: Manifest,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts: &Artifacts) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self {
+            client,
+            dir: artifacts.dir.clone(),
+            execs: RefCell::new(HashMap::new()),
+            manifest: artifacts.manifest.clone(),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    fn load(&self, name: &str) -> Result<Rc<LoadedExec>> {
+        if let Some(e) = self.execs.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.spec(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(xerr)
+        .with_context(|| format!("loading HLO {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(xerr)?;
+        self.stats.borrow_mut().compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let e = Rc::new(LoadedExec { exe, spec });
+        self.execs.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    fn run_inner(
+        &self,
+        exec_name: &str,
+        values: &BTreeMap<String, Value>,
+        pinned: Option<&PjrtPinned>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        let exec = self.load(exec_name)?;
+        // Fresh (dynamic) uploads, keyed by input index; pinned buffers are
+        // borrowed directly — PJRT `Execute` with default options does not
+        // donate inputs, so reuse across calls is sound. Source literals are
+        // kept alive until execution completes (async host->device copies).
+        let mut fresh: HashMap<usize, xla::PjRtBuffer> = HashMap::new();
+        let mut fresh_lits: Vec<xla::Literal> = Vec::new();
+        let mut upload = 0u64;
+        for (idx, spec) in exec.spec.inputs.iter().enumerate() {
+            if let Some(p) = pinned {
+                if p.buffers.contains_key(&idx) {
+                    continue;
+                }
+            }
+            let v = values.get(&spec.name).ok_or_else(|| {
+                anyhow!("missing input `{}` for executable {exec_name}", spec.name)
+            })?;
+            check_shape(spec, v)
+                .with_context(|| format!("input `{}` of {exec_name}", spec.name))?;
+            upload += (v.dims().iter().product::<usize>().max(1) * 4) as u64;
+            let lit = v.to_literal()?;
+            fresh.insert(
+                idx,
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(xerr)?,
+            );
+            fresh_lits.push(lit);
+        }
+        let bufs: Vec<&xla::PjRtBuffer> = (0..exec.spec.inputs.len())
+            .map(|idx| {
+                fresh.get(&idx).unwrap_or_else(|| {
+                    pinned
+                        .expect("index neither fresh nor pinned")
+                        .buffers
+                        .get(&idx)
+                        .expect("index neither fresh nor pinned")
+                })
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let result = exec.exe.execute_b(&bufs).map_err(xerr)?;
+        // blocks until execution (and hence input consumption) completes
+        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
+        drop(fresh_lits);
+        let parts = tuple.to_tuple().map_err(xerr)?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+            s.upload_bytes += upload;
+        }
+        anyhow::ensure!(
+            parts.len() == exec.spec.outputs.len(),
+            "executable {exec_name}: {} outputs, manifest says {}",
+            parts.len(),
+            exec.spec.outputs.len()
+        );
+        let mut out = BTreeMap::new();
+        for (spec, lit) in exec.spec.outputs.iter().zip(parts) {
+            let data: Vec<f32> = match spec.dtype.as_str() {
+                "float32" => lit.to_vec::<f32>().map_err(xerr)?,
+                "int32" => lit
+                    .to_vec::<i32>()
+                    .map_err(xerr)?
+                    .into_iter()
+                    .map(|v| v as f32)
+                    .collect(),
+                d => bail!("unsupported output dtype {d}"),
+            };
+            out.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
+        }
+        Ok(out)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn warmup(&self, name: &str) -> Result<()> {
+        self.load(name).map(|_| ())
+    }
+
+    fn pin(&self, exec_name: &str, values: &BTreeMap<String, Value>) -> Result<Pinned> {
+        let exec = self.load(exec_name)?;
+        let mut buffers = HashMap::new();
+        let mut literals = Vec::new();
+        for (idx, spec) in exec.spec.inputs.iter().enumerate() {
+            if let Some(v) = values.get(&spec.name) {
+                check_shape(spec, v)?;
+                let lit = v.to_literal()?;
+                let buf = self
+                    .client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(xerr)?;
+                buffers.insert(idx, buf);
+                literals.push(lit); // keep alive: async host->device copy
+            }
+        }
+        Ok(Pinned {
+            exec_name: exec_name.to_string(),
+            inner: PinnedInner::Pjrt(PjrtPinned { buffers, _literals: literals }),
+        })
+    }
+
+    fn run(
+        &self,
+        exec_name: &str,
+        values: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        self.run_inner(exec_name, values, None)
+    }
+
+    fn run_pinned(
+        &self,
+        pinned: &Pinned,
+        values: &BTreeMap<String, Value>,
+    ) -> Result<BTreeMap<String, Tensor>> {
+        match &pinned.inner {
+            PinnedInner::Pjrt(p) => self.run_inner(&pinned.exec_name, values, Some(p)),
+            PinnedInner::Native(_) => {
+                bail!("pinned handle for executable {} belongs to the native backend", pinned.exec_name)
+            }
+        }
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}

@@ -1,25 +1,33 @@
-//! PJRT execution substrate: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
-//! exposes a name-bound `run` interface driven by the manifest's
-//! flatten_spec contract.
+//! Execution substrate: artifacts + manifest on disk, executable backends
+//! behind the [`Backend`] trait.
 //!
-//! Python is never on this path — the HLO text was lowered at build time;
-//! this module only parses, compiles and executes.
+//! * [`Artifacts`] — the artifacts directory (manifest + optional HLO text
+//!   files + weights + corpus parity vectors). Produced either by
+//!   `python/compile/aot.py` (`make artifacts`, trained reference models)
+//!   or by [`synth`] / `cbq synth` (tiny synthetic models, host-only).
+//! * [`backend`] — the [`Backend`] trait with the PJRT implementation
+//!   (compiles the AOT HLO) and the native CPU implementation (interprets
+//!   the manifest semantics directly, including `win_grad_*` gradients).
+//! * [`synth`] — synthetic artifact generator: manifest + pretrained-on-host
+//!   random-init weights + corpus reference, so every pipeline stage runs
+//!   end-to-end offline.
 //!
-//! Hot-path notes (see EXPERIMENTS.md §Perf): executables are compiled
-//! lazily and cached for the process lifetime; static inputs (model weights)
-//! can be pinned as device buffers via [`Runtime::pin`] so steady-state
-//! window steps only upload the small learnable tensors.
+//! Backend selection: `--backend native|pjrt|auto` / `CBQ_BACKEND`, see
+//! [`backend::create_selected`].
 
+pub mod backend;
 pub mod manifest;
+pub mod synth;
 
-use std::cell::RefCell;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
+pub use backend::{
+    create as create_backend, create_selected, Backend, BackendKind, NativeBackend, Pinned,
+    PjrtBackend, RuntimeStats,
+};
 pub use manifest::{ExecSpec, Manifest, ModelCfg, TensorSpec};
 
 use crate::tensor::{io, Tensor, TensorI32};
@@ -44,41 +52,15 @@ impl From<TensorI32> for Value {
 }
 
 impl Value {
-    fn dims(&self) -> &[usize] {
+    pub fn dims(&self) -> &[usize] {
         match self {
             Value::F32(t) => &t.dims,
             Value::I32(t) => &t.dims,
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            Value::F32(t) => {
-                if t.dims.is_empty() {
-                    xla::Literal::scalar(t.data[0])
-                } else {
-                    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(&t.data).reshape(&dims).map_err(xerr)?
-                }
-            }
-            Value::I32(t) => {
-                if t.dims.is_empty() {
-                    xla::Literal::scalar(t.data[0])
-                } else {
-                    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(&t.data).reshape(&dims).map_err(xerr)?
-                }
-            }
-        };
-        Ok(lit)
-    }
 }
 
-fn xerr(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
-
-/// The artifacts directory: manifest + HLO files + pretrained weights.
+/// The artifacts directory: manifest + executables' files + weights.
 pub struct Artifacts {
     pub dir: PathBuf,
     pub manifest: Manifest,
@@ -102,7 +84,10 @@ impl Artifacts {
                 return Self::load(cand);
             }
         }
-        bail!("no artifacts directory found — run `make artifacts` first")
+        bail!(
+            "no artifacts directory found — run `make artifacts` (trained models) \
+             or `cbq synth` (synthetic offline models) first"
+        )
     }
 
     pub fn cfg(&self, name: &str) -> Result<&ModelCfg> {
@@ -110,6 +95,27 @@ impl Artifacts {
             .configs
             .get(name)
             .ok_or_else(|| anyhow!("unknown model config {name}"))
+    }
+
+    /// The model to operate on when the CLI gives none: the sole config if
+    /// there is exactly one (the `cbq synth` case), else `s`.
+    pub fn default_model(&self) -> &str {
+        if self.manifest.configs.len() == 1 {
+            self.manifest.configs.keys().next().map(|s| s.as_str()).unwrap_or("s")
+        } else {
+            "s"
+        }
+    }
+
+    /// `preferred` when the manifest carries it (e.g. the small trained `t`
+    /// model of `make artifacts` builds), else [`Self::default_model`] —
+    /// the model-pick policy shared by the examples and integration tests.
+    pub fn model_or_default<'a>(&'a self, preferred: &'a str) -> &'a str {
+        if self.manifest.configs.contains_key(preferred) {
+            preferred
+        } else {
+            self.default_model()
+        }
     }
 
     /// Pretrained (outlier-injected) weights for a config.
@@ -139,226 +145,6 @@ impl Artifacts {
         }
         Ok(out)
     }
-}
-
-struct LoadedExec {
-    exe: xla::PjRtLoadedExecutable,
-    spec: ExecSpec,
-}
-
-/// Pinned device buffers for an executable's static inputs (weights): the
-/// steady-state optimization loop re-uploads only learnable tensors.
-///
-/// The source literals are retained: TfrtCpuBuffer's CopyFromLiteral is
-/// asynchronous and reads the literal after `buffer_from_host_literal`
-/// returns — dropping the literal early is a use-after-free.
-pub struct Pinned {
-    exec_name: String,
-    /// input index -> device buffer
-    buffers: HashMap<usize, xla::PjRtBuffer>,
-    _literals: Vec<xla::Literal>,
-}
-
-/// Runtime statistics (coordinator overhead accounting for §Perf).
-#[derive(Default, Debug, Clone)]
-pub struct RuntimeStats {
-    pub executions: u64,
-    pub compile_ms: f64,
-    pub execute_ms: f64,
-    pub upload_bytes: u64,
-}
-
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    execs: RefCell<HashMap<String, Rc<LoadedExec>>>,
-    manifest: Manifest,
-    stats: RefCell<RuntimeStats>,
-}
-
-impl Runtime {
-    pub fn new(artifacts: &Artifacts) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(Self {
-            client,
-            dir: artifacts.dir.clone(),
-            execs: RefCell::new(HashMap::new()),
-            manifest: artifacts.manifest.clone(),
-            stats: RefCell::new(RuntimeStats::default()),
-        })
-    }
-
-    pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
-    }
-
-    pub fn spec(&self, name: &str) -> Result<&ExecSpec> {
-        self.manifest
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown executable {name}"))
-    }
-
-    fn load(&self, name: &str) -> Result<Rc<LoadedExec>> {
-        if let Some(e) = self.execs.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self.spec(name)?.clone();
-        let path = self.dir.join(&spec.file);
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(xerr)
-        .with_context(|| format!("loading HLO {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(xerr)?;
-        self.stats.borrow_mut().compile_ms += t0.elapsed().as_secs_f64() * 1e3;
-        let e = Rc::new(LoadedExec { exe, spec });
-        self.execs.borrow_mut().insert(name.to_string(), e.clone());
-        Ok(e)
-    }
-
-    /// Eagerly compile an executable (startup warm-up).
-    pub fn warmup(&self, name: &str) -> Result<()> {
-        self.load(name).map(|_| ())
-    }
-
-    /// Pin a set of inputs (by name) as device buffers. Returns a handle
-    /// usable with [`Runtime::run_pinned`].
-    pub fn pin(&self, exec_name: &str, values: &BTreeMap<String, Value>) -> Result<Pinned> {
-        let exec = self.load(exec_name)?;
-        let mut buffers = HashMap::new();
-        let mut literals = Vec::new();
-        for (idx, spec) in exec.spec.inputs.iter().enumerate() {
-            if let Some(v) = values.get(&spec.name) {
-                check_shape(spec, v)?;
-                let lit = v.to_literal()?;
-                let buf = self
-                    .client
-                    .buffer_from_host_literal(None, &lit)
-                    .map_err(xerr)?;
-                buffers.insert(idx, buf);
-                literals.push(lit); // keep alive: async host->device copy
-            }
-        }
-        Ok(Pinned { exec_name: exec_name.to_string(), buffers, _literals: literals })
-    }
-
-    /// Execute with every input bound by name from `values`.
-    pub fn run(
-        &self,
-        exec_name: &str,
-        values: &BTreeMap<String, Value>,
-    ) -> Result<BTreeMap<String, Tensor>> {
-        self.run_inner(exec_name, values, None)
-    }
-
-    /// Execute with `pinned` supplying the static inputs and `values` the
-    /// dynamic remainder.
-    pub fn run_pinned(
-        &self,
-        pinned: &Pinned,
-        values: &BTreeMap<String, Value>,
-    ) -> Result<BTreeMap<String, Tensor>> {
-        self.run_inner(&pinned.exec_name, values, Some(pinned))
-    }
-
-    fn run_inner(
-        &self,
-        exec_name: &str,
-        values: &BTreeMap<String, Value>,
-        pinned: Option<&Pinned>,
-    ) -> Result<BTreeMap<String, Tensor>> {
-        let exec = self.load(exec_name)?;
-        // Fresh (dynamic) uploads, keyed by input index; pinned buffers are
-        // borrowed directly — PJRT `Execute` with default options does not
-        // donate inputs, so reuse across calls is sound. Source literals are
-        // kept alive until execution completes (async host->device copies).
-        let mut fresh: HashMap<usize, xla::PjRtBuffer> = HashMap::new();
-        let mut fresh_lits: Vec<xla::Literal> = Vec::new();
-        let mut upload = 0u64;
-        for (idx, spec) in exec.spec.inputs.iter().enumerate() {
-            if let Some(p) = pinned {
-                if p.buffers.contains_key(&idx) {
-                    continue;
-                }
-            }
-            let v = values.get(&spec.name).ok_or_else(|| {
-                anyhow!("missing input `{}` for executable {exec_name}", spec.name)
-            })?;
-            check_shape(spec, v)
-                .with_context(|| format!("input `{}` of {exec_name}", spec.name))?;
-            upload += (v.dims().iter().product::<usize>().max(1) * 4) as u64;
-            let lit = v.to_literal()?;
-            fresh.insert(
-                idx,
-                self.client
-                    .buffer_from_host_literal(None, &lit)
-                    .map_err(xerr)?,
-            );
-            fresh_lits.push(lit);
-        }
-        let bufs: Vec<&xla::PjRtBuffer> = (0..exec.spec.inputs.len())
-            .map(|idx| {
-                fresh.get(&idx).unwrap_or_else(|| {
-                    pinned
-                        .expect("index neither fresh nor pinned")
-                        .buffers
-                        .get(&idx)
-                        .expect("index neither fresh nor pinned")
-                })
-            })
-            .collect();
-        let t0 = std::time::Instant::now();
-        let result = exec.exe.execute_b(&bufs).map_err(xerr)?;
-        // blocks until execution (and hence input consumption) completes
-        let tuple = result[0][0].to_literal_sync().map_err(xerr)?;
-        drop(fresh_lits);
-        let parts = tuple.to_tuple().map_err(xerr)?;
-        {
-            let mut s = self.stats.borrow_mut();
-            s.executions += 1;
-            s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
-            s.upload_bytes += upload;
-        }
-        anyhow::ensure!(
-            parts.len() == exec.spec.outputs.len(),
-            "executable {exec_name}: {} outputs, manifest says {}",
-            parts.len(),
-            exec.spec.outputs.len()
-        );
-        let mut out = BTreeMap::new();
-        for (spec, lit) in exec.spec.outputs.iter().zip(parts) {
-            let data: Vec<f32> = match spec.dtype.as_str() {
-                "float32" => lit.to_vec::<f32>().map_err(xerr)?,
-                "int32" => lit
-                    .to_vec::<i32>()
-                    .map_err(xerr)?
-                    .into_iter()
-                    .map(|v| v as f32)
-                    .collect(),
-                d => bail!("unsupported output dtype {d}"),
-            };
-            out.insert(spec.name.clone(), Tensor::new(spec.shape.clone(), data));
-        }
-        Ok(out)
-    }
-}
-
-fn check_shape(spec: &TensorSpec, v: &Value) -> Result<()> {
-    let want: &[usize] = &spec.shape;
-    let got = v.dims();
-    anyhow::ensure!(got == want, "shape mismatch: got {:?}, manifest wants {:?}", got, want);
-    let is_i32 = matches!(v, Value::I32(_));
-    let want_i32 = spec.dtype == "int32";
-    anyhow::ensure!(
-        is_i32 == want_i32,
-        "dtype mismatch: got {}, manifest wants {}",
-        if is_i32 { "int32" } else { "float32" },
-        spec.dtype
-    );
-    Ok(())
 }
 
 /// Convenience builder for name-bound inputs.

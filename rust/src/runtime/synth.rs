@@ -1,0 +1,740 @@
+//! Synthetic artifact generator: `cbq synth` / [`generate`].
+//!
+//! Produces everything [`Artifacts`](super::Artifacts) expects —
+//! `manifest.json` (configs, executable input/output specs following the
+//! flatten_spec contract, window list), `weights_{cfg}.bin`, and
+//! `corpus_ref.json` — without Python, JAX, or a PJRT plugin, so the full
+//! pipeline (`quantize`, `export`, `load-eval`, `serve-bench`, `hessian`)
+//! runs end-to-end offline on the native backend.
+//!
+//! The weights are not random noise: a small host-side FP pretraining loop
+//! (plain-Rust forward/backward over `backend::kernels`, Adam) fits the
+//! model to the synthetic corpus first, then injects the same
+//! function-preserving activation/weight outliers `python/compile/
+//! pretrain.inject_outliers` does — so quantization-error *dynamics*
+//! (W8 near-lossless, W2 catastrophic, CFP finds outlier channels) hold on
+//! the synthetic models too, just with fewer pretraining tokens.
+//!
+//! The manifest's `file` fields are placeholders: no HLO text is written,
+//! so synthetic artifacts execute on the **native backend only**.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::backend::kernels::{self, Attention};
+use super::manifest::ModelCfg;
+use crate::calib::{self, corpus};
+use crate::coordinator::qstate::Adam;
+use crate::json::Value;
+use crate::quant::LINEARS;
+use crate::tensor::{io, Tensor};
+
+/// Mirrors python/compile/pretrain.CORPUS_SEED.
+pub const CORPUS_SEED: u64 = 42;
+
+/// Specification of one synthetic model family.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub rank_pad: usize,
+    pub windows: Vec<usize>,
+    pub outlier_channels: usize,
+    pub outlier_gain: f64,
+    pub pretrain_steps: usize,
+    pub pretrain_batch: usize,
+    pub pretrain_lr: f32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// The default `tiny` model: 2 blocks, d=32 — seconds to pretrain on a
+    /// laptop, large enough for real quantization-error dynamics.
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ffn: 64,
+            // the corpus emits token ids up to corpus::SEP_TOK (251)
+            vocab: 256,
+            seq: 32,
+            batch: 4,
+            rank_pad: 8,
+            windows: vec![1, 2],
+            outlier_channels: 3,
+            outlier_gain: 8.0,
+            // schedule validated against a JAX simulation of the same
+            // architecture + corpus: eval ppl lands near ~90 (vs 256 for an
+            // untrained model), enough for real quantization-error dynamics
+            pretrain_steps: 400,
+            pretrain_batch: 6,
+            pretrain_lr: 4e-3,
+            seed: 7,
+        }
+    }
+
+    pub fn cfg(&self) -> ModelCfg {
+        ModelCfg {
+            name: self.name.clone(),
+            d_model: self.d_model,
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            d_ffn: self.d_ffn,
+            vocab: self.vocab,
+            seq: self.seq,
+            batch: self.batch,
+            rank_pad: self.rank_pad,
+            head_dim: self.d_model / self.n_heads,
+            outlier_channels: self.outlier_channels,
+            outlier_gain: self.outlier_gain,
+        }
+    }
+}
+
+/// Deterministic gaussian source (Box-Muller over xorshift64*).
+struct Gauss {
+    rng: corpus::XorShift64Star,
+    spare: Option<f64>,
+}
+
+impl Gauss {
+    fn new(seed: u64) -> Self {
+        Self { rng: corpus::XorShift64Star::new(seed), spare: None }
+    }
+
+    fn uniform(&mut self) -> f64 {
+        ((self.rng.next_u64() >> 11) as f64 / (1u64 << 53) as f64).max(1e-12)
+    }
+
+    fn next(&mut self) -> f32 {
+        if let Some(z) = self.spare.take() {
+            return z as f32;
+        }
+        let (u1, u2) = (self.uniform(), self.uniform());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * th.sin());
+        (r * th.cos()) as f32
+    }
+
+    fn vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.next() * scale).collect()
+    }
+
+    /// `count` distinct indices below `n` (partial Fisher-Yates).
+    fn choose(&mut self, n: usize, count: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let count = count.min(n);
+        for i in 0..count {
+            let j = i + self.rng.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(count);
+        idx
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FP model: host-side pretraining (forward + backward + Adam)
+// ---------------------------------------------------------------------------
+
+struct FpBlock {
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    /// keyed in LINEARS order
+    lin: BTreeMap<&'static str, Vec<f32>>,
+}
+
+struct FpParams {
+    embed: Vec<f32>,
+    final_norm: Vec<f32>,
+    head: Vec<f32>,
+    blocks: Vec<FpBlock>,
+}
+
+impl FpParams {
+    fn init(spec: &SynthSpec, g: &mut Gauss) -> Self {
+        let cfg = spec.cfg();
+        let d = cfg.d_model;
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            let mut lin = BTreeMap::new();
+            for l in LINEARS {
+                let (fan_in, fan_out) = cfg.linear_shape(l);
+                lin.insert(l, g.vec(fan_in * fan_out, 1.0 / (fan_in as f32).sqrt()));
+            }
+            blocks.push(FpBlock {
+                attn_norm: vec![1.0; d],
+                mlp_norm: vec![1.0; d],
+                lin,
+            });
+        }
+        Self {
+            embed: g.vec(cfg.vocab * d, 0.02),
+            final_norm: vec![1.0; d],
+            head: g.vec(d * cfg.vocab, 1.0 / (d as f32).sqrt()),
+            blocks,
+        }
+    }
+}
+
+struct BlockTape {
+    h_in: Vec<f32>,
+    a: Vec<f32>,
+    heads: Vec<kernels::HeadCache>,
+    mix: Vec<f32>,
+    h_mid: Vec<f32>,
+    m: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    act: Vec<f32>,
+}
+
+/// One FP block forward with tape (plain linears, no quantization).
+fn fp_block_fwd(p: &FpBlock, h: &[f32], rows: usize, cfg: &ModelCfg, attn: &Attention) -> (Vec<f32>, BlockTape) {
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let a = kernels::rmsnorm(h, d, &p.attn_norm);
+    let q = kernels::matmul(&a, rows, d, &p.lin["wq"], d);
+    let k = kernels::matmul(&a, rows, d, &p.lin["wk"], d);
+    let v = kernels::matmul(&a, rows, d, &p.lin["wv"], d);
+    let (mix, heads) = attn.forward(&q, &k, &v, true);
+    let wo_y = kernels::matmul(&mix, rows, d, &p.lin["wo"], d);
+    let h_mid: Vec<f32> = h.iter().zip(&wo_y).map(|(&x, &y)| x + y).collect();
+    let m = kernels::rmsnorm(&h_mid, d, &p.mlp_norm);
+    let gate = kernels::matmul(&m, rows, d, &p.lin["wgate"], f);
+    let up = kernels::matmul(&m, rows, d, &p.lin["wup"], f);
+    let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| kernels::silu(g) * u).collect();
+    let down = kernels::matmul(&act, rows, f, &p.lin["wdown"], d);
+    let h_out: Vec<f32> = h_mid.iter().zip(&down).map(|(&x, &y)| x + y).collect();
+    (h_out, BlockTape { h_in: h.to_vec(), a, heads, mix, h_mid, m, gate, up, act })
+}
+
+/// Per-block parameter gradients.
+#[derive(Default)]
+struct BlockGrads {
+    attn_norm: Vec<f32>,
+    mlp_norm: Vec<f32>,
+    lin: BTreeMap<&'static str, Vec<f32>>,
+}
+
+/// FP block backward: returns (dh_in, grads).
+fn fp_block_bwd(
+    p: &FpBlock,
+    tape: &BlockTape,
+    rows: usize,
+    cfg: &ModelCfg,
+    attn: &Attention,
+    dh_out: &[f32],
+) -> (Vec<f32>, BlockGrads) {
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let mut g = BlockGrads {
+        attn_norm: vec![0.0; d],
+        mlp_norm: vec![0.0; d],
+        lin: BTreeMap::new(),
+    };
+    // h_out = h_mid + act @ wdown
+    g.lin.insert("wdown", kernels::matmul_transa(&tape.act, rows, f, dh_out, d));
+    let dact = kernels::matmul_transb(dh_out, rows, d, &p.lin["wdown"], f);
+    // act = silu(gate) * up
+    let mut dgate = vec![0.0f32; rows * f];
+    let mut dup = vec![0.0f32; rows * f];
+    for i in 0..rows * f {
+        dgate[i] = dact[i] * tape.up[i] * kernels::silu_d(tape.gate[i]);
+        dup[i] = dact[i] * kernels::silu(tape.gate[i]);
+    }
+    g.lin.insert("wgate", kernels::matmul_transa(&tape.m, rows, d, &dgate, f));
+    g.lin.insert("wup", kernels::matmul_transa(&tape.m, rows, d, &dup, f));
+    let dm1 = kernels::matmul_transb(&dgate, rows, f, &p.lin["wgate"], d);
+    let dm2 = kernels::matmul_transb(&dup, rows, f, &p.lin["wup"], d);
+    let dm: Vec<f32> = dm1.iter().zip(&dm2).map(|(&x, &y)| x + y).collect();
+    let dmid_norm =
+        kernels::rmsnorm_bwd(&tape.h_mid, d, &p.mlp_norm, &dm, Some(&mut g.mlp_norm));
+    let dh_mid: Vec<f32> = dh_out.iter().zip(&dmid_norm).map(|(&x, &y)| x + y).collect();
+    // h_mid = h_in + mix @ wo
+    g.lin.insert("wo", kernels::matmul_transa(&tape.mix, rows, d, &dh_mid, d));
+    let dmix = kernels::matmul_transb(&dh_mid, rows, d, &p.lin["wo"], d);
+    let (dq, dk, dv) = attn.backward(&tape.heads, &dmix);
+    g.lin.insert("wq", kernels::matmul_transa(&tape.a, rows, d, &dq, d));
+    g.lin.insert("wk", kernels::matmul_transa(&tape.a, rows, d, &dk, d));
+    g.lin.insert("wv", kernels::matmul_transa(&tape.a, rows, d, &dv, d));
+    let da1 = kernels::matmul_transb(&dq, rows, d, &p.lin["wq"], d);
+    let da2 = kernels::matmul_transb(&dk, rows, d, &p.lin["wk"], d);
+    let da3 = kernels::matmul_transb(&dv, rows, d, &p.lin["wv"], d);
+    let da: Vec<f32> = da1
+        .iter()
+        .zip(&da2)
+        .zip(&da3)
+        .map(|((&x, &y), &z)| x + y + z)
+        .collect();
+    let din_norm =
+        kernels::rmsnorm_bwd(&tape.h_in, d, &p.attn_norm, &da, Some(&mut g.attn_norm));
+    let dh_in: Vec<f32> = dh_mid.iter().zip(&din_norm).map(|(&x, &y)| x + y).collect();
+    (dh_in, g)
+}
+
+/// Optimizer state mirroring the parameter tree.
+struct OptState {
+    embed: Adam,
+    final_norm: Adam,
+    head: Adam,
+    blocks: Vec<(Adam, Adam, BTreeMap<&'static str, Adam>)>,
+}
+
+impl OptState {
+    fn new(p: &FpParams) -> Self {
+        Self {
+            embed: Adam::new(p.embed.len()),
+            final_norm: Adam::new(p.final_norm.len()),
+            head: Adam::new(p.head.len()),
+            blocks: p
+                .blocks
+                .iter()
+                .map(|b| {
+                    (
+                        Adam::new(b.attn_norm.len()),
+                        Adam::new(b.mlp_norm.len()),
+                        b.lin.iter().map(|(&l, w)| (l, Adam::new(w.len()))).collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Train the FP model on the synthetic corpus. Returns the mean xent loss
+/// over the final 10% of steps.
+fn pretrain(spec: &SynthSpec, params: &mut FpParams) -> f32 {
+    let cfg = spec.cfg();
+    let (b, s, d, v) = (spec.pretrain_batch, cfg.seq, cfg.d_model, cfg.vocab);
+    let rows = b * s;
+    let attn = Attention::new(b, s, cfg.n_heads, cfg.head_dim);
+    let mut opt = OptState::new(params);
+    let lr = spec.pretrain_lr;
+    // alternate corpus styles, cycling through a fixed stream
+    let n_batches = (spec.pretrain_steps / 2 + 1).max(1);
+    let c4 = calib::batches(corpus::Style::C4, CORPUS_SEED, n_batches, b, s);
+    let wiki = calib::batches(corpus::Style::Wiki, CORPUS_SEED, n_batches, b, s);
+    let mut tail_loss = 0.0f64;
+    let mut tail_n = 0usize;
+    for step in 0..spec.pretrain_steps {
+        let batch = if step % 2 == 0 { &c4[(step / 2) % c4.len()] } else { &wiki[(step / 2) % wiki.len()] };
+        let x = batch.inputs();
+        let y = batch.targets();
+        // forward
+        let mut h = vec![0.0f32; rows * d];
+        for (r, &t) in x.data.iter().enumerate() {
+            let row = &params.embed[t as usize * d..(t as usize + 1) * d];
+            h[r * d..(r + 1) * d].copy_from_slice(row);
+        }
+        let mut tapes = Vec::with_capacity(cfg.n_layers);
+        for blk in &params.blocks {
+            let (h_out, tape) = fp_block_fwd(blk, &h, rows, &cfg, &attn);
+            h = h_out;
+            tapes.push(tape);
+        }
+        let hn = kernels::rmsnorm(&h, d, &params.final_norm);
+        let logits = kernels::matmul(&hn, rows, d, &params.head, v);
+        let logp = kernels::log_softmax_rows(&logits, v);
+        let mut loss = 0.0f64;
+        for (r, &t) in y.data.iter().enumerate() {
+            loss -= logp[r * v + t as usize] as f64;
+        }
+        loss /= rows as f64;
+        if step >= spec.pretrain_steps.saturating_sub(spec.pretrain_steps / 10 + 1) {
+            tail_loss += loss;
+            tail_n += 1;
+        }
+        // backward: dlogits = (softmax - onehot) / rows
+        let mut dlogits = vec![0.0f32; rows * v];
+        let inv_rows = 1.0 / rows as f32;
+        for r in 0..rows {
+            for j in 0..v {
+                dlogits[r * v + j] = logp[r * v + j].exp() * inv_rows;
+            }
+            dlogits[r * v + y.data[r] as usize] -= inv_rows;
+        }
+        let dhead = kernels::matmul_transa(&hn, rows, d, &dlogits, v);
+        let dhn = kernels::matmul_transb(&dlogits, rows, v, &params.head, d);
+        let mut dfinal = vec![0.0f32; d];
+        let mut dh = kernels::rmsnorm_bwd(&h, d, &params.final_norm, &dhn, Some(&mut dfinal));
+        let mut block_grads: Vec<BlockGrads> = Vec::with_capacity(cfg.n_layers);
+        for j in (0..cfg.n_layers).rev() {
+            let (dh_in, g) = fp_block_bwd(&params.blocks[j], &tapes[j], rows, &cfg, &attn, &dh);
+            dh = dh_in;
+            block_grads.push(g);
+        }
+        block_grads.reverse();
+        // embed scatter-add
+        let mut dembed = vec![0.0f32; params.embed.len()];
+        for (r, &t) in x.data.iter().enumerate() {
+            let dst = &mut dembed[t as usize * d..(t as usize + 1) * d];
+            for (o, &g) in dst.iter_mut().zip(&dh[r * d..(r + 1) * d]) {
+                *o += g;
+            }
+        }
+        // apply
+        opt.embed.step(&mut params.embed, &dembed, lr);
+        opt.final_norm.step(&mut params.final_norm, &dfinal, lr);
+        opt.head.step(&mut params.head, &dhead, lr);
+        for (j, g) in block_grads.iter().enumerate() {
+            let blk = &mut params.blocks[j];
+            let (oa, om, olin) = &mut opt.blocks[j];
+            oa.step(&mut blk.attn_norm, &g.attn_norm, lr);
+            om.step(&mut blk.mlp_norm, &g.mlp_norm, lr);
+            for l in LINEARS {
+                olin.get_mut(l).unwrap().step(blk.lin.get_mut(l).unwrap(), &g.lin[l], lr);
+            }
+        }
+    }
+    (tail_loss / tail_n.max(1) as f64) as f32
+}
+
+/// Function-preserving activation/weight outlier injection (mirrors
+/// python/compile/pretrain.inject_outliers).
+fn inject_outliers(spec: &SynthSpec, params: &mut FpParams, g: &mut Gauss) {
+    let cfg = spec.cfg();
+    let (d, f) = (cfg.d_model, cfg.d_ffn);
+    let gain = spec.outlier_gain as f32;
+    if spec.outlier_channels == 0 || gain == 0.0 {
+        return;
+    }
+    for blk in params.blocks.iter_mut() {
+        // activation outliers: attn path (norm up, consumers down)
+        for ch in g.choose(d, spec.outlier_channels) {
+            blk.attn_norm[ch] *= gain;
+            for name in ["wq", "wk", "wv"] {
+                let w = blk.lin.get_mut(name).unwrap();
+                for x in w[ch * d..(ch + 1) * d].iter_mut() {
+                    *x /= gain;
+                }
+            }
+        }
+        // activation outliers: mlp path
+        for ch in g.choose(d, spec.outlier_channels) {
+            blk.mlp_norm[ch] *= gain;
+            for name in ["wgate", "wup"] {
+                let w = blk.lin.get_mut(name).unwrap();
+                for x in w[ch * f..(ch + 1) * f].iter_mut() {
+                    *x *= 1.0 / gain;
+                }
+            }
+        }
+        // weight outliers: v-channel pairs
+        for ch in g.choose(d, (spec.outlier_channels / 2).max(1)) {
+            let wv = blk.lin.get_mut("wv").unwrap();
+            for r in 0..d {
+                wv[r * d + ch] *= gain;
+            }
+            let wo = blk.lin.get_mut("wo").unwrap();
+            for x in wo[ch * d..(ch + 1) * d].iter_mut() {
+                *x /= gain;
+            }
+        }
+        // weight outliers: up-channel pairs
+        for ch in g.choose(f, (spec.outlier_channels / 2).max(1)) {
+            let wup = blk.lin.get_mut("wup").unwrap();
+            for r in 0..d {
+                wup[r * f + ch] *= gain;
+            }
+            let wdown = blk.lin.get_mut("wdown").unwrap();
+            for x in wdown[ch * d..(ch + 1) * d].iter_mut() {
+                *x /= gain;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// manifest spec builders (flatten_spec ordering)
+// ---------------------------------------------------------------------------
+
+fn tspec(name: String, shape: &[usize], dtype: &str) -> Value {
+    Value::obj(vec![
+        ("name", Value::str(name)),
+        ("shape", Value::arr(shape.iter().map(|&d| Value::num(d as f64)).collect())),
+        ("dtype", Value::str(dtype)),
+    ])
+}
+
+fn f32spec(name: String, shape: &[usize]) -> Value {
+    tspec(name, shape, "float32")
+}
+
+/// sorted block-weight entries for window position `j`.
+fn block_specs(cfg: &ModelCfg, j: usize, out: &mut Vec<Value>) {
+    let d = cfg.d_model;
+    out.push(f32spec(format!("blocks.{j}.attn_norm"), &[d]));
+    out.push(f32spec(format!("blocks.{j}.mlp_norm"), &[d]));
+    // sorted: wdown, wgate, wk, wo, wq, wup, wv
+    for l in ["wdown", "wgate", "wk", "wo", "wq", "wup", "wv"] {
+        let (fan_in, fan_out) = cfg.linear_shape(l);
+        out.push(f32spec(format!("blocks.{j}.{l}"), &[fan_in, fan_out]));
+    }
+}
+
+/// sorted qblock entries for window position `j`.
+fn qblock_specs(cfg: &ModelCfg, j: usize, dense: bool, out: &mut Vec<Value>) {
+    for l in ["wdown", "wgate", "wk", "wo", "wq", "wup", "wv"] {
+        let (fan_in, fan_out) = cfg.linear_shape(l);
+        let p = format!("qblocks.{j}.{l}");
+        if !dense {
+            out.push(f32spec(format!("{p}.a1"), &[fan_in, cfg.rank_pad]));
+            out.push(f32spec(format!("{p}.a2"), &[cfg.rank_pad, fan_out]));
+        }
+        out.push(f32spec(format!("{p}.a_en"), &[]));
+        out.push(f32spec(format!("{p}.alpha"), &[]));
+        out.push(f32spec(format!("{p}.qmax_a"), &[]));
+        out.push(f32spec(format!("{p}.qmax_w"), &[]));
+        out.push(f32spec(format!("{p}.s_w"), &[fan_out]));
+        if dense {
+            out.push(f32spec(format!("{p}.v"), &[fan_in, fan_out]));
+        }
+        out.push(f32spec(format!("{p}.v0"), &[fan_in, fan_out]));
+        out.push(f32spec(format!("{p}.w_en"), &[]));
+    }
+}
+
+fn window_inputs(cfg: &ModelCfg, w: usize, dense: bool) -> Vec<Value> {
+    let mut inputs = Vec::new();
+    for j in 0..w {
+        block_specs(cfg, j, &mut inputs);
+    }
+    for g in ["beta", "gamma_c", "kld_w", "l2_w", "use_lora"] {
+        inputs.push(f32spec(format!("globals.{g}"), &[]));
+    }
+    let hshape = [cfg.batch, cfg.seq, cfg.d_model];
+    inputs.push(f32spec("h_in".into(), &hshape));
+    for j in 0..w {
+        qblock_specs(cfg, j, dense, &mut inputs);
+    }
+    inputs.push(f32spec("target".into(), &hshape));
+    inputs
+}
+
+fn exec_entry(file: String, inputs: Vec<Value>, outputs: Vec<Value>) -> Value {
+    Value::obj(vec![
+        ("file", Value::str(file)),
+        ("inputs", Value::arr(inputs)),
+        ("outputs", Value::arr(outputs)),
+    ])
+}
+
+fn executables(cfg: &ModelCfg, windows: &[usize]) -> Vec<(String, Value)> {
+    let name = &cfg.name;
+    let hshape = [cfg.batch, cfg.seq, cfg.d_model];
+    let mut out = Vec::new();
+    for &w in windows {
+        // win_fwd
+        let fwd_outputs = vec![
+            f32spec("h_out".into(), &hshape),
+            f32spec("kld".into(), &[]),
+            f32spec("loss".into(), &[]),
+            f32spec("mse".into(), &[]),
+        ];
+        out.push((
+            format!("win_fwd_w{w}_{name}"),
+            exec_entry(format!("win_fwd_w{w}_{name}.hlo.txt"), window_inputs(cfg, w, false), fwd_outputs),
+        ));
+        // win_grad
+        out.push((
+            format!("win_grad_w{w}_{name}"),
+            exec_entry(
+                format!("win_grad_w{w}_{name}.hlo.txt"),
+                window_inputs(cfg, w, false),
+                grad_outputs(cfg, w, false),
+            ),
+        ));
+    }
+    // dense-AdaRound grad variant at w=2 (memory/speed baseline)
+    if windows.contains(&2) {
+        out.push((
+            format!("win_grad_dense_w2_{name}"),
+            exec_entry(
+                format!("win_grad_dense_w2_{name}.hlo.txt"),
+                window_inputs(cfg, 2, true),
+                grad_outputs(cfg, 2, true),
+            ),
+        ));
+    }
+    // capture
+    let mut cap_outputs = Vec::new();
+    let rows = cfg.batch * cfg.seq;
+    for l in ["wdown", "wgate", "wk", "wo", "wq", "wup", "wv"] {
+        let (fan_in, _) = cfg.linear_shape(l);
+        cap_outputs.push(f32spec(format!("captures.{l}"), &[rows, fan_in]));
+    }
+    cap_outputs.push(f32spec("h_out".into(), &hshape));
+    out.push((
+        format!("capture_{name}"),
+        exec_entry(format!("capture_{name}.hlo.txt"), window_inputs(cfg, 1, false), cap_outputs),
+    ));
+    // lm_eval
+    let lm_inputs = vec![
+        f32spec("final_norm".into(), &[cfg.d_model]),
+        f32spec("h".into(), &hshape),
+        f32spec("head".into(), &[cfg.d_model, cfg.vocab]),
+        f32spec("mask".into(), &[cfg.batch, cfg.seq]),
+        tspec("targets".into(), &[cfg.batch, cfg.seq], "int32"),
+    ];
+    let lm_outputs = vec![
+        f32spec("count".into(), &[cfg.batch]),
+        f32spec("nll".into(), &[cfg.batch]),
+    ];
+    out.push((
+        format!("lm_eval_{name}"),
+        exec_entry(format!("lm_eval_{name}.hlo.txt"), lm_inputs, lm_outputs),
+    ));
+    out
+}
+
+fn grad_outputs(cfg: &ModelCfg, w: usize, dense: bool) -> Vec<Value> {
+    let mut out = vec![f32spec("com".into(), &[])];
+    for j in 0..w {
+        for l in ["wdown", "wgate", "wk", "wo", "wq", "wup", "wv"] {
+            let (fan_in, fan_out) = cfg.linear_shape(l);
+            let p = format!("grads.{j}.{l}");
+            if dense {
+                out.push(f32spec(format!("{p}.alpha"), &[]));
+                out.push(f32spec(format!("{p}.s_w"), &[fan_out]));
+                out.push(f32spec(format!("{p}.v"), &[fan_in, fan_out]));
+            } else {
+                out.push(f32spec(format!("{p}.a1"), &[fan_in, cfg.rank_pad]));
+                out.push(f32spec(format!("{p}.a2"), &[cfg.rank_pad, fan_out]));
+                out.push(f32spec(format!("{p}.alpha"), &[]));
+                out.push(f32spec(format!("{p}.s_w"), &[fan_out]));
+            }
+        }
+    }
+    out.push(f32spec("kld".into(), &[]));
+    out.push(f32spec("loss".into(), &[]));
+    out.push(f32spec("mse".into(), &[]));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// generation entry point
+// ---------------------------------------------------------------------------
+
+/// What [`generate`] produced.
+#[derive(Clone, Debug)]
+pub struct SynthReport {
+    pub cfg: ModelCfg,
+    pub pretrain_loss: f32,
+    pub n_executables: usize,
+    pub weight_params: usize,
+}
+
+/// Generate a synthetic artifacts directory at `dir`.
+pub fn generate(dir: impl AsRef<Path>, spec: &SynthSpec) -> Result<SynthReport> {
+    let dir = dir.as_ref();
+    ensure!(spec.n_layers >= 1 && !spec.windows.is_empty(), "degenerate synth spec");
+    ensure!(
+        spec.d_model % spec.n_heads == 0 && (spec.d_model / spec.n_heads) % 2 == 0,
+        "d_model/n_heads must give an even head_dim (RoPE)"
+    );
+    ensure!(
+        spec.vocab > corpus::SEP_TOK as usize,
+        "vocab {} must exceed the corpus token range ({})",
+        spec.vocab,
+        corpus::SEP_TOK
+    );
+    ensure!(
+        spec.seq + 1 > corpus::SEGMENT_LEN / 2,
+        "seq {} too short for the choice tasks (needs > {})",
+        spec.seq,
+        corpus::SEGMENT_LEN / 2
+    );
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    let cfg = spec.cfg();
+
+    // 1. init + pretrain + outlier injection
+    let mut g = Gauss::new(spec.seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    let mut params = FpParams::init(spec, &mut g);
+    let loss = pretrain(spec, &mut params);
+    inject_outliers(spec, &mut params, &mut g);
+
+    // 2. weights container
+    let d = cfg.d_model;
+    let mut tensors: BTreeMap<String, Tensor> = BTreeMap::new();
+    tensors.insert("embed".into(), Tensor::new(vec![cfg.vocab, d], params.embed.clone()));
+    tensors.insert("final_norm".into(), Tensor::new(vec![d], params.final_norm.clone()));
+    tensors.insert("head".into(), Tensor::new(vec![d, cfg.vocab], params.head.clone()));
+    let mut weight_params = 0usize;
+    for (i, blk) in params.blocks.iter().enumerate() {
+        tensors.insert(format!("blocks.{i}.attn_norm"), Tensor::new(vec![d], blk.attn_norm.clone()));
+        tensors.insert(format!("blocks.{i}.mlp_norm"), Tensor::new(vec![d], blk.mlp_norm.clone()));
+        for l in LINEARS {
+            let (fan_in, fan_out) = cfg.linear_shape(l);
+            weight_params += fan_in * fan_out;
+            tensors.insert(
+                format!("blocks.{i}.{l}"),
+                Tensor::new(vec![fan_in, fan_out], blk.lin[l].clone()),
+            );
+        }
+    }
+    io::write_tensors(dir.join(format!("weights_{}.bin", cfg.name)), &tensors)?;
+
+    // 3. corpus parity vectors (generated by the same Rust corpus the
+    // pipeline consumes, so the file-format contract stays covered)
+    let corpus_ref = Value::obj(vec![
+        (
+            "c4",
+            Value::arr(
+                corpus::generate(corpus::Style::C4, CORPUS_SEED, 2048)
+                    .into_iter()
+                    .map(|t| Value::num(t as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "wiki",
+            Value::arr(
+                corpus::generate(corpus::Style::Wiki, CORPUS_SEED, 2048)
+                    .into_iter()
+                    .map(|t| Value::num(t as f64))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(dir.join("corpus_ref.json"), crate::json::dump(&corpus_ref))?;
+
+    // 4. manifest
+    let execs = executables(&cfg, &spec.windows);
+    let n_executables = execs.len();
+    let manifest = Value::obj(vec![
+        ("version", Value::num(1.0)),
+        ("configs", Value::obj(vec![(cfg.name.as_str(), cfg.to_json())])),
+        (
+            "executables",
+            Value::Obj(execs.into_iter().collect()),
+        ),
+        (
+            "pretrain_loss",
+            Value::obj(vec![(cfg.name.as_str(), Value::num(loss as f64))]),
+        ),
+        (
+            "linears",
+            Value::arr(LINEARS.iter().map(|&l| Value::str(l)).collect()),
+        ),
+        (
+            "windows",
+            Value::obj(vec![(
+                cfg.name.as_str(),
+                Value::arr(spec.windows.iter().map(|&w| Value::num(w as f64)).collect()),
+            )]),
+        ),
+    ]);
+    std::fs::write(dir.join("manifest.json"), crate::json::dump(&manifest))?;
+
+    Ok(SynthReport { cfg, pretrain_loss: loss, n_executables, weight_params })
+}

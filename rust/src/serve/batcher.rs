@@ -83,6 +83,9 @@ pub enum Response {
     Ppl { nll: f64, count: f64 },
     Choice { pick: usize, correct: usize, scores: Vec<f32> },
     Hidden { tokens: usize },
+    /// Turned away at admission: the bounded queue was full. The request
+    /// performed no model work (callers should retry/shed load).
+    Rejected,
 }
 
 impl Response {
@@ -105,6 +108,8 @@ pub struct ServeStats {
     pub row_capacity: usize,
     /// real tokens pushed through (rows * seq)
     pub tokens: usize,
+    /// requests turned away by the bounded admission queue
+    pub rejected: usize,
     pub wall_seconds: f64,
 }
 
@@ -118,27 +123,47 @@ impl ServeStats {
         self.tokens as f64 / self.wall_seconds.max(1e-12)
     }
 
+    /// Served (admitted) requests per second — rejected requests did no
+    /// model work and do not count as throughput.
     pub fn requests_per_s(&self) -> f64 {
-        self.requests as f64 / self.wall_seconds.max(1e-12)
+        (self.requests - self.rejected) as f64 / self.wall_seconds.max(1e-12)
     }
 }
 
-/// Coalescing request batcher.
+/// Coalescing request batcher with an optional bounded admission queue.
 pub struct Batcher {
     /// Upper bound on rows per dispatch: `batch_rows()` when coalescing,
     /// 1 for the sequential baseline.
     rows_per_dispatch: usize,
+    /// Admission cap in *rows*: requests that would push the queued row
+    /// count past this bound are rejected up front (visible overload
+    /// instead of unbounded queue growth). `None` = unlimited.
+    queue_cap: Option<usize>,
 }
 
 impl Batcher {
     /// Coalesce rows from all requests into maximal dispatches.
     pub fn coalescing(exec: &dyn RowExecutor) -> Self {
-        Self { rows_per_dispatch: exec.batch_rows().max(1) }
+        Self { rows_per_dispatch: exec.batch_rows().max(1), queue_cap: None }
     }
 
     /// One row per dispatch (the naive serving baseline).
     pub fn sequential() -> Self {
-        Self { rows_per_dispatch: 1 }
+        Self { rows_per_dispatch: 1, queue_cap: None }
+    }
+
+    /// Bound the admission queue to `cap` rows (0 = unlimited). A request
+    /// is admitted atomically — all of its rows or none — so a multi-row
+    /// choice request never ends up half-scored.
+    ///
+    /// Semantics: `run` drains a backlog that already arrived, so the cap
+    /// bounds the backlog admitted *per run* (classic admission control on
+    /// an offered burst) — capacity is not re-credited as dispatches
+    /// complete within the same run. A live arrival loop would call `run`
+    /// per drain cycle, re-admitting up to `cap` rows each time.
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = if cap == 0 { None } else { Some(cap) };
+        self
     }
 
     /// Run every request to completion, returning per-request responses (in
@@ -152,8 +177,13 @@ impl Batcher {
         let cap = exec.batch_rows().max(1);
         let per_dispatch = self.rows_per_dispatch.clamp(1, cap);
 
-        // flatten: (request index, row index within request)
+        // admission + flatten: (request index, row index within request).
+        // Requests are validated regardless of admission (shape bugs must
+        // surface even under overload), admitted whole-or-not.
         let mut flat: Vec<(usize, usize)> = Vec::new();
+        let mut admitted = vec![true; requests.len()];
+        let mut stats = ServeStats { requests: requests.len(), ..Default::default() };
+        let mut queued_rows = 0usize;
         for (ri, req) in requests.iter().enumerate() {
             ensure!(!req.rows.is_empty(), "request {ri} has no rows");
             for (qi, row) in req.rows.iter().enumerate() {
@@ -161,13 +191,22 @@ impl Batcher {
                     row.inputs.len() == seq && row.targets.len() == seq && row.mask.len() == seq,
                     "request {ri} row {qi}: row length != executor seq {seq}"
                 );
+            }
+            if let Some(cap) = self.queue_cap {
+                if queued_rows + req.rows.len() > cap {
+                    admitted[ri] = false;
+                    stats.rejected += 1;
+                    continue;
+                }
+            }
+            queued_rows += req.rows.len();
+            for qi in 0..req.rows.len() {
                 flat.push((ri, qi));
             }
         }
 
         let mut outs: Vec<Vec<RowOut>> =
             requests.iter().map(|r| vec![RowOut::default(); r.rows.len()]).collect();
-        let mut stats = ServeStats { requests: requests.len(), ..Default::default() };
         let t0 = std::time::Instant::now();
         for chunk in flat.chunks(per_dispatch) {
             let rows: Vec<WorkRow> =
@@ -192,7 +231,12 @@ impl Batcher {
         let responses = requests
             .iter()
             .zip(&outs)
-            .map(|(req, rows)| match &req.kind {
+            .enumerate()
+            .map(|(ri, (req, rows))| {
+                if !admitted[ri] {
+                    return Response::Rejected;
+                }
+                match &req.kind {
                 RequestKind::Ppl => Response::Ppl {
                     nll: rows.iter().map(|r| r.nll as f64).sum(),
                     count: rows.iter().map(|r| r.count as f64).sum(),
@@ -210,8 +254,7 @@ impl Batcher {
                         .unwrap_or(0);
                     Response::Choice { pick, correct: *correct, scores }
                 }
-                RequestKind::Hidden => {
-                    Response::Hidden { tokens: rows.len() * seq }
+                    RequestKind::Hidden => Response::Hidden { tokens: rows.len() * seq },
                 }
             })
             .collect();
@@ -426,6 +469,69 @@ mod tests {
         for r in reqs.iter().filter(|r| matches!(r.kind, RequestKind::Choice { .. })) {
             assert_eq!(r.rows.len(), 2);
         }
+    }
+
+    #[test]
+    fn bounded_admission_rejects_overflow_and_keeps_order() {
+        let seq = 4;
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request {
+                kind: RequestKind::Ppl,
+                rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
+            })
+            .collect();
+        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
+        let (resp, stats) =
+            Batcher::coalescing(&m).with_queue_cap(4).run(&mut m, &reqs).unwrap();
+        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.rows, 4);
+        assert_eq!(resp.len(), 6);
+        for r in &resp[..4] {
+            assert!(matches!(r, Response::Ppl { .. }));
+        }
+        for r in &resp[4..] {
+            assert_eq!(*r, Response::Rejected);
+        }
+        // only admitted rows were dispatched
+        assert_eq!(m.dispatch_sizes, vec![4]);
+    }
+
+    #[test]
+    fn admission_is_whole_request() {
+        // a 2-row choice request must never be half-admitted
+        let seq = 3;
+        let reqs = vec![
+            Request { kind: RequestKind::Ppl, rows: vec![row(&[0, 1, 2, 3])] },
+            Request {
+                kind: RequestKind::Choice { correct: 0 },
+                rows: vec![row(&[0, 1, 1, 1]), row(&[0, 9, 9, 9])],
+            },
+            Request { kind: RequestKind::Ppl, rows: vec![row(&[4, 5, 6, 7])] },
+        ];
+        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
+        // cap of 2: ppl (1 row) admitted, choice (2 rows) would exceed ->
+        // rejected whole; trailing ppl still fits
+        let (resp, stats) =
+            Batcher::coalescing(&m).with_queue_cap(2).run(&mut m, &reqs).unwrap();
+        assert_eq!(stats.rejected, 1);
+        assert!(matches!(resp[0], Response::Ppl { .. }));
+        assert_eq!(resp[1], Response::Rejected);
+        assert!(matches!(resp[2], Response::Ppl { .. }));
+    }
+
+    #[test]
+    fn zero_cap_means_unlimited() {
+        let seq = 4;
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| Request {
+                kind: RequestKind::Ppl,
+                rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
+            })
+            .collect();
+        let mut m = Mock { batch: 2, seq, dispatch_sizes: vec![] };
+        let (_, stats) = Batcher::coalescing(&m).with_queue_cap(0).run(&mut m, &reqs).unwrap();
+        assert_eq!(stats.rejected, 0);
+        assert_eq!(stats.rows, 5);
     }
 
     #[test]

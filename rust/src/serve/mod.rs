@@ -5,12 +5,13 @@
 //!
 //! * [`registry::ModelRegistry`] — loads `CBQS` files by name and keeps the
 //!   reconstructed models resident;
-//! * [`ServeEngine`] — binds a resident model to the AOT executables,
-//!   covering the block chain with the *largest exported window
-//!   executables* (the same greedy covering `forward_hidden` uses) and
-//!   **pinning** every static input (weights, quant state, globals) as
-//!   device buffers once at engine build — steady-state dispatches upload
-//!   only the embedded token batch;
+//! * [`ServeEngine`] — binds a resident model to a [`Backend`]'s
+//!   executables, covering the block chain with the *largest exported
+//!   window executables* (the same greedy covering `forward_hidden` uses)
+//!   and **pinning** every static input (weights, quant state, globals)
+//!   once at engine build — device buffers on PJRT, retained host tensors
+//!   on the native backend — so steady-state dispatches bind only the
+//!   embedded token batch;
 //! * [`batcher::Batcher`] — coalesces queued eval requests (perplexity
 //!   segments, zero-shot choice items, forward-hidden calls) into maximal
 //!   batches and reports tokens/s, requests/s and batch occupancy.
@@ -23,7 +24,7 @@ use std::rc::Rc;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{window_plan, Pipeline};
-use crate::runtime::{Artifacts, Bindings, Pinned, Runtime};
+use crate::runtime::{Artifacts, Backend, Bindings, Pinned};
 use crate::tensor::{Tensor, TensorI32};
 
 pub use batcher::{Batcher, Request, RequestKind, Response, RowExecutor, RowOut, ServeStats, WorkRow};
@@ -32,7 +33,7 @@ pub use registry::{LoadedSnapshot, ModelRegistry};
 /// A snapshot model bound to the runtime: per-window pinned weight buffers
 /// plus the pinned LM head, ready for row-batch execution.
 pub struct ServeEngine<'rt> {
-    rt: &'rt Runtime,
+    rt: &'rt dyn Backend,
     snap: Rc<LoadedSnapshot>,
     /// (start block, window width, executable, pinned statics) per step of
     /// the greedy covering.
@@ -41,7 +42,7 @@ pub struct ServeEngine<'rt> {
 }
 
 impl<'rt> ServeEngine<'rt> {
-    pub fn new(rt: &'rt Runtime, art: &Artifacts, snap: Rc<LoadedSnapshot>) -> Result<Self> {
+    pub fn new(rt: &'rt dyn Backend, art: &Artifacts, snap: Rc<LoadedSnapshot>) -> Result<Self> {
         let cfg = &snap.meta.cfg;
         let name = &cfg.name;
         let model = &snap.model;

@@ -203,17 +203,16 @@ fn take_packed(entries: &mut BTreeMap<String, Entry>, name: &str) -> Result<Pack
     }
 }
 
-/// Load a snapshot, reconstructing the bit-exact [`QuantizedModel`].
-pub fn load(path: impl AsRef<Path>) -> Result<Snapshot> {
-    let (header, mut entries) = format::read_container(path)?;
+/// Parse + harden the CBQS header (shared by [`load`] and [`inspect`]).
+/// Header numerics drive allocations (Vec::with_capacity, Tensor::zeros)
+/// before any entry is cross-checked, so they are bounded here: a crafted
+/// file with a valid CRC must produce an error, not an allocation abort.
+fn parse_meta(header: &Value) -> Result<SnapshotMeta> {
     ensure!(
         header.get("format")?.as_str()? == "CBQS",
         "header format field is not CBQS"
     );
     let cfg = ModelCfg::from_json(header.get("cfg")?)?;
-    // header numerics drive allocations (Vec::with_capacity, Tensor::zeros)
-    // before any entry is cross-checked, so bound them here: a crafted file
-    // with a valid CRC must produce an error, not an allocation abort.
     for (field, v, cap) in [
         ("n_layers", cfg.n_layers, 1usize << 10),
         ("d_model", cfg.d_model, 1 << 17),
@@ -228,6 +227,14 @@ pub fn load(path: impl AsRef<Path>) -> Result<Snapshot> {
     let bits = BitSpec::from_json(header.get("bits")?)?;
     let rounding = RoundingMode::from_name(header.get("rounding")?.as_str()?)?;
     let label = header.get("label")?.as_str()?.to_string();
+    Ok(SnapshotMeta { cfg, bits, rounding, label })
+}
+
+/// Load a snapshot, reconstructing the bit-exact [`QuantizedModel`].
+pub fn load(path: impl AsRef<Path>) -> Result<Snapshot> {
+    let (header, mut entries) = format::read_container(path)?;
+    let meta = parse_meta(&header)?;
+    let SnapshotMeta { cfg, bits, rounding, label } = meta;
 
     let d = cfg.d_model;
     let embed = take_f32(&mut entries, "embed", Some(&[cfg.vocab, d]))?;
@@ -310,6 +317,93 @@ pub fn load(path: impl AsRef<Path>) -> Result<Snapshot> {
         rounding,
     };
     Ok(Snapshot { meta: SnapshotMeta { cfg, bits, rounding, label }, model })
+}
+
+/// One entry's metadata as reported by [`inspect`].
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    /// "f32" or "packed"
+    pub dtype: &'static str,
+    /// storage bits per element (32 for f32, 2/4/8 for packed codes)
+    pub bits: u8,
+    pub dims: Vec<usize>,
+    /// payload bytes on disk
+    pub bytes: usize,
+}
+
+/// Header + per-tensor summary of a CBQS file, without reconstructing the
+/// model (the `cbq snapshot-info` inspector).
+#[derive(Clone, Debug)]
+pub struct SnapshotInfo {
+    pub meta: SnapshotMeta,
+    pub version: u32,
+    pub file_bytes: u64,
+    pub tensors: Vec<TensorInfo>,
+    pub packed_code_bytes: u64,
+    pub f32_bytes: u64,
+    /// `inspect` only returns when the container CRC verified, so this is
+    /// always true on success — carried for report serialization.
+    pub checksum_ok: bool,
+}
+
+impl SnapshotInfo {
+    /// (bits, tensor count, payload bytes) aggregated over packed tensors.
+    pub fn packed_by_bits(&self) -> Vec<(u8, usize, u64)> {
+        let mut agg: BTreeMap<u8, (usize, u64)> = BTreeMap::new();
+        for t in self.tensors.iter().filter(|t| t.dtype == "packed") {
+            let e = agg.entry(t.bits).or_insert((0, 0));
+            e.0 += 1;
+            e.1 += t.bytes as u64;
+        }
+        agg.into_iter().map(|(bits, (n, bytes))| (bits, n, bytes)).collect()
+    }
+}
+
+/// Read a snapshot's header and entry metadata (CRC-validated) without
+/// dequantizing anything.
+pub fn inspect(path: impl AsRef<Path>) -> Result<SnapshotInfo> {
+    let file_bytes = std::fs::metadata(path.as_ref())
+        .map(|m| m.len())
+        .unwrap_or(0);
+    let (header, entries) = format::read_container(path)?;
+    let meta = parse_meta(&header)?;
+    let version = header.get("version")?.as_usize()? as u32;
+    let mut tensors = Vec::with_capacity(entries.len());
+    let mut packed_code_bytes = 0u64;
+    let mut f32_bytes = 0u64;
+    for (name, e) in &entries {
+        let info = match e {
+            Entry::F32(t) => TensorInfo {
+                name: name.clone(),
+                dtype: "f32",
+                bits: 32,
+                dims: t.dims.clone(),
+                bytes: 4 * t.len(),
+            },
+            Entry::Packed(p) => TensorInfo {
+                name: name.clone(),
+                dtype: "packed",
+                bits: p.bits,
+                dims: p.dims.clone(),
+                bytes: p.data.len(),
+            },
+        };
+        match info.dtype {
+            "packed" => packed_code_bytes += info.bytes as u64,
+            _ => f32_bytes += info.bytes as u64,
+        }
+        tensors.push(info);
+    }
+    Ok(SnapshotInfo {
+        meta,
+        version,
+        file_bytes,
+        tensors,
+        packed_code_bytes,
+        f32_bytes,
+        checksum_ok: true,
+    })
 }
 
 /// Compare a snapshot's config fingerprint against the artifacts' config.

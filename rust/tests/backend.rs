@@ -1,0 +1,358 @@
+//! Native-backend parity and gradient tests over synthetic artifacts:
+//! window-chain composition, bit-determinism, lm_eval vs a test-local
+//! reference, `win_grad_*` gradients against finite differences on the
+//! smooth (LoRA) path, and an export -> registry -> serve-engine pass.
+//!
+//! Everything here is host-only: `cbq synth` artifacts + the native CPU
+//! backend, no PJRT and no HLO artifacts.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::OnceLock;
+
+use cbq::calib;
+use cbq::config::{BitSpec, QuantJob, RoundingMode};
+use cbq::coordinator::qstate::Adam;
+use cbq::coordinator::Pipeline;
+use cbq::runtime::{synth, Artifacts, Backend, Bindings, NativeBackend};
+use cbq::serve::{batcher, Batcher, ModelRegistry, ServeEngine};
+use cbq::tensor::Tensor;
+
+fn artifacts_dir() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("cbq_synth_backend_{}", std::process::id()));
+        let mut spec = synth::SynthSpec::tiny();
+        // gradient tests don't need a well-trained model; keep setup fast
+        spec.pretrain_steps = 60;
+        synth::generate(&dir, &spec).expect("synthetic artifact generation");
+        dir
+    })
+}
+
+fn setup() -> (Artifacts, NativeBackend) {
+    let art = Artifacts::load(artifacts_dir()).expect("loading artifacts");
+    let rt = NativeBackend::new(&art).expect("native backend");
+    (art, rt)
+}
+
+/// Deterministic pseudo-random fill for test tensors.
+fn fill(t: &mut Tensor, seed: u64, scale: f32) {
+    let mut rng = cbq::calib::corpus::XorShift64Star::new(seed);
+    for v in t.data.iter_mut() {
+        let u = (rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        *v = (u - 0.5) * 2.0 * scale;
+    }
+}
+
+/// Bindings for a window executable over blocks `[0, w)` of the FP model.
+fn window_bindings(
+    pipe: &Pipeline,
+    qs: &[BTreeMap<String, cbq::coordinator::LinearQ>],
+    w: usize,
+    h_in: &Tensor,
+    target: &Tensor,
+    qmax_a: f32,
+    w_en: f32,
+    a_en: f32,
+    use_lora: f32,
+    gamma_c: f32,
+) -> Bindings {
+    let mut b = Bindings::new();
+    b.set("h_in", h_in.clone());
+    b.set("target", target.clone());
+    for j in 0..w {
+        Pipeline::bind_block_weights(&mut b, j, &pipe.fp.blocks[j]);
+        Pipeline::bind_qblock(&mut b, j, &qs[j], qmax_a, w_en, a_en, false);
+    }
+    Pipeline::bind_globals(&mut b, use_lora, 2.0, gamma_c, 1.0, 1.0);
+    b
+}
+
+fn embed_batch(pipe: &Pipeline) -> Tensor {
+    let batch = &calib::calibration(pipe.cfg.batch, pipe.cfg.batch, pipe.cfg.seq)[0];
+    pipe.fp.embed_tokens(&batch.inputs().data, pipe.cfg.batch, pipe.cfg.seq)
+}
+
+#[test]
+fn window_chain_composes_bitwise() {
+    // win_fwd_w2 must equal two win_fwd_w1 dispatches bit-for-bit: the
+    // native interpreter runs the identical arithmetic either way
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let qs = pipe.init_qstate(&pipe.fp, &BitSpec::w4a16(), 5, RoundingMode::Lora);
+    let h0 = embed_batch(&pipe);
+    let zeros = Tensor::zeros(&h0.dims);
+
+    let b2 = window_bindings(&pipe, &qs, 2, &h0, &zeros, 32767.0, 1.0, 0.0, 1.0, 0.0);
+    let out2 = rt.run(&format!("win_fwd_w2_{m}"), b2.inner()).unwrap();
+
+    let b1a = window_bindings(&pipe, &qs[0..1], 1, &h0, &zeros, 32767.0, 1.0, 0.0, 1.0, 0.0);
+    let mid = rt.run(&format!("win_fwd_w1_{m}"), b1a.inner()).unwrap()["h_out"].clone();
+    let mut b1b = Bindings::new();
+    b1b.set("h_in", mid);
+    b1b.set("target", zeros.clone());
+    Pipeline::bind_block_weights(&mut b1b, 0, &pipe.fp.blocks[1]);
+    Pipeline::bind_qblock(&mut b1b, 0, &qs[1], 32767.0, 1.0, 0.0, false);
+    Pipeline::bind_globals(&mut b1b, 1.0, 2.0, 0.0, 1.0, 1.0);
+    let fin = rt.run(&format!("win_fwd_w1_{m}"), b1b.inner()).unwrap();
+
+    assert_eq!(out2["h_out"].dims, fin["h_out"].dims);
+    for (a, b) in out2["h_out"].data.iter().zip(&fin["h_out"].data) {
+        assert_eq!(a, b, "w2 chain != w1+w1 chain");
+    }
+}
+
+#[test]
+fn forward_is_deterministic_across_runs() {
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let qs = pipe.init_qstate(&pipe.fp, &BitSpec::w4a4(), 5, RoundingMode::Lora);
+    let h0 = embed_batch(&pipe);
+    let zeros = Tensor::zeros(&h0.dims);
+    let b = window_bindings(&pipe, &qs, 2, &h0, &zeros, 7.0, 1.0, 1.0, 1.0, 0.01);
+    let exec = format!("win_fwd_w2_{m}");
+    let o1 = rt.run(&exec, b.inner()).unwrap();
+    let o2 = rt.run(&exec, b.inner()).unwrap();
+    assert_eq!(o1["h_out"].data, o2["h_out"].data, "thread pool broke determinism");
+    assert_eq!(o1["loss"].item(), o2["loss"].item());
+}
+
+#[test]
+fn lm_eval_matches_reference_computation() {
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let (bsz, seq, d, vocab) =
+        (pipe.cfg.batch, pipe.cfg.seq, pipe.cfg.d_model, pipe.cfg.vocab);
+    let mut h = Tensor::zeros(&[bsz, seq, d]);
+    fill(&mut h, 11, 0.8);
+    let batch = &calib::eval_stream(calib::corpus::Style::C4, 1, bsz, seq)[0];
+    let targets = batch.targets();
+    let mask = Tensor::full(&[bsz, seq], 1.0);
+
+    let mut b = Bindings::new();
+    b.set("h", h.clone());
+    b.set("final_norm", pipe.fp.final_norm.clone());
+    b.set("head", pipe.fp.head.clone());
+    b.set_i32("targets", targets.clone());
+    b.set("mask", mask.clone());
+    let out = rt.run(&format!("lm_eval_{m}"), b.inner()).unwrap();
+
+    // reference: plain rmsnorm + matmul + log-softmax in f64
+    let g = &pipe.fp.final_norm.data;
+    let head = &pipe.fp.head;
+    for bi in 0..bsz {
+        let mut want_nll = 0.0f64;
+        for si in 0..seq {
+            let row = &h.data[(bi * seq + si) * d..(bi * seq + si + 1) * d];
+            let ms: f64 =
+                row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64 + 1e-5;
+            let r = 1.0 / ms.sqrt();
+            let hn: Vec<f64> =
+                row.iter().zip(g).map(|(&v, &gv)| v as f64 * r * gv as f64).collect();
+            let mut logits = vec![0.0f64; vocab];
+            for (k, &hv) in hn.iter().enumerate() {
+                for (j, lv) in logits.iter_mut().enumerate() {
+                    *lv += hv * head.at2(k, j) as f64;
+                }
+            }
+            let mx = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lse = logits.iter().map(|&v| (v - mx).exp()).sum::<f64>().ln() + mx;
+            let t = targets.data[bi * seq + si] as usize;
+            want_nll += -(logits[t] - lse);
+        }
+        let got = out["nll"].data[bi] as f64;
+        assert!(
+            (got - want_nll).abs() < 2e-2 * (1.0 + want_nll.abs()),
+            "nll[{bi}]: native {got} vs reference {want_nll}"
+        );
+        assert_eq!(out["count"].data[bi], seq as f32);
+    }
+}
+
+#[test]
+fn capture_exposes_every_linear_input() {
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let qs = pipe.init_qstate(&pipe.fp, &BitSpec::w4a16(), 5, RoundingMode::Nearest);
+    let h0 = embed_batch(&pipe);
+    let zeros = Tensor::zeros(&h0.dims);
+    let b = window_bindings(&pipe, &qs, 1, &h0, &zeros, 32767.0, 0.0, 0.0, 0.0, 0.0);
+    let out = rt.run(&format!("capture_{m}"), b.inner()).unwrap();
+    let rows = pipe.cfg.batch * pipe.cfg.seq;
+    for l in cbq::quant::LINEARS {
+        let (fan_in, _) = pipe.cfg.linear_shape(l);
+        let c = &out[&format!("captures.{l}")];
+        assert_eq!(c.dims, vec![rows, fan_in], "capture {l}");
+        assert!(c.data.iter().all(|v| v.is_finite()), "capture {l} not finite");
+    }
+    // wq and wk read the same post-norm hidden: identical captures
+    assert_eq!(out["captures.wq"].data, out["captures.wk"].data);
+}
+
+/// Directional finite-difference check of the LoRA-path gradients: with
+/// w_en=1, a_en=0, use_lora=1, gamma_c=0 the win_grad loss is locally
+/// smooth in A2 (floor() is locally constant, rho moves continuously), so
+/// (L(a2 + eps d) - L(a2 - eps d)) / 2eps must match <dL/da2, d>.
+#[test]
+fn win_grad_matches_finite_difference_on_lora_path() {
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let mut qs = pipe.init_qstate(&pipe.fp, &BitSpec::w4a16(), 5, RoundingMode::Lora);
+    // enlarge the LoRA factors so the directional derivative is well above
+    // f32 loss noise (init has a2 = 0 and a1 ~ 1e-2)
+    for lq in qs[0].values_mut() {
+        fill(&mut lq.a1, 21, 0.3);
+        fill(&mut lq.a2, 22, 0.3);
+    }
+    let h0 = embed_batch(&pipe);
+    let mut target = Tensor::zeros(&h0.dims);
+    fill(&mut target, 23, 0.5);
+
+    let exec_grad = format!("win_grad_w1_{m}");
+    let exec_fwd = format!("win_fwd_w1_{m}");
+    let b = window_bindings(&pipe, &qs[0..1], 1, &h0, &target, 32767.0, 1.0, 0.0, 1.0, 0.0);
+    let out = rt.run(&exec_grad, b.inner()).unwrap();
+
+    let loss_at = |qs_mod: &[BTreeMap<String, cbq::coordinator::LinearQ>]| -> f64 {
+        let b = window_bindings(&pipe, qs_mod, 1, &h0, &target, 32767.0, 1.0, 0.0, 1.0, 0.0);
+        rt.run(&exec_fwd, b.inner()).unwrap()["loss"].item() as f64
+    };
+    // gamma_c = 0: the win_grad loss equals the win_fwd reconstruction loss
+    let base = loss_at(&qs[0..1]);
+    assert!(
+        (base - out["loss"].item() as f64).abs() < 1e-5 * (1.0 + base.abs()),
+        "win_fwd loss {base} != win_grad loss {}",
+        out["loss"].item()
+    );
+
+    let eps = 1e-2f32;
+    for l in ["wq", "wdown"] {
+        let g = &out[&format!("grads.0.{l}.a2")];
+        let mut dir = g.clone();
+        fill(&mut dir, 31, 1.0);
+        let analytic: f64 =
+            g.data.iter().zip(&dir.data).map(|(&a, &b)| (a * b) as f64).sum();
+        let mut qs_p = qs.clone();
+        let mut qs_m = qs.clone();
+        {
+            let a2 = &mut qs_p[0].get_mut(l).unwrap().a2;
+            for (v, &d) in a2.data.iter_mut().zip(&dir.data) {
+                *v += eps * d;
+            }
+            let a2 = &mut qs_m[0].get_mut(l).unwrap().a2;
+            for (v, &d) in a2.data.iter_mut().zip(&dir.data) {
+                *v -= eps * d;
+            }
+        }
+        let fd = (loss_at(&qs_p[0..1]) - loss_at(&qs_m[0..1])) / (2.0 * eps as f64);
+        assert!(
+            (fd - analytic).abs() < 0.15 * fd.abs().max(analytic.abs()) + 1e-4,
+            "{l}: directional FD {fd} vs analytic {analytic}"
+        );
+    }
+}
+
+#[test]
+fn win_grad_descends_reconstruction_loss() {
+    // Adam on (a1, a2) with the native gradients must reduce the W2
+    // reconstruction loss of a window against the FP target
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let mut qs = pipe.init_qstate(&pipe.fp, &BitSpec::w2a16(), 5, RoundingMode::Lora);
+    let h0 = embed_batch(&pipe);
+    // FP target: the same block with quantization disabled
+    let bf = window_bindings(&pipe, &qs[0..1], 1, &h0, &Tensor::zeros(&h0.dims), 32767.0, 0.0, 0.0, 0.0, 0.0);
+    let target = rt.run(&format!("win_fwd_w1_{m}"), bf.inner()).unwrap()["h_out"].clone();
+
+    let exec = format!("win_grad_w1_{m}");
+    let mut adams: BTreeMap<String, (Adam, Adam)> = qs[0]
+        .iter()
+        .map(|(l, lq)| (l.clone(), (Adam::new(lq.a1.len()), Adam::new(lq.a2.len()))))
+        .collect();
+    let mut losses = Vec::new();
+    for _ in 0..25 {
+        let b = window_bindings(&pipe, &qs[0..1], 1, &h0, &target, 32767.0, 1.0, 0.0, 1.0, 0.0);
+        let out = rt.run(&exec, b.inner()).unwrap();
+        losses.push(out["loss"].item());
+        for l in cbq::quant::LINEARS {
+            let g1 = &out[&format!("grads.0.{l}.a1")];
+            let g2 = &out[&format!("grads.0.{l}.a2")];
+            let lq = qs[0].get_mut(l).unwrap();
+            let (a1_opt, a2_opt) = adams.get_mut(l).unwrap();
+            a1_opt.step(&mut lq.a1.data, &g1.data, 1e-2);
+            a2_opt.step(&mut lq.a2.data, &g2.data, 1e-2);
+        }
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "losses: {losses:?}");
+    let (first, last) = (losses[0], *losses.last().unwrap());
+    assert!(
+        last < first,
+        "25 Adam steps on native win_grad gradients did not reduce the loss: {losses:?}"
+    );
+}
+
+#[test]
+fn export_load_serve_end_to_end_on_native() {
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let mut pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let mut job = QuantJob::rtn(BitSpec::new(4, 16));
+    job.calib_sequences = 4;
+    let (qm, _) = pipe.run(&job).unwrap();
+
+    let path = std::env::temp_dir().join(format!("cbq_backend_e2e_{}.cbqs", std::process::id()));
+    snapshot_roundtrip(&art, &rt, &pipe, &qm, &path, &m);
+    std::fs::remove_file(&path).ok();
+}
+
+fn snapshot_roundtrip(
+    art: &Artifacts,
+    rt: &NativeBackend,
+    pipe: &Pipeline,
+    qm: &cbq::coordinator::QuantizedModel,
+    path: &std::path::Path,
+    model: &str,
+) {
+    cbq::snapshot::save(path, &pipe.cfg, qm).unwrap();
+
+    // inspector: header + per-bits accounting agree with the spec
+    let info = cbq::snapshot::inspect(path).unwrap();
+    assert!(info.checksum_ok);
+    assert_eq!(info.meta.cfg.name, model);
+    let by_bits = info.packed_by_bits();
+    assert_eq!(by_bits.len(), 1, "uniform W4 model: one packed bit width");
+    assert_eq!(by_bits[0].0, 4);
+    assert_eq!(by_bits[0].1, pipe.cfg.n_layers * cbq::quant::LINEARS.len());
+    assert!(info.packed_code_bytes > 0 && info.file_bytes > 0);
+
+    // registry + serve engine + batcher over the native backend
+    let mut reg = ModelRegistry::new();
+    let snap: Rc<_> = reg.load("e2e", path).unwrap();
+    let mut engine = ServeEngine::new(rt, art, snap).unwrap();
+    let requests = batcher::standard_mix(pipe.cfg.seq, 6, 2, 2);
+    let (resp, stats) = Batcher::coalescing(&engine).run(&mut engine, &requests).unwrap();
+    assert_eq!(resp.len(), requests.len());
+    assert!(stats.tokens > 0 && stats.tokens_per_s() > 0.0, "no throughput measured");
+    for r in &resp {
+        if let Some(p) = r.perplexity() {
+            assert!(p.is_finite() && p > 1.0, "served ppl {p}");
+        }
+    }
+    // bounded admission on the same engine: overload is rejected, visible
+    let (resp_cap, stats_cap) = Batcher::coalescing(&engine)
+        .with_queue_cap(3)
+        .run(&mut engine, &requests)
+        .unwrap();
+    assert!(stats_cap.rejected > 0);
+    assert_eq!(resp_cap.len(), requests.len());
+}

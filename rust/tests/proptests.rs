@@ -335,3 +335,65 @@ fn prop_v0_roundtrip() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// packed-tensor invariants (snapshot store)
+// ---------------------------------------------------------------------------
+
+/// Randomized 2/4/8-bit pack -> unpack round trips: every in-range code
+/// survives exactly, payload size matches the analytic bit count, and
+/// out-of-range codes are rejected.
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    use cbq::tensor::io::PackedTensor;
+    for seed in 0..300u64 {
+        let mut g = Gen::new(seed + 40000);
+        let bits = [2u8, 4, 8][g.usize_in(0, 2)];
+        let half = 1i32 << (bits - 1);
+        let (k, n) = (g.usize_in(1, 23), g.usize_in(1, 17));
+        let codes: Vec<i32> = (0..k * n)
+            .map(|_| g.0.next_below(2 * half as u64) as i32 - half)
+            .collect();
+        let p = PackedTensor::pack(&codes, vec![k, n], bits)
+            .unwrap_or_else(|e| panic!("seed {seed}: pack failed: {e}"));
+        assert_eq!(
+            p.data.len(),
+            (k * n * bits as usize).div_ceil(8),
+            "seed {seed}: payload size"
+        );
+        assert_eq!(p.unpack(), codes, "seed {seed}: bits {bits} round trip");
+
+        // boundary codes are exact
+        let edge = vec![-half, half - 1, 0, -half, half - 1];
+        let pe = PackedTensor::pack(&edge, vec![5], bits).unwrap();
+        assert_eq!(pe.unpack(), edge, "seed {seed}: boundary codes");
+
+        // out-of-range rejected in both directions
+        assert!(PackedTensor::pack(&[half], vec![1], bits).is_err());
+        assert!(PackedTensor::pack(&[-half - 1], vec![1], bits).is_err());
+    }
+}
+
+/// Packed entries survive the shared entry codec byte-exactly for every
+/// supported bit width (the CBQS on-disk path).
+#[test]
+fn prop_packed_entry_codec_roundtrip() {
+    use cbq::tensor::io::{read_entry, write_entry, ByteReader, Entry, PackedTensor};
+    for seed in 0..100u64 {
+        let mut g = Gen::new(seed + 50000);
+        let bits = [2u8, 4, 8][g.usize_in(0, 2)];
+        let half = 1i32 << (bits - 1);
+        let count = g.usize_in(1, 257);
+        let codes: Vec<i32> = (0..count)
+            .map(|_| g.0.next_below(2 * half as u64) as i32 - half)
+            .collect();
+        let p = PackedTensor::pack(&codes, vec![count], bits).unwrap();
+        let mut buf = Vec::new();
+        write_entry(&mut buf, "codes", &Entry::Packed(p.clone())).unwrap();
+        let mut r = ByteReader::new(&buf);
+        let (name, back) = read_entry(&mut r).unwrap();
+        assert_eq!(name, "codes");
+        assert_eq!(back, Entry::Packed(p), "seed {seed}");
+        assert!(r.is_done());
+    }
+}
