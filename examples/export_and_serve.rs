@@ -46,18 +46,22 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(ppl_mem, ppl_disk, "snapshot round-trip must be bit-exact");
 
     // --- serve forever ----------------------------------------------------
-    let mut engine = ServeEngine::new(rt, &art, snap.clone())?;
+    let engine = ServeEngine::new(rt, &art, snap.clone())?;
     let requests = batcher::standard_mix(snap.meta.cfg.seq, 16, 4, 4);
     engine.execute(&requests[0].rows[..1])?; // warm-up
 
-    let (_, batched) = Batcher::coalescing(&engine).run(&mut engine, &requests)?;
-    let (_, oneby) = Batcher::sequential().run(&mut engine, &requests)?;
+    let (_, batched) = Batcher::coalescing(&engine).run(&engine, &requests)?;
+    let (_, concurrent) =
+        Batcher::coalescing(&engine).with_dispatch(4).run(&engine, &requests)?;
+    let (_, oneby) = Batcher::sequential().run(&engine, &requests)?;
 
     let mut t = Table::new(
         format!("serving {} requests (quantized in {:.1}s)", requests.len(), summary.quant_seconds),
         &["mode", "dispatches", "occupancy", "tok/s"],
     );
-    for (mode, s) in [("batched", &batched), ("one-by-one", &oneby)] {
+    for (mode, s) in
+        [("batched", &batched), ("batched x4", &concurrent), ("one-by-one", &oneby)]
+    {
         t.row(&[
             mode.into(),
             s.dispatches.to_string(),

@@ -7,8 +7,15 @@
 //!   * full-upload vs pinned-weight execution (weights as persistent device
 //!     buffers; only learnable tensors re-uploaded per step)
 //!   * quantized-eval throughput (tokens/s through the block chain + head)
+//!   * matmul GFLOP/s at {256, 512, 1024}, naive row-parallel vs the
+//!     blocked/packed-panel kernels (the before/after of the PR 3 refactor;
+//!     `CBQ_NAIVE_KERNELS=1` forces the naive path process-wide)
+//!   * serve-bench tokens/s over a snapshot (pool + pinned windows), at
+//!     `CBQ_BENCH_DISPATCH` concurrency
 //!
-//! Results recorded in EXPERIMENTS.md §Perf.
+//! Besides the human-readable tables, writes a machine-readable
+//! `BENCH_native.json` (path override: `CBQ_BENCH_JSON`) so the perf
+//! trajectory has data points — CI's perf-smoke job asserts on it.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -16,8 +23,11 @@ use std::time::Instant;
 use cbq::calib::{self, corpus::Style};
 use cbq::config::{BitSpec, QuantJob, RoundingMode};
 use cbq::coordinator::Pipeline;
+use cbq::json::{self, Value as J};
 use cbq::report::{fmt_f, Table};
+use cbq::runtime::backend::kernels;
 use cbq::runtime::{self, Artifacts, Backend as _, Bindings, Value};
+use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor as _, ServeEngine};
 use cbq::tensor::Tensor;
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
@@ -127,9 +137,78 @@ fn main() {
             pipe2.lm_nll(&qm, &b.inputs(), &b.targets(), &mask).unwrap();
         }
     }) / eval_batches.len() as f64;
+    let eval_tokens_per_s = toks_per_batch / per_batch;
     let mut t = Table::new("quantized eval throughput", &["metric", "value"]);
     t.row(&["batch latency (ms)".into(), fmt_f(per_batch * 1e3, 2)]);
-    t.row(&["tokens/s".into(), fmt_f(toks_per_batch / per_batch, 0)]);
+    t.row(&["tokens/s".into(), fmt_f(eval_tokens_per_s, 0)]);
+    t.print();
+
+    // ---- matmul kernels: naive vs blocked, GFLOP/s ------------------------
+    // the before/after of the blocked-kernel refactor; each size runs both
+    // implementations on identical inputs (bitwise-equal outputs by design)
+    let mut mm_rows = Vec::new();
+    let mut t = Table::new(
+        "matmul GFLOP/s (naive row-parallel vs blocked/packed)",
+        &["size", "naive", "blocked", "speedup"],
+    );
+    for size in [256usize, 512, 1024] {
+        let a: Vec<f32> = (0..size * size).map(|i| ((i as f32) * 0.61).sin()).collect();
+        let b: Vec<f32> = (0..size * size).map(|i| ((i as f32) * 0.37).cos()).collect();
+        let flops = 2.0 * (size as f64).powi(3);
+        let reps = if size >= 1024 { 2 } else { 4 };
+        let t_naive = time_n(reps, || {
+            std::hint::black_box(kernels::matmul_naive(&a, size, size, &b, size));
+        });
+        let t_blocked = time_n(reps, || {
+            std::hint::black_box(kernels::matmul(&a, size, size, &b, size));
+        });
+        let (g_naive, g_blocked) = (flops / t_naive / 1e9, flops / t_blocked / 1e9);
+        t.row(&[
+            size.to_string(),
+            fmt_f(g_naive, 2),
+            fmt_f(g_blocked, 2),
+            format!("{:.2}x", t_naive / t_blocked),
+        ]);
+        mm_rows.push(J::obj(vec![
+            ("size", J::num(size as f64)),
+            ("naive_gflops", J::num(g_naive)),
+            ("blocked_gflops", J::num(g_blocked)),
+            ("speedup", J::num(t_naive / t_blocked)),
+        ]));
+    }
+    t.print();
+
+    // ---- serve-bench over a snapshot (pinned windows + worker pool) -------
+    let dispatch: usize = std::env::var("CBQ_BENCH_DISPATCH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let snap_path = std::env::temp_dir().join(format!("cbq_perf_bench_{}.cbqs", std::process::id()));
+    cbq::snapshot::save(&snap_path, &pipe2.cfg, &qm).unwrap();
+    let mut reg = ModelRegistry::new();
+    let snap = reg.load("bench", &snap_path).unwrap();
+    let engine = ServeEngine::new(rt, &art, snap).unwrap();
+    let requests = batcher::standard_mix(cfg.seq, 24, 6, 4);
+    engine.execute(&requests[0].rows[..1]).unwrap(); // warm-up
+    let (_, st_serial) = Batcher::coalescing(&engine).run(&engine, &requests).unwrap();
+    let (_, st_par) = Batcher::coalescing(&engine)
+        .with_dispatch(dispatch)
+        .run(&engine, &requests)
+        .unwrap();
+    std::fs::remove_file(&snap_path).ok();
+    let mut t = Table::new(
+        format!("serve-bench ({} requests, dispatch {dispatch})", requests.len()),
+        &["mode", "tok/s", "occupancy", "in-flight", "wall"],
+    );
+    for (mode, st) in [("serial", &st_serial), ("concurrent", &st_par)] {
+        t.row(&[
+            mode.into(),
+            fmt_f(st.tokens_per_s(), 0),
+            format!("{:.1}%", st.occupancy() * 100.0),
+            format!("{}/{}", st.peak_in_flight, st.dispatch_lanes),
+            format!("{:.2}s", st.wall_seconds),
+        ]);
+    }
     t.print();
 
     let stats = rt.stats();
@@ -139,4 +218,34 @@ fn main() {
         stats.execute_ms,
         stats.upload_bytes as f64 / (1024.0 * 1024.0)
     );
+
+    // ---- machine-readable record ------------------------------------------
+    let out_path =
+        std::env::var("CBQ_BENCH_JSON").unwrap_or_else(|_| "BENCH_native.json".to_string());
+    let doc = J::obj(vec![
+        ("bench", J::str("perf_runtime")),
+        ("model", J::str(model.clone())),
+        ("backend", J::str(rt.name())),
+        ("threads", J::num(kernels::num_threads() as f64)),
+        (
+            "naive_kernels_forced",
+            J::Bool(std::env::var("CBQ_NAIVE_KERNELS").map(|v| v == "1").unwrap_or(false)),
+        ),
+        ("matmul", J::arr(mm_rows)),
+        ("eval_tokens_per_s", J::num(eval_tokens_per_s)),
+        (
+            "serve",
+            J::obj(vec![
+                ("requests", J::num(requests.len() as f64)),
+                ("dispatch", J::num(dispatch as f64)),
+                ("serial_tokens_per_s", J::num(st_serial.tokens_per_s())),
+                ("concurrent_tokens_per_s", J::num(st_par.tokens_per_s())),
+                ("occupancy", J::num(st_par.occupancy())),
+                ("peak_in_flight", J::num(st_par.peak_in_flight as f64)),
+                ("lane_occupancy", J::num(st_par.lane_occupancy())),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, json::dump(&doc)).unwrap();
+    println!("wrote {out_path}");
 }

@@ -72,7 +72,7 @@ impl<'a> Pipeline<'a> {
         b.set_i32("targets", targets.clone());
         b.set("mask", mask.clone());
         let out = self.rt.run(&format!("lm_eval_{}", self.cfg_name), b.inner())?;
-        Ok((out["nll"].data.clone(), out["count"].data.clone()))
+        Ok((out["nll"].data.to_vec(), out["count"].data.to_vec()))
     }
 
     /// Perplexity over `n_batches` held-out batches of `style`.

@@ -52,11 +52,12 @@
 //! let rt = cbq::runtime::create_selected(&art, None)?;
 //! let mut reg = ModelRegistry::new();
 //! let snap = reg.load("w4a4", "model_w4a4.cbqs")?;
-//! let mut engine = ServeEngine::new(rt.as_ref(), &art, snap)?;
+//! let engine = ServeEngine::new(rt.as_ref(), &art, snap)?;
 //! let requests = cbq::serve::batcher::standard_mix(32, 32, 8, 8);
 //! let (responses, stats) = Batcher::coalescing(&engine)
 //!     .with_queue_cap(256) // bounded admission: overload is rejected, not queued
-//!     .run(&mut engine, &requests)?;
+//!     .with_dispatch(4)    // up to 4 window batches in flight at once
+//!     .run(&engine, &requests)?;
 //! println!("{:.0} tok/s at {:.0}% occupancy, {} rejected",
 //!          stats.tokens_per_s(), stats.occupancy() * 100.0, stats.rejected);
 //! # Ok::<(), anyhow::Error>(())

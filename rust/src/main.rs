@@ -73,10 +73,12 @@ COMMANDS
             fingerprint check against the artifacts config when available
   serve-bench --snapshot snap.cbqs [--ppl-requests 32]
             [--choice-requests 8] [--hidden-requests 8] [--queue-cap 0]
-            [--json out.json]
+            [--dispatch 1] [--json out.json]
             batched vs one-by-one serving throughput over a request mix;
-            --queue-cap bounds the admission queue in rows (0 = unlimited),
-            overflow requests are rejected and counted
+            --queue-cap bounds the admission queue in rows (0 = unlimited,
+            overflow requests are rejected and counted); --dispatch N
+            executes up to N window batches concurrently (CBQ_THREADS
+            sizes the shared kernel worker pool)
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
 ";
@@ -144,6 +146,8 @@ fn serve_stats_row(t: &mut Table, mode: &str, s: &ServeStats) {
         fmt_f(s.tokens_per_s(), 0),
         fmt_f(s.requests_per_s(), 1),
         s.rejected.to_string(),
+        format!("{}/{}", s.peak_in_flight, s.dispatch_lanes),
+        format!("{:.0}%", s.lane_occupancy() * 100.0),
         format!("{:.2}s", s.wall_seconds),
     ]);
 }
@@ -159,6 +163,10 @@ fn serve_stats_json(s: &ServeStats) -> Value {
         ("requests_per_s", Value::num(s.requests_per_s())),
         ("rejected", Value::num(s.rejected as f64)),
         ("wall_seconds", Value::num(s.wall_seconds)),
+        ("dispatch_lanes", Value::num(s.dispatch_lanes as f64)),
+        ("peak_in_flight", Value::num(s.peak_in_flight as f64)),
+        ("lane_busy_seconds", Value::num(s.lane_busy_seconds)),
+        ("lane_occupancy", Value::num(s.lane_occupancy())),
     ])
 }
 
@@ -488,6 +496,7 @@ fn main() -> Result<()> {
             let n_choice = args.get_usize("choice-requests", 8)?;
             let n_hidden = args.get_usize("hidden-requests", 8)?;
             let queue_cap = args.get_usize("queue-cap", 0)?;
+            let dispatch = args.get_usize("dispatch", 1)?.max(1);
             let requests = batcher::standard_mix(seq, n_ppl, n_choice, n_hidden);
             anyhow::ensure!(!requests.is_empty(), "request mix is empty — raise --ppl-requests");
             println!(
@@ -500,24 +509,31 @@ fn main() -> Result<()> {
                 rt.name()
             );
 
-            let mut engine = ServeEngine::new(rt, &art, snap.clone())?;
+            let engine = ServeEngine::new(rt, &art, snap.clone())?;
             // warm-up dispatch so neither timed run pays first-call costs
             engine.execute(&requests[0].rows[..1])?;
 
             let (resp_b, stats_b) = Batcher::coalescing(&engine)
                 .with_queue_cap(queue_cap)
-                .run(&mut engine, &requests)?;
+                .with_dispatch(dispatch)
+                .run(&engine, &requests)?;
             let (resp_s, stats_s) = Batcher::sequential()
                 .with_queue_cap(queue_cap)
-                .run(&mut engine, &requests)?;
+                .run(&engine, &requests)?;
 
             // both schedules must produce identical answers (full structural
             // compare: ppl sums, choice picks + scores, hidden token counts)
             let agree = resp_b == resp_s;
 
             let mut t = Table::new(
-                format!("serve-bench ({} window dispatches/forward)", engine.plan_len()),
-                &["mode", "dispatches", "occupancy", "tok/s", "req/s", "rejected", "wall"],
+                format!(
+                    "serve-bench ({} window dispatches/forward, --dispatch {dispatch})",
+                    engine.plan_len()
+                ),
+                &[
+                    "mode", "dispatches", "occupancy", "tok/s", "req/s", "rejected",
+                    "in-flight", "lane-occ", "wall",
+                ],
             );
             serve_stats_row(&mut t, "batched", &stats_b);
             serve_stats_row(&mut t, "one-by-one", &stats_s);
@@ -537,6 +553,7 @@ fn main() -> Result<()> {
                     ("backend", Value::str(rt.name())),
                     ("requests", Value::num(requests.len() as f64)),
                     ("queue_cap", Value::num(queue_cap as f64)),
+                    ("dispatch", Value::num(dispatch as f64)),
                     ("batched", serve_stats_json(&stats_b)),
                     ("sequential", serve_stats_json(&stats_s)),
                     ("speedup_tokens_per_s", Value::num(speedup)),

@@ -11,38 +11,32 @@
 //! * weights: STE pass-through, per-channel LSQ gradient for `s_w`, and
 //!   `drho = g * s * Z` flowing into the LoRA factors.
 //!
-//! Parallelism: a `std::thread::scope`d pool (no crates.io in this build
-//! environment) splits work across batch rows for the matmuls and across
-//! `(batch, head)` pairs for attention. Every output row/head is written by
-//! exactly one thread and reduced sequentially within it, so results are
-//! bit-deterministic regardless of thread count.
+//! Parallelism: the persistent worker pool (`backend::pool`) splits work
+//! across batch rows for the matmuls and across `(batch, head)` pairs for
+//! attention. Every output row/head is written by exactly one task and
+//! reduced sequentially within it, so results are bit-deterministic
+//! regardless of thread count.
+//!
+//! Matmuls are cache-blocked: B is packed once per call into `NR`-wide
+//! column panels (contiguous per reduction step) and an `MR x NR`
+//! register-tiled micro-kernel accumulates each output tile with the
+//! reduction index ascending — the *same per-element accumulation order as
+//! the naive loops*, so blocked and naive kernels agree bit-for-bit on
+//! finite inputs (property-tested in `tests/proptests.rs`).
 
 use crate::quant::{rect_sigmoid, EPS, GAMMA, ZETA};
 
-// ---------------------------------------------------------------------------
-// scoped thread pool helpers
-// ---------------------------------------------------------------------------
+use super::pool;
 
-/// Worker thread count: `CBQ_THREADS` override, else available parallelism
-/// capped at 16 (diminishing returns for the small reproduction models).
-/// Resolved once per process — this sits on the hot path of every kernel,
-/// and both the env var and the core count are fixed for the run.
-pub fn num_threads() -> usize {
-    use std::sync::OnceLock;
-    static THREADS: OnceLock<usize> = OnceLock::new();
-    *THREADS.get_or_init(|| {
-        if let Ok(v) = std::env::var("CBQ_THREADS") {
-            if let Ok(n) = v.trim().parse::<usize>() {
-                return n.clamp(1, 64);
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
-    })
-}
+pub use super::pool::num_threads;
+
+// ---------------------------------------------------------------------------
+// pool-backed parallel helpers
+// ---------------------------------------------------------------------------
 
 /// Apply `f(row_index, row)` to every `row_len` chunk of `out`, splitting
-/// the rows across scoped threads. Falls back to the serial loop when the
-/// total work is too small to amortize thread spawns.
+/// the rows across the persistent worker pool. Falls back to the serial
+/// loop when the total work is too small to amortize dispatch.
 pub fn par_rows<F>(out: &mut [f32], row_len: usize, work_per_row: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -50,27 +44,32 @@ where
     assert!(row_len > 0 && out.len() % row_len == 0);
     let rows = out.len() / row_len;
     let threads = num_threads().min(rows.max(1));
-    // below ~64k flops total the spawn overhead dominates
+    // below ~64k flops total the dispatch overhead dominates
     if threads <= 1 || rows * work_per_row < 65_536 {
         for (i, row) in out.chunks_mut(row_len).enumerate() {
             f(i, row);
         }
         return;
     }
+    // fixed chunking (rows.div_ceil(threads) rows per task): the same
+    // scheme the scoped-thread implementation used, kept for determinism
     let per = rows.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, chunk) in out.chunks_mut(per * row_len).enumerate() {
-            let f = &f;
-            s.spawn(move || {
+    let fr = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(per * row_len)
+        .enumerate()
+        .map(|(ti, chunk)| {
+            Box::new(move || {
                 for (j, row) in chunk.chunks_mut(row_len).enumerate() {
-                    f(ti * per + j, row);
+                    fr(ti * per + j, row);
                 }
-            });
-        }
-    });
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::run_scoped(tasks);
 }
 
-/// Map `f` over `0..n` across scoped threads, collecting owned results in
+/// Map `f` over `0..n` on the worker pool, collecting owned results in
 /// index order (used for per-head attention work, where each item returns
 /// several buffers).
 pub fn par_map<T, F>(n: usize, min_serial: usize, f: F) -> Vec<T>
@@ -84,25 +83,203 @@ where
     }
     let per = n.div_ceil(threads);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    std::thread::scope(|s| {
-        for (ti, chunk) in out.chunks_mut(per).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (j, slot) in chunk.iter_mut().enumerate() {
-                    *slot = Some(f(ti * per + j));
-                }
-            });
-        }
-    });
+    {
+        let fr = &f;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(per)
+            .enumerate()
+            .map(|(ti, chunk)| {
+                Box::new(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = Some(fr(ti * per + j));
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_scoped(tasks);
+    }
     out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
 }
 
 // ---------------------------------------------------------------------------
-// dense matmuls (row-parallel)
+// dense matmuls — cache-blocked with packed-B panels
 // ---------------------------------------------------------------------------
 
-/// `A[m,k] @ B[k,n] -> [m,n]`, parallel over output rows.
+/// Micro-kernel tile: MR output rows x NR output columns held in registers.
+const MR: usize = 4;
+const NR: usize = 8;
+
+/// Below this many multiply-adds the packing + dispatch overhead beats the
+/// cache win; fall through to the naive loops.
+const BLOCK_MIN_MULS: usize = 4096;
+
+/// `CBQ_NAIVE_KERNELS=1` forces the pre-blocking row-parallel loops — the
+/// before/after instrument `benches/perf_runtime.rs` records.
+fn force_naive() -> bool {
+    use std::sync::OnceLock;
+    static NAIVE: OnceLock<bool> = OnceLock::new();
+    *NAIVE.get_or_init(|| {
+        std::env::var("CBQ_NAIVE_KERNELS").map(|v| v == "1" || v == "true").unwrap_or(false)
+    })
+}
+
+/// Pack the effective `[k, n]` B matrix into `ceil(n/NR)` column panels:
+/// `panels[pj][p*NR + c] = B_eff[p][pj*NR + c]` (tail panel zero-padded).
+/// `get(p, j)` abstracts the source layout (row-major B or transposed B).
+fn pack_panels(get: impl Fn(usize, usize) -> f32, k: usize, n: usize) -> Vec<f32> {
+    let n_panels = n.div_ceil(NR);
+    let mut packed = vec![0.0f32; n_panels * k * NR];
+    for pj in 0..n_panels {
+        let j0 = pj * NR;
+        let w = NR.min(n - j0);
+        let panel = &mut packed[pj * k * NR..(pj + 1) * k * NR];
+        for p in 0..k {
+            for c in 0..w {
+                panel[p * NR + c] = get(p, j0 + c);
+            }
+        }
+    }
+    packed
+}
+
+/// Blocked micro-kernel over a contiguous span of output rows.
+///
+/// `out_chunk` covers rows `[row0, row0 + out_chunk.len()/n)` of the
+/// result. The A element for (global output row `r`, reduction step `p`)
+/// is `a[r*a_stride + p]`, or `a[p*a_stride + r]` when `a_transposed`.
+/// Accumulators start at zero and sum `p` ascending — the identical
+/// per-element order as the naive loops, hence bit-identical results.
+#[inline]
+fn blocked_rows(
+    out_chunk: &mut [f32],
+    n: usize,
+    row0: usize,
+    k: usize,
+    panels: &[f32],
+    a: &[f32],
+    a_stride: usize,
+    a_transposed: bool,
+) {
+    let rows_total = out_chunk.len() / n;
+    let n_panels = n.div_ceil(NR);
+    for ib in (0..rows_total).step_by(MR) {
+        let rows = MR.min(rows_total - ib);
+        for pj in 0..n_panels {
+            let j0 = pj * NR;
+            let w = NR.min(n - j0);
+            let panel = &panels[pj * k * NR..(pj + 1) * k * NR];
+            let mut acc = [[0.0f32; NR]; MR];
+            for p in 0..k {
+                let brow = &panel[p * NR..p * NR + NR];
+                if a_transposed {
+                    // A element for (row r, step p) is a[p*stride + row]
+                    let arow = &a[p * a_stride + row0 + ib..p * a_stride + row0 + ib + rows];
+                    for r in 0..rows {
+                        let av = arow[r];
+                        for c in 0..NR {
+                            acc[r][c] += av * brow[c];
+                        }
+                    }
+                } else {
+                    // A element for (row r, step p) is a[row*stride + p]
+                    for r in 0..rows {
+                        let av = a[(row0 + ib + r) * a_stride + p];
+                        for c in 0..NR {
+                            acc[r][c] += av * brow[c];
+                        }
+                    }
+                }
+            }
+            for (r, acc_row) in acc.iter().enumerate().take(rows) {
+                let base = (ib + r) * n + j0;
+                out_chunk[base..base + w].copy_from_slice(&acc_row[..w]);
+            }
+        }
+    }
+}
+
+/// Run `blocked_rows` over `out`, splitting MR-aligned row chunks across
+/// the worker pool with the fixed chunking scheme.
+fn blocked_parallel(
+    out: &mut [f32],
+    n: usize,
+    k: usize,
+    panels: &[f32],
+    a: &[f32],
+    a_stride: usize,
+    a_transposed: bool,
+) {
+    let m = out.len() / n;
+    let row_blocks = m.div_ceil(MR);
+    let threads = num_threads().min(row_blocks.max(1));
+    if threads <= 1 || 2 * m * k * n < 65_536 {
+        blocked_rows(out, n, 0, k, panels, a, a_stride, a_transposed);
+        return;
+    }
+    let per_rows = row_blocks.div_ceil(threads) * MR;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(per_rows * n)
+        .enumerate()
+        .map(|(ti, chunk)| {
+            Box::new(move || {
+                blocked_rows(chunk, n, ti * per_rows, k, panels, a, a_stride, a_transposed);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::run_scoped(tasks);
+}
+
+/// `A[m,k] @ B[k,n] -> [m,n]`: packed-panel blocked kernel, bit-identical
+/// to [`matmul_naive`].
 pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    if force_naive() || m * k * n < BLOCK_MIN_MULS {
+        return matmul_naive(a, m, k, b, n);
+    }
+    let panels = pack_panels(|p, j| b[p * n + j], k, n);
+    let mut out = vec![0.0f32; m * n];
+    blocked_parallel(&mut out, n, k, &panels, a, k, false);
+    out
+}
+
+/// `A[m,k] @ B^T` with `B: [n,k]` -> `[m,n]`. B's rows are the panel
+/// columns, packed once so the micro-kernel reads both operands
+/// contiguously. Bit-identical to [`matmul_transb_naive`].
+pub fn matmul_transb(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    if force_naive() || m * k * n < BLOCK_MIN_MULS {
+        return matmul_transb_naive(a, m, k, b, n);
+    }
+    let panels = pack_panels(|p, j| b[j * k + p], k, n);
+    let mut out = vec![0.0f32; m * n];
+    blocked_parallel(&mut out, n, k, &panels, a, k, false);
+    out
+}
+
+/// `A^T @ B` with `A: [m,k]`, `B: [m,n]` -> `[k,n]` (reduction over `m`).
+/// The micro-kernel reads MR consecutive A columns per step — contiguous,
+/// where the naive loop strode by `k`. Bit-identical to
+/// [`matmul_transa_naive`].
+pub fn matmul_transa(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    if force_naive() || m * k * n < BLOCK_MIN_MULS {
+        return matmul_transa_naive(a, m, k, b, n);
+    }
+    let panels = pack_panels(|p, j| b[p * n + j], m, n);
+    let mut out = vec![0.0f32; k * n];
+    blocked_parallel(&mut out, n, m, &panels, a, k, true);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// naive row-parallel reference matmuls (small-size path + property oracle)
+// ---------------------------------------------------------------------------
+
+/// Row-parallel naive `A[m,k] @ B[k,n]` (the pre-blocking kernel).
+pub fn matmul_naive(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     let mut out = vec![0.0f32; m * n];
@@ -121,8 +298,8 @@ pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
     out
 }
 
-/// `A[m,k] @ B^T` with `B: [n,k]` -> `[m,n]`, parallel over output rows.
-pub fn matmul_transb(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+/// Row-parallel naive `A[m,k] @ B[n,k]^T`.
+pub fn matmul_transb_naive(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
     let mut out = vec![0.0f32; m * n];
@@ -140,9 +317,8 @@ pub fn matmul_transb(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<
     out
 }
 
-/// `A^T @ B` with `A: [m,k]`, `B: [m,n]` -> `[k,n]`, parallel over the `k`
-/// output rows (each reduces over `m` sequentially: deterministic).
-pub fn matmul_transa(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+/// Row-parallel naive `A[m,k]^T @ B[m,n]`.
+pub fn matmul_transa_naive(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), m * n);
     let mut out = vec![0.0f32; k * n];
@@ -781,6 +957,79 @@ mod tests {
         for (x, y) in got.iter().zip(&want.data) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn blocked_matmuls_match_naive_bitwise() {
+        // the blocked kernels keep the naive per-element accumulation order
+        // (reduction index ascending, one accumulator per element), so on
+        // finite inputs they must agree bit-for-bit — including inputs with
+        // planted zeros (the naive loops skip zero A-elements)
+        let mut seed = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for trial in 0..40 {
+            let m = 1 + (next() % 19) as usize;
+            let k = 1 + (next() % 33) as usize;
+            let n = 1 + (next() % 21) as usize;
+            let mut mk_vec = |len: usize, zeros: bool| -> Vec<f32> {
+                (0..len)
+                    .map(|_| {
+                        let r = next();
+                        if zeros && r % 4 == 0 {
+                            0.0
+                        } else {
+                            ((r >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 2.0
+                        }
+                    })
+                    .collect()
+            };
+            let zeros = trial % 2 == 0;
+            let a = mk_vec(m * k, zeros);
+            let b = mk_vec(k * n, false);
+            // force the blocked path regardless of size thresholds
+            let panels = pack_panels(|p, j| b[p * n + j], k, n);
+            let mut got = vec![0.0f32; m * n];
+            blocked_rows(&mut got, n, 0, k, &panels, &a, k, false);
+            assert_eq!(got, matmul_naive(&a, m, k, &b, n), "matmul trial {trial} ({m}x{k}x{n})");
+
+            let bt = mk_vec(n * k, false);
+            let panels = pack_panels(|p, j| bt[j * k + p], k, n);
+            let mut got = vec![0.0f32; m * n];
+            blocked_rows(&mut got, n, 0, k, &panels, &a, k, false);
+            assert_eq!(
+                got,
+                matmul_transb_naive(&a, m, k, &bt, n),
+                "transb trial {trial} ({m}x{k}x{n})"
+            );
+
+            let bm = mk_vec(m * n, false);
+            let panels = pack_panels(|p, j| bm[p * n + j], m, n);
+            let mut got = vec![0.0f32; k * n];
+            blocked_rows(&mut got, n, 0, m, &panels, &a, k, true);
+            assert_eq!(
+                got,
+                matmul_transa_naive(&a, m, k, &bm, n),
+                "transa trial {trial} ({m}x{k}x{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn public_matmuls_match_naive_above_block_threshold() {
+        // sizes past BLOCK_MIN_MULS exercise the packed/parallel path
+        let (m, k, n) = (33, 40, 37);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i as f32) * 0.137).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i as f32) * 0.211).cos()).collect();
+        assert_eq!(matmul(&a, m, k, &b, n), matmul_naive(&a, m, k, &b, n));
+        let bt: Vec<f32> = (0..n * k).map(|i| ((i as f32) * 0.173).sin()).collect();
+        assert_eq!(matmul_transb(&a, m, k, &bt, n), matmul_transb_naive(&a, m, k, &bt, n));
+        let bm: Vec<f32> = (0..m * n).map(|i| ((i as f32) * 0.119).cos()).collect();
+        assert_eq!(matmul_transa(&a, m, k, &bm, n), matmul_transa_naive(&a, m, k, &bm, n));
     }
 
     #[test]

@@ -22,6 +22,7 @@
 pub mod kernels;
 pub mod native;
 pub mod pjrt;
+pub mod pool;
 
 use std::collections::BTreeMap;
 
@@ -33,6 +34,14 @@ use crate::tensor::Tensor;
 
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
+
+/// Lock a mutex, recovering from poisoning. Backend-internal state (stats,
+/// compile/RoPE caches, pool queues) is plain data that stays structurally
+/// valid across a panicking kernel task, and serving must keep running —
+/// so poisoning is recovered, never propagated.
+pub(crate) fn lock_or_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Runtime statistics (coordinator overhead accounting for §Perf).
 #[derive(Default, Debug, Clone)]
@@ -56,7 +65,13 @@ pub(crate) enum PinnedInner {
 }
 
 /// An execution backend over the manifest's executables.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the serving layer dispatches
+/// independent window batches concurrently (`Batcher::with_dispatch`), so
+/// implementations use interior locking for their mutable state (stats,
+/// compile/RoPE caches) and must be shareable across threads. `run` /
+/// `run_pinned` are reentrant.
+pub trait Backend: Send + Sync {
     /// Short backend identifier ("pjrt" / "native").
     fn name(&self) -> &'static str;
 

@@ -12,17 +12,20 @@
 //! implement the STE/LSQ rules documented in python/compile/ste.py (see
 //! `backend/kernels.rs`).
 //!
-//! Parallelism: matmuls split across batch rows, attention across
-//! (batch, head) pairs — a scoped `std::thread` pool, bit-deterministic.
+//! Parallelism: matmuls are cache-blocked and split across batch rows,
+//! attention across (batch, head) pairs — all on the persistent worker
+//! pool (`backend::pool`), bit-deterministic. The backend itself is
+//! `Send + Sync` (stats and the RoPE cache sit behind mutexes), so the
+//! serve layer can execute independent window batches concurrently
+//! against one backend instance.
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, ensure, Context, Result};
 
 use super::kernels::{self, Attention, HeadCache};
-use super::{check_shape, Backend, ExecKind, Pinned, PinnedInner, RuntimeStats};
+use super::{check_shape, lock_or_recover, Backend, ExecKind, Pinned, PinnedInner, RuntimeStats};
 use crate::quant::LINEARS;
 use crate::runtime::manifest::{Manifest, ModelCfg};
 use crate::runtime::{Artifacts, Value};
@@ -213,7 +216,7 @@ fn qlinear_fwd(
     let (v_pre, rho_soft) = if need_soft {
         let delta = match (q.a1, q.a2, q.v_dense) {
             (Some(a1), Some(a2), _) => kernels::matmul(&a1.data, k, a1.cols(), &a2.data, n),
-            (_, _, Some(v)) => v.data.clone(),
+            (_, _, Some(v)) => v.data.to_vec(),
             _ => unreachable!("qblock carries either a1/a2 or v"),
         };
         let (vp, rs) = kernels::rho_soft(&q.v0.data, &delta);
@@ -353,28 +356,24 @@ struct BlockCache {
 
 pub struct NativeBackend {
     manifest: Manifest,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
     /// RoPE-table cache keyed by (batch, seq, heads, head_dim).
-    attn: RefCell<HashMap<(usize, usize, usize, usize), Rc<Attention>>>,
+    attn: Mutex<HashMap<(usize, usize, usize, usize), Arc<Attention>>>,
 }
 
 impl NativeBackend {
     pub fn new(artifacts: &Artifacts) -> Result<Self> {
         Ok(Self {
             manifest: artifacts.manifest.clone(),
-            stats: RefCell::new(RuntimeStats::default()),
-            attn: RefCell::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+            attn: Mutex::new(HashMap::new()),
         })
     }
 
-    fn attention(&self, b: usize, s: usize, h: usize, hd: usize) -> Rc<Attention> {
+    fn attention(&self, b: usize, s: usize, h: usize, hd: usize) -> Arc<Attention> {
         let key = (b, s, h, hd);
-        if let Some(a) = self.attn.borrow().get(&key) {
-            return a.clone();
-        }
-        let a = Rc::new(Attention::new(b, s, h, hd));
-        self.attn.borrow_mut().insert(key, a.clone());
-        a
+        let mut map = lock_or_recover(&self.attn);
+        map.entry(key).or_insert_with(|| Arc::new(Attention::new(b, s, h, hd))).clone()
     }
 
     fn execute(
@@ -406,7 +405,7 @@ impl NativeBackend {
             ExecKind::Capture => self.capture(&inp, cfg),
             ExecKind::LmEval => self.lm_eval(&inp, cfg),
         }?;
-        let mut s = self.stats.borrow_mut();
+        let mut s = lock_or_recover(&self.stats);
         s.executions += 1;
         s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
         Ok(out)
@@ -419,7 +418,7 @@ impl NativeBackend {
         let h_in = inp.f32("h_in")?;
         let target = inp.f32("target")?;
         let rows = cfg.batch * cfg.seq;
-        let mut h = h_in.data.clone();
+        let mut h = h_in.data.to_vec();
         for j in 0..w {
             let blk = BlockRef::parse(inp, j)?;
             let qb = QBlockRef::parse(inp, j, false)?;
@@ -453,7 +452,7 @@ impl NativeBackend {
         let mut blocks = Vec::with_capacity(w);
         let mut qblocks = Vec::with_capacity(w);
         let mut caches = Vec::with_capacity(w);
-        let mut h = h_in.data.clone();
+        let mut h = h_in.data.to_vec();
         for j in 0..w {
             let blk = BlockRef::parse(inp, j)?;
             let qb = QBlockRef::parse(inp, j, dense)?;
@@ -748,6 +747,6 @@ impl Backend for NativeBackend {
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        lock_or_recover(&self.stats).clone()
     }
 }

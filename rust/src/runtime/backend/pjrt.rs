@@ -9,14 +9,13 @@
 //! weights) can be pinned as device buffers via [`Backend::pin`] so
 //! steady-state window steps only upload the small learnable tensors.
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{check_shape, Backend, Pinned, PinnedInner, RuntimeStats};
+use super::{check_shape, lock_or_recover as lock, Backend, Pinned, PinnedInner, RuntimeStats};
 use crate::runtime::manifest::{ExecSpec, Manifest};
 use crate::runtime::{Artifacts, Value};
 use crate::tensor::Tensor;
@@ -69,9 +68,9 @@ pub struct PjrtPinned {
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
-    execs: RefCell<HashMap<String, Rc<LoadedExec>>>,
+    execs: Mutex<HashMap<String, Arc<LoadedExec>>>,
     manifest: Manifest,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl PjrtBackend {
@@ -80,14 +79,14 @@ impl PjrtBackend {
         Ok(Self {
             client,
             dir: artifacts.dir.clone(),
-            execs: RefCell::new(HashMap::new()),
+            execs: Mutex::new(HashMap::new()),
             manifest: artifacts.manifest.clone(),
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
-    fn load(&self, name: &str) -> Result<Rc<LoadedExec>> {
-        if let Some(e) = self.execs.borrow().get(name) {
+    fn load(&self, name: &str) -> Result<Arc<LoadedExec>> {
+        if let Some(e) = lock(&self.execs).get(name) {
             return Ok(e.clone());
         }
         let spec = self.spec(name)?.clone();
@@ -100,9 +99,11 @@ impl PjrtBackend {
         .with_context(|| format!("loading HLO {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(xerr)?;
-        self.stats.borrow_mut().compile_ms += t0.elapsed().as_secs_f64() * 1e3;
-        let e = Rc::new(LoadedExec { exe, spec });
-        self.execs.borrow_mut().insert(name.to_string(), e.clone());
+        lock(&self.stats).compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let e = Arc::new(LoadedExec { exe, spec });
+        // under a concurrent race the second compile wins the slot; both
+        // handles stay valid — compilation is idempotent
+        lock(&self.execs).insert(name.to_string(), e.clone());
         Ok(e)
     }
 
@@ -159,7 +160,7 @@ impl PjrtBackend {
         drop(fresh_lits);
         let parts = tuple.to_tuple().map_err(xerr)?;
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = lock(&self.stats);
             s.executions += 1;
             s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
             s.upload_bytes += upload;
@@ -245,6 +246,6 @@ impl Backend for PjrtBackend {
     }
 
     fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        lock(&self.stats).clone()
     }
 }

@@ -1,0 +1,300 @@
+//! Persistent worker pool for the native backend's kernels.
+//!
+//! PR 2's kernels spawned a fresh `std::thread::scope` per call — correct,
+//! but every matmul paid thread create/join. This module keeps one
+//! process-wide pool of workers (lazily started on first use, sized by
+//! [`num_threads`] / `CBQ_THREADS`) fed through a channel-style shared
+//! queue; kernels submit borrowed-closure task batches via [`run_scoped`],
+//! which blocks until the whole batch completed.
+//!
+//! Properties the kernels rely on:
+//!
+//! * **Scoped borrows.** Tasks may borrow the caller's stack (`&mut` output
+//!   chunks, `&` inputs). [`run_scoped`] erases the lifetime to hand the
+//!   closures to the workers, and is sound because it never returns before
+//!   every task has run to completion (completion latch) — the borrowed
+//!   frame outlives all uses.
+//! * **No deadlock under nesting.** The concurrent serve dispatcher runs
+//!   window executions on worker threads which themselves call kernels that
+//!   call [`run_scoped`]. A waiting submitter therefore *helps*: while its
+//!   latch is open it drains tasks from the shared queue instead of
+//!   blocking, so queued work always makes progress even when every
+//!   dedicated worker is itself inside a nested wait.
+//! * **Determinism.** The pool only changes *where* tasks run, never how
+//!   work is chunked: the kernels keep their fixed chunking scheme and each
+//!   output element is written by exactly one task with a sequential
+//!   reduction, so results are bit-identical for any worker count.
+//! * **Panic propagation.** A panicking task is caught on the worker, the
+//!   batch is still driven to completion, and the panic resurfaces in the
+//!   submitting thread.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+use super::lock_or_recover;
+
+/// Worker thread count: `CBQ_THREADS` override, else available parallelism
+/// capped at 16 (diminishing returns for the small reproduction models).
+/// Resolved once per process — this sits on the hot path of every kernel,
+/// and both the env var and the core count are fixed for the run.
+pub fn num_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("CBQ_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.clamp(1, 64);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
+    })
+}
+
+type Task = Box<dyn FnOnce() + Send>;
+
+struct Queue {
+    tasks: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+}
+
+impl Queue {
+    fn lock(&self) -> MutexGuard<'_, VecDeque<Task>> {
+        lock_or_recover(&self.tasks)
+    }
+
+    fn try_pop(&self) -> Option<Task> {
+        self.lock().pop_front()
+    }
+}
+
+/// Completion latch for one [`run_scoped`] batch.
+struct Latch {
+    /// (tasks still running, any task panicked)
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Self { state: Mutex::new((n, false)), done: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = lock_or_recover(&self.state);
+        s.0 -= 1;
+        s.1 |= panicked;
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        lock_or_recover(&self.state).0 == 0
+    }
+
+    /// Block until every task completed; returns the panicked flag.
+    fn wait(&self) -> bool {
+        let mut s = lock_or_recover(&self.state);
+        while s.0 > 0 {
+            s = self.done.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+        s.1
+    }
+}
+
+struct Pool {
+    queue: Arc<Queue>,
+}
+
+fn worker_loop(queue: Arc<Queue>) {
+    loop {
+        let task = {
+            let mut guard = queue.lock();
+            loop {
+                if let Some(t) = guard.pop_front() {
+                    break t;
+                }
+                guard = queue.ready.wait(guard).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        task(); // already wrapped in catch_unwind by run_scoped
+    }
+}
+
+fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let queue = Arc::new(Queue { tasks: Mutex::new(VecDeque::new()), ready: Condvar::new() });
+        for i in 0..num_threads() {
+            let q = queue.clone();
+            std::thread::Builder::new()
+                .name(format!("cbq-pool-{i}"))
+                .spawn(move || worker_loop(q))
+                .expect("spawning cbq pool worker");
+        }
+        Pool { queue }
+    })
+}
+
+/// Execute a batch of tasks on the persistent pool, returning once every
+/// task has completed. Tasks may borrow the caller's stack frame. The
+/// submitting thread participates (helping-wait), so nested `run_scoped`
+/// calls from worker threads cannot deadlock the pool.
+pub fn run_scoped<'scope>(tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    match tasks.len() {
+        0 => return,
+        1 => {
+            // nothing to parallelize: run inline, skip the queue round-trip
+            (tasks.into_iter().next().expect("len checked"))();
+            return;
+        }
+        _ => {}
+    }
+    let pool = global();
+    let latch = Arc::new(Latch::new(tasks.len()));
+    {
+        let mut guard = pool.queue.lock();
+        for t in tasks {
+            // SAFETY: the closure may borrow the caller's stack ('scope).
+            // run_scoped blocks on `latch` until every task has finished
+            // executing (completion is signalled *after* the task returns,
+            // panics included), so every borrow ends before this frame
+            // does — the 'static erasure is never observable.
+            let t = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(t)
+            };
+            let l = latch.clone();
+            guard.push_back(Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(t));
+                l.complete(r.is_err());
+            }));
+        }
+        pool.queue.ready.notify_all();
+    }
+    // helping-wait: drain the shared queue while our batch is in flight.
+    // Only sleep when the queue is momentarily empty — then our remaining
+    // tasks are running on other threads and their completion wakes us.
+    let panicked = loop {
+        if latch.is_done() {
+            break latch.wait();
+        }
+        match pool.queue.try_pop() {
+            Some(task) => task(),
+            None => break latch.wait(),
+        }
+    };
+    if panicked {
+        panic!("cbq worker-pool task panicked (see worker output above)");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_with_borrows() {
+        let mut out = vec![0usize; 100];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(7)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = ci * 7 + j + 1;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i + 1);
+        }
+    }
+
+    #[test]
+    fn nested_run_scoped_makes_progress() {
+        // every outer task fans out again: exercises the helping-wait path
+        // that prevents worker-starvation deadlocks
+        let total = Arc::new(AtomicUsize::new(0));
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2 * num_threads().max(2))
+            .map(|_| {
+                let total = total.clone();
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            let total = total.clone();
+                            Box::new(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            })
+                                as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    run_scoped(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let n_outer = outer.len();
+        run_scoped(outer);
+        assert_eq!(total.load(Ordering::Relaxed), n_outer * 4);
+    }
+
+    #[test]
+    fn concurrent_submitters_do_not_interfere() {
+        // several OS threads submitting batches at once: each batch's own
+        // buffer must come back fully and correctly written
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut out = vec![0usize; 64];
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                        .chunks_mut(5)
+                        .map(|chunk| {
+                            Box::new(move || {
+                                for v in chunk.iter_mut() {
+                                    *v = t + 1;
+                                }
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    run_scoped(tasks);
+                    assert!(out.iter().all(|&v| v == t + 1));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("submitter thread panicked");
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_to_submitter() {
+        let caught = std::panic::catch_unwind(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|i| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("boom");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_scoped(tasks);
+        });
+        assert!(caught.is_err(), "pool swallowed a task panic");
+        // the pool must remain usable afterwards
+        let mut out = vec![0u8; 16];
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(3)
+            .map(|c| {
+                Box::new(move || c.fill(1)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks);
+        assert!(out.iter().all(|&v| v == 1));
+    }
+}

@@ -9,8 +9,17 @@
 //! batched-vs-sequential gap `cbq serve-bench` reports.
 //!
 //! This module is deliberately runtime-free: it schedules over the
-//! [`RowExecutor`] trait, which the PJRT-backed engine (`serve::ServeEngine`)
-//! implements and tests mock.
+//! [`RowExecutor`] trait, which the backend-bound engine
+//! (`serve::ServeEngine`) implements and tests mock.
+//!
+//! Dispatch concurrency: [`Batcher::with_dispatch`] hands up to N
+//! independent row batches to executor threads at once (the executor is
+//! `Sync`; the native backend runs each batch on the shared worker pool).
+//! Results are written to per-chunk slots, so responses are identical to
+//! the serial schedule regardless of completion order.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
@@ -53,10 +62,14 @@ pub struct RowOut {
 
 /// Anything that can run up to [`batch_rows`](Self::batch_rows) rows in one
 /// dispatch. Implementations pad short dispatches internally.
-pub trait RowExecutor {
+///
+/// `execute` takes `&self` and the trait requires `Sync`: the batcher may
+/// run several dispatches concurrently (`Batcher::with_dispatch`), so
+/// executors keep mutable bookkeeping behind interior locks.
+pub trait RowExecutor: Sync {
     fn batch_rows(&self) -> usize;
     fn seq(&self) -> usize;
-    fn execute(&mut self, rows: &[WorkRow]) -> Result<Vec<RowOut>>;
+    fn execute(&self, rows: &[WorkRow]) -> Result<Vec<RowOut>>;
 }
 
 /// What a queued request wants back.
@@ -111,12 +124,26 @@ pub struct ServeStats {
     /// requests turned away by the bounded admission queue
     pub rejected: usize,
     pub wall_seconds: f64,
+    /// configured dispatch concurrency this run executed with (1 = serial)
+    pub dispatch_lanes: usize,
+    /// highest number of dispatches observed in flight at once
+    pub peak_in_flight: usize,
+    /// summed executor-busy time across lanes (occupancy-over-time: with
+    /// `dispatch_lanes` lanes over `wall_seconds`, lane occupancy is
+    /// `lane_busy_seconds / (dispatch_lanes * wall_seconds)`)
+    pub lane_busy_seconds: f64,
 }
 
 impl ServeStats {
     /// Fraction of executed batch rows that carried real work.
     pub fn occupancy(&self) -> f64 {
         self.rows as f64 / self.row_capacity.max(1) as f64
+    }
+
+    /// Fraction of lane-time the dispatch lanes spent inside the executor
+    /// (1.0 = every lane busy for the whole run).
+    pub fn lane_occupancy(&self) -> f64 {
+        self.lane_busy_seconds / (self.dispatch_lanes.max(1) as f64 * self.wall_seconds.max(1e-12))
     }
 
     pub fn tokens_per_s(&self) -> f64 {
@@ -130,7 +157,50 @@ impl ServeStats {
     }
 }
 
-/// Coalescing request batcher with an optional bounded admission queue.
+/// Materialize a chunk's rows, execute them, and validate the result
+/// shape. Returns (per-row outputs, executor-busy seconds). Shared by the
+/// serial and concurrent dispatch paths so validation cannot drift.
+fn run_chunk(
+    exec: &dyn RowExecutor,
+    requests: &[Request],
+    chunk: &[(usize, usize)],
+) -> Result<(Vec<RowOut>, f64)> {
+    let rows: Vec<WorkRow> =
+        chunk.iter().map(|&(ri, qi)| requests[ri].rows[qi].clone()).collect();
+    let t0 = Instant::now();
+    let res = exec.execute(&rows);
+    let busy = t0.elapsed().as_secs_f64();
+    let res = res?;
+    ensure!(
+        res.len() == rows.len(),
+        "executor returned {} results for {} rows",
+        res.len(),
+        rows.len()
+    );
+    Ok((res, busy))
+}
+
+/// Land one executed chunk: route per-row outputs to their request slots
+/// and book the dispatch into the stats.
+fn merge_chunk(
+    stats: &mut ServeStats,
+    outs: &mut [Vec<RowOut>],
+    chunk: &[(usize, usize)],
+    res: Vec<RowOut>,
+    cap: usize,
+    seq: usize,
+) {
+    for (&(ri, qi), out) in chunk.iter().zip(res) {
+        outs[ri][qi] = out;
+    }
+    stats.dispatches += 1;
+    stats.rows += chunk.len();
+    stats.row_capacity += cap;
+    stats.tokens += chunk.len() * seq;
+}
+
+/// Coalescing request batcher with an optional bounded admission queue and
+/// configurable dispatch concurrency.
 pub struct Batcher {
     /// Upper bound on rows per dispatch: `batch_rows()` when coalescing,
     /// 1 for the sequential baseline.
@@ -139,17 +209,27 @@ pub struct Batcher {
     /// count past this bound are rejected up front (visible overload
     /// instead of unbounded queue growth). `None` = unlimited.
     queue_cap: Option<usize>,
+    /// How many independent dispatches may execute concurrently.
+    dispatch: usize,
 }
 
 impl Batcher {
     /// Coalesce rows from all requests into maximal dispatches.
     pub fn coalescing(exec: &dyn RowExecutor) -> Self {
-        Self { rows_per_dispatch: exec.batch_rows().max(1), queue_cap: None }
+        Self { rows_per_dispatch: exec.batch_rows().max(1), queue_cap: None, dispatch: 1 }
     }
 
     /// One row per dispatch (the naive serving baseline).
     pub fn sequential() -> Self {
-        Self { rows_per_dispatch: 1, queue_cap: None }
+        Self { rows_per_dispatch: 1, queue_cap: None, dispatch: 1 }
+    }
+
+    /// Execute up to `n` window dispatches concurrently (0/1 = serial).
+    /// Chunk contents and per-request responses are independent of `n`;
+    /// only wall-clock changes.
+    pub fn with_dispatch(mut self, n: usize) -> Self {
+        self.dispatch = n.max(1);
+        self
     }
 
     /// Bound the admission queue to `cap` rows (0 = unlimited). A request
@@ -170,7 +250,7 @@ impl Batcher {
     /// request order) and throughput stats.
     pub fn run(
         &self,
-        exec: &mut dyn RowExecutor,
+        exec: &dyn RowExecutor,
         requests: &[Request],
     ) -> Result<(Vec<Response>, ServeStats)> {
         let seq = exec.seq();
@@ -207,24 +287,72 @@ impl Batcher {
 
         let mut outs: Vec<Vec<RowOut>> =
             requests.iter().map(|r| vec![RowOut::default(); r.rows.len()]).collect();
-        let t0 = std::time::Instant::now();
-        for chunk in flat.chunks(per_dispatch) {
-            let rows: Vec<WorkRow> =
-                chunk.iter().map(|&(ri, qi)| requests[ri].rows[qi].clone()).collect();
-            let res = exec.execute(&rows)?;
-            ensure!(
-                res.len() == rows.len(),
-                "executor returned {} results for {} rows",
-                res.len(),
-                rows.len()
-            );
-            for (&(ri, qi), out) in chunk.iter().zip(res) {
-                outs[ri][qi] = out;
+        let chunks: Vec<&[(usize, usize)]> = flat.chunks(per_dispatch).collect();
+        let lanes = self.dispatch.clamp(1, chunks.len().max(1));
+        stats.dispatch_lanes = lanes;
+        let t0 = Instant::now();
+        if lanes <= 1 {
+            for chunk in &chunks {
+                let (res, busy) = run_chunk(exec, requests, chunk)?;
+                stats.lane_busy_seconds += busy;
+                merge_chunk(&mut stats, &mut outs, chunk, res, cap, seq);
             }
-            stats.dispatches += 1;
-            stats.rows += rows.len();
-            stats.row_capacity += cap;
-            stats.tokens += rows.len() * seq;
+            stats.peak_in_flight = usize::from(!chunks.is_empty());
+        } else {
+            // concurrent dispatch: N lanes pull chunk indices from a shared
+            // counter; results land in per-chunk slots so the merged output
+            // is identical to the serial schedule
+            let next = AtomicUsize::new(0);
+            let in_flight = AtomicUsize::new(0);
+            let peak = AtomicUsize::new(0);
+            let failed = AtomicBool::new(false);
+            type LaneOut = (Vec<(usize, Vec<RowOut>)>, f64);
+            let lane_results: Vec<Result<LaneOut>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..lanes)
+                    .map(|_| {
+                        s.spawn(|| -> Result<LaneOut> {
+                            let mut local: Vec<(usize, Vec<RowOut>)> = Vec::new();
+                            let mut busy = 0.0f64;
+                            loop {
+                                if failed.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                let ci = next.fetch_add(1, Ordering::SeqCst);
+                                if ci >= chunks.len() {
+                                    break;
+                                }
+                                let cur = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                                peak.fetch_max(cur, Ordering::SeqCst);
+                                let res = run_chunk(exec, requests, chunks[ci]);
+                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                                match res {
+                                    Ok((r, b)) => {
+                                        busy += b;
+                                        local.push((ci, r));
+                                    }
+                                    Err(e) => {
+                                        failed.store(true, Ordering::SeqCst);
+                                        return Err(e);
+                                    }
+                                }
+                            }
+                            Ok((local, busy))
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("dispatch lane panicked"))
+                    .collect()
+            });
+            for lr in lane_results {
+                let (local, busy) = lr?;
+                stats.lane_busy_seconds += busy;
+                for (ci, res) in local {
+                    merge_chunk(&mut stats, &mut outs, chunks[ci], res, cap, seq);
+                }
+            }
+            stats.peak_in_flight = peak.load(Ordering::SeqCst);
         }
         stats.wall_seconds = t0.elapsed().as_secs_f64();
 
@@ -337,11 +465,21 @@ mod tests {
     use super::*;
 
     /// Mock: nll = sum of masked targets, count = mask sum; records
-    /// dispatch sizes.
+    /// dispatch sizes (behind a lock: `execute` takes `&self`).
     struct Mock {
         batch: usize,
         seq: usize,
-        dispatch_sizes: Vec<usize>,
+        dispatch_sizes: std::sync::Mutex<Vec<usize>>,
+    }
+
+    impl Mock {
+        fn new(batch: usize, seq: usize) -> Self {
+            Self { batch, seq, dispatch_sizes: std::sync::Mutex::new(Vec::new()) }
+        }
+
+        fn sizes(&self) -> Vec<usize> {
+            self.dispatch_sizes.lock().unwrap().clone()
+        }
     }
 
     impl RowExecutor for Mock {
@@ -351,9 +489,9 @@ mod tests {
         fn seq(&self) -> usize {
             self.seq
         }
-        fn execute(&mut self, rows: &[WorkRow]) -> Result<Vec<RowOut>> {
+        fn execute(&self, rows: &[WorkRow]) -> Result<Vec<RowOut>> {
             assert!(rows.len() <= self.batch);
-            self.dispatch_sizes.push(rows.len());
+            self.dispatch_sizes.lock().unwrap().push(rows.len());
             Ok(rows
                 .iter()
                 .map(|r| RowOut {
@@ -383,16 +521,16 @@ mod tests {
             })
             .collect();
 
-        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
-        let (resp_b, stats_b) = Batcher::coalescing(&m).run(&mut m, &reqs).unwrap();
-        assert_eq!(m.dispatch_sizes, vec![4, 4, 2]);
+        let m = Mock::new(4, seq);
+        let (resp_b, stats_b) = Batcher::coalescing(&m).run(&m, &reqs).unwrap();
+        assert_eq!(m.sizes(), vec![4, 4, 2]);
         assert_eq!(stats_b.dispatches, 3);
         assert_eq!(stats_b.rows, 10);
         assert_eq!(stats_b.tokens, 40);
         assert!((stats_b.occupancy() - 10.0 / 12.0).abs() < 1e-12);
 
-        let mut m1 = Mock { batch: 4, seq, dispatch_sizes: vec![] };
-        let (resp_s, stats_s) = Batcher::sequential().run(&mut m1, &reqs).unwrap();
+        let m1 = Mock::new(4, seq);
+        let (resp_s, stats_s) = Batcher::sequential().run(&m1, &reqs).unwrap();
         assert_eq!(stats_s.dispatches, 10);
         assert!((stats_s.occupancy() - 10.0 / 40.0).abs() < 1e-12);
 
@@ -420,8 +558,8 @@ mod tests {
             req([0, 9, 9, 9], [0, 1, 1, 1], 1), // row1 smaller -> pick 1
             req([0, 1, 0, 1], [0, 5, 5, 5], 0), // row0 smaller -> pick 0
         ];
-        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
-        let (resp, stats) = Batcher::coalescing(&m).run(&mut m, &reqs).unwrap();
+        let m = Mock::new(4, seq);
+        let (resp, stats) = Batcher::coalescing(&m).run(&m, &reqs).unwrap();
         // 4 candidate rows from 2 requests fill exactly one dispatch
         assert_eq!(stats.dispatches, 1);
         match &resp[0] {
@@ -480,9 +618,9 @@ mod tests {
                 rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
             })
             .collect();
-        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
+        let m = Mock::new(4, seq);
         let (resp, stats) =
-            Batcher::coalescing(&m).with_queue_cap(4).run(&mut m, &reqs).unwrap();
+            Batcher::coalescing(&m).with_queue_cap(4).run(&m, &reqs).unwrap();
         assert_eq!(stats.rejected, 2);
         assert_eq!(stats.rows, 4);
         assert_eq!(resp.len(), 6);
@@ -493,7 +631,7 @@ mod tests {
             assert_eq!(*r, Response::Rejected);
         }
         // only admitted rows were dispatched
-        assert_eq!(m.dispatch_sizes, vec![4]);
+        assert_eq!(m.sizes(), vec![4]);
     }
 
     #[test]
@@ -508,11 +646,11 @@ mod tests {
             },
             Request { kind: RequestKind::Ppl, rows: vec![row(&[4, 5, 6, 7])] },
         ];
-        let mut m = Mock { batch: 4, seq, dispatch_sizes: vec![] };
+        let m = Mock::new(4, seq);
         // cap of 2: ppl (1 row) admitted, choice (2 rows) would exceed ->
         // rejected whole; trailing ppl still fits
         let (resp, stats) =
-            Batcher::coalescing(&m).with_queue_cap(2).run(&mut m, &reqs).unwrap();
+            Batcher::coalescing(&m).with_queue_cap(2).run(&m, &reqs).unwrap();
         assert_eq!(stats.rejected, 1);
         assert!(matches!(resp[0], Response::Ppl { .. }));
         assert_eq!(resp[1], Response::Rejected);
@@ -528,16 +666,81 @@ mod tests {
                 rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
             })
             .collect();
-        let mut m = Mock { batch: 2, seq, dispatch_sizes: vec![] };
-        let (_, stats) = Batcher::coalescing(&m).with_queue_cap(0).run(&mut m, &reqs).unwrap();
+        let m = Mock::new(2, seq);
+        let (_, stats) = Batcher::coalescing(&m).with_queue_cap(0).run(&m, &reqs).unwrap();
         assert_eq!(stats.rejected, 0);
         assert_eq!(stats.rows, 5);
     }
 
     #[test]
+    fn concurrent_dispatch_matches_serial_and_accounts_fully() {
+        let seq = 4;
+        let reqs: Vec<Request> = (0..23)
+            .map(|i| Request {
+                kind: RequestKind::Ppl,
+                rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
+            })
+            .collect();
+        let m = Mock::new(4, seq);
+        let (resp_serial, stats_serial) = Batcher::coalescing(&m).run(&m, &reqs).unwrap();
+
+        let m4 = Mock::new(4, seq);
+        let (resp_par, stats_par) =
+            Batcher::coalescing(&m4).with_dispatch(4).run(&m4, &reqs).unwrap();
+
+        assert_eq!(resp_par, resp_serial, "dispatch concurrency changed answers");
+        assert_eq!(stats_par.dispatches, stats_serial.dispatches);
+        assert_eq!(stats_par.rows, stats_serial.rows);
+        assert_eq!(stats_par.tokens, stats_serial.tokens);
+        assert_eq!(stats_par.dispatch_lanes, 4);
+        assert!(stats_par.peak_in_flight >= 1 && stats_par.peak_in_flight <= 4);
+        // same chunks executed, order aside
+        let mut a = m.sizes();
+        let mut b = m4.sizes();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn concurrent_dispatch_with_admission_accounts_every_request() {
+        // completed + rejected must equal submitted under concurrency
+        let seq = 4;
+        let reqs: Vec<Request> = (0..17)
+            .map(|i| Request {
+                kind: RequestKind::Ppl,
+                rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
+            })
+            .collect();
+        let m = Mock::new(4, seq);
+        let (resp, stats) = Batcher::coalescing(&m)
+            .with_queue_cap(10)
+            .with_dispatch(4)
+            .run(&m, &reqs)
+            .unwrap();
+        let completed = resp.iter().filter(|r| !matches!(r, Response::Rejected)).count();
+        assert_eq!(completed + stats.rejected, reqs.len());
+        assert_eq!(stats.rejected, 7);
+        assert_eq!(stats.rows, 10);
+    }
+
+    #[test]
+    fn dispatch_on_single_chunk_falls_back_to_serial() {
+        let seq = 4;
+        let reqs = vec![Request {
+            kind: RequestKind::Ppl,
+            rows: vec![row(&[1, 2, 3, 4, 5])],
+        }];
+        let m = Mock::new(4, seq);
+        let (_, stats) = Batcher::coalescing(&m).with_dispatch(8).run(&m, &reqs).unwrap();
+        assert_eq!(stats.dispatch_lanes, 1, "one chunk never needs more than one lane");
+        assert_eq!(stats.peak_in_flight, 1);
+    }
+
+    #[test]
     fn rejects_misshapen_rows() {
-        let mut m = Mock { batch: 2, seq: 4, dispatch_sizes: vec![] };
+        let m = Mock::new(2, 4);
         let reqs = vec![Request { kind: RequestKind::Ppl, rows: vec![row(&[1, 2, 3])] }];
-        assert!(Batcher::coalescing(&m).run(&mut m, &reqs).is_err());
+        assert!(Batcher::coalescing(&m).run(&m, &reqs).is_err());
     }
 }

@@ -14,12 +14,20 @@
 //!   embedded token batch;
 //! * [`batcher::Batcher`] — coalesces queued eval requests (perplexity
 //!   segments, zero-shot choice items, forward-hidden calls) into maximal
-//!   batches and reports tokens/s, requests/s and batch occupancy.
+//!   batches, optionally executes several window dispatches concurrently
+//!   (`with_dispatch`, CLI `--dispatch`), and reports tokens/s, requests/s,
+//!   batch occupancy and in-flight/lane-occupancy counters.
+//!
+//! Memory: `Value`/`Tensor` storage is `Arc`-backed, so the registry's
+//! resident model, every engine bound to it, and every pinned executable
+//! input all share **one** copy of each weight buffer — per process, not
+//! per engine (refcount/pointer-identity assertions live in
+//! `tests/backend.rs::export_load_serve_end_to_end_on_native`).
 
 pub mod batcher;
 pub mod registry;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -34,7 +42,7 @@ pub use registry::{LoadedSnapshot, ModelRegistry};
 /// plus the pinned LM head, ready for row-batch execution.
 pub struct ServeEngine<'rt> {
     rt: &'rt dyn Backend,
-    snap: Rc<LoadedSnapshot>,
+    snap: Arc<LoadedSnapshot>,
     /// (start block, window width, executable, pinned statics) per step of
     /// the greedy covering.
     steps: Vec<(usize, usize, String, Pinned)>,
@@ -42,7 +50,7 @@ pub struct ServeEngine<'rt> {
 }
 
 impl<'rt> ServeEngine<'rt> {
-    pub fn new(rt: &'rt dyn Backend, art: &Artifacts, snap: Rc<LoadedSnapshot>) -> Result<Self> {
+    pub fn new(rt: &'rt dyn Backend, art: &Artifacts, snap: Arc<LoadedSnapshot>) -> Result<Self> {
         let cfg = &snap.meta.cfg;
         let name = &cfg.name;
         let model = &snap.model;
@@ -126,7 +134,7 @@ impl RowExecutor for ServeEngine<'_> {
         self.snap.meta.cfg.seq
     }
 
-    fn execute(&mut self, rows: &[WorkRow]) -> Result<Vec<RowOut>> {
+    fn execute(&self, rows: &[WorkRow]) -> Result<Vec<RowOut>> {
         let cfg = &self.snap.meta.cfg;
         let (bsz, seq) = (cfg.batch, cfg.seq);
         anyhow::ensure!(rows.len() <= bsz, "{} rows exceed batch {bsz}", rows.len());

@@ -9,7 +9,7 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -30,7 +30,7 @@ pub struct LoadedSnapshot {
 /// Name-keyed snapshot cache.
 #[derive(Default)]
 pub struct ModelRegistry {
-    models: BTreeMap<String, Rc<LoadedSnapshot>>,
+    models: BTreeMap<String, Arc<LoadedSnapshot>>,
 }
 
 impl ModelRegistry {
@@ -40,8 +40,11 @@ impl ModelRegistry {
 
     /// Load `path` under `name`, or return the cached model if `name` is
     /// already resident (the path must then match — two different files
-    /// under one name is a routing bug, not a cache hit).
-    pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<Rc<LoadedSnapshot>> {
+    /// under one name is a routing bug, not a cache hit). The handle is an
+    /// `Arc`: engines on any thread share the one resident copy, and the
+    /// Arc-backed tensor storage keeps even pinned backend inputs pointing
+    /// at the same buffers.
+    pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<Arc<LoadedSnapshot>> {
         // canonicalize so "./m.cbqs" and its absolute path count as the same
         // file; fall back to the raw path when the file does not exist yet
         // (snapshot::load will produce the real error below)
@@ -60,7 +63,7 @@ impl ModelRegistry {
         let t0 = Instant::now();
         let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
         let snap = snapshot::load(&path)?;
-        let loaded = Rc::new(LoadedSnapshot {
+        let loaded = Arc::new(LoadedSnapshot {
             name: name.to_string(),
             path,
             meta: snap.meta,
@@ -72,7 +75,7 @@ impl ModelRegistry {
         Ok(loaded)
     }
 
-    pub fn get(&self, name: &str) -> Result<Rc<LoadedSnapshot>> {
+    pub fn get(&self, name: &str) -> Result<Arc<LoadedSnapshot>> {
         self.models
             .get(name)
             .cloned()

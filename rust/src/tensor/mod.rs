@@ -2,18 +2,114 @@
 //! coordinator computes outside PJRT (CFP statistics, GPTQ, weight
 //! finalization, Adam state, Hessian probes).
 //!
-//! Deliberately simple — row-major `Vec<f32>` + shape — because every large
-//! matmul in the hot path runs through the AOT HLO executables; host math is
-//! statistics, bookkeeping and small dense linear algebra.
+//! Row-major [`Storage`] + shape. Storage is `Arc`-backed with copy-on-
+//! write: cloning a tensor (and hence a [`crate::runtime::Value`]) shares
+//! the underlying buffer, so pinning model weights into a backend or
+//! binding them into several serve engines keeps **one** resident copy per
+//! process. The first mutation of a shared buffer clones it
+//! (`Arc::make_mut`), preserving value semantics everywhere else.
 
 pub mod io;
 
 use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
+
+/// Shared, copy-on-write element buffer.
+///
+/// * Reads go through `Deref<Target = [T]>` — indexing, slicing, iterators
+///   and `&storage`-as-`&[T]` coercion all work as they did on `Vec<T>`.
+/// * Writes go through `DerefMut`, which calls `Arc::make_mut`: unique
+///   buffers mutate in place (an atomic refcount check), shared buffers are
+///   cloned first. Kernel hot paths operate on locally-owned buffers, so
+///   the clone only triggers where sharing semantics actually require it.
+pub struct Storage<T = f32>(Arc<Vec<T>>);
+
+impl<T> Storage<T> {
+    pub fn new(data: Vec<T>) -> Self {
+        Self(Arc::new(data))
+    }
+
+    /// Number of live shares of this buffer (diagnostics / sharing tests).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+
+    /// Do `a` and `b` share one allocation?
+    pub fn ptr_eq(a: &Self, b: &Self) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+}
+
+impl<T> Clone for Storage<T> {
+    fn clone(&self) -> Self {
+        Self(self.0.clone()) // refcount bump, no data copy
+    }
+}
+
+impl<T> Deref for Storage<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.0.as_slice()
+    }
+}
+
+impl<T: Clone> DerefMut for Storage<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        Arc::make_mut(&mut self.0).as_mut_slice()
+    }
+}
+
+impl<T> From<Vec<T>> for Storage<T> {
+    fn from(v: Vec<T>) -> Self {
+        Self::new(v)
+    }
+}
+
+impl<T: PartialEq> PartialEq for Storage<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PartialEq> PartialEq<Vec<T>> for Storage<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: PartialEq> PartialEq<Storage<T>> for Vec<T> {
+    fn eq(&self, other: &Storage<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<'a, T> IntoIterator for &'a Storage<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.iter()
+    }
+}
+
+impl<'a, T: Clone> IntoIterator for &'a mut Storage<T> {
+    type Item = &'a mut T;
+    type IntoIter = std::slice::IterMut<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.deref_mut().iter_mut()
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Storage<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self[..], f)
+    }
+}
 
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     pub dims: Vec<usize>,
-    pub data: Vec<f32>,
+    pub data: Storage<f32>,
 }
 
 impl fmt::Debug for Tensor {
@@ -31,19 +127,25 @@ impl Tensor {
             dims,
             data.len()
         );
+        Self { dims, data: Storage::new(data) }
+    }
+
+    /// Construct sharing an existing buffer (no copy).
+    pub fn from_storage(dims: Vec<usize>, data: Storage<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
         Self { dims, data }
     }
 
     pub fn zeros(dims: &[usize]) -> Self {
-        Self { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+        Self { dims: dims.to_vec(), data: Storage::new(vec![0.0; dims.iter().product()]) }
     }
 
     pub fn full(dims: &[usize], v: f32) -> Self {
-        Self { dims: dims.to_vec(), data: vec![v; dims.iter().product()] }
+        Self { dims: dims.to_vec(), data: Storage::new(vec![v; dims.iter().product()]) }
     }
 
     pub fn scalar(v: f32) -> Self {
-        Self { dims: vec![], data: vec![v] }
+        Self { dims: vec![], data: Storage::new(vec![v]) }
     }
 
     pub fn len(&self) -> usize {
@@ -122,7 +224,8 @@ impl Tensor {
     /// whole-tensor ops ------------------------------------------------
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
-        Self { dims: self.dims.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+        let data: Vec<f32> = self.data.iter().map(|&v| f(v)).collect();
+        Self { dims: self.dims.clone(), data: Storage::new(data) }
     }
 
     pub fn zip_mut(&mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) {
@@ -191,13 +294,13 @@ impl Tensor {
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorI32 {
     pub dims: Vec<usize>,
-    pub data: Vec<i32>,
+    pub data: Storage<i32>,
 }
 
 impl TensorI32 {
     pub fn new(dims: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
-        Self { dims, data }
+        Self { dims, data: Storage::new(data) }
     }
 }
 
@@ -240,5 +343,36 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn clone_shares_storage_until_mutated() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let mut b = a.clone();
+        assert!(Storage::ptr_eq(&a.data, &b.data), "clone must share the buffer");
+        assert_eq!(a.data.ref_count(), 2);
+        // first write detaches b (copy-on-write); a is untouched
+        b.set2(0, 0, 9.0);
+        assert!(!Storage::ptr_eq(&a.data, &b.data));
+        assert_eq!(a.at2(0, 0), 1.0);
+        assert_eq!(b.at2(0, 0), 9.0);
+        assert_eq!(a.data.ref_count(), 1);
+    }
+
+    #[test]
+    fn unique_storage_mutates_in_place() {
+        let mut a = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let p = a.data.as_ptr();
+        a.data[1] = 7.0;
+        assert_eq!(a.data.as_ptr(), p, "unique buffer must not reallocate on write");
+        assert_eq!(a.data, vec![1., 7., 3.]);
+    }
+
+    #[test]
+    fn from_storage_shares() {
+        let a = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_storage(vec![2, 2], a.data.clone());
+        assert!(Storage::ptr_eq(&a.data, &b.data));
+        assert_eq!(b.at2(1, 0), 3.0);
     }
 }

@@ -10,8 +10,7 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::rc::Rc;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use cbq::calib;
 use cbq::config::{BitSpec, QuantJob, RoundingMode};
@@ -337,10 +336,33 @@ fn snapshot_roundtrip(
 
     // registry + serve engine + batcher over the native backend
     let mut reg = ModelRegistry::new();
-    let snap: Rc<_> = reg.load("e2e", path).unwrap();
-    let mut engine = ServeEngine::new(rt, art, snap).unwrap();
+    let snap: Arc<_> = reg.load("e2e", path).unwrap();
+
+    // -- pin sharing: engines must not deep-copy pinned statics ----------
+    // (the ROADMAP double-residency item: Arc-backed Value storage makes
+    // Backend::pin retain the registry's buffers instead of cloning them)
+    let wq = &snap.model.params.blocks[0].linears["wq"];
+    let wq_ptr = wq.data.as_ptr();
+    let rc_before = wq.data.ref_count();
+    let engine = ServeEngine::new(rt, art, snap.clone()).unwrap();
+    let rc_one = wq.data.ref_count();
+    assert!(
+        rc_one > rc_before,
+        "engine must share the snapshot's weight storage (refcount {rc_before} -> {rc_one})"
+    );
+    let engine2 = ServeEngine::new(rt, art, snap.clone()).unwrap();
+    let rc_two = wq.data.ref_count();
+    assert_eq!(
+        rc_two - rc_one,
+        rc_one - rc_before,
+        "second engine must add the same number of *shares*, not copies"
+    );
+    assert_eq!(wq.data.as_ptr(), wq_ptr, "weight buffer must never move");
+    drop(engine2);
+    assert_eq!(wq.data.ref_count(), rc_one, "dropping an engine releases its shares");
+
     let requests = batcher::standard_mix(pipe.cfg.seq, 6, 2, 2);
-    let (resp, stats) = Batcher::coalescing(&engine).run(&mut engine, &requests).unwrap();
+    let (resp, stats) = Batcher::coalescing(&engine).run(&engine, &requests).unwrap();
     assert_eq!(resp.len(), requests.len());
     assert!(stats.tokens > 0 && stats.tokens_per_s() > 0.0, "no throughput measured");
     for r in &resp {
@@ -348,11 +370,53 @@ fn snapshot_roundtrip(
             assert!(p.is_finite() && p > 1.0, "served ppl {p}");
         }
     }
+    // concurrent window dispatch must not change a single answer
+    let (resp_par, stats_par) = Batcher::coalescing(&engine)
+        .with_dispatch(4)
+        .run(&engine, &requests)
+        .unwrap();
+    assert_eq!(resp_par, resp, "--dispatch 4 changed responses");
+    let completed = resp_par
+        .iter()
+        .filter(|r| !matches!(r, cbq::serve::Response::Rejected))
+        .count();
+    assert_eq!(completed + stats_par.rejected, requests.len());
+    assert_eq!(stats_par.rows, stats.rows);
+    assert!(stats_par.peak_in_flight >= 1);
     // bounded admission on the same engine: overload is rejected, visible
     let (resp_cap, stats_cap) = Batcher::coalescing(&engine)
         .with_queue_cap(3)
-        .run(&mut engine, &requests)
+        .run(&engine, &requests)
         .unwrap();
     assert!(stats_cap.rejected > 0);
     assert_eq!(resp_cap.len(), requests.len());
+}
+
+#[test]
+fn concurrent_window_dispatch_is_deterministic() {
+    // the same window batch executed 8x concurrently on the shared worker
+    // pool must produce bitwise-identical outputs (pool chunking is fixed;
+    // every output element is written by exactly one task)
+    let (art, rt) = setup();
+    let m = art.default_model().to_string();
+    let pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let qs = pipe.init_qstate(&pipe.fp, &BitSpec::w4a4(), 5, RoundingMode::Lora);
+    let h0 = embed_batch(&pipe);
+    let zeros = Tensor::zeros(&h0.dims);
+    let b = window_bindings(&pipe, &qs, 2, &h0, &zeros, 7.0, 1.0, 1.0, 1.0, 0.01);
+    let exec = format!("win_fwd_w2_{m}");
+    let reference = rt.run(&exec, b.inner()).unwrap();
+    let outs: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| s.spawn(|| rt.run(&exec, b.inner()).unwrap()))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (i, o) in outs.iter().enumerate() {
+        assert_eq!(
+            o["h_out"].data, reference["h_out"].data,
+            "concurrent run {i} diverged bitwise"
+        );
+        assert_eq!(o["loss"].item(), reference["loss"].item(), "run {i} loss diverged");
+    }
 }

@@ -337,6 +337,77 @@ fn prop_v0_roundtrip() {
 }
 
 // ---------------------------------------------------------------------------
+// blocked matmul kernels (native backend hot path)
+// ---------------------------------------------------------------------------
+
+/// The cache-blocked/packed-panel matmuls must agree with the naive
+/// row-parallel loops *bitwise*: they keep the identical per-element
+/// accumulation order (reduction index ascending, one accumulator per
+/// output element), so this is equality, not tolerance. Shapes straddle
+/// the block-path threshold, so both the naive fallback and the packed
+/// micro-kernel path are exercised.
+#[test]
+fn prop_blocked_matmul_bitwise_matches_naive() {
+    use cbq::runtime::backend::kernels as k;
+    for seed in 0..120u64 {
+        let mut g = Gen::new(seed + 60000);
+        let (m, kk, n) = (g.usize_in(1, 40), g.usize_in(1, 48), g.usize_in(1, 40));
+        let plant_zeros = seed % 3 == 0;
+        let mut mk_vec = |len: usize| -> Vec<f32> {
+            (0..len)
+                .map(|_| {
+                    if plant_zeros && g.usize_in(0, 3) == 0 {
+                        0.0
+                    } else {
+                        g.f32_in(-2.0, 2.0)
+                    }
+                })
+                .collect()
+        };
+        let a = mk_vec(m * kk);
+        let b = mk_vec(kk * n);
+        assert_eq!(
+            k::matmul(&a, m, kk, &b, n),
+            k::matmul_naive(&a, m, kk, &b, n),
+            "seed {seed}: matmul {m}x{kk}x{n}"
+        );
+        let bt = mk_vec(n * kk);
+        assert_eq!(
+            k::matmul_transb(&a, m, kk, &bt, n),
+            k::matmul_transb_naive(&a, m, kk, &bt, n),
+            "seed {seed}: transb {m}x{kk}x{n}"
+        );
+        let bm = mk_vec(m * n);
+        assert_eq!(
+            k::matmul_transa(&a, m, kk, &bm, n),
+            k::matmul_transa_naive(&a, m, kk, &bm, n),
+            "seed {seed}: transa {m}x{kk}x{n}"
+        );
+    }
+}
+
+/// Cross-check against the host `Tensor::matmul` oracle (different loop
+/// structure entirely) within float tolerance.
+#[test]
+fn prop_blocked_matmul_matches_tensor_oracle() {
+    use cbq::runtime::backend::kernels as k;
+    for seed in 0..60u64 {
+        let mut g = Gen::new(seed + 61000);
+        let (m, kk, n) = (g.usize_in(1, 24), g.usize_in(1, 24), g.usize_in(1, 24));
+        let ta = g.tensor(m, kk, 1.0);
+        let tb = g.tensor(kk, n, 1.0);
+        let want = ta.matmul(&tb);
+        let got = k::matmul(&ta.data, m, kk, &tb.data, n);
+        for (i, (x, y)) in got.iter().zip(&want.data).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                "seed {seed}: [{i}] {x} vs {y}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // packed-tensor invariants (snapshot store)
 // ---------------------------------------------------------------------------
 

@@ -109,16 +109,16 @@ fn registry_loads_caches_and_evicts() {
     assert!(a.file_bytes > 0);
     assert_eq!(reg.len(), 1);
 
-    // second load of the same name is a cache hit (same Rc)
+    // second load of the same name is a cache hit (same Arc)
     let b = reg.load("w4", &p).unwrap();
-    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
     assert_eq!(reg.len(), 1);
 
     // same name, different path: refused, cache not clobbered
     let p2 = snapshot_file("serve_reg_b.cbqs", 22);
     let err = reg.load("w4", &p2).unwrap_err();
     assert!(format!("{err:#}").contains("refusing"), "{err:#}");
-    assert!(std::rc::Rc::ptr_eq(&reg.get("w4").unwrap(), &a));
+    assert!(std::sync::Arc::ptr_eq(&reg.get("w4").unwrap(), &a));
 
     // a second name loads alongside
     reg.load("w4-b", &p2).unwrap();
@@ -151,11 +151,23 @@ fn registry_propagates_snapshot_validation() {
 
 /// Mock executor with a fixed per-dispatch overhead model: every dispatch
 /// "costs" one unit regardless of fill, which is exactly why coalescing
-/// wins on the fixed-shape executables.
+/// wins on the fixed-shape executables. Dispatch counting sits behind an
+/// atomic because `RowExecutor::execute` takes `&self` (the batcher may
+/// run dispatches concurrently).
 struct Mock {
     batch: usize,
     seq: usize,
-    dispatches: usize,
+    dispatches: std::sync::atomic::AtomicUsize,
+}
+
+impl Mock {
+    fn new(batch: usize, seq: usize) -> Self {
+        Self { batch, seq, dispatches: std::sync::atomic::AtomicUsize::new(0) }
+    }
+
+    fn dispatches(&self) -> usize {
+        self.dispatches.load(std::sync::atomic::Ordering::SeqCst)
+    }
 }
 
 impl RowExecutor for Mock {
@@ -165,9 +177,9 @@ impl RowExecutor for Mock {
     fn seq(&self) -> usize {
         self.seq
     }
-    fn execute(&mut self, rows: &[WorkRow]) -> anyhow::Result<Vec<RowOut>> {
+    fn execute(&self, rows: &[WorkRow]) -> anyhow::Result<Vec<RowOut>> {
         assert!(!rows.is_empty() && rows.len() <= self.batch);
-        self.dispatches += 1;
+        self.dispatches.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         Ok(rows
             .iter()
             .map(|r| RowOut {
@@ -191,10 +203,12 @@ fn standard_mix_batched_vs_sequential_same_answers_fewer_dispatches() {
     let total_rows: usize = requests.iter().map(|r| r.rows.len()).sum();
     assert_eq!(total_rows, 24 + 6 * 2 + 4);
 
-    let mut mb = Mock { batch: 4, seq, dispatches: 0 };
-    let (resp_b, stats_b) = Batcher::coalescing(&mb).run(&mut mb, &requests).unwrap();
-    let mut ms = Mock { batch: 4, seq, dispatches: 0 };
-    let (resp_s, stats_s) = Batcher::sequential().run(&mut ms, &requests).unwrap();
+    let mb = Mock::new(4, seq);
+    let (resp_b, stats_b) = Batcher::coalescing(&mb).run(&mb, &requests).unwrap();
+    let ms = Mock::new(4, seq);
+    let (resp_s, stats_s) = Batcher::sequential().run(&ms, &requests).unwrap();
+    assert_eq!(mb.dispatches(), stats_b.dispatches);
+    assert_eq!(ms.dispatches(), stats_s.dispatches);
 
     // batched packs 4 rows/dispatch; sequential pays one dispatch per row
     assert_eq!(stats_b.dispatches, total_rows.div_ceil(4));
@@ -265,7 +279,42 @@ fn choice_requests_mask_prompts_and_keep_candidate_counts() {
 
 #[test]
 fn empty_request_rows_are_rejected() {
-    let mut m = Mock { batch: 4, seq: 8, dispatches: 0 };
+    let m = Mock::new(4, 8);
     let reqs = vec![Request { kind: RequestKind::Ppl, rows: vec![] }];
-    assert!(Batcher::coalescing(&m).run(&mut m, &reqs).is_err());
+    assert!(Batcher::coalescing(&m).run(&m, &reqs).is_err());
+}
+
+#[test]
+fn dispatch_concurrency_preserves_answers_and_accounting() {
+    // the serve test the issue asks for: drive the batcher with
+    // --dispatch 4 semantics and check (a) responses identical to serial,
+    // (b) completed + rejected == submitted, with and without a queue cap
+    let seq = 96;
+    let requests = batcher::standard_mix(seq, 24, 6, 4);
+    let serial = Mock::new(4, seq);
+    let (resp_serial, stats_serial) =
+        Batcher::coalescing(&serial).run(&serial, &requests).unwrap();
+    let par = Mock::new(4, seq);
+    let (resp_par, stats_par) = Batcher::coalescing(&par)
+        .with_dispatch(4)
+        .run(&par, &requests)
+        .unwrap();
+    assert_eq!(resp_par, resp_serial, "dispatch 4 changed answers");
+    assert_eq!(stats_par.dispatches, stats_serial.dispatches);
+    assert_eq!(stats_par.rows, stats_serial.rows);
+    assert_eq!(stats_par.dispatch_lanes, 4);
+    assert!(stats_par.peak_in_flight >= 1 && stats_par.peak_in_flight <= 4);
+    assert!(stats_par.lane_occupancy() <= 1.0 + 1e-9);
+
+    // capped admission under concurrency: every request accounted exactly once
+    let capped = Mock::new(4, seq);
+    let (resp_cap, stats_cap) = Batcher::coalescing(&capped)
+        .with_queue_cap(16)
+        .with_dispatch(4)
+        .run(&capped, &requests)
+        .unwrap();
+    let completed = resp_cap.iter().filter(|r| !matches!(r, Response::Rejected)).count();
+    assert_eq!(completed + stats_cap.rejected, requests.len());
+    assert!(stats_cap.rejected > 0, "cap of 16 rows must reject part of the mix");
+    assert_eq!(stats_cap.rows, 16);
 }
