@@ -27,7 +27,8 @@ use cbq::json::{self, Value as J};
 use cbq::report::{fmt_f, Table};
 use cbq::runtime::backend::kernels;
 use cbq::runtime::{self, Artifacts, Backend as _, Bindings, Value};
-use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor as _, ServeEngine};
+use cbq::serve::scheduler::{synth_trace, Scheduler, SchedulerCfg, TraceSpec};
+use cbq::serve::{batcher, Batcher, ModelRegistry, RealClock, RowExecutor as _, ServeEngine};
 use cbq::tensor::Tensor;
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
@@ -211,6 +212,48 @@ fn main() {
     }
     t.print();
 
+    // ---- live arrival loop (priority scheduler over the engine) -----------
+    // real clock: arrivals are slept to, service time is measured — this is
+    // the honest live-loop tokens/s and per-class latency figure. (Replay
+    // determinism is the simulated clock's job and is asserted by
+    // tests/scheduler.rs + `cbq serve-bench --live --verify-determinism`.)
+    let trace_seed: u64 = std::env::var("CBQ_BENCH_TRACE_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(7);
+    let spec = TraceSpec {
+        seed: trace_seed,
+        requests: 48,
+        mean_gap_ticks: 500, // ~2000 req/s offered: keeps the loop saturated
+        seq: cfg.seq,
+        vocab: cfg.vocab as u32,
+        priorities: true,
+    };
+    let trace = synth_trace(&spec);
+    let live_clock = RealClock::new();
+    let sched = Scheduler::new(&live_clock, SchedulerCfg { dispatch, ..Default::default() });
+    let live = sched.run(&engine, &trace).unwrap();
+    let mut t = Table::new(
+        format!("live arrival loop ({} requests, seed {trace_seed}, dispatch {dispatch})", trace.len()),
+        &["class", "done", "q p99 (ms)", "s p99 (ms)"],
+    );
+    for c in &live.stats.class_lat {
+        t.row(&[
+            c.class.clone(),
+            c.completed.to_string(),
+            fmt_f(c.queue_p99_s * 1e3, 2),
+            fmt_f(c.service_p99_s * 1e3, 2),
+        ]);
+    }
+    t.print();
+    println!(
+        "live loop: {:.0} tokens/s over {} cycles ({} admitted / {} rejected)",
+        live.stats.tokens_per_s(),
+        live.cycles,
+        live.stats.requests - live.stats.rejected,
+        live.stats.rejected
+    );
+
     let stats = rt.stats();
     println!(
         "\ntotals: {} execs, {:.1}ms exec time, {:.1} MiB uploaded",
@@ -243,6 +286,43 @@ fn main() {
                 ("occupancy", J::num(st_par.occupancy())),
                 ("peak_in_flight", J::num(st_par.peak_in_flight as f64)),
                 ("lane_occupancy", J::num(st_par.lane_occupancy())),
+            ]),
+        ),
+        (
+            "live",
+            J::obj(vec![
+                ("trace_seed", J::num(trace_seed as f64)),
+                ("requests", J::num(trace.len() as f64)),
+                ("dispatch", J::num(dispatch as f64)),
+                ("priorities", J::Bool(true)),
+                ("cycles", J::num(live.cycles as f64)),
+                ("admitted", J::num((live.stats.requests - live.stats.rejected) as f64)),
+                ("rejected", J::num(live.stats.rejected as f64)),
+                ("tokens_per_s", J::num(live.stats.tokens_per_s())),
+                ("occupancy", J::num(live.stats.occupancy())),
+                (
+                    "classes",
+                    J::arr(
+                        live.stats
+                            .class_lat
+                            .iter()
+                            .map(|c| {
+                                J::obj(vec![
+                                    ("class", J::str(c.class.clone())),
+                                    ("submitted", J::num(c.submitted as f64)),
+                                    ("completed", J::num(c.completed as f64)),
+                                    ("rejected", J::num(c.rejected as f64)),
+                                    ("queue_p50_s", J::num(c.queue_p50_s)),
+                                    ("queue_p95_s", J::num(c.queue_p95_s)),
+                                    ("queue_p99_s", J::num(c.queue_p99_s)),
+                                    ("service_p50_s", J::num(c.service_p50_s)),
+                                    ("service_p95_s", J::num(c.service_p95_s)),
+                                    ("service_p99_s", J::num(c.service_p99_s)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
     ]);

@@ -64,6 +64,13 @@ impl Args {
         }
     }
 
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got `{v}`")),
+            None => Ok(default),
+        }
+    }
+
     pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} expects a float, got `{v}`")),
@@ -103,6 +110,14 @@ mod tests {
     fn bad_int_errors() {
         let a = args("x --n abc");
         assert!(a.get_usize("n", 1).is_err());
+        assert!(a.get_u64("n", 1).is_err());
+    }
+
+    #[test]
+    fn u64_values_parse_beyond_u32() {
+        let a = args("serve-bench --trace-seed 9007199254740993");
+        assert_eq!(a.get_u64("trace-seed", 7).unwrap(), 9007199254740993);
+        assert_eq!(a.get_u64("absent", 7).unwrap(), 7);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use cbq::hessian::{offdiag_ratio, HessianProbe};
 use cbq::json::{self, Value};
 use cbq::report::{fmt_bytes, fmt_f, heatmap, Table};
 use cbq::runtime::{self, synth, Artifacts, Backend};
-use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor, ServeEngine, ServeStats};
+use cbq::serve::{batcher, Batcher, ClassLat, ModelRegistry, RowExecutor, ServeEngine, ServeStats};
 use cbq::snapshot;
 
 const USAGE: &str = "\
@@ -79,6 +79,18 @@ COMMANDS
             overflow requests are rejected and counted); --dispatch N
             executes up to N window batches concurrently (CBQ_THREADS
             sizes the shared kernel worker pool)
+            live mode: --live [--arrival-rate 256] [--trace-seed 7]
+            [--trace-requests 64] [--priorities] [--real-clock]
+            [--verify-determinism]
+            replays a seeded synthetic arrival trace through the priority
+            scheduler: interactive/batch/background classes with weighted
+            aging (no starvation), admission capacity re-credited per
+            drain cycle (--queue-cap now bounds rows *currently waiting*).
+            The default simulated clock keeps wall time out of every
+            decision, so the same seed replays bitwise-identically for any
+            --dispatch; reports per-class p50/p95/p99 queue+service
+            latency. --verify-determinism replays at a second lane count
+            and fails on any divergence
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
 ";
@@ -167,7 +179,221 @@ fn serve_stats_json(s: &ServeStats) -> Value {
         ("peak_in_flight", Value::num(s.peak_in_flight as f64)),
         ("lane_busy_seconds", Value::num(s.lane_busy_seconds)),
         ("lane_occupancy", Value::num(s.lane_occupancy())),
+        ("class_lat", Value::arr(s.class_lat.iter().map(class_lat_json).collect())),
     ])
+}
+
+fn class_lat_json(c: &ClassLat) -> Value {
+    Value::obj(vec![
+        ("class", Value::str(c.class.clone())),
+        ("submitted", Value::num(c.submitted as f64)),
+        ("completed", Value::num(c.completed as f64)),
+        ("rejected", Value::num(c.rejected as f64)),
+        ("queue_p50_s", Value::num(c.queue_p50_s)),
+        ("queue_p95_s", Value::num(c.queue_p95_s)),
+        ("queue_p99_s", Value::num(c.queue_p99_s)),
+        ("service_p50_s", Value::num(c.service_p50_s)),
+        ("service_p95_s", Value::num(c.service_p95_s)),
+        ("service_p99_s", Value::num(c.service_p99_s)),
+    ])
+}
+
+/// Shared by the burst and live serve-bench paths: resolve `--snapshot`,
+/// load it under `name`, verify the fingerprint against the artifacts and
+/// bind a pinned engine. Keeping this in one place means the two paths
+/// cannot drift.
+fn load_serve_engine<'rt>(
+    args: &Args,
+    art: &'rt Artifacts,
+    rt: &'rt dyn Backend,
+    name: &str,
+) -> Result<(String, ServeEngine<'rt>)> {
+    let path = args
+        .get("snapshot")
+        .ok_or_else(|| anyhow!("serve-bench requires --snapshot PATH"))?;
+    let mut reg = ModelRegistry::new();
+    let snap = reg.load(name, path)?;
+    let mism = snapshot::fingerprint_mismatches(&snap.meta.cfg, art.cfg(&snap.meta.cfg.name)?);
+    if !mism.is_empty() {
+        bail!("snapshot/artifacts mismatch:\n  {}", mism.join("\n  "));
+    }
+    let engine = ServeEngine::new(rt, art, snap)?;
+    Ok((path.to_string(), engine))
+}
+
+/// `cbq serve-bench --live`: replay a seeded synthetic arrival trace
+/// through the priority scheduler over a snapshot-bound engine.
+fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> {
+    use cbq::serve::clock::{Clock, RealClock, SimClock, TICKS_PER_SEC};
+    use cbq::serve::scheduler::{synth_trace, Scheduler, SchedulerCfg, TraceSpec};
+
+    let (path, engine) = load_serve_engine(args, art, rt, "live")?;
+    let cfg = engine.snapshot().meta.cfg.clone();
+    let label = engine.snapshot().meta.label.clone();
+
+    let rate = args.get_f32("arrival-rate", 256.0)?;
+    anyhow::ensure!(rate > 0.0, "--arrival-rate must be > 0 requests/s");
+    let seed = args.get_u64("trace-seed", 7)?;
+    let n_requests = args.get_usize("trace-requests", 64)?;
+    anyhow::ensure!(n_requests > 0, "--trace-requests must be > 0");
+    let dispatch = args.get_usize("dispatch", 1)?.max(1);
+    let queue_cap = args.get_usize("queue-cap", 0)?;
+    let priorities = args.flag("priorities");
+    let real = args.flag("real-clock");
+
+    let mean_gap = (TICKS_PER_SEC as f64 / rate as f64).max(1.0) as u64;
+    let spec = TraceSpec {
+        seed,
+        requests: n_requests,
+        mean_gap_ticks: mean_gap,
+        seq: cfg.seq,
+        vocab: cfg.vocab as u32,
+        priorities,
+    };
+    let trace = synth_trace(&spec);
+
+    println!(
+        "live serve: {} requests @ ~{rate:.0}/s (seed {seed}), {} clock, dispatch {dispatch}, \
+         queue cap {}, priorities {}",
+        trace.len(),
+        if real { "real" } else { "simulated" },
+        if queue_cap == 0 { "unlimited".to_string() } else { queue_cap.to_string() },
+        if priorities { "on" } else { "off (all batch)" },
+    );
+
+    // warm-up dispatch so the first cycle pays no first-call costs
+    engine.execute(&trace[0].request.rows[..1])?;
+
+    let scfg = SchedulerCfg {
+        queue_cap: if queue_cap == 0 { None } else { Some(queue_cap) },
+        dispatch,
+        ..Default::default()
+    };
+    let sim = SimClock::new();
+    let realc = RealClock::new();
+    let clock: &dyn Clock = if real { &realc } else { &sim };
+    let out = Scheduler::new(clock, scfg.clone()).run(&engine, &trace)?;
+
+    // optional determinism verification: replay the trace under the
+    // simulated clock at a second lane count; responses AND decisions must
+    // come out identical. When the measured run was already simulated it
+    // IS the baseline — no need to re-execute the model for it.
+    let verified = if args.flag("verify-determinism") {
+        let other = if dispatch == 1 { 4 } else { 1 };
+        let baseline = if real {
+            let c1 = SimClock::new();
+            Scheduler::new(&c1, scfg.clone()).run(&engine, &trace)?
+        } else {
+            out.clone()
+        };
+        let c2 = SimClock::new();
+        let b = Scheduler::new(&c2, SchedulerCfg { dispatch: other, ..scfg.clone() })
+            .run(&engine, &trace)?;
+        if baseline.responses != b.responses
+            || baseline.decisions != b.decisions
+            || baseline.cycles != b.cycles
+        {
+            bail!(
+                "deterministic replay FAILED: dispatch {dispatch} vs {other} diverged under \
+                 the simulated clock"
+            );
+        }
+        println!(
+            "deterministic replay verified: dispatch {dispatch} vs {other} identical \
+             (responses + decisions)"
+        );
+        Some(true)
+    } else {
+        None
+    };
+
+    let s = &out.stats;
+    let mut t = Table::new(
+        format!(
+            "live serve-bench ({} cycles, {} window dispatches/forward)",
+            out.cycles,
+            engine.plan_len()
+        ),
+        &["requests", "admitted", "rejected", "dispatches", "occupancy", "tok/s", "req/s", "wall"],
+    );
+    t.row(&[
+        s.requests.to_string(),
+        (s.requests - s.rejected).to_string(),
+        s.rejected.to_string(),
+        s.dispatches.to_string(),
+        format!("{:.1}%", s.occupancy() * 100.0),
+        fmt_f(s.tokens_per_s(), 0),
+        fmt_f(s.requests_per_s(), 1),
+        format!("{:.3}s", s.wall_seconds),
+    ]);
+    t.print();
+
+    let mut t = Table::new(
+        "per-class latency (queue wait / service, ms)",
+        &["class", "submitted", "done", "rejected", "q p50", "q p95", "q p99", "s p50", "s p95", "s p99"],
+    );
+    for c in &s.class_lat {
+        t.row(&[
+            c.class.clone(),
+            c.submitted.to_string(),
+            c.completed.to_string(),
+            c.rejected.to_string(),
+            fmt_f(c.queue_p50_s * 1e3, 2),
+            fmt_f(c.queue_p95_s * 1e3, 2),
+            fmt_f(c.queue_p99_s * 1e3, 2),
+            fmt_f(c.service_p50_s * 1e3, 2),
+            fmt_f(c.service_p95_s * 1e3, 2),
+            fmt_f(c.service_p99_s * 1e3, 2),
+        ]);
+    }
+    t.print();
+    if !real {
+        println!(
+            "(simulated clock: latencies are modeled at {} ticks/dispatch and \
+             replay-deterministic; pass --real-clock for wall-time latencies)",
+            scfg.service_ticks_per_dispatch
+        );
+    }
+
+    write_json(
+        args,
+        &Value::obj(vec![
+            ("command", Value::str("serve-bench")),
+            ("mode", Value::str("live")),
+            ("snapshot", Value::str(path)),
+            ("label", Value::str(label)),
+            ("backend", Value::str(rt.name())),
+            (
+                "live",
+                Value::obj(vec![
+                    ("trace_seed", Value::num(seed as f64)),
+                    ("arrival_rate", Value::num(rate as f64)),
+                    ("requests", Value::num(trace.len() as f64)),
+                    ("priorities", Value::Bool(priorities)),
+                    ("clock", Value::str(if real { "real" } else { "sim" })),
+                    ("queue_cap", Value::num(queue_cap as f64)),
+                    ("dispatch", Value::num(dispatch as f64)),
+                    ("cycles", Value::num(out.cycles as f64)),
+                    ("admitted", Value::num((s.requests - s.rejected) as f64)),
+                    ("rejected", Value::num(s.rejected as f64)),
+                    ("tokens_per_s", Value::num(s.tokens_per_s())),
+                    ("requests_per_s", Value::num(s.requests_per_s())),
+                    ("occupancy", Value::num(s.occupancy())),
+                    ("wall_seconds", Value::num(s.wall_seconds)),
+                    (
+                        "deterministic_replay",
+                        match verified {
+                            Some(v) => Value::Bool(v),
+                            None => Value::Null,
+                        },
+                    ),
+                    ("classes", Value::arr(s.class_lat.iter().map(class_lat_json).collect())),
+                ]),
+            ),
+            ("stats", serve_stats_json(s)),
+        ]),
+    )?;
+    Ok(())
 }
 
 /// `--model` with a sensible default: the artifacts' sole config when
@@ -482,16 +708,12 @@ fn main() -> Result<()> {
             )?;
         }
         "serve-bench" => {
-            let path = args
-                .get("snapshot")
-                .ok_or_else(|| anyhow!("serve-bench requires --snapshot PATH"))?;
-            let mut reg = ModelRegistry::new();
-            let snap = reg.load("bench", path)?;
-            let mism = snapshot::fingerprint_mismatches(&snap.meta.cfg, art.cfg(&snap.meta.cfg.name)?);
-            if !mism.is_empty() {
-                bail!("snapshot/artifacts mismatch:\n  {}", mism.join("\n  "));
+            if args.flag("live") {
+                return cmd_serve_live(&args, &art, rt);
             }
-            let seq = snap.meta.cfg.seq;
+            let (path, engine) = load_serve_engine(&args, &art, rt, "bench")?;
+            let label = engine.snapshot().meta.label.clone();
+            let seq = engine.snapshot().meta.cfg.seq;
             let n_ppl = args.get_usize("ppl-requests", 32)?;
             let n_choice = args.get_usize("choice-requests", 8)?;
             let n_hidden = args.get_usize("hidden-requests", 8)?;
@@ -505,11 +727,10 @@ fn main() -> Result<()> {
                 n_ppl,
                 n_choice,
                 n_hidden,
-                snap.meta.label,
+                label,
                 rt.name()
             );
 
-            let engine = ServeEngine::new(rt, &art, snap.clone())?;
             // warm-up dispatch so neither timed run pays first-call costs
             engine.execute(&requests[0].rows[..1])?;
 
@@ -549,7 +770,7 @@ fn main() -> Result<()> {
                 &Value::obj(vec![
                     ("command", Value::str("serve-bench")),
                     ("snapshot", Value::str(path)),
-                    ("label", Value::str(snap.meta.label.clone())),
+                    ("label", Value::str(label)),
                     ("backend", Value::str(rt.name())),
                     ("requests", Value::num(requests.len() as f64)),
                     ("queue_cap", Value::num(queue_cap as f64)),

@@ -110,6 +110,25 @@ impl Response {
     }
 }
 
+/// Per-priority-class latency accounting. Filled by the live scheduler
+/// (`serve::scheduler`), which measures queue wait (arrival -> dispatch)
+/// and service (dispatch -> completion) per class in clock ticks and
+/// reports nearest-rank percentiles in seconds. Plain burst runs leave
+/// `ServeStats::class_lat` empty.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClassLat {
+    pub class: String,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub queue_p50_s: f64,
+    pub queue_p95_s: f64,
+    pub queue_p99_s: f64,
+    pub service_p50_s: f64,
+    pub service_p95_s: f64,
+    pub service_p99_s: f64,
+}
+
 /// Throughput accounting for one batcher run.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
@@ -132,6 +151,9 @@ pub struct ServeStats {
     /// `dispatch_lanes` lanes over `wall_seconds`, lane occupancy is
     /// `lane_busy_seconds / (dispatch_lanes * wall_seconds)`)
     pub lane_busy_seconds: f64,
+    /// per-priority-class latency percentiles; empty unless the run came
+    /// from the live scheduler (`serve::scheduler::Scheduler::run`)
+    pub class_lat: Vec<ClassLat>,
 }
 
 impl ServeStats {
@@ -237,10 +259,14 @@ impl Batcher {
     /// choice request never ends up half-scored.
     ///
     /// Semantics: `run` drains a backlog that already arrived, so the cap
-    /// bounds the backlog admitted *per run* (classic admission control on
-    /// an offered burst) — capacity is not re-credited as dispatches
-    /// complete within the same run. A live arrival loop would call `run`
-    /// per drain cycle, re-admitting up to `cap` rows each time.
+    /// bounds the backlog admitted **per offered burst** — capacity is
+    /// *not* re-credited as dispatches complete within the same `run`
+    /// call (pinned by the `queue_cap_is_per_burst_without_scheduler`
+    /// regression test). Re-credited admission is the live scheduler's
+    /// job: `serve::scheduler::Scheduler` admits against the rows
+    /// *currently waiting*, returns capacity when a drain cycle dispatches
+    /// them, and calls `run` per cycle with requests it already admitted
+    /// (leaving this cap unset).
     pub fn with_queue_cap(mut self, cap: usize) -> Self {
         self.queue_cap = if cap == 0 { None } else { Some(cap) };
         self
@@ -655,6 +681,36 @@ mod tests {
         assert!(matches!(resp[0], Response::Ppl { .. }));
         assert_eq!(resp[1], Response::Rejected);
         assert!(matches!(resp[2], Response::Ppl { .. }));
+    }
+
+    /// Regression pin for the pre-scheduler semantics: within one `run`,
+    /// the cap bounds the whole offered burst — completing dispatches does
+    /// NOT re-credit capacity. (The live scheduler layers re-crediting on
+    /// top by calling `run` per drain cycle; see tests/scheduler.rs for
+    /// the contrast test.)
+    #[test]
+    fn queue_cap_is_per_burst_without_scheduler() {
+        let seq = 4;
+        let reqs: Vec<Request> = (0..8)
+            .map(|i| Request {
+                kind: RequestKind::Ppl,
+                rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
+            })
+            .collect();
+        // batch of 2: the 4 admitted rows take two dispatches, which both
+        // complete during the run — yet requests 4..8 stay rejected
+        let m = Mock::new(2, seq);
+        let (resp, stats) =
+            Batcher::coalescing(&m).with_queue_cap(4).run(&m, &reqs).unwrap();
+        assert_eq!(stats.rejected, 4, "completed dispatches must not re-credit the cap");
+        assert_eq!(stats.dispatches, 2);
+        assert_eq!(stats.rows, 4);
+        for r in &resp[..4] {
+            assert!(matches!(r, Response::Ppl { .. }));
+        }
+        for r in &resp[4..] {
+            assert_eq!(*r, Response::Rejected);
+        }
     }
 
     #[test]

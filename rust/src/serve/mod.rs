@@ -16,7 +16,15 @@
 //!   segments, zero-shot choice items, forward-hidden calls) into maximal
 //!   batches, optionally executes several window dispatches concurrently
 //!   (`with_dispatch`, CLI `--dispatch`), and reports tokens/s, requests/s,
-//!   batch occupancy and in-flight/lane-occupancy counters.
+//!   batch occupancy and in-flight/lane-occupancy counters;
+//! * [`scheduler::Scheduler`] — the live arrival loop on top of the
+//!   batcher: seeded synthetic traces, Interactive/Batch/Background
+//!   priority classes with weighted aging (no starvation), admission
+//!   capacity re-credited as drain cycles complete, and per-class
+//!   p50/p95/p99 queue+service latency folded into [`ServeStats`]. All
+//!   decisions run on [`clock::Clock`] ticks; under [`clock::SimClock`]
+//!   a trace replays to bitwise-identical responses and decisions for any
+//!   dispatch lane count (CLI `cbq serve-bench --live`).
 //!
 //! Memory: `Value`/`Tensor` storage is `Arc`-backed, so the registry's
 //! resident model, every engine bound to it, and every pinned executable
@@ -25,7 +33,9 @@
 //! `tests/backend.rs::export_load_serve_end_to_end_on_native`).
 
 pub mod batcher;
+pub mod clock;
 pub mod registry;
+pub mod scheduler;
 
 use std::sync::Arc;
 
@@ -35,8 +45,14 @@ use crate::coordinator::{window_plan, Pipeline};
 use crate::runtime::{Artifacts, Backend, Bindings, Pinned};
 use crate::tensor::{Tensor, TensorI32};
 
-pub use batcher::{Batcher, Request, RequestKind, Response, RowExecutor, RowOut, ServeStats, WorkRow};
+pub use batcher::{
+    Batcher, ClassLat, Request, RequestKind, Response, RowExecutor, RowOut, ServeStats, WorkRow,
+};
+pub use clock::{Clock, RealClock, SimClock, TICKS_PER_SEC};
 pub use registry::{LoadedSnapshot, ModelRegistry};
+pub use scheduler::{
+    synth_trace, Arrival, Decision, Lcg, LiveOutcome, Priority, Scheduler, SchedulerCfg, TraceSpec,
+};
 
 /// A snapshot model bound to the runtime: per-window pinned weight buffers
 /// plus the pinned LM head, ready for row-batch execution.

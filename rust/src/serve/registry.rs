@@ -10,10 +10,10 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::clock::{ticks_to_secs, Clock, RealClock};
 use crate::snapshot::{self, SnapshotMeta};
 use crate::coordinator::QuantizedModel;
 
@@ -60,7 +60,10 @@ impl ModelRegistry {
             }
             return Ok(hit.clone());
         }
-        let t0 = Instant::now();
+        // cold-start timing goes through the serve-layer Clock abstraction
+        // (real ticks here; loading is outside the scheduling decision path)
+        let clock = RealClock::new();
+        let t0 = clock.now();
         let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
         let snap = snapshot::load(&path)?;
         let loaded = Arc::new(LoadedSnapshot {
@@ -69,7 +72,7 @@ impl ModelRegistry {
             meta: snap.meta,
             model: snap.model,
             file_bytes,
-            load_seconds: t0.elapsed().as_secs_f64(),
+            load_seconds: ticks_to_secs(clock.now().saturating_sub(t0)),
         });
         self.models.insert(name.to_string(), loaded.clone());
         Ok(loaded)

@@ -1,0 +1,536 @@
+//! Live-arrival priority scheduler over the request batcher.
+//!
+//! `Batcher::run` drains a burst that already arrived; production traffic
+//! *arrives over time*. This module adds the arrival loop: requests carry
+//! an arrival tick and a [`Priority`] class, admission capacity is
+//! **re-credited** as drain cycles complete (the bounded queue limits rows
+//! *currently waiting*, not rows-per-burst as `Batcher::with_queue_cap`
+//! does), and each cycle drains the highest-scoring pending requests into
+//! one `Batcher::run` call.
+//!
+//! Scheduling score: `class weight + aging * wait_ticks`. Higher classes go
+//! first, but any waiting request's score grows without bound, so no class
+//! starves: a Background arrival overtakes a fresh Interactive one after
+//! `(w_interactive - w_background) / aging` ticks. Per cycle the scheduler
+//! drains a strict *prefix* of the score order (the top request always
+//! goes, then more while they fit the row budget), which keeps the
+//! ordering invariant exact: everything dispatched in a cycle outranks
+//! everything left pending at that cycle's decision time.
+//!
+//! Determinism: all decisions read time through [`Clock`] ticks. Under
+//! [`super::clock::SimClock`] the loop advances time itself — to the next
+//! arrival while idle, then by a fixed modeled cost per window dispatch —
+//! so a seeded trace replays to bitwise-identical responses and identical
+//! admission/ordering decisions for any dispatch lane count; there is no
+//! wall clock anywhere in the decision path. `rust/tests/scheduler.rs`
+//! asserts exactly that, plus conservation and starvation-freedom
+//! invariants over seeded traces.
+
+use anyhow::{ensure, Result};
+
+use super::batcher::{
+    Batcher, ClassLat, Request, RequestKind, Response, RowExecutor, ServeStats, WorkRow,
+};
+use super::clock::{ticks_to_secs, Clock};
+
+/// Request priority classes, highest first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Interactive,
+    Batch,
+    Background,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Batch, Priority::Background];
+
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+}
+
+/// One trace entry: `request` becomes visible `at` ticks after the run
+/// starts (offsets, not absolute times, so the same trace replays under
+/// any clock).
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    pub at: u64,
+    pub class: Priority,
+    pub request: Request,
+}
+
+/// Scheduler configuration. Defaults: unlimited queue, serial dispatch,
+/// 3:2:1 class weights with 1 score/tick aging (Background overtakes a
+/// fresh Interactive after 200ms of simulated waiting), 1ms modeled
+/// service per window dispatch.
+#[derive(Clone, Debug)]
+pub struct SchedulerCfg {
+    /// Bound on rows *currently queued* (`None` = unlimited). Unlike
+    /// `Batcher::with_queue_cap` (per offered burst), capacity here is
+    /// re-credited when a drain cycle dispatches the rows.
+    pub queue_cap: Option<usize>,
+    /// Max rows drained per cycle; 0 = four executor batches. The default
+    /// is deliberately independent of `dispatch`: cycle composition (and
+    /// with it every admission/ordering decision) must not change with the
+    /// lane count. Raise it explicitly to feed more than four lanes.
+    pub drain_rows: usize,
+    /// Dispatch lanes handed to the inner batcher per cycle.
+    pub dispatch: usize,
+    /// Base score per class, in [`Priority::ALL`] order (Interactive,
+    /// Batch, Background). Must be non-increasing to mean anything.
+    pub weights: [u64; 3],
+    /// Score gained per tick of waiting (0 = strict priority, may starve).
+    pub aging: u64,
+    /// Modeled ticks per window dispatch under a simulated clock. A real
+    /// clock ignores this and uses measured time.
+    pub service_ticks_per_dispatch: u64,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        Self {
+            queue_cap: None,
+            drain_rows: 0,
+            dispatch: 1,
+            weights: [300_000, 200_000, 100_000],
+            aging: 1,
+            service_ticks_per_dispatch: 1_000,
+        }
+    }
+}
+
+/// One entry per trace request: what the scheduler decided and when.
+/// Tests replay traces and assert invariants over this log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    pub seq: usize,
+    pub class: Priority,
+    /// Arrival in clock ticks (absolute, i.e. run start + trace offset).
+    pub arrival: u64,
+    pub rows: usize,
+    pub admitted: bool,
+    /// Drain cycle that dispatched it; `usize::MAX` if never dispatched
+    /// (rejected requests stay that way).
+    pub cycle: usize,
+    pub dispatch_time: u64,
+    pub complete_time: u64,
+}
+
+/// Everything a live run produces: responses in trace order (rejected
+/// slots hold [`Response::Rejected`]), aggregate stats with per-class
+/// latency folded in, and the full decision log.
+#[derive(Clone, Debug)]
+pub struct LiveOutcome {
+    pub responses: Vec<Response>,
+    pub stats: ServeStats,
+    pub decisions: Vec<Decision>,
+    pub cycles: usize,
+}
+
+/// The live arrival loop: admits trace arrivals against a re-credited row
+/// budget and drains by priority score each cycle.
+pub struct Scheduler<'c> {
+    pub cfg: SchedulerCfg,
+    clock: &'c dyn Clock,
+}
+
+impl<'c> Scheduler<'c> {
+    pub fn new(clock: &'c dyn Clock, cfg: SchedulerCfg) -> Self {
+        Self { cfg, clock }
+    }
+
+    fn score(&self, d: &Decision, now: u64) -> u64 {
+        let age = now.saturating_sub(d.arrival);
+        self.cfg.weights[d.class.index()].saturating_add(self.cfg.aging.saturating_mul(age))
+    }
+
+    /// Run the trace to completion: every arrival is admitted or rejected
+    /// exactly once, and every admitted request is dispatched.
+    pub fn run(&self, exec: &dyn RowExecutor, trace: &[Arrival]) -> Result<LiveOutcome> {
+        for w in trace.windows(2) {
+            ensure!(w[0].at <= w[1].at, "trace arrivals must be time-sorted");
+        }
+        let lanes = self.cfg.dispatch.max(1);
+        let batcher = Batcher::coalescing(exec).with_dispatch(lanes);
+        let cap_rows = exec.batch_rows().max(1);
+        // lane-count-independent default: decisions must be identical for
+        // any `dispatch`, so the budget must not scale with `lanes`
+        let drain_rows =
+            if self.cfg.drain_rows == 0 { cap_rows * 4 } else { self.cfg.drain_rows };
+
+        let start = self.clock.now();
+        let mut decisions: Vec<Decision> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, a)| Decision {
+                seq: i,
+                class: a.class,
+                arrival: start + a.at,
+                rows: a.request.rows.len(),
+                admitted: false,
+                cycle: usize::MAX,
+                dispatch_time: 0,
+                complete_time: 0,
+            })
+            .collect();
+        let mut responses = vec![Response::Rejected; trace.len()];
+        // seq ids of admitted, not-yet-dispatched requests
+        let mut pending: Vec<usize> = Vec::new();
+        let mut queued_rows = 0usize;
+        let mut next_ev = 0usize;
+        let mut agg =
+            ServeStats { requests: trace.len(), dispatch_lanes: lanes, ..Default::default() };
+        let mut cycles = 0usize;
+
+        while next_ev < trace.len() || !pending.is_empty() {
+            if pending.is_empty() {
+                // idle: jump (sim) / sleep (real) to the next arrival
+                self.clock.wait_until(start + trace[next_ev].at);
+            }
+            let now = self.clock.now();
+
+            // admit every arrival due by `now`, whole-request-or-not,
+            // against the rows currently queued (re-credited below)
+            while next_ev < trace.len() && start + trace[next_ev].at <= now {
+                let a = &trace[next_ev];
+                let rows = a.request.rows.len();
+                ensure!(rows > 0, "trace request {next_ev} has no rows");
+                let admit = match self.cfg.queue_cap {
+                    Some(c) => queued_rows + rows <= c,
+                    None => true,
+                };
+                if admit {
+                    decisions[next_ev].admitted = true;
+                    pending.push(next_ev);
+                    queued_rows += rows;
+                } else {
+                    agg.rejected += 1;
+                }
+                next_ev += 1;
+            }
+            if pending.is_empty() {
+                continue;
+            }
+
+            // rank pending by score (desc), then seq (asc): a deterministic
+            // total order — ties never depend on queue insertion history
+            pending.sort_by(|&a, &b| {
+                self.score(&decisions[b], now)
+                    .cmp(&self.score(&decisions[a], now))
+                    .then(a.cmp(&b))
+            });
+            // drain a strict prefix: the top request always goes (even if
+            // it alone exceeds the budget — the batcher chunks it), then
+            // more while they fit; stopping at the first non-fit keeps
+            // "dispatched this cycle outranks everything left" exact
+            let mut used = 0usize;
+            let mut n_take = 0usize;
+            for &seq in pending.iter() {
+                let r = decisions[seq].rows;
+                if n_take > 0 && used + r > drain_rows {
+                    break;
+                }
+                n_take += 1;
+                used += r;
+                if used >= drain_rows {
+                    break;
+                }
+            }
+            let selected: Vec<usize> = pending.drain(..n_take).collect();
+            let reqs: Vec<Request> =
+                selected.iter().map(|&s| trace[s].request.clone()).collect();
+            let (resp, st) = batcher.run(exec, &reqs)?;
+
+            // service time: modeled under simulation (deterministic — a
+            // pure function of the dispatch count, which is itself
+            // lane-independent), measured under a real clock
+            if self.clock.is_simulated() {
+                let ticks = (st.dispatches as u64).max(1)
+                    * self.cfg.service_ticks_per_dispatch.max(1);
+                self.clock.wait_until(now + ticks);
+            }
+            let done = self.clock.now().max(now + 1);
+
+            for (&seq, r) in selected.iter().zip(resp) {
+                responses[seq] = r;
+                let d = &mut decisions[seq];
+                d.cycle = cycles;
+                d.dispatch_time = now;
+                d.complete_time = done;
+                queued_rows -= d.rows; // re-credit admission capacity
+            }
+            cycles += 1;
+
+            agg.dispatches += st.dispatches;
+            agg.rows += st.rows;
+            agg.row_capacity += st.row_capacity;
+            agg.tokens += st.tokens;
+            // lane busy-time is *measured* wall time; under a simulated
+            // clock wall_seconds is modeled ticks, and mixing the two time
+            // bases would make lane_occupancy() meaningless — leave it (and
+            // lane_occupancy) at 0 there: "not measured"
+            if !self.clock.is_simulated() {
+                agg.lane_busy_seconds += st.lane_busy_seconds;
+            }
+            agg.peak_in_flight = agg.peak_in_flight.max(st.peak_in_flight);
+        }
+
+        agg.wall_seconds = ticks_to_secs(self.clock.now().saturating_sub(start));
+        agg.class_lat = class_latency(&decisions);
+        Ok(LiveOutcome { responses, stats: agg, decisions, cycles })
+    }
+}
+
+/// Nearest-rank percentile over a sorted slice (deterministic, no
+/// interpolation). Empty input reports 0.
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Fold the decision log into per-class latency stats (all three classes
+/// always present, so reports and CI assertions can key by name).
+fn class_latency(decisions: &[Decision]) -> Vec<ClassLat> {
+    Priority::ALL
+        .iter()
+        .map(|&c| {
+            let mut queue: Vec<u64> = Vec::new();
+            let mut service: Vec<u64> = Vec::new();
+            let (mut submitted, mut rejected) = (0usize, 0usize);
+            for d in decisions.iter().filter(|d| d.class == c) {
+                submitted += 1;
+                if !d.admitted {
+                    rejected += 1;
+                    continue;
+                }
+                if d.cycle == usize::MAX {
+                    continue; // admitted but never drained: impossible on a
+                              // completed run, skip defensively
+                }
+                queue.push(d.dispatch_time.saturating_sub(d.arrival));
+                service.push(d.complete_time.saturating_sub(d.dispatch_time));
+            }
+            queue.sort_unstable();
+            service.sort_unstable();
+            ClassLat {
+                class: c.name().to_string(),
+                submitted,
+                completed: queue.len(),
+                rejected,
+                queue_p50_s: ticks_to_secs(percentile(&queue, 0.50)),
+                queue_p95_s: ticks_to_secs(percentile(&queue, 0.95)),
+                queue_p99_s: ticks_to_secs(percentile(&queue, 0.99)),
+                service_p50_s: ticks_to_secs(percentile(&service, 0.50)),
+                service_p95_s: ticks_to_secs(percentile(&service, 0.95)),
+                service_p99_s: ticks_to_secs(percentile(&service, 0.99)),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// seeded synthetic arrival traces
+// ---------------------------------------------------------------------------
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants) — the only randomness
+/// source in the trace generator; no wall clock anywhere.
+#[derive(Clone, Debug)]
+pub struct Lcg(u64);
+
+impl Lcg {
+    pub fn new(seed: u64) -> Self {
+        // splash the seed so 0/1/2 don't produce near-identical streams
+        Self(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xD1B5_4A32_D192_ED03))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform in `[0, n)` using the high bits (the strong ones in an LCG).
+    pub fn below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        (self.next_u64() >> 33) % n
+    }
+}
+
+/// Trace-generation parameters for [`synth_trace`].
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub seed: u64,
+    pub requests: usize,
+    /// Mean inter-arrival gap in ticks, uniform in `[1, 2*mean]`
+    /// (0 = the whole trace arrives at t=0).
+    pub mean_gap_ticks: u64,
+    /// Row length every request must match (the executor's `seq`).
+    pub seq: usize,
+    /// Token ids are drawn below this bound (the serving model's vocab).
+    pub vocab: u32,
+    /// Mix Interactive/Batch/Background 50/30/20 vs all-Batch.
+    pub priorities: bool,
+}
+
+fn synth_tokens(rng: &mut Lcg, n: usize, vocab: u32) -> Vec<u32> {
+    (0..n).map(|_| rng.below(vocab.max(2) as u64) as u32).collect()
+}
+
+/// One synthetic request: ~50% perplexity, ~25% choice (two candidate
+/// rows), ~25% hidden. Content is a pure function of the LCG state.
+pub fn synth_request(rng: &mut Lcg, seq: usize, vocab: u32) -> Request {
+    match rng.below(4) {
+        0 => Request {
+            kind: RequestKind::Hidden,
+            rows: vec![WorkRow::from_tokens(&synth_tokens(rng, seq + 1, vocab), 0)],
+        },
+        1 => {
+            let correct = rng.below(2) as usize;
+            let rows = (0..2)
+                .map(|_| WorkRow::from_tokens(&synth_tokens(rng, seq + 1, vocab), seq / 2))
+                .collect();
+            Request { kind: RequestKind::Choice { correct }, rows }
+        }
+        _ => Request {
+            kind: RequestKind::Ppl,
+            rows: vec![WorkRow::from_tokens(&synth_tokens(rng, seq + 1, vocab), 0)],
+        },
+    }
+}
+
+/// Generate a time-sorted arrival trace. Same spec => bitwise-identical
+/// trace: arrivals, classes, and request token content all come from one
+/// seeded LCG.
+pub fn synth_trace(spec: &TraceSpec) -> Vec<Arrival> {
+    let mut rng = Lcg::new(spec.seed);
+    let mut at = 0u64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for _ in 0..spec.requests {
+        if spec.mean_gap_ticks > 0 {
+            at += 1 + rng.below(2 * spec.mean_gap_ticks);
+        }
+        let class = if spec.priorities {
+            match rng.below(10) {
+                0..=4 => Priority::Interactive,
+                5..=7 => Priority::Batch,
+                _ => Priority::Background,
+            }
+        } else {
+            Priority::Batch
+        };
+        let request = synth_request(&mut rng, spec.seq, spec.vocab);
+        out.push(Arrival { at, class, request });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lcg_is_deterministic_and_bounded() {
+        let mut a = Lcg::new(42);
+        let mut b = Lcg::new(42);
+        for _ in 0..100 {
+            let x = a.below(17);
+            assert_eq!(x, b.below(17));
+            assert!(x < 17);
+        }
+        let mut c = Lcg::new(43);
+        let diverged = (0..10).any(|_| a.next_u64() != c.next_u64());
+        assert!(diverged, "different seeds must produce different streams");
+        assert_eq!(Lcg::new(1).below(0), 0, "below(0) must not divide by zero");
+    }
+
+    #[test]
+    fn synth_trace_is_deterministic_sorted_and_well_formed() {
+        let spec = TraceSpec {
+            seed: 9,
+            requests: 40,
+            mean_gap_ticks: 250,
+            seq: 6,
+            vocab: 50,
+            priorities: true,
+        };
+        let a = synth_trace(&spec);
+        let b = synth_trace(&spec);
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.request.rows.len(), y.request.rows.len());
+            for (rx, ry) in x.request.rows.iter().zip(&y.request.rows) {
+                assert_eq!(rx.inputs, ry.inputs);
+                assert_eq!(rx.targets, ry.targets);
+                assert_eq!(rx.mask, ry.mask);
+            }
+        }
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at, "trace must be time-sorted");
+        }
+        for ev in &a {
+            for row in &ev.request.rows {
+                assert_eq!(row.inputs.len(), 6);
+                assert!(row.inputs.iter().all(|&t| (t as u32) < 50));
+            }
+        }
+        // a different seed changes the trace
+        let c = synth_trace(&TraceSpec { seed: 10, ..spec });
+        let same = a
+            .iter()
+            .zip(&c)
+            .all(|(x, y)| x.at == y.at && x.request.rows[0].inputs == y.request.rows[0].inputs);
+        assert!(!same, "seed must matter");
+    }
+
+    #[test]
+    fn trace_without_priorities_is_all_batch() {
+        let spec = TraceSpec {
+            seed: 3,
+            requests: 16,
+            mean_gap_ticks: 100,
+            seq: 4,
+            vocab: 20,
+            priorities: false,
+        };
+        assert!(synth_trace(&spec).iter().all(|a| a.class == Priority::Batch));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.95), 100);
+        assert_eq!(percentile(&v, 0.99), 100);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        assert_eq!(percentile(&[], 0.99), 0);
+    }
+
+    #[test]
+    fn priority_index_and_names_align() {
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+        }
+        assert_eq!(Priority::Interactive.name(), "interactive");
+        assert_eq!(Priority::Batch.name(), "batch");
+        assert_eq!(Priority::Background.name(), "background");
+    }
+}

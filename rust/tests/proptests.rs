@@ -4,6 +4,8 @@
 //! hand-rolled around xorshift64* (the same PRNG the corpus substrate uses):
 //! each property is checked over a few hundred random cases with
 //! deterministic seeds, and failures print the seed for replay.
+//! `PROPTEST_CASES=N` overrides the per-property case count (CI's
+//! scheduler-sim job runs the suite at an elevated count).
 
 use cbq::calib::corpus::XorShift64Star;
 use cbq::cfp;
@@ -12,6 +14,12 @@ use cbq::coordinator::qstate::LinearQ;
 use cbq::linalg::Mat;
 use cbq::quant;
 use cbq::tensor::Tensor;
+
+/// Per-property case count: the default, unless `PROPTEST_CASES` (the
+/// conventional proptest env var) overrides it globally.
+fn cases(default: u64) -> u64 {
+    std::env::var("PROPTEST_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 struct Gen(XorShift64Star);
 
@@ -42,7 +50,7 @@ impl Gen {
 /// Fake-quantized weights always land on the integer grid within clip range.
 #[test]
 fn prop_rtn_on_grid_and_in_range() {
-    for seed in 0..200u64 {
+    for seed in 0..cases(200) {
         let mut g = Gen::new(seed + 1);
         let (k, n) = (g.usize_in(1, 24), g.usize_in(1, 24));
         let bits = [2u8, 3, 4, 8][g.usize_in(0, 3)];
@@ -67,7 +75,7 @@ fn prop_rtn_on_grid_and_in_range() {
 /// RTN error is bounded by half a step for in-range weights.
 #[test]
 fn prop_rtn_error_bounded() {
-    for seed in 0..200u64 {
+    for seed in 0..cases(200) {
         let mut g = Gen::new(seed + 1000);
         let (k, n) = (g.usize_in(1, 16), g.usize_in(1, 16));
         let qm = qmax(4);
@@ -91,7 +99,7 @@ fn prop_rtn_error_bounded() {
 /// More bits never increases the per-matrix quantization MSE.
 #[test]
 fn prop_monotone_in_bits() {
-    for seed in 0..100u64 {
+    for seed in 0..cases(100) {
         let mut g = Gen::new(seed + 2000);
         let (k, n) = (g.usize_in(2, 20), g.usize_in(2, 20));
         let scale = g.f32_in(0.05, 3.0);
@@ -114,7 +122,7 @@ fn prop_monotone_in_bits() {
 /// weight at most one step from the floor.
 #[test]
 fn prop_finalize_bounded() {
-    for seed in 0..200u64 {
+    for seed in 0..cases(200) {
         let mut g = Gen::new(seed + 3000);
         let (k, n) = (g.usize_in(1, 16), g.usize_in(1, 16));
         let qm = qmax([2u8, 4][g.usize_in(0, 1)]);
@@ -147,7 +155,7 @@ fn prop_finalize_bounded() {
 /// Truncation never increases any magnitude and preserves every sign.
 #[test]
 fn prop_cfp_truncation_contracts() {
-    for seed in 0..200u64 {
+    for seed in 0..cases(200) {
         let mut g = Gen::new(seed + 4000);
         let n = g.usize_in(16, 400);
         let mut data: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
@@ -172,7 +180,7 @@ fn prop_cfp_truncation_contracts() {
 /// always >= 1 (activation scaling only ever shrinks channels).
 #[test]
 fn prop_cfp_detection_consistent() {
-    for seed in 0..200u64 {
+    for seed in 0..cases(200) {
         let mut g = Gen::new(seed + 5000);
         let n = g.usize_in(8, 300);
         let mut data: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 2.0)).collect();
@@ -199,7 +207,7 @@ fn prop_cfp_detection_consistent() {
 /// Rank projection is idempotent and Adam steps never break it.
 #[test]
 fn prop_rank_projection_invariant() {
-    for seed in 0..60u64 {
+    for seed in 0..cases(60) {
         let mut g = Gen::new(seed + 6000);
         let (fi, fo) = (g.usize_in(2, 32), g.usize_in(2, 32));
         let rank_pad = 8;
@@ -232,7 +240,7 @@ fn prop_rank_projection_invariant() {
 /// BitSpec per-layer overrides only ever touch the named (block, linear).
 #[test]
 fn prop_bitspec_overrides_local() {
-    for seed in 0..200u64 {
+    for seed in 0..cases(200) {
         let mut g = Gen::new(seed + 7000);
         let n_layers = g.usize_in(2, 12);
         let mut bits = BitSpec::new(2, 16);
@@ -252,7 +260,7 @@ fn prop_bitspec_overrides_local() {
 /// number of windows matches ceil((L - w) / step) + 1.
 #[test]
 fn prop_window_schedule() {
-    for seed in 0..300u64 {
+    for seed in 0..cases(300) {
         let mut g = Gen::new(seed + 8000);
         let l_total = g.usize_in(1, 24);
         let w = g.usize_in(1, l_total);
@@ -281,7 +289,7 @@ fn prop_window_schedule() {
 /// Cholesky-based SPD inverse satisfies A * inv(A) = I for random SPD A.
 #[test]
 fn prop_spd_inverse() {
-    for seed in 0..60u64 {
+    for seed in 0..cases(60) {
         let mut g = Gen::new(seed + 9000);
         let n = g.usize_in(1, 16);
         // A = B B^T + (n+1) I
@@ -315,7 +323,7 @@ fn prop_spd_inverse() {
 #[test]
 fn prop_v0_roundtrip() {
     use cbq::coordinator::qstate::v0_init;
-    for seed in 0..100u64 {
+    for seed in 0..cases(100) {
         let mut g = Gen::new(seed + 10000);
         let (k, n) = (g.usize_in(1, 16), g.usize_in(1, 16));
         let scale = g.f32_in(0.05, 2.0);
@@ -349,7 +357,7 @@ fn prop_v0_roundtrip() {
 #[test]
 fn prop_blocked_matmul_bitwise_matches_naive() {
     use cbq::runtime::backend::kernels as k;
-    for seed in 0..120u64 {
+    for seed in 0..cases(120) {
         let mut g = Gen::new(seed + 60000);
         let (m, kk, n) = (g.usize_in(1, 40), g.usize_in(1, 48), g.usize_in(1, 40));
         let plant_zeros = seed % 3 == 0;
@@ -391,7 +399,7 @@ fn prop_blocked_matmul_bitwise_matches_naive() {
 #[test]
 fn prop_blocked_matmul_matches_tensor_oracle() {
     use cbq::runtime::backend::kernels as k;
-    for seed in 0..60u64 {
+    for seed in 0..cases(60) {
         let mut g = Gen::new(seed + 61000);
         let (m, kk, n) = (g.usize_in(1, 24), g.usize_in(1, 24), g.usize_in(1, 24));
         let ta = g.tensor(m, kk, 1.0);
@@ -417,7 +425,7 @@ fn prop_blocked_matmul_matches_tensor_oracle() {
 #[test]
 fn prop_pack_unpack_roundtrip() {
     use cbq::tensor::io::PackedTensor;
-    for seed in 0..300u64 {
+    for seed in 0..cases(300) {
         let mut g = Gen::new(seed + 40000);
         let bits = [2u8, 4, 8][g.usize_in(0, 2)];
         let half = 1i32 << (bits - 1);
@@ -445,12 +453,153 @@ fn prop_pack_unpack_roundtrip() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// serve-stats invariants (batcher admission + accounting)
+// ---------------------------------------------------------------------------
+
+/// Minimal deterministic executor for serve-stats properties.
+struct RowMock {
+    batch: usize,
+    seq: usize,
+}
+
+impl cbq::serve::RowExecutor for RowMock {
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn execute(
+        &self,
+        rows: &[cbq::serve::WorkRow],
+    ) -> anyhow::Result<Vec<cbq::serve::RowOut>> {
+        Ok(rows
+            .iter()
+            .map(|r| cbq::serve::RowOut {
+                nll: r.targets.iter().zip(&r.mask).map(|(&t, &m)| t as f32 * m).sum(),
+                count: r.mask.iter().sum(),
+            })
+            .collect())
+    }
+}
+
+/// One random request: 1..=3 rows, random kind, tokens/score_from from `g`.
+fn random_request(g: &mut Gen, seq: usize) -> cbq::serve::Request {
+    use cbq::serve::{Request, RequestKind, WorkRow};
+    let n_rows = g.usize_in(1, 3);
+    let rows: Vec<WorkRow> = (0..n_rows)
+        .map(|_| {
+            let toks: Vec<u32> = (0..seq + 1).map(|_| g.usize_in(0, 97) as u32).collect();
+            WorkRow::from_tokens(&toks, g.usize_in(0, seq))
+        })
+        .collect();
+    let kind = match g.usize_in(0, 2) {
+        0 => RequestKind::Ppl,
+        1 => RequestKind::Choice { correct: g.usize_in(0, n_rows - 1) },
+        _ => RequestKind::Hidden,
+    };
+    Request { kind, rows }
+}
+
+/// For arbitrary request mixes, queue caps and lane counts, the ServeStats
+/// invariants hold: occupancy in [0,1], rows <= row_capacity,
+/// rejected <= requests, completed + rejected == submitted, token
+/// accounting exact, and the throughput rates are finite and >= 0.
+#[test]
+fn prop_serve_stats_invariants() {
+    use cbq::serve::{Batcher, Response};
+    for seed in 0..cases(200) {
+        let mut g = Gen::new(seed + 80000);
+        let seq = g.usize_in(1, 8);
+        let batch = g.usize_in(1, 6);
+        let n_req = g.usize_in(1, 30);
+        let cap = g.usize_in(0, 12); // 0 = unlimited
+        let dispatch = g.usize_in(1, 4);
+        let reqs: Vec<cbq::serve::Request> =
+            (0..n_req).map(|_| random_request(&mut g, seq)).collect();
+        let m = RowMock { batch, seq };
+        let (resp, stats) = Batcher::coalescing(&m)
+            .with_queue_cap(cap)
+            .with_dispatch(dispatch)
+            .run(&m, &reqs)
+            .unwrap_or_else(|e| panic!("seed {seed}: run failed: {e}"));
+
+        assert_eq!(stats.requests, n_req, "seed {seed}");
+        assert!(stats.rejected <= stats.requests, "seed {seed}");
+        assert!(stats.rows <= stats.row_capacity, "seed {seed}");
+        let occ = stats.occupancy();
+        assert!((0.0..=1.0).contains(&occ), "seed {seed}: occupancy {occ}");
+        assert_eq!(stats.tokens, stats.rows * seq, "seed {seed}");
+
+        // conservation via the responses themselves
+        assert_eq!(resp.len(), n_req, "seed {seed}");
+        let completed = resp.iter().filter(|r| !matches!(r, Response::Rejected)).count();
+        assert_eq!(completed + stats.rejected, n_req, "seed {seed}");
+
+        // admitted row accounting: executed rows == sum of admitted rows
+        let admitted_rows: usize = reqs
+            .iter()
+            .zip(&resp)
+            .filter(|(_, r)| !matches!(r, Response::Rejected))
+            .map(|(q, _)| q.rows.len())
+            .sum();
+        assert_eq!(stats.rows, admitted_rows, "seed {seed}");
+
+        // rates never underflow or go non-finite
+        let rps = stats.requests_per_s();
+        assert!(rps.is_finite() && rps >= 0.0, "seed {seed}: requests/s {rps}");
+        let tps = stats.tokens_per_s();
+        assert!(tps.is_finite() && tps >= 0.0, "seed {seed}: tokens/s {tps}");
+        assert!(stats.lane_occupancy() >= 0.0, "seed {seed}");
+    }
+}
+
+/// Degenerate overload: a cap smaller than every request rejects the whole
+/// mix, and the stats stay well-defined — `requests_per_s` must come out 0,
+/// not underflow, with zero dispatches and occupancy 0.
+#[test]
+fn prop_serve_stats_all_rejected_no_underflow() {
+    use cbq::serve::{Batcher, RequestKind, Response};
+    for seed in 0..cases(100) {
+        let mut g = Gen::new(seed + 90000);
+        let seq = g.usize_in(1, 6);
+        let batch = g.usize_in(2, 6);
+        let n_req = g.usize_in(1, 20);
+        // every request needs >= 2 rows; cap 1 can never admit one
+        let reqs: Vec<cbq::serve::Request> = (0..n_req)
+            .map(|_| {
+                let mut r = random_request(&mut g, seq);
+                while r.rows.len() < 2 {
+                    let extra = r.rows[0].clone();
+                    r.rows.push(extra);
+                }
+                if let RequestKind::Choice { correct } = &mut r.kind {
+                    *correct = (*correct).min(r.rows.len() - 1);
+                }
+                r
+            })
+            .collect();
+        let m = RowMock { batch, seq };
+        let (resp, stats) =
+            Batcher::coalescing(&m).with_queue_cap(1).run(&m, &reqs).unwrap();
+        assert_eq!(stats.rejected, n_req, "seed {seed}: everything must be rejected");
+        assert!(resp.iter().all(|r| matches!(r, Response::Rejected)), "seed {seed}");
+        assert_eq!(stats.rows, 0, "seed {seed}");
+        assert_eq!(stats.dispatches, 0, "seed {seed}");
+        assert_eq!(stats.tokens, 0, "seed {seed}");
+        assert_eq!(stats.occupancy(), 0.0, "seed {seed}");
+        assert_eq!(stats.requests_per_s(), 0.0, "seed {seed}: rejected-only run must be 0 req/s");
+        assert_eq!(stats.tokens_per_s(), 0.0, "seed {seed}");
+    }
+}
+
 /// Packed entries survive the shared entry codec byte-exactly for every
 /// supported bit width (the CBQS on-disk path).
 #[test]
 fn prop_packed_entry_codec_roundtrip() {
     use cbq::tensor::io::{read_entry, write_entry, ByteReader, Entry, PackedTensor};
-    for seed in 0..100u64 {
+    for seed in 0..cases(100) {
         let mut g = Gen::new(seed + 50000);
         let bits = [2u8, 4, 8][g.usize_in(0, 2)];
         let half = 1i32 << (bits - 1);

@@ -1,0 +1,474 @@
+//! Deterministic simulation + invariant harness for the live-arrival
+//! priority scheduler (`serve::scheduler`).
+//!
+//! Seeded synthetic traces replay under the virtual clock and the tests
+//! assert the scheduling contract *exactly* (equality, not tolerance):
+//!
+//! * conservation — admitted + rejected == offered; every admitted request
+//!   completes with a real response, every rejected slot is
+//!   `Response::Rejected`;
+//! * determinism — the same seed replays to bitwise-identical responses
+//!   and an identical decision log, for any dispatch lane count;
+//! * real-vs-sim — with an unbounded queue (admission cannot depend on
+//!   timing) responses are bitwise-identical under the real clock too;
+//! * priority ordering up to aging — per drain cycle, everything
+//!   dispatched outranks (score-wise, at that cycle's decision time)
+//!   everything left pending;
+//! * starvation freedom — with aging enabled a Background request
+//!   overtakes a saturating Interactive stream; with aging disabled it
+//!   demonstrably starves until the stream ends;
+//! * re-credited admission — the scheduler's queue cap bounds rows
+//!   *currently waiting* (capacity returns as cycles drain), contrasted
+//!   against the batcher's per-burst cap on the identical offered load.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use cbq::serve::clock::{RealClock, SimClock};
+use cbq::serve::scheduler::{synth_trace, Arrival, Priority, Scheduler, SchedulerCfg, TraceSpec};
+use cbq::serve::{
+    Batcher, LiveOutcome, Request, RequestKind, Response, RowExecutor, RowOut, WorkRow,
+};
+
+const SEQ: usize = 6;
+const BATCH: usize = 4;
+
+/// Deterministic executor: every row's result is a pure function of its
+/// own content, so any schedule must produce identical responses.
+struct Mock {
+    batch: usize,
+    seq: usize,
+    rows_executed: AtomicUsize,
+}
+
+impl Mock {
+    fn new(batch: usize, seq: usize) -> Self {
+        Self { batch, seq, rows_executed: AtomicUsize::new(0) }
+    }
+
+    fn rows_executed(&self) -> usize {
+        self.rows_executed.load(Ordering::SeqCst)
+    }
+}
+
+impl RowExecutor for Mock {
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn execute(&self, rows: &[WorkRow]) -> anyhow::Result<Vec<RowOut>> {
+        assert!(!rows.is_empty() && rows.len() <= self.batch);
+        self.rows_executed.fetch_add(rows.len(), Ordering::SeqCst);
+        Ok(rows
+            .iter()
+            .map(|r| RowOut {
+                nll: r
+                    .targets
+                    .iter()
+                    .zip(&r.mask)
+                    .map(|(&t, &m)| (t % 23) as f32 * 0.25 * m)
+                    .sum(),
+                count: r.mask.iter().sum(),
+            })
+            .collect())
+    }
+}
+
+fn spec(seed: u64) -> TraceSpec {
+    TraceSpec { seed, requests: 60, mean_gap_ticks: 400, seq: SEQ, vocab: 40, priorities: true }
+}
+
+fn run_once(trace: &[Arrival], cfg: SchedulerCfg) -> (LiveOutcome, usize) {
+    let m = Mock::new(BATCH, SEQ);
+    let clock = SimClock::new();
+    let out = Scheduler::new(&clock, cfg).run(&m, trace).unwrap();
+    (out, m.rows_executed())
+}
+
+/// Single-row perplexity request with deterministic token content.
+fn ppl1(tok: u32) -> Request {
+    ppl_rows(tok, 1)
+}
+
+/// n-row perplexity request with deterministic token content.
+fn ppl_rows(tok: u32, n_rows: usize) -> Request {
+    let rows = (0..n_rows)
+        .map(|r| {
+            let toks: Vec<u32> =
+                (0..SEQ as u32 + 1).map(|i| (tok + 7 * r as u32 + i) % 40).collect();
+            WorkRow::from_tokens(&toks, 0)
+        })
+        .collect();
+    Request { kind: RequestKind::Ppl, rows }
+}
+
+/// Mirror of the scheduler's scoring function, recomputed independently.
+fn score(cfg: &SchedulerCfg, class: Priority, arrival: u64, now: u64) -> u64 {
+    cfg.weights[class.index()] + cfg.aging * (now - arrival)
+}
+
+// ---------------------------------------------------------------------------
+// determinism + conservation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_replay_is_deterministic_and_conserves() {
+    for seed in [3u64, 17, 99] {
+        let trace = synth_trace(&spec(seed));
+        let cfg = SchedulerCfg { queue_cap: Some(6), ..Default::default() };
+        let (a, rows_a) = run_once(&trace, cfg.clone());
+        let (b, rows_b) = run_once(&trace, cfg.clone());
+        assert_eq!(a.responses, b.responses, "seed {seed}: responses must replay bitwise");
+        assert_eq!(a.decisions, b.decisions, "seed {seed}: decisions must replay identically");
+        assert_eq!(a.cycles, b.cycles, "seed {seed}");
+        assert_eq!(rows_a, rows_b, "seed {seed}");
+
+        // conservation: every request admitted or rejected exactly once
+        let admitted = a.decisions.iter().filter(|d| d.admitted).count();
+        let rejected = a.decisions.iter().filter(|d| !d.admitted).count();
+        assert_eq!(admitted + rejected, trace.len(), "seed {seed}");
+        assert_eq!(a.stats.rejected, rejected, "seed {seed}");
+        for d in &a.decisions {
+            if d.admitted {
+                assert_ne!(
+                    d.cycle,
+                    usize::MAX,
+                    "seed {seed}: admitted request {} never dispatched",
+                    d.seq
+                );
+                assert!(
+                    !matches!(a.responses[d.seq], Response::Rejected),
+                    "seed {seed}: admitted request {} answered Rejected",
+                    d.seq
+                );
+                assert!(d.dispatch_time >= d.arrival, "seed {seed}: dispatched before arrival");
+                assert!(d.complete_time > d.dispatch_time, "seed {seed}: zero service time");
+            } else {
+                assert_eq!(a.responses[d.seq], Response::Rejected, "seed {seed}");
+            }
+        }
+
+        // aggregate ServeStats invariants
+        assert_eq!(a.stats.requests, trace.len(), "seed {seed}");
+        assert!(a.stats.rejected <= a.stats.requests, "seed {seed}");
+        assert!(a.stats.rows <= a.stats.row_capacity, "seed {seed}");
+        assert!(
+            a.stats.occupancy() >= 0.0 && a.stats.occupancy() <= 1.0,
+            "seed {seed}: occupancy {}",
+            a.stats.occupancy()
+        );
+        let admitted_rows: usize =
+            a.decisions.iter().filter(|d| d.admitted).map(|d| d.rows).sum();
+        assert_eq!(a.stats.rows, admitted_rows, "seed {seed}: executed rows == admitted rows");
+        assert_eq!(rows_a, admitted_rows, "seed {seed}: executor saw exactly the admitted rows");
+    }
+}
+
+#[test]
+fn responses_and_decisions_identical_across_dispatch_lanes() {
+    for seed in [5u64, 29, 71] {
+        let trace = synth_trace(&spec(seed));
+        let base = SchedulerCfg { queue_cap: Some(10), ..Default::default() };
+        let (r1, rows1) = run_once(&trace, SchedulerCfg { dispatch: 1, ..base.clone() });
+        for lanes in [2usize, 4, 8] {
+            let (rn, rowsn) = run_once(&trace, SchedulerCfg { dispatch: lanes, ..base.clone() });
+            assert_eq!(
+                rn.responses, r1.responses,
+                "seed {seed}: {lanes} lanes changed responses"
+            );
+            assert_eq!(
+                rn.decisions, r1.decisions,
+                "seed {seed}: {lanes} lanes changed admission/ordering decisions"
+            );
+            assert_eq!(rn.cycles, r1.cycles, "seed {seed}");
+            assert_eq!(rowsn, rows1, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn real_and_sim_clocks_agree_bitwise_on_responses() {
+    // unbounded queue: admission cannot depend on timing, so the answers
+    // must be bitwise-identical even though real cycle boundaries differ.
+    // small tick values keep the real run to a few ms of sleeping.
+    let trace = synth_trace(&TraceSpec {
+        seed: 13,
+        requests: 40,
+        mean_gap_ticks: 150,
+        seq: SEQ,
+        vocab: 40,
+        priorities: true,
+    });
+    let cfg = SchedulerCfg::default();
+
+    let m_sim = Mock::new(BATCH, SEQ);
+    let sim = SimClock::new();
+    let out_sim = Scheduler::new(&sim, cfg.clone()).run(&m_sim, &trace).unwrap();
+
+    let m_real = Mock::new(BATCH, SEQ);
+    let real = RealClock::new();
+    let out_real = Scheduler::new(&real, cfg).run(&m_real, &trace).unwrap();
+
+    assert_eq!(out_sim.responses, out_real.responses, "clock choice changed answers");
+    assert_eq!(out_sim.stats.rejected, 0);
+    assert_eq!(out_real.stats.rejected, 0);
+    assert_eq!(m_sim.rows_executed(), m_real.rows_executed());
+    assert_eq!(out_sim.stats.class_lat.len(), 3);
+    assert_eq!(out_real.stats.class_lat.len(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// priority ordering + starvation freedom
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dispatched_outrank_pending_up_to_aging() {
+    for seed in [11u64, 47, 83] {
+        let trace = synth_trace(&spec(seed));
+        let cfg = SchedulerCfg::default();
+        let (out, _) = run_once(&trace, cfg.clone());
+        for c in 0..out.cycles {
+            let batch: Vec<_> = out.decisions.iter().filter(|d| d.cycle == c).collect();
+            assert!(!batch.is_empty(), "seed {seed}: cycle {c} dispatched nothing");
+            let t = batch[0].dispatch_time;
+            assert!(
+                batch.iter().all(|d| d.dispatch_time == t),
+                "seed {seed}: cycle {c} has mixed dispatch times"
+            );
+            // pending at this decision time: admitted, arrived by t, but
+            // dispatched in a strictly later cycle
+            let pending: Vec<_> = out
+                .decisions
+                .iter()
+                .filter(|d| d.admitted && d.arrival <= t && d.cycle > c)
+                .collect();
+            for d in &batch {
+                let sd = score(&cfg, d.class, d.arrival, t);
+                for p in &pending {
+                    let sp = score(&cfg, p.class, p.arrival, t);
+                    assert!(
+                        sd > sp || (sd == sp && d.seq < p.seq),
+                        "seed {seed} cycle {c}: dispatched #{} (score {sd}) ranked behind \
+                         pending #{} (score {sp})",
+                        d.seq,
+                        p.seq
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn aging_prevents_background_starvation_and_strict_priority_starves() {
+    // one Background request at t=0 under an Interactive stream that
+    // saturates the drain budget: 4-row requests every 100 ticks against a
+    // 4-row budget drained every 200 ticks (one dispatch x 200
+    // ticks/dispatch), so Interactive work is always pending mid-trace.
+    let mut trace =
+        vec![Arrival { at: 0, class: Priority::Background, request: ppl1(1) }];
+    for i in 0..40usize {
+        trace.push(Arrival {
+            at: i as u64 * 100,
+            class: Priority::Interactive,
+            request: ppl_rows(100 + i as u32, BATCH),
+        });
+    }
+    let aged = SchedulerCfg {
+        drain_rows: BATCH,
+        aging: 1000,
+        service_ticks_per_dispatch: 200,
+        ..Default::default()
+    };
+    let (out, _) = run_once(&trace, aged);
+    let bg = &out.decisions[0];
+    assert!(bg.admitted);
+    assert!(
+        bg.cycle <= 5,
+        "aging must let the background request overtake the stream, got cycle {}",
+        bg.cycle
+    );
+    let last_interactive_dispatch = out
+        .decisions
+        .iter()
+        .filter(|d| d.class == Priority::Interactive)
+        .map(|d| d.dispatch_time)
+        .max()
+        .unwrap();
+    assert!(
+        bg.dispatch_time < last_interactive_dispatch,
+        "background must be served mid-stream, not after it"
+    );
+
+    // strict priority (aging = 0): the identical trace starves the
+    // background request until every interactive is done
+    let strict = SchedulerCfg {
+        drain_rows: BATCH,
+        aging: 0,
+        service_ticks_per_dispatch: 200,
+        ..Default::default()
+    };
+    let (out, _) = run_once(&trace, strict);
+    let bg = &out.decisions[0];
+    assert_eq!(bg.cycle, out.cycles - 1, "strict priority must starve background to the end");
+    for d in out.decisions.iter().filter(|d| d.class == Priority::Interactive) {
+        assert!(
+            d.dispatch_time <= bg.dispatch_time,
+            "interactive #{} dispatched after the starved background request",
+            d.seq
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// re-credited admission (vs the batcher's per-burst cap)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scheduler_recredits_queue_capacity_across_cycles() {
+    // 12 single-row requests spaced wider than a drain cycle: the live
+    // queue never holds more than one, so a cap of 4 admits all of them
+    let trace: Vec<Arrival> = (0..12)
+        .map(|i| Arrival {
+            at: i as u64 * 2000,
+            class: Priority::Batch,
+            request: ppl1(i as u32),
+        })
+        .collect();
+    let cfg = SchedulerCfg {
+        queue_cap: Some(4),
+        service_ticks_per_dispatch: 500,
+        ..Default::default()
+    };
+    let (out, _) = run_once(&trace, cfg);
+    assert_eq!(out.stats.rejected, 0, "re-credited capacity must admit a drained-out stream");
+    assert!(out.responses.iter().all(|r| !matches!(r, Response::Rejected)));
+
+    // the identical 12 requests as one pre-arrived burst through the plain
+    // batcher: the per-burst cap rejects 8 (regression-pinned semantics)
+    let m = Mock::new(BATCH, SEQ);
+    let reqs: Vec<Request> = trace.iter().map(|a| a.request.clone()).collect();
+    let (resp, stats) = Batcher::coalescing(&m).with_queue_cap(4).run(&m, &reqs).unwrap();
+    assert_eq!(stats.rejected, 8, "per-burst cap must not re-credit");
+    assert_eq!(resp.iter().filter(|r| matches!(r, Response::Rejected)).count(), 8);
+}
+
+#[test]
+fn burst_overflow_rejects_tail_then_recredits_for_late_arrivals() {
+    // 8 single-row requests land in the same tick against a cap of 4: the
+    // first 4 (arrival order) are admitted, the tail rejected. 4 more
+    // arrive after the queue drained — all admitted via re-credit.
+    let mut trace: Vec<Arrival> = (0..8)
+        .map(|i| Arrival { at: 0, class: Priority::Batch, request: ppl1(50 + i as u32) })
+        .collect();
+    for i in 0..4 {
+        trace.push(Arrival {
+            at: 50_000,
+            class: Priority::Batch,
+            request: ppl1(90 + i as u32),
+        });
+    }
+    let cfg = SchedulerCfg { queue_cap: Some(4), ..Default::default() };
+    let (out, _) = run_once(&trace, cfg);
+    assert_eq!(out.stats.rejected, 4);
+    let rejected_seqs: Vec<usize> =
+        out.decisions.iter().filter(|d| !d.admitted).map(|d| d.seq).collect();
+    assert_eq!(rejected_seqs, vec![4, 5, 6, 7], "overflow must reject the burst tail");
+    assert!(
+        out.decisions[8..].iter().all(|d| d.admitted),
+        "late arrivals must be re-admitted after the queue drains"
+    );
+}
+
+#[test]
+fn rejected_requests_do_no_model_work() {
+    let trace: Vec<Arrival> = (0..10)
+        .map(|i| Arrival { at: 0, class: Priority::Batch, request: ppl1(i as u32) })
+        .collect();
+    let cfg = SchedulerCfg { queue_cap: Some(3), ..Default::default() };
+    let m = Mock::new(BATCH, SEQ);
+    let clock = SimClock::new();
+    let out = Scheduler::new(&clock, cfg).run(&m, &trace).unwrap();
+    assert_eq!(out.stats.rejected, 7);
+    assert_eq!(m.rows_executed(), 3, "rejected requests must never reach the executor");
+    assert_eq!(out.stats.rows, 3);
+}
+
+// ---------------------------------------------------------------------------
+// accounting + edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn class_latency_accounting_is_consistent() {
+    let trace = synth_trace(&spec(23));
+    let cfg = SchedulerCfg { queue_cap: Some(8), ..Default::default() };
+    let (out, _) = run_once(&trace, cfg);
+    let cl = &out.stats.class_lat;
+    assert_eq!(cl.len(), 3);
+    assert_eq!(cl[0].class, "interactive");
+    assert_eq!(cl[1].class, "batch");
+    assert_eq!(cl[2].class, "background");
+    let submitted: usize = cl.iter().map(|c| c.submitted).sum();
+    assert_eq!(submitted, trace.len());
+    let completed: usize = cl.iter().map(|c| c.completed).sum();
+    let rejected: usize = cl.iter().map(|c| c.rejected).sum();
+    assert_eq!(completed + rejected, trace.len());
+    assert_eq!(rejected, out.stats.rejected);
+    for c in cl {
+        assert_eq!(c.completed + c.rejected, c.submitted, "{c:?}");
+        assert!(c.queue_p50_s <= c.queue_p95_s && c.queue_p95_s <= c.queue_p99_s, "{c:?}");
+        assert!(
+            c.service_p50_s <= c.service_p95_s && c.service_p95_s <= c.service_p99_s,
+            "{c:?}"
+        );
+        if c.completed > 0 {
+            assert!(c.service_p50_s > 0.0, "service is at least one tick: {c:?}");
+        }
+    }
+    // the decision log mirrors the trace exactly
+    for (i, a) in trace.iter().enumerate() {
+        let d = &out.decisions[i];
+        assert_eq!(d.seq, i);
+        assert_eq!(d.class, a.class);
+        assert_eq!(d.rows, a.request.rows.len());
+    }
+}
+
+#[test]
+fn oversized_request_dispatches_alone_in_chunks() {
+    // a 10-row request against a 4-row budget: the head-of-line rule takes
+    // it alone and the batcher chunks it — progress is guaranteed
+    let trace =
+        vec![Arrival { at: 0, class: Priority::Batch, request: ppl_rows(5, 10) }];
+    let cfg = SchedulerCfg { drain_rows: BATCH, ..Default::default() };
+    let (out, rows) = run_once(&trace, cfg);
+    assert_eq!(rows, 10);
+    assert_eq!(out.cycles, 1);
+    assert_eq!(out.stats.dispatches, 3, "10 rows at batch 4 = 4+4+2");
+    assert!(matches!(out.responses[0], Response::Ppl { .. }));
+}
+
+#[test]
+fn unsorted_trace_is_rejected() {
+    let trace = vec![
+        Arrival { at: 100, class: Priority::Batch, request: ppl1(0) },
+        Arrival { at: 0, class: Priority::Batch, request: ppl1(1) },
+    ];
+    let m = Mock::new(BATCH, SEQ);
+    let clock = SimClock::new();
+    let err = Scheduler::new(&clock, SchedulerCfg::default()).run(&m, &trace).unwrap_err();
+    assert!(format!("{err:#}").contains("time-sorted"), "{err:#}");
+}
+
+#[test]
+fn empty_trace_completes_with_empty_outcome() {
+    let m = Mock::new(BATCH, SEQ);
+    let clock = SimClock::new();
+    let out = Scheduler::new(&clock, SchedulerCfg::default()).run(&m, &[]).unwrap();
+    assert!(out.responses.is_empty());
+    assert_eq!(out.cycles, 0);
+    assert_eq!(out.stats.requests, 0);
+    assert_eq!(out.stats.rejected, 0);
+    assert_eq!(m.rows_executed(), 0);
+}

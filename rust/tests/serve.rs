@@ -284,6 +284,106 @@ fn empty_request_rows_are_rejected() {
     assert!(Batcher::coalescing(&m).run(&m, &reqs).is_err());
 }
 
+// -- executor error paths ----------------------------------------------------
+
+/// Executor that returns one result too few for every dispatch.
+struct WrongCount {
+    batch: usize,
+    seq: usize,
+}
+
+impl RowExecutor for WrongCount {
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn execute(&self, rows: &[WorkRow]) -> anyhow::Result<Vec<RowOut>> {
+        Ok(vec![RowOut::default(); rows.len() - 1])
+    }
+}
+
+/// Executor that always fails, counting how many dispatches reached it.
+struct AlwaysFails {
+    batch: usize,
+    seq: usize,
+    calls: std::sync::atomic::AtomicUsize,
+}
+
+impl RowExecutor for AlwaysFails {
+    fn batch_rows(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn execute(&self, _rows: &[WorkRow]) -> anyhow::Result<Vec<RowOut>> {
+        self.calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        anyhow::bail!("executor exploded")
+    }
+}
+
+fn single_row_requests(n: u32, seq: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let toks: Vec<u32> = (0..seq as u32 + 1).map(|k| (i + k) % 31).collect();
+            Request { kind: RequestKind::Ppl, rows: vec![WorkRow::from_tokens(&toks, 0)] }
+        })
+        .collect()
+}
+
+/// A wrong result count must fail the serial and the concurrent dispatch
+/// path with the same error — result validation is shared, so the paths
+/// cannot drift.
+#[test]
+fn wrong_result_count_fails_serial_and_concurrent_identically() {
+    let seq = 4;
+    // 12 single-row requests at batch 4: every chunk has exactly 4 rows,
+    // so both schedules produce the same (deterministic) message
+    let reqs = single_row_requests(12, seq);
+
+    let m = WrongCount { batch: 4, seq };
+    let err_serial = Batcher::coalescing(&m).run(&m, &reqs).unwrap_err();
+    let err_concurrent =
+        Batcher::coalescing(&m).with_dispatch(4).run(&m, &reqs).unwrap_err();
+
+    let s1 = format!("{err_serial:#}");
+    let s2 = format!("{err_concurrent:#}");
+    assert!(s1.contains("executor returned 3 results for 4 rows"), "{s1}");
+    assert_eq!(s1, s2, "serial and concurrent dispatch must report the same error");
+}
+
+/// A failing dispatch must stop the remaining lanes promptly: no hang, no
+/// partial `Response::Ok`, and far fewer executor calls than chunks.
+#[test]
+fn failure_stops_concurrent_lanes_promptly_without_partial_results() {
+    let seq = 4;
+    let lanes = 4;
+    // batch 1 => 40 chunks; every call fails, so each lane can execute at
+    // most one chunk before it returns and flags the rest down
+    let reqs = single_row_requests(40, seq);
+    let m = AlwaysFails { batch: 1, seq, calls: std::sync::atomic::AtomicUsize::new(0) };
+    let err = Batcher::coalescing(&m).with_dispatch(lanes).run(&m, &reqs).unwrap_err();
+    assert!(format!("{err:#}").contains("exploded"), "{err:#}");
+    let calls = m.calls.load(std::sync::atomic::Ordering::SeqCst);
+    assert!(
+        (1..=lanes).contains(&calls),
+        "failed flag must stop lanes promptly: {calls} calls for 40 chunks"
+    );
+}
+
+/// The serial path fails on the first chunk — exactly one executor call.
+#[test]
+fn failure_stops_serial_run_on_first_chunk() {
+    let seq = 4;
+    let reqs = single_row_requests(12, seq);
+    let m = AlwaysFails { batch: 4, seq, calls: std::sync::atomic::AtomicUsize::new(0) };
+    let err = Batcher::coalescing(&m).run(&m, &reqs).unwrap_err();
+    assert!(format!("{err:#}").contains("exploded"), "{err:#}");
+    assert_eq!(m.calls.load(std::sync::atomic::Ordering::SeqCst), 1);
+}
+
 #[test]
 fn dispatch_concurrency_preserves_answers_and_accounting() {
     // the serve test the issue asks for: drive the batcher with
