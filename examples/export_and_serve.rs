@@ -10,7 +10,9 @@ use cbq::config::{BitSpec, QuantJob};
 use cbq::coordinator::Pipeline;
 use cbq::report::{fmt_bytes, fmt_f, Table};
 use cbq::runtime::{self, Artifacts, Backend as _};
-use cbq::serve::{batcher, Batcher, ModelRegistry, RowExecutor, ServeEngine};
+use cbq::serve::{
+    batcher, Batcher, EngineOptions, LoadMode, ModelRegistry, RowExecutor, ServeEngine,
+};
 use cbq::snapshot;
 
 fn main() -> anyhow::Result<()> {
@@ -41,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     // --- reload: bit-exact ------------------------------------------------
     let mut registry = ModelRegistry::new();
     let snap = registry.load("t-w4a16", &path)?;
-    let ppl_disk = pipe.perplexity(&snap.model, Style::C4, 4)?;
+    let ppl_disk = pipe.perplexity(snap.model.expect_eager()?, Style::C4, 4)?;
     println!("ppl(c4): in-memory {ppl_mem:.6} vs snapshot {ppl_disk:.6}");
     assert_eq!(ppl_mem, ppl_disk, "snapshot round-trip must be bit-exact");
 
@@ -73,6 +75,27 @@ fn main() -> anyhow::Result<()> {
     println!(
         "batched speedup: {:.2}x tokens/s",
         batched.tokens_per_s() / oneby.tokens_per_s().max(1e-12)
+    );
+
+    // --- larger-than-RAM mode: mmap + bounded window residency ------------
+    // the same snapshot, opened as a memory-mapped lazy view: windows are
+    // unpacked on first touch and at most one stays resident; responses are
+    // bitwise-identical to the eager engine's
+    let mmap_snap = registry.load_with("t-w4a16-mmap", &path, LoadMode::Mmap)?;
+    let opts = EngineOptions { resident_windows: Some(1), resident_bytes: None };
+    let lazy_engine = ServeEngine::with_options(rt, &art, mmap_snap, opts)?;
+    let (resp_lazy, _) = Batcher::coalescing(&lazy_engine).run(&lazy_engine, &requests)?;
+    let (resp_eager, _) = Batcher::coalescing(&engine).run(&engine, &requests)?;
+    assert_eq!(resp_lazy, resp_eager, "mmap serving must be bitwise-identical");
+    let res = lazy_engine.residency();
+    println!(
+        "mmap serving: identical responses with {} window(s) resident \
+         (peak {} KiB unpacked, {} faults / {} hits / {} evictions)",
+        res.resident_windows,
+        res.peak_bytes / 1024,
+        res.faults,
+        res.hits,
+        res.evictions,
     );
     std::fs::remove_file(&path).ok();
     Ok(())

@@ -28,7 +28,10 @@ use cbq::report::{fmt_f, Table};
 use cbq::runtime::backend::kernels;
 use cbq::runtime::{self, Artifacts, Backend as _, Bindings, Value};
 use cbq::serve::scheduler::{synth_trace, Scheduler, SchedulerCfg, TraceSpec};
-use cbq::serve::{batcher, Batcher, ModelRegistry, RealClock, RowExecutor as _, ServeEngine};
+use cbq::serve::{
+    batcher, Batcher, EngineOptions, LoadMode, ModelRegistry, RealClock, RowExecutor as _,
+    ServeEngine,
+};
 use cbq::tensor::Tensor;
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
@@ -196,7 +199,6 @@ fn main() {
         .with_dispatch(dispatch)
         .run(&engine, &requests)
         .unwrap();
-    std::fs::remove_file(&snap_path).ok();
     let mut t = Table::new(
         format!("serve-bench ({} requests, dispatch {dispatch})", requests.len()),
         &["mode", "tok/s", "occupancy", "in-flight", "wall"],
@@ -211,6 +213,66 @@ fn main() {
         ]);
     }
     t.print();
+
+    // ---- mmap vs eager: cold start + steady state -------------------------
+    // cold start = registry load + engine bind + first response (the
+    // time-to-first-response a serving box pays after a restart); steady
+    // state = batched tokens/s once windows are faulted in. The mmap
+    // engine runs with a 1-window residency budget — worst case for
+    // throughput, best case for memory — and its responses are asserted
+    // bitwise-identical to the eager engine's.
+    let one_row = &requests[0].rows[..1];
+    let t0 = Instant::now();
+    let mut reg_e = ModelRegistry::new();
+    let snap_e = reg_e.load_with("mm-eager", &snap_path, LoadMode::Eager).unwrap();
+    let eager_engine = ServeEngine::new(rt, &art, snap_e).unwrap();
+    eager_engine.execute(one_row).unwrap();
+    let cold_eager_s = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let mut reg_m = ModelRegistry::new();
+    let snap_m = reg_m.load_with("mm-mmap", &snap_path, LoadMode::Mmap).unwrap();
+    let mmap_engine = ServeEngine::with_options(
+        rt,
+        &art,
+        snap_m,
+        EngineOptions { resident_windows: Some(1), resident_bytes: None },
+    )
+    .unwrap();
+    mmap_engine.execute(one_row).unwrap();
+    let cold_mmap_s = t0.elapsed().as_secs_f64();
+
+    let (resp_e, st_eager) =
+        Batcher::coalescing(&eager_engine).run(&eager_engine, &requests).unwrap();
+    let (resp_m, st_mmap) =
+        Batcher::coalescing(&mmap_engine).run(&mmap_engine, &requests).unwrap();
+    let mmap_identical = resp_e == resp_m;
+    let res_m = mmap_engine.residency();
+    let res_e = eager_engine.residency();
+    let mut t = Table::new(
+        "mmap vs eager serving (cold start + steady state)",
+        &["mode", "cold start (ms)", "steady tok/s", "resident bytes"],
+    );
+    t.row(&[
+        "eager".into(),
+        fmt_f(cold_eager_s * 1e3, 1),
+        fmt_f(st_eager.tokens_per_s(), 0),
+        format!("{}", res_e.resident_bytes),
+    ]);
+    t.row(&[
+        "mmap (1 window)".into(),
+        fmt_f(cold_mmap_s * 1e3, 1),
+        fmt_f(st_mmap.tokens_per_s(), 0),
+        format!("{} peak", res_m.peak_bytes),
+    ]);
+    t.print();
+    println!(
+        "mmap responses identical: {}; {} faults / {} hits / {} evictions",
+        if mmap_identical { "yes" } else { "NO — serving bug" },
+        res_m.faults,
+        res_m.hits,
+        res_m.evictions
+    );
 
     // ---- live arrival loop (priority scheduler over the engine) -----------
     // real clock: arrivals are slept to, service time is measured — this is
@@ -254,6 +316,7 @@ fn main() {
         live.stats.rejected
     );
 
+    std::fs::remove_file(&snap_path).ok();
     let stats = rt.stats();
     println!(
         "\ntotals: {} execs, {:.1}ms exec time, {:.1} MiB uploaded",
@@ -286,6 +349,21 @@ fn main() {
                 ("occupancy", J::num(st_par.occupancy())),
                 ("peak_in_flight", J::num(st_par.peak_in_flight as f64)),
                 ("lane_occupancy", J::num(st_par.lane_occupancy())),
+            ]),
+        ),
+        (
+            "mmap",
+            J::obj(vec![
+                ("cold_start_eager_s", J::num(cold_eager_s)),
+                ("cold_start_mmap_s", J::num(cold_mmap_s)),
+                ("steady_eager_tokens_per_s", J::num(st_eager.tokens_per_s())),
+                ("steady_mmap_tokens_per_s", J::num(st_mmap.tokens_per_s())),
+                ("responses_identical", J::Bool(mmap_identical)),
+                ("resident_windows_budget", J::num(1.0)),
+                ("mmap_peak_resident_bytes", J::num(res_m.peak_bytes as f64)),
+                ("eager_resident_bytes", J::num(res_e.resident_bytes as f64)),
+                ("mmap_faults", J::num(res_m.faults as f64)),
+                ("mmap_evictions", J::num(res_m.evictions as f64)),
             ]),
         ),
         (

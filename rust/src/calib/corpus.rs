@@ -5,6 +5,13 @@
 //! both sides implement the identical xorshift64*-driven generator; parity
 //! is asserted against artifacts/corpus_ref.json in the integration tests.
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 pub const SEGMENT_LEN: usize = 32;
 pub const CONTENT_V: u64 = 240;
 pub const TOPIC_BASE: u32 = 240;

@@ -6,6 +6,13 @@
 //! continuation tasks (the zero-shot accuracy analog — lm-eval scores
 //! PIQA/HellaSwag/ARC exactly this way, by comparing continuation NLLs).
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 pub mod corpus;
 
 use corpus::{Style, XorShift64Star, CONTENT_V, N_TOPICS, SEGMENT_LEN, TOPIC_BASE};

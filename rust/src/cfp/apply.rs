@@ -10,6 +10,13 @@
 //!   * `wdown`     input = silu(gate) * up    -> fold via `wup` columns
 //!     (the `up` factor is linear in the channel).
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 
 use crate::config::PreprocMethod;

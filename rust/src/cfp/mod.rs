@@ -13,6 +13,13 @@
 //!     migrated into adjacent weights as an exact equivalent transform
 //!     (see [`apply`]).
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 pub mod apply;
 pub mod baselines;
 

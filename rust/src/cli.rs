@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use anyhow::{Context, Result};
 
 #[derive(Debug, Default)]
+/// Parsed command line: one command plus `--key value` pairs and bare switches.
 pub struct Args {
     command: Option<String>,
     kv: BTreeMap<String, String>,
@@ -13,6 +14,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse an argv stream (the grammar in the module docs).
     pub fn parse(argv: impl Iterator<Item = String>) -> Self {
         let mut out = Args::default();
         let items: Vec<String> = argv.collect();
@@ -45,18 +47,22 @@ impl Args {
         out
     }
 
+    /// The (first) positional command token, if any.
     pub fn command(&self) -> Option<&str> {
         self.command.as_deref()
     }
 
+    /// Value of `--key`, if bound.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.kv.get(key).map(|s| s.as_str())
     }
 
+    /// Was `--key` given as a bare switch?
     pub fn flag(&self, key: &str) -> bool {
         self.switches.iter().any(|s| s == key)
     }
 
+    /// `--key` as usize, with a default when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got `{v}`")),
@@ -64,6 +70,7 @@ impl Args {
         }
     }
 
+    /// `--key` as u64, with a default when absent.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got `{v}`")),
@@ -71,6 +78,7 @@ impl Args {
         }
     }
 
+    /// `--key` as f32, with a default when absent.
     pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
         match self.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} expects a float, got `{v}`")),

@@ -4,6 +4,13 @@
 //! sweeps.
 
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 /// Bit-width specification. `bits_a = 16` disables activation quantization
 /// (weight-only mode); per-layer overrides implement CBQ* (Table 1: FC2 of
 /// the first and last block promoted to 4-bit under W2A16).

@@ -13,6 +13,13 @@
 //! [`Backend`] (PJRT-compiled AOT HLO, or the native CPU interpreter);
 //! this module owns state, scheduling, optimization and bookkeeping.
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 pub mod qstate;
 
 use std::collections::BTreeMap;

@@ -2,6 +2,13 @@
 //! coordinator applies to the gradients coming back from the `win_grad_*`
 //! executables (the L2 graphs compute gradients; L3 owns all state).
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 use crate::config::RoundingMode;
 use crate::quant::{self, GAMMA, ZETA};
 use crate::tensor::Tensor;

@@ -5,6 +5,13 @@
 //! `lm_eval_*` (final-norm + LM head + masked NLL) executables; the host
 //! only does embedding gathers and score bookkeeping.
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 
 use anyhow::Result;

@@ -15,15 +15,19 @@ use crate::tensor::Tensor;
 
 /// Accumulates the per-linear Gram matrix `X^T X` over calibration batches.
 pub struct GptqHessian {
+    /// Accumulated X^T X Gram matrix (f64).
     pub gram: Mat,
+    /// Calibration rows folded in so far.
     pub rows_seen: usize,
 }
 
 impl GptqHessian {
+    /// Empty accumulator for a `fan_in`-wide linear.
     pub fn new(fan_in: usize) -> Self {
         Self { gram: Mat::zeros(fan_in), rows_seen: 0 }
     }
 
+    /// Fold a captured `[rows, fan_in]` activation matrix in.
     pub fn accumulate(&mut self, x: &Tensor) {
         assert_eq!(x.cols(), self.gram.n);
         gram_accumulate(&mut self.gram, &x.data, x.cols());

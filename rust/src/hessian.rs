@@ -18,6 +18,7 @@ use crate::coordinator::Pipeline;
 use crate::quant::LINEARS;
 use crate::tensor::Tensor;
 
+/// Finite-difference probe of the inter-block loss Hessian (Fig. 1).
 pub struct HessianProbe<'p, 'a> {
     pipe: &'p Pipeline<'a>,
     h0: Tensor,
@@ -26,6 +27,7 @@ pub struct HessianProbe<'p, 'a> {
 }
 
 impl<'p, 'a> HessianProbe<'p, 'a> {
+    /// Set up a probe of `pipe`'s model at the given bit spec.
     pub fn new(pipe: &'p Pipeline<'a>, bits: BitSpec) -> Result<Self> {
         let batch = &calib::calibration(pipe.cfg.batch, pipe.cfg.batch, pipe.cfg.seq)[0];
         let x = batch.inputs();

@@ -3,6 +3,13 @@
 //! closure, so serde_json is hand-rolled; the manifest grammar is plain
 //! JSON with no escapes beyond \" \\ \/ \n \t \r \u.)
 
+
+// TODO(docs): this module's public surface predates the crate-wide
+// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
+// a follow-up documentation pass. New public items here should still be
+// documented.
+#![allow(missing_docs)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};

@@ -8,15 +8,19 @@ use anyhow::{ensure, Result};
 /// Row-major square f64 matrix.
 #[derive(Clone, Debug)]
 pub struct Mat {
+    /// Matrix order.
     pub n: usize,
+    /// Row-major elements, `n * n` of them.
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zeros n x n matrix.
     pub fn zeros(n: usize) -> Self {
         Self { n, data: vec![0.0; n * n] }
     }
 
+    /// Identity matrix.
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n);
         for i in 0..n {
@@ -25,20 +29,24 @@ impl Mat {
         m
     }
 
+    /// Element `[i, j]`.
     pub fn at(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.n + j]
     }
 
+    /// Set element `[i, j]`.
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         self.data[i * self.n + j] = v;
     }
 
+    /// Add `v` to every diagonal element (damping).
     pub fn add_diag(&mut self, v: f64) {
         for i in 0..self.n {
             self.data[i * self.n + i] += v;
         }
     }
 
+    /// Mean of the diagonal.
     pub fn mean_diag(&self) -> f64 {
         (0..self.n).map(|i| self.at(i, i)).sum::<f64>() / self.n as f64
     }
@@ -93,6 +101,7 @@ impl Mat {
         Ok(inv)
     }
 
+    /// Dense n x n matrix product.
     pub fn matmul(&self, b: &Mat) -> Mat {
         let n = self.n;
         let mut out = Mat::zeros(n);

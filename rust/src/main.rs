@@ -38,7 +38,10 @@ use cbq::hessian::{offdiag_ratio, HessianProbe};
 use cbq::json::{self, Value};
 use cbq::report::{fmt_bytes, fmt_f, heatmap, Table};
 use cbq::runtime::{self, synth, Artifacts, Backend};
-use cbq::serve::{batcher, Batcher, ClassLat, ModelRegistry, RowExecutor, ServeEngine, ServeStats};
+use cbq::serve::{
+    batcher, Batcher, ClassLat, EngineOptions, LoadMode, ModelRegistry, RowExecutor, ServeEngine,
+    ServeStats,
+};
 use cbq::snapshot;
 
 const USAGE: &str = "\
@@ -69,8 +72,11 @@ COMMANDS
             load a snapshot, verify fingerprint + checksum, evaluate
             perplexity (bit-exact vs the in-memory pipeline)
   snapshot-info --snapshot snap.cbqs [--json out.json]
-            header, per-tensor bit widths + packed sizes, checksum status,
-            fingerprint check against the artifacts config when available
+            header, per-tensor bit widths + packed sizes + file offsets,
+            checksum status, fingerprint check against the artifacts config
+            when available, and resident-vs-mapped byte accounting
+            (unpacked / eager-resident / per-block estimates for sizing
+            CBQ_RESIDENT_MB)
   serve-bench --snapshot snap.cbqs [--ppl-requests 32]
             [--choice-requests 8] [--hidden-requests 8] [--queue-cap 0]
             [--dispatch 1] [--json out.json]
@@ -79,6 +85,14 @@ COMMANDS
             overflow requests are rejected and counted); --dispatch N
             executes up to N window batches concurrently (CBQ_THREADS
             sizes the shared kernel worker pool)
+            mmap mode: --mmap [--resident-windows N]
+            memory-map the snapshot instead of decoding it up front:
+            windows are unpacked+pinned on first touch and an LRU keeps at
+            most N windows (or CBQ_RESIDENT_MB bytes) of unpacked tensors
+            resident — models larger than RAM serve window-by-window. The
+            one-by-one reference then runs on a separate eager engine, so
+            "responses identical" doubles as the mmap==eager bitwise gate;
+            residency (faults/hits/evictions, peak bytes) is reported
             live mode: --live [--arrival-rate 256] [--trace-seed 7]
             [--trace-requests 64] [--priorities] [--real-clock]
             [--verify-determinism]
@@ -198,27 +212,88 @@ fn class_lat_json(c: &ClassLat) -> Value {
     ])
 }
 
+/// Residency options from the CLI/environment: `--resident-windows` wins
+/// over the `CBQ_RESIDENT_MB` default [`EngineOptions::from_env`] reads.
+fn engine_options(args: &Args) -> Result<EngineOptions> {
+    let mut opts = EngineOptions::from_env();
+    if let Some(n) = args.get("resident-windows") {
+        let n: usize = n
+            .parse()
+            .map_err(|_| anyhow!("--resident-windows expects an integer, got `{n}`"))?;
+        anyhow::ensure!(n >= 1, "--resident-windows must be >= 1");
+        opts.resident_windows = Some(n);
+    }
+    Ok(opts)
+}
+
 /// Shared by the burst and live serve-bench paths: resolve `--snapshot`,
-/// load it under `name`, verify the fingerprint against the artifacts and
-/// bind a pinned engine. Keeping this in one place means the two paths
-/// cannot drift.
+/// load it under `name` (mmap-lazily when `mode` says so), verify the
+/// fingerprint against the artifacts and bind an engine with the CLI's
+/// residency budget. Keeping this in one place means the paths cannot
+/// drift.
 fn load_serve_engine<'rt>(
     args: &Args,
     art: &'rt Artifacts,
     rt: &'rt dyn Backend,
     name: &str,
+    mode: LoadMode,
 ) -> Result<(String, ServeEngine<'rt>)> {
     let path = args
         .get("snapshot")
         .ok_or_else(|| anyhow!("serve-bench requires --snapshot PATH"))?;
     let mut reg = ModelRegistry::new();
-    let snap = reg.load(name, path)?;
+    let snap = reg.load_with(name, path, mode)?;
     let mism = snapshot::fingerprint_mismatches(&snap.meta.cfg, art.cfg(&snap.meta.cfg.name)?);
     if !mism.is_empty() {
         bail!("snapshot/artifacts mismatch:\n  {}", mism.join("\n  "));
     }
-    let engine = ServeEngine::new(rt, art, snap)?;
+    if mode == LoadMode::Mmap {
+        if let Some(lazy) = snap.model.lazy() {
+            if !lazy.is_mapped() {
+                println!(
+                    "note: --mmap requested but the file is not memory-mapped \
+                     ({}); windows still load lazily",
+                    if lazy.container().version == 1 {
+                        "v1 snapshot — re-export for true mapped loading"
+                    } else {
+                        "mapping unavailable on this platform/configuration"
+                    }
+                );
+            }
+        }
+    }
+    let engine = ServeEngine::with_options(rt, art, snap, engine_options(args)?)?;
     Ok((path.to_string(), engine))
+}
+
+/// Pretty one-liner for an engine's residency accounting.
+fn residency_line(engine: &ServeEngine) -> String {
+    let r = engine.residency();
+    format!(
+        "{}/{} windows resident, {} unpacked (peak {}), {} faults / {} hits / {} evictions",
+        r.resident_windows,
+        engine.plan_len(),
+        fmt_bytes(r.resident_bytes),
+        fmt_bytes(r.peak_bytes),
+        r.faults,
+        r.hits,
+        r.evictions,
+    )
+}
+
+fn residency_json(engine: &ServeEngine) -> Value {
+    let r = engine.residency();
+    Value::obj(vec![
+        ("lazy", Value::Bool(engine.is_lazy())),
+        ("plan_windows", Value::num(engine.plan_len() as f64)),
+        ("resident_windows", Value::num(r.resident_windows as f64)),
+        ("resident_bytes", Value::num(r.resident_bytes as f64)),
+        ("peak_windows", Value::num(r.peak_windows as f64)),
+        ("peak_bytes", Value::num(r.peak_bytes as f64)),
+        ("faults", Value::num(r.faults as f64)),
+        ("hits", Value::num(r.hits as f64)),
+        ("evictions", Value::num(r.evictions as f64)),
+    ])
 }
 
 /// `cbq serve-bench --live`: replay a seeded synthetic arrival trace
@@ -227,7 +302,8 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
     use cbq::serve::clock::{Clock, RealClock, SimClock, TICKS_PER_SEC};
     use cbq::serve::scheduler::{synth_trace, Scheduler, SchedulerCfg, TraceSpec};
 
-    let (path, engine) = load_serve_engine(args, art, rt, "live")?;
+    let mode = if args.flag("mmap") { LoadMode::Mmap } else { LoadMode::Eager };
+    let (path, engine) = load_serve_engine(args, art, rt, "live", mode)?;
     let cfg = engine.snapshot().meta.cfg.clone();
     let label = engine.snapshot().meta.label.clone();
 
@@ -347,6 +423,9 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
         ]);
     }
     t.print();
+    if engine.is_lazy() {
+        println!("mmap residency: {}", residency_line(&engine));
+    }
     if !real {
         println!(
             "(simulated clock: latencies are modeled at {} ticks/dispatch and \
@@ -391,6 +470,7 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
                 ]),
             ),
             ("stats", serve_stats_json(s)),
+            ("residency", residency_json(&engine)),
         ]),
     )?;
     Ok(())
@@ -483,15 +563,52 @@ fn cmd_snapshot_info(args: &Args) -> Result<()> {
         fmt_bytes(info.packed_code_bytes),
         fmt_bytes(info.f32_bytes)
     );
+
+    // resident-vs-mapped accounting: what the file costs to *serve*, not
+    // just to store — this is what sizes CBQ_RESIDENT_MB
+    let mut t = Table::new("resident-vs-mapped accounting", &["figure", "bytes", "meaning"]);
+    t.row(&["on disk".into(), fmt_bytes(info.file_bytes), "the CBQS file".into()]);
+    t.row(&["unpacked".into(), fmt_bytes(info.unpacked_bytes), "all tensors as f32".into()]);
+    t.row(&[
+        "eager resident".into(),
+        fmt_bytes(info.resident_estimate_bytes),
+        "full load (incl. per-linear v0)".into(),
+    ]);
+    t.row(&[
+        "per-block max".into(),
+        fmt_bytes(info.max_block_resident_bytes),
+        "largest block, pinned".into(),
+    ]);
+    t.print();
+    println!(
+        "sizing: a width-w pinned window keeps ~w x {} resident; set \
+         CBQ_RESIDENT_MB / --resident-windows from that",
+        fmt_bytes(info.max_block_resident_bytes)
+    );
+    if info.version >= 2 {
+        println!(
+            "offset table: {} records, payloads 64-byte aligned (mmap-lazy loadable)",
+            info.tensors.len()
+        );
+    } else {
+        println!("offset table: none on disk (v1 frame) — re-export for mmap-lazy loading");
+    }
+
     let mut largest: Vec<_> = info.tensors.iter().collect();
     largest.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.name.cmp(&b.name)));
-    let mut t = Table::new("largest tensors", &["name", "dtype", "dims", "bytes"]);
+    let mut t = Table::new(
+        "largest tensors",
+        &["name", "dtype", "dims", "bytes", "unpacked", "offset", "block"],
+    );
     for ti in largest.iter().take(8) {
         t.row(&[
             ti.name.clone(),
             if ti.dtype == "packed" { format!("w{}", ti.bits) } else { "f32".into() },
             format!("{:?}", ti.dims),
             fmt_bytes(ti.bytes as u64),
+            fmt_bytes(ti.unpacked_bytes),
+            format!("0x{:x}", ti.offset),
+            if ti.group < 0 { "-".into() } else { ti.group.to_string() },
         ]);
     }
     t.print();
@@ -509,6 +626,9 @@ fn cmd_snapshot_info(args: &Args) -> Result<()> {
             ("file_bytes", Value::num(info.file_bytes as f64)),
             ("packed_code_bytes", Value::num(info.packed_code_bytes as f64)),
             ("f32_bytes", Value::num(info.f32_bytes as f64)),
+            ("unpacked_bytes", Value::num(info.unpacked_bytes as f64)),
+            ("resident_estimate_bytes", Value::num(info.resident_estimate_bytes as f64)),
+            ("max_block_resident_bytes", Value::num(info.max_block_resident_bytes as f64)),
             ("checksum_ok", Value::Bool(info.checksum_ok)),
             (
                 "packed_by_bits",
@@ -520,6 +640,31 @@ fn cmd_snapshot_info(args: &Args) -> Result<()> {
                                 ("bits", Value::num(bits as f64)),
                                 ("tensors", Value::num(n as f64)),
                                 ("bytes", Value::num(bytes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "offset_table",
+                Value::arr(
+                    info.tensors
+                        .iter()
+                        .map(|ti| {
+                            Value::obj(vec![
+                                ("name", Value::str(ti.name.clone())),
+                                ("dtype", Value::str(ti.dtype)),
+                                ("bits", Value::num(ti.bits as f64)),
+                                (
+                                    "dims",
+                                    Value::arr(
+                                        ti.dims.iter().map(|&d| Value::num(d as f64)).collect(),
+                                    ),
+                                ),
+                                ("bytes", Value::num(ti.bytes as f64)),
+                                ("unpacked_bytes", Value::num(ti.unpacked_bytes as f64)),
+                                ("offset", Value::num(ti.offset as f64)),
+                                ("group", Value::num(ti.group as f64)),
                             ])
                         })
                         .collect(),
@@ -711,7 +856,9 @@ fn main() -> Result<()> {
             if args.flag("live") {
                 return cmd_serve_live(&args, &art, rt);
             }
-            let (path, engine) = load_serve_engine(&args, &art, rt, "bench")?;
+            let mmap = args.flag("mmap");
+            let mode = if mmap { LoadMode::Mmap } else { LoadMode::Eager };
+            let (path, engine) = load_serve_engine(&args, &art, rt, "bench", mode)?;
             let label = engine.snapshot().meta.label.clone();
             let seq = engine.snapshot().meta.cfg.seq;
             let n_ppl = args.get_usize("ppl-requests", 32)?;
@@ -722,17 +869,33 @@ fn main() -> Result<()> {
             let requests = batcher::standard_mix(seq, n_ppl, n_choice, n_hidden);
             anyhow::ensure!(!requests.is_empty(), "request mix is empty — raise --ppl-requests");
             println!(
-                "serving {} requests ({} ppl / {} choice / {} hidden) from {} on {} backend",
+                "serving {} requests ({} ppl / {} choice / {} hidden) from {} on {} backend{}",
                 requests.len(),
                 n_ppl,
                 n_choice,
                 n_hidden,
                 label,
-                rt.name()
+                rt.name(),
+                if mmap { ", mmap-lazy windows" } else { "" },
             );
 
+            // under --mmap the one-by-one reference runs on a separate,
+            // eagerly loaded engine, so the "responses identical" check
+            // doubles as the mmap-vs-eager bitwise-equality gate
+            let eager_engine = if mmap {
+                Some(load_serve_engine(&args, &art, rt, "bench-eager", LoadMode::Eager)?.1)
+            } else {
+                None
+            };
+            let ref_engine: &ServeEngine = eager_engine.as_ref().unwrap_or(&engine);
+
             // warm-up dispatch so neither timed run pays first-call costs
+            // (the reference engine only needs its own warm-up when it is
+            // a distinct eager engine, i.e. under --mmap)
             engine.execute(&requests[0].rows[..1])?;
+            if let Some(ref e) = eager_engine {
+                e.execute(&requests[0].rows[..1])?;
+            }
 
             let (resp_b, stats_b) = Batcher::coalescing(&engine)
                 .with_queue_cap(queue_cap)
@@ -740,10 +903,11 @@ fn main() -> Result<()> {
                 .run(&engine, &requests)?;
             let (resp_s, stats_s) = Batcher::sequential()
                 .with_queue_cap(queue_cap)
-                .run(&engine, &requests)?;
+                .run(ref_engine, &requests)?;
 
             // both schedules must produce identical answers (full structural
-            // compare: ppl sums, choice picks + scores, hidden token counts)
+            // compare: ppl sums, choice picks + scores, hidden token counts);
+            // with --mmap this also proves lazy == eager bitwise
             let agree = resp_b == resp_s;
 
             let mut t = Table::new(
@@ -756,14 +920,28 @@ fn main() -> Result<()> {
                     "in-flight", "lane-occ", "wall",
                 ],
             );
-            serve_stats_row(&mut t, "batched", &stats_b);
+            serve_stats_row(&mut t, if mmap { "batched (mmap)" } else { "batched" }, &stats_b);
             serve_stats_row(&mut t, "one-by-one", &stats_s);
             t.print();
             let speedup = stats_b.tokens_per_s() / stats_s.tokens_per_s().max(1e-12);
             println!(
                 "batched speedup: {speedup:.2}x tokens/s; responses identical: {}",
-                if agree { "yes" } else { "NO — serving bug" }
+                if agree {
+                    if mmap { "yes (mmap == eager, bitwise)" } else { "yes" }
+                } else {
+                    "NO — serving bug"
+                }
             );
+            if mmap {
+                println!("mmap residency: {}", residency_line(&engine));
+                if let Some(ref e) = eager_engine {
+                    println!(
+                        "eager reference keeps {} resident; mmap peak was {}",
+                        fmt_bytes(e.residency().resident_bytes),
+                        fmt_bytes(engine.residency().peak_bytes),
+                    );
+                }
+            }
 
             write_json(
                 &args,
@@ -775,10 +953,19 @@ fn main() -> Result<()> {
                     ("requests", Value::num(requests.len() as f64)),
                     ("queue_cap", Value::num(queue_cap as f64)),
                     ("dispatch", Value::num(dispatch as f64)),
+                    ("mmap", Value::Bool(mmap)),
                     ("batched", serve_stats_json(&stats_b)),
                     ("sequential", serve_stats_json(&stats_s)),
                     ("speedup_tokens_per_s", Value::num(speedup)),
                     ("responses_identical", Value::Bool(agree)),
+                    ("residency", residency_json(&engine)),
+                    (
+                        "eager_resident_bytes",
+                        match &eager_engine {
+                            Some(e) => Value::num(e.residency().resident_bytes as f64),
+                            None => Value::Null,
+                        },
+                    ),
                 ]),
             )?;
         }

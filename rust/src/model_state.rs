@@ -13,17 +13,21 @@ use crate::tensor::Tensor;
 /// One transformer block's parameters.
 #[derive(Clone, Debug)]
 pub struct BlockParams {
+    /// Pre-attention RMS-norm weights `[d]`.
     pub attn_norm: Tensor,
+    /// Pre-MLP RMS-norm weights `[d]`.
     pub mlp_norm: Tensor,
     /// wq, wk, wv, wo, wgate, wup, wdown — keyed by name.
     pub linears: BTreeMap<String, Tensor>,
 }
 
 impl BlockParams {
+    /// The named linear's weight matrix.
     pub fn linear(&self, name: &str) -> &Tensor {
         &self.linears[name]
     }
 
+    /// Mutable access to the named linear's weight matrix.
     pub fn linear_mut(&mut self, name: &str) -> &mut Tensor {
         self.linears.get_mut(name).unwrap()
     }
@@ -33,13 +37,18 @@ impl BlockParams {
 /// pre-processing/quantization).
 #[derive(Clone, Debug)]
 pub struct ModelParams {
+    /// Token embedding table `[vocab, d]`.
     pub embed: Tensor,
+    /// Final RMS-norm weights `[d]`.
     pub final_norm: Tensor,
+    /// LM head `[d, vocab]`.
     pub head: Tensor,
+    /// Per-block parameters, in layer order.
     pub blocks: Vec<BlockParams>,
 }
 
 impl ModelParams {
+    /// Assemble from a named tensor map (a CBQW file) per the config.
     pub fn from_tensors(map: &BTreeMap<String, Tensor>, cfg: &ModelCfg) -> Result<Self> {
         let get = |k: &str| -> Result<Tensor> {
             map.get(k).cloned().ok_or_else(|| anyhow!("missing weight {k}"))
@@ -67,14 +76,22 @@ impl ModelParams {
     /// Embedding lookup — the only model compute the host performs
     /// (a row gather; everything else runs through the HLO executables).
     pub fn embed_tokens(&self, tokens: &[i32], batch: usize, seq: usize) -> Tensor {
-        let d = self.embed.cols();
-        let mut data = Vec::with_capacity(batch * seq * d);
-        for &t in tokens {
-            let row = self.embed.row(t as usize);
-            data.extend_from_slice(row);
-        }
-        Tensor::new(vec![batch, seq, d], data)
+        embed_lookup(&self.embed, tokens, batch, seq)
     }
+}
+
+/// Row-gather an embedding table into a `[batch, seq, d]` activation. Free
+/// function so callers holding a bare embed tensor (the mmap serving path
+/// reads it zero-copy from the snapshot, never building a full
+/// [`ModelParams`]) share one implementation with [`ModelParams::embed_tokens`].
+pub fn embed_lookup(embed: &Tensor, tokens: &[i32], batch: usize, seq: usize) -> Tensor {
+    let d = embed.cols();
+    let mut data = Vec::with_capacity(batch * seq * d);
+    for &t in tokens {
+        let row = embed.row(t as usize);
+        data.extend_from_slice(row);
+    }
+    Tensor::new(vec![batch, seq, d], data)
 }
 
 /// Per-linear activation statistics from calibration capture: per-input-
@@ -89,6 +106,7 @@ pub struct ActStats {
 }
 
 impl ActStats {
+    /// Empty stats for `n_blocks` blocks.
     pub fn new(n_blocks: usize) -> Self {
         Self {
             channel_max: vec![BTreeMap::new(); n_blocks],
@@ -117,6 +135,7 @@ impl ActStats {
         }
     }
 
+    /// Per-channel max |X| captured for (block, linear).
     pub fn max_of(&self, block: usize, linear: &str) -> &[f32] {
         &self.channel_max[block][linear]
     }

@@ -8,11 +8,14 @@
 
 use crate::tensor::Tensor;
 
+/// Scale floor shared by every quantizer (and the snapshot dequant).
 pub const EPS: f32 = 1e-8;
 /// AdaRound stretch parameters (Eq. 8) — fixed by the paper.
 pub const ZETA: f32 = 1.1;
+/// Rectified-sigmoid stretch lower bound (AdaRound gamma).
 pub const GAMMA: f32 = -0.1;
 
+/// Canonical per-block linear names, in binding order.
 pub const LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
 
 /// Per-output-channel symmetric scale init: `max|W_col| / qmax`.
@@ -134,9 +137,13 @@ pub fn learnable_bytes(fan_in: usize, fan_out: usize, rank: usize, mode: RoundBy
 }
 
 #[derive(Clone, Copy, Debug)]
+/// Whether a rounding offset is applied to weight codes.
 pub enum RoundBytes {
+    /// Round-to-nearest: no learnable offset state.
     Nearest,
+    /// Dense AdaRound: one offset per weight.
     Dense,
+    /// LoRA-Rounding at the given rank.
     Lora(usize),
 }
 

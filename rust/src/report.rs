@@ -6,12 +6,16 @@ use std::fmt::Write as _;
 
 /// Simple fixed-width table printer.
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (cells pre-formatted).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// New table with a caption and column headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Self {
             title: title.into(),
@@ -20,11 +24,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render with box-drawing borders.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -68,10 +74,12 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
 
+    /// CSV rendering (quotes cells containing separators).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let _ = writeln!(out, "{}", self.headers.join(","));
@@ -98,6 +106,7 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// Fixed-precision float formatting helper.
 pub fn fmt_f(v: f64, prec: usize) -> String {
     if !v.is_finite() {
         return "inf".into();

@@ -341,6 +341,7 @@ pub fn matmul_transa_naive(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -
 // rmsnorm
 // ---------------------------------------------------------------------------
 
+/// RMS-norm epsilon (matches python/compile/model.py).
 pub const RMS_EPS: f32 = 1e-5;
 
 /// `x: [rows, d]`, `g: [d]` -> normalized `[rows, d]`.
@@ -522,10 +523,13 @@ pub fn blend_weight(
 /// learnable in the `win_grad_*` graphs, so `dw` (the STE pass-through
 /// `g * (1 - w_en + w_en*z)`) is deliberately not materialized.
 pub struct WeightGrads {
+    /// Per-output-channel LSQ gradient wrt the step sizes, `[n]`.
     pub ds_w: Vec<f32>,
+    /// Gradient wrt the rounding offset rho, `[k*n]`.
     pub drho: Vec<f32>,
 }
 
+/// Backward of [`blend_weight`]: see [`WeightGrads`].
 pub fn blend_weight_bwd(
     w: &[f32],
     k: usize,
@@ -637,10 +641,12 @@ pub fn log_softmax_rows(x: &[f32], d: usize) -> Vec<f32> {
     out
 }
 
+/// SiLU activation `x * sigmoid(x)`.
 pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// Derivative of [`silu`].
 pub fn silu_d(x: f32) -> f32 {
     let sig = 1.0 / (1.0 + (-x).exp());
     sig * (1.0 + x * (1.0 - sig))
@@ -652,8 +658,9 @@ pub fn silu_d(x: f32) -> f32 {
 
 /// Per-(batch, head) backward cache.
 pub struct HeadCache {
-    /// RoPE-rotated query/key, `[s, hd]`.
+    /// RoPE-rotated query, `[s, hd]`.
     pub q_r: Vec<f32>,
+    /// RoPE-rotated key, `[s, hd]`.
     pub k_r: Vec<f32>,
     /// raw values, `[s, hd]`.
     pub v_h: Vec<f32>,
@@ -664,9 +671,13 @@ pub struct HeadCache {
 /// Causal multi-head attention with RoPE (python/compile/model.py
 /// `attention`). Inputs/outputs are `[b, s, h*hd]`.
 pub struct Attention {
+    /// Batch rows.
     pub b: usize,
+    /// Sequence length.
     pub s: usize,
+    /// Head count.
     pub h: usize,
+    /// Per-head width.
     pub hd: usize,
     /// `[s, hd/2]` RoPE tables.
     cos: Vec<f32>,
@@ -674,6 +685,8 @@ pub struct Attention {
 }
 
 impl Attention {
+    /// Precompute the RoPE tables for a `(batch, seq, heads, head_dim)`
+    /// shape; `head_dim` must be even.
     pub fn new(b: usize, s: usize, h: usize, hd: usize) -> Self {
         assert!(hd % 2 == 0, "head_dim must be even for RoPE");
         let half = hd / 2;

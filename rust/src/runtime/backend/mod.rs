@@ -46,15 +46,25 @@ pub(crate) fn lock_or_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGua
 /// Runtime statistics (coordinator overhead accounting for §Perf).
 #[derive(Default, Debug, Clone)]
 pub struct RuntimeStats {
+    /// Executable invocations served.
     pub executions: u64,
+    /// Milliseconds spent compiling (PJRT only; native reports 0).
     pub compile_ms: f64,
+    /// Milliseconds spent executing.
     pub execute_ms: f64,
+    /// Bytes uploaded to the device (PJRT only).
     pub upload_bytes: u64,
 }
 
 /// Pinned static inputs for one executable. The payload is backend-
 /// specific: device buffers for PJRT, retained host tensors for native.
+///
+/// Dropping a `Pinned` releases its retention: on the native backend the
+/// retained `Value`s drop their storage shares, so an evicted lazy-serving
+/// window's owned buffers are freed the moment no dispatch still holds the
+/// handle (see `ServeEngine`'s bounded window cache).
 pub struct Pinned {
+    /// The executable these inputs were validated against.
     pub exec_name: String,
     pub(crate) inner: PinnedInner,
 }
@@ -62,6 +72,32 @@ pub struct Pinned {
 pub(crate) enum PinnedInner {
     Pjrt(pjrt::PjrtPinned),
     Native(BTreeMap<String, Value>),
+}
+
+impl Pinned {
+    /// Heap bytes retained by this pin on the host, with buffers shared
+    /// *within* the pin counted once (dedup by base pointer). Mapped
+    /// tensors contribute 0 — their pages belong to the file cache. PJRT
+    /// pins retain device buffers, not host memory, and report 0.
+    ///
+    /// This is the [`crate::tensor::Storage`]-introspection the serving
+    /// layer's residency accounting (and its tests) are built on.
+    pub fn host_resident_bytes(&self) -> u64 {
+        match &self.inner {
+            PinnedInner::Native(m) => {
+                let mut seen = std::collections::BTreeSet::new();
+                let mut total = 0u64;
+                for v in m.values() {
+                    let bytes = v.heap_bytes();
+                    if bytes > 0 && seen.insert(v.data_ptr()) {
+                        total += bytes as u64;
+                    }
+                }
+                total
+            }
+            PinnedInner::Pjrt(_) => 0,
+        }
+    }
 }
 
 /// An execution backend over the manifest's executables.
@@ -107,6 +143,7 @@ pub trait Backend: Send + Sync {
         values: &BTreeMap<String, Value>,
     ) -> Result<BTreeMap<String, Tensor>>;
 
+    /// Cumulative execution statistics (snapshot of interior counters).
     fn stats(&self) -> RuntimeStats;
 }
 
@@ -116,11 +153,14 @@ pub enum BackendKind {
     /// PJRT if a real client initializes, else native.
     #[default]
     Auto,
+    /// The native CPU interpreter ([`NativeBackend`]).
     Native,
+    /// The PJRT/HLO path ([`PjrtBackend`]).
     Pjrt,
 }
 
 impl BackendKind {
+    /// Parse a `--backend` / `CBQ_BACKEND` value.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "auto" => Self::Auto,

@@ -354,6 +354,8 @@ struct BlockCache {
 // the backend
 // ---------------------------------------------------------------------------
 
+/// The native CPU execution backend: interprets the manifest's executable
+/// semantics directly on the host (see the module docs).
 pub struct NativeBackend {
     manifest: Manifest,
     stats: Mutex<RuntimeStats>,
@@ -362,6 +364,8 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Build an interpreter over the artifacts' manifest (no compilation,
+    /// no files beyond the manifest needed).
     pub fn new(artifacts: &Artifacts) -> Result<Self> {
         Ok(Self {
             manifest: artifacts.manifest.clone(),

@@ -65,6 +65,10 @@ pub struct PjrtPinned {
     _literals: Vec<xla::Literal>,
 }
 
+/// The PJRT execution backend: compiles the artifacts' AOT HLO text on a
+/// PJRT client and executes on device (semantics identical to the native
+/// interpreter; requires a real `xla` binding — the vendored stub errors
+/// at client construction).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -74,6 +78,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Bring up a PJRT CPU client over `artifacts`.
     pub fn new(artifacts: &Artifacts) -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(xerr)?;
         Ok(Self {

@@ -12,29 +12,51 @@ use anyhow::{ensure, Context, Result};
 
 use crate::json::{self, Value};
 
+/// The parsed `manifest.json`: everything the runtime knows about the
+/// artifacts without opening another file.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: u32,
+    /// Model configurations by name.
     pub configs: BTreeMap<String, ModelCfg>,
+    /// Executable specs by name (`win_fwd_w2_s`, `lm_eval_s`, ...).
     pub executables: BTreeMap<String, ExecSpec>,
+    /// Final pretraining loss per config (synthetic artifacts record it).
     pub pretrain_loss: BTreeMap<String, f64>,
+    /// Linear names in canonical order (wq, wk, ...).
     pub linears: Vec<String>,
+    /// Exported window sizes per config.
     pub windows: BTreeMap<String, Vec<usize>>,
 }
 
+/// One model configuration — also the snapshot fingerprint (every field is
+/// compared by `snapshot::fingerprint_mismatches`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelCfg {
+    /// Config name (manifest key).
     pub name: String,
+    /// Hidden width.
     pub d_model: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// MLP hidden width.
     pub d_ffn: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Sequence length every executable is shaped for.
     pub seq: usize,
+    /// Batch rows every executable is shaped for.
     pub batch: usize,
+    /// Padded LoRA rank of the rounding factors.
     pub rank_pad: usize,
+    /// Per-head width (`d_model / n_heads`).
     pub head_dim: usize,
+    /// Number of outlier channels injected at synthesis (0 = none).
     pub outlier_channels: usize,
+    /// Gain applied to injected outlier channels.
     pub outlier_gain: f64,
 }
 
@@ -59,6 +81,7 @@ impl ModelCfg {
         ])
     }
 
+    /// Inverse of [`ModelCfg::to_json`].
     pub fn from_json(v: &Value) -> Result<Self> {
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),
@@ -104,17 +127,25 @@ impl ModelCfg {
     }
 }
 
+/// One executable's I/O contract (the flatten_spec ordering).
 #[derive(Debug, Clone)]
 pub struct ExecSpec {
+    /// HLO file name inside the artifacts directory (PJRT path only).
     pub file: String,
+    /// Declared inputs, in binding order.
     pub inputs: Vec<TensorSpec>,
+    /// Declared outputs, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// One named tensor in an executable's I/O contract.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// Binding name.
     pub name: String,
+    /// Required shape.
     pub shape: Vec<usize>,
+    /// "float32" or "int32".
     pub dtype: String,
 }
 
@@ -134,6 +165,7 @@ impl TensorSpec {
 }
 
 impl Manifest {
+    /// Parse a `manifest.json` file.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let raw = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading manifest {:?}", path.as_ref()))?;

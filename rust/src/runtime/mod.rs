@@ -35,7 +35,9 @@ use crate::tensor::{io, Tensor, TensorI32};
 /// A typed runtime value bound to an executable input.
 #[derive(Clone, Debug)]
 pub enum Value {
+    /// A float tensor.
     F32(Tensor),
+    /// An int32 tensor (token ids, targets).
     I32(TensorI32),
 }
 
@@ -52,21 +54,51 @@ impl From<TensorI32> for Value {
 }
 
 impl Value {
+    /// The tensor's shape, dtype-independent.
     pub fn dims(&self) -> &[usize] {
         match self {
             Value::F32(t) => &t.dims,
             Value::I32(t) => &t.dims,
         }
     }
+
+    /// Heap bytes the underlying storage keeps resident (0 for
+    /// memory-mapped views — see [`crate::tensor::Storage::heap_bytes`]).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            Value::F32(t) => t.data.heap_bytes(),
+            Value::I32(t) => t.data.heap_bytes(),
+        }
+    }
+
+    /// Address of the first element — the identity key residency
+    /// accounting dedups shared buffers by.
+    pub fn data_ptr(&self) -> usize {
+        match self {
+            Value::F32(t) => t.data.as_ptr() as usize,
+            Value::I32(t) => t.data.as_ptr() as usize,
+        }
+    }
+
+    /// Is the underlying storage a borrowed-from-file mapped view?
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Value::F32(t) => t.data.is_mapped(),
+            Value::I32(t) => t.data.is_mapped(),
+        }
+    }
 }
 
 /// The artifacts directory: manifest + executables' files + weights.
 pub struct Artifacts {
+    /// Directory the artifacts were loaded from.
     pub dir: PathBuf,
+    /// The parsed manifest (configs, executables, windows).
     pub manifest: Manifest,
 }
 
 impl Artifacts {
+    /// Load `dir/manifest.json` and wrap the directory.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.json"))?;
@@ -90,6 +122,7 @@ impl Artifacts {
         )
     }
 
+    /// The model config registered under `name`.
     pub fn cfg(&self, name: &str) -> Result<&ModelCfg> {
         self.manifest
             .configs
@@ -152,30 +185,36 @@ impl Artifacts {
 pub struct Bindings(pub BTreeMap<String, Value>);
 
 impl Bindings {
+    /// Empty binding set.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Bind an f32 tensor under `name`.
     pub fn set(&mut self, name: impl Into<String>, t: Tensor) -> &mut Self {
         self.0.insert(name.into(), Value::F32(t));
         self
     }
 
+    /// Bind an i32 tensor under `name`.
     pub fn set_i32(&mut self, name: impl Into<String>, t: TensorI32) -> &mut Self {
         self.0.insert(name.into(), Value::I32(t));
         self
     }
 
+    /// Bind a 0-d f32 tensor under `name`.
     pub fn scalar(&mut self, name: impl Into<String>, v: f32) -> &mut Self {
         self.0.insert(name.into(), Value::F32(Tensor::scalar(v)));
         self
     }
 
+    /// Fold another binding set in (later keys win).
     pub fn merge(&mut self, other: Bindings) -> &mut Self {
         self.0.extend(other.0);
         self
     }
 
+    /// The name → value map backends consume.
     pub fn inner(&self) -> &BTreeMap<String, Value> {
         &self.0
     }

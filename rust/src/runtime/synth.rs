@@ -37,21 +37,37 @@ pub const CORPUS_SEED: u64 = 42;
 /// Specification of one synthetic model family.
 #[derive(Clone, Debug)]
 pub struct SynthSpec {
+    /// Config name the manifest will register.
     pub name: String,
+    /// Hidden width.
     pub d_model: usize,
+    /// Transformer block count.
     pub n_layers: usize,
+    /// Attention head count.
     pub n_heads: usize,
+    /// MLP hidden width.
     pub d_ffn: usize,
+    /// Vocabulary size (must cover the corpus token range).
     pub vocab: usize,
+    /// Sequence length the executables are shaped for.
     pub seq: usize,
+    /// Batch rows the executables are shaped for.
     pub batch: usize,
+    /// Padded LoRA rank.
     pub rank_pad: usize,
+    /// Window sizes to export executables for.
     pub windows: Vec<usize>,
+    /// Outlier channels to inject into the pretrained weights.
     pub outlier_channels: usize,
+    /// Gain of the injected outlier channels.
     pub outlier_gain: f64,
+    /// Host pretraining steps.
     pub pretrain_steps: usize,
+    /// Host pretraining batch rows.
     pub pretrain_batch: usize,
+    /// Host pretraining learning rate.
     pub pretrain_lr: f32,
+    /// RNG seed for init + pretraining data order.
     pub seed: u64,
 }
 
@@ -83,6 +99,7 @@ impl SynthSpec {
         }
     }
 
+    /// The [`ModelCfg`] this spec synthesizes.
     pub fn cfg(&self) -> ModelCfg {
         ModelCfg {
             name: self.name.clone(),
@@ -628,9 +645,13 @@ fn grad_outputs(cfg: &ModelCfg, w: usize, dense: bool) -> Vec<Value> {
 /// What [`generate`] produced.
 #[derive(Clone, Debug)]
 pub struct SynthReport {
+    /// The generated model configuration.
     pub cfg: ModelCfg,
+    /// Final host-pretraining loss.
     pub pretrain_loss: f32,
+    /// Executables listed in the generated manifest.
     pub n_executables: usize,
+    /// Quantizable weight parameters of the model.
     pub weight_params: usize,
 }
 

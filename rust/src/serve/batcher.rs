@@ -29,8 +29,11 @@ use crate::calib::{self, corpus::Style, TaskKind};
 /// per-position loss mask.
 #[derive(Clone, Debug)]
 pub struct WorkRow {
+    /// Input token ids, length `seq`.
     pub inputs: Vec<i32>,
+    /// Next-token targets, length `seq`.
     pub targets: Vec<i32>,
+    /// Per-position loss mask (1.0 = scored).
     pub mask: Vec<f32>,
 }
 
@@ -56,7 +59,9 @@ impl WorkRow {
 /// Per-row result: masked NLL sum and masked position count.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RowOut {
+    /// Masked negative-log-likelihood sum over the row.
     pub nll: f32,
+    /// Number of masked (scored) positions.
     pub count: f32,
 }
 
@@ -67,8 +72,12 @@ pub struct RowOut {
 /// run several dispatches concurrently (`Batcher::with_dispatch`), so
 /// executors keep mutable bookkeeping behind interior locks.
 pub trait RowExecutor: Sync {
+    /// Fixed batch capacity of one dispatch.
     fn batch_rows(&self) -> usize;
+    /// Fixed row length every [`WorkRow`] must match.
     fn seq(&self) -> usize;
+    /// Run up to [`batch_rows`](Self::batch_rows) rows, returning one
+    /// [`RowOut`] per input row.
     fn execute(&self, rows: &[WorkRow]) -> Result<Vec<RowOut>>;
 }
 
@@ -79,29 +88,56 @@ pub enum RequestKind {
     Ppl,
     /// Zero-shot choice: each row is one candidate; responds with the argmin
     /// of per-row mean NLL.
-    Choice { correct: usize },
+    Choice {
+        /// Ground-truth candidate index (carried through for scoring).
+        correct: usize,
+    },
     /// Forward pass only (downstream consumes hidden states); responds with
     /// the token count pushed through.
     Hidden,
 }
 
+/// One queued unit of serving work: a request kind plus its rows.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// What the caller wants back.
     pub kind: RequestKind,
+    /// The model rows this request spans (dispatched together or rejected
+    /// together — never partially admitted).
     pub rows: Vec<WorkRow>,
 }
 
+/// The answer to one [`Request`], in submission order.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
-    Ppl { nll: f64, count: f64 },
-    Choice { pick: usize, correct: usize, scores: Vec<f32> },
-    Hidden { tokens: usize },
+    /// Summed NLL and scored-position count for a perplexity request.
+    Ppl {
+        /// Masked NLL summed over the request's rows.
+        nll: f64,
+        /// Scored positions summed over the request's rows.
+        count: f64,
+    },
+    /// Zero-shot choice outcome.
+    Choice {
+        /// Index of the lowest mean-NLL candidate.
+        pick: usize,
+        /// Ground-truth candidate index (carried through for scoring).
+        correct: usize,
+        /// Per-candidate mean NLL scores.
+        scores: Vec<f32>,
+    },
+    /// Forward-only request: how many tokens were pushed through.
+    Hidden {
+        /// Token count (rows × seq).
+        tokens: usize,
+    },
     /// Turned away at admission: the bounded queue was full. The request
     /// performed no model work (callers should retry/shed load).
     Rejected,
 }
 
 impl Response {
+    /// `exp(nll/count)` for perplexity responses, `None` otherwise.
     pub fn perplexity(&self) -> Option<f64> {
         match self {
             Response::Ppl { nll, count } => Some((nll / count.max(1.0)).exp()),
@@ -117,22 +153,34 @@ impl Response {
 /// `ServeStats::class_lat` empty.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ClassLat {
+    /// Class name ("interactive" / "batch" / "background").
     pub class: String,
+    /// Requests of this class offered.
     pub submitted: usize,
+    /// Requests of this class served to completion.
     pub completed: usize,
+    /// Requests of this class turned away at admission.
     pub rejected: usize,
+    /// Median queue wait (arrival → dispatch), seconds.
     pub queue_p50_s: f64,
+    /// 95th-percentile queue wait, seconds.
     pub queue_p95_s: f64,
+    /// 99th-percentile queue wait, seconds.
     pub queue_p99_s: f64,
+    /// Median service time (dispatch → completion), seconds.
     pub service_p50_s: f64,
+    /// 95th-percentile service time, seconds.
     pub service_p95_s: f64,
+    /// 99th-percentile service time, seconds.
     pub service_p99_s: f64,
 }
 
 /// Throughput accounting for one batcher run.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
+    /// Requests offered (admitted + rejected).
     pub requests: usize,
+    /// Executor dispatches performed.
     pub dispatches: usize,
     /// real (non-padding) rows executed
     pub rows: usize,
@@ -142,6 +190,7 @@ pub struct ServeStats {
     pub tokens: usize,
     /// requests turned away by the bounded admission queue
     pub rejected: usize,
+    /// Wall-clock duration of the run in seconds.
     pub wall_seconds: f64,
     /// configured dispatch concurrency this run executed with (1 = serial)
     pub dispatch_lanes: usize,
@@ -168,6 +217,7 @@ impl ServeStats {
         self.lane_busy_seconds / (self.dispatch_lanes.max(1) as f64 * self.wall_seconds.max(1e-12))
     }
 
+    /// Real tokens served per second of wall time.
     pub fn tokens_per_s(&self) -> f64 {
         self.tokens as f64 / self.wall_seconds.max(1e-12)
     }

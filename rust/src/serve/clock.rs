@@ -38,6 +38,7 @@ pub struct RealClock {
 }
 
 impl RealClock {
+    /// Start the epoch now.
     pub fn new() -> Self {
         Self { epoch: Instant::now() }
     }
@@ -75,6 +76,7 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// Fresh virtual clock at tick 0.
     pub fn new() -> Self {
         Self::default()
     }

@@ -4,14 +4,19 @@
 //! snapshot store (`snapshot`) persists it; this module serves it:
 //!
 //! * [`registry::ModelRegistry`] — loads `CBQS` files by name and keeps the
-//!   reconstructed models resident;
+//!   loaded models resident; [`registry::LoadMode::Mmap`] opens them as
+//!   memory-mapped lazy views instead of decoding everything up front;
 //! * [`ServeEngine`] — binds a resident model to a [`Backend`]'s
 //!   executables, covering the block chain with the *largest exported
-//!   window executables* (the same greedy covering `forward_hidden` uses)
-//!   and **pinning** every static input (weights, quant state, globals)
-//!   once at engine build — device buffers on PJRT, retained host tensors
-//!   on the native backend — so steady-state dispatches bind only the
-//!   embedded token batch;
+//!   window executables* (the same greedy covering `forward_hidden` uses).
+//!   Eagerly loaded models **pin** every static input (weights, quant
+//!   state, globals) once at engine build; mmap-loaded models pin
+//!   **lazily** — a window's codes are unpacked and pinned on first touch,
+//!   a bounded LRU keeps at most `--resident-windows` (or
+//!   `CBQ_RESIDENT_MB`) windows' worth of unpacked tensors resident, and
+//!   eviction drops straight back to the file mapping. Responses are
+//!   bitwise-identical across all of eager / lazy / evict-and-retouch
+//!   (asserted in `rust/tests/mmap.rs`);
 //! * [`batcher::Batcher`] — coalesces queued eval requests (perplexity
 //!   segments, zero-shot choice items, forward-hidden calls) into maximal
 //!   batches, optionally executes several window dispatches concurrently
@@ -30,91 +35,456 @@
 //! resident model, every engine bound to it, and every pinned executable
 //! input all share **one** copy of each weight buffer — per process, not
 //! per engine (refcount/pointer-identity assertions live in
-//! `tests/backend.rs::export_load_serve_end_to_end_on_native`).
+//! `tests/backend.rs::export_load_serve_end_to_end_on_native`). Under
+//! `--mmap` the f32 tensors (embed, LM head, norms, scales) are zero-copy
+//! views into one shared mapping of the snapshot file, and only the
+//! unpacked windows in the LRU occupy heap at all
+//! ([`ServeEngine::residency`] reports the exact accounting).
 
 pub mod batcher;
 pub mod clock;
 pub mod registry;
 pub mod scheduler;
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{window_plan, Pipeline};
+use crate::config::RoundingMode;
+use crate::coordinator::{window_plan, Pipeline, QuantizedModel};
+use crate::model_state::embed_lookup;
 use crate::runtime::{Artifacts, Backend, Bindings, Pinned};
+use crate::snapshot::SnapshotModel;
 use crate::tensor::{Tensor, TensorI32};
 
 pub use batcher::{
     Batcher, ClassLat, Request, RequestKind, Response, RowExecutor, RowOut, ServeStats, WorkRow,
 };
 pub use clock::{Clock, RealClock, SimClock, TICKS_PER_SEC};
-pub use registry::{LoadedSnapshot, ModelRegistry};
+pub use registry::{LoadMode, LoadedSnapshot, ModelRegistry};
 pub use scheduler::{
     synth_trace, Arrival, Decision, Lcg, LiveOutcome, Priority, Scheduler, SchedulerCfg, TraceSpec,
 };
 
+/// Residency limits for lazily pinned (mmap-loaded) engines. Both bounds
+/// are enforced together; `None` means unlimited on that axis. With no
+/// bound at all, every window stays resident after first touch (lazy
+/// cold-start, eager steady-state).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineOptions {
+    /// Maximum pinned windows kept resident (CLI `--resident-windows`).
+    pub resident_windows: Option<usize>,
+    /// Maximum bytes of unpacked window tensors kept resident
+    /// (`CBQ_RESIDENT_MB`, converted to bytes).
+    pub resident_bytes: Option<u64>,
+}
+
+impl EngineOptions {
+    /// Defaults from the environment: `CBQ_RESIDENT_MB` caps resident
+    /// unpacked bytes; windows stay unlimited unless the CLI overrides. An
+    /// unparseable value is loudly ignored — silently dropping a mistyped
+    /// budget would leave residency unbounded, the exact failure the
+    /// variable exists to prevent.
+    pub fn from_env() -> Self {
+        let mut opts = Self { resident_windows: None, resident_bytes: None };
+        if let Ok(raw) = std::env::var("CBQ_RESIDENT_MB") {
+            if !raw.is_empty() {
+                match raw.parse::<u64>() {
+                    Ok(mb) => opts.resident_bytes = Some(mb * 1024 * 1024),
+                    Err(_) => eprintln!(
+                        "warning: CBQ_RESIDENT_MB=`{raw}` is not a whole number of \
+                         MiB — ignoring it; window residency is UNBOUNDED"
+                    ),
+                }
+            }
+        }
+        opts
+    }
+}
+
+/// Snapshot of an engine's window-residency accounting (see
+/// [`ServeEngine::residency`]). Byte figures come from
+/// [`Pinned::host_resident_bytes`], i.e. actual `Storage` heap
+/// introspection with shared buffers deduped — mapped tensors count 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyStats {
+    /// Windows currently pinned (eager: the whole plan).
+    pub resident_windows: usize,
+    /// Heap bytes of currently pinned window tensors.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_windows`.
+    pub peak_windows: usize,
+    /// High-water mark of `resident_bytes` — the figure the
+    /// `--resident-windows` / `CBQ_RESIDENT_MB` budget bounds.
+    pub peak_bytes: u64,
+    /// Window materializations (cold faults + re-faults after eviction).
+    pub faults: u64,
+    /// Window cache hits.
+    pub hits: u64,
+    /// Windows evicted to stay under budget.
+    pub evictions: u64,
+}
+
+/// One resident entry of the lazy window cache.
+struct LazyWindow {
+    pinned: Arc<Pinned>,
+    bytes: u64,
+    last_use: u64,
+}
+
+/// LRU state + counters for lazy pinning. Faults are serialized under this
+/// lock (materializing a window is itself parallel inside the kernels);
+/// dispatches run outside it, holding `Arc<Pinned>` handles.
+#[derive(Default)]
+struct WindowCache {
+    entries: BTreeMap<usize, LazyWindow>,
+    tick: u64,
+    resident_bytes: u64,
+    peak_bytes: u64,
+    peak_windows: usize,
+    faults: u64,
+    hits: u64,
+    evictions: u64,
+}
+
+enum Steps {
+    /// All windows pinned at engine build (eagerly loaded snapshots).
+    Eager(Vec<Arc<Pinned>>),
+    /// Windows pinned on first touch, bounded by the budget (mmap).
+    Lazy {
+        cache: Mutex<WindowCache>,
+        max_windows: usize,
+        max_bytes: Option<u64>,
+    },
+}
+
+/// Evict idle (not `Arc`-shared) LRU windows until the cache — plus an
+/// incoming window of `extra_windows`/`extra_bytes` — fits the budget.
+/// Stops early when only in-use windows remain (transient overshoot).
+fn evict_idle(
+    c: &mut WindowCache,
+    extra_windows: usize,
+    extra_bytes: u64,
+    max_windows: usize,
+    max_bytes: Option<u64>,
+) {
+    loop {
+        let over_count = c.entries.len() + extra_windows > max_windows;
+        let over_bytes = max_bytes
+            .map(|mb| !c.entries.is_empty() && c.resident_bytes + extra_bytes > mb)
+            .unwrap_or(false);
+        if !over_count && !over_bytes {
+            break;
+        }
+        let victim = c
+            .entries
+            .iter()
+            .filter(|(_, w)| Arc::strong_count(&w.pinned) == 1)
+            .min_by_key(|(_, w)| w.last_use)
+            .map(|(k, _)| *k);
+        let Some(k) = victim else { break }; // all in use: overshoot
+        let w = c.entries.remove(&k).expect("victim key just observed");
+        c.resident_bytes -= w.bytes;
+        c.evictions += 1;
+    }
+}
+
 /// A snapshot model bound to the runtime: per-window pinned weight buffers
 /// plus the pinned LM head, ready for row-batch execution.
+///
+/// For mmap-loaded snapshots the per-window pins materialize on demand —
+/// see the module docs and [`ServeEngine::residency`].
 pub struct ServeEngine<'rt> {
     rt: &'rt dyn Backend,
     snap: Arc<LoadedSnapshot>,
-    /// (start block, window width, executable, pinned statics) per step of
-    /// the greedy covering.
-    steps: Vec<(usize, usize, String, Pinned)>,
+    /// (start block, window width, executable) per step of the greedy
+    /// covering.
+    plan: Vec<(usize, usize, String)>,
+    steps: Steps,
+    /// The embedding table (zero-copy from the map under `--mmap`).
+    embed: Tensor,
     lm_pinned: Pinned,
 }
 
+/// Build the full static binding set for one window of blocks.
+fn window_bindings(
+    cfg_batch: usize,
+    cfg_seq: usize,
+    cfg_d: usize,
+    qmax_a: f32,
+    a_en: f32,
+    blocks: &[(&crate::model_state::BlockParams, &BTreeMap<String, crate::coordinator::LinearQ>)],
+) -> Bindings {
+    let h_dims = [cfg_batch, cfg_seq, cfg_d];
+    let mut b = Bindings::new();
+    // everything except h_in is static for serving: pin it all, including
+    // the (ignored) reconstruction target.
+    b.set("target", Tensor::zeros(&h_dims));
+    for (j, (params, qstate)) in blocks.iter().enumerate() {
+        Pipeline::bind_block_weights(&mut b, j, params);
+        // weights are baked (fake-quantized) => w_en = 0; activation quant
+        // stays live with the learned alpha clips.
+        Pipeline::bind_qblock(&mut b, j, qstate, qmax_a, 0.0, a_en, false);
+    }
+    Pipeline::bind_globals(&mut b, 0.0, 2.0, 0.0, 1.0, 1.0);
+    b
+}
+
 impl<'rt> ServeEngine<'rt> {
+    /// Bind `snap` to the backend with residency limits from the
+    /// environment ([`EngineOptions::from_env`]).
     pub fn new(rt: &'rt dyn Backend, art: &Artifacts, snap: Arc<LoadedSnapshot>) -> Result<Self> {
+        Self::with_options(rt, art, snap, EngineOptions::from_env())
+    }
+
+    /// Bind `snap` to the backend. Eagerly loaded snapshots pin every
+    /// window now (`opts` is irrelevant — everything is resident anyway);
+    /// mmap-loaded snapshots defer window pinning to first touch, bounded
+    /// by `opts`.
+    pub fn with_options(
+        rt: &'rt dyn Backend,
+        art: &Artifacts,
+        snap: Arc<LoadedSnapshot>,
+        opts: EngineOptions,
+    ) -> Result<Self> {
         let cfg = &snap.meta.cfg;
         let name = &cfg.name;
-        let model = &snap.model;
         let windows = art.windows(name);
-        let plan = window_plan(&windows, cfg.n_layers);
-
-        let qmax_a = model.bits.qmax_a();
-        let a_en = if model.bits.act_enabled() { 1.0 } else { 0.0 };
-        let h_dims = [cfg.batch, cfg.seq, cfg.d_model];
-
-        let mut steps = Vec::with_capacity(plan.len());
-        for &(start, w) in &plan {
-            let exec = format!("win_fwd_w{w}_{name}");
-            rt.spec(&exec)
-                .with_context(|| format!("serve plan needs executable {exec}"))?;
-            let mut b = Bindings::new();
-            // everything except h_in is static for serving: pin it all,
-            // including the (ignored) reconstruction target.
-            b.set("target", Tensor::zeros(&h_dims));
-            for j in 0..w {
-                Pipeline::bind_block_weights(&mut b, j, &model.params.blocks[start + j]);
-                // weights are baked (fake-quantized) => w_en = 0; activation
-                // quant stays live with the learned alpha clips.
-                Pipeline::bind_qblock(&mut b, j, &model.qstate[start + j], qmax_a, 0.0, a_en, false);
-            }
-            Pipeline::bind_globals(&mut b, 0.0, 2.0, 0.0, 1.0, 1.0);
-            let pinned = rt.pin(&exec, b.inner())?;
-            steps.push((start, w, exec, pinned));
+        let raw_plan = window_plan(&windows, cfg.n_layers);
+        let plan: Vec<(usize, usize, String)> = raw_plan
+            .iter()
+            .map(|&(start, w)| (start, w, format!("win_fwd_w{w}_{name}")))
+            .collect();
+        for (_, _, exec) in &plan {
+            rt.spec(exec).with_context(|| format!("serve plan needs executable {exec}"))?;
         }
+
+        let embed = snap.model.embed()?;
 
         let lm_exec = format!("lm_eval_{name}");
         rt.spec(&lm_exec)
             .with_context(|| format!("serve plan needs executable {lm_exec}"))?;
         let mut b = Bindings::new();
-        b.set("final_norm", model.params.final_norm.clone());
-        b.set("head", model.params.head.clone());
+        b.set("final_norm", snap.model.final_norm()?);
+        b.set("head", snap.model.head()?);
         let lm_pinned = rt.pin(&lm_exec, b.inner())?;
 
-        Ok(Self { rt, snap, steps, lm_pinned })
+        let steps = match &snap.model {
+            SnapshotModel::Eager(model) => {
+                let mut pins = Vec::with_capacity(plan.len());
+                for (start, w, exec) in &plan {
+                    let pinned = Self::pin_window(rt, cfg, model, *start, *w, exec)?;
+                    pins.push(Arc::new(pinned));
+                }
+                Steps::Eager(pins)
+            }
+            SnapshotModel::Lazy(_) => Steps::Lazy {
+                cache: Mutex::new(WindowCache::default()),
+                max_windows: opts.resident_windows.unwrap_or(usize::MAX).max(1),
+                max_bytes: opts.resident_bytes,
+            },
+        };
+
+        Ok(Self { rt, snap, plan, steps, embed, lm_pinned })
     }
 
+    /// Pin one window straight off an eager model (borrowing its shared
+    /// tensor handles — no decode, no copy).
+    fn pin_window(
+        rt: &dyn Backend,
+        cfg: &crate::runtime::ModelCfg,
+        model: &QuantizedModel,
+        start: usize,
+        w: usize,
+        exec: &str,
+    ) -> Result<Pinned> {
+        let blocks: Vec<_> = (0..w)
+            .map(|j| (&model.params.blocks[start + j], &model.qstate[start + j]))
+            .collect();
+        let b = window_bindings(
+            cfg.batch,
+            cfg.seq,
+            cfg.d_model,
+            model.bits.qmax_a(),
+            if model.bits.act_enabled() { 1.0 } else { 0.0 },
+            &blocks,
+        );
+        rt.pin(exec, b.inner())
+    }
+
+    /// Materialize + pin window `i` of the plan from a lazy model: unpack
+    /// every member block's codes, dequantize, bind. The materialized
+    /// intermediates drop here; the pin is the only retention.
+    fn materialize_window(&self, i: usize) -> Result<(Pinned, u64)> {
+        let lazy = self
+            .snap
+            .model
+            .lazy()
+            .expect("materialize_window is only reached on lazy snapshots");
+        let cfg = &self.snap.meta.cfg;
+        let bits = &self.snap.meta.bits;
+        let (start, w, exec) = &self.plan[i];
+        let (start, w) = (*start, *w);
+        let mats: Vec<_> = (0..w)
+            .map(|j| lazy.block(start + j))
+            .collect::<Result<_>>()?;
+        let blocks: Vec<_> = mats.iter().map(|m| (&m.params, &m.qstate)).collect();
+        let b = window_bindings(
+            cfg.batch,
+            cfg.seq,
+            cfg.d_model,
+            bits.qmax_a(),
+            if bits.act_enabled() { 1.0 } else { 0.0 },
+            &blocks,
+        );
+        let pinned = self.rt.pin(exec, b.inner())?;
+        let bytes = pinned.host_resident_bytes();
+        Ok((pinned, bytes))
+    }
+
+    /// Estimated heap bytes of window `i` once pinned (used to make room
+    /// *before* materializing, so the byte budget bounds the peak, not
+    /// just the steady state).
+    fn window_bytes_estimate(&self, i: usize) -> u64 {
+        let (start, w, _) = &self.plan[i];
+        let (start, w) = (*start, *w);
+        let cfg = &self.snap.meta.cfg;
+        let per_blocks: u64 = match self.snap.model.lazy() {
+            Some(lazy) => (0..w).map(|j| lazy.block_resident_estimate(start + j)).sum(),
+            None => 0,
+        };
+        // non-LoRA snapshots carry no a1/a2 records, but bind_qblock still
+        // binds zero placeholders of the full LoRA shape per linear —
+        // account them or the byte budget would be undershot
+        let lora_placeholders: u64 = if matches!(self.snap.meta.rounding, RoundingMode::Lora) {
+            0 // a1/a2 are real records, already in block_resident_estimate
+        } else {
+            let per_block: u64 = crate::quant::LINEARS
+                .iter()
+                .map(|l| {
+                    let (fan_in, fan_out) = cfg.linear_shape(l);
+                    4 * ((fan_in + fan_out) * cfg.rank_pad) as u64
+                })
+                .sum();
+            per_block * w as u64
+        };
+        // + the pinned zero `target` activation each window binds, + a
+        // conservative pad for the per-linear scalar bindings (qmax/enable
+        // flags, globals) the record table doesn't cover — the estimate
+        // must err high or a byte budget could transiently overshoot
+        per_blocks
+            + lora_placeholders
+            + 4 * (cfg.batch * cfg.seq * cfg.d_model) as u64
+            + 1024 * w as u64
+    }
+
+    /// Fetch (or fault in) the pinned statics for plan step `i`.
+    ///
+    /// Lazy path: hits bump LRU recency; on a miss, idle LRU windows are
+    /// evicted until the budget has room, then the window materializes
+    /// **outside** the cache lock — concurrent lanes hitting resident
+    /// windows never wait behind an in-flight fault. Two lanes can fault
+    /// the same window concurrently; the loser discards its copy (wasted
+    /// work, both counted in `faults`, never a duplicate cache entry).
+    /// A window still held by an in-flight dispatch (`Arc` shared) is
+    /// never evicted, so under heavy concurrency the cache can transiently
+    /// exceed the budget by the in-flight windows — it returns to budget
+    /// as dispatches finish (a make-room pass also runs after each
+    /// insert).
+    fn step_pinned(&self, i: usize) -> Result<Arc<Pinned>> {
+        match &self.steps {
+            Steps::Eager(pins) => Ok(pins[i].clone()),
+            Steps::Lazy { cache, max_windows, max_bytes } => {
+                {
+                    let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+                    // reborrow once so disjoint-field borrows (entries vs
+                    // the counters) work through the guard
+                    let c = &mut *guard;
+                    c.tick += 1;
+                    let tick = c.tick;
+                    if let Some(win) = c.entries.get_mut(&i) {
+                        win.last_use = tick;
+                        c.hits += 1;
+                        return Ok(win.pinned.clone());
+                    }
+                    c.faults += 1;
+                    // make room first so the budget bounds the peak
+                    let est = self.window_bytes_estimate(i);
+                    evict_idle(c, 1, est, *max_windows, *max_bytes);
+                }
+                // the expensive part — unpack + dequantize + pin — runs
+                // with the cache unlocked
+                let (pinned, bytes) = self.materialize_window(i)?;
+                let pinned = Arc::new(pinned);
+                let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+                let c = &mut *guard;
+                c.tick += 1;
+                let tick = c.tick;
+                if let Some(win) = c.entries.get_mut(&i) {
+                    // another lane won the race while we were unlocked:
+                    // share its pin, drop ours
+                    win.last_use = tick;
+                    return Ok(win.pinned.clone());
+                }
+                c.resident_bytes += bytes;
+                c.entries.insert(i, LazyWindow { pinned: pinned.clone(), bytes, last_use: tick });
+                c.peak_bytes = c.peak_bytes.max(c.resident_bytes);
+                c.peak_windows = c.peak_windows.max(c.entries.len());
+                // room reserved before unlocking may have been taken by a
+                // concurrent fault — restore the budget (the new entry is
+                // protected: we still hold its Arc)
+                evict_idle(c, 0, 0, *max_windows, *max_bytes);
+                Ok(pinned)
+            }
+        }
+    }
+
+    /// The bound snapshot.
     pub fn snapshot(&self) -> &LoadedSnapshot {
         &self.snap
     }
 
     /// Number of window dispatches per forward (the covering length).
     pub fn plan_len(&self) -> usize {
-        self.steps.len()
+        self.plan.len()
+    }
+
+    /// Does this engine pin windows lazily (mmap-loaded snapshot)?
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.steps, Steps::Lazy { .. })
+    }
+
+    /// Current window-residency accounting. For eager engines this is the
+    /// static whole-plan figure; for lazy engines it reflects the LRU
+    /// cache (`peak_bytes` is what the configured budget bounds).
+    pub fn residency(&self) -> ResidencyStats {
+        match &self.steps {
+            Steps::Eager(pins) => {
+                let bytes: u64 = pins.iter().map(|p| p.host_resident_bytes()).sum();
+                ResidencyStats {
+                    resident_windows: pins.len(),
+                    resident_bytes: bytes,
+                    peak_windows: pins.len(),
+                    peak_bytes: bytes,
+                    faults: pins.len() as u64,
+                    hits: 0,
+                    evictions: 0,
+                }
+            }
+            Steps::Lazy { cache, .. } => {
+                let c = cache.lock().unwrap_or_else(|e| e.into_inner());
+                ResidencyStats {
+                    resident_windows: c.entries.len(),
+                    resident_bytes: c.resident_bytes,
+                    peak_windows: c.peak_windows,
+                    peak_bytes: c.peak_bytes,
+                    faults: c.faults,
+                    hits: c.hits,
+                    evictions: c.evictions,
+                }
+            }
+        }
     }
 
     /// Forward a full token batch through the pinned block chain. The
@@ -130,11 +500,12 @@ impl<'rt> ServeEngine<'rt> {
             cfg.seq,
             tokens.dims
         );
-        let mut h = self.snap.model.params.embed_tokens(&tokens.data, cfg.batch, cfg.seq);
-        for (_start, _w, _exec, pinned) in &self.steps {
+        let mut h = embed_lookup(&self.embed, &tokens.data, cfg.batch, cfg.seq);
+        for i in 0..self.plan.len() {
+            let pinned = self.step_pinned(i)?;
             let mut b = Bindings::new();
             b.set("h_in", h);
-            let out = self.rt.run_pinned(pinned, b.inner())?;
+            let out = self.rt.run_pinned(&pinned, b.inner())?;
             h = out["h_out"].clone();
         }
         Ok(h)

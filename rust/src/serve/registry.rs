@@ -1,11 +1,18 @@
 //! Model registry: loads CBQS snapshots by name/path and caches the
-//! reconstructed models for the serving engine.
+//! loaded models for the serving engine.
 //!
-//! Loading a snapshot is the expensive part of cold-start (dequantize +
-//! qstate reconstruction); the registry makes it a one-time cost per model
-//! name, so a serve process can host several quantized variants (W4A16,
-//! W2A16*, ...) of the same base architecture side by side and route
-//! requests by name.
+//! Loading a snapshot eagerly is the expensive part of cold-start
+//! (dequantize + qstate reconstruction); the registry makes it a one-time
+//! cost per model name, so a serve process can host several quantized
+//! variants (W4A16, W2A16*, ...) of the same base architecture side by
+//! side and route requests by name.
+//!
+//! [`LoadMode::Mmap`] is the larger-than-RAM alternative: the snapshot is
+//! opened as a [`SnapshotModel::Lazy`] view over a shared memory mapping —
+//! cold-start drops to a metadata parse, and engines bound to the model
+//! fault windows in on demand (see [`crate::serve::ServeEngine`]). Because
+//! the registry caches by name, **every engine sharing a name shares one
+//! mapping of the file** (asserted in `rust/tests/mmap.rs`).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -14,17 +21,42 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use super::clock::{ticks_to_secs, Clock, RealClock};
-use crate::snapshot::{self, SnapshotMeta};
-use crate::coordinator::QuantizedModel;
+use crate::snapshot::{self, SnapshotMeta, SnapshotModel};
+
+/// How the registry should load a snapshot file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LoadMode {
+    /// Decode the whole model into RAM up front (classic behavior).
+    #[default]
+    Eager,
+    /// Memory-map the file and materialize tensors on demand (positional
+    /// reads where mapping is unavailable; v1 frames degrade to an
+    /// in-memory source). CLI: `cbq serve-bench --mmap`.
+    Mmap,
+}
 
 /// One resident model.
 pub struct LoadedSnapshot {
+    /// Registry key.
     pub name: String,
+    /// Canonicalized source path.
     pub path: PathBuf,
+    /// Parsed header metadata.
     pub meta: SnapshotMeta,
-    pub model: QuantizedModel,
+    /// The model in its residency mode (eager or lazy).
+    pub model: SnapshotModel,
+    /// Snapshot file size in bytes.
     pub file_bytes: u64,
+    /// Wall-clock cost of the load (eager: full decode; mmap: metadata
+    /// parse + checksum only — the cold-start win the bench measures).
     pub load_seconds: f64,
+}
+
+impl LoadedSnapshot {
+    /// Was this snapshot opened lazily ([`LoadMode::Mmap`])?
+    pub fn is_lazy(&self) -> bool {
+        self.model.is_lazy()
+    }
 }
 
 /// Name-keyed snapshot cache.
@@ -34,17 +66,30 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// [`ModelRegistry::load_with`] in [`LoadMode::Eager`].
+    pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<Arc<LoadedSnapshot>> {
+        self.load_with(name, path, LoadMode::Eager)
+    }
+
     /// Load `path` under `name`, or return the cached model if `name` is
     /// already resident (the path must then match — two different files
-    /// under one name is a routing bug, not a cache hit). The handle is an
-    /// `Arc`: engines on any thread share the one resident copy, and the
-    /// Arc-backed tensor storage keeps even pinned backend inputs pointing
-    /// at the same buffers.
-    pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<Arc<LoadedSnapshot>> {
+    /// under one name is a routing bug, not a cache hit; the *mode* of the
+    /// first load wins, so all engines of a name share one representation
+    /// and, for mmap, one mapping). The handle is an `Arc`: engines on any
+    /// thread share the one resident copy, and the Arc-backed tensor
+    /// storage keeps even pinned backend inputs pointing at the same
+    /// buffers.
+    pub fn load_with(
+        &mut self,
+        name: &str,
+        path: impl AsRef<Path>,
+        mode: LoadMode,
+    ) -> Result<Arc<LoadedSnapshot>> {
         // canonicalize so "./m.cbqs" and its absolute path count as the same
         // file; fall back to the raw path when the file does not exist yet
         // (snapshot::load will produce the real error below)
@@ -65,12 +110,21 @@ impl ModelRegistry {
         let clock = RealClock::new();
         let t0 = clock.now();
         let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-        let snap = snapshot::load(&path)?;
+        let (meta, model) = match mode {
+            LoadMode::Eager => {
+                let snap = snapshot::load(&path)?;
+                (snap.meta, SnapshotModel::Eager(snap.model))
+            }
+            LoadMode::Mmap => {
+                let snap = snapshot::load_lazy(&path)?;
+                (snap.meta, SnapshotModel::Lazy(snap.model))
+            }
+        };
         let loaded = Arc::new(LoadedSnapshot {
             name: name.to_string(),
             path,
-            meta: snap.meta,
-            model: snap.model,
+            meta,
+            model,
             file_bytes,
             load_seconds: ticks_to_secs(clock.now().saturating_sub(t0)),
         });
@@ -78,6 +132,7 @@ impl ModelRegistry {
         Ok(loaded)
     }
 
+    /// Fetch a resident model by name.
     pub fn get(&self, name: &str) -> Result<Arc<LoadedSnapshot>> {
         self.models
             .get(name)
@@ -85,14 +140,17 @@ impl ModelRegistry {
             .ok_or_else(|| anyhow!("no model `{name}` in registry (resident: {:?})", self.names()))
     }
 
+    /// Names of every resident model.
     pub fn names(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }
 
+    /// Number of resident models.
     pub fn len(&self) -> usize {
         self.models.len()
     }
 
+    /// Is the registry empty?
     pub fn is_empty(&self) -> bool {
         self.models.is_empty()
     }

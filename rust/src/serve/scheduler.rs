@@ -36,14 +36,19 @@ use super::clock::{ticks_to_secs, Clock};
 /// Request priority classes, highest first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Priority {
+    /// Latency-sensitive traffic (highest base score).
     Interactive,
+    /// Throughput traffic (default class).
     Batch,
+    /// Best-effort traffic (lowest base score; aging prevents starvation).
     Background,
 }
 
 impl Priority {
+    /// All classes, highest priority first (the weight-array order).
     pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Batch, Priority::Background];
 
+    /// Position of this class in [`Priority::ALL`] / the weight array.
     pub fn index(self) -> usize {
         match self {
             Priority::Interactive => 0,
@@ -52,6 +57,7 @@ impl Priority {
         }
     }
 
+    /// Lower-case class name used in reports and JSON.
     pub fn name(self) -> &'static str {
         match self {
             Priority::Interactive => "interactive",
@@ -66,8 +72,11 @@ impl Priority {
 /// any clock).
 #[derive(Clone, Debug)]
 pub struct Arrival {
+    /// Arrival offset in ticks from run start.
     pub at: u64,
+    /// Priority class of the request.
     pub class: Priority,
+    /// The request itself.
     pub request: Request,
 }
 
@@ -115,16 +124,22 @@ impl Default for SchedulerCfg {
 /// Tests replay traces and assert invariants over this log.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Decision {
+    /// Trace index of the request this decision is about.
     pub seq: usize,
+    /// Priority class of the request.
     pub class: Priority,
     /// Arrival in clock ticks (absolute, i.e. run start + trace offset).
     pub arrival: u64,
+    /// Rows the request spans.
     pub rows: usize,
+    /// Whether admission accepted the request.
     pub admitted: bool,
     /// Drain cycle that dispatched it; `usize::MAX` if never dispatched
     /// (rejected requests stay that way).
     pub cycle: usize,
+    /// Tick the drain cycle picked the request up.
     pub dispatch_time: u64,
+    /// Tick its cycle's service completed.
     pub complete_time: u64,
 }
 
@@ -133,20 +148,26 @@ pub struct Decision {
 /// latency folded in, and the full decision log.
 #[derive(Clone, Debug)]
 pub struct LiveOutcome {
+    /// One response per trace request, in trace order.
     pub responses: Vec<Response>,
+    /// Aggregate throughput + per-class latency stats.
     pub stats: ServeStats,
+    /// The full decision log, in trace order.
     pub decisions: Vec<Decision>,
+    /// Number of drain cycles the run took.
     pub cycles: usize,
 }
 
 /// The live arrival loop: admits trace arrivals against a re-credited row
 /// budget and drains by priority score each cycle.
 pub struct Scheduler<'c> {
+    /// Scheduling parameters (weights, aging, budgets).
     pub cfg: SchedulerCfg,
     clock: &'c dyn Clock,
 }
 
 impl<'c> Scheduler<'c> {
+    /// Build a scheduler over `clock` (simulated or real) with `cfg`.
     pub fn new(clock: &'c dyn Clock, cfg: SchedulerCfg) -> Self {
         Self { cfg, clock }
     }
@@ -353,11 +374,13 @@ fn class_latency(decisions: &[Decision]) -> Vec<ClassLat> {
 pub struct Lcg(u64);
 
 impl Lcg {
+    /// Seed the generator (the seed is pre-mixed so 0/1/2 diverge).
     pub fn new(seed: u64) -> Self {
         // splash the seed so 0/1/2 don't produce near-identical streams
         Self(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xD1B5_4A32_D192_ED03))
     }
 
+    /// Next raw 64-bit state.
     pub fn next_u64(&mut self) -> u64 {
         self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
         self.0
@@ -375,7 +398,9 @@ impl Lcg {
 /// Trace-generation parameters for [`synth_trace`].
 #[derive(Clone, Debug)]
 pub struct TraceSpec {
+    /// Seed of the one LCG behind gaps, classes and content.
     pub seed: u64,
+    /// Number of arrivals to generate.
     pub requests: usize,
     /// Mean inter-arrival gap in ticks, uniform in `[1, 2*mean]`
     /// (0 = the whole trace arrives at t=0).

@@ -1,31 +1,76 @@
 //! `CBQS` binary container: the on-disk frame around a quantized-model
-//! snapshot.
+//! snapshot. The normative byte-level specification lives in
+//! `docs/FORMAT.md` at the repo root; this module is the reference
+//! implementation.
 //!
-//! Layout (all integers little-endian):
+//! Two frame versions exist:
 //!
-//! ```text
-//! [magic "CBQS"][version u32][payload_len u32][payload][crc32(payload) u32]
-//! payload = [header_len u32][header JSON utf-8][n_entries u32][entry...]
-//! ```
+//! * **v1** (legacy, still read bit-exactly):
 //!
-//! Entries use the shared codec in `tensor::io` (`write_entry`/`read_entry`),
-//! which is where the packed-integer dtype lives. The CRC covers the whole
-//! payload (header + entries), so a flipped bit anywhere — metadata or
-//! weights — is detected at load time before any tensor is interpreted.
+//!   ```text
+//!   [magic "CBQS"][version u32 = 1][payload_len u32][payload][crc32(payload) u32]
+//!   payload = [header_len u32][header JSON utf-8][n_entries u32][entry...]
+//!   ```
+//!
+//!   Entries use the shared codec in `tensor::io` (`write_entry` /
+//!   `read_entry`). One CRC-32 covers the whole payload, so the file can
+//!   only be validated by reading **all** of it — fine for models that fit
+//!   in RAM, useless for lazy loading.
+//!
+//! * **v2** (current, written by [`write_container`]):
+//!
+//!   ```text
+//!   [magic "CBQS"][version u32 = 2][meta_len u64]
+//!   [meta: header_len u32, header JSON, n_records u32, record...]
+//!   [meta_crc u32 = crc32(bytes 0 .. 16+meta_len)]
+//!   [64-byte-aligned tensor payloads, zero padding between]
+//!   record = [name_len u32][name][dtype u8][bits u8][ndim u8][dims u32...]
+//!            [group i32][offset u64][len u64][crc32(payload) u32]
+//!   ```
+//!
+//!   The record table carries absolute payload offsets (64-byte aligned so
+//!   mapped f32 views are always alignment-safe) and a **per-tensor**
+//!   CRC-32, so a lazy loader can validate the header cheaply up front and
+//!   each tensor independently on first touch. `group` is the producing
+//!   block index (`-1` for globals like `embed`) — the per-window tensor
+//!   index the serving layer groups by. v2 frames use u64 lengths: the v1
+//!   4 GiB payload cap is gone.
+//!
+//! [`open_container`] dispatches on the version tag and returns a
+//! [`LazyContainer`] over a byte [`Source`] (mmap, positional reads, or an
+//! in-memory buffer); [`read_container`] is the eager convenience on top,
+//! and is what v1 files always get (their whole-payload CRC forces a full
+//! read anyway).
 
 use std::collections::BTreeMap;
+use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::json::{self, Value};
-use crate::tensor::io::{read_entry, write_entry, ByteReader, Entry};
+use crate::tensor::io::{
+    write_entry, ByteReader, Entry, PackedTensor, DTYPE_F32, DTYPE_I32, DTYPE_PACKED,
+    MAX_NAME_LEN, MAX_NDIM,
+};
+use crate::tensor::Tensor;
 
+/// The four magic bytes every CBQS file starts with.
 pub const MAGIC: &[u8; 4] = b"CBQS";
-pub const VERSION: u32 = 1;
+/// Frame version this code writes ([`write_container`]).
+pub const VERSION: u32 = 2;
+/// The legacy frame version ([`write_container_v1`]), still readable.
+pub const VERSION_V1: u32 = 1;
+/// Alignment of every v2 tensor payload. 64 divides the page size on every
+/// supported platform, so a 64-aligned file offset yields a 64-aligned
+/// pointer inside a page-aligned mapping — safe to reinterpret as f32/i32.
+pub const PAYLOAD_ALIGN: u64 = 64;
+/// Sanity cap on v2 `group` ids (block indices; -1 means "global").
+const MAX_GROUP: i32 = 1 << 20;
 
 /// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven: the
-/// checksum runs over the whole payload on every save *and* load, and
+/// checksum runs over headers and payloads on every save *and* load, and
 /// payloads scale with model size, so the 1 KiB table is worth it.
 pub fn crc32(bytes: &[u8]) -> u32 {
     use std::sync::OnceLock;
@@ -48,8 +93,398 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     !crc
 }
 
-/// Write a container. Returns bytes written.
+fn align_up(v: u64, align: u64) -> u64 {
+    v.div_ceil(align) * align
+}
+
+// ---------------------------------------------------------------------------
+// record metadata
+// ---------------------------------------------------------------------------
+
+/// One tensor's entry in the v2 record table (or the equivalent
+/// reconstructed from a v1 frame during parsing).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecordMeta {
+    /// Tensor name (e.g. `blocks.3.wq.q`).
+    pub name: String,
+    /// Dtype tag: [`DTYPE_F32`], [`DTYPE_I32`] (v1 legacy) or
+    /// [`DTYPE_PACKED`].
+    pub dtype: u8,
+    /// Storage bits per element: 32 for f32/i32, the packed bit-width
+    /// (1..=8) for packed codes.
+    pub bits: u8,
+    /// Logical tensor shape.
+    pub dims: Vec<usize>,
+    /// Producing block index, `-1` for global tensors (embed, head, ...).
+    /// This is the per-window index key the lazy serving path groups by.
+    pub group: i32,
+    /// Absolute file offset of the payload (64-byte aligned in v2 frames;
+    /// arbitrary in records reconstructed from v1 frames).
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// CRC-32 of the payload bytes, verified on every materialization.
+    pub crc: u32,
+}
+
+impl RecordMeta {
+    /// Number of logical elements (`dims` product).
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Bytes this tensor occupies once materialized for execution: f32
+    /// everywhere (packed codes dequantize to f32), i.e. `elems * 4`. The
+    /// `cbq snapshot-info` resident estimates sum this.
+    pub fn unpacked_bytes(&self) -> u64 {
+        4 * self.elems() as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// byte sources
+// ---------------------------------------------------------------------------
+
+/// Where a container's payload bytes come from.
+pub enum Source {
+    /// A shared read-only memory mapping: zero-copy, pages fault in on
+    /// demand (the larger-than-RAM serving path).
+    Mapped(Arc<mmap::Mmap>),
+    /// Positional reads from the file (pure-Rust fallback when mapping is
+    /// unavailable): lazy but each touched range is copied to the heap.
+    File(mmap::ReadAtFile),
+    /// The whole file resident in memory (eager loads and all v1 frames,
+    /// whose whole-payload CRC forces a full read regardless).
+    Memory(Arc<Vec<u8>>),
+}
+
+/// A byte range handed out by [`Source::bytes`]: borrowed (zero-copy) from
+/// a mapping or in-memory buffer, or owned when it had to be read from
+/// disk.
+pub enum SourceBytes<'a> {
+    /// Zero-copy view into the source.
+    Borrowed(&'a [u8]),
+    /// Freshly read copy (the [`Source::File`] path).
+    Owned(Vec<u8>),
+}
+
+impl std::ops::Deref for SourceBytes<'_> {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        match self {
+            SourceBytes::Borrowed(b) => b,
+            SourceBytes::Owned(v) => v.as_slice(),
+        }
+    }
+}
+
+impl Source {
+    /// Total length of the underlying file/buffer in bytes.
+    pub fn len(&self) -> u64 {
+        match self {
+            Source::Mapped(m) => m.len() as u64,
+            Source::File(f) => f.len(),
+            Source::Memory(v) => v.len() as u64,
+        }
+    }
+
+    /// Is the source empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch `len` bytes at `offset` (bounds-checked).
+    pub fn bytes(&self, offset: u64, len: u64) -> Result<SourceBytes<'_>> {
+        let end = offset
+            .checked_add(len)
+            .ok_or_else(|| anyhow!("byte range {offset}+{len} overflows"))?;
+        ensure!(
+            end <= self.len(),
+            "truncated container: byte range {offset}+{len} exceeds file length {}",
+            self.len()
+        );
+        // cast only inside the in-memory arms (there the range fits usize
+        // by construction); the File arm keeps the u64 offset so >4 GiB
+        // snapshots read correctly even where usize is 32-bit
+        Ok(match self {
+            Source::Mapped(m) => {
+                SourceBytes::Borrowed(&m.as_bytes()[offset as usize..end as usize])
+            }
+            Source::Memory(v) => SourceBytes::Borrowed(&v[offset as usize..end as usize]),
+            Source::File(f) => SourceBytes::Owned(f.read_at(offset, len as usize)?),
+        })
+    }
+
+    /// The shared mapping, when this source is one (the zero-copy tensor
+    /// construction path checks this).
+    pub fn mapped(&self) -> Option<&Arc<mmap::Mmap>> {
+        match self {
+            Source::Mapped(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Debug for Source {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Source::Mapped(m) => write!(f, "Source::Mapped[{} bytes]", m.len()),
+            Source::File(r) => write!(f, "Source::File[{} bytes]", r.len()),
+            Source::Memory(v) => write!(f, "Source::Memory[{} bytes]", v.len()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the container handle
+// ---------------------------------------------------------------------------
+
+/// How [`open_container`] should source payload bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpenMode {
+    /// Read the whole file into memory up front (the classic path).
+    Eager,
+    /// Map the file read-only when possible, falling back to positional
+    /// reads; payloads are validated and decoded on first touch. v1 frames
+    /// degrade to an in-memory source (their CRC requires a full read).
+    Lazy,
+}
+
+/// An opened CBQS container: validated header + record table over a byte
+/// [`Source`]. Payloads are fetched and CRC-checked per record via
+/// [`LazyContainer::materialize`] / [`LazyContainer::payload`].
+pub struct LazyContainer {
+    /// Frame version actually found in the file (1 or 2).
+    pub version: u32,
+    /// The parsed header JSON.
+    pub header: Value,
+    /// Per-tensor record table, in file order.
+    pub records: Vec<RecordMeta>,
+    /// Payload byte source.
+    pub source: Source,
+    /// Total file size in bytes.
+    pub file_bytes: u64,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl LazyContainer {
+    /// Look up a record by tensor name.
+    pub fn record(&self, name: &str) -> Result<&RecordMeta> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.records[i])
+            .ok_or_else(|| anyhow!("snapshot is missing tensor `{name}`"))
+    }
+
+    /// Does the container hold a tensor by this name?
+    pub fn contains(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    /// Fetch one record's payload bytes and verify its CRC-32. This is the
+    /// lazy path's integrity gate: every materialization revalidates, so a
+    /// bit flip under an already-open container is still caught on the
+    /// next touch.
+    pub fn payload(&self, rec: &RecordMeta) -> Result<SourceBytes<'_>> {
+        let bytes = self.source.bytes(rec.offset, rec.len)?;
+        let actual = crc32(&bytes);
+        ensure!(
+            actual == rec.crc,
+            "checksum mismatch on `{}`: stored {:#010x}, computed {actual:#010x} — \
+             snapshot corrupt",
+            rec.name,
+            rec.crc
+        );
+        Ok(bytes)
+    }
+
+    /// Decode one record into an owned [`Entry`] (payload CRC verified).
+    /// The zero-copy mapped-tensor path lives in `snapshot::lazy` instead;
+    /// this is the always-correct fallback and the eager loader's builder.
+    pub fn materialize(&self, rec: &RecordMeta) -> Result<Entry> {
+        let bytes = self.payload(rec)?;
+        decode_entry(rec, &bytes)
+    }
+}
+
+/// Decode a record's payload bytes into an [`Entry`] (dtype dispatch; the
+/// legacy v1 i32 dtype converts to f32 exactly as the CBQW reader did).
+fn decode_entry(rec: &RecordMeta, bytes: &[u8]) -> Result<Entry> {
+    match rec.dtype {
+        DTYPE_F32 | DTYPE_I32 => {
+            let data: Vec<f32> = if rec.dtype == DTYPE_F32 {
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            } else {
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                    .collect()
+            };
+            ensure!(
+                data.len() == rec.elems(),
+                "`{}`: {} decoded values for dims {:?}",
+                rec.name,
+                data.len(),
+                rec.dims
+            );
+            Ok(Entry::F32(Tensor::new(rec.dims.clone(), data)))
+        }
+        DTYPE_PACKED => Ok(Entry::Packed(PackedTensor {
+            dims: rec.dims.clone(),
+            bits: rec.bits,
+            data: bytes.to_vec(),
+        })),
+        d => bail!("unknown dtype {d} for `{}`", rec.name),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writers
+// ---------------------------------------------------------------------------
+
+fn entry_payload(e: &Entry) -> (u8, u8, Vec<usize>, Vec<u8>) {
+    match e {
+        Entry::F32(t) => {
+            let mut bytes = Vec::with_capacity(4 * t.len());
+            for &v in &t.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            (DTYPE_F32, 32, t.dims.clone(), bytes)
+        }
+        Entry::Packed(p) => (DTYPE_PACKED, p.bits, p.dims.clone(), p.data.clone()),
+    }
+}
+
+fn check_entry_shape(name: &str, dims: &[usize], dtype: u8, bits: u8) -> Result<()> {
+    ensure!(name.len() <= MAX_NAME_LEN, "tensor name too long ({})", name.len());
+    ensure!(dims.len() <= MAX_NDIM, "rank {} too high for {name}", dims.len());
+    ensure!(
+        dims.iter().all(|&d| d > 0) || dims.is_empty(),
+        "zero-sized dim in {name}: {dims:?}"
+    );
+    if dtype == DTYPE_PACKED {
+        ensure!((1..=8).contains(&bits), "bad packed bits {bits} for {name}");
+    }
+    Ok(())
+}
+
+/// Write a file via a `.tmp` sibling + atomic rename: re-exporting over a
+/// snapshot that is currently mmap-served must never truncate the live
+/// inode (`File::create` in place would — the serving process's next page
+/// fault past the new EOF is a SIGBUS). The old file keeps serving until
+/// the rename, and its pages stay valid afterwards.
+fn replace_file(path: &Path, write: impl FnOnce(&Path) -> Result<()>) -> Result<()> {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    let tmp = std::path::PathBuf::from(os);
+    match write(&tmp) {
+        Ok(()) => std::fs::rename(&tmp, path)
+            .with_context(|| format!("replacing snapshot {path:?}")),
+        Err(e) => {
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+/// Write a v2 container. `entries` carry a `group` id per tensor (the
+/// producing block index, `-1` for globals) which lands in the record
+/// table as the per-window index. The file is written to a `.tmp` sibling
+/// and atomically renamed into place (safe against live mmap readers).
+/// Returns bytes written.
 pub fn write_container(
+    path: impl AsRef<Path>,
+    header: &Value,
+    entries: &[(String, Entry, i32)],
+) -> Result<u64> {
+    let header_json = json::dump(header);
+    ensure!(header_json.len() <= u32::MAX as usize, "snapshot header exceeds u32 framing");
+    ensure!(entries.len() <= u32::MAX as usize, "too many snapshot entries");
+
+    // pass 1: payload bytes + fixed-width record sizes (offsets are u64,
+    // so the meta block's length is known before offsets are assigned)
+    let mut payloads = Vec::with_capacity(entries.len());
+    let mut meta_len = 4 + header_json.len() + 4; // header_len + header + n_records
+    for (name, e, group) in entries {
+        let (dtype, bits, dims, bytes) = entry_payload(e);
+        check_entry_shape(name, &dims, dtype, bits)?;
+        ensure!(
+            (-1..=MAX_GROUP).contains(group),
+            "group id {group} for {name} outside [-1, {MAX_GROUP}]"
+        );
+        // name_len + name + dtype + bits + ndim + dims + group + offset + len + crc
+        meta_len += 4 + name.len() + 1 + 1 + 1 + 4 * dims.len() + 4 + 8 + 8 + 4;
+        payloads.push((name, dtype, bits, dims, *group, bytes));
+    }
+
+    // pass 2: assign 64-byte-aligned absolute offsets after the meta CRC
+    let meta_end = 16 + meta_len as u64; // magic + version + meta_len field
+    let mut cursor = align_up(meta_end + 4, PAYLOAD_ALIGN);
+    let mut offsets = Vec::with_capacity(payloads.len());
+    for (_, _, _, _, _, bytes) in &payloads {
+        offsets.push(cursor);
+        cursor = align_up(cursor + bytes.len() as u64, PAYLOAD_ALIGN);
+    }
+
+    // serialize the meta block
+    let mut meta = Vec::with_capacity(meta_len);
+    meta.extend_from_slice(&(header_json.len() as u32).to_le_bytes());
+    meta.extend_from_slice(header_json.as_bytes());
+    meta.extend_from_slice(&(payloads.len() as u32).to_le_bytes());
+    for ((name, dtype, bits, dims, group, bytes), &offset) in payloads.iter().zip(&offsets) {
+        meta.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        meta.extend_from_slice(name.as_bytes());
+        meta.push(*dtype);
+        meta.push(*bits);
+        meta.push(dims.len() as u8);
+        for &d in dims {
+            meta.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        meta.extend_from_slice(&group.to_le_bytes());
+        meta.extend_from_slice(&offset.to_le_bytes());
+        meta.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+        meta.extend_from_slice(&crc32(bytes).to_le_bytes());
+    }
+    debug_assert_eq!(meta.len(), meta_len);
+
+    // stream out: prefix + meta + meta_crc + aligned payloads
+    let mut prefix = Vec::with_capacity(16);
+    prefix.extend_from_slice(MAGIC);
+    prefix.extend_from_slice(&VERSION.to_le_bytes());
+    prefix.extend_from_slice(&(meta_len as u64).to_le_bytes());
+    let meta_crc = {
+        let mut covered = prefix.clone();
+        covered.extend_from_slice(&meta);
+        crc32(&covered)
+    };
+
+    let mut written = meta_end + 4;
+    replace_file(path.as_ref(), |tmp| {
+        let file = std::fs::File::create(tmp)
+            .with_context(|| format!("writing snapshot {tmp:?}"))?;
+        let mut w = std::io::BufWriter::new(file);
+        w.write_all(&prefix)?;
+        w.write_all(&meta)?;
+        w.write_all(&meta_crc.to_le_bytes())?;
+        for ((_, _, _, _, _, bytes), &offset) in payloads.iter().zip(&offsets) {
+            let pad = offset - written;
+            w.write_all(&vec![0u8; pad as usize])?;
+            w.write_all(bytes)?;
+            written = offset + bytes.len() as u64;
+        }
+        w.flush()?;
+        Ok(())
+    })?;
+    Ok(written)
+}
+
+/// Write a legacy v1 container (whole-payload CRC, u32 framing, no offset
+/// table). Kept for compatibility tests and downgrade tooling; new
+/// snapshots are written by [`write_container`].
+pub fn write_container_v1(
     path: impl AsRef<Path>,
     header: &Value,
     entries: &[(String, Entry)],
@@ -66,36 +501,74 @@ pub fn write_container(
     ensure!(
         payload.len() <= u32::MAX as usize,
         "snapshot payload is {} bytes — exceeds the v1 u32 framing limit; \
-         shard the model before export",
+         export a v2 snapshot instead",
         payload.len()
     );
     let mut raw = Vec::with_capacity(payload.len() + 16);
     raw.extend_from_slice(MAGIC);
-    raw.extend_from_slice(&VERSION.to_le_bytes());
+    raw.extend_from_slice(&VERSION_V1.to_le_bytes());
     raw.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     raw.extend_from_slice(&payload);
     raw.extend_from_slice(&crc32(&payload).to_le_bytes());
-    std::fs::write(path.as_ref(), &raw)
-        .with_context(|| format!("writing snapshot {:?}", path.as_ref()))?;
+    replace_file(path.as_ref(), |tmp| {
+        std::fs::write(tmp, &raw).with_context(|| format!("writing snapshot {tmp:?}"))
+    })?;
     Ok(raw.len() as u64)
 }
 
-/// Read and fully validate a container: magic, version, framing, checksum,
-/// and per-entry hardening (duplicates, truncation, overflow) all checked.
-pub fn read_container(path: impl AsRef<Path>) -> Result<(Value, BTreeMap<String, Entry>)> {
-    let raw = std::fs::read(path.as_ref())
-        .with_context(|| format!("reading snapshot {:?}", path.as_ref()))?;
+// ---------------------------------------------------------------------------
+// readers
+// ---------------------------------------------------------------------------
+
+/// Open a container, dispatching on the version tag. Always validates
+/// magic, version, framing, the metadata checksum and every record's
+/// bounds; [`OpenMode::Eager`] additionally implies payload CRCs get
+/// verified as [`read_container`] materializes them.
+pub fn open_container(path: impl AsRef<Path>, mode: OpenMode) -> Result<LazyContainer> {
+    let path = path.as_ref();
+    // sniff the 16-byte prefix to learn the version without committing to
+    // a full read
+    let prefix = {
+        let f = mmap::ReadAtFile::open(path)
+            .with_context(|| format!("reading snapshot {path:?}"))?;
+        ensure!(f.len() >= 16, "not a CBQS snapshot ({} bytes — too short)", f.len());
+        f.read_at(0, 16)?
+    };
+    ensure!(&prefix[..4] == MAGIC, "not a CBQS snapshot (magic {:?})", &prefix[..4]);
+    let version = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]);
+    match version {
+        VERSION_V1 => open_v1(path),
+        VERSION => open_v2(path, mode),
+        v => bail!("unsupported CBQS version {v} (this build reads 1 and {VERSION})"),
+    }
+}
+
+fn index_records(records: &[RecordMeta]) -> Result<BTreeMap<String, usize>> {
+    let mut by_name = BTreeMap::new();
+    for (i, r) in records.iter().enumerate() {
+        ensure!(by_name.insert(r.name.clone(), i).is_none(), "duplicate entry `{}`", r.name);
+    }
+    Ok(by_name)
+}
+
+/// v1: the whole-payload CRC forces a full read; entries are parsed with
+/// absolute payload offsets recorded so the lazy machinery works uniformly
+/// (over an in-memory source — v1 has no larger-than-RAM story).
+fn open_v1(path: &Path) -> Result<LazyContainer> {
+    let raw = std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
+    let file_bytes = raw.len() as u64;
     let mut r = ByteReader::new(&raw);
     let magic = r.take(4)?;
     ensure!(magic == MAGIC, "not a CBQS snapshot (magic {:?})", magic);
     let version = r.u32()?;
-    ensure!(version == VERSION, "unsupported CBQS version {version} (expected {VERSION})");
+    ensure!(version == VERSION_V1, "unsupported CBQS version {version}");
     let payload_len = r.u32()? as usize;
     ensure!(
         r.remaining() == payload_len + 4,
         "corrupt framing: payload {payload_len}B + crc vs {}B remaining",
         r.remaining()
     );
+    let payload_base = r.pos() as u64;
     let payload = r.take(payload_len)?;
     let stored_crc = r.u32()?;
     let actual = crc32(payload);
@@ -109,13 +582,225 @@ pub fn read_container(path: impl AsRef<Path>) -> Result<(Value, BTreeMap<String,
     let header_raw = std::str::from_utf8(p.take(header_len)?)?;
     let header = json::parse(header_raw).context("parsing snapshot header")?;
     let n = p.u32()? as usize;
-    let mut entries = BTreeMap::new();
+    let mut records = Vec::with_capacity(n.min(1 << 16));
     for _ in 0..n {
-        let (name, e) = read_entry(&mut p)?;
-        ensure!(entries.insert(name.clone(), e).is_none(), "duplicate entry `{name}`");
+        records.push(parse_record_v1(&mut p, payload_base)?);
     }
     ensure!(p.is_done(), "{} trailing bytes after last entry", p.remaining());
-    Ok((header, entries))
+    let by_name = index_records(&records)?;
+    Ok(LazyContainer {
+        version: VERSION_V1,
+        header,
+        records,
+        source: Source::Memory(Arc::new(raw)),
+        file_bytes,
+        by_name,
+    })
+}
+
+/// Parse one v1 entry *header*, skipping over (but locating and
+/// checksumming) its payload. `base` is the payload region's absolute file
+/// offset, so recorded offsets are file-absolute like v2's.
+fn parse_record_v1(r: &mut ByteReader, base: u64) -> Result<RecordMeta> {
+    let name_len = r.u32()? as usize;
+    ensure!(name_len <= MAX_NAME_LEN, "tensor name length {name_len} exceeds cap");
+    let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+    let dtype = r.u8()?;
+    let ndim = r.u8()? as usize;
+    ensure!(ndim <= MAX_NDIM, "rank {ndim} exceeds cap for {name}");
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(r.u32()? as usize);
+    }
+    ensure!(dims.iter().all(|&d| d > 0), "zero-sized dim in {name}: {dims:?}");
+    let count = checked_count(&dims)?.max(1);
+    let (bits, payload_len) = match dtype {
+        DTYPE_F32 | DTYPE_I32 => {
+            let len = count
+                .checked_mul(4)
+                .ok_or_else(|| anyhow!("payload size overflow for {name}: {dims:?}"))?;
+            (32u8, len)
+        }
+        DTYPE_PACKED => {
+            let bits = r.u8()?;
+            ensure!((1..=8).contains(&bits), "bad packed bits {bits} for {name}");
+            let byte_len = r.u32()? as usize;
+            let want = count
+                .checked_mul(bits as usize)
+                .map(|b| b.div_ceil(8))
+                .ok_or_else(|| anyhow!("packed size overflow for {name}: {dims:?}"))?;
+            ensure!(byte_len == want, "packed payload of {name}: {byte_len} bytes, want {want}");
+            (bits, byte_len)
+        }
+        d => bail!("unknown dtype {d} for {name}"),
+    };
+    let offset = base + r.pos() as u64;
+    let payload = r.take(payload_len)?;
+    Ok(RecordMeta {
+        name,
+        dtype,
+        bits,
+        dims,
+        group: -1, // v1 carries no group field; snapshot::lazy derives it from the name
+        offset,
+        len: payload_len as u64,
+        crc: crc32(payload),
+    })
+}
+
+fn checked_count(dims: &[usize]) -> Result<usize> {
+    let mut count = 1usize;
+    for &d in dims {
+        count = count
+            .checked_mul(d)
+            .ok_or_else(|| anyhow!("dimension product overflow: {dims:?}"))?;
+    }
+    Ok(count)
+}
+
+fn open_v2(path: &Path, mode: OpenMode) -> Result<LazyContainer> {
+    // pick the byte source first; the meta block is then read through it
+    let source = match mode {
+        OpenMode::Eager => Source::Memory(Arc::new(
+            std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?,
+        )),
+        OpenMode::Lazy => match mmap::Mmap::open(path) {
+            Ok(m) => Source::Mapped(Arc::new(m)),
+            Err(_) => Source::File(
+                mmap::ReadAtFile::open(path)
+                    .with_context(|| format!("reading snapshot {path:?}"))?,
+            ),
+        },
+    };
+    let file_bytes = source.len();
+    ensure!(file_bytes >= 20, "corrupt framing: {file_bytes}B is too short for a v2 frame");
+    let prefix = source.bytes(0, 16)?;
+    ensure!(&prefix[..4] == MAGIC, "not a CBQS snapshot (magic {:?})", &prefix[..4]);
+    let version = u32::from_le_bytes([prefix[4], prefix[5], prefix[6], prefix[7]]);
+    ensure!(version == VERSION, "unsupported CBQS version {version} (expected {VERSION})");
+    let meta_len = u64::from_le_bytes([
+        prefix[8], prefix[9], prefix[10], prefix[11], prefix[12], prefix[13], prefix[14],
+        prefix[15],
+    ]);
+    let meta_end = 16u64
+        .checked_add(meta_len)
+        .filter(|v| v.checked_add(4).is_some())
+        .ok_or_else(|| anyhow!("corrupt framing: meta length {meta_len} overflows"))?;
+    ensure!(
+        meta_end + 4 <= file_bytes,
+        "corrupt framing: meta block {meta_len}B + crc exceeds file length {file_bytes}"
+    );
+    drop(prefix);
+
+    // metadata checksum covers prefix + meta block
+    let covered = source.bytes(0, meta_end)?;
+    let stored_crc = {
+        let b = source.bytes(meta_end, 4)?;
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    };
+    let actual = crc32(&covered);
+    ensure!(
+        stored_crc == actual,
+        "checksum mismatch in metadata: stored {stored_crc:#010x}, computed {actual:#010x} — \
+         snapshot corrupt"
+    );
+
+    let mut p = ByteReader::new(&covered[16..]);
+    let header_len = p.u32()? as usize;
+    let header_raw = std::str::from_utf8(p.take(header_len)?)?;
+    let header = json::parse(header_raw).context("parsing snapshot header")?;
+    let n = p.u32()? as usize;
+    let mut records = Vec::with_capacity(n.min(1 << 16));
+    for _ in 0..n {
+        let rec = parse_record_v2(&mut p)?;
+        ensure!(
+            rec.offset % PAYLOAD_ALIGN == 0,
+            "record `{}` payload offset {} is not {PAYLOAD_ALIGN}-byte aligned",
+            rec.name,
+            rec.offset
+        );
+        ensure!(
+            rec.offset >= meta_end + 4
+                && rec.offset.checked_add(rec.len).map(|e| e <= file_bytes).unwrap_or(false),
+            "truncated container: record `{}` payload {}+{} exceeds file length {file_bytes}",
+            rec.name,
+            rec.offset,
+            rec.len
+        );
+        records.push(rec);
+    }
+    ensure!(p.is_done(), "{} trailing bytes after the record table", p.remaining());
+    drop(covered);
+    // exact framing (the v1 invariant carried forward): the file ends at
+    // the last payload byte, so trailing garbage — a concatenated or
+    // partially overwritten container — is rejected, not silently carried
+    let expected_end = records
+        .iter()
+        .map(|r| r.offset + r.len)
+        .max()
+        .unwrap_or(meta_end + 4);
+    ensure!(
+        expected_end == file_bytes,
+        "corrupt framing: {} trailing bytes after the last payload",
+        file_bytes.saturating_sub(expected_end)
+    );
+    let by_name = index_records(&records)?;
+    Ok(LazyContainer { version: VERSION, header, records, source, file_bytes, by_name })
+}
+
+fn parse_record_v2(r: &mut ByteReader) -> Result<RecordMeta> {
+    let name_len = r.u32()? as usize;
+    ensure!(name_len <= MAX_NAME_LEN, "tensor name length {name_len} exceeds cap");
+    let name = String::from_utf8(r.take(name_len)?.to_vec())?;
+    let dtype = r.u8()?;
+    let bits = r.u8()?;
+    let ndim = r.u8()? as usize;
+    ensure!(ndim <= MAX_NDIM, "rank {ndim} exceeds cap for {name}");
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(r.u32()? as usize);
+    }
+    ensure!(dims.iter().all(|&d| d > 0), "zero-sized dim in {name}: {dims:?}");
+    let count = checked_count(&dims)?.max(1);
+    let group = r.i32()?;
+    ensure!((-1..=MAX_GROUP).contains(&group), "group id {group} for {name} out of range");
+    let offset = r.u64()?;
+    let len = r.u64()?;
+    let crc = r.u32()?;
+    let want = match dtype {
+        DTYPE_F32 => count
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("payload size overflow for {name}: {dims:?}"))?
+            as u64,
+        DTYPE_PACKED => {
+            ensure!((1..=8).contains(&bits), "bad packed bits {bits} for {name}");
+            count
+                .checked_mul(bits as usize)
+                .map(|b| b.div_ceil(8))
+                .ok_or_else(|| anyhow!("packed size overflow for {name}: {dims:?}"))?
+                as u64
+        }
+        d => bail!("unknown dtype {d} for {name}"),
+    };
+    ensure!(len == want, "payload of {name}: {len} bytes, want {want}");
+    if dtype == DTYPE_F32 {
+        ensure!(bits == 32, "f32 record {name} claims {bits} storage bits");
+    }
+    Ok(RecordMeta { name, dtype, bits, dims, group, offset, len, crc })
+}
+
+/// Read and fully validate a container of either version: magic, version,
+/// framing, metadata checksum, per-entry hardening (duplicates, truncation,
+/// overflow) and every payload CRC. This is the eager path [`crate::snapshot::load`]
+/// uses — a v1 file and its v2 re-export decode to identical entries.
+pub fn read_container(path: impl AsRef<Path>) -> Result<(Value, BTreeMap<String, Entry>)> {
+    let c = open_container(path, OpenMode::Eager)?;
+    let mut entries = BTreeMap::new();
+    for rec in &c.records {
+        let e = c.materialize(rec)?;
+        entries.insert(rec.name.clone(), e);
+    }
+    Ok((c.header, entries))
 }
 
 #[cfg(test)]
@@ -124,16 +809,25 @@ mod tests {
     use crate::tensor::io::PackedTensor;
     use crate::tensor::Tensor;
 
-    fn sample() -> (Value, Vec<(String, Entry)>) {
-        let header = Value::obj(vec![("format", Value::str("CBQS")), ("v", Value::num(1.0))]);
+    fn sample() -> (Value, Vec<(String, Entry, i32)>) {
+        let header = Value::obj(vec![("format", Value::str("CBQS")), ("v", Value::num(2.0))]);
         let entries = vec![
-            ("w".to_string(), Entry::F32(Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]))),
+            (
+                "w".to_string(),
+                Entry::F32(Tensor::new(vec![2, 2], vec![1., 2., 3., 4.])),
+                -1,
+            ),
             (
                 "q".to_string(),
                 Entry::Packed(PackedTensor::pack(&[-8, 7, 0, 1, 2, -1], vec![6], 4).unwrap()),
+                0,
             ),
         ];
         (header, entries)
+    }
+
+    fn v1_entries(e: &[(String, Entry, i32)]) -> Vec<(String, Entry)> {
+        e.iter().map(|(n, e, _)| (n.clone(), e.clone())).collect()
     }
 
     #[test]
@@ -144,7 +838,7 @@ mod tests {
     }
 
     #[test]
-    fn container_roundtrip() {
+    fn container_roundtrip_v2() {
         let (header, entries) = sample();
         let p = std::env::temp_dir().join("cbqs_fmt_roundtrip.bin");
         write_container(&p, &header, &entries).unwrap();
@@ -157,10 +851,72 @@ mod tests {
     }
 
     #[test]
-    fn detects_bit_flip_anywhere() {
+    fn v1_and_v2_decode_identically() {
+        let (header, entries) = sample();
+        let p1 = std::env::temp_dir().join("cbqs_fmt_v1.bin");
+        let p2 = std::env::temp_dir().join("cbqs_fmt_v2.bin");
+        write_container_v1(&p1, &header, &v1_entries(&entries)).unwrap();
+        write_container(&p2, &header, &entries).unwrap();
+        let (h1, m1) = read_container(&p1).unwrap();
+        let (h2, m2) = read_container(&p2).unwrap();
+        assert_eq!(h1, h2);
+        assert_eq!(m1, m2, "v1 and v2 frames must decode to identical entries");
+        std::fs::remove_file(p1).ok();
+        std::fs::remove_file(p2).ok();
+    }
+
+    #[test]
+    fn v2_offsets_are_aligned_and_grouped() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_align.bin");
+        let written = write_container(&p, &header, &entries).unwrap();
+        assert_eq!(written, std::fs::metadata(&p).unwrap().len());
+        let c = open_container(&p, OpenMode::Eager).unwrap();
+        assert_eq!(c.version, VERSION);
+        assert_eq!(c.records.len(), 2);
+        for r in &c.records {
+            assert_eq!(r.offset % PAYLOAD_ALIGN, 0, "{}: offset {}", r.name, r.offset);
+        }
+        assert_eq!(c.record("w").unwrap().group, -1);
+        assert_eq!(c.record("q").unwrap().group, 0);
+        assert_eq!(c.record("w").unwrap().unpacked_bytes(), 16);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn detects_bit_flip_in_covered_regions_v2() {
+        // v2 CRCs cover the prefix+meta block and every payload; alignment
+        // padding is structurally dead (offsets/lengths pin the live
+        // ranges), so flips are injected into covered regions only.
         let (header, entries) = sample();
         let p = std::env::temp_dir().join("cbqs_fmt_bitflip.bin");
         write_container(&p, &header, &entries).unwrap();
+        let c = open_container(&p, OpenMode::Eager).unwrap();
+        let meta_end = {
+            // prefix + meta + crc: everything before the first payload that
+            // the meta checksum covers
+            let b = std::fs::read(&p).unwrap();
+            16 + u64::from_le_bytes(b[8..16].try_into().unwrap()) as usize + 4
+        };
+        let mut covered: Vec<usize> = (0..meta_end).collect();
+        for r in &c.records {
+            covered.extend((r.offset as usize)..(r.offset + r.len) as usize);
+        }
+        let clean = std::fs::read(&p).unwrap();
+        for pos in covered {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x10;
+            std::fs::write(&p, &bad).unwrap();
+            assert!(read_container(&p).is_err(), "bit flip at {pos} not detected");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn detects_bit_flip_anywhere_v1() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_bitflip_v1.bin");
+        write_container_v1(&p, &header, &v1_entries(&entries)).unwrap();
         let clean = std::fs::read(&p).unwrap();
         // flip one bit in every payload byte position in turn
         for pos in 12..clean.len() - 4 {
@@ -169,6 +925,27 @@ mod tests {
             std::fs::write(&p, &bad).unwrap();
             assert!(read_container(&p).is_err(), "bit flip at {pos} not detected");
         }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn lazy_open_validates_meta_and_defers_payloads() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_lazy.bin");
+        write_container(&p, &header, &entries).unwrap();
+
+        // corrupt one payload byte: lazy open succeeds (meta is intact),
+        // materializing the damaged record fails, the other still loads
+        let c0 = open_container(&p, OpenMode::Eager).unwrap();
+        let w_off = c0.record("w").unwrap().offset as usize;
+        let mut bad = std::fs::read(&p).unwrap();
+        bad[w_off] ^= 0x01;
+        std::fs::write(&p, &bad).unwrap();
+
+        let c = open_container(&p, OpenMode::Lazy).unwrap();
+        let e = c.materialize(c.record("w").unwrap()).unwrap_err();
+        assert!(format!("{e:#}").contains("checksum"), "{e:#}");
+        assert!(c.materialize(c.record("q").unwrap()).is_ok());
         std::fs::remove_file(p).ok();
     }
 
@@ -195,16 +972,51 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncation() {
+    fn rejects_truncation_v1_and_v2() {
         let (header, entries) = sample();
-        let p = std::env::temp_dir().join("cbqs_fmt_trunc.bin");
-        write_container(&p, &header, &entries).unwrap();
-        let clean = std::fs::read(&p).unwrap();
-        for cut in [1usize, 5, clean.len() / 2] {
-            let bad = clean[..clean.len() - cut].to_vec();
-            std::fs::write(&p, &bad).unwrap();
-            assert!(read_container(&p).is_err(), "truncation by {cut} not detected");
+        for v1 in [false, true] {
+            let p = std::env::temp_dir().join(format!("cbqs_fmt_trunc_{v1}.bin"));
+            if v1 {
+                write_container_v1(&p, &header, &v1_entries(&entries)).unwrap();
+            } else {
+                write_container(&p, &header, &entries).unwrap();
+            }
+            let clean = std::fs::read(&p).unwrap();
+            for cut in [1usize, 5, clean.len() / 2] {
+                let bad = clean[..clean.len() - cut].to_vec();
+                std::fs::write(&p, &bad).unwrap();
+                assert!(
+                    read_container(&p).is_err(),
+                    "truncation by {cut} not detected (v1={v1})"
+                );
+            }
+            std::fs::remove_file(p).ok();
         }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_v2() {
+        let (header, entries) = sample();
+        let p = std::env::temp_dir().join("cbqs_fmt_trailing.bin");
+        write_container(&p, &header, &entries).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw.extend_from_slice(&[0xAB; 17]);
+        std::fs::write(&p, &raw).unwrap();
+        let e = open_container(&p, OpenMode::Lazy).unwrap_err();
+        assert!(format!("{e:#}").contains("trailing"), "{e:#}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let header = Value::obj(vec![("format", Value::str("CBQS"))]);
+        let t = Entry::F32(Tensor::scalar(1.0));
+        let entries =
+            vec![("dup".to_string(), t.clone(), -1), ("dup".to_string(), t, -1)];
+        let p = std::env::temp_dir().join("cbqs_fmt_dup.bin");
+        write_container(&p, &header, &entries).unwrap();
+        let e = read_container(&p).unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate"), "{e:#}");
         std::fs::remove_file(p).ok();
     }
 }

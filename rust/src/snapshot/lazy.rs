@@ -1,0 +1,318 @@
+//! Lazy, block-addressable view of a CBQS snapshot: the larger-than-RAM
+//! serving path.
+//!
+//! [`LazyModel`] wraps an opened [`LazyContainer`] and materializes tensors
+//! on demand:
+//!
+//! * f32 tensors come back **zero-copy** when the container is memory-
+//!   mapped and the payload is alignment-safe (every v2 payload is 64-byte
+//!   aligned, so this is the common case) — the tensor's
+//!   [`Storage`](crate::tensor::Storage) then holds a view into the file
+//!   mapping and zero heap bytes;
+//! * packed weight codes are CRC-checked, unpacked and dequantized into
+//!   owned f32 buffers with **exactly** the arithmetic the eager loader
+//!   uses — the eager [`super::load`] is in fact built on this type, so
+//!   eager and lazy materialization cannot diverge;
+//! * every materialization re-verifies the record's CRC-32, so corruption
+//!   is caught on the lazy path at first touch, not just at open.
+//!
+//! The serving layer ([`crate::serve::ServeEngine`]) materializes one
+//! *window* of blocks at a time through [`LazyModel::block`] and keeps a
+//! bounded LRU of pinned windows; dropping a window drops its owned
+//! buffers, falling back to the map.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::format::{LazyContainer, OpenMode, RecordMeta, Source};
+use super::{parse_meta, SnapshotMeta};
+use crate::config::RoundingMode;
+use crate::coordinator::LinearQ;
+use crate::model_state::BlockParams;
+use crate::quant::{EPS, LINEARS};
+use crate::tensor::io::{Entry, PackedTensor, DTYPE_F32, DTYPE_I32, DTYPE_PACKED};
+use crate::tensor::{Storage, Tensor};
+
+/// One materialized transformer block: the parameters and quantization
+/// state a serve engine needs to pin a window containing this block.
+pub struct MaterializedBlock {
+    /// Norm weights + dequantized linear weights.
+    pub params: BlockParams,
+    /// Per-linear quantization state (scales, clips, LoRA factors),
+    /// reconstructed exactly as the eager loader does.
+    pub qstate: BTreeMap<String, LinearQ>,
+}
+
+/// A CBQS snapshot held as an open container instead of a fully decoded
+/// model. Cheap to share (`Arc` inside); all accessors take `&self` and are
+/// thread-safe, so several serve engines can fault in windows concurrently
+/// against one mapping of the file.
+pub struct LazyModel {
+    meta: SnapshotMeta,
+    container: Arc<LazyContainer>,
+}
+
+/// Dequantize integer grid codes with the exact arithmetic
+/// `finalize_weights` (and therefore the eager loader) uses: per-output-
+/// channel `w = q * max(s, EPS)` in f32.
+pub(crate) fn dequant_codes(
+    codes: &[i32],
+    s_w: &Tensor,
+    fan_in: usize,
+    fan_out: usize,
+) -> Vec<f32> {
+    let mut data = vec![0.0f32; fan_in * fan_out];
+    for r in 0..fan_in {
+        for c in 0..fan_out {
+            let sc = s_w.data[c].max(EPS);
+            data[r * fan_out + c] = codes[r * fan_out + c] as f32 * sc;
+        }
+    }
+    data
+}
+
+impl LazyModel {
+    /// Open `path` lazily: map the file when possible (positional-read
+    /// fallback otherwise; v1 frames degrade to an in-memory buffer), parse
+    /// and checksum the metadata, and verify the tensor name set is exactly
+    /// what the header's config promises — no payload is decoded yet.
+    pub fn open(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let container = super::format::open_container(path, OpenMode::Lazy)?;
+        let meta = parse_meta(&container.header)?;
+        Self::from_container(Arc::new(container), meta)
+    }
+
+    /// Wrap an already opened container (the eager loader's entry point).
+    pub(crate) fn from_container(
+        container: Arc<LazyContainer>,
+        meta: SnapshotMeta,
+    ) -> Result<Self> {
+        let m = Self { meta, container };
+        m.validate_names()?;
+        Ok(m)
+    }
+
+    /// The header metadata (config fingerprint, bit spec, rounding, label).
+    pub fn meta(&self) -> &SnapshotMeta {
+        &self.meta
+    }
+
+    /// The underlying container (records, source, version).
+    pub fn container(&self) -> &Arc<LazyContainer> {
+        &self.container
+    }
+
+    /// Is the byte source a real memory mapping (as opposed to the
+    /// positional-read or in-memory fallbacks)?
+    pub fn is_mapped(&self) -> bool {
+        self.container.source.mapped().is_some()
+    }
+
+    /// Identity of the byte source, for "the file is mapped once per
+    /// process" assertions: clones/engines sharing this model report the
+    /// same value.
+    pub fn source_ptr(&self) -> usize {
+        match &self.container.source {
+            Source::Mapped(m) => m.as_bytes().as_ptr() as usize,
+            Source::Memory(v) => v.as_ptr() as usize,
+            Source::File(_) => Arc::as_ptr(&self.container) as usize,
+        }
+    }
+
+    /// Every tensor name `meta.cfg` + `meta.rounding` promise, in no
+    /// particular order.
+    fn expected_names(&self) -> Vec<String> {
+        let cfg = &self.meta.cfg;
+        let lora = matches!(self.meta.rounding, RoundingMode::Lora);
+        let mut names = vec!["embed".to_string(), "final_norm".to_string(), "head".to_string()];
+        for i in 0..cfg.n_layers {
+            names.push(format!("blocks.{i}.attn_norm"));
+            names.push(format!("blocks.{i}.mlp_norm"));
+            for l in LINEARS {
+                names.push(format!("blocks.{i}.{l}.q"));
+                names.push(format!("blocks.{i}.{l}.s_w"));
+                names.push(format!("blocks.{i}.{l}.alpha"));
+                if lora {
+                    names.push(format!("blocks.{i}.{l}.a1"));
+                    names.push(format!("blocks.{i}.{l}.a2"));
+                }
+            }
+        }
+        names
+    }
+
+    /// The record set must be exactly the expected set: a missing tensor is
+    /// caught here (not mid-traffic on first touch), and extras are
+    /// rejected like the eager loader always did.
+    fn validate_names(&self) -> Result<()> {
+        let expected = self.expected_names();
+        for name in &expected {
+            ensure!(
+                self.container.contains(name),
+                "snapshot is missing tensor `{name}`"
+            );
+        }
+        if self.container.records.len() != expected.len() {
+            let known: std::collections::BTreeSet<&str> =
+                expected.iter().map(|s| s.as_str()).collect();
+            let extra: Vec<&str> = self
+                .container
+                .records
+                .iter()
+                .map(|r| r.name.as_str())
+                .filter(|n| !known.contains(n))
+                .collect();
+            bail!(
+                "snapshot has {} unexpected extra tensors (first: `{}`)",
+                extra.len(),
+                extra.first().copied().unwrap_or("?")
+            );
+        }
+        Ok(())
+    }
+
+    /// Materialize one f32 tensor, zero-copy from the mapping when
+    /// possible, decoded into an owned buffer otherwise. `want_dims`
+    /// enforces the config-derived shape (`None` skips the check).
+    pub fn tensor_f32(&self, name: &str, want_dims: Option<&[usize]>) -> Result<Tensor> {
+        let rec = self.container.record(name)?;
+        ensure!(
+            rec.dtype == DTYPE_F32 || rec.dtype == DTYPE_I32,
+            "`{name}`: expected f32, found packed"
+        );
+        if let Some(d) = want_dims {
+            ensure!(rec.dims == d, "`{name}`: dims {:?}, config wants {:?}", rec.dims, d);
+        }
+        // zero-copy: mapped source + CRC verified + alignment/endianness ok
+        if rec.dtype == DTYPE_F32 {
+            if let Some(map) = self.container.source.mapped() {
+                self.container.payload(rec)?; // CRC gate, borrows the map
+                if let Some(st) =
+                    Storage::<f32>::from_mapped(map.clone(), rec.offset as usize, rec.elems())
+                {
+                    return Ok(Tensor::from_storage(rec.dims.clone(), st));
+                }
+                // unaligned or big-endian host: fall through to owned decode
+            }
+        }
+        match self.container.materialize(rec)? {
+            Entry::F32(t) => Ok(t),
+            Entry::Packed(_) => bail!("`{name}`: expected f32, found packed"),
+        }
+    }
+
+    /// Materialize one packed-code tensor (CRC verified; bytes are copied —
+    /// unpacking consumes them immediately, so zero-copy buys nothing).
+    pub fn packed(&self, name: &str) -> Result<PackedTensor> {
+        let rec = self.container.record(name)?;
+        ensure!(rec.dtype == DTYPE_PACKED, "`{name}`: expected packed codes, found f32");
+        match self.container.materialize(rec)? {
+            Entry::Packed(p) => Ok(p),
+            Entry::F32(_) => bail!("`{name}`: expected packed codes, found f32"),
+        }
+    }
+
+    /// The token embedding table `[vocab, d_model]` (zero-copy candidate).
+    pub fn embed(&self) -> Result<Tensor> {
+        let cfg = &self.meta.cfg;
+        self.tensor_f32("embed", Some(&[cfg.vocab, cfg.d_model]))
+    }
+
+    /// The final RMS-norm weights `[d_model]`.
+    pub fn final_norm(&self) -> Result<Tensor> {
+        self.tensor_f32("final_norm", Some(&[self.meta.cfg.d_model]))
+    }
+
+    /// The LM head `[d_model, vocab]` (zero-copy candidate — the largest
+    /// f32 tensor in the file).
+    pub fn head(&self) -> Result<Tensor> {
+        let cfg = &self.meta.cfg;
+        self.tensor_f32("head", Some(&[cfg.d_model, cfg.vocab]))
+    }
+
+    /// Materialize block `i`: unpack + dequantize its seven linears and
+    /// rebuild the [`LinearQ`] state, bit-exactly equal to what the eager
+    /// loader produces for the same file. This is the unit of lazy pinning:
+    /// the serve engine calls this per window member on first touch and
+    /// drops the result on eviction.
+    pub fn block(&self, i: usize) -> Result<MaterializedBlock> {
+        let cfg = &self.meta.cfg;
+        ensure!(i < cfg.n_layers, "block {i} out of range (model has {})", cfg.n_layers);
+        let d = cfg.d_model;
+        let attn_norm = self.tensor_f32(&format!("blocks.{i}.attn_norm"), Some(&[d]))?;
+        let mlp_norm = self.tensor_f32(&format!("blocks.{i}.mlp_norm"), Some(&[d]))?;
+        let store_lora = matches!(self.meta.rounding, RoundingMode::Lora);
+        let mut linears = BTreeMap::new();
+        let mut qstate = BTreeMap::new();
+        for l in LINEARS {
+            let (fan_in, fan_out) = cfg.linear_shape(l);
+            let packed = self.packed(&format!("blocks.{i}.{l}.q"))?;
+            ensure!(
+                packed.dims == [fan_in, fan_out],
+                "blocks.{i}.{l}.q: dims {:?}, config wants [{fan_in}, {fan_out}]",
+                packed.dims
+            );
+            let spec_bits = self.meta.bits.weight_bits(i, l);
+            ensure!(
+                packed.bits == spec_bits,
+                "blocks.{i}.{l}: packed at {} bits but spec says {spec_bits}",
+                packed.bits
+            );
+            let s_w = self.tensor_f32(&format!("blocks.{i}.{l}.s_w"), Some(&[fan_out]))?;
+            let alpha = self.tensor_f32(&format!("blocks.{i}.{l}.alpha"), Some(&[]))?.item();
+            let (a1, a2) = if store_lora {
+                (
+                    self.tensor_f32(
+                        &format!("blocks.{i}.{l}.a1"),
+                        Some(&[fan_in, cfg.rank_pad]),
+                    )?,
+                    self.tensor_f32(
+                        &format!("blocks.{i}.{l}.a2"),
+                        Some(&[cfg.rank_pad, fan_out]),
+                    )?,
+                )
+            } else {
+                (
+                    Tensor::zeros(&[fan_in, cfg.rank_pad]),
+                    Tensor::zeros(&[cfg.rank_pad, fan_out]),
+                )
+            };
+            let codes = packed.unpack();
+            let w =
+                Tensor::new(vec![fan_in, fan_out], dequant_codes(&codes, &s_w, fan_in, fan_out));
+            let lq = LinearQ::restore(&w, s_w, alpha, a1, a2, spec_bits);
+            linears.insert(l.to_string(), w);
+            qstate.insert(l.to_string(), lq);
+        }
+        Ok(MaterializedBlock {
+            params: BlockParams { attn_norm, mlp_norm, linears },
+            qstate,
+        })
+    }
+
+    /// Heap bytes materializing block `i` costs (dequantized weights, the
+    /// re-derived `v0` warm-start of equal size, scales, LoRA factors,
+    /// norms) — the per-block unit behind `CBQ_RESIDENT_MB` sizing. A
+    /// width-`w` pinned window keeps roughly `w` times this resident.
+    pub fn block_resident_estimate(&self, i: usize) -> u64 {
+        block_resident_estimate(&self.container.records, i)
+    }
+}
+
+/// Per-block resident-bytes estimate from a record table: the sum of every
+/// `blocks.{i}.*` tensor's f32-materialized size, counting packed code
+/// tensors twice (dequantized weights + the equally-sized `v0` warm-start
+/// `LinearQ` re-derives). Shared by [`LazyModel`] and `cbq snapshot-info`.
+pub fn block_resident_estimate(records: &[RecordMeta], i: usize) -> u64 {
+    let prefix = format!("blocks.{i}.");
+    records
+        .iter()
+        .filter(|r| r.name.starts_with(&prefix))
+        .map(|r| {
+            let mult = if r.dtype == DTYPE_PACKED { 2 } else { 1 };
+            mult * r.unpacked_bytes()
+        })
+        .sum()
+}

@@ -3,7 +3,7 @@
 //! later serving run).
 //!
 //! [`save`] serializes a finalized [`QuantizedModel`] into a versioned
-//! `CBQS` container (see [`format`]):
+//! `CBQS` container (see [`format`]; byte-level spec in `docs/FORMAT.md`):
 //!
 //! * per-linear weight **codes at their true bit-width** (2/4/8-bit
 //!   bitpacked integers, not fake-quant f32) + the learned per-channel
@@ -12,35 +12,52 @@
 //! * the activation-quant state eval needs (per-linear `alpha` clips),
 //!   the LoRA-Rounding factors, the [`BitSpec`] / [`RoundingMode`];
 //! * unquantized tensors (embeddings, LM head, norms) stored f32;
-//! * a header with the full model-config fingerprint and a CRC-32 content
-//!   checksum.
+//! * a header with the full model-config fingerprint, plus (v2) a
+//!   per-tensor record table with 64-byte-aligned file offsets and
+//!   per-tensor CRC-32s.
 //!
-//! [`load`] reverses it **bit-exactly**: the dequantized weights are the
-//! identical f32 values the in-memory pipeline produced (`w = q * s` in the
-//! same arithmetic `finalize_weights` used), so perplexity measured on a
-//! loaded snapshot equals the in-memory model's to the last bit.
+//! Two load paths reverse it:
+//!
+//! * [`load`] — eager: the fully decoded [`QuantizedModel`],
+//!   **bit-exactly** the f32 values the in-memory pipeline produced
+//!   (`w = q * s` in the same arithmetic `finalize_weights` used), so
+//!   perplexity measured on a loaded snapshot equals the in-memory model's
+//!   to the last bit. Reads v1 and v2 frames identically.
+//! * [`load_lazy`] — the larger-than-RAM path: the file is memory-mapped
+//!   (or positionally read where mapping is unavailable) and a
+//!   [`lazy::LazyModel`] hands out tensors on demand — f32 tensors
+//!   zero-copy from the map, packed codes dequantized per *block* on first
+//!   touch. The eager loader is built on the same materialization code, so
+//!   the two paths cannot diverge.
 
 pub mod format;
+pub mod lazy;
 
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::config::{BitSpec, RoundingMode};
 use crate::coordinator::{LinearQ, QuantizedModel};
 use crate::json::Value;
-use crate::model_state::{BlockParams, ModelParams};
+use crate::model_state::ModelParams;
 use crate::quant::{EPS, LINEARS};
 use crate::runtime::ModelCfg;
-use crate::tensor::io::{Entry, PackedTensor};
+use crate::tensor::io::{Entry, PackedTensor, DTYPE_PACKED};
 use crate::tensor::Tensor;
+
+pub use lazy::{LazyModel, MaterializedBlock};
 
 /// Everything the header records about a snapshot.
 #[derive(Clone, Debug)]
 pub struct SnapshotMeta {
+    /// Full model-config fingerprint of the producing artifacts.
     pub cfg: ModelCfg,
+    /// Weight/activation bit widths (incl. per-layer overrides).
     pub bits: BitSpec,
+    /// Rounding mode the model was finalized with.
     pub rounding: RoundingMode,
     /// Human label of the producing job (e.g. "CBQ W4A16").
     pub label: String,
@@ -48,8 +65,104 @@ pub struct SnapshotMeta {
 
 /// A loaded snapshot: metadata + the reconstructed model.
 pub struct Snapshot {
+    /// Parsed header metadata.
     pub meta: SnapshotMeta,
+    /// The bit-exact reconstructed model.
     pub model: QuantizedModel,
+}
+
+/// A lazily opened snapshot: metadata + the on-demand model view.
+pub struct LazySnapshot {
+    /// Parsed header metadata.
+    pub meta: SnapshotMeta,
+    /// The on-demand model (see [`lazy::LazyModel`]).
+    pub model: LazyModel,
+}
+
+/// A snapshot-backed model in either residency mode, with uniform
+/// accessors. The serve registry stores this so one engine code path can
+/// bind eagerly decoded and memory-mapped models alike.
+pub enum SnapshotModel {
+    /// Fully decoded in RAM ([`load`]).
+    Eager(QuantizedModel),
+    /// Materialized on demand from the container ([`load_lazy`]).
+    Lazy(LazyModel),
+}
+
+impl SnapshotModel {
+    /// Is this the lazy (mapped / on-demand) representation?
+    pub fn is_lazy(&self) -> bool {
+        matches!(self, SnapshotModel::Lazy(_))
+    }
+
+    /// The eager model, when resident (registry paths that need the whole
+    /// `QuantizedModel`, e.g. perplexity eval over all blocks at once).
+    pub fn eager(&self) -> Option<&QuantizedModel> {
+        match self {
+            SnapshotModel::Eager(m) => Some(m),
+            SnapshotModel::Lazy(_) => None,
+        }
+    }
+
+    /// The lazy view, when this model is one.
+    pub fn lazy(&self) -> Option<&LazyModel> {
+        match self {
+            SnapshotModel::Lazy(m) => Some(m),
+            SnapshotModel::Eager(_) => None,
+        }
+    }
+
+    /// Like [`SnapshotModel::eager`] but an error naming the remedy.
+    pub fn expect_eager(&self) -> Result<&QuantizedModel> {
+        self.eager().ok_or_else(|| {
+            anyhow!("this operation needs an eagerly loaded model (loaded with --mmap?)")
+        })
+    }
+
+    /// The token embedding table (eager: a shared handle; lazy: zero-copy
+    /// from the map when possible).
+    pub fn embed(&self) -> Result<Tensor> {
+        match self {
+            SnapshotModel::Eager(m) => Ok(m.params.embed.clone()),
+            SnapshotModel::Lazy(m) => m.embed(),
+        }
+    }
+
+    /// The final RMS-norm weights.
+    pub fn final_norm(&self) -> Result<Tensor> {
+        match self {
+            SnapshotModel::Eager(m) => Ok(m.params.final_norm.clone()),
+            SnapshotModel::Lazy(m) => m.final_norm(),
+        }
+    }
+
+    /// The LM head.
+    pub fn head(&self) -> Result<Tensor> {
+        match self {
+            SnapshotModel::Eager(m) => Ok(m.params.head.clone()),
+            SnapshotModel::Lazy(m) => m.head(),
+        }
+    }
+
+    /// Materialize block `i` (eager: shared handles, no decode; lazy:
+    /// unpack + dequantize on the spot). Both paths yield bit-identical
+    /// tensors for the same file.
+    pub fn block(&self, i: usize) -> Result<MaterializedBlock> {
+        match self {
+            SnapshotModel::Eager(m) => {
+                ensure!(
+                    i < m.params.blocks.len(),
+                    "block {i} out of range (model has {})",
+                    m.params.blocks.len()
+                );
+                Ok(MaterializedBlock {
+                    params: m.params.blocks[i].clone(),
+                    qstate: m.qstate[i].clone(),
+                })
+            }
+            SnapshotModel::Lazy(m) => m.block(i),
+        }
+    }
 }
 
 /// Size accounting returned by [`save`].
@@ -68,10 +181,6 @@ impl SaveReport {
     pub fn compression_ratio(&self) -> f64 {
         self.file_bytes as f64 / self.f32_equiv_bytes.max(1) as f64
     }
-}
-
-fn entry_f32(entries: &mut Vec<(String, Entry)>, name: String, t: Tensor) {
-    entries.push((name, Entry::F32(t)));
 }
 
 /// Derive the integer grid codes for a finalized weight matrix and verify
@@ -104,8 +213,12 @@ fn codes_for(w: &Tensor, s_w: &Tensor, bits: u8, what: &str) -> Result<Vec<i32>>
     Ok(codes)
 }
 
-/// Serialize a finalized quantized model to `path`.
-pub fn save(path: impl AsRef<Path>, cfg: &ModelCfg, model: &QuantizedModel) -> Result<SaveReport> {
+/// Build the header + grouped entry list shared by the v2 and v1 writers.
+fn build_entries(
+    cfg: &ModelCfg,
+    model: &QuantizedModel,
+    version: u32,
+) -> Result<(Value, Vec<(String, Entry, i32)>, u64, u64)> {
     ensure!(
         model.bits.bits_w <= 8,
         "W{} is not a packable bit-width — snapshots hold quantized models \
@@ -119,22 +232,26 @@ pub fn save(path: impl AsRef<Path>, cfg: &ModelCfg, model: &QuantizedModel) -> R
         cfg.name,
         cfg.n_layers
     );
-    let mut entries: Vec<(String, Entry)> = Vec::new();
+    let mut entries: Vec<(String, Entry, i32)> = Vec::new();
     let mut f32_equiv = 0u64;
     let mut packed_bytes = 0u64;
+    let push_f32 = |entries: &mut Vec<(String, Entry, i32)>, name: String, t: Tensor, g: i32| {
+        entries.push((name, Entry::F32(t), g));
+    };
 
     for t in [&model.params.embed, &model.params.final_norm, &model.params.head] {
         f32_equiv += 4 * t.len() as u64;
     }
-    entry_f32(&mut entries, "embed".into(), model.params.embed.clone());
-    entry_f32(&mut entries, "final_norm".into(), model.params.final_norm.clone());
-    entry_f32(&mut entries, "head".into(), model.params.head.clone());
+    push_f32(&mut entries, "embed".into(), model.params.embed.clone(), -1);
+    push_f32(&mut entries, "final_norm".into(), model.params.final_norm.clone(), -1);
+    push_f32(&mut entries, "head".into(), model.params.head.clone(), -1);
 
     let store_lora = matches!(model.rounding, RoundingMode::Lora);
     for (i, blk) in model.params.blocks.iter().enumerate() {
+        let g = i as i32;
         f32_equiv += 4 * (blk.attn_norm.len() + blk.mlp_norm.len()) as u64;
-        entry_f32(&mut entries, format!("blocks.{i}.attn_norm"), blk.attn_norm.clone());
-        entry_f32(&mut entries, format!("blocks.{i}.mlp_norm"), blk.mlp_norm.clone());
+        push_f32(&mut entries, format!("blocks.{i}.attn_norm"), blk.attn_norm.clone(), g);
+        push_f32(&mut entries, format!("blocks.{i}.mlp_norm"), blk.mlp_norm.clone(), g);
         for l in LINEARS {
             let w = &blk.linears[l];
             let lq = model.qstate[i]
@@ -156,58 +273,58 @@ pub fn save(path: impl AsRef<Path>, cfg: &ModelCfg, model: &QuantizedModel) -> R
             let packed = PackedTensor::pack(&codes, w.dims.clone(), bits)?;
             f32_equiv += 4 * w.len() as u64;
             packed_bytes += packed.data.len() as u64;
-            entries.push((format!("blocks.{i}.{l}.q"), Entry::Packed(packed)));
-            entry_f32(&mut entries, format!("blocks.{i}.{l}.s_w"), lq.s_w.clone());
-            entry_f32(&mut entries, format!("blocks.{i}.{l}.alpha"), Tensor::scalar(lq.alpha));
+            entries.push((format!("blocks.{i}.{l}.q"), Entry::Packed(packed), g));
+            push_f32(&mut entries, format!("blocks.{i}.{l}.s_w"), lq.s_w.clone(), g);
+            push_f32(&mut entries, format!("blocks.{i}.{l}.alpha"), Tensor::scalar(lq.alpha), g);
             if store_lora {
-                entry_f32(&mut entries, format!("blocks.{i}.{l}.a1"), lq.a1.clone());
-                entry_f32(&mut entries, format!("blocks.{i}.{l}.a2"), lq.a2.clone());
+                push_f32(&mut entries, format!("blocks.{i}.{l}.a1"), lq.a1.clone(), g);
+                push_f32(&mut entries, format!("blocks.{i}.{l}.a2"), lq.a2.clone(), g);
             }
         }
     }
 
     let header = Value::obj(vec![
         ("format", Value::str("CBQS")),
-        ("version", Value::num(format::VERSION as f64)),
+        ("version", Value::num(version as f64)),
         ("cfg", cfg.to_json()),
         ("bits", model.bits.to_json()),
         ("rounding", Value::str(model.rounding.name())),
         ("label", Value::str(model.bits.label())),
     ]);
+    Ok((header, entries, f32_equiv, packed_bytes))
+}
+
+/// Serialize a finalized quantized model to `path` as a v2 container
+/// (offset table + per-tensor CRCs; lazily loadable via [`load_lazy`]).
+pub fn save(path: impl AsRef<Path>, cfg: &ModelCfg, model: &QuantizedModel) -> Result<SaveReport> {
+    let (header, entries, f32_equiv, packed_bytes) =
+        build_entries(cfg, model, format::VERSION)?;
     let file_bytes = format::write_container(path, &header, &entries)?;
     Ok(SaveReport { file_bytes, f32_equiv_bytes: f32_equiv, packed_code_bytes: packed_bytes })
 }
 
-fn take_f32(
-    entries: &mut BTreeMap<String, Entry>,
-    name: &str,
-    want_dims: Option<&[usize]>,
-) -> Result<Tensor> {
-    match entries.remove(name) {
-        Some(Entry::F32(t)) => {
-            if let Some(d) = want_dims {
-                ensure!(t.dims == d, "`{name}`: dims {:?}, config wants {:?}", t.dims, d);
-            }
-            Ok(t)
-        }
-        Some(Entry::Packed(_)) => bail!("`{name}`: expected f32, found packed"),
-        None => bail!("snapshot is missing tensor `{name}`"),
-    }
+/// Serialize as a **legacy v1** container (whole-payload CRC, no offset
+/// table — not lazily loadable). Exists for compatibility testing and for
+/// producing files older readers can consume.
+pub fn save_v1(
+    path: impl AsRef<Path>,
+    cfg: &ModelCfg,
+    model: &QuantizedModel,
+) -> Result<SaveReport> {
+    let (header, entries, f32_equiv, packed_bytes) =
+        build_entries(cfg, model, format::VERSION_V1)?;
+    let flat: Vec<(String, Entry)> =
+        entries.into_iter().map(|(n, e, _)| (n, e)).collect();
+    let file_bytes = format::write_container_v1(path, &header, &flat)?;
+    Ok(SaveReport { file_bytes, f32_equiv_bytes: f32_equiv, packed_code_bytes: packed_bytes })
 }
 
-fn take_packed(entries: &mut BTreeMap<String, Entry>, name: &str) -> Result<PackedTensor> {
-    match entries.remove(name) {
-        Some(Entry::Packed(p)) => Ok(p),
-        Some(Entry::F32(_)) => bail!("`{name}`: expected packed codes, found f32"),
-        None => bail!("snapshot is missing tensor `{name}`"),
-    }
-}
-
-/// Parse + harden the CBQS header (shared by [`load`] and [`inspect`]).
-/// Header numerics drive allocations (Vec::with_capacity, Tensor::zeros)
-/// before any entry is cross-checked, so they are bounded here: a crafted
-/// file with a valid CRC must produce an error, not an allocation abort.
-fn parse_meta(header: &Value) -> Result<SnapshotMeta> {
+/// Parse + harden the CBQS header (shared by [`load`], [`load_lazy`] and
+/// [`inspect`]). Header numerics drive allocations (Vec::with_capacity,
+/// Tensor::zeros) before any entry is cross-checked, so they are bounded
+/// here: a crafted file with a valid CRC must produce an error, not an
+/// allocation abort.
+pub(crate) fn parse_meta(header: &Value) -> Result<SnapshotMeta> {
     ensure!(
         header.get("format")?.as_str()? == "CBQS",
         "header format field is not CBQS"
@@ -230,120 +347,103 @@ fn parse_meta(header: &Value) -> Result<SnapshotMeta> {
     Ok(SnapshotMeta { cfg, bits, rounding, label })
 }
 
-/// Load a snapshot, reconstructing the bit-exact [`QuantizedModel`].
+/// Load a snapshot **eagerly**, reconstructing the bit-exact
+/// [`QuantizedModel`]. Reads v1 and v2 frames; both materialize through
+/// the same [`lazy::LazyModel`] code the mmap path uses, so eager, lazy,
+/// v1 and v2 all decode to identical tensors.
 pub fn load(path: impl AsRef<Path>) -> Result<Snapshot> {
-    let (header, mut entries) = format::read_container(path)?;
-    let meta = parse_meta(&header)?;
-    let SnapshotMeta { cfg, bits, rounding, label } = meta;
+    let container = format::open_container(path, format::OpenMode::Eager)?;
+    let meta = parse_meta(&container.header)?;
+    let lazy = LazyModel::from_container(Arc::new(container), meta.clone())?;
+    let model = materialize_model(&lazy)?;
+    Ok(Snapshot { meta, model })
+}
 
-    let d = cfg.d_model;
-    let embed = take_f32(&mut entries, "embed", Some(&[cfg.vocab, d]))?;
-    let final_norm = take_f32(&mut entries, "final_norm", Some(&[d]))?;
-    let head = take_f32(&mut entries, "head", Some(&[d, cfg.vocab]))?;
+/// Open a snapshot **lazily** for larger-than-RAM serving: metadata is
+/// parsed and checksummed now, tensors materialize on first touch (see
+/// [`lazy::LazyModel`]). v1 frames work too, but degrade to an in-memory
+/// byte source (their whole-payload CRC requires a full read) — re-export
+/// to v2 to get true mapped loading.
+pub fn load_lazy(path: impl AsRef<Path>) -> Result<LazySnapshot> {
+    let model = LazyModel::open(path)?;
+    Ok(LazySnapshot { meta: model.meta().clone(), model })
+}
 
-    let store_lora = matches!(rounding, RoundingMode::Lora);
+/// Materialize every block of a lazy view into a full [`QuantizedModel`]
+/// (the eager loader's second half).
+fn materialize_model(lazy: &LazyModel) -> Result<QuantizedModel> {
+    let meta = lazy.meta();
+    let cfg = &meta.cfg;
+    let embed = lazy.embed()?;
+    let final_norm = lazy.final_norm()?;
+    let head = lazy.head()?;
     let mut blocks = Vec::with_capacity(cfg.n_layers);
     let mut qstate: Vec<BTreeMap<String, LinearQ>> = Vec::with_capacity(cfg.n_layers);
     for i in 0..cfg.n_layers {
-        let attn_norm = take_f32(&mut entries, &format!("blocks.{i}.attn_norm"), Some(&[d]))?;
-        let mlp_norm = take_f32(&mut entries, &format!("blocks.{i}.mlp_norm"), Some(&[d]))?;
-        let mut linears = BTreeMap::new();
-        let mut lqs = BTreeMap::new();
-        for l in LINEARS {
-            let (fan_in, fan_out) = cfg.linear_shape(l);
-            let packed = take_packed(&mut entries, &format!("blocks.{i}.{l}.q"))?;
-            ensure!(
-                packed.dims == [fan_in, fan_out],
-                "blocks.{i}.{l}.q: dims {:?}, config wants [{fan_in}, {fan_out}]",
-                packed.dims
-            );
-            let spec_bits = bits.weight_bits(i, l);
-            ensure!(
-                packed.bits == spec_bits,
-                "blocks.{i}.{l}: packed at {} bits but spec says {spec_bits}",
-                packed.bits
-            );
-            let s_w =
-                take_f32(&mut entries, &format!("blocks.{i}.{l}.s_w"), Some(&[fan_out]))?;
-            let alpha =
-                take_f32(&mut entries, &format!("blocks.{i}.{l}.alpha"), Some(&[]))?.item();
-            let (a1, a2) = if store_lora {
-                (
-                    take_f32(
-                        &mut entries,
-                        &format!("blocks.{i}.{l}.a1"),
-                        Some(&[fan_in, cfg.rank_pad]),
-                    )?,
-                    take_f32(
-                        &mut entries,
-                        &format!("blocks.{i}.{l}.a2"),
-                        Some(&[cfg.rank_pad, fan_out]),
-                    )?,
-                )
-            } else {
-                (
-                    Tensor::zeros(&[fan_in, cfg.rank_pad]),
-                    Tensor::zeros(&[cfg.rank_pad, fan_out]),
-                )
-            };
-            // dequantize: the exact arithmetic finalize_weights used
-            let codes = packed.unpack();
-            let mut data = vec![0.0f32; fan_in * fan_out];
-            for r in 0..fan_in {
-                for c in 0..fan_out {
-                    let sc = s_w.data[c].max(EPS);
-                    data[r * fan_out + c] = codes[r * fan_out + c] as f32 * sc;
-                }
-            }
-            let w = Tensor::new(vec![fan_in, fan_out], data);
-            let lq = LinearQ::restore(&w, s_w, alpha, a1, a2, spec_bits);
-            linears.insert(l.to_string(), w);
-            lqs.insert(l.to_string(), lq);
-        }
-        blocks.push(BlockParams { attn_norm, mlp_norm, linears });
-        qstate.push(lqs);
+        let mb = lazy.block(i)?;
+        blocks.push(mb.params);
+        qstate.push(mb.qstate);
     }
-    ensure!(
-        entries.is_empty(),
-        "snapshot has {} unexpected extra tensors (first: `{}`)",
-        entries.len(),
-        entries.keys().next().unwrap()
-    );
-
-    let model = QuantizedModel {
+    Ok(QuantizedModel {
         params: ModelParams { embed, final_norm, head, blocks },
         qstate,
-        bits: bits.clone(),
-        rounding,
-    };
-    Ok(Snapshot { meta: SnapshotMeta { cfg, bits, rounding, label }, model })
+        bits: meta.bits.clone(),
+        rounding: meta.rounding,
+    })
 }
 
 /// One entry's metadata as reported by [`inspect`].
 #[derive(Clone, Debug)]
 pub struct TensorInfo {
+    /// Tensor name.
     pub name: String,
     /// "f32" or "packed"
     pub dtype: &'static str,
     /// storage bits per element (32 for f32, 2/4/8 for packed codes)
     pub bits: u8,
+    /// Logical shape.
     pub dims: Vec<usize>,
     /// payload bytes on disk
     pub bytes: usize,
+    /// Bytes once materialized for execution (f32 everywhere): elems × 4.
+    pub unpacked_bytes: u64,
+    /// Absolute payload offset in the file (64-byte aligned in v2 frames;
+    /// reconstructed parse positions for v1).
+    pub offset: u64,
+    /// Producing block index, -1 for globals (v2 record field; derived
+    /// from the name for v1 frames).
+    pub group: i32,
 }
 
 /// Header + per-tensor summary of a CBQS file, without reconstructing the
 /// model (the `cbq snapshot-info` inspector).
 #[derive(Clone, Debug)]
 pub struct SnapshotInfo {
+    /// Parsed header metadata.
     pub meta: SnapshotMeta,
+    /// Frame version found on disk (1 or 2).
     pub version: u32,
+    /// Total file size.
     pub file_bytes: u64,
+    /// Per-tensor records, in file order.
     pub tensors: Vec<TensorInfo>,
+    /// Bytes of bitpacked weight codes on disk.
     pub packed_code_bytes: u64,
+    /// Bytes of f32 tensors on disk.
     pub f32_bytes: u64,
-    /// `inspect` only returns when the container CRC verified, so this is
-    /// always true on success — carried for report serialization.
+    /// Sum of every tensor's f32-materialized size: what a **mapped** load
+    /// would occupy if every tensor were promoted to owned at once.
+    pub unpacked_bytes: u64,
+    /// Estimated heap bytes of a full **eager** load: `unpacked_bytes`
+    /// plus a second copy of each packed tensor (the `v0` warm-start
+    /// `LinearQ` re-derives per linear).
+    pub resident_estimate_bytes: u64,
+    /// The largest single block's eager-residency estimate — multiply by
+    /// the window width to size `CBQ_RESIDENT_MB` / `--resident-windows`.
+    pub max_block_resident_bytes: u64,
+    /// `inspect` only returns when every checksum verified (metadata and
+    /// all payloads), so this is always true on success — carried for
+    /// report serialization.
     pub checksum_ok: bool,
 }
 
@@ -360,48 +460,68 @@ impl SnapshotInfo {
     }
 }
 
-/// Read a snapshot's header and entry metadata (CRC-validated) without
-/// dequantizing anything.
+/// Read a snapshot's header and entry metadata (all checksums validated)
+/// without dequantizing anything. Opens through the lazy source so
+/// inspecting a larger-than-RAM snapshot never buffers the whole file:
+/// payload CRCs stream through the mapping page by page (v1 frames still
+/// require a full read — their single CRC leaves no choice).
 pub fn inspect(path: impl AsRef<Path>) -> Result<SnapshotInfo> {
-    let file_bytes = std::fs::metadata(path.as_ref())
-        .map(|m| m.len())
-        .unwrap_or(0);
-    let (header, entries) = format::read_container(path)?;
-    let meta = parse_meta(&header)?;
-    let version = header.get("version")?.as_usize()? as u32;
-    let mut tensors = Vec::with_capacity(entries.len());
+    let c = format::open_container(path, format::OpenMode::Lazy)?;
+    let meta = parse_meta(&c.header)?;
+    let mut tensors = Vec::with_capacity(c.records.len());
     let mut packed_code_bytes = 0u64;
     let mut f32_bytes = 0u64;
-    for (name, e) in &entries {
-        let info = match e {
-            Entry::F32(t) => TensorInfo {
-                name: name.clone(),
-                dtype: "f32",
-                bits: 32,
-                dims: t.dims.clone(),
-                bytes: 4 * t.len(),
-            },
-            Entry::Packed(p) => TensorInfo {
-                name: name.clone(),
-                dtype: "packed",
-                bits: p.bits,
-                dims: p.dims.clone(),
-                bytes: p.data.len(),
-            },
+    let mut unpacked_bytes = 0u64;
+    let mut resident = 0u64;
+    for rec in &c.records {
+        // validate every payload checksum — inspect's contract is "the
+        // whole file is intact", same as the v1 whole-payload CRC gave
+        c.payload(rec)?;
+        let packed = rec.dtype == DTYPE_PACKED;
+        let group = if rec.group >= 0 {
+            rec.group
+        } else {
+            // v1 records carry no group; recover it from the name
+            rec.name
+                .strip_prefix("blocks.")
+                .and_then(|s| s.split('.').next())
+                .and_then(|s| s.parse::<i32>().ok())
+                .unwrap_or(-1)
         };
-        match info.dtype {
-            "packed" => packed_code_bytes += info.bytes as u64,
-            _ => f32_bytes += info.bytes as u64,
+        let info = TensorInfo {
+            name: rec.name.clone(),
+            dtype: if packed { "packed" } else { "f32" },
+            bits: if packed { rec.bits } else { 32 },
+            dims: rec.dims.clone(),
+            bytes: rec.len as usize,
+            unpacked_bytes: rec.unpacked_bytes(),
+            offset: rec.offset,
+            group,
+        };
+        if packed {
+            packed_code_bytes += info.bytes as u64;
+            resident += 2 * rec.unpacked_bytes(); // dequant weights + v0
+        } else {
+            f32_bytes += info.bytes as u64;
+            resident += rec.unpacked_bytes();
         }
+        unpacked_bytes += rec.unpacked_bytes();
         tensors.push(info);
     }
+    let max_block_resident_bytes = (0..meta.cfg.n_layers)
+        .map(|i| lazy::block_resident_estimate(&c.records, i))
+        .max()
+        .unwrap_or(0);
     Ok(SnapshotInfo {
         meta,
-        version,
-        file_bytes,
+        version: c.version,
+        file_bytes: c.file_bytes,
         tensors,
         packed_code_bytes,
         f32_bytes,
+        unpacked_bytes,
+        resident_estimate_bytes: resident,
+        max_block_resident_bytes,
         checksum_ok: true,
     })
 }

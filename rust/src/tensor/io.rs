@@ -25,14 +25,20 @@ use super::Tensor;
 const MAGIC: &[u8; 4] = b"CBQW";
 const VERSION: u32 = 1;
 
-/// Header sanity caps (hardening): no tensor name or rank in any CBQ
-/// container comes close to these.
+/// Header sanity cap (hardening): longest tensor name any CBQ container
+/// may carry.
 pub const MAX_NAME_LEN: usize = 4096;
+/// Header sanity cap (hardening): highest tensor rank any CBQ container
+/// may carry.
 pub const MAX_NDIM: usize = 8;
 
-const DTYPE_F32: u8 = 0;
-const DTYPE_I32: u8 = 1;
-const DTYPE_PACKED: u8 = 2;
+/// Entry dtype tag: f32 tensor (payload = `count` little-endian floats).
+pub const DTYPE_F32: u8 = 0;
+/// Entry dtype tag: legacy i32 tensor (CBQW v1 only; readers convert to
+/// f32 exactly as the original CBQW reader did).
+pub const DTYPE_I32: u8 = 1;
+/// Entry dtype tag: bitpacked integer codes ([`PackedTensor`]).
+pub const DTYPE_PACKED: u8 = 2;
 
 // ---------------------------------------------------------------------------
 // packed integer tensors
@@ -43,8 +49,11 @@ const DTYPE_PACKED: u8 = 2;
 /// `q in [-2^(bits-1), 2^(bits-1)-1]`. Bits are packed LSB-first into bytes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PackedTensor {
+    /// Logical tensor shape.
     pub dims: Vec<usize>,
+    /// Bits per code (1..=8).
     pub bits: u8,
+    /// The bitpacked payload, `byte_len(bits, len())` bytes.
     pub data: Vec<u8>,
 }
 
@@ -54,6 +63,7 @@ impl PackedTensor {
         self.dims.iter().product()
     }
 
+    /// Is the element count zero?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -112,7 +122,9 @@ impl PackedTensor {
 /// One named tensor in a container.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Entry {
+    /// A plain f32 tensor.
     F32(Tensor),
+    /// Bitpacked integer codes.
     Packed(PackedTensor),
 }
 
@@ -129,18 +141,29 @@ pub struct ByteReader<'a> {
 }
 
 impl<'a> ByteReader<'a> {
+    /// Start reading at the beginning of `buf`.
     pub fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
+    /// Bytes not yet consumed.
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
+    /// Current read position (offset from the start of the buffer). The
+    /// CBQS v1 compatibility path uses this to reconstruct per-tensor
+    /// payload offsets that the v1 frame never recorded.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Has the whole buffer been consumed?
     pub fn is_done(&self) -> bool {
         self.pos == self.buf.len()
     }
 
+    /// Consume and return the next `n` bytes (errors on truncation).
     pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(
             n <= self.remaining(),
@@ -152,13 +175,26 @@ impl<'a> ByteReader<'a> {
         Ok(s)
     }
 
+    /// Read one byte.
     pub fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a little-endian u32.
     pub fn u32(&mut self) -> Result<u32> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian u64 (CBQS v2 offsets/lengths).
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read a little-endian i32 (CBQS v2 group ids).
+    pub fn i32(&mut self) -> Result<i32> {
+        Ok(self.u32()? as i32)
     }
 }
 
@@ -273,6 +309,8 @@ pub fn read_entry(r: &mut ByteReader) -> Result<(String, Entry)> {
 // CBQW container (f32 weight interchange, format v1 unchanged)
 // ---------------------------------------------------------------------------
 
+/// Read a `CBQW` f32 weight container (hardened: duplicates, truncation
+/// and overflow are rejected).
 pub fn read_tensors(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
     let raw = std::fs::read(path.as_ref())?;
     let mut r = ByteReader::new(&raw);
@@ -295,6 +333,7 @@ pub fn read_tensors(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> 
     Ok(out)
 }
 
+/// Write a `CBQW` f32 weight container (the Python-interchange format).
 pub fn write_tensors(
     path: impl AsRef<Path>,
     tensors: &BTreeMap<String, Tensor>,

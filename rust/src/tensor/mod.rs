@@ -2,12 +2,22 @@
 //! coordinator computes outside PJRT (CFP statistics, GPTQ, weight
 //! finalization, Adam state, Hessian probes).
 //!
-//! Row-major [`Storage`] + shape. Storage is `Arc`-backed with copy-on-
-//! write: cloning a tensor (and hence a [`crate::runtime::Value`]) shares
-//! the underlying buffer, so pinning model weights into a backend or
-//! binding them into several serve engines keeps **one** resident copy per
-//! process. The first mutation of a shared buffer clones it
-//! (`Arc::make_mut`), preserving value semantics everywhere else.
+//! Row-major [`Storage`] + shape. Storage has two representations behind
+//! one copy-on-write API:
+//!
+//! * **Owned** — `Arc<Vec<T>>`: cloning a tensor (and hence a
+//!   [`crate::runtime::Value`]) shares the underlying buffer, so pinning
+//!   model weights into a backend or binding them into several serve
+//!   engines keeps **one** resident copy per process. The first mutation of
+//!   a shared buffer clones it (`Arc::make_mut`), preserving value
+//!   semantics everywhere else.
+//! * **Mapped** — a read-only view into a shared [`mmap::Mmap`] of a CBQS
+//!   snapshot file: zero heap bytes, pages fault in on demand, so tensors
+//!   of a model larger than RAM can be bound without ever materializing
+//!   them. Constructed only through [`Storage::from_mapped`], which
+//!   enforces the [`Pod`] element contract, bounds, alignment and host
+//!   endianness; the first mutation promotes the view to an owned buffer
+//!   (the same copy-on-write rule as shared owned storage).
 
 pub mod io;
 
@@ -15,48 +25,155 @@ use std::fmt;
 use std::ops::{Deref, DerefMut};
 use std::sync::Arc;
 
-/// Shared, copy-on-write element buffer.
+/// Element types whose byte representation can be reinterpreted directly
+/// from a little-endian on-disk byte range (no padding, no invalid bit
+/// patterns, no drop glue).
+///
+/// # Safety
+/// Implementors must be plain-old-data: `Copy`, with every bit pattern of
+/// `size_of::<Self>()` bytes a valid value. The CBQ containers store f32 /
+/// i32 / raw bytes little-endian, which matches these types' in-memory
+/// layout on little-endian hosts (big-endian hosts never take the mapped
+/// path — [`Storage::from_mapped`] refuses and callers decode into owned
+/// buffers instead).
+pub unsafe trait Pod: Copy {}
+
+// SAFETY: all three are plain-old-data with no invalid bit patterns.
+unsafe impl Pod for f32 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for u8 {}
+
+enum Repr<T> {
+    /// Heap-owned, shared, copy-on-write.
+    Owned(Arc<Vec<T>>),
+    /// Borrowed-from-file: `len` elements of `T` starting `offset` bytes
+    /// into the shared mapping. Invariant (upheld by `from_mapped`): the
+    /// range is in bounds, the pointer is aligned for `T`, `T: Pod`, and
+    /// the host is little-endian.
+    Mapped { map: Arc<mmap::Mmap>, offset: usize, len: usize },
+}
+
+/// Shared, copy-on-write element buffer (owned or memory-mapped).
 ///
 /// * Reads go through `Deref<Target = [T]>` — indexing, slicing, iterators
 ///   and `&storage`-as-`&[T]` coercion all work as they did on `Vec<T>`.
-/// * Writes go through `DerefMut`, which calls `Arc::make_mut`: unique
-///   buffers mutate in place (an atomic refcount check), shared buffers are
-///   cloned first. Kernel hot paths operate on locally-owned buffers, so
-///   the clone only triggers where sharing semantics actually require it.
-pub struct Storage<T = f32>(Arc<Vec<T>>);
+/// * Writes go through `DerefMut`: unique owned buffers mutate in place (an
+///   atomic refcount check), shared owned buffers are cloned first
+///   (`Arc::make_mut`), and mapped views are promoted to owned copies.
+///   Kernel hot paths operate on locally-owned buffers, so the clone only
+///   triggers where sharing semantics actually require it.
+pub struct Storage<T = f32>(Repr<T>);
 
 impl<T> Storage<T> {
+    /// Wrap an owned buffer.
     pub fn new(data: Vec<T>) -> Self {
-        Self(Arc::new(data))
+        Self(Repr::Owned(Arc::new(data)))
     }
 
     /// Number of live shares of this buffer (diagnostics / sharing tests).
+    /// For mapped storage this counts shares of the underlying file
+    /// mapping.
     pub fn ref_count(&self) -> usize {
-        Arc::strong_count(&self.0)
+        match &self.0 {
+            Repr::Owned(a) => Arc::strong_count(a),
+            Repr::Mapped { map, .. } => Arc::strong_count(map),
+        }
     }
 
-    /// Do `a` and `b` share one allocation?
+    /// Do `a` and `b` view the same memory (same base pointer and length)?
+    /// True for clones of one owned allocation and for mapped views of the
+    /// same byte range of one mapping.
     pub fn ptr_eq(a: &Self, b: &Self) -> bool {
-        Arc::ptr_eq(&a.0, &b.0)
+        std::ptr::eq(a.as_slice().as_ptr(), b.as_slice().as_ptr())
+            && a.as_slice().len() == b.as_slice().len()
+    }
+
+    /// Is this a borrowed-from-file mapped view (as opposed to an owned
+    /// heap buffer)?
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, Repr::Mapped { .. })
+    }
+
+    /// Heap bytes this storage keeps resident: `len * size_of::<T>()` for
+    /// owned buffers, **0** for mapped views (their pages belong to the
+    /// file cache and are reclaimable under memory pressure). The serving
+    /// layer's residency accounting sums this over pinned tensors.
+    pub fn heap_bytes(&self) -> usize {
+        match &self.0 {
+            Repr::Owned(a) => a.len() * std::mem::size_of::<T>(),
+            Repr::Mapped { .. } => 0,
+        }
+    }
+
+    fn as_slice(&self) -> &[T] {
+        match &self.0 {
+            Repr::Owned(a) => a.as_slice(),
+            Repr::Mapped { map, offset, len } => {
+                let ptr = unsafe { map.as_bytes().as_ptr().add(*offset) };
+                // SAFETY: from_mapped checked bounds, alignment, T: Pod and
+                // little-endianness; the map Arc keeps the region alive for
+                // the lifetime of &self.
+                unsafe { std::slice::from_raw_parts(ptr as *const T, *len) }
+            }
+        }
+    }
+}
+
+impl<T: Pod> Storage<T> {
+    /// Construct a zero-copy view of `elems` elements starting at
+    /// `byte_offset` in `map`.
+    ///
+    /// Returns `None` — callers then decode into an owned buffer instead —
+    /// when the range is out of bounds, the resulting pointer is not
+    /// aligned for `T`, or the host is big-endian (the on-disk layout is
+    /// little-endian; reinterpreting would silently byte-swap values).
+    pub fn from_mapped(map: Arc<mmap::Mmap>, byte_offset: usize, elems: usize) -> Option<Self> {
+        if cfg!(target_endian = "big") {
+            return None;
+        }
+        let bytes = elems.checked_mul(std::mem::size_of::<T>())?;
+        let end = byte_offset.checked_add(bytes)?;
+        if end > map.len() {
+            return None;
+        }
+        let ptr = unsafe { map.as_bytes().as_ptr().add(byte_offset) };
+        if (ptr as usize) % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(Self(Repr::Mapped { map, offset: byte_offset, len: elems }))
     }
 }
 
 impl<T> Clone for Storage<T> {
     fn clone(&self) -> Self {
-        Self(self.0.clone()) // refcount bump, no data copy
+        // refcount bump in both representations, no data copy
+        match &self.0 {
+            Repr::Owned(a) => Self(Repr::Owned(a.clone())),
+            Repr::Mapped { map, offset, len } => {
+                Self(Repr::Mapped { map: map.clone(), offset: *offset, len: *len })
+            }
+        }
     }
 }
 
 impl<T> Deref for Storage<T> {
     type Target = [T];
     fn deref(&self) -> &[T] {
-        self.0.as_slice()
+        self.as_slice()
     }
 }
 
 impl<T: Clone> DerefMut for Storage<T> {
     fn deref_mut(&mut self) -> &mut [T] {
-        Arc::make_mut(&mut self.0).as_mut_slice()
+        if let Repr::Mapped { .. } = self.0 {
+            // copy-on-write promotion: materialize the mapped view
+            let owned: Vec<T> = self.as_slice().to_vec();
+            self.0 = Repr::Owned(Arc::new(owned));
+        }
+        match &mut self.0 {
+            Repr::Owned(a) => Arc::make_mut(a).as_mut_slice(),
+            Repr::Mapped { .. } => unreachable!("mapped storage promoted above"),
+        }
     }
 }
 
@@ -106,9 +223,12 @@ impl<T: fmt::Debug> fmt::Debug for Storage<T> {
     }
 }
 
+/// Row-major f32 tensor: shape + shared copy-on-write [`Storage`].
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first (empty = scalar).
     pub dims: Vec<usize>,
+    /// The element buffer (owned or memory-mapped; see [`Storage`]).
     pub data: Storage<f32>,
 }
 
@@ -119,6 +239,7 @@ impl fmt::Debug for Tensor {
 }
 
 impl Tensor {
+    /// Construct from an owned buffer; panics if `dims` and `data` disagree.
     pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             dims.iter().product::<usize>(),
@@ -136,26 +257,32 @@ impl Tensor {
         Self { dims, data }
     }
 
+    /// All-zeros tensor of the given shape.
     pub fn zeros(dims: &[usize]) -> Self {
         Self { dims: dims.to_vec(), data: Storage::new(vec![0.0; dims.iter().product()]) }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(dims: &[usize], v: f32) -> Self {
         Self { dims: dims.to_vec(), data: Storage::new(vec![v; dims.iter().product()]) }
     }
 
+    /// 0-d tensor holding one value.
     pub fn scalar(v: f32) -> Self {
         Self { dims: vec![], data: Storage::new(vec![v]) }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Is the element count zero?
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of dimensions (0 for scalars).
     pub fn rank(&self) -> usize {
         self.dims.len()
     }
@@ -165,6 +292,7 @@ impl Tensor {
         self.data[0]
     }
 
+    /// Reinterpret the same elements under a new shape (same length).
     pub fn reshape(mut self, dims: Vec<usize>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), self.data.len());
         self.dims = dims;
@@ -178,29 +306,35 @@ impl Tensor {
         self.dims[0]
     }
 
+    /// Column count of a 2-D tensor.
     pub fn cols(&self) -> usize {
         assert_eq!(self.rank(), 2);
         self.dims[1]
     }
 
+    /// Element `[i, j]` of a 2-D tensor.
     pub fn at2(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.dims[1] + j]
     }
 
+    /// Set element `[i, j]` of a 2-D tensor.
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.dims[1] + j] = v;
     }
 
+    /// Row `i` of a 2-D tensor as a slice.
     pub fn row(&self, i: usize) -> &[f32] {
         let c = self.dims[1];
         &self.data[i * c..(i + 1) * c]
     }
 
+    /// Mutable row `i` of a 2-D tensor.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let c = self.dims[1];
         &mut self.data[i * c..(i + 1) * c]
     }
 
+    /// Iterate column `j` of a 2-D tensor.
     pub fn col_iter(&self, j: usize) -> impl Iterator<Item = f32> + '_ {
         let c = self.dims[1];
         self.data.iter().skip(j).step_by(c).copied()
@@ -228,6 +362,7 @@ impl Tensor {
         Self { dims: self.dims.clone(), data: Storage::new(data) }
     }
 
+    /// `self[i] = f(self[i], other[i])` elementwise (shapes must match).
     pub fn zip_mut(&mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) {
         assert_eq!(self.dims, other.dims);
         for (a, &b) in self.data.iter_mut().zip(&other.data) {
@@ -235,18 +370,22 @@ impl Tensor {
         }
     }
 
+    /// Largest absolute element (0 for empty tensors).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
     }
 
+    /// Sum of all elements.
     pub fn sum(&self) -> f32 {
         self.data.iter().sum()
     }
 
+    /// Arithmetic mean of all elements (0 for empty tensors).
     pub fn mean(&self) -> f32 {
         if self.data.is_empty() { 0.0 } else { self.sum() / self.data.len() as f32 }
     }
 
+    /// Sum of squared elements.
     pub fn sq_norm(&self) -> f32 {
         self.data.iter().map(|v| v * v).sum()
     }
@@ -276,6 +415,7 @@ impl Tensor {
         Tensor::new(vec![m, n], out)
     }
 
+    /// Transpose of a 2-D tensor.
     pub fn transpose2(&self) -> Tensor {
         assert_eq!(self.rank(), 2);
         let (m, n) = (self.dims[0], self.dims[1]);
@@ -293,11 +433,14 @@ impl Tensor {
 /// so dtype mistakes are compile errors, not runtime surprises.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorI32 {
+    /// Dimension sizes, outermost first.
     pub dims: Vec<usize>,
+    /// The element buffer (owned or memory-mapped; see [`Storage`]).
     pub data: Storage<i32>,
 }
 
 impl TensorI32 {
+    /// Construct from an owned buffer; panics if `dims` and `data` disagree.
     pub fn new(dims: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Self { dims, data: Storage::new(data) }
@@ -374,5 +517,43 @@ mod tests {
         let b = Tensor::from_storage(vec![2, 2], a.data.clone());
         assert!(Storage::ptr_eq(&a.data, &b.data));
         assert_eq!(b.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn mapped_storage_zero_copy_then_cow_promotion() {
+        let vals: Vec<f32> = (0..16).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut bytes = Vec::new();
+        for v in &vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = std::env::temp_dir()
+            .join(format!("cbq_tensor_map_{}.bin", std::process::id()));
+        std::fs::write(&p, &bytes).unwrap();
+        // mmap may be unavailable (CBQ_NO_MMAP / exotic platform); the
+        // mapped representation only exists on the mapped path, so the
+        // assertions are conditional on the map coming up.
+        if let Ok(m) = mmap::Mmap::open(&p) {
+            let map = Arc::new(m);
+            let s = Storage::<f32>::from_mapped(map.clone(), 0, 16).unwrap();
+            assert!(s.is_mapped());
+            assert_eq!(s.heap_bytes(), 0, "mapped views keep no heap bytes");
+            assert_eq!(&s[..], &vals[..], "mapped reads must be bit-exact");
+            let shared = s.clone();
+            assert!(Storage::ptr_eq(&s, &shared), "clones view the same bytes");
+
+            // bounds and alignment violations are refused, not UB
+            assert!(Storage::<f32>::from_mapped(map.clone(), 1, 4).is_none());
+            assert!(Storage::<f32>::from_mapped(map.clone(), 0, 17).is_none());
+
+            // first write promotes to an owned copy; the file view and any
+            // other share are untouched
+            let mut t = Tensor::from_storage(vec![4, 4], s);
+            t.set2(0, 0, 9.0);
+            assert!(!t.data.is_mapped(), "write must promote to owned");
+            assert!(t.data.heap_bytes() > 0);
+            assert_eq!(t.at2(0, 0), 9.0);
+            assert_eq!(shared[0], vals[0], "other shares still read the map");
+        }
+        std::fs::remove_file(p).ok();
     }
 }

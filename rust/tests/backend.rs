@@ -341,7 +341,8 @@ fn snapshot_roundtrip(
     // -- pin sharing: engines must not deep-copy pinned statics ----------
     // (the ROADMAP double-residency item: Arc-backed Value storage makes
     // Backend::pin retain the registry's buffers instead of cloning them)
-    let wq = &snap.model.params.blocks[0].linears["wq"];
+    let eager = snap.model.eager().expect("registry default load is eager");
+    let wq = &eager.params.blocks[0].linears["wq"];
     let wq_ptr = wq.data.as_ptr();
     let rc_before = wq.data.ref_count();
     let engine = ServeEngine::new(rt, art, snap.clone()).unwrap();

@@ -1,0 +1,375 @@
+//! Lazy (memory-mapped) CBQS loading + serving tests — the failure-mode
+//! and bitwise-identity coverage for the larger-than-RAM path:
+//!
+//! * v1 and v2 frames decode bit-exactly through the one shared loader,
+//!   eagerly and lazily;
+//! * truncation mid-tensor is rejected at open; a payload bit flip is
+//!   caught by the per-tensor CRC on the *lazy* path at first touch;
+//! * an mmap engine with a 1-window budget serves bitwise-identical
+//!   responses to the eager engine while peak residency stays bounded
+//!   (asserted through `Storage`/`Pinned` heap introspection), and
+//!   eviction-then-retouch re-materializes bitwise-identical tensors;
+//! * several engines (and threads) over one registry entry share a single
+//!   mapping of the file.
+//!
+//! Everything here is host-only: `cbq synth` artifacts + the native CPU
+//! backend. The model is synthesized with 4 layers so the greedy covering
+//! has 2 windows — enough for real eviction traffic under a 1-window
+//! budget.
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use cbq::config::{BitSpec, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::quant::LINEARS;
+use cbq::runtime::{synth, Artifacts, NativeBackend};
+use cbq::serve::{batcher, Batcher, EngineOptions, LoadMode, ModelRegistry, ServeEngine};
+use cbq::snapshot;
+
+/// Serializes tests in this binary against the `CBQ_NO_MMAP` env flip in
+/// `read_at_fallback_serves_identically_without_a_mapping`: mutating the
+/// environment while another thread reads it is a getenv/setenv data race
+/// (and would also make the other tests' "is it mapped?" checks flaky).
+/// Every test takes this lock first.
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn env_guard() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("cbq_synth_mmap_{}", std::process::id()));
+        let mut spec = synth::SynthSpec::tiny();
+        // 4 layers + the tiny window set {1, 2} => a 2-step serve plan, so
+        // a 1-window budget actually exercises eviction
+        spec.n_layers = 4;
+        spec.pretrain_steps = 40;
+        synth::generate(&dir, &spec).expect("synthetic artifact generation");
+        dir
+    })
+}
+
+fn setup() -> (Artifacts, NativeBackend) {
+    let art = Artifacts::load(artifacts_dir()).expect("loading artifacts");
+    let rt = NativeBackend::new(&art).expect("native backend");
+    (art, rt)
+}
+
+/// Quantize the synth model (fast RTN path) and export it at `path`.
+fn export_snapshot(
+    art: &Artifacts,
+    rt: &NativeBackend,
+    path: &std::path::Path,
+) -> (cbq::runtime::ModelCfg, cbq::coordinator::QuantizedModel) {
+    let m = art.default_model().to_string();
+    let mut pipe = Pipeline::new(art, rt, &m).unwrap();
+    let mut job = QuantJob::rtn(BitSpec::new(4, 16));
+    job.calib_sequences = 4;
+    let (qm, _) = pipe.run(&job).unwrap();
+    snapshot::save(path, &pipe.cfg, &qm).unwrap();
+    (pipe.cfg.clone(), qm)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cbq_mmap_{}_{name}", std::process::id()))
+}
+
+fn assert_models_bitwise_equal(
+    a: &cbq::coordinator::QuantizedModel,
+    b: &cbq::coordinator::QuantizedModel,
+) {
+    assert_eq!(a.params.embed, b.params.embed, "embed");
+    assert_eq!(a.params.final_norm, b.params.final_norm, "final_norm");
+    assert_eq!(a.params.head, b.params.head, "head");
+    assert_eq!(a.params.blocks.len(), b.params.blocks.len());
+    for (i, (ba, bb)) in a.params.blocks.iter().zip(&b.params.blocks).enumerate() {
+        assert_eq!(ba.attn_norm, bb.attn_norm, "block {i} attn_norm");
+        assert_eq!(ba.mlp_norm, bb.mlp_norm, "block {i} mlp_norm");
+        for l in LINEARS {
+            assert_eq!(ba.linears[l], bb.linears[l], "block {i} {l}");
+        }
+    }
+    for (i, (qa, qb)) in a.qstate.iter().zip(&b.qstate).enumerate() {
+        for l in LINEARS {
+            assert_eq!(qa[l].s_w, qb[l].s_w, "block {i} {l} s_w");
+            assert_eq!(qa[l].alpha, qb[l].alpha, "block {i} {l} alpha");
+            assert_eq!(qa[l].a1, qb[l].a1, "block {i} {l} a1");
+            assert_eq!(qa[l].a2, qb[l].a2, "block {i} {l} a2");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// format compatibility: v1 == v2 == lazy, bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v1_and_lazy_loads_are_bitwise_equal_to_eager_v2() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p2 = tmp("compat_v2.cbqs");
+    let p1 = tmp("compat_v1.cbqs");
+    let (cfg, qm) = export_snapshot(&art, &rt, &p2);
+    snapshot::save_v1(&p1, &cfg, &qm).unwrap();
+
+    // eager: v2 and the legacy v1 frame decode to the identical model,
+    // which is itself bit-identical to the in-memory one that exported
+    let s2 = snapshot::load(&p2).unwrap();
+    let s1 = snapshot::load(&p1).unwrap();
+    assert_models_bitwise_equal(&s2.model, &qm);
+    assert_models_bitwise_equal(&s1.model, &s2.model);
+
+    // lazy: per-block materialization equals the eager decode, tensor by
+    // tensor — for the mapped v2 file AND the degraded in-memory v1 path
+    for path in [&p2, &p1] {
+        let lz = snapshot::load_lazy(path).unwrap();
+        assert_eq!(lz.model.embed().unwrap(), s2.model.params.embed);
+        assert_eq!(lz.model.final_norm().unwrap(), s2.model.params.final_norm);
+        assert_eq!(lz.model.head().unwrap(), s2.model.params.head);
+        for i in 0..cfg.n_layers {
+            let mb = lz.model.block(i).unwrap();
+            let eb = &s2.model.params.blocks[i];
+            assert_eq!(mb.params.attn_norm, eb.attn_norm);
+            assert_eq!(mb.params.mlp_norm, eb.mlp_norm);
+            for l in LINEARS {
+                assert_eq!(mb.params.linears[l], eb.linears[l], "lazy block {i} {l}");
+                assert_eq!(mb.qstate[l].s_w, s2.model.qstate[i][l].s_w);
+                assert_eq!(mb.qstate[l].alpha, s2.model.qstate[i][l].alpha);
+            }
+        }
+    }
+
+    // when the v2 file really is mapped, its big f32 tensors are zero-copy
+    let lz = snapshot::load_lazy(&p2).unwrap();
+    if lz.model.is_mapped() {
+        let embed = lz.model.embed().unwrap();
+        assert!(embed.data.is_mapped(), "mapped snapshot must hand out mapped embed");
+        assert_eq!(embed.data.heap_bytes(), 0, "mapped tensors keep no heap bytes");
+    }
+
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
+
+// ---------------------------------------------------------------------------
+// failure modes on the lazy path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncation_mid_tensor_is_rejected_at_open() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p = tmp("trunc.cbqs");
+    export_snapshot(&art, &rt, &p);
+    let clean = std::fs::read(&p).unwrap();
+
+    // cut into the last tensor's payload: the record table then points
+    // past end-of-file, which both loaders must refuse up front
+    for cut in [3usize, 64, clean.len() / 3] {
+        std::fs::write(&p, &clean[..clean.len() - cut]).unwrap();
+        let e = snapshot::load_lazy(&p).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("truncated") || msg.contains("exceeds file length"),
+            "lazy open after {cut}B truncation: {msg}"
+        );
+        assert!(snapshot::load(&p).is_err(), "eager load after {cut}B truncation");
+    }
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn payload_corruption_is_caught_on_lazy_first_touch() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p = tmp("crc_lazy.cbqs");
+    export_snapshot(&art, &rt, &p);
+
+    // find a packed-code payload via the inspector's offset table and flip
+    // one bit in the middle of it
+    let info = snapshot::inspect(&p).unwrap();
+    let rec = info
+        .tensors
+        .iter()
+        .find(|t| t.name == "blocks.1.wq.q")
+        .expect("block 1 wq codes in offset table");
+    let mut bytes = std::fs::read(&p).unwrap();
+    let pos = rec.offset as usize + rec.bytes / 2;
+    bytes[pos] ^= 0x20;
+    std::fs::write(&p, &bytes).unwrap();
+
+    // lazy open succeeds — the metadata is intact...
+    let lz = snapshot::load_lazy(&p).unwrap();
+    // ...undamaged blocks still materialize...
+    lz.model.block(0).unwrap();
+    // ...and the damaged one fails its per-tensor CRC on first touch
+    let e = lz.model.block(1).unwrap_err();
+    assert!(format!("{e:#}").contains("checksum"), "{e:#}");
+
+    // the eager loader (which touches everything) refuses the whole file
+    assert!(snapshot::load(&p).is_err());
+    std::fs::remove_file(&p).ok();
+}
+
+// ---------------------------------------------------------------------------
+// serving: bitwise identity + bounded residency + eviction/retouch
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mmap_serving_is_bitwise_identical_with_bounded_residency() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p = tmp("serve.cbqs");
+    let (cfg, _) = export_snapshot(&art, &rt, &p);
+
+    let mut reg = ModelRegistry::new();
+    let eager_snap = reg.load_with("eager", &p, LoadMode::Eager).unwrap();
+    let mmap_snap = reg.load_with("mmap", &p, LoadMode::Mmap).unwrap();
+    assert!(mmap_snap.is_lazy() && !eager_snap.is_lazy());
+
+    let eager = ServeEngine::new(&rt, &art, eager_snap.clone()).unwrap();
+    let lazy = ServeEngine::with_options(
+        &rt,
+        &art,
+        mmap_snap,
+        EngineOptions { resident_windows: Some(1), resident_bytes: None },
+    )
+    .unwrap();
+    assert!(lazy.is_lazy() && !eager.is_lazy());
+    assert!(eager.plan_len() >= 2, "need >= 2 windows to exercise eviction");
+
+    let requests = batcher::standard_mix(cfg.seq, 8, 3, 2);
+    let (resp_e, _) = Batcher::coalescing(&eager).run(&eager, &requests).unwrap();
+    let (resp_m, _) = Batcher::coalescing(&lazy).run(&lazy, &requests).unwrap();
+    assert_eq!(resp_m, resp_e, "mmap responses must be bitwise-identical to eager");
+
+    // residency: the 1-window budget bounds the peak — never two windows
+    // resident, peak bytes well under the eager engine's full-plan pins —
+    // and the 2-step plan under a 1-slot cache means every forward evicts
+    let res = lazy.residency();
+    let eager_res = eager.residency();
+    assert_eq!(res.peak_windows, 1, "budget of 1 window exceeded: {res:?}");
+    assert!(res.resident_windows <= 1);
+    assert!(res.evictions > 0, "2-window plan under 1-window budget must evict: {res:?}");
+    assert!(res.faults > eager.plan_len() as u64, "re-faults after eviction expected");
+    assert!(res.peak_bytes > 0, "pinned windows must be accounted: {res:?}");
+    assert!(
+        res.peak_bytes < eager_res.resident_bytes,
+        "lazy peak {} must undercut eager residency {}",
+        res.peak_bytes,
+        eager_res.resident_bytes
+    );
+
+    // eviction-then-retouch: a second pass re-materializes every window
+    // from the map and must reproduce the responses bit for bit
+    let (resp_m2, _) = Batcher::coalescing(&lazy).run(&lazy, &requests).unwrap();
+    assert_eq!(resp_m2, resp_e, "retouched windows diverged from eager");
+
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn concurrent_engines_share_one_mapping_and_agree() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p = tmp("shared.cbqs");
+    let (cfg, _) = export_snapshot(&art, &rt, &p);
+
+    let mut reg = ModelRegistry::new();
+    let snap = reg.load_with("shared", &p, LoadMode::Mmap).unwrap();
+    // registry cache: a second load by the same name is the same Arc —
+    // and therefore the same mapping
+    let snap2 = reg.load_with("shared", &p, LoadMode::Mmap).unwrap();
+    assert!(Arc::ptr_eq(&snap, &snap2), "registry must dedupe by name");
+
+    let opts = EngineOptions { resident_windows: Some(1), resident_bytes: None };
+    let e1 = ServeEngine::with_options(&rt, &art, snap.clone(), opts).unwrap();
+    let e2 = ServeEngine::with_options(&rt, &art, snap.clone(), opts).unwrap();
+
+    // the registry entry both engines share holds exactly one byte source:
+    // repeated zero-copy materializations view the same mapped bytes
+    let m = snap.model.lazy().expect("mmap load must be lazy");
+    assert_eq!(
+        m.source_ptr(),
+        snap2.model.lazy().unwrap().source_ptr(),
+        "one mapping per registry entry"
+    );
+    if m.is_mapped() {
+        let emb1 = m.embed().unwrap();
+        let emb2 = m.embed().unwrap();
+        assert!(
+            cbq::tensor::Storage::ptr_eq(&emb1.data, &emb2.data),
+            "mapped embed views must alias the same file bytes"
+        );
+    }
+
+    // concurrent pinning from two engines over the one mapping: both must
+    // serve the exact same answers as an eager reference
+    let eager_snap = reg.load_with("shared-eager", &p, LoadMode::Eager).unwrap();
+    let eager = ServeEngine::new(&rt, &art, eager_snap).unwrap();
+    let requests = batcher::standard_mix(cfg.seq, 6, 2, 2);
+    let (resp_ref, _) = Batcher::coalescing(&eager).run(&eager, &requests).unwrap();
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| Batcher::coalescing(&e1).run(&e1, &requests).unwrap().0);
+        let hb = s.spawn(|| Batcher::coalescing(&e2).run(&e2, &requests).unwrap().0);
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(ra, resp_ref, "engine 1 diverged");
+    assert_eq!(rb, resp_ref, "engine 2 diverged");
+
+    std::fs::remove_file(&p).ok();
+}
+
+// ---------------------------------------------------------------------------
+// the positional-read fallback (CBQ_NO_MMAP=1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn read_at_fallback_serves_identically_without_a_mapping() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p = tmp("fallback.cbqs");
+    let (cfg, _) = export_snapshot(&art, &rt, &p);
+
+    let baseline = snapshot::load(&p).unwrap();
+
+    // CBQ_NO_MMAP disables real mapping process-wide while set; ENV_LOCK
+    // (held by every test in this binary) serializes the flip against any
+    // concurrent env read, and the flag is always removed before release.
+    std::env::set_var("CBQ_NO_MMAP", "1");
+    let outcome: anyhow::Result<()> = (|| {
+        let lz = snapshot::load_lazy(&p)?;
+        anyhow::ensure!(!lz.model.is_mapped(), "CBQ_NO_MMAP=1 must suppress the mapping");
+        anyhow::ensure!(lz.model.embed()? == baseline.model.params.embed, "embed differs");
+        let mb = lz.model.block(0)?;
+        for l in LINEARS {
+            anyhow::ensure!(
+                mb.params.linears[l] == baseline.model.params.blocks[0].linears[l],
+                "fallback block 0 {l} differs"
+            );
+        }
+        // and the serving layer agrees end-to-end
+        let mut reg = ModelRegistry::new();
+        let snap = reg.load_with("fb", &p, LoadMode::Mmap)?;
+        let lazy = ServeEngine::with_options(
+            &rt,
+            &art,
+            snap,
+            EngineOptions { resident_windows: Some(1), resident_bytes: None },
+        )?;
+        let requests = batcher::standard_mix(cfg.seq, 4, 2, 1);
+        let (resp_m, _) = Batcher::coalescing(&lazy).run(&lazy, &requests)?;
+        let mut reg2 = ModelRegistry::new();
+        let esnap = reg2.load_with("fb-eager", &p, LoadMode::Eager)?;
+        let eager = ServeEngine::new(&rt, &art, esnap)?;
+        let (resp_e, _) = Batcher::coalescing(&eager).run(&eager, &requests)?;
+        anyhow::ensure!(resp_m == resp_e, "fallback responses diverged");
+        Ok(())
+    })();
+    std::env::remove_var("CBQ_NO_MMAP");
+    outcome.unwrap();
+    std::fs::remove_file(&p).ok();
+}

@@ -136,9 +136,17 @@ fn registry_loads_caches_and_evicts() {
 #[test]
 fn registry_propagates_snapshot_validation() {
     let p = snapshot_file("serve_reg_bad.cbqs", 23);
+    // flip a bit inside a tensor payload (located via the v2 offset table;
+    // a blind mid-file flip could land in CRC-exempt alignment padding)
+    let rec = snapshot::inspect(&p)
+        .unwrap()
+        .tensors
+        .iter()
+        .find(|t| t.name == "embed")
+        .unwrap()
+        .clone();
     let mut raw = std::fs::read(&p).unwrap();
-    let mid = raw.len() / 2;
-    raw[mid] ^= 0x08;
+    raw[rec.offset as usize + rec.bytes / 2] ^= 0x08;
     std::fs::write(&p, &raw).unwrap();
     let mut reg = ModelRegistry::new();
     let err = reg.load("bad", &p).unwrap_err();

@@ -231,10 +231,19 @@ fn rejects_corruption_version_magic_and_fp_models() {
     snapshot::save(&p, &c, &m).unwrap();
     let clean = std::fs::read(&p).unwrap();
 
-    // bad checksum: flip a bit deep in the payload
+    // bad checksum: flip a bit inside a tensor payload (located via the
+    // v2 offset table — a blind mid-file flip could land in alignment
+    // padding, which is structurally dead and not CRC-covered)
+    let info = snapshot::inspect(&p).unwrap();
+    let rec = info.tensors.iter().find(|t| t.name == "embed").unwrap();
     let mut bad = clean.clone();
-    let mid = bad.len() / 2;
-    bad[mid] ^= 0x40;
+    bad[rec.offset as usize + rec.bytes / 2] ^= 0x40;
+    std::fs::write(&p, &bad).unwrap();
+    let e = snapshot::load(&p).unwrap_err();
+    assert!(format!("{e:#}").contains("checksum"), "{e:#}");
+    // metadata corruption is caught by the meta CRC before any payload
+    let mut bad = clean.clone();
+    bad[20] ^= 0x40; // inside the header JSON
     std::fs::write(&p, &bad).unwrap();
     let e = snapshot::load(&p).unwrap_err();
     assert!(format!("{e:#}").contains("checksum"), "{e:#}");

@@ -1,0 +1,315 @@
+//! Minimal read-only memory-mapped file support for the CBQS lazy loading
+//! path, vendored because the offline build environment has no crates.io
+//! (the real-world equivalent is `memmap2`).
+//!
+//! Two primitives:
+//!
+//! * [`Mmap`] — a whole-file read-only mapping. On Unix this is a real
+//!   `mmap(2)` (`PROT_READ`, `MAP_PRIVATE`) over raw `extern "C"`
+//!   declarations — pages fault in on demand, so a file larger than RAM can
+//!   be walked window-by-window. On other platforms (or when the syscall
+//!   fails, or `CBQ_NO_MMAP=1` forces it) the constructor reports
+//!   unavailability instead of silently buffering: callers choose the
+//!   [`ReadAtFile`] fallback explicitly so the memory behavior is never a
+//!   surprise.
+//! * [`ReadAtFile`] — the pure-Rust positional-read fallback: byte ranges
+//!   are read on demand into caller-owned buffers (`pread(2)` semantics on
+//!   Unix, a seek-lock elsewhere). Not zero-copy, but still lazy: only the
+//!   ranges actually touched are ever resident.
+//!
+//! Both types are `Send + Sync`: the mapping is immutable and the fallback
+//! serializes seeks behind a mutex. Nothing here interprets bytes — dtype,
+//! alignment and checksum policy live in the caller (`cbq::snapshot`).
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+use std::sync::Mutex;
+
+#[cfg(unix)]
+mod sys {
+    //! Raw `mmap(2)` / `munmap(2)` bindings. Declared by hand because the
+    //! offline image vendors no `libc` crate; the symbols come from the
+    //! platform libc that `std` already links.
+    use std::os::raw::{c_int, c_void};
+
+    /// `off_t`: 64-bit on every LP64 Unix this repo targets.
+    pub type OffT = i64;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: OffT,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// `PROT_READ` (identical on Linux and the BSD family).
+    pub const PROT_READ: c_int = 1;
+    /// `MAP_PRIVATE` (identical on Linux and the BSD family).
+    pub const MAP_PRIVATE: c_int = 2;
+
+    /// `MAP_FAILED` is `(void*)-1`.
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+}
+
+/// Is real memory mapping available on this build/host?
+///
+/// `false` on non-Unix targets and when the operator set `CBQ_NO_MMAP=1`
+/// (useful for exercising the [`ReadAtFile`] fallback on a Unix CI host).
+pub fn mmap_supported() -> bool {
+    if std::env::var("CBQ_NO_MMAP").map(|v| v == "1").unwrap_or(false) {
+        return false;
+    }
+    cfg!(unix)
+}
+
+/// A read-only memory mapping of an entire file.
+///
+/// Dereferences to `&[u8]`. The base pointer is page-aligned (4 KiB or
+/// more on every supported platform), so any file offset that is N-byte
+/// aligned for N ≤ page size yields an N-byte-aligned pointer into the map.
+pub struct Mmap {
+    inner: Inner,
+}
+
+enum Inner {
+    /// A live `mmap(2)` region (Unix only). `len > 0`.
+    #[cfg(unix)]
+    Map { ptr: *const u8, len: usize },
+    /// Empty files map to an empty slice without a syscall (`mmap` rejects
+    /// zero-length mappings).
+    Empty,
+}
+
+// SAFETY: the mapping is read-only for the whole lifetime of the value and
+// is unmapped exactly once, in Drop; sharing &self across threads only ever
+// reads the bytes.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only.
+    ///
+    /// Returns `Err` when mapping is unavailable ([`mmap_supported`] is
+    /// `false`) or the syscall fails; callers fall back to [`ReadAtFile`].
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        if !mmap_supported() {
+            return Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "memory mapping unavailable on this platform/configuration",
+            ));
+        }
+        let file = File::open(path.as_ref())?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Ok(Self { inner: Inner::Empty });
+        }
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "file exceeds the address space",
+            ));
+        }
+        Self::map_file(&file, len as usize)
+    }
+
+    #[cfg(unix)]
+    fn map_file(file: &File, len: usize) -> io::Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        // SAFETY: len > 0, fd is a valid open file descriptor, and we ask
+        // for a fresh kernel-chosen address. The region is only ever read.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() || ptr.is_null() {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Self { inner: Inner::Map { ptr: ptr as *const u8, len } })
+    }
+
+    #[cfg(not(unix))]
+    fn map_file(_file: &File, _len: usize) -> io::Result<Self> {
+        Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "memory mapping unavailable on this platform",
+        ))
+    }
+
+    /// The mapped bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Map { ptr, len } => {
+                // SAFETY: ptr/len describe a live PROT_READ mapping owned
+                // by self; the slice's lifetime is tied to &self.
+                unsafe { std::slice::from_raw_parts(*ptr, *len) }
+            }
+            Inner::Empty => &[],
+        }
+    }
+
+    /// Number of mapped bytes.
+    pub fn len(&self) -> usize {
+        self.as_bytes().len()
+    }
+
+    /// Is the mapping empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Inner::Map { ptr, len } = self.inner {
+            // SAFETY: exactly the region mmap returned; dropped once.
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_bytes()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap[{} bytes]", self.len())
+    }
+}
+
+/// Positional-read fallback for platforms (or configurations) without
+/// `mmap`: each [`ReadAtFile::read_at`] call reads one byte range into an
+/// owned buffer. Lazy — only touched ranges are ever resident — but not
+/// zero-copy.
+pub struct ReadAtFile {
+    file: Mutex<File>,
+    len: u64,
+}
+
+impl ReadAtFile {
+    /// Open `path` for positional reads.
+    pub fn open(path: impl AsRef<Path>) -> io::Result<Self> {
+        let file = File::open(path.as_ref())?;
+        let len = file.metadata()?.len();
+        Ok(Self { file: Mutex::new(file), len })
+    }
+
+    /// Total file length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// Is the file empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read exactly `len` bytes starting at `offset`.
+    ///
+    /// Errors if the range extends past end-of-file (a truncated container,
+    /// not a short read).
+    pub fn read_at(&self, offset: u64, len: usize) -> io::Result<Vec<u8>> {
+        if offset.checked_add(len as u64).map(|end| end > self.len).unwrap_or(true) {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("range {offset}+{len} exceeds file length {}", self.len),
+            ));
+        }
+        let mut buf = vec![0u8; len];
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::FileExt;
+            let file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+            file.read_exact_at(&mut buf, offset)?;
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut file = self.file.lock().unwrap_or_else(|e| e.into_inner());
+            file.seek(SeekFrom::Start(offset))?;
+            file.read_exact(&mut buf)?;
+        }
+        Ok(buf)
+    }
+}
+
+impl std::fmt::Debug for ReadAtFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ReadAtFile[{} bytes]", self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let p = tmp("mmap_basic.bin", b"hello mapped world");
+        if let Ok(m) = Mmap::open(&p) {
+            assert_eq!(&m[..], b"hello mapped world");
+            assert_eq!(m.len(), 18);
+            assert!(!m.is_empty());
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn maps_empty_file() {
+        let p = tmp("mmap_empty.bin", b"");
+        if let Ok(m) = Mmap::open(&p) {
+            assert!(m.is_empty());
+            assert_eq!(m.as_bytes(), &[] as &[u8]);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn read_at_ranges_and_eof() {
+        let p = tmp("mmap_readat.bin", b"0123456789");
+        let f = ReadAtFile::open(&p).unwrap();
+        assert_eq!(f.len(), 10);
+        assert_eq!(f.read_at(0, 4).unwrap(), b"0123");
+        assert_eq!(f.read_at(6, 4).unwrap(), b"6789");
+        assert_eq!(f.read_at(10, 0).unwrap(), b"");
+        assert!(f.read_at(7, 4).is_err(), "read past EOF must fail");
+        assert!(f.read_at(u64::MAX, 2).is_err(), "offset overflow must fail");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn base_pointer_is_page_aligned() {
+        let p = tmp("mmap_align.bin", &[7u8; 4096]);
+        if let Ok(m) = Mmap::open(&p) {
+            assert_eq!(m.as_bytes().as_ptr() as usize % 4096, 0);
+        }
+        std::fs::remove_file(p).ok();
+    }
+}
