@@ -12,6 +12,9 @@
 //!     `CBQ_NAIVE_KERNELS=1` forces the naive path process-wide)
 //!   * serve-bench tokens/s over a snapshot (pool + pinned windows), at
 //!     `CBQ_BENCH_DISPATCH` concurrency
+//!   * token-generation decode tokens/s + per-token latency percentiles
+//!     through the KV-cached continuous-batching loop
+//!     (`CBQ_BENCH_MAX_NEW` / `CBQ_BENCH_GEN_REQUESTS`)
 //!
 //! Besides the human-readable tables, writes a machine-readable
 //! `BENCH_native.json` (path override: `CBQ_BENCH_JSON`) so the perf
@@ -27,10 +30,11 @@ use cbq::json::{self, Value as J};
 use cbq::report::{fmt_f, Table};
 use cbq::runtime::backend::kernels;
 use cbq::runtime::{self, Artifacts, Backend as _, Bindings, Value};
+use cbq::serve::clock::ticks_to_secs;
 use cbq::serve::scheduler::{synth_trace, Scheduler, SchedulerCfg, TraceSpec};
 use cbq::serve::{
-    batcher, Batcher, EngineOptions, LoadMode, ModelRegistry, RealClock, RowExecutor as _,
-    ServeEngine,
+    batcher, synth_gen_trace, Batcher, EngineOptions, GenCfg, GenTraceSpec, GenerateEngine,
+    LoadMode, ModelRegistry, RealClock, RowExecutor as _, ServeEngine,
 };
 use cbq::tensor::Tensor;
 
@@ -316,6 +320,46 @@ fn main() {
         live.stats.rejected
     );
 
+    // ---- token generation (KV-cached decode + continuous batching) --------
+    // real clock, honest decode tokens/s and per-token latency percentiles;
+    // replay determinism is the simulated clock's job and is asserted by
+    // tests/generate.rs + `cbq serve-bench --generate --verify-determinism`.
+    let max_new: usize = std::env::var("CBQ_BENCH_MAX_NEW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let gen_requests: usize = std::env::var("CBQ_BENCH_GEN_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24);
+    let gen = GenerateEngine::new(&engine).unwrap();
+    let gen_trace = synth_gen_trace(&GenTraceSpec {
+        requests: gen_requests,
+        mean_gap: 500,
+        seed: trace_seed,
+        vocab: cfg.vocab,
+        max_prompt: (cfg.seq / 2).max(1),
+        max_new_tokens: max_new,
+    });
+    let gen_cfg = GenCfg { max_new_tokens: max_new, dispatch, ..Default::default() };
+    gen.decode_reference(&gen_trace[0].request.prompt, 1).unwrap(); // warm-up
+    let gen_clock = RealClock::new();
+    let (_, gen_stats) = gen.run(&gen_trace, &gen_cfg, &gen_clock).unwrap();
+    let mut t = Table::new(
+        format!(
+            "token generation ({gen_requests} requests, max-new {max_new}, dispatch {dispatch})"
+        ),
+        &["metric", "value"],
+    );
+    t.row(&["decode tokens/s".into(), fmt_f(gen_stats.tokens_per_s, 0)]);
+    t.row(&["tokens".into(), gen_stats.tokens.to_string()]);
+    t.row(&["decode steps".into(), gen_stats.decode_steps.to_string()]);
+    t.row(&["peak batch".into(), gen_stats.peak_active.to_string()]);
+    t.row(&["tok p50 (ms)".into(), fmt_f(ticks_to_secs(gen_stats.tok_p50) * 1e3, 2)]);
+    t.row(&["tok p95 (ms)".into(), fmt_f(ticks_to_secs(gen_stats.tok_p95) * 1e3, 2)]);
+    t.row(&["tok p99 (ms)".into(), fmt_f(ticks_to_secs(gen_stats.tok_p99) * 1e3, 2)]);
+    t.print();
+
     std::fs::remove_file(&snap_path).ok();
     let stats = rt.stats();
     println!(
@@ -401,6 +445,26 @@ fn main() {
                             .collect(),
                     ),
                 ),
+            ]),
+        ),
+        (
+            "generate",
+            J::obj(vec![
+                ("trace_seed", J::num(trace_seed as f64)),
+                ("max_new_tokens", J::num(max_new as f64)),
+                ("clock", J::str("real")),
+                ("requests", J::num(gen_stats.requests as f64)),
+                ("completed", J::num(gen_stats.completed as f64)),
+                ("rejected", J::num(gen_stats.rejected as f64)),
+                ("decode_steps", J::num(gen_stats.decode_steps as f64)),
+                ("tokens", J::num(gen_stats.tokens as f64)),
+                ("decode_tokens_per_s", J::num(gen_stats.tokens_per_s)),
+                ("tok_p50_s", J::num(ticks_to_secs(gen_stats.tok_p50))),
+                ("tok_p95_s", J::num(ticks_to_secs(gen_stats.tok_p95))),
+                ("tok_p99_s", J::num(ticks_to_secs(gen_stats.tok_p99))),
+                ("wall_seconds", J::num(ticks_to_secs(gen_stats.wall_ticks))),
+                ("dispatch", J::num(gen_stats.dispatch_lanes as f64)),
+                ("peak_active", J::num(gen_stats.peak_active as f64)),
             ]),
         ),
     ]);

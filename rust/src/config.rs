@@ -4,43 +4,45 @@
 //! sweeps.
 
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 /// Bit-width specification. `bits_a = 16` disables activation quantization
 /// (weight-only mode); per-layer overrides implement CBQ* (Table 1: FC2 of
 /// the first and last block promoted to 4-bit under W2A16).
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitSpec {
+    /// Default weight bit width (overridable per layer).
     pub bits_w: u8,
+    /// Activation bit width; 16 means no activation quantization.
     pub bits_a: u8,
     /// (block index, linear name, weight bits) overrides.
     pub overrides: Vec<(usize, String, u8)>,
 }
 
 impl BitSpec {
+    /// Uniform `W{bits_w}A{bits_a}` spec with no overrides.
     pub fn new(bits_w: u8, bits_a: u8) -> Self {
         Self { bits_w, bits_a, overrides: Vec::new() }
     }
+    /// W4A16 — weight-only 4-bit (paper Table 2).
     pub fn w4a16() -> Self {
         Self::new(4, 16)
     }
+    /// W3A16 — weight-only 3-bit.
     pub fn w3a16() -> Self {
         Self::new(3, 16)
     }
+    /// W2A16 — weight-only 2-bit (the extreme-low-bit setting).
     pub fn w2a16() -> Self {
         Self::new(2, 16)
     }
+    /// W4A8 — weight + activation quantization (paper Table 1).
     pub fn w4a8() -> Self {
         Self::new(4, 8)
     }
+    /// W4A4 — fully low-bit weights and activations.
     pub fn w4a4() -> Self {
         Self::new(4, 4)
     }
+    /// W6A6 — the mid-precision weight+activation setting.
     pub fn w6a6() -> Self {
         Self::new(6, 6)
     }
@@ -54,6 +56,8 @@ impl BitSpec {
         s
     }
 
+    /// Effective weight bits for `(block, linear)`: the override if one is
+    /// registered, else the uniform default.
     pub fn weight_bits(&self, block: usize, linear: &str) -> u8 {
         self.overrides
             .iter()
@@ -62,10 +66,12 @@ impl BitSpec {
             .unwrap_or(self.bits_w)
     }
 
+    /// Clip level for `(block, linear)` weights — [`qmax`] of its bits.
     pub fn qmax_w(&self, block: usize, linear: &str) -> f32 {
         qmax(self.weight_bits(block, linear))
     }
 
+    /// Clip level for activations — [`qmax`] of `bits_a`.
     pub fn qmax_a(&self) -> f32 {
         qmax(self.bits_a)
     }
@@ -75,6 +81,7 @@ impl BitSpec {
         self.bits_a < 16
     }
 
+    /// Table label, e.g. `W2A16*` (the star marks per-layer overrides).
     pub fn label(&self) -> String {
         let star = if self.overrides.is_empty() { "" } else { "*" };
         format!("W{}A{}{}", self.bits_w, self.bits_a, star)
@@ -104,6 +111,7 @@ impl BitSpec {
         ])
     }
 
+    /// Inverse of [`Self::to_json`] (reading a CBQS snapshot header).
     pub fn from_json(v: &crate::json::Value) -> anyhow::Result<Self> {
         let mut s = Self::new(v.get("w")?.as_usize()? as u8, v.get("a")?.as_usize()? as u8);
         for o in v.get("overrides")?.as_arr()? {
@@ -119,6 +127,8 @@ impl BitSpec {
     }
 }
 
+/// Symmetric clip level for a signed `bits`-bit grid: `2^(bits-1) - 1`
+/// (integer levels span `[-qmax-1, qmax]`).
 pub fn qmax(bits: u8) -> f32 {
     ((1u32 << (bits - 1)) - 1) as f32
 }
@@ -126,6 +136,7 @@ pub fn qmax(bits: u8) -> f32 {
 /// Outlier pre-processing strategy (paper Table 3a comparators + CFP).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PreprocMethod {
+    /// No outlier pre-processing.
     None,
     /// OMSE-style: per-channel clip minimizing quantization MSE.
     Omse,
@@ -144,6 +155,7 @@ pub enum PreprocMethod {
 }
 
 impl PreprocMethod {
+    /// Short table-row label (matches the paper's Table 3a names).
     pub fn name(&self) -> &'static str {
         match self {
             Self::None => "none",
@@ -170,6 +182,7 @@ pub enum RoundingMode {
 }
 
 impl RoundingMode {
+    /// Stable identifier used in the CBQS snapshot header.
     pub fn name(&self) -> &'static str {
         match self {
             Self::Nearest => "nearest",
@@ -178,6 +191,7 @@ impl RoundingMode {
         }
     }
 
+    /// Inverse of [`Self::name`]; unknown names are an error.
     pub fn from_name(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "nearest" => Self::Nearest,
@@ -203,9 +217,13 @@ pub enum Method {
 /// A full quantization job — everything a bench row needs.
 #[derive(Clone, Debug)]
 pub struct QuantJob {
+    /// Quantization algorithm (RTN / GPTQ / CBQ).
     pub method: Method,
+    /// Weight/activation bit widths (+ per-layer overrides).
     pub bits: BitSpec,
+    /// Outlier pre-processing strategy applied before quantization.
     pub preproc: PreprocMethod,
+    /// Weight rounding strategy (only CBQ learns offsets).
     pub rounding: RoundingMode,
     /// CBD window size (#blocks optimized jointly, Sec. 3.1).
     pub window: usize,
@@ -218,10 +236,15 @@ pub struct QuantJob {
     /// Calibration segments (paper: 128 x 2048 tokens of C4; here 128
     /// batch-rows of the synthetic C4-style corpus).
     pub calib_sequences: usize,
+    /// Learning rate of the per-channel weight step sizes.
     pub lr_s_w: f32,
+    /// Learning rate of the activation clip scalars.
     pub lr_alpha: f32,
+    /// Learning rate of the LoRA-Rounding factors A1/A2.
     pub lr_lora: f32,
+    /// Weight of the L2 reconstruction term in the window loss.
     pub l2_weight: f32,
+    /// Weight of the KLD term in the window loss (Eq. 12).
     pub kld_weight: f32,
     /// gamma in Eq. 13 balancing L_com.
     pub gamma_c: f32,
@@ -270,14 +293,17 @@ impl QuantJob {
         }
     }
 
+    /// Round-to-nearest baseline (no reconstruction, no pre-processing).
     pub fn rtn(bits: BitSpec) -> Self {
         Self { method: Method::Rtn, preproc: PreprocMethod::None, ..Self::cbq(bits) }
     }
 
+    /// GPTQ baseline on captured calibration activations.
     pub fn gptq(bits: BitSpec) -> Self {
         Self { method: Method::Gptq, preproc: PreprocMethod::None, ..Self::cbq(bits) }
     }
 
+    /// Bench-row label, e.g. `CBQ W2A16*`.
     pub fn label(&self) -> String {
         let m = match self.method {
             Method::Rtn => "RTN",

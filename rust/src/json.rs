@@ -3,28 +3,33 @@
 //! closure, so serde_json is hand-rolled; the manifest grammar is plain
 //! JSON with no escapes beyond \" \\ \/ \n \t \r \u.)
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+/// A parsed JSON value (the usual six-variant sum type).
+///
+/// Numbers are uniformly `f64` — the manifest grammar never needs exact
+/// 64-bit integers, and [`dump`] prints integral values without an
+/// exponent so round trips stay readable.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string (escapes already resolved).
     Str(String),
+    /// An ordered array.
     Arr(Vec<Value>),
+    /// An object; keys are sorted (BTreeMap) so [`dump`] is deterministic.
     Obj(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// Member `key` of an object, as an error if absent or not an object.
     pub fn get(&self, key: &str) -> Result<&Value> {
         match self {
             Value::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key `{key}`")),
@@ -32,6 +37,7 @@ impl Value {
         }
     }
 
+    /// Member `key` of an object, `None` if absent (or not an object).
     pub fn opt(&self, key: &str) -> Option<&Value> {
         match self {
             Value::Obj(m) => m.get(key),
@@ -39,6 +45,7 @@ impl Value {
         }
     }
 
+    /// The object's key → value map, or an error for non-objects.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Value>> {
         match self {
             Value::Obj(m) => Ok(m),
@@ -46,6 +53,7 @@ impl Value {
         }
     }
 
+    /// The array's items, or an error for non-arrays.
     pub fn as_arr(&self) -> Result<&[Value]> {
         match self {
             Value::Arr(a) => Ok(a),
@@ -53,6 +61,7 @@ impl Value {
         }
     }
 
+    /// The string's contents, or an error for non-strings.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -60,6 +69,7 @@ impl Value {
         }
     }
 
+    /// The number as `f64`, or an error for non-numbers.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(n) => Ok(*n),
@@ -67,25 +77,30 @@ impl Value {
         }
     }
 
+    /// The number truncated to `usize` (manifest counts and sizes).
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 }
 
+/// Convenience constructors for building documents to [`dump`].
 impl Value {
-    /// Convenience constructors for building documents to [`dump`].
+    /// A number value.
     pub fn num(n: f64) -> Value {
         Value::Num(n)
     }
 
+    /// A string value.
     pub fn str(s: impl Into<String>) -> Value {
         Value::Str(s.into())
     }
 
+    /// An array value.
     pub fn arr(items: Vec<Value>) -> Value {
         Value::Arr(items)
     }
 
+    /// An object value from `(key, value)` pairs (later duplicates win).
     pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
         Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -157,6 +172,12 @@ fn dump_str(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Parse a complete JSON document (trailing garbage is an error).
+///
+/// Supports the full value grammar the repo's documents use: nested
+/// objects/arrays, numbers with exponents, and the `\" \\ \/ \n \t \r \b
+/// \f \uXXXX` string escapes. Surrogate pairs are not combined (`\u`
+/// outside the BMP yields U+FFFD) — nothing in the manifest needs them.
 pub fn parse(s: &str) -> Result<Value> {
     let mut p = Parser { b: s.as_bytes(), i: 0 };
     let v = p.value()?;

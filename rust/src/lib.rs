@@ -78,7 +78,8 @@
 // Public API documentation is enforced (CI denies rustdoc warnings via the
 // `docs` job). Modules whose surface predates the gate opt out locally
 // with `#![allow(missing_docs)]` + a TODO(docs) note; everything in
-// `tensor/`, `snapshot/`, `serve/` and `runtime/` is fully documented.
+// `tensor/`, `snapshot/`, `serve/`, `runtime/`, `json` and `config` is
+// fully documented.
 #![warn(missing_docs)]
 
 pub mod calib;

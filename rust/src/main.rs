@@ -105,6 +105,18 @@ COMMANDS
             --dispatch; reports per-class p50/p95/p99 queue+service
             latency. --verify-determinism replays at a second lane count
             and fails on any divergence
+            generate mode: --generate [--max-new-tokens 8]
+            [--gen-requests 16] [--arrival-rate 256] [--trace-seed 7]
+            [--slots 4] [--queue-cap 0] [--dispatch N] [--real-clock]
+            [--verify-determinism]
+            token generation over the KV-cached decode path (native
+            backend) with continuous batching: requests join and leave the
+            running decode batch per token step, scheduled by the same
+            priority classes + weighted aging as --live. Greedy streams are
+            always checked against a one-request-at-a-time reference;
+            reports per-token p50/p95/p99 latency and decode tokens/s.
+            --verify-determinism additionally replays the trace at a
+            second lane count under the simulated clock
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
 ";
@@ -474,6 +486,209 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
         ]),
     )?;
     Ok(())
+}
+
+/// `cbq serve-bench --generate`: token generation over the KV-cached
+/// decode path with continuous batching — seeded arrival trace, per-token
+/// latency percentiles, decode tokens/s, and an always-on equivalence gate
+/// against the one-request-at-a-time reference.
+fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> {
+    use cbq::serve::clock::{ticks_to_secs, Clock, RealClock, SimClock, TICKS_PER_SEC};
+    use cbq::serve::{synth_gen_trace, GenCfg, GenTraceSpec, GenerateEngine};
+
+    let mode = if args.flag("mmap") { LoadMode::Mmap } else { LoadMode::Eager };
+    let (path, engine) = load_serve_engine(args, art, rt, "generate", mode)?;
+    let cfg = engine.snapshot().meta.cfg.clone();
+    let label = engine.snapshot().meta.label.clone();
+    let gen = GenerateEngine::new(&engine)?;
+
+    let max_new = args.get_usize("max-new-tokens", 8)?;
+    anyhow::ensure!(max_new >= 1, "--max-new-tokens must be >= 1");
+    let n_requests = args.get_usize("gen-requests", 16)?;
+    anyhow::ensure!(n_requests > 0, "--gen-requests must be > 0");
+    let rate = args.get_f32("arrival-rate", 256.0)?;
+    anyhow::ensure!(rate > 0.0, "--arrival-rate must be > 0 requests/s");
+    let seed = args.get_u64("trace-seed", 7)?;
+    let dispatch = args.get_usize("dispatch", 1)?.max(1);
+    let queue_cap = args.get_usize("queue-cap", 0)?;
+    let slots = args.get_usize("slots", 4)?;
+    anyhow::ensure!(slots >= 1, "--slots must be >= 1");
+    let real = args.flag("real-clock");
+
+    let spec = GenTraceSpec {
+        requests: n_requests,
+        mean_gap: (TICKS_PER_SEC as f64 / rate as f64).max(1.0) as u64,
+        seed,
+        vocab: cfg.vocab,
+        max_prompt: (cfg.seq / 2).max(1),
+        max_new_tokens: max_new,
+    };
+    let trace = synth_gen_trace(&spec);
+    let gcfg = GenCfg {
+        max_new_tokens: max_new,
+        slots,
+        queue_cap: if queue_cap == 0 { None } else { Some(queue_cap) },
+        dispatch,
+        ..Default::default()
+    };
+
+    println!(
+        "generate: {} requests @ ~{rate:.0}/s (seed {seed}), up to {max_new} new tokens, \
+         {slots} slots, dispatch {dispatch}, {} clock{}",
+        trace.len(),
+        if real { "real" } else { "simulated" },
+        if args.flag("mmap") { ", mmap-lazy windows" } else { "" },
+    );
+
+    // warm-up: fault in every window once so the timed run measures
+    // steady-state decode, not first-touch materialization
+    gen.decode_reference(&trace[0].request.prompt, 1)?;
+
+    let sim = SimClock::new();
+    let realc = RealClock::new();
+    let clock: &dyn Clock = if real { &realc } else { &sim };
+    let (outcomes, stats) = gen.run(&trace, &gcfg, clock)?;
+
+    // equivalence gate: every completed request's token stream must equal
+    // the one-request-at-a-time greedy reference over the same prompt
+    let mut streams_match = true;
+    for o in outcomes.iter().filter(|o| !o.rejected) {
+        let a = &trace[o.seq];
+        let want = gen.decode_reference(
+            &a.request.prompt,
+            a.request.max_new_tokens.min(gcfg.max_new_tokens),
+        )?;
+        if o.tokens != want {
+            streams_match = false;
+            eprintln!(
+                "request {}: continuous batch decoded {:?}, sequential reference {:?}",
+                o.seq, o.tokens, want
+            );
+        }
+    }
+
+    // optional determinism verification: replay under the simulated clock
+    // at a second lane count; token streams, ticks and the per-step
+    // admission log must come out identical
+    let verified = if args.flag("verify-determinism") {
+        let other = if dispatch == 1 { 4 } else { 1 };
+        let (base_out, base_stats) = if real {
+            let c1 = SimClock::new();
+            gen.run(&trace, &gcfg, &c1)?
+        } else {
+            (outcomes.clone(), stats.clone())
+        };
+        let c2 = SimClock::new();
+        let (out2, stats2) =
+            gen.run(&trace, &GenCfg { dispatch: other, ..gcfg.clone() }, &c2)?;
+        if base_out != out2 || base_stats.steps != stats2.steps {
+            bail!(
+                "deterministic replay FAILED: dispatch {dispatch} vs {other} diverged under \
+                 the simulated clock"
+            );
+        }
+        println!(
+            "deterministic replay verified: dispatch {dispatch} vs {other} identical \
+             (token streams + emission ticks + admission log)"
+        );
+        Some(true)
+    } else {
+        None
+    };
+
+    anyhow::ensure!(
+        stats.steps.iter().all(|s| s.offered == s.admitted + s.rejected),
+        "admission conservation violated (offered != admitted + rejected)"
+    );
+
+    let mut t = Table::new(
+        format!(
+            "generate serve-bench ({} decode steps, {} window dispatches/step)",
+            stats.decode_steps,
+            engine.plan_len()
+        ),
+        &[
+            "requests", "completed", "rejected", "tokens", "tok/s", "peak batch", "tok p50",
+            "tok p95", "tok p99", "wall",
+        ],
+    );
+    t.row(&[
+        stats.requests.to_string(),
+        stats.completed.to_string(),
+        stats.rejected.to_string(),
+        stats.tokens.to_string(),
+        fmt_f(stats.tokens_per_s, 0),
+        format!("{}/{slots}", stats.peak_active),
+        format!("{:.2}ms", ticks_to_secs(stats.tok_p50) * 1e3),
+        format!("{:.2}ms", ticks_to_secs(stats.tok_p95) * 1e3),
+        format!("{:.2}ms", ticks_to_secs(stats.tok_p99) * 1e3),
+        format!("{:.3}s", ticks_to_secs(stats.wall_ticks)),
+    ]);
+    t.print();
+    println!(
+        "token streams identical to sequential reference: {}",
+        if streams_match { "yes" } else { "NO — decode bug" }
+    );
+    if engine.is_lazy() {
+        println!("mmap residency: {}", residency_line(&engine));
+    }
+    if !real {
+        println!(
+            "(simulated clock: per-token latencies are modeled at {} ticks/step and \
+             replay-deterministic; pass --real-clock for wall-time latencies)",
+            gcfg.service_ticks_per_step
+        );
+    }
+    anyhow::ensure!(streams_match, "continuous batching diverged from the sequential reference");
+
+    write_json(
+        args,
+        &Value::obj(vec![
+            ("command", Value::str("serve-bench")),
+            ("mode", Value::str("generate")),
+            ("snapshot", Value::str(path)),
+            ("label", Value::str(label)),
+            ("backend", Value::str(rt.name())),
+            ("generate", generate_stats_json(&stats, seed, max_new, real, verified)),
+            ("residency", residency_json(&engine)),
+        ]),
+    )?;
+    Ok(())
+}
+
+/// The `generate` JSON object shared by the CLI and the bench harness.
+fn generate_stats_json(
+    stats: &cbq::serve::GenStats,
+    seed: u64,
+    max_new: usize,
+    real_clock: bool,
+    verified: Option<bool>,
+) -> Value {
+    use cbq::serve::clock::ticks_to_secs;
+    Value::obj(vec![
+        ("trace_seed", Value::num(seed as f64)),
+        ("max_new_tokens", Value::num(max_new as f64)),
+        ("clock", Value::str(if real_clock { "real" } else { "sim" })),
+        ("requests", Value::num(stats.requests as f64)),
+        ("completed", Value::num(stats.completed as f64)),
+        ("rejected", Value::num(stats.rejected as f64)),
+        ("decode_steps", Value::num(stats.decode_steps as f64)),
+        ("tokens", Value::num(stats.tokens as f64)),
+        ("decode_tokens_per_s", Value::num(stats.tokens_per_s)),
+        ("tok_p50_s", Value::num(ticks_to_secs(stats.tok_p50))),
+        ("tok_p95_s", Value::num(ticks_to_secs(stats.tok_p95))),
+        ("tok_p99_s", Value::num(ticks_to_secs(stats.tok_p99))),
+        ("wall_seconds", Value::num(ticks_to_secs(stats.wall_ticks))),
+        ("dispatch", Value::num(stats.dispatch_lanes as f64)),
+        ("peak_active", Value::num(stats.peak_active as f64)),
+        (
+            "deterministic_replay",
+            match verified {
+                Some(v) => Value::Bool(v),
+                None => Value::Null,
+            },
+        ),
+    ])
 }
 
 /// `--model` with a sensible default: the artifacts' sole config when
@@ -855,6 +1070,9 @@ fn main() -> Result<()> {
         "serve-bench" => {
             if args.flag("live") {
                 return cmd_serve_live(&args, &art, rt);
+            }
+            if args.flag("generate") {
+                return cmd_serve_generate(&args, &art, rt);
             }
             let mmap = args.flag("mmap");
             let mode = if mmap { LoadMode::Mmap } else { LoadMode::Eager };

@@ -880,6 +880,178 @@ impl Attention {
         }
         (dq, dk, dv)
     }
+
+    /// Apply RoPE in place to one `[h*hd]` position at absolute position
+    /// `pos`, per head — the single-position counterpart of [`rope`](Self::rope)
+    /// (same tables, same f32 expressions, so the rotated values are
+    /// bitwise-identical to the full-sequence path).
+    fn rope_one(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.h * self.hd);
+        let half = self.hd / 2;
+        for hh in 0..self.h {
+            for p in 0..half {
+                let c = self.cos[pos * half + p];
+                let sn = self.sin[pos * half + p];
+                let i0 = hh * self.hd + 2 * p;
+                let (x1, x2) = (x[i0], x[i0 + 1]);
+                x[i0] = x1 * c - x2 * sn;
+                x[i0 + 1] = x1 * sn + x2 * c;
+            }
+        }
+    }
+
+    /// Incremental single-position attention against a [`KvCache`]: rotate
+    /// and append this position's key (values are stored raw), then attend
+    /// the rotated query over the cached prefix.
+    ///
+    /// `q`/`k`/`v` are one position of one sequence, `[h*hd]`; the position
+    /// is `cache.len()` (the cache *is* the position counter) and must stay
+    /// below the `seq` this table was built for. The score/softmax/context
+    /// loops replicate [`forward`](Self::forward)'s per-`(sq, sk)` operation
+    /// order exactly — running max over scores in `sk` order, `exp` and sum
+    /// in `sk` order, one `1/sum` multiply, context accumulation in `sk`
+    /// order with the same `p == 0.0` skip — so decode at position `p` is
+    /// bitwise-equal to row `p` of a full prefill over the same prefix.
+    pub fn attend_one(&self, q: &[f32], k: &[f32], v: &[f32], cache: &mut KvCache) -> Vec<f32> {
+        let (h, hd) = (self.h, self.hd);
+        let d = h * hd;
+        assert_eq!(q.len(), d, "attend_one q must be one [h*hd] position");
+        assert_eq!(k.len(), d);
+        assert_eq!(v.len(), d);
+        assert_eq!(cache.h, h, "cache head count mismatch");
+        assert_eq!(cache.hd, hd, "cache head width mismatch");
+        let pos = cache.len();
+        assert!(
+            pos < self.s,
+            "KV cache full: position {pos} but RoPE tables cover seq {}",
+            self.s
+        );
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        let mut q_r = q.to_vec();
+        let mut k_r = k.to_vec();
+        self.rope_one(&mut q_r, pos);
+        self.rope_one(&mut k_r, pos);
+        cache.k_r.extend_from_slice(&k_r);
+        cache.v.extend_from_slice(v);
+        cache.len += 1;
+        let mut out = vec![0.0f32; d];
+        let mut probs = vec![0.0f32; pos + 1];
+        for hh in 0..h {
+            let qrow = &q_r[hh * hd..(hh + 1) * hd];
+            let mut m = f32::NEG_INFINITY;
+            for (sk, pr) in probs.iter_mut().enumerate() {
+                let krow = &cache.k_r[sk * d + hh * hd..sk * d + (hh + 1) * hd];
+                let mut dot = 0.0f32;
+                for (&a, &b) in qrow.iter().zip(krow) {
+                    dot += a * b;
+                }
+                let sc = dot * inv_sqrt;
+                *pr = sc;
+                m = m.max(sc);
+            }
+            let mut sum = 0.0f32;
+            for pr in probs.iter_mut() {
+                let e = (*pr - m).exp();
+                *pr = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for pr in probs.iter_mut() {
+                *pr *= inv;
+            }
+            let crow = &mut out[hh * hd..(hh + 1) * hd];
+            for (sk, &p) in probs.iter().enumerate() {
+                if p == 0.0 {
+                    continue;
+                }
+                let vrow = &cache.v[sk * d + hh * hd..sk * d + (hh + 1) * hd];
+                for (c, &vv) in crow.iter_mut().zip(vrow) {
+                    *c += p * vv;
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// inference KV cache
+// ---------------------------------------------------------------------------
+
+/// Inference-shaped KV cache for one (sequence, block) pair: RoPE-rotated
+/// keys and raw values appended one position at a time, each stored as
+/// `[len, h*hd]` row slabs. Unlike [`HeadCache`] (the backward-pass cache,
+/// which holds probabilities for gradient replay), this holds exactly what
+/// incremental decode re-reads: rotated K (rotation depends only on the
+/// absolute position, so it never needs recomputing) and raw V.
+pub struct KvCache {
+    h: usize,
+    hd: usize,
+    /// rotated keys, `[len, h*hd]`
+    k_r: Vec<f32>,
+    /// raw values, `[len, h*hd]`
+    v: Vec<f32>,
+    /// positions cached so far
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache for a model with `h` heads of width `hd`.
+    pub fn new(h: usize, hd: usize) -> Self {
+        Self { h, hd, k_r: Vec::new(), v: Vec::new(), len: 0 }
+    }
+
+    /// Positions appended so far — also the absolute position the *next*
+    /// [`Attention::attend_one`] call will occupy.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Has nothing been appended yet?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Heap bytes held by the cached K/V slabs.
+    pub fn heap_bytes(&self) -> u64 {
+        4 * (self.k_r.capacity() + self.v.capacity()) as u64
+    }
+}
+
+/// Per-sequence KV state across every transformer block of a model: one
+/// [`KvCache`] per block, all advancing in lockstep as the sequence
+/// decodes. This is the unit `Backend::decode_step` threads through the
+/// pinned window executables (`kv[row].blocks[absolute_block_index]`).
+/// The `Default` value has zero blocks — a placeholder for `mem::take`,
+/// not a usable cache.
+#[derive(Default)]
+pub struct SeqKv {
+    /// One cache per block, indexed by absolute block (layer) number.
+    pub blocks: Vec<KvCache>,
+}
+
+impl SeqKv {
+    /// Fresh caches for an `n_layers`-block model with `h` heads of width
+    /// `hd`.
+    pub fn new(n_layers: usize, h: usize, hd: usize) -> Self {
+        Self { blocks: (0..n_layers).map(|_| KvCache::new(h, hd)).collect() }
+    }
+
+    /// Positions decoded so far (every block advances in lockstep; this
+    /// reads the first).
+    pub fn len(&self) -> usize {
+        self.blocks.first().map_or(0, |c| c.len())
+    }
+
+    /// Has nothing been decoded yet?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Heap bytes across all blocks' cached K/V slabs.
+    pub fn heap_bytes(&self) -> u64 {
+        self.blocks.iter().map(|c| c.heap_bytes()).sum()
+    }
 }
 
 // ---------------------------------------------------------------------------

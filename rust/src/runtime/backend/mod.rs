@@ -32,6 +32,7 @@ use super::manifest::{ExecSpec, Manifest, TensorSpec};
 use super::{Artifacts, Value};
 use crate::tensor::Tensor;
 
+pub use kernels::{KvCache, SeqKv};
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
 
@@ -142,6 +143,28 @@ pub trait Backend: Send + Sync {
         pinned: &Pinned,
         values: &BTreeMap<String, Value>,
     ) -> Result<BTreeMap<String, Tensor>>;
+
+    /// One autoregressive decode step through a pinned `win_fwd_*` window:
+    /// `h` holds one new position per sequence (`[rows, 1, d_model]`),
+    /// `start` is the absolute index of the window's first block, and
+    /// `kv[r].blocks[start + j]` supplies (and is advanced by) the KV cache
+    /// of sequence `r` at window-local block `j`. Returns the transformed
+    /// hidden states, `[rows, 1, d_model]`.
+    ///
+    /// The window executables are fixed-shape `[batch, seq]` graphs, so
+    /// this is a distinct entry point rather than a `run_pinned` shape:
+    /// the native backend interprets the same block semantics with
+    /// incremental attention ([`kernels::Attention::attend_one`]), bitwise-
+    /// equal per position to a full prefill over the same prefix. Backends
+    /// without an incremental path (PJRT executes only the AOT-compiled
+    /// fixed shapes) return a clear unsupported error.
+    fn decode_step(
+        &self,
+        pinned: &Pinned,
+        h: &Tensor,
+        start: usize,
+        kv: &mut [SeqKv],
+    ) -> Result<Tensor>;
 
     /// Cumulative execution statistics (snapshot of interior counters).
     fn stats(&self) -> RuntimeStats;

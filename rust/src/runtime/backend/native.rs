@@ -22,9 +22,9 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::kernels::{self, Attention, HeadCache};
+use super::kernels::{self, Attention, HeadCache, KvCache, SeqKv};
 use super::{check_shape, lock_or_recover, Backend, ExecKind, Pinned, PinnedInner, RuntimeStats};
 use crate::quant::LINEARS;
 use crate::runtime::manifest::{Manifest, ModelCfg};
@@ -367,6 +367,9 @@ impl NativeBackend {
     /// Build an interpreter over the artifacts' manifest (no compilation,
     /// no files beyond the manifest needed).
     pub fn new(artifacts: &Artifacts) -> Result<Self> {
+        // surface a bad CBQ_THREADS here as a clean error instead of a
+        // panic deep inside the first kernel call
+        super::pool::validate_threads().map_err(|e| anyhow!(e))?;
         Ok(Self {
             manifest: artifacts.manifest.clone(),
             stats: Mutex::new(RuntimeStats::default()),
@@ -625,6 +628,38 @@ impl NativeBackend {
         Ok((h_out, cache))
     }
 
+    /// One transformer block applied to a single decoded position of one
+    /// sequence (`h_in` is one `[d]` row), attending over `cache`'s prefix
+    /// via [`Attention::attend_one`]. Everything outside attention is
+    /// per-position arithmetic identical to [`Self::block_fwd`] with
+    /// `rows == 1`, so the output is bitwise-equal to the corresponding
+    /// position of a full prefill.
+    fn block_decode_row(
+        &self,
+        attn: &Attention,
+        h_in: &[f32],
+        blk: &BlockRef,
+        qb: &QBlockRef,
+        glob: &Glob,
+        cache: &mut KvCache,
+    ) -> Vec<f32> {
+        let d = h_in.len();
+        let ul = glob.use_lora;
+        let a = kernels::rmsnorm(h_in, d, &blk.attn_norm.data);
+        let (q_y, _) = qlinear_fwd(&a, 1, blk.lin("wq"), qb.get("wq"), ul, false);
+        let (k_y, _) = qlinear_fwd(&a, 1, blk.lin("wk"), qb.get("wk"), ul, false);
+        let (v_y, _) = qlinear_fwd(&a, 1, blk.lin("wv"), qb.get("wv"), ul, false);
+        let mix = attn.attend_one(&q_y, &k_y, &v_y, cache);
+        let (wo_y, _) = qlinear_fwd(&mix, 1, blk.lin("wo"), qb.get("wo"), ul, false);
+        let h_mid: Vec<f32> = h_in.iter().zip(&wo_y).map(|(&x, &y)| x + y).collect();
+        let m = kernels::rmsnorm(&h_mid, d, &blk.mlp_norm.data);
+        let (gate, _) = qlinear_fwd(&m, 1, blk.lin("wgate"), qb.get("wgate"), ul, false);
+        let (up, _) = qlinear_fwd(&m, 1, blk.lin("wup"), qb.get("wup"), ul, false);
+        let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| kernels::silu(g) * u).collect();
+        let (down_y, _) = qlinear_fwd(&act, 1, blk.lin("wdown"), qb.get("wdown"), ul, false);
+        h_mid.iter().zip(&down_y).map(|(&x, &y)| x + y).collect()
+    }
+
     /// Backward through one block. Returns `(dh_in, per-linear grads)`.
     #[allow(clippy::too_many_arguments)]
     fn block_bwd(
@@ -748,6 +783,83 @@ impl Backend for NativeBackend {
             merged.insert(k.as_str(), v);
         }
         self.execute(&pinned.exec_name, &merged)
+    }
+
+    fn decode_step(
+        &self,
+        pinned: &Pinned,
+        h: &Tensor,
+        start: usize,
+        kv: &mut [SeqKv],
+    ) -> Result<Tensor> {
+        let stat = match &pinned.inner {
+            PinnedInner::Native(m) => m,
+            PinnedInner::Pjrt(_) => bail!(
+                "pinned handle for executable {} belongs to the pjrt backend",
+                pinned.exec_name
+            ),
+        };
+        let (kind, cfg_name) = ExecKind::parse(&pinned.exec_name).ok_or_else(|| {
+            anyhow!("native backend cannot interpret executable name `{}`", pinned.exec_name)
+        })?;
+        let ExecKind::WinFwd { w } = kind else {
+            bail!("decode_step needs a pinned win_fwd_* window, got `{}`", pinned.exec_name)
+        };
+        let cfg = self
+            .manifest
+            .configs
+            .get(cfg_name)
+            .ok_or_else(|| anyhow!("executable {}: unknown config `{cfg_name}`", pinned.exec_name))?;
+        let d = cfg.d_model;
+        ensure!(
+            h.dims.len() == 3 && h.dims[1] == 1 && h.dims[2] == d,
+            "decode_step hidden must be [rows, 1, {d}], got {:?}",
+            h.dims
+        );
+        let rows = h.dims[0];
+        ensure!(rows > 0, "decode_step needs at least one row");
+        ensure!(
+            rows == kv.len(),
+            "decode_step got {rows} hidden rows but {} KV states",
+            kv.len()
+        );
+        ensure!(
+            start + w <= cfg.n_layers,
+            "window [{start}, {}) exceeds the model's {} blocks",
+            start + w,
+            cfg.n_layers
+        );
+        let map: BTreeMap<&str, &Value> = stat.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        let inp = In { map: &map, exec: &pinned.exec_name };
+        let glob = Glob::parse(&inp)?;
+        let attn = self.attention(cfg.batch, cfg.seq, cfg.n_heads, cfg.head_dim);
+        let t0 = std::time::Instant::now();
+        let mut hbuf = h.data.to_vec();
+        for j in 0..w {
+            let blk = BlockRef::parse(&inp, j)?;
+            let qb = QBlockRef::parse(&inp, j, false)?;
+            for (r, seq_kv) in kv.iter_mut().enumerate() {
+                ensure!(
+                    seq_kv.blocks.len() == cfg.n_layers,
+                    "sequence {r}: KV state spans {} blocks, model has {}",
+                    seq_kv.blocks.len(),
+                    cfg.n_layers
+                );
+                let out = self.block_decode_row(
+                    &attn,
+                    &hbuf[r * d..(r + 1) * d],
+                    &blk,
+                    &qb,
+                    &glob,
+                    &mut seq_kv.blocks[start + j],
+                );
+                hbuf[r * d..(r + 1) * d].copy_from_slice(&out);
+            }
+        }
+        let mut s = lock_or_recover(&self.stats);
+        s.executions += 1;
+        s.execute_ms += t0.elapsed().as_secs_f64() * 1e3;
+        Ok(Tensor::new(vec![rows, 1, d], hbuf))
     }
 
     fn stats(&self) -> RuntimeStats {

@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::kernels::SeqKv;
 use super::{check_shape, lock_or_recover as lock, Backend, Pinned, PinnedInner, RuntimeStats};
 use crate::runtime::manifest::{ExecSpec, Manifest};
 use crate::runtime::{Artifacts, Value};
@@ -248,6 +249,22 @@ impl Backend for PjrtBackend {
                 bail!("pinned handle for executable {} belongs to the native backend", pinned.exec_name)
             }
         }
+    }
+
+    fn decode_step(
+        &self,
+        pinned: &Pinned,
+        _h: &Tensor,
+        _start: usize,
+        _kv: &mut [SeqKv],
+    ) -> Result<Tensor> {
+        bail!(
+            "decode_step is not supported on the pjrt backend: the AOT-compiled \
+             executables are fixed-shape [batch, seq] graphs with no incremental \
+             KV-cache entry point — run token generation with `--backend native` \
+             (requested window executable: {})",
+            pinned.exec_name
+        )
     }
 
     fn stats(&self) -> RuntimeStats {

@@ -34,19 +34,57 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 use super::lock_or_recover;
 
+/// Parse a `CBQ_THREADS` value: `None` when unset/blank (use auto-detect),
+/// `Some(n)` for a valid explicit count, `Err` for `0` or garbage. Pure so
+/// the rejection rules are unit-testable without touching the process env.
+fn parse_threads(raw: Option<&str>) -> Result<Option<usize>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    let v = raw.trim();
+    if v.is_empty() {
+        return Ok(None);
+    }
+    match v.parse::<usize>() {
+        Ok(0) => Err(format!(
+            "CBQ_THREADS={raw}: thread count must be at least 1 (unset the \
+             variable to auto-detect from available parallelism)"
+        )),
+        Ok(n) => Ok(Some(n.min(64))),
+        Err(_) => Err(format!(
+            "CBQ_THREADS={raw}: expected a positive integer thread count \
+             (unset the variable to auto-detect from available parallelism)"
+        )),
+    }
+}
+
+/// Validate the `CBQ_THREADS` environment variable without starting the
+/// pool. Backend constructors call this so a bad override fails loudly at
+/// startup with a clear message instead of being silently ignored.
+pub fn validate_threads() -> Result<(), String> {
+    let raw = std::env::var("CBQ_THREADS").ok();
+    parse_threads(raw.as_deref()).map(|_| ())
+}
+
 /// Worker thread count: `CBQ_THREADS` override, else available parallelism
 /// capped at 16 (diminishing returns for the small reproduction models).
 /// Resolved once per process — this sits on the hot path of every kernel,
 /// and both the env var and the core count are fixed for the run.
+///
+/// A set-but-invalid `CBQ_THREADS` (zero or unparseable) panics with the
+/// validation message rather than silently falling back to auto-detect;
+/// call [`validate_threads`] at startup to surface the same error as a
+/// `Result` instead.
 pub fn num_threads() -> usize {
     static THREADS: OnceLock<usize> = OnceLock::new();
     *THREADS.get_or_init(|| {
-        if let Ok(v) = std::env::var("CBQ_THREADS") {
-            if let Ok(n) = v.trim().parse::<usize>() {
-                return n.clamp(1, 64);
-            }
+        let raw = std::env::var("CBQ_THREADS").ok();
+        match parse_threads(raw.as_deref()) {
+            Ok(Some(n)) => n,
+            Ok(None) => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .clamp(1, 16),
+            Err(e) => panic!("{e}"),
         }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
     })
 }
 
@@ -195,6 +233,21 @@ pub fn run_scoped<'scope>(tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn thread_env_parse_accepts_valid_and_rejects_invalid() {
+        assert_eq!(parse_threads(None), Ok(None));
+        assert_eq!(parse_threads(Some("")), Ok(None));
+        assert_eq!(parse_threads(Some("   ")), Ok(None));
+        assert_eq!(parse_threads(Some("1")), Ok(Some(1)));
+        assert_eq!(parse_threads(Some(" 8 ")), Ok(Some(8)));
+        assert_eq!(parse_threads(Some("4096")), Ok(Some(64)), "capped at 64");
+        for bad in ["0", "-2", "two", "1.5", "0x4"] {
+            let err = parse_threads(Some(bad)).expect_err(bad);
+            assert!(err.contains("CBQ_THREADS"), "error names the variable: {err}");
+            assert!(err.contains("auto-detect"), "error explains the fix: {err}");
+        }
+    }
 
     #[test]
     fn runs_every_task_with_borrows() {

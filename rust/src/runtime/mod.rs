@@ -25,8 +25,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 pub use backend::{
-    create as create_backend, create_selected, Backend, BackendKind, NativeBackend, Pinned,
-    PjrtBackend, RuntimeStats,
+    create as create_backend, create_selected, Backend, BackendKind, KvCache, NativeBackend,
+    Pinned, PjrtBackend, RuntimeStats, SeqKv,
 };
 pub use manifest::{ExecSpec, Manifest, ModelCfg, TensorSpec};
 

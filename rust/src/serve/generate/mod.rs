@@ -1,0 +1,651 @@
+//! Token generation: the KV-cached decode path with continuous batching.
+//!
+//! The eval-serving stack ([`super::batcher`], [`super::scheduler`]) scores
+//! *fixed* token rows; this module **generates** tokens autoregressively:
+//!
+//! * [`GenerateEngine`] wraps a [`ServeEngine`] and drives the backend's
+//!   [`Backend::decode_step`] entry point — one new position per sequence
+//!   per step, attending over per-sequence [`SeqKv`] caches instead of
+//!   re-running the full `[batch, seq]` prefill each token. Decode is
+//!   **bitwise-equal** to a full prefill over the same prefix (asserted in
+//!   `rust/tests/generate.rs`): every kernel outside attention is
+//!   per-position, and incremental attention replicates the forward
+//!   pass's exact per-`(sq, sk)` operation order
+//!   ([`Attention::attend_one`](crate::runtime::backend::kernels::Attention::attend_one)).
+//! * [`GenerateEngine::run`] is a **continuous-batching** loop: requests
+//!   join and leave the running decode batch *per token step*, not per
+//!   batch. Admission, priority scoring (the scheduler's class weights +
+//!   weighted aging) and retirement all happen between steps, so a long
+//!   Background generation never blocks a newly arrived Interactive
+//!   request for more than one token's worth of work.
+//! * Determinism inherits the scheduler's recipe: all decisions run on
+//!   integer [`Clock`] ticks, service time is *modeled* under
+//!   [`SimClock`](super::SimClock) (a fixed tick cost per decode step,
+//!   independent of the dispatch lane count), and rows are partitioned
+//!   across lanes without changing any per-row arithmetic — so a seeded
+//!   trace replays to bitwise-identical token streams at any
+//!   `--dispatch` setting.
+//!
+//! Greedy decoding is intentionally the only sampling mode: argmax keeps
+//! the output a pure function of the weights, which is what makes the
+//! replay and batch-vs-sequential equivalence tests meaningful.
+
+use std::mem;
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::clock::{ticks_to_secs, Clock};
+use super::scheduler::{Lcg, Priority};
+use super::ServeEngine;
+use crate::model_state::embed_lookup;
+use crate::runtime::backend::kernels;
+use crate::runtime::{Backend, SeqKv};
+use crate::tensor::{Tensor, TensorI32};
+
+/// One generation request: a prompt to continue and a per-request token
+/// budget (further capped by [`GenCfg::max_new_tokens`] and the model's
+/// sequence length).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenRequest {
+    /// Prompt token ids (must be non-empty and shorter than the model's
+    /// `seq`, else the request is rejected at admission).
+    pub prompt: Vec<i32>,
+    /// Requested number of generated tokens.
+    pub max_new_tokens: usize,
+}
+
+/// One trace entry: `request` becomes visible `at` ticks after the run
+/// starts, with priority `class`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenArrival {
+    /// Arrival tick (offset from run start).
+    pub at: u64,
+    /// Priority class (reuses the scheduler's classes and weights).
+    pub class: Priority,
+    /// The generation request.
+    pub request: GenRequest,
+}
+
+/// Continuous-batching knobs for [`GenerateEngine::run`].
+#[derive(Clone, Debug)]
+pub struct GenCfg {
+    /// Engine-wide cap on generated tokens per request (the CLI's
+    /// `--max-new-tokens`).
+    pub max_new_tokens: usize,
+    /// Maximum sequences decoding concurrently (the batch the decode step
+    /// sees; unlike the prefill executables this is not shape-fixed).
+    pub slots: usize,
+    /// Maximum requests waiting for a slot; arrivals beyond it are
+    /// rejected (`None` = unbounded, nothing is ever rejected for load).
+    pub queue_cap: Option<usize>,
+    /// Decode dispatch lanes: active rows are partitioned into this many
+    /// contiguous chunks stepped concurrently. Affects wall time only,
+    /// never results or scheduling decisions.
+    pub dispatch: usize,
+    /// Priority-class base weights, [`Priority::ALL`] order.
+    pub weights: [u64; 3],
+    /// Score gained per tick of queue age (starvation protection).
+    pub aging: u64,
+    /// Modeled simulated-clock cost of one decode step (ignored under a
+    /// real clock). Lane-count independent by design.
+    pub service_ticks_per_step: u64,
+}
+
+impl Default for GenCfg {
+    fn default() -> Self {
+        Self {
+            max_new_tokens: 64,
+            slots: 4,
+            queue_cap: None,
+            dispatch: 1,
+            weights: [300_000, 200_000, 100_000],
+            aging: 1,
+            service_ticks_per_step: 1_000,
+        }
+    }
+}
+
+/// Per-step admission accounting: every arrival drained in a step is
+/// either admitted to the queue or rejected, never dropped silently —
+/// `offered == admitted + rejected` holds for every entry (asserted in
+/// `rust/tests/generate.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepCount {
+    /// Arrivals that became due during this step.
+    pub offered: usize,
+    /// Of those, admitted to the pending queue.
+    pub admitted: usize,
+    /// Of those, rejected (queue over capacity, or the request cannot
+    /// generate: empty prompt, prompt filling the whole context, or a
+    /// zero token budget).
+    pub rejected: usize,
+}
+
+/// Terminal record of one request: the generated tokens with their
+/// emission ticks, or a rejection marker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GenOutcome {
+    /// Index of the arrival in the submitted trace.
+    pub seq: usize,
+    /// Priority class.
+    pub class: Priority,
+    /// Arrival tick.
+    pub arrival: u64,
+    /// Tick the request left the queue for a decode slot (for rejected
+    /// requests: the tick of rejection).
+    pub admitted: u64,
+    /// Greedy-decoded tokens, in emission order.
+    pub tokens: Vec<i32>,
+    /// Emission tick of each token in `tokens`.
+    pub token_ticks: Vec<u64>,
+    /// Tick the request completed (or was rejected).
+    pub finish: u64,
+    /// Was the request rejected at admission?
+    pub rejected: bool,
+}
+
+/// Aggregate statistics of one [`GenerateEngine::run`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GenStats {
+    /// Requests offered by the trace.
+    pub requests: u64,
+    /// Requests that completed with a token stream.
+    pub completed: u64,
+    /// Requests rejected at admission.
+    pub rejected: u64,
+    /// Decode steps executed (each advances every active sequence by one
+    /// position).
+    pub decode_steps: u64,
+    /// Tokens emitted across all requests.
+    pub tokens: u64,
+    /// Clock ticks from run start to the last completion.
+    pub wall_ticks: u64,
+    /// Per-token latency percentiles, in ticks: a token's latency is the
+    /// gap since the previous emission of the same request (for the first
+    /// token: since arrival).
+    pub tok_p50: u64,
+    /// 95th percentile per-token latency (ticks).
+    pub tok_p95: u64,
+    /// 99th percentile per-token latency (ticks).
+    pub tok_p99: u64,
+    /// Decode throughput: emitted tokens per wall second (modeled seconds
+    /// under a simulated clock).
+    pub tokens_per_s: f64,
+    /// Dispatch lanes the run used (reporting only — results are
+    /// lane-count independent).
+    pub dispatch_lanes: usize,
+    /// Most sequences ever decoding concurrently.
+    pub peak_active: usize,
+    /// Per-step admission conservation log.
+    pub steps: Vec<StepCount>,
+}
+
+/// Trace-generation parameters for [`synth_gen_trace`].
+#[derive(Clone, Debug)]
+pub struct GenTraceSpec {
+    /// Number of arrivals.
+    pub requests: usize,
+    /// Mean inter-arrival gap in ticks (actual gaps are
+    /// `1 + uniform[0, 2*mean)`).
+    pub mean_gap: u64,
+    /// RNG seed; equal seeds yield equal traces.
+    pub seed: u64,
+    /// Vocabulary size to draw prompt tokens from.
+    pub vocab: usize,
+    /// Maximum prompt length (uniform in `1..=max_prompt`).
+    pub max_prompt: usize,
+    /// Maximum per-request token budget (uniform in
+    /// `1..=max_new_tokens`).
+    pub max_new_tokens: usize,
+}
+
+/// Deterministic synthetic generation trace: seeded arrivals with mixed
+/// priority classes (the scheduler's 50/30/20 split), random prompts and
+/// token budgets. Equal specs produce equal traces on every platform.
+pub fn synth_gen_trace(spec: &GenTraceSpec) -> Vec<GenArrival> {
+    let mut rng = Lcg::new(spec.seed);
+    let mut at = 0u64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for _ in 0..spec.requests {
+        at += 1 + rng.below(2 * spec.mean_gap.max(1));
+        let class = match rng.below(10) {
+            0..=4 => Priority::Interactive,
+            5..=7 => Priority::Batch,
+            _ => Priority::Background,
+        };
+        let plen = 1 + rng.below(spec.max_prompt.max(1) as u64) as usize;
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.below(spec.vocab.max(1) as u64) as i32).collect();
+        let max_new_tokens = 1 + rng.below(spec.max_new_tokens.max(1) as u64) as usize;
+        out.push(GenArrival { at, class, request: GenRequest { prompt, max_new_tokens } });
+    }
+    out
+}
+
+/// Greedy token choice: the lowest-index maximum of `logits` (strict
+/// comparison, so ties break toward the smaller token id — deterministic
+/// on every platform).
+pub fn greedy_pick(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// A request waiting for a decode slot.
+struct Pend {
+    seq: usize,
+    class: Priority,
+    at: u64,
+    limit: usize,
+}
+
+/// A sequence occupying a decode slot.
+struct Active {
+    seq: usize,
+    class: Priority,
+    arrival: u64,
+    admitted: u64,
+    prompt: Vec<i32>,
+    /// Tokens fed to the model so far (prefix positions consumed).
+    consumed: usize,
+    generated: Vec<i32>,
+    token_ticks: Vec<u64>,
+    limit: usize,
+    kv: SeqKv,
+}
+
+impl Active {
+    /// The token this sequence feeds at its next decode position.
+    fn next_token(&self) -> i32 {
+        if self.consumed < self.prompt.len() {
+            self.prompt[self.consumed]
+        } else {
+            self.generated[self.consumed - self.prompt.len()]
+        }
+    }
+}
+
+/// Token-generation engine over a bound [`ServeEngine`]: runs the pinned
+/// window plan position-by-position via [`Backend::decode_step`] and
+/// greedy-decodes from the snapshot's LM head.
+///
+/// Requires a backend with an incremental decode path (the native
+/// interpreter); on PJRT the first decode step returns its unsupported
+/// error.
+pub struct GenerateEngine<'a, 'rt> {
+    eng: &'a ServeEngine<'rt>,
+    final_norm: Tensor,
+    head: Tensor,
+}
+
+impl<'a, 'rt> GenerateEngine<'a, 'rt> {
+    /// Wrap `eng`, materializing the final-norm and LM-head tensors the
+    /// logit computation needs (zero-copy under `--mmap`).
+    pub fn new(eng: &'a ServeEngine<'rt>) -> Result<Self> {
+        let final_norm = eng.snap.model.final_norm()?;
+        let head = eng.snap.model.head()?;
+        Ok(Self { eng, final_norm, head })
+    }
+
+    fn cfg(&self) -> &crate::runtime::ModelCfg {
+        &self.eng.snap.meta.cfg
+    }
+
+    /// LM logits for one hidden row: final RMS-norm then the head matmul.
+    /// Both the decode path and the prefill reference go through this one
+    /// function, so logit equality reduces to hidden-state equality.
+    fn logits_row(&self, h: &[f32]) -> Vec<f32> {
+        let d = h.len();
+        let normed = kernels::rmsnorm(h, d, &self.final_norm.data);
+        kernels::matmul(&normed, 1, d, &self.head.data, self.head.cols())
+    }
+
+    /// Advance every row one position through the full pinned window plan,
+    /// partitioned into `lanes` contiguous row chunks stepped concurrently.
+    /// Each row's arithmetic is independent of the batch around it, so the
+    /// result is bitwise-identical for every lane count.
+    fn step_batch(&self, toks: &[i32], kvs: &mut [SeqKv], lanes: usize) -> Result<Vec<f32>> {
+        let d = self.cfg().d_model;
+        let rows = toks.len();
+        ensure!(rows == kvs.len(), "{rows} tokens but {} KV states", kvs.len());
+        let h_all = embed_lookup(&self.eng.embed, toks, rows, 1);
+        let lanes = lanes.max(1).min(rows);
+        let run_chunk = |h_chunk: &[f32], kv_chunk: &mut [SeqKv]| -> Result<Vec<f32>> {
+            let r = kv_chunk.len();
+            let mut h = Tensor::new(vec![r, 1, d], h_chunk.to_vec());
+            for (i, (start, _, _)) in self.eng.plan.iter().enumerate() {
+                let pinned = self.eng.step_pinned(i)?;
+                h = self.eng.rt.decode_step(&pinned, &h, *start, kv_chunk)?;
+            }
+            Ok(h.data.to_vec())
+        };
+        if lanes == 1 {
+            return run_chunk(&h_all.data, kvs);
+        }
+        let chunk = rows.div_ceil(lanes);
+        let mut out = vec![0.0f32; rows * d];
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for ((h_c, o_c), kv_c) in h_all
+                .data
+                .chunks(chunk * d)
+                .zip(out.chunks_mut(chunk * d))
+                .zip(kvs.chunks_mut(chunk))
+            {
+                let run_chunk = &run_chunk;
+                handles.push(s.spawn(move || -> Result<()> {
+                    o_c.copy_from_slice(&run_chunk(h_c, kv_c)?);
+                    Ok(())
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("decode lane panicked"))))
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(out)
+    }
+
+    /// Greedy-decode one request sequentially (batch of one, no
+    /// scheduling): the reference the continuous-batching loop is tested
+    /// against. Returns the generated tokens.
+    pub fn decode_reference(&self, prompt: &[i32], max_new_tokens: usize) -> Result<Vec<i32>> {
+        Ok(self.decode_trace(prompt, max_new_tokens)?.0)
+    }
+
+    /// Like [`decode_reference`](Self::decode_reference), but also returns
+    /// the logit vector behind each emitted token — the hook the
+    /// bitwise-vs-prefill test compares against
+    /// [`prefill_logits`](Self::prefill_logits).
+    pub fn decode_trace(
+        &self,
+        prompt: &[i32],
+        max_new_tokens: usize,
+    ) -> Result<(Vec<i32>, Vec<Vec<f32>>)> {
+        let cfg = self.cfg();
+        ensure!(!prompt.is_empty(), "cannot decode from an empty prompt");
+        let d = cfg.d_model;
+        let limit = max_new_tokens.min(cfg.seq.saturating_sub(prompt.len()));
+        let mut kvs = vec![SeqKv::new(cfg.n_layers, cfg.n_heads, cfg.head_dim)];
+        let mut tokens = Vec::with_capacity(limit);
+        let mut logits_log = Vec::with_capacity(limit);
+        let mut fed = 0usize;
+        while tokens.len() < limit {
+            let tok =
+                if fed < prompt.len() { prompt[fed] } else { tokens[fed - prompt.len()] };
+            let h = self.step_batch(&[tok], &mut kvs, 1)?;
+            fed += 1;
+            if fed >= prompt.len() {
+                let logits = self.logits_row(&h[..d]);
+                tokens.push(greedy_pick(&logits));
+                logits_log.push(logits);
+            }
+        }
+        Ok((tokens, logits_log))
+    }
+
+    /// Reference logits from a **full prefill** over `prefix`: pad to the
+    /// fixed `[batch, seq]` shape, run the prefill executables, and read
+    /// the hidden state at the prefix's last position (causal attention
+    /// makes the padding invisible to it). The decode path must match
+    /// this bitwise at every step.
+    pub fn prefill_logits(&self, prefix: &[i32]) -> Result<Vec<f32>> {
+        let cfg = self.cfg();
+        ensure!(
+            !prefix.is_empty() && prefix.len() <= cfg.seq,
+            "prefill prefix must be 1..={} tokens, got {}",
+            cfg.seq,
+            prefix.len()
+        );
+        let mut toks = vec![0i32; cfg.batch * cfg.seq];
+        toks[..prefix.len()].copy_from_slice(prefix);
+        let h = self.eng.forward_hidden(&TensorI32::new(vec![cfg.batch, cfg.seq], toks))?;
+        let d = cfg.d_model;
+        let off = (prefix.len() - 1) * d;
+        Ok(self.logits_row(&h.data[off..off + d]))
+    }
+
+    /// Effective token budget of `a`: the per-request ask, capped by the
+    /// engine-wide limit and the context room left after the prompt. Zero
+    /// means the request cannot generate and is rejected at admission.
+    fn gen_limit(&self, a: &GenArrival, cfg: &GenCfg) -> usize {
+        if a.request.prompt.is_empty() {
+            return 0;
+        }
+        a.request
+            .max_new_tokens
+            .min(cfg.max_new_tokens)
+            .min(self.cfg().seq.saturating_sub(a.request.prompt.len()))
+    }
+
+    /// Run a trace through the continuous-batching decode loop.
+    ///
+    /// Per step: (1) drain due arrivals — each is admitted to the pending
+    /// queue or rejected (capacity / non-viable request), recorded in
+    /// [`GenStats::steps`]; (2) promote the highest-scoring pending
+    /// requests (class weight + aging, ties by arrival order) into free
+    /// decode slots; (3) advance every active sequence one position via
+    /// [`Backend::decode_step`], chunked across `cfg.dispatch` lanes;
+    /// (4) emit a greedy token for every sequence past its prompt and
+    /// retire finished ones. Under a simulated clock each step costs
+    /// exactly `cfg.service_ticks_per_step` ticks regardless of lane
+    /// count, so replays are bitwise-identical for any `dispatch`.
+    ///
+    /// Returns the outcomes sorted by trace index plus aggregate stats.
+    pub fn run(
+        &self,
+        arrivals: &[GenArrival],
+        cfg: &GenCfg,
+        clock: &dyn Clock,
+    ) -> Result<(Vec<GenOutcome>, GenStats)> {
+        ensure!(cfg.slots >= 1, "continuous batching needs at least one decode slot");
+        let d = self.cfg().d_model;
+        // stable arrival order: by tick, ties by trace index
+        let mut order: Vec<usize> = (0..arrivals.len()).collect();
+        order.sort_by_key(|&i| (arrivals[i].at, i));
+        let mut next_arr = 0usize;
+        let mut pending: Vec<Pend> = Vec::new();
+        let mut active: Vec<Active> = Vec::new();
+        let mut outcomes: Vec<GenOutcome> = Vec::new();
+        let mut stats = GenStats {
+            requests: arrivals.len() as u64,
+            dispatch_lanes: cfg.dispatch.max(1),
+            ..GenStats::default()
+        };
+        loop {
+            if next_arr == order.len() && pending.is_empty() && active.is_empty() {
+                break;
+            }
+            let mut now = clock.now();
+            if active.is_empty() && pending.is_empty() {
+                // idle: jump to the next arrival
+                let at = arrivals[order[next_arr]].at;
+                if at > now {
+                    clock.wait_until(at);
+                    now = clock.now().max(at);
+                }
+            }
+            // 1) admission: every due arrival is admitted or rejected now
+            let mut step = StepCount::default();
+            while next_arr < order.len() && arrivals[order[next_arr]].at <= now {
+                let idx = order[next_arr];
+                next_arr += 1;
+                let a = &arrivals[idx];
+                step.offered += 1;
+                let limit = self.gen_limit(a, cfg);
+                let over_cap = cfg.queue_cap.is_some_and(|cap| pending.len() >= cap);
+                if limit == 0 || over_cap {
+                    step.rejected += 1;
+                    outcomes.push(GenOutcome {
+                        seq: idx,
+                        class: a.class,
+                        arrival: a.at,
+                        admitted: now,
+                        tokens: Vec::new(),
+                        token_ticks: Vec::new(),
+                        finish: now,
+                        rejected: true,
+                    });
+                } else {
+                    step.admitted += 1;
+                    pending.push(Pend { seq: idx, class: a.class, at: a.at, limit });
+                }
+            }
+            stats.steps.push(step);
+            // 2) promotion: highest score first, ties by trace index
+            let free = cfg.slots.saturating_sub(active.len());
+            if free > 0 && !pending.is_empty() {
+                let score = |p: &Pend| {
+                    cfg.weights[p.class.index()]
+                        .saturating_add(cfg.aging.saturating_mul(now.saturating_sub(p.at)))
+                };
+                pending.sort_by(|x, y| score(y).cmp(&score(x)).then(x.seq.cmp(&y.seq)));
+                for p in pending.drain(..free.min(pending.len())) {
+                    let prompt = arrivals[p.seq].request.prompt.clone();
+                    let mc = self.cfg();
+                    active.push(Active {
+                        seq: p.seq,
+                        class: p.class,
+                        arrival: p.at,
+                        admitted: now,
+                        prompt,
+                        consumed: 0,
+                        generated: Vec::new(),
+                        token_ticks: Vec::new(),
+                        limit: p.limit,
+                        kv: SeqKv::new(mc.n_layers, mc.n_heads, mc.head_dim),
+                    });
+                }
+            }
+            stats.peak_active = stats.peak_active.max(active.len());
+            if active.is_empty() {
+                continue;
+            }
+            // 3) one decode position for every active sequence
+            let toks: Vec<i32> = active.iter().map(Active::next_token).collect();
+            let mut kvs: Vec<SeqKv> =
+                active.iter_mut().map(|a| mem::take(&mut a.kv)).collect();
+            let hidden = self.step_batch(&toks, &mut kvs, cfg.dispatch)?;
+            for (a, kv) in active.iter_mut().zip(kvs) {
+                a.kv = kv;
+            }
+            stats.decode_steps += 1;
+            let done = if clock.is_simulated() {
+                let dn = now + cfg.service_ticks_per_step.max(1);
+                clock.wait_until(dn);
+                dn
+            } else {
+                clock.now()
+            };
+            // 4) emit + retire
+            let drained = mem::take(&mut active);
+            for (r, mut a) in drained.into_iter().enumerate() {
+                a.consumed += 1;
+                if a.consumed >= a.prompt.len() {
+                    let logits = self.logits_row(&hidden[r * d..(r + 1) * d]);
+                    a.generated.push(greedy_pick(&logits));
+                    a.token_ticks.push(done);
+                    stats.tokens += 1;
+                }
+                if a.generated.len() >= a.limit {
+                    stats.completed += 1;
+                    outcomes.push(GenOutcome {
+                        seq: a.seq,
+                        class: a.class,
+                        arrival: a.arrival,
+                        admitted: a.admitted,
+                        tokens: a.generated,
+                        token_ticks: a.token_ticks,
+                        finish: done,
+                        rejected: false,
+                    });
+                } else {
+                    active.push(a);
+                }
+            }
+        }
+        stats.rejected = outcomes.iter().filter(|o| o.rejected).count() as u64;
+        stats.wall_ticks = clock.now();
+        let mut lats: Vec<u64> = Vec::with_capacity(stats.tokens as usize);
+        for o in &outcomes {
+            let mut prev = o.arrival;
+            for &t in &o.token_ticks {
+                lats.push(t.saturating_sub(prev));
+                prev = t;
+            }
+        }
+        lats.sort_unstable();
+        stats.tok_p50 = percentile(&lats, 0.50);
+        stats.tok_p95 = percentile(&lats, 0.95);
+        stats.tok_p99 = percentile(&lats, 0.99);
+        let secs = ticks_to_secs(stats.wall_ticks);
+        stats.tokens_per_s = if secs > 0.0 { stats.tokens as f64 / secs } else { 0.0 };
+        outcomes.sort_by_key(|o| o.seq);
+        Ok((outcomes, stats))
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (`0` when
+/// empty) — the scheduler's definition, kept identical so generate and
+/// live-serve latency figures are comparable.
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_pick_is_lowest_index_argmax() {
+        assert_eq!(greedy_pick(&[0.1, 0.9, 0.9, 0.2]), 1);
+        assert_eq!(greedy_pick(&[3.0]), 0);
+        assert_eq!(greedy_pick(&[-1.0, -2.0, -1.0]), 0);
+    }
+
+    #[test]
+    fn synth_gen_trace_is_seed_deterministic_and_bounded() {
+        let spec = GenTraceSpec {
+            requests: 40,
+            mean_gap: 500,
+            seed: 7,
+            vocab: 31,
+            max_prompt: 5,
+            max_new_tokens: 6,
+        };
+        let a = synth_gen_trace(&spec);
+        let b = synth_gen_trace(&spec);
+        assert_eq!(a, b, "equal seeds must replay equal traces");
+        assert_eq!(a.len(), 40);
+        let mut prev = 0u64;
+        for arr in &a {
+            assert!(arr.at > prev, "arrivals strictly increase");
+            prev = arr.at;
+            assert!((1..=5).contains(&arr.request.prompt.len()));
+            assert!((1..=6).contains(&arr.request.max_new_tokens));
+            assert!(arr.request.prompt.iter().all(|&t| (0..31).contains(&t)));
+        }
+        let c = synth_gen_trace(&GenTraceSpec { seed: 8, ..spec });
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn percentile_matches_scheduler_definition() {
+        let v = [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.95), 100);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        assert_eq!(percentile(&[], 0.99), 0);
+    }
+}

@@ -43,6 +43,7 @@
 
 pub mod batcher;
 pub mod clock;
+pub mod generate;
 pub mod registry;
 pub mod scheduler;
 
@@ -62,6 +63,10 @@ pub use batcher::{
     Batcher, ClassLat, Request, RequestKind, Response, RowExecutor, RowOut, ServeStats, WorkRow,
 };
 pub use clock::{Clock, RealClock, SimClock, TICKS_PER_SEC};
+pub use generate::{
+    synth_gen_trace, GenArrival, GenCfg, GenOutcome, GenRequest, GenStats, GenTraceSpec,
+    GenerateEngine,
+};
 pub use registry::{LoadMode, LoadedSnapshot, ModelRegistry};
 pub use scheduler::{
     synth_trace, Arrival, Decision, Lcg, LiveOutcome, Priority, Scheduler, SchedulerCfg, TraceSpec,
@@ -131,6 +136,11 @@ struct LazyWindow {
     pinned: Arc<Pinned>,
     bytes: u64,
     last_use: u64,
+    /// File span of the window's packed records inside the snapshot
+    /// mapping `(map, offset, len)` — eviction hints `MADV_DONTNEED` over
+    /// it so the kernel can reclaim the cold file pages too, not just the
+    /// unpacked heap tensors. `None` when the source isn't a real mapping.
+    span: Option<(Arc<mmap::Mmap>, usize, usize)>,
 }
 
 /// LRU state + counters for lazy pinning. Faults are serialized under this
@@ -187,6 +197,12 @@ fn evict_idle(
         let w = c.entries.remove(&k).expect("victim key just observed");
         c.resident_bytes -= w.bytes;
         c.evictions += 1;
+        // best-effort page hint: the evicted window's file pages are cold
+        // now (a re-fault re-reads them from the file — MAP_PRIVATE
+        // read-only pages are always clean, so this never loses data)
+        if let Some((map, off, len)) = &w.span {
+            let _ = map.advise_range(mmap::Advice::DontNeed, *off, *len);
+        }
     }
 }
 
@@ -279,11 +295,19 @@ impl<'rt> ServeEngine<'rt> {
                 }
                 Steps::Eager(pins)
             }
-            SnapshotModel::Lazy(_) => Steps::Lazy {
-                cache: Mutex::new(WindowCache::default()),
-                max_windows: opts.resident_windows.unwrap_or(usize::MAX).max(1),
-                max_bytes: opts.resident_bytes,
-            },
+            SnapshotModel::Lazy(lazy) => {
+                // warmup hint: the first pass over the plan faults windows
+                // in file order, so tell the kernel to read ahead
+                // aggressively (best-effort; a failed hint changes nothing)
+                if let Some(map) = lazy.container().source.mapped() {
+                    let _ = map.advise(mmap::Advice::Sequential);
+                }
+                Steps::Lazy {
+                    cache: Mutex::new(WindowCache::default()),
+                    max_windows: opts.resident_windows.unwrap_or(usize::MAX).max(1),
+                    max_bytes: opts.resident_bytes,
+                }
+            }
         };
 
         Ok(Self { rt, snap, plan, steps, embed, lm_pinned })
@@ -341,6 +365,25 @@ impl<'rt> ServeEngine<'rt> {
         let pinned = self.rt.pin(exec, b.inner())?;
         let bytes = pinned.host_resident_bytes();
         Ok((pinned, bytes))
+    }
+
+    /// File span `(map, offset, len)` covering every `blocks.{j}.*` record
+    /// of plan window `i` inside the snapshot mapping, for the eviction-
+    /// time `MADV_DONTNEED` hint. `None` unless the snapshot source is a
+    /// real memory mapping.
+    fn window_file_span(&self, i: usize) -> Option<(Arc<mmap::Mmap>, usize, usize)> {
+        let lazy = self.snap.model.lazy()?;
+        let map = lazy.container().source.mapped()?.clone();
+        let (start, w, _) = &self.plan[i];
+        let (mut lo, mut hi) = (u64::MAX, 0u64);
+        for j in *start..*start + *w {
+            let prefix = format!("blocks.{j}.");
+            for r in lazy.container().records.iter().filter(|r| r.name.starts_with(&prefix)) {
+                lo = lo.min(r.offset);
+                hi = hi.max(r.offset + r.len);
+            }
+        }
+        (lo < hi).then(|| (map, lo as usize, (hi - lo) as usize))
     }
 
     /// Estimated heap bytes of window `i` once pinned (used to make room
@@ -428,7 +471,11 @@ impl<'rt> ServeEngine<'rt> {
                     return Ok(win.pinned.clone());
                 }
                 c.resident_bytes += bytes;
-                c.entries.insert(i, LazyWindow { pinned: pinned.clone(), bytes, last_use: tick });
+                let span = self.window_file_span(i);
+                c.entries.insert(
+                    i,
+                    LazyWindow { pinned: pinned.clone(), bytes, last_use: tick, span },
+                );
                 c.peak_bytes = c.peak_bytes.max(c.resident_bytes);
                 c.peak_windows = c.peak_windows.max(c.entries.len());
                 // room reserved before unlocking may have been taken by a

@@ -1,0 +1,239 @@
+//! Token-generation subsystem tests: KV-cached decode correctness and
+//! continuous-batching determinism.
+//!
+//! * **Bitwise decode**: every logit vector the incremental KV-cached
+//!   decode path emits equals a full prefill recomputation over the same
+//!   prefix, exactly — no tolerance.
+//! * **Batch == sequential**: the continuous-batching loop's token streams
+//!   equal the one-request-at-a-time greedy reference.
+//! * **Replay determinism**: a seeded trace under the simulated clock
+//!   replays to identical outcomes (tokens, emission ticks, admission
+//!   log) across repeat runs and across dispatch lane counts {1, 2, 4}.
+//! * **Conservation**: per decode step, every offered arrival is admitted
+//!   or rejected — never both, never dropped.
+//!
+//! Host-only: `cbq synth` artifacts + the native CPU backend, 4 layers so
+//! the greedy covering yields a 2-window plan and decode crosses a window
+//! boundary every step.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use cbq::config::{BitSpec, QuantJob};
+use cbq::coordinator::Pipeline;
+use cbq::runtime::{synth, Artifacts, NativeBackend};
+use cbq::serve::{
+    synth_gen_trace, GenCfg, GenTraceSpec, GenerateEngine, LoadMode, ModelRegistry, ServeEngine,
+    SimClock,
+};
+use cbq::snapshot;
+
+fn artifacts_dir() -> &'static PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("cbq_synth_gen_{}", std::process::id()));
+        let mut spec = synth::SynthSpec::tiny();
+        // 4 layers + the tiny window set {1, 2} => a 2-step serve plan, so
+        // every decode step crosses a window boundary
+        spec.n_layers = 4;
+        spec.pretrain_steps = 40;
+        synth::generate(&dir, &spec).expect("synthetic artifact generation");
+        dir
+    })
+}
+
+fn setup() -> (Artifacts, NativeBackend) {
+    let art = Artifacts::load(artifacts_dir()).expect("loading artifacts");
+    let rt = NativeBackend::new(&art).expect("native backend");
+    (art, rt)
+}
+
+/// Quantize (fast RTN path), export, and load an eager serve engine.
+fn engine<'rt>(art: &'rt Artifacts, rt: &'rt NativeBackend, tag: &str) -> ServeEngine<'rt> {
+    let p = std::env::temp_dir().join(format!("cbq_gen_{}_{tag}.cbqs", std::process::id()));
+    let m = art.default_model().to_string();
+    let mut pipe = Pipeline::new(art, rt, &m).unwrap();
+    let mut job = QuantJob::rtn(BitSpec::new(4, 16));
+    job.calib_sequences = 4;
+    let (qm, _) = pipe.run(&job).unwrap();
+    snapshot::save(&p, &pipe.cfg, &qm).unwrap();
+    let mut reg = ModelRegistry::new();
+    let snap = reg.load_with(tag, &p, LoadMode::Eager).unwrap();
+    std::fs::remove_file(&p).ok();
+    ServeEngine::new(rt, art, snap).unwrap()
+}
+
+fn trace_spec(cfg: &cbq::runtime::ModelCfg, requests: usize, seed: u64) -> GenTraceSpec {
+    GenTraceSpec {
+        requests,
+        mean_gap: 500,
+        seed,
+        vocab: cfg.vocab,
+        max_prompt: (cfg.seq / 2).max(1),
+        max_new_tokens: 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bitwise: incremental KV-cached decode == full prefill, per step
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kv_cached_decode_logits_equal_full_prefill_bitwise() {
+    let (art, rt) = setup();
+    let eng = engine(&art, &rt, "bitwise");
+    let cfg = eng.snapshot().meta.cfg.clone();
+    let gen = GenerateEngine::new(&eng).unwrap();
+
+    // a prompt long enough to exercise multi-position prefill, short
+    // enough to leave decode room
+    let plen = (cfg.seq / 2).max(1);
+    let prompt: Vec<i32> = (0..plen).map(|i| (i * 7 + 3) as i32 % cfg.vocab as i32).collect();
+    let max_new = cfg.seq - plen;
+    let (tokens, logits_log) = gen.decode_trace(&prompt, max_new).unwrap();
+    assert_eq!(tokens.len(), max_new, "decode must fill the remaining context");
+    assert_eq!(logits_log.len(), tokens.len());
+
+    // each emission's logits must equal a *full prefill* recomputation
+    // over exactly the prefix consumed so far — bitwise, no tolerance
+    for (k, logits) in logits_log.iter().enumerate() {
+        let mut prefix = prompt.clone();
+        prefix.extend_from_slice(&tokens[..k]);
+        let reference = gen.prefill_logits(&prefix).unwrap();
+        assert_eq!(
+            logits, &reference,
+            "decode step {k} (prefix len {}) diverged from full prefill",
+            prefix.len()
+        );
+    }
+
+    // greedy argmax consistency: the logged logits really produced the
+    // emitted tokens
+    for (k, logits) in logits_log.iter().enumerate() {
+        let best = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0;
+        assert_eq!(tokens[k], best as i32, "emission {k} is not the argmax");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// continuous batching == one-request-at-a-time reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn continuous_batching_streams_equal_sequential_reference() {
+    let (art, rt) = setup();
+    let eng = engine(&art, &rt, "batchref");
+    let cfg = eng.snapshot().meta.cfg.clone();
+    let gen = GenerateEngine::new(&eng).unwrap();
+
+    let trace = synth_gen_trace(&trace_spec(&cfg, 10, 11));
+    let gcfg = GenCfg { max_new_tokens: 4, slots: 3, ..Default::default() };
+    let clock = SimClock::new();
+    let (outcomes, stats) = gen.run(&trace, &gcfg, &clock).unwrap();
+
+    assert_eq!(outcomes.len(), trace.len(), "every request gets exactly one outcome");
+    assert!(stats.tokens > 0, "trace must generate tokens");
+    assert!(stats.peak_active > 1, "trace must actually overlap requests in the batch");
+    for o in outcomes.iter().filter(|o| !o.rejected) {
+        let a = &trace[o.seq];
+        let want = gen
+            .decode_reference(&a.request.prompt, a.request.max_new_tokens.min(4))
+            .unwrap();
+        assert_eq!(o.tokens, want, "request {} diverged from sequential greedy", o.seq);
+        assert_eq!(o.tokens.len(), o.token_ticks.len());
+        assert!(o.token_ticks.windows(2).all(|w| w[0] < w[1]), "emission ticks increase");
+        assert!(o.arrival <= o.admitted && o.admitted <= o.finish);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// determinism: repeat runs and lane counts {1, 2, 4}
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seeded_trace_replays_identically_across_runs_and_lane_counts() {
+    let (art, rt) = setup();
+    let eng = engine(&art, &rt, "replay");
+    let cfg = eng.snapshot().meta.cfg.clone();
+    let gen = GenerateEngine::new(&eng).unwrap();
+
+    let trace = synth_gen_trace(&trace_spec(&cfg, 12, 23));
+    let base_cfg = GenCfg { max_new_tokens: 4, slots: 4, ..Default::default() };
+
+    let run = |lanes: usize| {
+        let clock = SimClock::new();
+        gen.run(&trace, &GenCfg { dispatch: lanes, ..base_cfg.clone() }, &clock).unwrap()
+    };
+
+    let (out1, stats1) = run(1);
+    let (out1b, stats1b) = run(1);
+    assert_eq!(out1, out1b, "same trace, same lanes: outcomes must replay bitwise");
+    assert_eq!(stats1, stats1b, "stats must replay too");
+
+    for lanes in [2usize, 4] {
+        let (out_n, stats_n) = run(lanes);
+        assert_eq!(
+            out1, out_n,
+            "dispatch 1 vs {lanes}: token streams/ticks must be identical"
+        );
+        assert_eq!(stats1.steps, stats_n.steps, "admission log must be lane-independent");
+        assert_eq!(stats1.tokens, stats_n.tokens);
+        assert_eq!(stats1.decode_steps, stats_n.decode_steps);
+        assert_eq!(stats1.wall_ticks, stats_n.wall_ticks, "modeled time is lane-independent");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// conservation: offered == admitted + rejected, per decode step
+// ---------------------------------------------------------------------------
+
+#[test]
+fn admission_conservation_holds_per_step_and_in_total() {
+    let (art, rt) = setup();
+    let eng = engine(&art, &rt, "conserve");
+    let cfg = eng.snapshot().meta.cfg.clone();
+    let gen = GenerateEngine::new(&eng).unwrap();
+
+    // tiny queue + one slot + a fast trace => real rejections
+    let mut spec = trace_spec(&cfg, 14, 5);
+    spec.mean_gap = 50;
+    let trace = synth_gen_trace(&spec);
+    let gcfg = GenCfg {
+        max_new_tokens: 4,
+        slots: 1,
+        queue_cap: Some(1),
+        ..Default::default()
+    };
+    let clock = SimClock::new();
+    let (outcomes, stats) = gen.run(&trace, &gcfg, &clock).unwrap();
+
+    for (i, s) in stats.steps.iter().enumerate() {
+        assert_eq!(
+            s.offered,
+            s.admitted + s.rejected,
+            "step {i}: conservation violated ({s:?})"
+        );
+    }
+    let offered: usize = stats.steps.iter().map(|s| s.offered).sum();
+    assert_eq!(offered, trace.len(), "every arrival must be offered exactly once");
+    assert!(stats.rejected > 0, "this trace must overflow the 1-deep queue");
+    assert_eq!(
+        stats.completed + stats.rejected,
+        stats.requests,
+        "every request completes or is rejected"
+    );
+    assert_eq!(outcomes.len(), trace.len());
+    // rejected requests carry no tokens; completed ones carry their budget
+    for o in &outcomes {
+        if o.rejected {
+            assert!(o.tokens.is_empty() && o.token_ticks.is_empty());
+        } else {
+            assert!(!o.tokens.is_empty());
+        }
+    }
+}

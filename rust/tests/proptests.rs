@@ -282,6 +282,64 @@ fn prop_window_schedule() {
     }
 }
 
+/// The serve/eval dispatch plan (`coordinator::window_plan`) is a greedy
+/// covering: every block is covered exactly once, the steps are contiguous
+/// from block 0, every width is either an exported window size or the
+/// width-1 fallback, no width exceeds the largest requested window, and
+/// each step takes the largest window that fits the remainder.
+#[test]
+fn prop_window_plan_greedy_covering() {
+    use cbq::coordinator::window_plan;
+    for seed in 0..cases(300) {
+        let mut g = Gen::new(seed + 85000);
+        let n_layers = g.usize_in(0, 48);
+        // window sets with duplicates and the occasional bogus zero entry
+        let n_win = g.usize_in(0, 5);
+        let windows: Vec<usize> = (0..n_win).map(|_| g.usize_in(0, 12)).collect();
+        let plan = window_plan(&windows, n_layers);
+
+        // contiguous from 0, covering every block exactly once
+        let mut k = 0usize;
+        for &(start, w) in &plan {
+            assert_eq!(start, k, "seed {seed}: plan not contiguous ({plan:?})");
+            assert!(w > 0, "seed {seed}: zero-width step ({plan:?})");
+            k += w;
+        }
+        assert_eq!(
+            k, n_layers,
+            "seed {seed}: plan covers {k} of {n_layers} blocks ({plan:?})"
+        );
+        if n_layers == 0 {
+            assert!(plan.is_empty(), "seed {seed}: empty chain needs no steps");
+            continue;
+        }
+
+        let positive: Vec<usize> = windows.iter().copied().filter(|&w| w > 0).collect();
+        let cap = positive.iter().copied().max().unwrap_or(1);
+        for &(start, w) in &plan {
+            // width never exceeds the largest requested window (width-1
+            // fallback only when nothing requested fits)
+            assert!(
+                w <= cap.max(1),
+                "seed {seed}: width {w} exceeds requested max {cap} ({plan:?})"
+            );
+            assert!(
+                positive.contains(&w) || w == 1,
+                "seed {seed}: width {w} is neither exported nor the fallback"
+            );
+            // greedy maximality: no exported window fits the remainder
+            // better than the one chosen
+            let remaining = n_layers - start;
+            let best = positive.iter().copied().filter(|&x| x <= remaining).max();
+            assert_eq!(
+                w,
+                best.unwrap_or(1),
+                "seed {seed}: step at {start} not greedy-max ({plan:?})"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // linalg invariants
 // ---------------------------------------------------------------------------

@@ -46,16 +46,48 @@ mod sys {
             offset: OffT,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+        pub fn getpagesize() -> c_int;
     }
 
     /// `PROT_READ` (identical on Linux and the BSD family).
     pub const PROT_READ: c_int = 1;
     /// `MAP_PRIVATE` (identical on Linux and the BSD family).
     pub const MAP_PRIVATE: c_int = 2;
+    /// `MADV_SEQUENTIAL` (identical on Linux and the BSD family).
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    /// `MADV_DONTNEED` (identical on Linux and the BSD family).
+    pub const MADV_DONTNEED: c_int = 4;
 
     /// `MAP_FAILED` is `(void*)-1`.
     pub fn map_failed() -> *mut c_void {
         usize::MAX as *mut c_void
+    }
+}
+
+/// Access-pattern hints forwarded to `madvise(2)`.
+///
+/// Hints are best-effort on every path: on non-Unix targets (and on the
+/// [`ReadAtFile`] fallback, which has no mapping to advise) they are
+/// silently accepted as no-ops, and a failing syscall is reported but never
+/// fatal — correctness must not depend on the kernel honouring a hint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// `MADV_SEQUENTIAL`: the range will be walked front to back soon
+    /// (warmup readahead).
+    Sequential,
+    /// `MADV_DONTNEED`: the range's pages can be dropped; a later touch
+    /// re-faults them from the file (window eviction).
+    DontNeed,
+}
+
+#[cfg(unix)]
+impl Advice {
+    fn raw(self) -> std::os::raw::c_int {
+        match self {
+            Advice::Sequential => sys::MADV_SEQUENTIAL,
+            Advice::DontNeed => sys::MADV_DONTNEED,
+        }
     }
 }
 
@@ -170,6 +202,51 @@ impl Mmap {
     /// Is the mapping empty?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Hint the kernel about the access pattern of the whole mapping.
+    /// Best-effort: `Ok(())` on empty mappings and non-Unix targets.
+    pub fn advise(&self, advice: Advice) -> io::Result<()> {
+        self.advise_range(advice, 0, self.len())
+    }
+
+    /// Hint the kernel about `len` bytes starting at byte `offset` of the
+    /// mapping. `madvise` requires a page-aligned start, so the range is
+    /// shrunk inward to page boundaries (a partial page shared with a
+    /// neighbouring range is never advised away); a range that shrinks to
+    /// nothing is a successful no-op, as is any call on a non-Unix target.
+    pub fn advise_range(&self, advice: Advice, offset: usize, len: usize) -> io::Result<()> {
+        match &self.inner {
+            #[cfg(unix)]
+            Inner::Map { ptr, len: map_len } => {
+                let page = unsafe { sys::getpagesize() }.max(1) as usize;
+                let end = offset.saturating_add(len).min(*map_len);
+                let start = offset.min(*map_len).div_ceil(page) * page;
+                // round the end down too: DONTNEED on a page the caller
+                // does not own would drop a neighbour's warm pages
+                let end = (end / page) * page;
+                if start >= end {
+                    return Ok(());
+                }
+                // SAFETY: [start, end) lies inside the live mapping and is
+                // page-aligned; the advice values are read-only hints.
+                let rc = unsafe {
+                    sys::madvise(
+                        ptr.add(start) as *mut std::os::raw::c_void,
+                        end - start,
+                        advice.raw(),
+                    )
+                };
+                if rc != 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(())
+            }
+            Inner::Empty => {
+                let _ = (advice, offset, len);
+                Ok(())
+            }
+        }
     }
 }
 
@@ -301,6 +378,24 @@ mod tests {
         assert_eq!(f.read_at(10, 0).unwrap(), b"");
         assert!(f.read_at(7, 4).is_err(), "read past EOF must fail");
         assert!(f.read_at(u64::MAX, 2).is_err(), "offset overflow must fail");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn advise_is_best_effort_and_bounds_safe() {
+        let p = tmp("mmap_advise.bin", &[3u8; 3 * 4096 + 100]);
+        if let Ok(m) = Mmap::open(&p) {
+            m.advise(Advice::Sequential).unwrap();
+            m.advise_range(Advice::DontNeed, 4096, 4096).unwrap();
+            // unaligned range: shrinks inward, never errors
+            m.advise_range(Advice::DontNeed, 100, 5000).unwrap();
+            // degenerate ranges: no-ops
+            m.advise_range(Advice::DontNeed, 10, 20).unwrap();
+            m.advise_range(Advice::DontNeed, m.len(), 4096).unwrap();
+            m.advise_range(Advice::DontNeed, usize::MAX - 10, usize::MAX).unwrap();
+            // the data is still readable after DONTNEED (pages re-fault)
+            assert!(m.as_bytes().iter().all(|&b| b == 3));
+        }
         std::fs::remove_file(p).ok();
     }
 
