@@ -10,6 +10,9 @@
 //!   * matmul GFLOP/s at {256, 512, 1024}, naive row-parallel vs the
 //!     blocked/packed-panel kernels (the before/after of the PR 3 refactor;
 //!     `CBQ_NAIVE_KERNELS=1` forces the naive path process-wide)
+//!   * packed-domain matmul (serve from 2/4/8-bit codes, bitwise ==
+//!     dequant→f32) and packed-vs-f32 window pinning: steady tokens/s,
+//!     resident-bytes ratio, prefetch counters
 //!   * serve-bench tokens/s over a snapshot (pool + pinned windows), at
 //!     `CBQ_BENCH_DISPATCH` concurrency
 //!   * token-generation decode tokens/s + per-token latency percentiles
@@ -186,6 +189,65 @@ fn main() {
     }
     t.print();
 
+    // ---- packed-domain matmul: serve from 2/4/8-bit codes -----------------
+    // qmatmul reads packed codes + scales in place; the f32 comparison runs
+    // the blocked kernel over the dequantized copy of the same codes
+    // (outputs are bitwise-equal by construction — asserted here too)
+    let mut qmm_rows = Vec::new();
+    let mut t = Table::new(
+        "packed matmul (serve from codes, bitwise == dequant->f32)",
+        &["bits", "f32 GFLOP/s", "packed GFLOP/s", "speedup", "weight GB/s f32->packed"],
+    );
+    {
+        let (m, k, n) = (64usize, 512usize, 512usize);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i as f32) * 0.43).sin()).collect();
+        let flops = 2.0 * (m * k * n) as f64;
+        for bits in [2u8, 4, 8] {
+            let half = 1i32 << (bits - 1);
+            let codes: Vec<i32> = (0..k * n)
+                .map(|i| (((i * 2654435761) >> 7) as u32 % (2 * half as u32)) as i32 - half)
+                .collect();
+            let s_w: Vec<f32> =
+                (0..n).map(|j| 0.002 + 0.001 * ((j as f32) * 0.7).cos().abs()).collect();
+            let q = kernels::QPanels::pack(&codes, k, n, bits, &s_w);
+            let deq = q.dequant();
+            assert_eq!(
+                kernels::qmatmul(&a, m, k, &q),
+                kernels::matmul(&a, m, k, &deq, n),
+                "packed matmul diverged from dequant->f32 at {bits} bits"
+            );
+            let t_f32 = time_n(4, || {
+                std::hint::black_box(kernels::matmul(&a, m, k, &deq, n));
+            });
+            let t_packed = time_n(4, || {
+                std::hint::black_box(kernels::qmatmul(&a, m, k, &q));
+            });
+            let (g_f32, g_packed) = (flops / t_f32 / 1e9, flops / t_packed / 1e9);
+            let f32_bytes = (k * n * 4) as f64;
+            let packed_bytes = q.heap_bytes() as f64;
+            // weight-stream bandwidth: bytes of B actually read per second
+            let (bw_f32, bw_packed) = (f32_bytes / t_f32 / 1e9, packed_bytes / t_packed / 1e9);
+            t.row(&[
+                format!("w{bits}"),
+                fmt_f(g_f32, 2),
+                fmt_f(g_packed, 2),
+                format!("{:.2}x", t_f32 / t_packed),
+                format!("{:.2} -> {:.2}", bw_f32, bw_packed),
+            ]);
+            qmm_rows.push(J::obj(vec![
+                ("bits", J::num(bits as f64)),
+                ("f32_gflops", J::num(g_f32)),
+                ("packed_gflops", J::num(g_packed)),
+                ("speedup", J::num(t_f32 / t_packed)),
+                ("f32_weight_bytes", J::num(f32_bytes)),
+                ("packed_weight_bytes", J::num(packed_bytes)),
+                ("f32_weight_gbps", J::num(bw_f32)),
+                ("packed_weight_gbps", J::num(bw_packed)),
+            ]));
+        }
+    }
+    t.print();
+
     // ---- serve-bench over a snapshot (pinned windows + worker pool) -------
     let dispatch: usize = std::env::var("CBQ_BENCH_DISPATCH")
         .ok()
@@ -240,7 +302,9 @@ fn main() {
         rt,
         &art,
         snap_m,
-        EngineOptions { resident_windows: Some(1), resident_bytes: None },
+        // f32 pinning: this section measures the dequantize-at-fault path;
+        // the packed comparison below has its own engines
+        EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: false },
     )
     .unwrap();
     mmap_engine.execute(one_row).unwrap();
@@ -276,6 +340,62 @@ fn main() {
         res_m.faults,
         res_m.hits,
         res_m.evictions
+    );
+
+    // ---- packed vs f32 window pinning (mmap steady state) -----------------
+    // two lazy engines over the same mapping, unlimited residency: one pins
+    // dequantized f32 weights, one pins the packed codes + scales in place.
+    // Responses must be bitwise-identical; the resident-bytes ratio is the
+    // headline figure (~(32/bits)x on the weight-dominated records, more
+    // once the f32 path's v0 warm-start copies are counted).
+    let mut reg_pf = ModelRegistry::new();
+    let snap_pf = reg_pf.load_with("pk-f32", &snap_path, LoadMode::Mmap).unwrap();
+    let f32_engine = ServeEngine::with_options(
+        rt,
+        &art,
+        snap_pf,
+        EngineOptions { resident_windows: None, resident_bytes: None, packed: false },
+    )
+    .unwrap();
+    let mut reg_pp = ModelRegistry::new();
+    let snap_pp = reg_pp.load_with("pk-packed", &snap_path, LoadMode::Mmap).unwrap();
+    let packed_engine = ServeEngine::with_options(
+        rt,
+        &art,
+        snap_pp,
+        EngineOptions { resident_windows: None, resident_bytes: None, packed: true },
+    )
+    .unwrap();
+    f32_engine.execute(one_row).unwrap();
+    packed_engine.execute(one_row).unwrap();
+    let (resp_f, st_f32p) = Batcher::coalescing(&f32_engine).run(&f32_engine, &requests).unwrap();
+    let (resp_p, st_packed) =
+        Batcher::coalescing(&packed_engine).run(&packed_engine, &requests).unwrap();
+    let packed_identical = resp_f == resp_p;
+    let res_f = f32_engine.residency();
+    let res_p = packed_engine.residency();
+    let resident_ratio = res_f.resident_bytes as f64 / (res_p.resident_bytes as f64).max(1.0);
+    let mut t = Table::new(
+        "packed vs f32 window pinning (mmap, all windows resident)",
+        &["pinning", "steady tok/s", "resident bytes", "prefetches (hit)"],
+    );
+    t.row(&[
+        "f32".into(),
+        fmt_f(st_f32p.tokens_per_s(), 0),
+        format!("{}", res_f.resident_bytes),
+        format!("{} ({})", res_f.prefetches, res_f.prefetch_hits),
+    ]);
+    t.row(&[
+        if packed_engine.is_packed() { "packed".into() } else { "packed (UNAVAILABLE)".to_string() },
+        fmt_f(st_packed.tokens_per_s(), 0),
+        format!("{}", res_p.resident_bytes),
+        format!("{} ({})", res_p.prefetches, res_p.prefetch_hits),
+    ]);
+    t.print();
+    println!(
+        "packed responses identical: {}; resident bytes {:.2}x smaller",
+        if packed_identical { "yes (packed == f32, bitwise)" } else { "NO — packed kernel bug" },
+        resident_ratio,
     );
 
     // ---- live arrival loop (priority scheduler over the engine) -----------
@@ -408,6 +528,22 @@ fn main() {
                 ("eager_resident_bytes", J::num(res_e.resident_bytes as f64)),
                 ("mmap_faults", J::num(res_m.faults as f64)),
                 ("mmap_evictions", J::num(res_m.evictions as f64)),
+            ]),
+        ),
+        (
+            "packed",
+            J::obj(vec![
+                ("enabled", J::Bool(packed_engine.is_packed())),
+                ("qmatmul", J::arr(qmm_rows)),
+                ("steady_f32_tokens_per_s", J::num(st_f32p.tokens_per_s())),
+                ("steady_packed_tokens_per_s", J::num(st_packed.tokens_per_s())),
+                ("responses_identical", J::Bool(packed_identical)),
+                ("f32_resident_bytes", J::num(res_f.resident_bytes as f64)),
+                ("packed_resident_bytes", J::num(res_p.resident_bytes as f64)),
+                ("resident_ratio", J::num(resident_ratio)),
+                ("f32_prefetches", J::num(res_f.prefetches as f64)),
+                ("packed_prefetches", J::num(res_p.prefetches as f64)),
+                ("packed_prefetch_hits", J::num(res_p.prefetch_hits as f64)),
             ]),
         ),
         (

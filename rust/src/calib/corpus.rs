@@ -5,27 +5,33 @@
 //! both sides implement the identical xorshift64*-driven generator; parity
 //! is asserted against artifacts/corpus_ref.json in the integration tests.
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
+/// Tokens per topic segment (each segment opens with its topic marker).
 pub const SEGMENT_LEN: usize = 32;
+/// Content-token alphabet size: tokens `0..CONTENT_V` carry the affine /
+/// counting / zipf mixture.
 pub const CONTENT_V: u64 = 240;
+/// First topic-marker token id (`TOPIC_BASE + topic` opens a segment).
 pub const TOPIC_BASE: u32 = 240;
+/// Number of distinct topics, each with its own affine parameters.
 pub const N_TOPICS: u64 = 8;
+/// Wiki-style section-header template token.
 pub const HEADER_TOK: u32 = 250;
+/// Wiki-style separator template token.
 pub const SEP_TOK: u32 = 251;
 
+/// Corpus flavour — the C4-like and Wikitext-like streams differ in their
+/// mixture weights and template tokens, mirroring the paper's two eval
+/// corpora.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Style {
+    /// C4-like: no template tokens, noisier mixture.
     C4,
+    /// Wikitext-like: periodic header/separator tokens, more deterministic.
     Wiki,
 }
 
 impl Style {
+    /// Short name used in CLI tables and JSON reports.
     pub fn name(&self) -> &'static str {
         match self {
             Style::C4 => "c4",
@@ -41,10 +47,12 @@ pub struct XorShift64Star {
 }
 
 impl XorShift64Star {
+    /// Seed the generator (`seed | 1` guards against the all-zero state).
     pub fn new(seed: u64) -> Self {
         Self { state: seed | 1 }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;
@@ -54,11 +62,15 @@ impl XorShift64Star {
         x.wrapping_mul(0x2545_F491_4F6C_DD1D)
     }
 
+    /// Uniform-ish draw in `0..n` (modulo bias is part of the mirrored
+    /// contract — data.py does the same).
     pub fn next_below(&mut self, n: u64) -> u64 {
         self.next_u64() % n
     }
 }
 
+/// The affine process parameters `(a, b)` of a topic: `a` is forced
+/// coprime with `CONTENT_V` so `a*cur + b` permutes the content alphabet.
 pub fn topic_params(topic: u64) -> (u64, u64) {
     let mut a = (7 * topic + 11) % CONTENT_V;
     while a % 2 == 0 || a % 3 == 0 || a % 5 == 0 {

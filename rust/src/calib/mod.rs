@@ -6,38 +6,39 @@
 //! continuation tasks (the zero-shot accuracy analog — lm-eval scores
 //! PIQA/HellaSwag/ARC exactly this way, by comparing continuation NLLs).
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 pub mod corpus;
 
 use corpus::{Style, XorShift64Star, CONTENT_V, N_TOPICS, SEGMENT_LEN, TOPIC_BASE};
 
 use crate::tensor::TensorI32;
 
-/// Seeds: calibration draws from a different stream than pretraining
-/// (python uses seed 42 for training) and eval uses yet another.
+/// Calibration stream seed — distinct from the pretraining stream (the
+/// python reference trains with seed 42) so calibration never replays
+/// training data.
 pub const CALIB_SEED: u64 = 1001;
+/// Held-out evaluation stream seed, disjoint from both training and
+/// calibration.
 pub const EVAL_SEED: u64 = 2002;
+/// Seed for the synthetic zero-shot choice/ranking task generators.
 pub const TASK_SEED: u64 = 3003;
 
 /// A [B, S+1] token batch: inputs are `[.., :S]`, next-token targets `[.., 1:]`.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// Number of rows `B`.
     pub batch: usize,
+    /// Model sequence length `S` (rows store `S + 1` tokens).
     pub seq: usize,
     tokens: Vec<u32>,
 }
 
 impl Batch {
+    /// The `[B, S]` input tokens (each row's first `S` tokens).
     pub fn inputs(&self) -> TensorI32 {
         self.select(0)
     }
 
+    /// The `[B, S]` next-token targets (each row shifted left by one).
     pub fn targets(&self) -> TensorI32 {
         self.select(1)
     }
@@ -51,6 +52,7 @@ impl Batch {
         TensorI32::new(vec![self.batch, self.seq], data)
     }
 
+    /// Row `b`'s full `S + 1` token window (inputs plus the final target).
     pub fn row(&self, b: usize) -> &[u32] {
         &self.tokens[b * (self.seq + 1)..(b + 1) * (self.seq + 1)]
     }
@@ -86,8 +88,11 @@ pub fn eval_stream(style: Style, n_batches: usize, batch: usize, seq: usize) -> 
 /// corrupted continuation.
 #[derive(Clone, Debug)]
 pub struct ChoiceItem {
+    /// Shared prompt tokens scored ahead of every candidate.
     pub prompt: Vec<u32>,
+    /// Candidate continuations (each `prompt.len() + cand.len() == seq`).
     pub cands: Vec<Vec<u32>>,
+    /// Index into `cands` of the true continuation.
     pub correct: usize,
 }
 
@@ -109,9 +114,11 @@ pub enum TaskKind {
 }
 
 impl TaskKind {
+    /// Every task flavour, in reporting order.
     pub const ALL: [TaskKind; 4] =
         [TaskKind::TopicMatch, TaskKind::CountRun, TaskKind::Perturbed, TaskKind::Shifted];
 
+    /// Human-readable task name used in tables and JSON reports.
     pub fn name(&self) -> &'static str {
         match self {
             TaskKind::TopicMatch => "TopicMatch",

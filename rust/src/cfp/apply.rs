@@ -10,13 +10,6 @@
 //!   * `wdown`     input = silu(gate) * up    -> fold via `wup` columns
 //!     (the `up` factor is linear in the channel).
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 use std::collections::BTreeMap;
 
 use crate::config::PreprocMethod;
@@ -28,7 +21,9 @@ use super::{activation_scales, baselines, detect_default, truncate_weights, Dete
 /// Report of what pre-processing did (Fig. 3 + Table 3a diagnostics).
 #[derive(Clone, Debug, Default)]
 pub struct PreprocReport {
+    /// Total weight entries clipped to their group's reserved maximum.
     pub weights_truncated: usize,
+    /// Activation channels whose scaling was migrated into weights.
     pub channels_scaled: usize,
     /// per (block, linear): detection summary on weights
     pub weight_detections: Vec<(usize, String, Detection)>,

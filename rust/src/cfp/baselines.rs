@@ -5,13 +5,6 @@
 //! [`ModelParams`], mirroring how the paper's ablation applies them before
 //! the (optional) reconstruction stage.
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 use crate::config::qmax;
 use crate::model_state::{ActStats, ModelParams};
 use crate::quant::{init_scales, quant_mse, LINEARS};

@@ -13,18 +13,12 @@
 //!     migrated into adjacent weights as an exact equivalent transform
 //!     (see [`apply`]).
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 pub mod apply;
 pub mod baselines;
 
-/// Paper defaults: lambda1 = 1.5 (coarse IQR factor), lambda2 = 1.0.
+/// Paper-default coarse-stage IQR factor (lambda1 in Algorithm 1).
 pub const LAMBDA1: f32 = 1.5;
+/// Paper-default fine-stage intra-class variance weight (lambda2).
 pub const LAMBDA2: f32 = 1.0;
 
 /// Result of outlier detection over a set of magnitudes.
@@ -42,6 +36,8 @@ pub struct Detection {
 }
 
 impl Detection {
+    /// Is `v` past the detected threshold (by magnitude)? Always `false`
+    /// when detection found no outliers.
     pub fn is_outlier(&self, v: f32) -> bool {
         match self.threshold {
             Some(t) => v.abs() >= t,

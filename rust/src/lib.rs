@@ -77,9 +77,10 @@
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 // Public API documentation is enforced (CI denies rustdoc warnings via the
 // `docs` job). Modules whose surface predates the gate opt out locally
-// with `#![allow(missing_docs)]` + a TODO(docs) note; everything in
-// `tensor/`, `snapshot/`, `serve/`, `runtime/`, `json` and `config` is
-// fully documented.
+// with `#![allow(missing_docs)]` + a TODO(docs) note (now only the
+// coordinator internals and `eval`); everything in `tensor/`, `snapshot/`,
+// `serve/`, `runtime/`, `calib/`, `cfp/`, `json` and `config` is fully
+// documented.
 #![warn(missing_docs)]
 
 pub mod calib;

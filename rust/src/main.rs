@@ -76,7 +76,8 @@ COMMANDS
             checksum status, fingerprint check against the artifacts config
             when available, and resident-vs-mapped byte accounting
             (unpacked / eager-resident / per-block estimates for sizing
-            CBQ_RESIDENT_MB)
+            CBQ_RESIDENT_MB, plus the packed-domain figures --packed
+            serving keeps resident: codes+scales per block)
   serve-bench --snapshot snap.cbqs [--ppl-requests 32]
             [--choice-requests 8] [--hidden-requests 8] [--queue-cap 0]
             [--dispatch 1] [--json out.json]
@@ -85,14 +86,20 @@ COMMANDS
             overflow requests are rejected and counted); --dispatch N
             executes up to N window batches concurrently (CBQ_THREADS
             sizes the shared kernel worker pool)
-            mmap mode: --mmap [--resident-windows N]
+            mmap mode: --mmap [--resident-windows N] [--packed|--no-packed]
             memory-map the snapshot instead of decoding it up front:
-            windows are unpacked+pinned on first touch and an LRU keeps at
-            most N windows (or CBQ_RESIDENT_MB bytes) of unpacked tensors
-            resident — models larger than RAM serve window-by-window. The
-            one-by-one reference then runs on a separate eager engine, so
-            "responses identical" doubles as the mmap==eager bitwise gate;
-            residency (faults/hits/evictions, peak bytes) is reported
+            windows are pinned on first touch and an LRU keeps at most N
+            windows (or CBQ_RESIDENT_MB bytes) resident — models larger
+            than RAM serve window-by-window. On the native backend windows
+            default to packed-domain pinning (codes + scales served in
+            place by the quantized matmul, 4-16x smaller than f32;
+            --no-packed or CBQ_PACKED=0 reverts to dequantized pinning),
+            and the next planned window's file pages prefetch in the
+            background while the current window executes. The one-by-one
+            reference then runs on a separate eager engine, so "responses
+            identical" doubles as the mmap==eager (and packed==f32)
+            bitwise gate; residency (faults/hits/evictions, prefetches,
+            peak bytes) is reported
             live mode: --live [--arrival-rate 256] [--trace-seed 7]
             [--trace-requests 64] [--priorities] [--real-clock]
             [--verify-determinism]
@@ -225,7 +232,9 @@ fn class_lat_json(c: &ClassLat) -> Value {
 }
 
 /// Residency options from the CLI/environment: `--resident-windows` wins
-/// over the `CBQ_RESIDENT_MB` default [`EngineOptions::from_env`] reads.
+/// over the `CBQ_RESIDENT_MB` default [`EngineOptions::from_env`] reads;
+/// `--no-packed` (or `CBQ_PACKED=0`) turns packed-domain window pinning
+/// off, `--packed` merely states the default explicitly.
 fn engine_options(args: &Args) -> Result<EngineOptions> {
     let mut opts = EngineOptions::from_env();
     if let Some(n) = args.get("resident-windows") {
@@ -234,6 +243,11 @@ fn engine_options(args: &Args) -> Result<EngineOptions> {
             .map_err(|_| anyhow!("--resident-windows expects an integer, got `{n}`"))?;
         anyhow::ensure!(n >= 1, "--resident-windows must be >= 1");
         opts.resident_windows = Some(n);
+    }
+    if args.flag("no-packed") {
+        opts.packed = false;
+    } else if args.flag("packed") {
+        opts.packed = true;
     }
     Ok(opts)
 }
@@ -282,14 +296,18 @@ fn load_serve_engine<'rt>(
 fn residency_line(engine: &ServeEngine) -> String {
     let r = engine.residency();
     format!(
-        "{}/{} windows resident, {} unpacked (peak {}), {} faults / {} hits / {} evictions",
+        "{}/{} windows resident ({}), {} pinned (peak {}), {} faults / {} hits / \
+         {} evictions, {} prefetches ({} hit)",
         r.resident_windows,
         engine.plan_len(),
+        if engine.is_packed() { "packed" } else { "f32" },
         fmt_bytes(r.resident_bytes),
         fmt_bytes(r.peak_bytes),
         r.faults,
         r.hits,
         r.evictions,
+        r.prefetches,
+        r.prefetch_hits,
     )
 }
 
@@ -297,6 +315,7 @@ fn residency_json(engine: &ServeEngine) -> Value {
     let r = engine.residency();
     Value::obj(vec![
         ("lazy", Value::Bool(engine.is_lazy())),
+        ("packed", Value::Bool(engine.is_packed())),
         ("plan_windows", Value::num(engine.plan_len() as f64)),
         ("resident_windows", Value::num(r.resident_windows as f64)),
         ("resident_bytes", Value::num(r.resident_bytes as f64)),
@@ -305,6 +324,8 @@ fn residency_json(engine: &ServeEngine) -> Value {
         ("faults", Value::num(r.faults as f64)),
         ("hits", Value::num(r.hits as f64)),
         ("evictions", Value::num(r.evictions as f64)),
+        ("prefetches", Value::num(r.prefetches as f64)),
+        ("prefetch_hits", Value::num(r.prefetch_hits as f64)),
     ])
 }
 
@@ -792,13 +813,24 @@ fn cmd_snapshot_info(args: &Args) -> Result<()> {
     t.row(&[
         "per-block max".into(),
         fmt_bytes(info.max_block_resident_bytes),
-        "largest block, pinned".into(),
+        "largest block, pinned as f32".into(),
+    ]);
+    t.row(&[
+        "packed resident".into(),
+        fmt_bytes(info.packed_resident_estimate_bytes),
+        "all blocks under --packed (codes+scales)".into(),
+    ]);
+    t.row(&[
+        "per-block max (packed)".into(),
+        fmt_bytes(info.max_block_packed_resident_bytes),
+        "largest block under --packed".into(),
     ]);
     t.print();
     println!(
-        "sizing: a width-w pinned window keeps ~w x {} resident; set \
-         CBQ_RESIDENT_MB / --resident-windows from that",
-        fmt_bytes(info.max_block_resident_bytes)
+        "sizing: a width-w pinned window keeps ~w x {} resident ({} under \
+         --packed); set CBQ_RESIDENT_MB / --resident-windows from that",
+        fmt_bytes(info.max_block_resident_bytes),
+        fmt_bytes(info.max_block_packed_resident_bytes),
     );
     if info.version >= 2 {
         println!(
@@ -844,6 +876,14 @@ fn cmd_snapshot_info(args: &Args) -> Result<()> {
             ("unpacked_bytes", Value::num(info.unpacked_bytes as f64)),
             ("resident_estimate_bytes", Value::num(info.resident_estimate_bytes as f64)),
             ("max_block_resident_bytes", Value::num(info.max_block_resident_bytes as f64)),
+            (
+                "packed_resident_estimate_bytes",
+                Value::num(info.packed_resident_estimate_bytes as f64),
+            ),
+            (
+                "max_block_packed_resident_bytes",
+                Value::num(info.max_block_packed_resident_bytes as f64),
+            ),
             ("checksum_ok", Value::Bool(info.checksum_ok)),
             (
                 "packed_by_bits",
@@ -1098,8 +1138,10 @@ fn main() -> Result<()> {
             );
 
             // under --mmap the one-by-one reference runs on a separate,
-            // eagerly loaded engine, so the "responses identical" check
-            // doubles as the mmap-vs-eager bitwise-equality gate
+            // eagerly loaded (always-f32) engine, so the "responses
+            // identical" check doubles as the mmap-vs-eager — and, when
+            // the lazy engine pins packed, the packed-vs-f32 —
+            // bitwise-equality gate
             let eager_engine = if mmap {
                 Some(load_serve_engine(&args, &art, rt, "bench-eager", LoadMode::Eager)?.1)
             } else {
@@ -1172,6 +1214,7 @@ fn main() -> Result<()> {
                     ("queue_cap", Value::num(queue_cap as f64)),
                     ("dispatch", Value::num(dispatch as f64)),
                     ("mmap", Value::Bool(mmap)),
+                    ("packed", Value::Bool(engine.is_packed())),
                     ("batched", serve_stats_json(&stats_b)),
                     ("sequential", serve_stats_json(&stats_s)),
                     ("speedup_tokens_per_s", Value::num(speedup)),

@@ -338,6 +338,383 @@ pub fn matmul_transa_naive(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -
 }
 
 // ---------------------------------------------------------------------------
+// packed-domain quantized matmul — serve directly from 2/4/8-bit codes
+// ---------------------------------------------------------------------------
+
+// the packed step layout and the SSE2 tile below hard-code the panel width
+const _: () = assert!(NR == 8, "packed panel layout assumes NR == 8");
+
+/// Is packed-domain serving enabled? `CBQ_PACKED=0` (or `false`) forces
+/// the old f32 pinning path — windows dequantized to f32 at materialize
+/// time — mirroring the `CBQ_NAIVE_KERNELS` escape hatch. Anything else,
+/// including unset, leaves packed serving on (it is bitwise-equal by
+/// construction, so there is no accuracy reason to opt out).
+pub fn packed_enabled() -> bool {
+    use std::sync::OnceLock;
+    static PACKED: OnceLock<bool> = OnceLock::new();
+    *PACKED
+        .get_or_init(|| !std::env::var("CBQ_PACKED").map(|v| v == "0" || v == "false").unwrap_or(false))
+}
+
+/// Quantized B-matrix panels: the packed-domain analogue of the f32 column
+/// panels the blocked kernels build per call — except these are built once
+/// at pin time from the snapshot's codes and reused by every forward, so
+/// packed serving skips per-call repacking entirely.
+///
+/// Layout: `ceil(n / 8)` column panels; within panel `pj`, one *step* of
+/// `8 * bits / 8 = bits` bytes per reduction index `p`, holding the 8
+/// offset-binary codes `u = q + 2^(bits-1)` of columns `pj*8 .. pj*8+8`
+/// packed LSB-first (tail columns padded with `q = 0`). `scales[j]` is the
+/// per-output-channel dequant scale with the `EPS` floor already applied,
+/// so the kernels' `w = (q as f32) * scales[j]` reproduces
+/// `snapshot::lazy::dequant_codes` bit-for-bit — which is why [`qmatmul`]
+/// is bitwise-equal to dequantize-then-[`matmul`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QPanels {
+    k: usize,
+    n: usize,
+    bits: u8,
+    scales: Vec<f32>,
+    data: Vec<u8>,
+}
+
+impl QPanels {
+    /// Bytes per reduction step: `NR` codes of `bits` bits. `NR == 8`
+    /// keeps every step byte-aligned for all supported widths (1..=8).
+    #[inline]
+    fn step_bytes(bits: u8) -> usize {
+        NR * bits as usize / 8
+    }
+
+    fn pack_impl(
+        get: impl Fn(usize, usize) -> i32,
+        k: usize,
+        n: usize,
+        bits: u8,
+        s_w: &[f32],
+    ) -> QPanels {
+        assert!((1..=8).contains(&bits), "unsupported code width {bits}");
+        assert_eq!(s_w.len(), n);
+        let half = 1i32 << (bits - 1);
+        let sb = Self::step_bytes(bits);
+        let n_panels = n.div_ceil(NR);
+        let mut data = vec![0u8; n_panels * k * sb];
+        for pj in 0..n_panels {
+            let j0 = pj * NR;
+            let w = NR.min(n - j0);
+            for p in 0..k {
+                let step = &mut data[(pj * k + p) * sb..(pj * k + p + 1) * sb];
+                for c in 0..NR {
+                    let q = if c < w { get(p, j0 + c) } else { 0 };
+                    assert!(
+                        q >= -half && q < half,
+                        "code {q} out of range for {bits}-bit grid"
+                    );
+                    let u = (q + half) as u32;
+                    let bitpos = c * bits as usize;
+                    step[bitpos >> 3] |= (u << (bitpos & 7)) as u8;
+                    if (bitpos & 7) + bits as usize > 8 {
+                        step[(bitpos >> 3) + 1] |= (u >> (8 - (bitpos & 7))) as u8;
+                    }
+                }
+            }
+        }
+        let scales = s_w.iter().map(|&s| s.max(EPS)).collect();
+        QPanels { k, n, bits, scales, data }
+    }
+
+    /// Pack row-major `[k, n]` signed codes (the CBQS weight layout:
+    /// element `(p, j)` at `codes[p*n + j]`, per-column scales `s_w`) for
+    /// [`qmatmul`]. Codes must lie on the signed `bits`-bit grid
+    /// `[-2^(bits-1), 2^(bits-1))`.
+    pub fn pack(codes: &[i32], k: usize, n: usize, bits: u8, s_w: &[f32]) -> QPanels {
+        assert_eq!(codes.len(), k * n);
+        Self::pack_impl(|p, j| codes[p * n + j], k, n, bits, s_w)
+    }
+
+    /// Pack transposed `[n, k]` signed codes (element `(p, j)` at
+    /// `codes[j*k + p]`) — the B^T orientation [`matmul_transb`] consumes.
+    /// The panel layout is orientation-free, so the result feeds the same
+    /// [`qmatmul`] kernel.
+    pub fn pack_transb(codes: &[i32], k: usize, n: usize, bits: u8, s_w: &[f32]) -> QPanels {
+        assert_eq!(codes.len(), n * k);
+        Self::pack_impl(|p, j| codes[j * k + p], k, n, bits, s_w)
+    }
+
+    /// Logical dequantized shape `[k, n]`.
+    pub fn dims(&self) -> [usize; 2] {
+        [self.k, self.n]
+    }
+
+    /// Reduction length (rows of the dequantized matrix).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output channels (columns of the dequantized matrix).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Code width in bits.
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Owned bytes of packed codes (panel padding included).
+    pub fn code_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Owned bytes of the per-channel scale vector.
+    pub fn scale_bytes(&self) -> usize {
+        self.scales.len() * 4
+    }
+
+    /// Total owned heap bytes (codes + scales).
+    pub fn heap_bytes(&self) -> usize {
+        self.code_bytes() + self.scale_bytes()
+    }
+
+    /// Address of the code buffer — identity for resident-bytes dedup.
+    pub fn codes_ptr(&self) -> usize {
+        self.data.as_ptr() as usize
+    }
+
+    /// Address of the scale buffer — identity for resident-bytes dedup.
+    pub fn scales_ptr(&self) -> usize {
+        self.scales.as_ptr() as usize
+    }
+
+    /// Per-panel scale tile: the `EPS`-floored scales of columns
+    /// `pj*NR..pj*NR+NR`, tail lanes padded with `0.0` (their products land
+    /// in accumulator lanes that are never copied out).
+    #[inline]
+    fn panel_scales(&self, pj: usize) -> [f32; NR] {
+        let j0 = pj * NR;
+        let w = NR.min(self.n - j0);
+        let mut psc = [0.0f32; NR];
+        psc[..w].copy_from_slice(&self.scales[j0..j0 + w]);
+        psc
+    }
+
+    /// Decode reduction step `p` of panel `pj` into `NR` dequantized
+    /// weights: `wrow[c] = (q as f32) * psc[c]` — the exact
+    /// `dequant_codes` arithmetic, evaluated in registers.
+    #[inline]
+    fn decode_step(&self, pj: usize, p: usize, psc: &[f32; NR], wrow: &mut [f32; NR]) {
+        let sb = Self::step_bytes(self.bits);
+        let base = (pj * self.k + p) * sb;
+        let bytes = &self.data[base..base + sb];
+        match self.bits {
+            8 => {
+                for c in 0..NR {
+                    wrow[c] = (bytes[c] as i32 - 128) as f32 * psc[c];
+                }
+            }
+            4 => {
+                for c in 0..NR {
+                    let u = (bytes[c >> 1] >> ((c & 1) * 4)) & 0xF;
+                    wrow[c] = (u as i32 - 8) as f32 * psc[c];
+                }
+            }
+            2 => {
+                for c in 0..NR {
+                    let u = (bytes[c >> 2] >> ((c & 3) * 2)) & 0x3;
+                    wrow[c] = (u as i32 - 2) as f32 * psc[c];
+                }
+            }
+            b => {
+                let bits = b as usize;
+                let half = 1i32 << (bits - 1);
+                let mask = (1u32 << bits) - 1;
+                for c in 0..NR {
+                    let bitpos = c * bits;
+                    let mut u = (bytes[bitpos >> 3] as u32) >> (bitpos & 7);
+                    if (bitpos & 7) + bits > 8 {
+                        u |= (bytes[(bitpos >> 3) + 1] as u32) << (8 - (bitpos & 7));
+                    }
+                    wrow[c] = ((u & mask) as i32 - half) as f32 * psc[c];
+                }
+            }
+        }
+    }
+
+    /// Dequantize back to the row-major f32 `[k, n]` matrix the panels
+    /// encode (`w[p][j] = q * scales[j]`) — the f32-pinning fallback and
+    /// the oracle the bitwise-equality tests compare against.
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k * self.n];
+        let n_panels = self.n.div_ceil(NR);
+        let mut wrow = [0.0f32; NR];
+        for pj in 0..n_panels {
+            let j0 = pj * NR;
+            let w = NR.min(self.n - j0);
+            let psc = self.panel_scales(pj);
+            for p in 0..self.k {
+                self.decode_step(pj, p, &psc, &mut wrow);
+                out[p * self.n + j0..p * self.n + j0 + w].copy_from_slice(&wrow[..w]);
+            }
+        }
+        out
+    }
+}
+
+/// Resident bytes a `[k, n]` x `bits` packed pin will own — panel code
+/// bytes (including tail-panel padding) plus the f32 scale vector. Used by
+/// `snapshot-info` / serve sizing without actually building the panels.
+pub fn packed_resident_bytes(k: usize, n: usize, bits: u8) -> usize {
+    n.div_ceil(NR) * k * (NR * bits as usize / 8) + n * 4
+}
+
+/// `acc[r] += avs[r] * wrow` for the first `rows` tile rows — IEEE
+/// multiply then add per independent lane, never fused, so the SIMD and
+/// scalar versions are bit-identical to each other and to the f32 blocked
+/// micro-kernel's scalar loop.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn madd_tile(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f32; NR]) {
+    // SSE2 is baseline on x86_64. Each lane performs the same
+    // mul-then-add rounding sequence as the scalar fallback below.
+    unsafe {
+        use std::arch::x86_64::*;
+        let w0 = _mm_loadu_ps(wrow.as_ptr());
+        let w1 = _mm_loadu_ps(wrow.as_ptr().add(4));
+        for (acc_row, &av) in acc.iter_mut().zip(avs).take(rows) {
+            let avv = _mm_set1_ps(av);
+            let a0 = _mm_loadu_ps(acc_row.as_ptr());
+            let a1 = _mm_loadu_ps(acc_row.as_ptr().add(4));
+            _mm_storeu_ps(acc_row.as_mut_ptr(), _mm_add_ps(a0, _mm_mul_ps(avv, w0)));
+            _mm_storeu_ps(acc_row.as_mut_ptr().add(4), _mm_add_ps(a1, _mm_mul_ps(avv, w1)));
+        }
+    }
+}
+
+/// Scalar fallback of the SIMD tile above (non-x86_64 targets).
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn madd_tile(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f32; NR]) {
+    for (acc_row, &av) in acc.iter_mut().zip(avs).take(rows) {
+        for (o, &wv) in acc_row.iter_mut().zip(wrow) {
+            *o += av * wv;
+        }
+    }
+}
+
+/// Packed-domain blocked micro-kernel: identical tiling, row chunking and
+/// per-element accumulation order as the f32 `blocked_rows`, with the B
+/// panel decoded to registers per reduction step instead of read from a
+/// pre-dequantized buffer.
+fn q_blocked_rows(out_chunk: &mut [f32], row0: usize, q: &QPanels, a: &[f32], a_stride: usize) {
+    let n = q.n;
+    let k = q.k;
+    let rows_total = out_chunk.len() / n;
+    let n_panels = n.div_ceil(NR);
+    let mut wrow = [0.0f32; NR];
+    for ib in (0..rows_total).step_by(MR) {
+        let rows = MR.min(rows_total - ib);
+        for pj in 0..n_panels {
+            let j0 = pj * NR;
+            let w = NR.min(n - j0);
+            let psc = q.panel_scales(pj);
+            let mut acc = [[0.0f32; NR]; MR];
+            for p in 0..k {
+                q.decode_step(pj, p, &psc, &mut wrow);
+                let mut avs = [0.0f32; MR];
+                for (r, av) in avs.iter_mut().enumerate().take(rows) {
+                    *av = a[(row0 + ib + r) * a_stride + p];
+                }
+                madd_tile(&mut acc, rows, &avs, &wrow);
+            }
+            for (r, acc_row) in acc.iter().enumerate().take(rows) {
+                let base = (ib + r) * n + j0;
+                out_chunk[base..base + w].copy_from_slice(&acc_row[..w]);
+            }
+        }
+    }
+}
+
+/// Run [`q_blocked_rows`] over `out`, splitting MR-aligned row chunks
+/// across the worker pool with the same fixed chunking scheme (and the
+/// same serial threshold) as the f32 `blocked_parallel`.
+fn q_blocked_parallel(out: &mut [f32], q: &QPanels, a: &[f32], a_stride: usize) {
+    let n = q.n;
+    let m = out.len() / n;
+    let row_blocks = m.div_ceil(MR);
+    let threads = num_threads().min(row_blocks.max(1));
+    if threads <= 1 || 2 * m * q.k * n < 65_536 {
+        q_blocked_rows(out, 0, q, a, a_stride);
+        return;
+    }
+    let per_rows = row_blocks.div_ceil(threads) * MR;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(per_rows * n)
+        .enumerate()
+        .map(|(ti, chunk)| {
+            Box::new(move || {
+                q_blocked_rows(chunk, ti * per_rows, q, a, a_stride);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::run_scoped(tasks);
+}
+
+/// `A[m,k] @ dequant(Q)[k,n] -> [m,n]` computed directly from packed
+/// codes: unpack-to-registers inside the cache-blocked panel loop, no f32
+/// weight materialization. Bitwise-equal to `matmul(a, m, k, &q.dequant(),
+/// n)` because the naive/blocked dispatch condition and both per-element
+/// accumulation orders are replicated exactly (property-tested in
+/// `tests/proptests.rs`).
+pub fn qmatmul(a: &[f32], m: usize, k: usize, q: &QPanels) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(q.k, k, "QPanels reduction length mismatch");
+    let n = q.n;
+    if force_naive() || m * k * n < BLOCK_MIN_MULS {
+        return qmatmul_naive(a, m, k, q);
+    }
+    let mut out = vec![0.0f32; m * n];
+    q_blocked_parallel(&mut out, q, a, k);
+    out
+}
+
+/// [`qmatmul`] for panels packed from B^T codes ([`QPanels::pack_transb`]).
+/// The panel layout is orientation-free, so this is the same kernel — kept
+/// as a named entry point mirroring the f32 surface ([`matmul_transb`]).
+pub fn qmatmul_transb(a: &[f32], m: usize, k: usize, q: &QPanels) -> Vec<f32> {
+    qmatmul(a, m, k, q)
+}
+
+/// Row-parallel naive-order packed matmul: the same per-element
+/// accumulation order (including the zero-A skip) as [`matmul_naive`] over
+/// the dequantized matrix — the small-size / `CBQ_NAIVE_KERNELS` path.
+pub fn qmatmul_naive(a: &[f32], m: usize, k: usize, q: &QPanels) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(q.k, k, "QPanels reduction length mismatch");
+    let n = q.n;
+    let n_panels = n.div_ceil(NR);
+    let mut out = vec![0.0f32; m * n];
+    par_rows(&mut out, n.max(1), 2 * k * n, |i, orow| {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut wrow = [0.0f32; NR];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            for pj in 0..n_panels {
+                let j0 = pj * NR;
+                let w = NR.min(n - j0);
+                let psc = q.panel_scales(pj);
+                q.decode_step(pj, p, &psc, &mut wrow);
+                for c in 0..w {
+                    orow[j0 + c] += av * wrow[c];
+                }
+            }
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
 // rmsnorm
 // ---------------------------------------------------------------------------
 
@@ -1215,6 +1592,137 @@ mod tests {
         assert_eq!(matmul_transb(&a, m, k, &bt, n), matmul_transb_naive(&a, m, k, &bt, n));
         let bm: Vec<f32> = (0..m * n).map(|i| ((i as f32) * 0.119).cos()).collect();
         assert_eq!(matmul_transa(&a, m, k, &bm, n), matmul_transa_naive(&a, m, k, &bm, n));
+    }
+
+    /// Reference dequantization: the exact `snapshot::lazy::dequant_codes`
+    /// arithmetic, written out independently of `QPanels::dequant`.
+    fn dequant_ref(codes: &[i32], k: usize, n: usize, s_w: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; k * n];
+        for p in 0..k {
+            for j in 0..n {
+                out[p * n + j] = codes[p * n + j] as f32 * s_w[j].max(EPS);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn qmatmul_matches_dequant_matmul_bitwise() {
+        // random small shapes x bit widths x edge scales (exact zero ->
+        // EPS floor, negative -> EPS floor, tiny, huge); A gets planted
+        // zeros to exercise the naive path's zero-skip
+        let mut seed = 0xD1B54A32D192ED03u64;
+        let mut next = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for &bits in &[2u8, 4, 8] {
+            let half = 1i64 << (bits - 1);
+            for trial in 0..10 {
+                let m = 1 + (next() % 11) as usize;
+                let k = 1 + (next() % 29) as usize;
+                let n = 1 + (next() % 19) as usize;
+                let codes: Vec<i32> =
+                    (0..k * n).map(|_| ((next() % (2 * half) as u64) as i64 - half) as i32).collect();
+                let s_w: Vec<f32> = (0..n)
+                    .map(|_| match next() % 5 {
+                        0 => 0.0,
+                        1 => -1.5,
+                        2 => EPS / 3.0,
+                        3 => 3.7e4,
+                        _ => (next() >> 40) as f32 / (1u64 << 24) as f32 + 1e-3,
+                    })
+                    .collect();
+                let a: Vec<f32> = (0..m * k)
+                    .map(|_| {
+                        let r = next();
+                        if r % 4 == 0 {
+                            0.0
+                        } else {
+                            ((r >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 2.0
+                        }
+                    })
+                    .collect();
+                let q = QPanels::pack(&codes, k, n, bits, &s_w);
+                let deq = dequant_ref(&codes, k, n, &s_w);
+                assert_eq!(q.dequant(), deq, "dequant bits={bits} trial={trial}");
+                assert_eq!(
+                    qmatmul(&a, m, k, &q),
+                    matmul(&a, m, k, &deq, n),
+                    "qmatmul bits={bits} trial={trial} ({m}x{k}x{n})"
+                );
+                // force both the blocked and naive-order internals at this
+                // size regardless of the dispatch thresholds
+                let mut blocked = vec![0.0f32; m * n];
+                q_blocked_parallel(&mut blocked, &q, &a, k);
+                let panels = pack_panels(|p, j| deq[p * n + j], k, n);
+                let mut fblocked = vec![0.0f32; m * n];
+                blocked_rows(&mut fblocked, n, 0, k, &panels, &a, k, false);
+                assert_eq!(blocked, fblocked, "blocked bits={bits} trial={trial}");
+                assert_eq!(
+                    qmatmul_naive(&a, m, k, &q),
+                    matmul_naive(&a, m, k, &deq, n),
+                    "naive bits={bits} trial={trial}"
+                );
+
+                // B^T orientation: [n, k] codes, same per-column scales
+                let codes_t: Vec<i32> =
+                    (0..n * k).map(|_| ((next() % (2 * half) as u64) as i64 - half) as i32).collect();
+                let qt = QPanels::pack_transb(&codes_t, k, n, bits, &s_w);
+                let mut deq_t = vec![0.0f32; k * n];
+                for p in 0..k {
+                    for j in 0..n {
+                        deq_t[p * n + j] = codes_t[j * k + p] as f32 * s_w[j].max(EPS);
+                    }
+                }
+                assert_eq!(
+                    qmatmul_transb(&a, m, k, &qt),
+                    matmul(&a, m, k, &deq_t, n),
+                    "transb bits={bits} trial={trial}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qmatmul_blocked_and_parallel_path_matches() {
+        // past BLOCK_MIN_MULS and the parallel threshold: exercises the
+        // pool-split blocked packed kernel against the f32 blocked kernel
+        let (m, k, n) = (33, 40, 37);
+        let codes: Vec<i32> = (0..k * n).map(|i| (i % 16) as i32 - 8).collect();
+        let mut s_w: Vec<f32> = (0..n).map(|j| 0.02 + (j as f32) * 1e-3).collect();
+        s_w[0] = 0.0; // EPS-floored channel
+        let a: Vec<f32> = (0..m * k).map(|i| ((i as f32) * 0.137).sin()).collect();
+        let q = QPanels::pack(&codes, k, n, 4, &s_w);
+        let deq = dequant_ref(&codes, k, n, &s_w);
+        assert_eq!(qmatmul(&a, m, k, &q), matmul(&a, m, k, &deq, n));
+    }
+
+    #[test]
+    fn qpanels_accounting_and_edges() {
+        // 4-bit 7-column matrix: one panel, tail-padded; accounting covers
+        // padding and scales
+        let codes: Vec<i32> = (0..3 * 7).map(|i| (i % 16) as i32 - 8).collect();
+        let s_w = vec![0.1f32; 7];
+        let q = QPanels::pack(&codes, 3, 7, 4, &s_w);
+        assert_eq!(q.dims(), [3, 7]);
+        assert_eq!(q.bits(), 4);
+        assert_eq!(q.code_bytes(), 3 * 4); // 1 panel x 3 steps x 4 bytes
+        assert_eq!(q.scale_bytes(), 7 * 4);
+        assert_eq!(q.heap_bytes(), packed_resident_bytes(3, 7, 4));
+        // full-range codes survive the round trip at every width
+        for &bits in &[2u8, 4, 8] {
+            let half = 1i32 << (bits - 1);
+            let codes: Vec<i32> = (-half..half).collect();
+            let k = codes.len();
+            let q = QPanels::pack(&codes, k, 1, bits, &[1.0]);
+            let deq = q.dequant();
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(deq[i], c as f32, "bits={bits} code={c}");
+            }
+        }
     }
 
     #[test]

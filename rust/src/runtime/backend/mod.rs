@@ -81,6 +81,13 @@ impl Pinned {
     /// tensors contribute 0 — their pages belong to the file cache. PJRT
     /// pins retain device buffers, not host memory, and report 0.
     ///
+    /// Dedup runs per owned *component*, not per value: a packed weight
+    /// owns two buffers (codes + scales) and each is counted exactly once
+    /// no matter how many values (or `Arc` clones across engines) share
+    /// it — the old per-value dedup keyed on a single pointer and would
+    /// have dropped the scale bytes of any value whose code buffer had
+    /// already been seen.
+    ///
     /// This is the [`crate::tensor::Storage`]-introspection the serving
     /// layer's residency accounting (and its tests) are built on.
     pub fn host_resident_bytes(&self) -> u64 {
@@ -89,9 +96,10 @@ impl Pinned {
                 let mut seen = std::collections::BTreeSet::new();
                 let mut total = 0u64;
                 for v in m.values() {
-                    let bytes = v.heap_bytes();
-                    if bytes > 0 && seen.insert(v.data_ptr()) {
-                        total += bytes as u64;
+                    for (ptr, bytes) in v.heap_components() {
+                        if bytes > 0 && seen.insert(ptr) {
+                            total += bytes as u64;
+                        }
                     }
                 }
                 total

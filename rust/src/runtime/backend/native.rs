@@ -62,14 +62,36 @@ impl<'a> In<'a> {
     fn f32(&self, name: &str) -> Result<&'a Tensor> {
         match self.value(name)? {
             Value::F32(t) => Ok(t),
-            Value::I32(_) => Err(anyhow!("input `{name}` of {}: expected f32", self.exec)),
+            _ => Err(anyhow!("input `{name}` of {}: expected f32", self.exec)),
+        }
+    }
+
+    /// Like [`In::f32`] but a missing binding is `None` instead of an
+    /// error — for inputs the packed serving path legitimately omits
+    /// (s_w / v0 / LoRA factors / target).
+    fn opt_f32(&self, name: &str) -> Result<Option<&'a Tensor>> {
+        match self.map.get(name).copied() {
+            None => Ok(None),
+            Some(Value::F32(t)) => Ok(Some(t)),
+            Some(_) => Err(anyhow!("input `{name}` of {}: expected f32", self.exec)),
         }
     }
 
     fn i32(&self, name: &str) -> Result<&'a crate::tensor::TensorI32> {
         match self.value(name)? {
             Value::I32(t) => Ok(t),
-            Value::F32(_) => Err(anyhow!("input `{name}` of {}: expected i32", self.exec)),
+            _ => Err(anyhow!("input `{name}` of {}: expected i32", self.exec)),
+        }
+    }
+
+    /// A linear's weight operand: dense f32 or packed-domain codes.
+    fn weight(&self, name: &str) -> Result<WeightRef<'a>> {
+        match self.value(name)? {
+            Value::F32(t) => Ok(WeightRef::Dense(t)),
+            Value::Packed(p) => Ok(WeightRef::Packed(p.panels().as_ref())),
+            Value::I32(_) => {
+                Err(anyhow!("input `{name}` of {}: expected f32 or packed weight", self.exec))
+            }
         }
     }
 
@@ -78,6 +100,17 @@ impl<'a> In<'a> {
         ensure!(!t.data.is_empty(), "input `{name}` of {}: empty scalar", self.exec);
         Ok(t.data[0])
     }
+}
+
+/// One linear's weight operand: the dense f32 matrix, or pre-panelized
+/// quantized codes ([`kernels::QPanels`]) the quantized matmul consumes
+/// directly. Packed weights carry the deployment-frozen rounding baked
+/// into the codes, so only the inference path (`w_en == 0`, no gradients)
+/// accepts them.
+#[derive(Clone, Copy)]
+enum WeightRef<'a> {
+    Dense(&'a Tensor),
+    Packed(&'a kernels::QPanels),
 }
 
 struct Glob {
@@ -103,14 +136,14 @@ impl Glob {
 struct BlockRef<'a> {
     attn_norm: &'a Tensor,
     mlp_norm: &'a Tensor,
-    linears: BTreeMap<&'static str, &'a Tensor>,
+    linears: BTreeMap<&'static str, WeightRef<'a>>,
 }
 
 impl<'a> BlockRef<'a> {
     fn parse(inp: &In<'a>, j: usize) -> Result<Self> {
         let mut linears = BTreeMap::new();
         for l in LINEARS {
-            linears.insert(l, inp.f32(&format!("blocks.{j}.{l}"))?);
+            linears.insert(l, inp.weight(&format!("blocks.{j}.{l}"))?);
         }
         Ok(Self {
             attn_norm: inp.f32(&format!("blocks.{j}.attn_norm"))?,
@@ -119,20 +152,24 @@ impl<'a> BlockRef<'a> {
         })
     }
 
-    fn lin(&self, l: &str) -> &'a Tensor {
+    fn lin(&self, l: &str) -> WeightRef<'a> {
         self.linears[l]
     }
 }
 
 /// Quantization parameters of one linear, as bound by
 /// `Pipeline::bind_qblock` (dense mode carries `v` instead of `a1`/`a2`).
+/// `s_w`, `v0` and the LoRA factors are optional because the packed
+/// serving path never binds them (the scale lives inside the packed
+/// panels, the rounding is baked into the codes); the soft-rounding /
+/// gradient paths that need them error cleanly when they are absent.
 struct QLinRef<'a> {
-    s_w: &'a Tensor,
+    s_w: Option<&'a Tensor>,
     alpha: f32,
     a1: Option<&'a Tensor>,
     a2: Option<&'a Tensor>,
     v_dense: Option<&'a Tensor>,
-    v0: &'a Tensor,
+    v0: Option<&'a Tensor>,
     qmax_w: f32,
     qmax_a: f32,
     w_en: f32,
@@ -149,23 +186,19 @@ impl<'a> QBlockRef<'a> {
         for l in LINEARS {
             let p = format!("qblocks.{j}.{l}");
             let (a1, a2, v_dense) = if dense {
-                (None, None, Some(inp.f32(&format!("{p}.v"))?))
+                (None, None, inp.opt_f32(&format!("{p}.v"))?)
             } else {
-                (
-                    Some(inp.f32(&format!("{p}.a1"))?),
-                    Some(inp.f32(&format!("{p}.a2"))?),
-                    None,
-                )
+                (inp.opt_f32(&format!("{p}.a1"))?, inp.opt_f32(&format!("{p}.a2"))?, None)
             };
             lin.insert(
                 l,
                 QLinRef {
-                    s_w: inp.f32(&format!("{p}.s_w"))?,
+                    s_w: inp.opt_f32(&format!("{p}.s_w"))?,
                     alpha: inp.scalar(&format!("{p}.alpha"))?,
                     a1,
                     a2,
                     v_dense,
-                    v0: inp.f32(&format!("{p}.v0"))?,
+                    v0: inp.opt_f32(&format!("{p}.v0"))?,
                     qmax_w: inp.scalar(&format!("{p}.qmax_w"))?,
                     qmax_a: inp.scalar(&format!("{p}.qmax_a"))?,
                     w_en: inp.scalar(&format!("{p}.w_en"))?,
@@ -202,33 +235,63 @@ struct QlCache {
 
 /// `y = blend_act(x) @ blend_weight(w)` with the rounding offset
 /// `rho = use_lora * h(v0 + delta) + (1 - use_lora) * nearest`.
+///
+/// A packed weight operand takes the packed-domain fast path: the weight
+/// blend is identity at `w_en == 0` and the codes already encode the
+/// exported rounding, so `y = qmatmul(blend_act(x), codes)` — bitwise-equal
+/// to dequantizing and running the f32 kernel, with no f32 weight ever
+/// materialized (and no per-call panel repacking).
 fn qlinear_fwd(
     x: &[f32],
     rows: usize,
-    w: &Tensor,
+    w: WeightRef,
     q: &QLinRef,
     use_lora: f32,
     grad: bool,
-) -> (Vec<f32>, Option<QlCache>) {
-    let (k, n) = (w.rows(), w.cols());
+) -> Result<(Vec<f32>, Option<QlCache>)> {
+    let wt = match w {
+        WeightRef::Packed(p) => {
+            ensure!(
+                q.w_en == 0.0 && !grad,
+                "packed weights serve the frozen deployment graph only \
+                 (w_en = 0, no gradients) — set CBQ_PACKED=0 for the f32 path"
+            );
+            let k = p.k();
+            debug_assert_eq!(x.len(), rows * k);
+            let x_eff = kernels::blend_act(x, k, q.alpha, q.qmax_a, q.a_en);
+            let y = kernels::qmatmul(&x_eff, rows, k, p);
+            return Ok((y, None));
+        }
+        WeightRef::Dense(t) => t,
+    };
+    let (k, n) = (wt.rows(), wt.cols());
     debug_assert_eq!(x.len(), rows * k);
+    if grad {
+        ensure!(q.s_w.is_some(), "quantized linear missing s_w (required for gradients)");
+    }
     let need_soft = grad || (use_lora > 0.0 && q.w_en != 0.0);
     let (v_pre, rho_soft) = if need_soft {
+        let v0 = q
+            .v0
+            .ok_or_else(|| anyhow!("quantized linear missing v0 (soft-rounding path)"))?;
         let delta = match (q.a1, q.a2, q.v_dense) {
             (Some(a1), Some(a2), _) => kernels::matmul(&a1.data, k, a1.cols(), &a2.data, n),
             (_, _, Some(v)) => v.data.to_vec(),
-            _ => unreachable!("qblock carries either a1/a2 or v"),
+            _ => bail!("quantized linear missing LoRA factors (a1/a2 or v) for the soft-rounding path"),
         };
-        let (vp, rs) = kernels::rho_soft(&q.v0.data, &delta);
+        let (vp, rs) = kernels::rho_soft(&v0.data, &delta);
         (Some(vp), Some(rs))
     } else {
         (None, None)
     };
     let rho_blend: Option<Vec<f32>> = if q.w_en != 0.0 {
+        let s_w = q
+            .s_w
+            .ok_or_else(|| anyhow!("quantized linear missing s_w (required when w_en != 0)"))?;
         if use_lora >= 1.0 {
             rho_soft.clone()
         } else {
-            let hard = kernels::rho_hard(&w.data, n, &q.s_w.data);
+            let hard = kernels::rho_hard(&wt.data, n, &s_w.data);
             if use_lora <= 0.0 {
                 Some(hard)
             } else {
@@ -244,8 +307,14 @@ fn qlinear_fwd(
     } else {
         None
     };
-    let w_hat =
-        kernels::blend_weight(&w.data, k, n, &q.s_w.data, rho_blend.as_deref(), q.qmax_w, q.w_en);
+    let w_hat = if q.w_en == 0.0 {
+        // identity blend: bitwise the same as blend_weight at w_en == 0,
+        // without requiring the (possibly unbound) s_w
+        wt.data.to_vec()
+    } else {
+        let s_w = q.s_w.expect("s_w presence verified computing rho_blend");
+        kernels::blend_weight(&wt.data, k, n, &s_w.data, rho_blend.as_deref(), q.qmax_w, q.w_en)
+    };
     let x_eff = kernels::blend_act(x, k, q.alpha, q.qmax_a, q.a_en);
     let y = kernels::matmul(&x_eff, rows, k, &w_hat, n);
     let cache = if grad {
@@ -253,7 +322,7 @@ fn qlinear_fwd(
     } else {
         None
     };
-    (y, cache)
+    Ok((y, cache))
 }
 
 /// Gradients of one quantized linear wrt its learnables.
@@ -272,7 +341,7 @@ struct LinGrads {
 fn qlinear_bwd(
     g: &[f32],
     rows: usize,
-    w: &Tensor,
+    w: WeightRef,
     q: &QLinRef,
     cache: &QlCache,
     use_lora: f32,
@@ -280,6 +349,13 @@ fn qlinear_bwd(
     gamma_c: f32,
     com_total: &mut f32,
 ) -> (Vec<f32>, LinGrads) {
+    let w = match w {
+        WeightRef::Dense(t) => t,
+        // qlinear_fwd rejects packed weights under grad, so a grad cache
+        // can only exist for a dense weight
+        WeightRef::Packed(_) => unreachable!("gradients never run on packed weights"),
+    };
+    let s_w = q.s_w.expect("s_w presence verified in the grad forward");
     let (k, n) = (w.rows(), w.cols());
     debug_assert_eq!(g.len(), rows * n);
     // matmul backward
@@ -292,7 +368,7 @@ fn qlinear_bwd(
         &w.data,
         k,
         n,
-        &q.s_w.data,
+        &s_w.data,
         cache.rho_blend.as_deref(),
         q.qmax_w,
         q.w_en,
@@ -389,12 +465,16 @@ impl NativeBackend {
         values: &BTreeMap<&str, &Value>,
     ) -> Result<BTreeMap<String, Tensor>> {
         let spec = self.spec(exec_name)?;
+        // validate the shape/dtype of every *provided* declared input;
+        // absent ones only error (with the same "missing input" message,
+        // via `In::value`) if the executable actually consumes them — the
+        // packed serving path legitimately omits s_w / v0 / LoRA factors
+        // and the reconstruction target
         for ispec in &spec.inputs {
-            let v = values.get(ispec.name.as_str()).ok_or_else(|| {
-                anyhow!("missing input `{}` for executable {exec_name}", ispec.name)
-            })?;
-            check_shape(ispec, v)
-                .with_context(|| format!("input `{}` of {exec_name}", ispec.name))?;
+            if let Some(v) = values.get(ispec.name.as_str()) {
+                check_shape(ispec, v)
+                    .with_context(|| format!("input `{}` of {exec_name}", ispec.name))?;
+            }
         }
         let (kind, cfg_name) = ExecKind::parse(exec_name).ok_or_else(|| {
             anyhow!("native backend cannot interpret executable name `{exec_name}`")
@@ -423,7 +503,9 @@ impl NativeBackend {
     fn win_fwd(&self, inp: &In, cfg: &ModelCfg, w: usize) -> Result<BTreeMap<String, Tensor>> {
         let glob = Glob::parse(inp)?;
         let h_in = inp.f32("h_in")?;
-        let target = inp.f32("target")?;
+        // serving only consumes h_out; the packed pinning path therefore
+        // skips binding a target and gets zero loss scalars back
+        let target = inp.opt_f32("target")?;
         let rows = cfg.batch * cfg.seq;
         let mut h = h_in.data.to_vec();
         for j in 0..w {
@@ -432,8 +514,10 @@ impl NativeBackend {
             let (h_out, _) = self.block_fwd(&h, rows, cfg, &blk, &qb, &glob, false, None)?;
             h = h_out;
         }
-        let (loss, mse, kld) =
-            kernels::recon_loss(&h, &target.data, cfg.d_model, glob.l2_w, glob.kld_w);
+        let (loss, mse, kld) = match target {
+            Some(t) => kernels::recon_loss(&h, &t.data, cfg.d_model, glob.l2_w, glob.kld_w),
+            None => (0.0, 0.0, 0.0),
+        };
         let mut out = BTreeMap::new();
         out.insert("h_out".into(), Tensor::new(h_in.dims.clone(), h));
         out.insert("loss".into(), Tensor::scalar(loss));
@@ -586,27 +670,28 @@ impl NativeBackend {
         if let Some(c) = capture.as_deref_mut() {
             c.insert("attn_in", a.clone());
         }
-        let (q_y, c_wq) = qlinear_fwd(&a, rows, blk.lin("wq"), qb.get("wq"), ul, grad);
-        let (k_y, c_wk) = qlinear_fwd(&a, rows, blk.lin("wk"), qb.get("wk"), ul, grad);
-        let (v_y, c_wv) = qlinear_fwd(&a, rows, blk.lin("wv"), qb.get("wv"), ul, grad);
+        let (q_y, c_wq) = qlinear_fwd(&a, rows, blk.lin("wq"), qb.get("wq"), ul, grad)?;
+        let (k_y, c_wk) = qlinear_fwd(&a, rows, blk.lin("wk"), qb.get("wk"), ul, grad)?;
+        let (v_y, c_wv) = qlinear_fwd(&a, rows, blk.lin("wv"), qb.get("wv"), ul, grad)?;
         let attn = self.attention(cfg.batch, cfg.seq, cfg.n_heads, cfg.head_dim);
         let (mix, heads) = attn.forward(&q_y, &k_y, &v_y, grad);
         if let Some(c) = capture.as_deref_mut() {
             c.insert("attn_mix", mix.clone());
         }
-        let (wo_y, c_wo) = qlinear_fwd(&mix, rows, blk.lin("wo"), qb.get("wo"), ul, grad);
+        let (wo_y, c_wo) = qlinear_fwd(&mix, rows, blk.lin("wo"), qb.get("wo"), ul, grad)?;
         let h_mid: Vec<f32> = h_in.iter().zip(&wo_y).map(|(&x, &y)| x + y).collect();
         let m = kernels::rmsnorm(&h_mid, d, &blk.mlp_norm.data);
         if let Some(c) = capture.as_deref_mut() {
             c.insert("mlp_in", m.clone());
         }
-        let (gate, c_wgate) = qlinear_fwd(&m, rows, blk.lin("wgate"), qb.get("wgate"), ul, grad);
-        let (up, c_wup) = qlinear_fwd(&m, rows, blk.lin("wup"), qb.get("wup"), ul, grad);
+        let (gate, c_wgate) = qlinear_fwd(&m, rows, blk.lin("wgate"), qb.get("wgate"), ul, grad)?;
+        let (up, c_wup) = qlinear_fwd(&m, rows, blk.lin("wup"), qb.get("wup"), ul, grad)?;
         let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| kernels::silu(g) * u).collect();
         if let Some(c) = capture.as_deref_mut() {
             c.insert("mlp_act", act.clone());
         }
-        let (down_y, c_wdown) = qlinear_fwd(&act, rows, blk.lin("wdown"), qb.get("wdown"), ul, grad);
+        let (down_y, c_wdown) =
+            qlinear_fwd(&act, rows, blk.lin("wdown"), qb.get("wdown"), ul, grad)?;
         let h_out: Vec<f32> = h_mid.iter().zip(&down_y).map(|(&x, &y)| x + y).collect();
         let cache = if grad {
             let mut ql = BTreeMap::new();
@@ -642,22 +727,22 @@ impl NativeBackend {
         qb: &QBlockRef,
         glob: &Glob,
         cache: &mut KvCache,
-    ) -> Vec<f32> {
+    ) -> Result<Vec<f32>> {
         let d = h_in.len();
         let ul = glob.use_lora;
         let a = kernels::rmsnorm(h_in, d, &blk.attn_norm.data);
-        let (q_y, _) = qlinear_fwd(&a, 1, blk.lin("wq"), qb.get("wq"), ul, false);
-        let (k_y, _) = qlinear_fwd(&a, 1, blk.lin("wk"), qb.get("wk"), ul, false);
-        let (v_y, _) = qlinear_fwd(&a, 1, blk.lin("wv"), qb.get("wv"), ul, false);
+        let (q_y, _) = qlinear_fwd(&a, 1, blk.lin("wq"), qb.get("wq"), ul, false)?;
+        let (k_y, _) = qlinear_fwd(&a, 1, blk.lin("wk"), qb.get("wk"), ul, false)?;
+        let (v_y, _) = qlinear_fwd(&a, 1, blk.lin("wv"), qb.get("wv"), ul, false)?;
         let mix = attn.attend_one(&q_y, &k_y, &v_y, cache);
-        let (wo_y, _) = qlinear_fwd(&mix, 1, blk.lin("wo"), qb.get("wo"), ul, false);
+        let (wo_y, _) = qlinear_fwd(&mix, 1, blk.lin("wo"), qb.get("wo"), ul, false)?;
         let h_mid: Vec<f32> = h_in.iter().zip(&wo_y).map(|(&x, &y)| x + y).collect();
         let m = kernels::rmsnorm(&h_mid, d, &blk.mlp_norm.data);
-        let (gate, _) = qlinear_fwd(&m, 1, blk.lin("wgate"), qb.get("wgate"), ul, false);
-        let (up, _) = qlinear_fwd(&m, 1, blk.lin("wup"), qb.get("wup"), ul, false);
+        let (gate, _) = qlinear_fwd(&m, 1, blk.lin("wgate"), qb.get("wgate"), ul, false)?;
+        let (up, _) = qlinear_fwd(&m, 1, blk.lin("wup"), qb.get("wup"), ul, false)?;
         let act: Vec<f32> = gate.iter().zip(&up).map(|(&g, &u)| kernels::silu(g) * u).collect();
-        let (down_y, _) = qlinear_fwd(&act, 1, blk.lin("wdown"), qb.get("wdown"), ul, false);
-        h_mid.iter().zip(&down_y).map(|(&x, &y)| x + y).collect()
+        let (down_y, _) = qlinear_fwd(&act, 1, blk.lin("wdown"), qb.get("wdown"), ul, false)?;
+        Ok(h_mid.iter().zip(&down_y).map(|(&x, &y)| x + y).collect())
     }
 
     /// Backward through one block. Returns `(dh_in, per-linear grads)`.
@@ -852,7 +937,7 @@ impl Backend for NativeBackend {
                     &qb,
                     &glob,
                     &mut seq_kv.blocks[start + j],
-                );
+                )?;
                 hbuf[r * d..(r + 1) * d].copy_from_slice(&out);
             }
         }

@@ -44,6 +44,10 @@ impl Value {
                     xla::Literal::vec1(&t.data).reshape(&dims).map_err(xerr)?
                 }
             }
+            Value::Packed(_) => bail!(
+                "packed-domain weights are native-backend only — \
+                 rerun with `--backend native` or `CBQ_PACKED=0`"
+            ),
         };
         Ok(lit)
     }

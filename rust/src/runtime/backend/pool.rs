@@ -229,6 +229,21 @@ pub fn run_scoped<'scope>(tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
     }
 }
 
+/// Enqueue one fire-and-forget task on the persistent pool and return
+/// immediately. Unlike [`run_scoped`] there is no completion latch: the
+/// caller never waits, so the closure must own everything it touches
+/// (`'static`). A panic inside the task is caught and dropped — detached
+/// work is advisory by contract (its only current use is mmap window
+/// prefetch, where failure just means the pages fault in later).
+pub fn spawn_detached(task: impl FnOnce() + Send + 'static) {
+    let pool = global();
+    let mut guard = pool.queue.lock();
+    guard.push_back(Box::new(move || {
+        let _ = catch_unwind(AssertUnwindSafe(task));
+    }));
+    pool.queue.ready.notify_all();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

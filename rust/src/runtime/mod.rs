@@ -21,6 +21,7 @@ pub mod synth;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,6 +32,31 @@ pub use backend::{
 pub use manifest::{ExecSpec, Manifest, ModelCfg, TensorSpec};
 
 use crate::tensor::{io, Tensor, TensorI32};
+use backend::kernels::QPanels;
+
+/// A packed-domain weight operand: pre-panelized quantized codes + scales
+/// ([`QPanels`]) shared via `Arc`, standing in for the f32 weight tensor an
+/// executable input declares. Its logical dims are the dequantized shape
+/// `[k, n]`, so shape checks treat it like the f32 tensor it replaces; the
+/// native backend's quantized matmul consumes the codes directly.
+#[derive(Clone, Debug)]
+pub struct PackedValue {
+    dims: [usize; 2],
+    panels: Arc<QPanels>,
+}
+
+impl PackedValue {
+    /// Wrap pre-built panels (cheap to clone — engines sharing a window
+    /// share one code buffer).
+    pub fn new(panels: Arc<QPanels>) -> Self {
+        Self { dims: panels.dims(), panels }
+    }
+
+    /// The shared panels.
+    pub fn panels(&self) -> &Arc<QPanels> {
+        &self.panels
+    }
+}
 
 /// A typed runtime value bound to an executable input.
 #[derive(Clone, Debug)]
@@ -39,6 +65,8 @@ pub enum Value {
     F32(Tensor),
     /// An int32 tensor (token ids, targets).
     I32(TensorI32),
+    /// A packed-domain quantized weight (codes + scales, no f32 copy).
+    Packed(PackedValue),
 }
 
 impl From<Tensor> for Value {
@@ -54,29 +82,66 @@ impl From<TensorI32> for Value {
 }
 
 impl Value {
-    /// The tensor's shape, dtype-independent.
+    /// The tensor's shape, dtype-independent (a packed weight reports its
+    /// dequantized `[k, n]` shape).
     pub fn dims(&self) -> &[usize] {
         match self {
             Value::F32(t) => &t.dims,
             Value::I32(t) => &t.dims,
+            Value::Packed(p) => &p.dims,
         }
     }
 
     /// Heap bytes the underlying storage keeps resident (0 for
-    /// memory-mapped views — see [`crate::tensor::Storage::heap_bytes`]).
+    /// memory-mapped views — see [`crate::tensor::Storage::heap_bytes`];
+    /// codes + scales for a packed weight).
     pub fn heap_bytes(&self) -> usize {
         match self {
             Value::F32(t) => t.data.heap_bytes(),
             Value::I32(t) => t.data.heap_bytes(),
+            Value::Packed(p) => p.panels.heap_bytes(),
         }
     }
 
     /// Address of the first element — the identity key residency
-    /// accounting dedups shared buffers by.
+    /// accounting dedups shared buffers by. Prefer
+    /// [`Value::heap_components`] for accounting: a packed value owns
+    /// *two* buffers and this returns only the code buffer's address.
     pub fn data_ptr(&self) -> usize {
         match self {
             Value::F32(t) => t.data.as_ptr() as usize,
             Value::I32(t) => t.data.as_ptr() as usize,
+            Value::Packed(p) => p.panels.codes_ptr(),
+        }
+    }
+
+    /// Every distinct owned heap buffer behind this value as
+    /// `(address, bytes)` pairs — empty for mapped storage (the bytes
+    /// belong to the file mapping, not the process heap). Residency
+    /// accounting dedups on the address so buffers shared across values
+    /// (Arc clones) are counted once.
+    pub fn heap_components(&self) -> Vec<(usize, usize)> {
+        match self {
+            Value::F32(t) => {
+                let b = t.data.heap_bytes();
+                if b > 0 {
+                    vec![(t.data.as_ptr() as usize, b)]
+                } else {
+                    Vec::new()
+                }
+            }
+            Value::I32(t) => {
+                let b = t.data.heap_bytes();
+                if b > 0 {
+                    vec![(t.data.as_ptr() as usize, b)]
+                } else {
+                    Vec::new()
+                }
+            }
+            Value::Packed(p) => vec![
+                (p.panels.codes_ptr(), p.panels.code_bytes()),
+                (p.panels.scales_ptr(), p.panels.scale_bytes()),
+            ],
         }
     }
 
@@ -85,6 +150,7 @@ impl Value {
         match self {
             Value::F32(t) => t.data.is_mapped(),
             Value::I32(t) => t.data.is_mapped(),
+            Value::Packed(_) => false,
         }
     }
 }

@@ -11,12 +11,17 @@
 //!   window executables* (the same greedy covering `forward_hidden` uses).
 //!   Eagerly loaded models **pin** every static input (weights, quant
 //!   state, globals) once at engine build; mmap-loaded models pin
-//!   **lazily** — a window's codes are unpacked and pinned on first touch,
-//!   a bounded LRU keeps at most `--resident-windows` (or
-//!   `CBQ_RESIDENT_MB`) windows' worth of unpacked tensors resident, and
-//!   eviction drops straight back to the file mapping. Responses are
-//!   bitwise-identical across all of eager / lazy / evict-and-retouch
-//!   (asserted in `rust/tests/mmap.rs`);
+//!   **lazily** — a window's codes are pinned on first touch, a bounded
+//!   LRU keeps at most `--resident-windows` (or `CBQ_RESIDENT_MB`)
+//!   windows' worth of tensors resident, and eviction drops straight back
+//!   to the file mapping. On the native backend windows default to
+//!   **packed-domain pinning** ([`EngineOptions::packed`]): the 2/4/8-bit
+//!   codes + per-channel scales are pinned as-is and the quantized matmul
+//!   reads them in place — 4–16x smaller resident windows than the f32
+//!   path, and a background prefetch warms the next planned window's file
+//!   pages while the current one executes. Responses are bitwise-identical
+//!   across all of eager / lazy / packed / evict-and-retouch (asserted in
+//!   `rust/tests/mmap.rs`);
 //! * [`batcher::Batcher`] — coalesces queued eval requests (perplexity
 //!   segments, zero-shot choice items, forward-hidden calls) into maximal
 //!   batches, optionally executes several window dispatches concurrently
@@ -55,7 +60,8 @@ use anyhow::{Context, Result};
 use crate::config::RoundingMode;
 use crate::coordinator::{window_plan, Pipeline, QuantizedModel};
 use crate::model_state::embed_lookup;
-use crate::runtime::{Artifacts, Backend, Bindings, Pinned};
+use crate::runtime::backend::{kernels, pool};
+use crate::runtime::{Artifacts, Backend, Bindings, PackedValue, Pinned, Value};
 use crate::snapshot::SnapshotModel;
 use crate::tensor::{Tensor, TensorI32};
 
@@ -76,13 +82,26 @@ pub use scheduler::{
 /// are enforced together; `None` means unlimited on that axis. With no
 /// bound at all, every window stays resident after first touch (lazy
 /// cold-start, eager steady-state).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct EngineOptions {
     /// Maximum pinned windows kept resident (CLI `--resident-windows`).
     pub resident_windows: Option<usize>,
     /// Maximum bytes of unpacked window tensors kept resident
     /// (`CBQ_RESIDENT_MB`, converted to bytes).
     pub resident_bytes: Option<u64>,
+    /// Serve mmap windows straight from the packed 2/4/8-bit codes
+    /// ([`crate::snapshot::lazy::LazyModel::block_packed`]) instead of
+    /// dequantizing to f32 at pin time — 4–16x smaller resident windows,
+    /// bitwise-identical responses. Effective only on the native backend
+    /// for mmap-loaded snapshots; the `CBQ_PACKED=0` kill switch overrides
+    /// it to off (CLI `--packed` / `--no-packed`).
+    pub packed: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self { resident_windows: None, resident_bytes: None, packed: true }
+    }
 }
 
 impl EngineOptions {
@@ -90,9 +109,10 @@ impl EngineOptions {
     /// unpacked bytes; windows stay unlimited unless the CLI overrides. An
     /// unparseable value is loudly ignored — silently dropping a mistyped
     /// budget would leave residency unbounded, the exact failure the
-    /// variable exists to prevent.
+    /// variable exists to prevent. Packed serving defaults on
+    /// (`CBQ_PACKED=0` disables).
     pub fn from_env() -> Self {
-        let mut opts = Self { resident_windows: None, resident_bytes: None };
+        let mut opts = Self::default();
         if let Ok(raw) = std::env::var("CBQ_RESIDENT_MB") {
             if !raw.is_empty() {
                 match raw.parse::<u64>() {
@@ -129,6 +149,12 @@ pub struct ResidencyStats {
     pub hits: u64,
     /// Windows evicted to stay under budget.
     pub evictions: u64,
+    /// Background prefetches issued for the next planned window
+    /// (`madvise(WILLNEED)` + page touch on the pool, overlapped with the
+    /// current window's execution).
+    pub prefetches: u64,
+    /// Faults that landed on a window a prefetch had already warmed.
+    pub prefetch_hits: u64,
 }
 
 /// One resident entry of the lazy window cache.
@@ -156,6 +182,11 @@ struct WindowCache {
     faults: u64,
     hits: u64,
     evictions: u64,
+    prefetches: u64,
+    prefetch_hits: u64,
+    /// Windows with an issued, not-yet-consumed background prefetch; a
+    /// fault on a marked window counts as a `prefetch_hit` and clears it.
+    prefetched: std::collections::BTreeSet<usize>,
 }
 
 enum Steps {
@@ -166,6 +197,8 @@ enum Steps {
         cache: Mutex<WindowCache>,
         max_windows: usize,
         max_bytes: Option<u64>,
+        /// Pin packed codes + scales instead of dequantized f32 weights.
+        packed: bool,
     },
 }
 
@@ -306,6 +339,10 @@ impl<'rt> ServeEngine<'rt> {
                     cache: Mutex::new(WindowCache::default()),
                     max_windows: opts.resident_windows.unwrap_or(usize::MAX).max(1),
                     max_bytes: opts.resident_bytes,
+                    // packed-domain pinning is a native-backend kernel path;
+                    // the PJRT backend needs f32 literals. CBQ_PACKED=0 is
+                    // the process-wide kill switch.
+                    packed: opts.packed && kernels::packed_enabled() && rt.name() == "native",
                 }
             }
         };
@@ -337,10 +374,13 @@ impl<'rt> ServeEngine<'rt> {
         rt.pin(exec, b.inner())
     }
 
-    /// Materialize + pin window `i` of the plan from a lazy model: unpack
-    /// every member block's codes, dequantize, bind. The materialized
-    /// intermediates drop here; the pin is the only retention.
-    fn materialize_window(&self, i: usize) -> Result<(Pinned, u64)> {
+    /// Materialize + pin window `i` of the plan from a lazy model. On the
+    /// f32 path every member block's codes are unpacked + dequantized; on
+    /// the packed path the codes are re-panelized and pinned *as codes*
+    /// (plus scales), so the pin keeps `bits/32` of the f32 weight bytes.
+    /// The materialized intermediates drop here; the pin is the only
+    /// retention.
+    fn materialize_window(&self, i: usize, packed: bool) -> Result<(Pinned, u64)> {
         let lazy = self
             .snap
             .model
@@ -350,18 +390,40 @@ impl<'rt> ServeEngine<'rt> {
         let bits = &self.snap.meta.bits;
         let (start, w, exec) = &self.plan[i];
         let (start, w) = (*start, *w);
-        let mats: Vec<_> = (0..w)
-            .map(|j| lazy.block(start + j))
-            .collect::<Result<_>>()?;
-        let blocks: Vec<_> = mats.iter().map(|m| (&m.params, &m.qstate)).collect();
-        let b = window_bindings(
-            cfg.batch,
-            cfg.seq,
-            cfg.d_model,
-            bits.qmax_a(),
-            if bits.act_enabled() { 1.0 } else { 0.0 },
-            &blocks,
-        );
+        let a_en = if bits.act_enabled() { 1.0 } else { 0.0 };
+        let b = if packed {
+            // Packed-domain bindings: the weight operand is the panelized
+            // codes; s_w lives inside the panels and v0 / LoRA factors /
+            // `target` are never read by the frozen deployment graph
+            // (w_en = 0, use_lora = 0), so none of them is bound — the
+            // native backend errors cleanly if anything tries to use them.
+            let mut b = Bindings::new();
+            for j in 0..w {
+                let blk = lazy.block_packed(start + j)?;
+                b.set(format!("blocks.{j}.attn_norm"), blk.attn_norm);
+                b.set(format!("blocks.{j}.mlp_norm"), blk.mlp_norm);
+                for (l, lin) in &blk.linears {
+                    b.0.insert(
+                        format!("blocks.{j}.{l}"),
+                        Value::Packed(PackedValue::new(lin.panels.clone())),
+                    );
+                    let p = format!("qblocks.{j}.{l}");
+                    b.scalar(format!("{p}.alpha"), lin.alpha);
+                    b.scalar(format!("{p}.qmax_w"), crate::config::qmax(lin.bits));
+                    b.scalar(format!("{p}.qmax_a"), bits.qmax_a());
+                    b.scalar(format!("{p}.w_en"), 0.0);
+                    b.scalar(format!("{p}.a_en"), a_en);
+                }
+            }
+            Pipeline::bind_globals(&mut b, 0.0, 2.0, 0.0, 1.0, 1.0);
+            b
+        } else {
+            let mats: Vec<_> = (0..w)
+                .map(|j| lazy.block(start + j))
+                .collect::<Result<_>>()?;
+            let blocks: Vec<_> = mats.iter().map(|m| (&m.params, &m.qstate)).collect();
+            window_bindings(cfg.batch, cfg.seq, cfg.d_model, bits.qmax_a(), a_en, &blocks)
+        };
         let pinned = self.rt.pin(exec, b.inner())?;
         let bytes = pinned.host_resident_bytes();
         Ok((pinned, bytes))
@@ -389,10 +451,21 @@ impl<'rt> ServeEngine<'rt> {
     /// Estimated heap bytes of window `i` once pinned (used to make room
     /// *before* materializing, so the byte budget bounds the peak, not
     /// just the steady state).
-    fn window_bytes_estimate(&self, i: usize) -> u64 {
+    fn window_bytes_estimate(&self, i: usize, packed: bool) -> u64 {
         let (start, w, _) = &self.plan[i];
         let (start, w) = (*start, *w);
         let cfg = &self.snap.meta.cfg;
+        if packed {
+            // codes + scales per linear, norms, plus a scalar-binding pad;
+            // no target / v0 / LoRA placeholders are ever bound
+            let per_blocks: u64 = match self.snap.model.lazy() {
+                Some(lazy) => {
+                    (0..w).map(|j| lazy.block_packed_resident_estimate(start + j)).sum()
+                }
+                None => 0,
+            };
+            return per_blocks + 1024 * w as u64;
+        }
         let per_blocks: u64 = match self.snap.model.lazy() {
             Some(lazy) => (0..w).map(|j| lazy.block_resident_estimate(start + j)).sum(),
             None => 0,
@@ -438,8 +511,8 @@ impl<'rt> ServeEngine<'rt> {
     fn step_pinned(&self, i: usize) -> Result<Arc<Pinned>> {
         match &self.steps {
             Steps::Eager(pins) => Ok(pins[i].clone()),
-            Steps::Lazy { cache, max_windows, max_bytes } => {
-                {
+            Steps::Lazy { cache, max_windows, max_bytes, packed } => {
+                let hit = {
                     let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
                     // reborrow once so disjoint-field borrows (entries vs
                     // the counters) work through the guard
@@ -449,42 +522,99 @@ impl<'rt> ServeEngine<'rt> {
                     if let Some(win) = c.entries.get_mut(&i) {
                         win.last_use = tick;
                         c.hits += 1;
-                        return Ok(win.pinned.clone());
+                        Some(win.pinned.clone())
+                    } else {
+                        c.faults += 1;
+                        if c.prefetched.remove(&i) {
+                            // a background prefetch warmed this window's
+                            // file pages before the fault landed
+                            c.prefetch_hits += 1;
+                        }
+                        // make room first so the budget bounds the peak
+                        let est = self.window_bytes_estimate(i, *packed);
+                        evict_idle(c, 1, est, *max_windows, *max_bytes);
+                        None
                     }
-                    c.faults += 1;
-                    // make room first so the budget bounds the peak
-                    let est = self.window_bytes_estimate(i);
-                    evict_idle(c, 1, est, *max_windows, *max_bytes);
-                }
-                // the expensive part — unpack + dequantize + pin — runs
-                // with the cache unlocked
-                let (pinned, bytes) = self.materialize_window(i)?;
-                let pinned = Arc::new(pinned);
-                let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
-                let c = &mut *guard;
-                c.tick += 1;
-                let tick = c.tick;
-                if let Some(win) = c.entries.get_mut(&i) {
-                    // another lane won the race while we were unlocked:
-                    // share its pin, drop ours
-                    win.last_use = tick;
-                    return Ok(win.pinned.clone());
-                }
-                c.resident_bytes += bytes;
-                let span = self.window_file_span(i);
-                c.entries.insert(
-                    i,
-                    LazyWindow { pinned: pinned.clone(), bytes, last_use: tick, span },
-                );
-                c.peak_bytes = c.peak_bytes.max(c.resident_bytes);
-                c.peak_windows = c.peak_windows.max(c.entries.len());
-                // room reserved before unlocking may have been taken by a
-                // concurrent fault — restore the budget (the new entry is
-                // protected: we still hold its Arc)
-                evict_idle(c, 0, 0, *max_windows, *max_bytes);
+                };
+                let pinned = match hit {
+                    Some(p) => p,
+                    None => {
+                        // the expensive part — unpack + (re)pack or
+                        // dequantize + pin — runs with the cache unlocked
+                        let (pinned, bytes) = self.materialize_window(i, *packed)?;
+                        let pinned = Arc::new(pinned);
+                        let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+                        let c = &mut *guard;
+                        c.tick += 1;
+                        let tick = c.tick;
+                        if let Some(win) = c.entries.get_mut(&i) {
+                            // another lane won the race while we were
+                            // unlocked: share its pin, drop ours
+                            win.last_use = tick;
+                            win.pinned.clone()
+                        } else {
+                            c.resident_bytes += bytes;
+                            let span = self.window_file_span(i);
+                            c.entries.insert(
+                                i,
+                                LazyWindow { pinned: pinned.clone(), bytes, last_use: tick, span },
+                            );
+                            c.peak_bytes = c.peak_bytes.max(c.resident_bytes);
+                            c.peak_windows = c.peak_windows.max(c.entries.len());
+                            // room reserved before unlocking may have been
+                            // taken by a concurrent fault — restore the
+                            // budget (the new entry is protected: we still
+                            // hold its Arc)
+                            evict_idle(c, 0, 0, *max_windows, *max_bytes);
+                            pinned
+                        }
+                    }
+                };
+                // overlap the *next* planned window's file I/O with this
+                // window's execution
+                self.prefetch_next(i, cache);
                 Ok(pinned)
             }
         }
+    }
+
+    /// Issue a background prefetch for the window the plan visits after
+    /// `i` (wrap-around: forwards loop the plan every batch). Fire-and-
+    /// forget on the worker pool: `madvise(WILLNEED)` over the window's
+    /// file span, then one volatile touch per page so the readahead
+    /// actually commits before the fault lands. Best-effort by contract —
+    /// a dropped prefetch only means the pages fault in on touch, exactly
+    /// as without prefetch.
+    fn prefetch_next(&self, i: usize, cache: &Mutex<WindowCache>) {
+        if self.plan.len() < 2 {
+            return; // single-window plans: it is already resident
+        }
+        let next = (i + 1) % self.plan.len();
+        let Some((map, off, len)) = self.window_file_span(next) else {
+            return; // not a real mapping: nothing to warm
+        };
+        {
+            let mut guard = cache.lock().unwrap_or_else(|e| e.into_inner());
+            let c = &mut *guard;
+            if c.entries.contains_key(&next) || !c.prefetched.insert(next) {
+                return; // resident, or a prefetch is already in flight
+            }
+            c.prefetches += 1;
+        }
+        pool::spawn_detached(move || {
+            let _ = map.advise_range(mmap::Advice::WillNeed, off, len);
+            let bytes = map.as_bytes();
+            let end = (off + len).min(bytes.len());
+            let mut acc = 0u8;
+            let mut p = off;
+            while p < end {
+                // volatile: the read must survive optimization — its only
+                // purpose is forcing the page in
+                acc ^= unsafe { std::ptr::read_volatile(bytes.as_ptr().add(p)) };
+                p += 4096;
+            }
+            std::hint::black_box(acc);
+        });
     }
 
     /// The bound snapshot.
@@ -502,6 +632,12 @@ impl<'rt> ServeEngine<'rt> {
         matches!(self.steps, Steps::Lazy { .. })
     }
 
+    /// Does this engine pin windows in the packed domain (codes + scales,
+    /// no dequantized f32 weights)? Implies [`Self::is_lazy`].
+    pub fn is_packed(&self) -> bool {
+        matches!(self.steps, Steps::Lazy { packed: true, .. })
+    }
+
     /// Current window-residency accounting. For eager engines this is the
     /// static whole-plan figure; for lazy engines it reflects the LRU
     /// cache (`peak_bytes` is what the configured budget bounds).
@@ -517,6 +653,8 @@ impl<'rt> ServeEngine<'rt> {
                     faults: pins.len() as u64,
                     hits: 0,
                     evictions: 0,
+                    prefetches: 0,
+                    prefetch_hits: 0,
                 }
             }
             Steps::Lazy { cache, .. } => {
@@ -529,6 +667,8 @@ impl<'rt> ServeEngine<'rt> {
                     faults: c.faults,
                     hits: c.hits,
                     evictions: c.evictions,
+                    prefetches: c.prefetches,
+                    prefetch_hits: c.prefetch_hits,
                 }
             }
         }

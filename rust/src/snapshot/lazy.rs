@@ -32,6 +32,7 @@ use crate::config::RoundingMode;
 use crate::coordinator::LinearQ;
 use crate::model_state::BlockParams;
 use crate::quant::{EPS, LINEARS};
+use crate::runtime::backend::kernels::{self, QPanels};
 use crate::tensor::io::{Entry, PackedTensor, DTYPE_F32, DTYPE_I32, DTYPE_PACKED};
 use crate::tensor::{Storage, Tensor};
 
@@ -43,6 +44,33 @@ pub struct MaterializedBlock {
     /// Per-linear quantization state (scales, clips, LoRA factors),
     /// reconstructed exactly as the eager loader does.
     pub qstate: BTreeMap<String, LinearQ>,
+}
+
+/// One linear of a [`PackedBlock`]: the quantized codes pre-panelized for
+/// the native backend's packed matmul, plus the scalar clip the forward
+/// pass needs. The `Arc` makes pinning cheap to share across engines.
+pub struct PackedLinear {
+    /// Codes + per-channel scales in the panel layout
+    /// [`kernels::qmatmul`] consumes directly.
+    pub panels: Arc<QPanels>,
+    /// Activation clip scalar (`qblocks.*.alpha` binding).
+    pub alpha: f32,
+    /// Weight bit-width this linear was exported at.
+    pub bits: u8,
+}
+
+/// One transformer block materialized in the *packed domain*: norm weights
+/// (zero-copy from the mapping when possible) plus per-linear
+/// [`PackedLinear`] panels — no dequantized f32 weight copy is ever built.
+/// This is what a packed serve window pins in place of a
+/// [`MaterializedBlock`], keeping 4–16x fewer resident bytes per block.
+pub struct PackedBlock {
+    /// Attention RMS-norm weights `[d_model]`.
+    pub attn_norm: Tensor,
+    /// MLP RMS-norm weights `[d_model]`.
+    pub mlp_norm: Tensor,
+    /// Linear name (`wq` … `wdown`) → packed panels + scalars.
+    pub linears: BTreeMap<String, PackedLinear>,
 }
 
 /// A CBQS snapshot held as an open container instead of a fully decoded
@@ -292,12 +320,58 @@ impl LazyModel {
         })
     }
 
+    /// Materialize block `i` in the packed domain: CRC-check the code
+    /// records and re-panelize them for [`kernels::qmatmul`], without ever
+    /// building the dequantized f32 weights. Scales are folded into the
+    /// panels pre-floored by `EPS`, so the packed matmul reproduces
+    /// [`dequant_codes`] → f32 matmul bit-exactly.
+    pub fn block_packed(&self, i: usize) -> Result<PackedBlock> {
+        let cfg = &self.meta.cfg;
+        ensure!(i < cfg.n_layers, "block {i} out of range (model has {})", cfg.n_layers);
+        let d = cfg.d_model;
+        let attn_norm = self.tensor_f32(&format!("blocks.{i}.attn_norm"), Some(&[d]))?;
+        let mlp_norm = self.tensor_f32(&format!("blocks.{i}.mlp_norm"), Some(&[d]))?;
+        let mut linears = BTreeMap::new();
+        for l in LINEARS {
+            let (fan_in, fan_out) = cfg.linear_shape(l);
+            let packed = self.packed(&format!("blocks.{i}.{l}.q"))?;
+            ensure!(
+                packed.dims == [fan_in, fan_out],
+                "blocks.{i}.{l}.q: dims {:?}, config wants [{fan_in}, {fan_out}]",
+                packed.dims
+            );
+            let spec_bits = self.meta.bits.weight_bits(i, l);
+            ensure!(
+                packed.bits == spec_bits,
+                "blocks.{i}.{l}: packed at {} bits but spec says {spec_bits}",
+                packed.bits
+            );
+            let s_w = self.tensor_f32(&format!("blocks.{i}.{l}.s_w"), Some(&[fan_out]))?;
+            let alpha = self.tensor_f32(&format!("blocks.{i}.{l}.alpha"), Some(&[]))?.item();
+            let codes = packed.unpack();
+            let panels = QPanels::pack(&codes, fan_in, fan_out, packed.bits, &s_w.data);
+            linears.insert(
+                l.to_string(),
+                PackedLinear { panels: Arc::new(panels), alpha, bits: packed.bits },
+            );
+        }
+        Ok(PackedBlock { attn_norm, mlp_norm, linears })
+    }
+
     /// Heap bytes materializing block `i` costs (dequantized weights, the
     /// re-derived `v0` warm-start of equal size, scales, LoRA factors,
     /// norms) — the per-block unit behind `CBQ_RESIDENT_MB` sizing. A
     /// width-`w` pinned window keeps roughly `w` times this resident.
     pub fn block_resident_estimate(&self, i: usize) -> u64 {
         block_resident_estimate(&self.container.records, i)
+    }
+
+    /// Heap bytes pinning block `i` costs on the *packed* serving path:
+    /// panelized codes + per-channel scales per linear, plus the norm
+    /// weights. Compare with [`Self::block_resident_estimate`] — the ratio
+    /// is roughly `32 / bits` for the weight-dominated records.
+    pub fn block_packed_resident_estimate(&self, i: usize) -> u64 {
+        block_packed_resident_estimate(&self.container.records, i)
     }
 }
 
@@ -313,6 +387,34 @@ pub fn block_resident_estimate(records: &[RecordMeta], i: usize) -> u64 {
         .map(|r| {
             let mult = if r.dtype == DTYPE_PACKED { 2 } else { 1 };
             mult * r.unpacked_bytes()
+        })
+        .sum()
+}
+
+/// Per-block resident-bytes estimate for the *packed* serving path: each
+/// code record costs its panelized codes + per-channel scales (see
+/// [`kernels::packed_resident_bytes`]); `s_w` is folded into the panels
+/// (counted there, not again); LoRA factors are never bound when serving
+/// packed (`use_lora = 0`); everything else (norms, alpha scalars) is
+/// counted at f32-materialized size. Shared by [`LazyModel`] and
+/// `cbq snapshot-info`.
+pub fn block_packed_resident_estimate(records: &[RecordMeta], i: usize) -> u64 {
+    let prefix = format!("blocks.{i}.");
+    records
+        .iter()
+        .filter(|r| r.name.starts_with(&prefix))
+        .map(|r| {
+            if r.dtype == DTYPE_PACKED {
+                debug_assert_eq!(r.dims.len(), 2);
+                kernels::packed_resident_bytes(r.dims[0], r.dims[1], r.bits) as u64
+            } else if r.name.ends_with(".s_w")
+                || r.name.ends_with(".a1")
+                || r.name.ends_with(".a2")
+            {
+                0
+            } else {
+                r.unpacked_bytes()
+            }
         })
         .sum()
 }

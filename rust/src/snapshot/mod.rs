@@ -441,6 +441,13 @@ pub struct SnapshotInfo {
     /// The largest single block's eager-residency estimate — multiply by
     /// the window width to size `CBQ_RESIDENT_MB` / `--resident-windows`.
     pub max_block_resident_bytes: u64,
+    /// Sum of every block's *packed* pinning cost (panelized codes +
+    /// per-channel scales + norms — what `--packed` serving keeps resident
+    /// instead of dequantized f32 weights).
+    pub packed_resident_estimate_bytes: u64,
+    /// The largest single block's packed pinning cost — the `--packed`
+    /// counterpart of [`Self::max_block_resident_bytes`].
+    pub max_block_packed_resident_bytes: u64,
     /// `inspect` only returns when every checksum verified (metadata and
     /// all payloads), so this is always true on success — carried for
     /// report serialization.
@@ -512,6 +519,9 @@ pub fn inspect(path: impl AsRef<Path>) -> Result<SnapshotInfo> {
         .map(|i| lazy::block_resident_estimate(&c.records, i))
         .max()
         .unwrap_or(0);
+    let packed_per_block: Vec<u64> = (0..meta.cfg.n_layers)
+        .map(|i| lazy::block_packed_resident_estimate(&c.records, i))
+        .collect();
     Ok(SnapshotInfo {
         meta,
         version: c.version,
@@ -522,6 +532,8 @@ pub fn inspect(path: impl AsRef<Path>) -> Result<SnapshotInfo> {
         unpacked_bytes,
         resident_estimate_bytes: resident,
         max_block_resident_bytes,
+        packed_resident_estimate_bytes: packed_per_block.iter().sum(),
+        max_block_packed_resident_bytes: packed_per_block.into_iter().max().unwrap_or(0),
         checksum_ok: true,
     })
 }

@@ -9,6 +9,9 @@
 //!   responses to the eager engine while peak residency stays bounded
 //!   (asserted through `Storage`/`Pinned` heap introspection), and
 //!   eviction-then-retouch re-materializes bitwise-identical tensors;
+//! * packed-domain pinning (codes + scales, no dequantized f32) serves
+//!   bitwise-identically to both f32 engines while pinning >= 4x fewer
+//!   bytes at 4 bits, and background prefetch warms the next window;
 //! * several engines (and threads) over one registry entry share a single
 //!   mapping of the file.
 //!
@@ -235,7 +238,9 @@ fn mmap_serving_is_bitwise_identical_with_bounded_residency() {
         &rt,
         &art,
         mmap_snap,
-        EngineOptions { resident_windows: Some(1), resident_bytes: None },
+        // packed: false — this test covers the dequantized-f32 lazy path;
+        // the packed domain has its own identity + residency test below
+        EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: false },
     )
     .unwrap();
     assert!(lazy.is_lazy() && !eager.is_lazy());
@@ -272,6 +277,69 @@ fn mmap_serving_is_bitwise_identical_with_bounded_residency() {
 }
 
 #[test]
+fn packed_serving_is_bitwise_identical_with_smaller_residency() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p = tmp("packed.cbqs");
+    let (cfg, _) = export_snapshot(&art, &rt, &p);
+
+    let mut reg = ModelRegistry::new();
+    let eager_snap = reg.load_with("pk-eager", &p, LoadMode::Eager).unwrap();
+    let f32_snap = reg.load_with("pk-f32", &p, LoadMode::Mmap).unwrap();
+    let packed_snap = reg.load_with("pk-packed", &p, LoadMode::Mmap).unwrap();
+
+    let eager = ServeEngine::new(&rt, &art, eager_snap).unwrap();
+    let f32_eng = ServeEngine::with_options(
+        &rt,
+        &art,
+        f32_snap,
+        EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: false },
+    )
+    .unwrap();
+    let packed_eng = ServeEngine::with_options(
+        &rt,
+        &art,
+        packed_snap.clone(),
+        EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: true },
+    )
+    .unwrap();
+    assert!(packed_eng.is_packed(), "native mmap engine must honor packed: true");
+    assert!(!f32_eng.is_packed() && !eager.is_packed());
+
+    // bitwise identity across all three domains: eager f32, lazy f32, lazy
+    // packed (2/4/8-bit codes + scales fed straight to the quantized matmul)
+    let requests = batcher::standard_mix(cfg.seq, 8, 3, 2);
+    let (resp_e, _) = Batcher::coalescing(&eager).run(&eager, &requests).unwrap();
+    let (resp_f, _) = Batcher::coalescing(&f32_eng).run(&f32_eng, &requests).unwrap();
+    let (resp_p, _) = Batcher::coalescing(&packed_eng).run(&packed_eng, &requests).unwrap();
+    assert_eq!(resp_f, resp_e, "lazy f32 diverged from eager");
+    assert_eq!(resp_p, resp_e, "packed-domain serving must be bitwise-identical to f32");
+
+    // the 4-bit snapshot pins >= 4x fewer bytes per window in the packed
+    // domain: codes at 4 bits + one f32 scale column, versus dequantized
+    // f32 weights plus the f32-graph side tensors (s_w, rounding state)
+    let rf = f32_eng.residency();
+    let rp = packed_eng.residency();
+    assert!(rp.peak_bytes > 0 && rf.peak_bytes > 0, "pins must be accounted: {rp:?} {rf:?}");
+    assert!(
+        rp.peak_bytes * 4 <= rf.peak_bytes,
+        "packed peak {} not >= 4x under f32 peak {}",
+        rp.peak_bytes,
+        rf.peak_bytes
+    );
+
+    // prefetch: the 2-step plan under a 1-window budget keeps issuing
+    // background warms for the evicted next window, and later faults land
+    // on warmed pages (only a real mapping has file spans to warm)
+    if packed_snap.model.lazy().unwrap().is_mapped() {
+        assert!(rp.prefetches > 0, "prefetches expected on a mapped 2-step plan: {rp:?}");
+        assert!(rp.prefetch_hits > 0, "faults should land on warmed windows: {rp:?}");
+    }
+
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
 fn concurrent_engines_share_one_mapping_and_agree() {
     let _env = env_guard();
     let (art, rt) = setup();
@@ -285,7 +353,7 @@ fn concurrent_engines_share_one_mapping_and_agree() {
     let snap2 = reg.load_with("shared", &p, LoadMode::Mmap).unwrap();
     assert!(Arc::ptr_eq(&snap, &snap2), "registry must dedupe by name");
 
-    let opts = EngineOptions { resident_windows: Some(1), resident_bytes: None };
+    let opts = EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: false };
     let e1 = ServeEngine::with_options(&rt, &art, snap.clone(), opts).unwrap();
     let e2 = ServeEngine::with_options(&rt, &art, snap.clone(), opts).unwrap();
 
@@ -358,7 +426,7 @@ fn read_at_fallback_serves_identically_without_a_mapping() {
             &rt,
             &art,
             snap,
-            EngineOptions { resident_windows: Some(1), resident_bytes: None },
+            EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: false },
         )?;
         let requests = batcher::standard_mix(cfg.seq, 4, 2, 1);
         let (resp_m, _) = Batcher::coalescing(&lazy).run(&lazy, &requests)?;

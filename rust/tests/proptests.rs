@@ -474,6 +474,77 @@ fn prop_blocked_matmul_matches_tensor_oracle() {
 }
 
 // ---------------------------------------------------------------------------
+// packed-domain matmul (serve directly from 2/4/8-bit codes)
+// ---------------------------------------------------------------------------
+
+/// `qmatmul` over packed codes + scales must equal dequantize-then-`matmul`
+/// *bitwise* for every supported width and edge-case scale column (exact
+/// zero and negatives hit the `EPS` floor, below-floor-small and huge
+/// scales stress the multiply), across shapes straddling the blocked-path
+/// threshold — the identity packed-domain serving rests on.
+#[test]
+fn prop_qmatmul_bitwise_matches_dequant_matmul() {
+    use cbq::runtime::backend::kernels as k;
+    for seed in 0..cases(150) {
+        let mut g = Gen::new(seed + 70000);
+        let (m, kk, n) = (g.usize_in(1, 40), g.usize_in(1, 48), g.usize_in(1, 40));
+        let bits = [2u8, 4, 8][g.usize_in(0, 2)];
+        let half = 1i32 << (bits - 1);
+        let codes: Vec<i32> = (0..kk * n)
+            .map(|_| g.0.next_below(2 * half as u64) as i32 - half)
+            .collect();
+        // scale columns: mostly ordinary positive, with planted edge cases
+        let s_w: Vec<f32> = (0..n)
+            .map(|_| match g.usize_in(0, 5) {
+                0 => 0.0,                 // EPS-floored
+                1 => -0.25,               // negative: also EPS-floored
+                2 => quant::EPS / 4.0,    // below the floor
+                3 => 2.9e4,               // huge
+                _ => g.f32_in(1e-3, 2.0),
+            })
+            .collect();
+        // planted zeros in A exercise the naive path's zero-skip
+        let a: Vec<f32> = (0..m * kk)
+            .map(|_| if g.usize_in(0, 4) == 0 { 0.0 } else { g.f32_in(-2.0, 2.0) })
+            .collect();
+
+        let q = k::QPanels::pack(&codes, kk, n, bits, &s_w);
+        let deq: Vec<f32> = (0..kk * n)
+            .map(|i| codes[i] as f32 * s_w[i % n].max(quant::EPS))
+            .collect();
+        assert_eq!(q.dequant(), deq, "seed {seed}: dequant mismatch");
+        assert_eq!(
+            k::qmatmul(&a, m, kk, &q),
+            k::matmul(&a, m, kk, &deq, n),
+            "seed {seed}: qmatmul {m}x{kk}x{n} bits {bits}"
+        );
+        assert_eq!(
+            k::qmatmul_naive(&a, m, kk, &q),
+            k::matmul_naive(&a, m, kk, &deq, n),
+            "seed {seed}: qmatmul_naive {m}x{kk}x{n} bits {bits}"
+        );
+
+        // the transposed packer feeds the same kernel and must match the
+        // f32 result over the same logical matrix
+        let codes_t: Vec<i32> = {
+            let mut t = vec![0i32; n * kk];
+            for p in 0..kk {
+                for j in 0..n {
+                    t[j * kk + p] = codes[p * n + j];
+                }
+            }
+            t
+        };
+        let qt = k::QPanels::pack_transb(&codes_t, kk, n, bits, &s_w);
+        assert_eq!(
+            k::qmatmul_transb(&a, m, kk, &qt),
+            k::matmul(&a, m, kk, &deq, n),
+            "seed {seed}: qmatmul_transb {m}x{kk}x{n} bits {bits}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
 // packed-tensor invariants (snapshot store)
 // ---------------------------------------------------------------------------
 

@@ -56,6 +56,8 @@ mod sys {
     pub const MAP_PRIVATE: c_int = 2;
     /// `MADV_SEQUENTIAL` (identical on Linux and the BSD family).
     pub const MADV_SEQUENTIAL: c_int = 2;
+    /// `MADV_WILLNEED` (identical on Linux and the BSD family).
+    pub const MADV_WILLNEED: c_int = 3;
     /// `MADV_DONTNEED` (identical on Linux and the BSD family).
     pub const MADV_DONTNEED: c_int = 4;
 
@@ -76,6 +78,9 @@ pub enum Advice {
     /// `MADV_SEQUENTIAL`: the range will be walked front to back soon
     /// (warmup readahead).
     Sequential,
+    /// `MADV_WILLNEED`: the range will be needed soon — start readahead
+    /// now (background window prefetch).
+    WillNeed,
     /// `MADV_DONTNEED`: the range's pages can be dropped; a later touch
     /// re-faults them from the file (window eviction).
     DontNeed,
@@ -86,6 +91,7 @@ impl Advice {
     fn raw(self) -> std::os::raw::c_int {
         match self {
             Advice::Sequential => sys::MADV_SEQUENTIAL,
+            Advice::WillNeed => sys::MADV_WILLNEED,
             Advice::DontNeed => sys::MADV_DONTNEED,
         }
     }
@@ -386,6 +392,7 @@ mod tests {
         let p = tmp("mmap_advise.bin", &[3u8; 3 * 4096 + 100]);
         if let Ok(m) = Mmap::open(&p) {
             m.advise(Advice::Sequential).unwrap();
+            m.advise_range(Advice::WillNeed, 0, 4096).unwrap();
             m.advise_range(Advice::DontNeed, 4096, 4096).unwrap();
             // unaligned range: shrinks inward, never errors
             m.advise_range(Advice::DontNeed, 100, 5000).unwrap();
