@@ -18,6 +18,9 @@
 //!   * token-generation decode tokens/s + per-token latency percentiles
 //!     through the KV-cached continuous-batching loop
 //!     (`CBQ_BENCH_MAX_NEW` / `CBQ_BENCH_GEN_REQUESTS`)
+//!   * packed decode: per-bit qmatvec effective code GB/s at the active
+//!     SIMD tier, plus packed-vs-f32 generation (bitwise-identical token
+//!     streams, decode tokens/s ratio, packed residency)
 //!
 //! Besides the human-readable tables, writes a machine-readable
 //! `BENCH_native.json` (path override: `CBQ_BENCH_JSON`) so the perf
@@ -480,6 +483,104 @@ fn main() {
     t.row(&["tok p99 (ms)".into(), fmt_f(ticks_to_secs(gen_stats.tok_p99) * 1e3, 2)]);
     t.print();
 
+    // ---- packed decode (generation straight from the codes) ---------------
+    // decode-shaped (rows == 1) per-bit qmatvec microbench — effective
+    // *code* GB/s is the number that bounds memory-bound decode — then an
+    // end-to-end generate run over the packed-vs-f32 engines from above:
+    // token streams must be bitwise-identical, packed decode tokens/s vs
+    // f32 is the headline ratio.
+    let mut qmv_rows = Vec::new();
+    let mut t = Table::new(
+        format!("packed matvec (decode hot path, SIMD tier {})", kernels::simd_tier().name()),
+        &["bits", "f32 GFLOP/s", "packed GFLOP/s", "code GB/s"],
+    );
+    {
+        let (k, n) = (512usize, 512usize);
+        let a: Vec<f32> = (0..k).map(|i| ((i as f32) * 0.43).sin()).collect();
+        let flops = 2.0 * (k * n) as f64;
+        for bits in [2u8, 4, 8] {
+            let half = 1i32 << (bits - 1);
+            let codes: Vec<i32> = (0..k * n)
+                .map(|i| (((i * 2654435761) >> 7) as u32 % (2 * half as u32)) as i32 - half)
+                .collect();
+            let s_w: Vec<f32> =
+                (0..n).map(|j| 0.002 + 0.001 * ((j as f32) * 0.7).cos().abs()).collect();
+            let q = kernels::QPanels::pack(&codes, k, n, bits, &s_w);
+            let deq = q.dequant();
+            assert_eq!(
+                kernels::qmatvec(&a, k, &q),
+                kernels::qmatmul(&a, 1, k, &q),
+                "qmatvec diverged from the qmatmul row at {bits} bits"
+            );
+            assert_eq!(
+                kernels::qmatvec(&a, k, &q),
+                kernels::matmul(&a, 1, k, &deq, n),
+                "qmatvec diverged from dequant->f32 at {bits} bits"
+            );
+            let t_f32 = time_n(64, || {
+                std::hint::black_box(kernels::matmul(&a, 1, k, &deq, n));
+            });
+            let t_packed = time_n(64, || {
+                std::hint::black_box(kernels::qmatvec(&a, k, &q));
+            });
+            let code_gbps = q.code_bytes() as f64 / t_packed / 1e9;
+            t.row(&[
+                format!("w{bits}"),
+                fmt_f(flops / t_f32 / 1e9, 2),
+                fmt_f(flops / t_packed / 1e9, 2),
+                fmt_f(code_gbps, 2),
+            ]);
+            qmv_rows.push(J::obj(vec![
+                ("bits", J::num(bits as f64)),
+                ("f32_gflops", J::num(flops / t_f32 / 1e9)),
+                ("packed_gflops", J::num(flops / t_packed / 1e9)),
+                ("code_bytes", J::num(q.code_bytes() as f64)),
+                ("code_gbps", J::num(code_gbps)),
+            ]));
+        }
+    }
+    t.print();
+
+    let gen_f32d = GenerateEngine::new(&f32_engine).unwrap();
+    let gen_pkd = GenerateEngine::new(&packed_engine).unwrap();
+    gen_f32d.decode_reference(&gen_trace[0].request.prompt, 1).unwrap(); // warm-up
+    gen_pkd.decode_reference(&gen_trace[0].request.prompt, 1).unwrap();
+    let cf = RealClock::new();
+    let (out_f32d, gstats_f32d) = gen_f32d.run(&gen_trace, &gen_cfg, &cf).unwrap();
+    let cp = RealClock::new();
+    let (out_pkd, gstats_pkd) = gen_pkd.run(&gen_trace, &gen_cfg, &cp).unwrap();
+    // under the real clock emission ticks differ run-to-run; the invariant
+    // is the token content per request
+    let streams_of = |outs: &[cbq::serve::GenOutcome]| -> Vec<(usize, bool, Vec<i32>)> {
+        outs.iter().map(|o| (o.seq, o.rejected, o.tokens.clone())).collect()
+    };
+    let decode_identical = streams_of(&out_f32d) == streams_of(&out_pkd);
+    let decode_ratio = gstats_pkd.tokens_per_s / gstats_f32d.tokens_per_s.max(1e-9);
+    let res_fd = f32_engine.residency();
+    let res_pd = packed_engine.residency();
+    let mut t = Table::new(
+        "packed vs f32 decode (token generation)",
+        &["path", "decode tok/s", "resident bytes", "prefetches (hit)"],
+    );
+    t.row(&[
+        "f32".into(),
+        fmt_f(gstats_f32d.tokens_per_s, 0),
+        format!("{}", res_fd.resident_bytes),
+        format!("{} ({})", res_fd.prefetches, res_fd.prefetch_hits),
+    ]);
+    t.row(&[
+        if packed_engine.is_packed() { "packed".into() } else { "packed (UNAVAILABLE)".to_string() },
+        fmt_f(gstats_pkd.tokens_per_s, 0),
+        format!("{}", res_pd.resident_bytes),
+        format!("{} ({})", res_pd.prefetches, res_pd.prefetch_hits),
+    ]);
+    t.print();
+    println!(
+        "packed decode streams identical: {}; {:.2}x f32 decode tokens/s",
+        if decode_identical { "yes (packed == f32, bitwise)" } else { "NO — packed decode bug" },
+        decode_ratio,
+    );
+
     std::fs::remove_file(&snap_path).ok();
     let stats = rt.stats();
     println!(
@@ -601,6 +702,22 @@ fn main() {
                 ("wall_seconds", J::num(ticks_to_secs(gen_stats.wall_ticks))),
                 ("dispatch", J::num(gen_stats.dispatch_lanes as f64)),
                 ("peak_active", J::num(gen_stats.peak_active as f64)),
+            ]),
+        ),
+        (
+            "packed_decode",
+            J::obj(vec![
+                ("enabled", J::Bool(packed_engine.is_packed())),
+                ("simd", J::str(kernels::simd_tier().name())),
+                ("qmatvec", J::arr(qmv_rows)),
+                ("f32_decode_tokens_per_s", J::num(gstats_f32d.tokens_per_s)),
+                ("packed_decode_tokens_per_s", J::num(gstats_pkd.tokens_per_s)),
+                ("decode_ratio", J::num(decode_ratio)),
+                ("streams_identical", J::Bool(decode_identical)),
+                ("f32_resident_bytes", J::num(res_fd.resident_bytes as f64)),
+                ("packed_resident_bytes", J::num(res_pd.resident_bytes as f64)),
+                ("prefetches", J::num(res_pd.prefetches as f64)),
+                ("prefetch_hits", J::num(res_pd.prefetch_hits as f64)),
             ]),
         ),
     ]);

@@ -77,7 +77,9 @@ COMMANDS
             when available, and resident-vs-mapped byte accounting
             (unpacked / eager-resident / per-block estimates for sizing
             CBQ_RESIDENT_MB, plus the packed-domain figures --packed
-            serving keeps resident: codes+scales per block)
+            serving keeps resident: codes+scales per block — since packed
+            decode is the generate default, those same figures size the
+            --generate working set too)
   serve-bench --snapshot snap.cbqs [--ppl-requests 32]
             [--choice-requests 8] [--hidden-requests 8] [--queue-cap 0]
             [--dispatch 1] [--json out.json]
@@ -123,7 +125,14 @@ COMMANDS
             always checked against a one-request-at-a-time reference;
             reports per-token p50/p95/p99 latency and decode tokens/s.
             --verify-determinism additionally replays the trace at a
-            second lane count under the simulated clock
+            second lane count under the simulated clock. On the native
+            backend generation defaults to mmap-lazy *packed* windows:
+            each per-position matvec runs straight from the 2/4/8-bit
+            codes (qmatvec; SIMD tier auto-probed, CBQ_SIMD=
+            scalar|sse2|avx2 forces one, all tiers bitwise-equal), with
+            the next window prefetching in the background. --no-packed /
+            CBQ_PACKED=0 reverts to eager f32 decode — token streams are
+            bitwise-identical either way
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
 ";
@@ -277,8 +286,8 @@ fn load_serve_engine<'rt>(
         if let Some(lazy) = snap.model.lazy() {
             if !lazy.is_mapped() {
                 println!(
-                    "note: --mmap requested but the file is not memory-mapped \
-                     ({}); windows still load lazily",
+                    "note: mmap-lazy loading selected but the file is not \
+                     memory-mapped ({}); windows still load lazily",
                     if lazy.container().version == 1 {
                         "v1 snapshot — re-export for true mapped loading"
                     } else {
@@ -517,7 +526,15 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
     use cbq::serve::clock::{ticks_to_secs, Clock, RealClock, SimClock, TICKS_PER_SEC};
     use cbq::serve::{synth_gen_trace, GenCfg, GenTraceSpec, GenerateEngine};
 
-    let mode = if args.flag("mmap") { LoadMode::Mmap } else { LoadMode::Eager };
+    // packed decode computes straight from the snapshot's codes, which
+    // only lazy (mmap) loading retains — so packed generation implies
+    // mmap-lazy windows, and that combination is the native-backend
+    // default (`--no-packed` / `CBQ_PACKED=0` fall back to eager f32)
+    let packed_default = rt.name() == "native"
+        && cbq::runtime::backend::kernels::packed_enabled()
+        && !args.flag("no-packed");
+    let mode =
+        if args.flag("mmap") || packed_default { LoadMode::Mmap } else { LoadMode::Eager };
     let (path, engine) = load_serve_engine(args, art, rt, "generate", mode)?;
     let cfg = engine.snapshot().meta.cfg.clone();
     let label = engine.snapshot().meta.label.clone();
@@ -558,7 +575,13 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
          {slots} slots, dispatch {dispatch}, {} clock{}",
         trace.len(),
         if real { "real" } else { "simulated" },
-        if args.flag("mmap") { ", mmap-lazy windows" } else { "" },
+        if mode == LoadMode::Mmap { ", mmap-lazy windows" } else { "" },
+    );
+    println!(
+        "decode path: {} weights, {} kernels (CBQ_SIMD to force a tier; all \
+         tiers bitwise-equal)",
+        if engine.is_packed() { "packed 2/4/8-bit" } else { "f32" },
+        cbq::runtime::backend::kernels::simd_tier().name(),
     );
 
     // warm-up: fault in every window once so the timed run measures
@@ -670,6 +693,8 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
             ("snapshot", Value::str(path)),
             ("label", Value::str(label)),
             ("backend", Value::str(rt.name())),
+            ("packed", Value::Bool(engine.is_packed())),
+            ("simd", Value::str(cbq::runtime::backend::kernels::simd_tier().name())),
             ("generate", generate_stats_json(&stats, seed, max_new, real, verified)),
             ("residency", residency_json(&engine)),
         ]),

@@ -23,6 +23,13 @@
 //! reduction index ascending — the *same per-element accumulation order as
 //! the naive loops*, so blocked and naive kernels agree bit-for-bit on
 //! finite inputs (property-tested in `tests/proptests.rs`).
+//!
+//! The packed-domain inner loops ([`qmatmul`] / [`qmatvec`]) additionally
+//! dispatch on a one-time CPUID probe ([`simd_tier`]): scalar, SSE2 or
+//! AVX2 decode+multiply-add tiles, forceable with
+//! `CBQ_SIMD=scalar|sse2|avx2`. Every tier decodes codes to registers and
+//! keeps the identical mul-then-add (never fused) per-element sequence,
+//! so all tiers are bitwise-equal by construction.
 
 use crate::quant::{rect_sigmoid, EPS, GAMMA, ZETA};
 
@@ -341,7 +348,7 @@ pub fn matmul_transa_naive(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -
 // packed-domain quantized matmul — serve directly from 2/4/8-bit codes
 // ---------------------------------------------------------------------------
 
-// the packed step layout and the SSE2 tile below hard-code the panel width
+// the packed step layout and the SIMD tiles below hard-code the panel width
 const _: () = assert!(NR == 8, "packed panel layout assumes NR == 8");
 
 /// Is packed-domain serving enabled? `CBQ_PACKED=0` (or `false`) forces
@@ -567,15 +574,134 @@ pub fn packed_resident_bytes(k: usize, n: usize, bits: u8) -> usize {
     n.div_ceil(NR) * k * (NR * bits as usize / 8) + n * 4
 }
 
+// ---------------------------------------------------------------------------
+// runtime SIMD dispatch — one-time CPUID probe, CBQ_SIMD override
+// ---------------------------------------------------------------------------
+
+/// SIMD tier a packed-domain inner loop runs at. Every tier decodes the
+/// codes to registers and performs the identical per-element mul-then-add
+/// sequence (never fused), so tiers are bitwise-equal by construction —
+/// the tier only changes how many lanes of that sequence run per
+/// instruction. Ordered so [`Ord`] means "at most as wide as".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdTier {
+    /// Portable scalar loops — the only tier on non-x86_64 targets.
+    Scalar,
+    /// 128-bit SSE2 multiply-add tiles (baseline on x86_64); packed
+    /// decode stays scalar.
+    Sse2,
+    /// 256-bit AVX2 tiles with in-register 2/4/8-bit code decode.
+    Avx2,
+}
+
+impl SimdTier {
+    /// Lower-case tier name as accepted by `CBQ_SIMD` and reported in
+    /// bench/CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Sse2 => "sse2",
+            SimdTier::Avx2 => "avx2",
+        }
+    }
+}
+
+/// CPUID-probe the widest tier this CPU can run.
+fn probe_simd() -> SimdTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            SimdTier::Avx2
+        } else {
+            SimdTier::Sse2 // baseline for the x86_64 target
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        SimdTier::Scalar
+    }
+}
+
+/// Parse a `CBQ_SIMD` value: `Ok(None)` when unset/empty (auto-detect),
+/// `Ok(Some(tier))` for a recognized tier name, `Err` otherwise. Pure so
+/// it is unit-testable; mirrors `pool::parse_threads`.
+fn parse_simd(raw: Option<&str>) -> Result<Option<SimdTier>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    let v = raw.trim().to_ascii_lowercase();
+    if v.is_empty() {
+        return Ok(None);
+    }
+    match v.as_str() {
+        "scalar" => Ok(Some(SimdTier::Scalar)),
+        "sse2" => Ok(Some(SimdTier::Sse2)),
+        "avx2" => Ok(Some(SimdTier::Avx2)),
+        _ => Err(format!(
+            "CBQ_SIMD={raw}: expected scalar, sse2 or avx2 (unset the \
+             variable to auto-detect; all tiers are bitwise-equal)"
+        )),
+    }
+}
+
+/// Validate `CBQ_SIMD` up front so a typo surfaces as a clean CLI error
+/// instead of a panic inside the first packed matmul. Called from
+/// `NativeBackend::new`, mirroring `pool::validate_threads`.
+pub fn validate_simd() -> Result<(), String> {
+    parse_simd(std::env::var("CBQ_SIMD").ok().as_deref()).map(|_| ())
+}
+
+/// Widest tier the running CPU supports (one-time probe, cached).
+pub fn max_simd_tier() -> SimdTier {
+    use std::sync::OnceLock;
+    static MAX: OnceLock<SimdTier> = OnceLock::new();
+    *MAX.get_or_init(probe_simd)
+}
+
+/// The tier the packed kernels dispatch to: `CBQ_SIMD` if set (clamped
+/// down to what the CPU supports, with a one-time warning), else the
+/// probed maximum. Resolved once per process.
+pub fn simd_tier() -> SimdTier {
+    use std::sync::OnceLock;
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        let forced = match parse_simd(std::env::var("CBQ_SIMD").ok().as_deref()) {
+            Ok(f) => f,
+            Err(e) => panic!("{e}"),
+        };
+        let max = max_simd_tier();
+        match forced {
+            Some(t) if t > max => {
+                eprintln!(
+                    "warning: CBQ_SIMD={} exceeds this CPU's capability — using {}",
+                    t.name(),
+                    max.name()
+                );
+                max
+            }
+            Some(t) => t,
+            None => max,
+        }
+    })
+}
+
 /// `acc[r] += avs[r] * wrow` for the first `rows` tile rows — IEEE
-/// multiply then add per independent lane, never fused, so the SIMD and
-/// scalar versions are bit-identical to each other and to the f32 blocked
-/// micro-kernel's scalar loop.
+/// multiply then add per independent lane, never fused, so every SIMD
+/// width and the scalar loop are bit-identical to each other and to the
+/// f32 blocked micro-kernel's scalar loop.
+#[inline]
+fn madd_tile_scalar(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f32; NR]) {
+    for (acc_row, &av) in acc.iter_mut().zip(avs).take(rows) {
+        for (o, &wv) in acc_row.iter_mut().zip(wrow) {
+            *o += av * wv;
+        }
+    }
+}
+
+/// SSE2 variant of [`madd_tile_scalar`] — two 128-bit halves per row,
+/// same mul-then-add rounding sequence per lane.
 #[cfg(target_arch = "x86_64")]
 #[inline]
-fn madd_tile(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f32; NR]) {
-    // SSE2 is baseline on x86_64. Each lane performs the same
-    // mul-then-add rounding sequence as the scalar fallback below.
+fn madd_tile_sse2(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f32; NR]) {
+    // SSE2 is baseline on x86_64, so this needs no feature gate.
     unsafe {
         use std::arch::x86_64::*;
         let w0 = _mm_loadu_ps(wrow.as_ptr());
@@ -590,14 +716,111 @@ fn madd_tile(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f3
     }
 }
 
-/// Scalar fallback of the SIMD tile above (non-x86_64 targets).
-#[cfg(not(target_arch = "x86_64"))]
+/// One full `MR x NR` packed panel tile: decode every reduction step of
+/// panel `pj` and accumulate into `acc` at the requested [`SimdTier`].
+/// The per-element sequence — decode code `q`, `w = q as f32 * scale`,
+/// `acc += a * w` with `p` ascending — is identical across tiers, so the
+/// results are bitwise-equal (property-tested in `tests/proptests.rs`).
+#[allow(clippy::too_many_arguments)]
 #[inline]
-fn madd_tile(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f32; NR]) {
-    for (acc_row, &av) in acc.iter_mut().zip(avs).take(rows) {
-        for (o, &wv) in acc_row.iter_mut().zip(wrow) {
-            *o += av * wv;
+fn q_panel_tile(
+    q: &QPanels,
+    pj: usize,
+    psc: &[f32; NR],
+    a: &[f32],
+    a_stride: usize,
+    row_base: usize,
+    rows: usize,
+    acc: &mut [[f32; NR]; MR],
+    tier: SimdTier,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if tier == SimdTier::Avx2 && matches!(q.bits, 2 | 4 | 8) {
+        // Safety: callers clamp `tier` to `max_simd_tier()`, so AVX2 is
+        // available whenever this arm is reached.
+        unsafe { q_panel_tile_avx2(q, pj, psc, a, a_stride, row_base, rows, acc) };
+        return;
+    }
+    // Straddling bit widths (3/5/6/7) have no vector decode — they take
+    // the scalar decode + SSE2/scalar madd path, which is bitwise-equal.
+    let mut wrow = [0.0f32; NR];
+    for p in 0..q.k {
+        q.decode_step(pj, p, psc, &mut wrow);
+        let mut avs = [0.0f32; MR];
+        for (r, av) in avs.iter_mut().enumerate().take(rows) {
+            *av = a[(row_base + r) * a_stride + p];
         }
+        match tier {
+            SimdTier::Scalar => madd_tile_scalar(acc, rows, &avs, &wrow),
+            #[cfg(target_arch = "x86_64")]
+            _ => madd_tile_sse2(acc, rows, &avs, &wrow),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => madd_tile_scalar(acc, rows, &avs, &wrow),
+        }
+    }
+}
+
+/// AVX2 panel tile: 2/4/8-bit codes are unpacked in-register (variable
+/// shift + mask + offset-binary subtract), converted with exact
+/// `i32 -> f32` conversions, scaled, then accumulated with one 256-bit
+/// mul and one add per row — the same mul-then-add per-element sequence
+/// as the scalar tile, hence bitwise-equal.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn q_panel_tile_avx2(
+    q: &QPanels,
+    pj: usize,
+    psc: &[f32; NR],
+    a: &[f32],
+    a_stride: usize,
+    row_base: usize,
+    rows: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    use std::arch::x86_64::*;
+    let sb = QPanels::step_bytes(q.bits);
+    let base = pj * q.k * sb;
+    let scv = _mm256_loadu_ps(psc.as_ptr());
+    let mut accv = [_mm256_setzero_ps(); MR];
+    for (r, av) in accv.iter_mut().enumerate().take(rows) {
+        *av = _mm256_loadu_ps(acc[r].as_ptr());
+    }
+    for p in 0..q.k {
+        let step = &q.data[base + p * sb..base + (p + 1) * sb];
+        // Decode the 8 offset-binary codes of this step to i32 lanes.
+        let qi = match q.bits {
+            8 => {
+                // sb == 8: one aligned-width load of exactly the step.
+                let lo = _mm_loadl_epi64(step.as_ptr() as *const __m128i);
+                _mm256_sub_epi32(_mm256_cvtepu8_epi32(lo), _mm256_set1_epi32(128))
+            }
+            4 => {
+                // sb == 4: 8 nibbles in one u32, LSB-first.
+                let word = u32::from_le_bytes([step[0], step[1], step[2], step[3]]);
+                let v = _mm256_set1_epi32(word as i32);
+                let sh = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+                let u = _mm256_and_si256(_mm256_srlv_epi32(v, sh), _mm256_set1_epi32(0xF));
+                _mm256_sub_epi32(u, _mm256_set1_epi32(8))
+            }
+            _ => {
+                // bits == 2, sb == 2: 8 crumbs in one u16, LSB-first.
+                let word = u16::from_le_bytes([step[0], step[1]]) as u32;
+                let v = _mm256_set1_epi32(word as i32);
+                let sh = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+                let u = _mm256_and_si256(_mm256_srlv_epi32(v, sh), _mm256_set1_epi32(0x3));
+                _mm256_sub_epi32(u, _mm256_set1_epi32(2))
+            }
+        };
+        let w = _mm256_mul_ps(_mm256_cvtepi32_ps(qi), scv);
+        for (r, av) in accv.iter_mut().enumerate().take(rows) {
+            let avv = _mm256_set1_ps(a[(row_base + r) * a_stride + p]);
+            // mul then add, never fused — matches the scalar sequence.
+            *av = _mm256_add_ps(*av, _mm256_mul_ps(avv, w));
+        }
+    }
+    for (r, av) in accv.iter().enumerate().take(rows) {
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), *av);
     }
 }
 
@@ -605,12 +828,17 @@ fn madd_tile(acc: &mut [[f32; NR]; MR], rows: usize, avs: &[f32; MR], wrow: &[f3
 /// per-element accumulation order as the f32 `blocked_rows`, with the B
 /// panel decoded to registers per reduction step instead of read from a
 /// pre-dequantized buffer.
-fn q_blocked_rows(out_chunk: &mut [f32], row0: usize, q: &QPanels, a: &[f32], a_stride: usize) {
+fn q_blocked_rows(
+    out_chunk: &mut [f32],
+    row0: usize,
+    q: &QPanels,
+    a: &[f32],
+    a_stride: usize,
+    tier: SimdTier,
+) {
     let n = q.n;
-    let k = q.k;
     let rows_total = out_chunk.len() / n;
     let n_panels = n.div_ceil(NR);
-    let mut wrow = [0.0f32; NR];
     for ib in (0..rows_total).step_by(MR) {
         let rows = MR.min(rows_total - ib);
         for pj in 0..n_panels {
@@ -618,14 +846,7 @@ fn q_blocked_rows(out_chunk: &mut [f32], row0: usize, q: &QPanels, a: &[f32], a_
             let w = NR.min(n - j0);
             let psc = q.panel_scales(pj);
             let mut acc = [[0.0f32; NR]; MR];
-            for p in 0..k {
-                q.decode_step(pj, p, &psc, &mut wrow);
-                let mut avs = [0.0f32; MR];
-                for (r, av) in avs.iter_mut().enumerate().take(rows) {
-                    *av = a[(row0 + ib + r) * a_stride + p];
-                }
-                madd_tile(&mut acc, rows, &avs, &wrow);
-            }
+            q_panel_tile(q, pj, &psc, a, a_stride, row0 + ib, rows, &mut acc, tier);
             for (r, acc_row) in acc.iter().enumerate().take(rows) {
                 let base = (ib + r) * n + j0;
                 out_chunk[base..base + w].copy_from_slice(&acc_row[..w]);
@@ -637,13 +858,13 @@ fn q_blocked_rows(out_chunk: &mut [f32], row0: usize, q: &QPanels, a: &[f32], a_
 /// Run [`q_blocked_rows`] over `out`, splitting MR-aligned row chunks
 /// across the worker pool with the same fixed chunking scheme (and the
 /// same serial threshold) as the f32 `blocked_parallel`.
-fn q_blocked_parallel(out: &mut [f32], q: &QPanels, a: &[f32], a_stride: usize) {
+fn q_blocked_parallel(out: &mut [f32], q: &QPanels, a: &[f32], a_stride: usize, tier: SimdTier) {
     let n = q.n;
     let m = out.len() / n;
     let row_blocks = m.div_ceil(MR);
     let threads = num_threads().min(row_blocks.max(1));
     if threads <= 1 || 2 * m * q.k * n < 65_536 {
-        q_blocked_rows(out, 0, q, a, a_stride);
+        q_blocked_rows(out, 0, q, a, a_stride, tier);
         return;
     }
     let per_rows = row_blocks.div_ceil(threads) * MR;
@@ -652,7 +873,7 @@ fn q_blocked_parallel(out: &mut [f32], q: &QPanels, a: &[f32], a_stride: usize) 
         .enumerate()
         .map(|(ti, chunk)| {
             Box::new(move || {
-                q_blocked_rows(chunk, ti * per_rows, q, a, a_stride);
+                q_blocked_rows(chunk, ti * per_rows, q, a, a_stride, tier);
             }) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
@@ -666,14 +887,23 @@ fn q_blocked_parallel(out: &mut [f32], q: &QPanels, a: &[f32], a_stride: usize) 
 /// accumulation orders are replicated exactly (property-tested in
 /// `tests/proptests.rs`).
 pub fn qmatmul(a: &[f32], m: usize, k: usize, q: &QPanels) -> Vec<f32> {
+    qmatmul_with_tier(a, m, k, q, simd_tier())
+}
+
+/// [`qmatmul`] at an explicit [`SimdTier`] (clamped to what the CPU
+/// supports) — the entry point the bitwise-equality property tests use to
+/// exercise every tier within one process, since [`simd_tier`] is
+/// resolved once per process from `CBQ_SIMD`.
+pub fn qmatmul_with_tier(a: &[f32], m: usize, k: usize, q: &QPanels, tier: SimdTier) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(q.k, k, "QPanels reduction length mismatch");
     let n = q.n;
     if force_naive() || m * k * n < BLOCK_MIN_MULS {
         return qmatmul_naive(a, m, k, q);
     }
+    let tier = tier.min(max_simd_tier());
     let mut out = vec![0.0f32; m * n];
-    q_blocked_parallel(&mut out, q, a, k);
+    q_blocked_parallel(&mut out, q, a, k, tier);
     out
 }
 
@@ -682,6 +912,80 @@ pub fn qmatmul(a: &[f32], m: usize, k: usize, q: &QPanels) -> Vec<f32> {
 /// as a named entry point mirroring the f32 surface ([`matmul_transb`]).
 pub fn qmatmul_transb(a: &[f32], m: usize, k: usize, q: &QPanels) -> Vec<f32> {
     qmatmul(a, m, k, q)
+}
+
+/// Single-row packed product `a[k] @ dequant(Q)[k,n] -> [n]` — the decode
+/// hot path. Dispatch condition, panel tile and per-element accumulation
+/// order are exactly [`qmatmul`] at `m == 1`, so
+/// `qmatvec(a, k, q) == qmatmul(a, 1, k, q)` bitwise (property-tested);
+/// what changes is the parallel split: with one output row there are no
+/// row chunks to spread, so the blocked path splits *column panels*
+/// across the pool instead — disjoint output ranges, per-element
+/// reduction order untouched.
+pub fn qmatvec(a: &[f32], k: usize, q: &QPanels) -> Vec<f32> {
+    qmatvec_with_tier(a, k, q, simd_tier())
+}
+
+/// [`qmatvec`] at an explicit [`SimdTier`] (clamped to what the CPU
+/// supports) — see [`qmatmul_with_tier`].
+pub fn qmatvec_with_tier(a: &[f32], k: usize, q: &QPanels, tier: SimdTier) -> Vec<f32> {
+    assert_eq!(a.len(), k);
+    assert_eq!(q.k, k, "QPanels reduction length mismatch");
+    let n = q.n;
+    if force_naive() || k * n < BLOCK_MIN_MULS {
+        return qmatmul_naive(a, 1, k, q);
+    }
+    let tier = tier.min(max_simd_tier());
+    let mut out = vec![0.0f32; n];
+    qmatvec_parallel(&mut out, q, a, tier);
+    out
+}
+
+/// [`qmatvec`] for panels packed from B^T codes — same kernel, named
+/// entry point mirroring [`qmatmul_transb`].
+pub fn qmatvec_transb(a: &[f32], k: usize, q: &QPanels) -> Vec<f32> {
+    qmatvec(a, k, q)
+}
+
+/// Split `out` into contiguous panel chunks across the worker pool (same
+/// serial threshold as the matmul path at `m == 1`). Each chunk owns a
+/// disjoint set of whole column panels, so parallelism never reorders any
+/// element's reduction.
+fn qmatvec_parallel(out: &mut [f32], q: &QPanels, a: &[f32], tier: SimdTier) {
+    let n = q.n;
+    let n_panels = n.div_ceil(NR);
+    let threads = num_threads().min(n_panels.max(1));
+    if threads <= 1 || 2 * q.k * n < 65_536 {
+        qmatvec_panels(out, 0, q, a, tier);
+        return;
+    }
+    let per = n_panels.div_ceil(threads);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+        .chunks_mut(per * NR)
+        .enumerate()
+        .map(|(ti, chunk)| {
+            Box::new(move || {
+                qmatvec_panels(chunk, ti * per, q, a, tier);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool::run_scoped(tasks);
+}
+
+/// Accumulate the panels starting at `pj0` into `out_chunk` — one
+/// [`q_panel_tile`] call per panel at `rows == 1`, identical to what
+/// [`q_blocked_rows`] does for that panel of row 0.
+fn qmatvec_panels(out_chunk: &mut [f32], pj0: usize, q: &QPanels, a: &[f32], tier: SimdTier) {
+    let n = q.n;
+    for (i, ochunk) in out_chunk.chunks_mut(NR).enumerate() {
+        let pj = pj0 + i;
+        let j0 = pj * NR;
+        let w = NR.min(n - j0);
+        let psc = q.panel_scales(pj);
+        let mut acc = [[0.0f32; NR]; MR];
+        q_panel_tile(q, pj, &psc, a, 1, 0, 1, &mut acc, tier);
+        ochunk[..w].copy_from_slice(&acc[0][..w]);
+    }
 }
 
 /// Row-parallel naive-order packed matmul: the same per-element
@@ -1656,7 +1960,7 @@ mod tests {
                 // force both the blocked and naive-order internals at this
                 // size regardless of the dispatch thresholds
                 let mut blocked = vec![0.0f32; m * n];
-                q_blocked_parallel(&mut blocked, &q, &a, k);
+                q_blocked_parallel(&mut blocked, &q, &a, k, simd_tier());
                 let panels = pack_panels(|p, j| deq[p * n + j], k, n);
                 let mut fblocked = vec![0.0f32; m * n];
                 blocked_rows(&mut fblocked, n, 0, k, &panels, &a, k, false);
@@ -1698,6 +2002,59 @@ mod tests {
         let q = QPanels::pack(&codes, k, n, 4, &s_w);
         let deq = dequant_ref(&codes, k, n, &s_w);
         assert_eq!(qmatmul(&a, m, k, &q), matmul(&a, m, k, &deq, n));
+    }
+
+    #[test]
+    fn parse_simd_accepts_tiers_and_rejects_typos() {
+        assert_eq!(parse_simd(None), Ok(None));
+        assert_eq!(parse_simd(Some("")), Ok(None));
+        assert_eq!(parse_simd(Some("  ")), Ok(None));
+        assert_eq!(parse_simd(Some("scalar")), Ok(Some(SimdTier::Scalar)));
+        assert_eq!(parse_simd(Some("SSE2")), Ok(Some(SimdTier::Sse2)));
+        assert_eq!(parse_simd(Some(" avx2 ")), Ok(Some(SimdTier::Avx2)));
+        let err = parse_simd(Some("avx512")).unwrap_err();
+        assert!(err.contains("CBQ_SIMD=avx512"), "{err}");
+        assert!(err.contains("scalar, sse2 or avx2"), "{err}");
+        // tiers are ordered by width so clamping is a min()
+        assert!(SimdTier::Scalar < SimdTier::Sse2 && SimdTier::Sse2 < SimdTier::Avx2);
+        assert!(validate_simd().is_ok() || std::env::var("CBQ_SIMD").is_ok());
+    }
+
+    #[test]
+    fn qmatvec_matches_qmatmul_row_every_tier() {
+        // one blocked-path size and one naive-path size, every tier the
+        // CPU supports (wider requests clamp down), against both the
+        // dequant oracle and the corresponding qmatmul row
+        for &(k, n) in &[(96usize, 80usize), (9, 7)] {
+            let codes: Vec<i32> = (0..k * n).map(|i| (i % 16) as i32 - 8).collect();
+            let mut s_w: Vec<f32> = (0..n).map(|j| 0.02 + (j as f32) * 1e-3).collect();
+            s_w[0] = 0.0; // EPS-floored channel
+            let mut a: Vec<f32> = (0..k).map(|i| ((i as f32) * 0.137).sin()).collect();
+            a[3] = 0.0; // naive zero-skip
+            let q = QPanels::pack(&codes, k, n, 4, &s_w);
+            let deq = dequant_ref(&codes, k, n, &s_w);
+            let oracle = matmul(&a, 1, k, &deq, n);
+            for tier in [SimdTier::Scalar, SimdTier::Sse2, SimdTier::Avx2] {
+                assert_eq!(
+                    qmatvec_with_tier(&a, k, &q, tier),
+                    oracle,
+                    "qmatvec {}x{} tier={}",
+                    k,
+                    n,
+                    tier.name()
+                );
+                assert_eq!(
+                    qmatvec_with_tier(&a, k, &q, tier),
+                    qmatmul_with_tier(&a, 1, k, &q, tier),
+                    "qmatvec vs qmatmul row {}x{} tier={}",
+                    k,
+                    n,
+                    tier.name()
+                );
+            }
+            assert_eq!(qmatvec(&a, k, &q), oracle);
+            assert_eq!(qmatvec_transb(&a, k, &q), qmatmul_transb(&a, 1, k, &q));
+        }
     }
 
     #[test]

@@ -259,7 +259,13 @@ fn qlinear_fwd(
             let k = p.k();
             debug_assert_eq!(x.len(), rows * k);
             let x_eff = kernels::blend_act(x, k, q.alpha, q.qmax_a, q.a_en);
-            let y = kernels::qmatmul(&x_eff, rows, k, p);
+            // single-row products (the decode_step hot path) take the
+            // matvec kernel — bitwise-equal to qmatmul at rows == 1
+            let y = if rows == 1 {
+                kernels::qmatvec(&x_eff, k, p)
+            } else {
+                kernels::qmatmul(&x_eff, rows, k, p)
+            };
             return Ok((y, None));
         }
         WeightRef::Dense(t) => t,
@@ -443,9 +449,10 @@ impl NativeBackend {
     /// Build an interpreter over the artifacts' manifest (no compilation,
     /// no files beyond the manifest needed).
     pub fn new(artifacts: &Artifacts) -> Result<Self> {
-        // surface a bad CBQ_THREADS here as a clean error instead of a
-        // panic deep inside the first kernel call
+        // surface a bad CBQ_THREADS / CBQ_SIMD here as a clean error
+        // instead of a panic deep inside the first kernel call
         super::pool::validate_threads().map_err(|e| anyhow!(e))?;
+        kernels::validate_simd().map_err(|e| anyhow!(e))?;
         Ok(Self {
             manifest: artifacts.manifest.clone(),
             stats: Mutex::new(RuntimeStats::default()),

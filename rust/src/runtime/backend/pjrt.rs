@@ -26,7 +26,7 @@ fn xerr(e: xla::Error) -> anyhow::Error {
 }
 
 impl Value {
-    pub(crate) fn to_literal(&self) -> Result<xla::Literal> {
+    pub(crate) fn to_literal(&self, name: &str) -> Result<xla::Literal> {
         let lit = match self {
             Value::F32(t) => {
                 if t.dims.is_empty() {
@@ -45,8 +45,10 @@ impl Value {
                 }
             }
             Value::Packed(_) => bail!(
-                "packed-domain weights are native-backend only — \
-                 rerun with `--backend native` or `CBQ_PACKED=0`"
+                "input `{name}`: packed-domain weights are native-backend \
+                 only — rerun with `--backend native`, or disable packed \
+                 pinning with `--no-packed` / `CBQ_PACKED=0` to serve f32 \
+                 weights through PJRT"
             ),
         };
         Ok(lit)
@@ -143,7 +145,7 @@ impl PjrtBackend {
             check_shape(spec, v)
                 .with_context(|| format!("input `{}` of {exec_name}", spec.name))?;
             upload += (v.dims().iter().product::<usize>().max(1) * 4) as u64;
-            let lit = v.to_literal()?;
+            let lit = v.to_literal(&spec.name)?;
             fresh.insert(
                 idx,
                 self.client
@@ -219,7 +221,7 @@ impl Backend for PjrtBackend {
         for (idx, spec) in exec.spec.inputs.iter().enumerate() {
             if let Some(v) = values.get(&spec.name) {
                 check_shape(spec, v)?;
-                let lit = v.to_literal()?;
+                let lit = v.to_literal(&spec.name)?;
                 let buf = self
                     .client
                     .buffer_from_host_literal(None, &lit)
@@ -273,5 +275,26 @@ impl Backend for PjrtBackend {
 
     fn stats(&self) -> RuntimeStats {
         lock(&self.stats).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::kernels::QPanels;
+    use crate::runtime::PackedValue;
+    use std::sync::Arc;
+
+    #[test]
+    fn packed_to_literal_names_tensor_and_remediation() {
+        // a packed value can never cross into PJRT; the error must say
+        // *which* input and how to get unstuck
+        let q = QPanels::pack(&[0, 1, -1, 2], 2, 2, 4, &[0.5, 0.5]);
+        let v = Value::Packed(PackedValue::new(Arc::new(q)));
+        let err = v.to_literal("blk3.attn.wq").unwrap_err().to_string();
+        assert!(err.contains("input `blk3.attn.wq`"), "{err}");
+        assert!(err.contains("--backend native"), "{err}");
+        assert!(err.contains("--no-packed"), "{err}");
+        assert!(err.contains("CBQ_PACKED=0"), "{err}");
     }
 }

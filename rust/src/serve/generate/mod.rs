@@ -12,6 +12,11 @@
 //!   per-position, and incremental attention replicates the forward
 //!   pass's exact per-`(sq, sk)` operation order
 //!   ([`Attention::attend_one`](crate::runtime::backend::kernels::Attention::attend_one)).
+//!   On the native backend with packed pinning (the default), each
+//!   per-position linear runs straight from the window's 2/4/8-bit codes
+//!   via [`kernels::qmatvec`] — bitwise-equal to the f32 matvec at every
+//!   SIMD tier (`CBQ_SIMD`), so packed decode streams match f32 decode
+//!   and full prefill token-for-token, bit-for-bit.
 //! * [`GenerateEngine::run`] is a **continuous-batching** loop: requests
 //!   join and leave the running decode batch *per token step*, not per
 //!   batch. Admission, priority scoring (the scheduler's class weights +
@@ -377,6 +382,7 @@ impl<'a, 'rt> GenerateEngine<'a, 'rt> {
         let mut tokens = Vec::with_capacity(limit);
         let mut logits_log = Vec::with_capacity(limit);
         let mut fed = 0usize;
+        self.eng.prefetch_window(0); // warm the first window (lazy engines)
         while tokens.len() < limit {
             let tok =
                 if fed < prompt.len() { prompt[fed] } else { tokens[fed - prompt.len()] };
@@ -463,6 +469,11 @@ impl<'a, 'rt> GenerateEngine<'a, 'rt> {
             if next_arr == order.len() && pending.is_empty() && active.is_empty() {
                 break;
             }
+            // overlap the first planned window's file I/O with this step's
+            // admission/promotion bookkeeping (lazy engines only; the
+            // per-access prefetch chain inside step_pinned covers the rest
+            // of the plan, wrap-around included)
+            self.eng.prefetch_window(0);
             let mut now = clock.now();
             if active.is_empty() && pending.is_empty() {
                 // idle: jump to the next arrival

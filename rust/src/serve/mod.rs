@@ -590,6 +590,29 @@ impl<'rt> ServeEngine<'rt> {
             return; // single-window plans: it is already resident
         }
         let next = (i + 1) % self.plan.len();
+        self.schedule_prefetch(next, cache);
+    }
+
+    /// Issue a background prefetch for window `i` if this is a lazy
+    /// engine and `i` is a planned window — the public entry the generate
+    /// loop uses to warm its first window of each decode step while the
+    /// per-step admission/promotion bookkeeping runs (the per-access
+    /// [`prefetch_next`](Self::prefetch_next) chain then covers the rest
+    /// of the plan). No-op on eager engines; best-effort like all
+    /// prefetches.
+    pub fn prefetch_window(&self, i: usize) {
+        if i >= self.plan.len() {
+            return;
+        }
+        if let Steps::Lazy { cache, .. } = &self.steps {
+            self.schedule_prefetch(i, cache);
+        }
+    }
+
+    /// Shared prefetch scheduler: skip if the target window is resident
+    /// or already in flight, otherwise count it and warm its file span on
+    /// the worker pool.
+    fn schedule_prefetch(&self, next: usize, cache: &Mutex<WindowCache>) {
         let Some((map, off, len)) = self.window_file_span(next) else {
             return; // not a real mapping: nothing to warm
         };

@@ -23,8 +23,8 @@ use cbq::config::{BitSpec, QuantJob};
 use cbq::coordinator::Pipeline;
 use cbq::runtime::{synth, Artifacts, NativeBackend};
 use cbq::serve::{
-    synth_gen_trace, GenCfg, GenTraceSpec, GenerateEngine, LoadMode, ModelRegistry, ServeEngine,
-    SimClock,
+    synth_gen_trace, EngineOptions, GenCfg, GenTraceSpec, GenerateEngine, LoadMode, ModelRegistry,
+    ServeEngine, SimClock,
 };
 use cbq::snapshot;
 
@@ -186,6 +186,93 @@ fn seeded_trace_replays_identically_across_runs_and_lane_counts() {
         assert_eq!(stats1.decode_steps, stats_n.decode_steps);
         assert_eq!(stats1.wall_ticks, stats_n.wall_ticks, "modeled time is lane-independent");
     }
+}
+
+// ---------------------------------------------------------------------------
+// packed decode == f32 decode == prefill, bitwise, at every lane count
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_decode_streams_bitwise_equal_f32_decode_and_prefill() {
+    let (art, rt) = setup();
+    // export once and keep the file alive: the mmap-lazy engine reads
+    // window tensors from it on every fault for as long as it lives
+    let p = std::env::temp_dir().join(format!("cbq_gen_{}_packed.cbqs", std::process::id()));
+    let m = art.default_model().to_string();
+    let mut pipe = Pipeline::new(&art, &rt, &m).unwrap();
+    let mut job = QuantJob::rtn(BitSpec::new(4, 16));
+    job.calib_sequences = 4;
+    let (qm, _) = pipe.run(&job).unwrap();
+    snapshot::save(&p, &pipe.cfg, &qm).unwrap();
+
+    let mut reg_f32 = ModelRegistry::new();
+    let snap_f32 = reg_f32.load_with("pk-f32", &p, LoadMode::Eager).unwrap();
+    let eng_f32 = ServeEngine::new(&rt, &art, snap_f32).unwrap();
+
+    let mut reg_pk = ModelRegistry::new();
+    let snap_pk = reg_pk.load_with("pk-packed", &p, LoadMode::Mmap).unwrap();
+    let eng_pk = ServeEngine::with_options(
+        &rt,
+        &art,
+        snap_pk,
+        EngineOptions { packed: true, ..EngineOptions::default() },
+    )
+    .unwrap();
+    assert!(eng_pk.is_packed(), "mmap + packed options must pin packed windows");
+
+    let cfg = eng_f32.snapshot().meta.cfg.clone();
+    let gen_f32 = GenerateEngine::new(&eng_f32).unwrap();
+    let gen_pk = GenerateEngine::new(&eng_pk).unwrap();
+
+    // 1) sequential decode: tokens AND every logit vector bitwise equal
+    //    between the packed and f32 engines, and equal to a full prefill
+    //    recomputation through the packed engine
+    let plen = (cfg.seq / 2).max(1);
+    let prompt: Vec<i32> = (0..plen).map(|i| (i * 7 + 3) as i32 % cfg.vocab as i32).collect();
+    let max_new = cfg.seq - plen;
+    let (toks_f32, logits_f32) = gen_f32.decode_trace(&prompt, max_new).unwrap();
+    let (toks_pk, logits_pk) = gen_pk.decode_trace(&prompt, max_new).unwrap();
+    assert_eq!(toks_pk, toks_f32, "packed decode tokens diverged from f32 decode");
+    assert_eq!(logits_pk, logits_f32, "packed decode logits diverged from f32 decode");
+    for (k, logits) in logits_pk.iter().enumerate() {
+        let mut prefix = prompt.clone();
+        prefix.extend_from_slice(&toks_pk[..k]);
+        let reference = gen_pk.prefill_logits(&prefix).unwrap();
+        assert_eq!(
+            logits, &reference,
+            "packed decode step {k} diverged from packed full prefill"
+        );
+    }
+
+    // 2) continuous batching at lane counts {1, 2, 4}: identical outcomes
+    //    (token streams + emission ticks) and admission logs across engines
+    let trace = synth_gen_trace(&trace_spec(&cfg, 10, 31));
+    for lanes in [1usize, 2, 4] {
+        let gcfg = GenCfg { max_new_tokens: 4, slots: 3, dispatch: lanes, ..Default::default() };
+        let c1 = SimClock::new();
+        let (out_f32, stats_f32) = gen_f32.run(&trace, &gcfg, &c1).unwrap();
+        let c2 = SimClock::new();
+        let (out_pk, stats_pk) = gen_pk.run(&trace, &gcfg, &c2).unwrap();
+        assert_eq!(out_pk, out_f32, "dispatch {lanes}: packed vs f32 outcomes diverged");
+        assert_eq!(stats_pk.steps, stats_f32.steps, "dispatch {lanes}: admission logs diverged");
+        assert_eq!(stats_pk.tokens, stats_f32.tokens);
+    }
+
+    // 3) residency during generation reflects the packed footprint (codes
+    //    + scales, smaller than the f32 pins), and the generate loop's
+    //    background prefetch actually fired on this 2-window plan
+    let r = eng_pk.residency();
+    let r_f32 = eng_f32.residency();
+    assert!(r.peak_bytes > 0, "packed engine must have pinned windows");
+    assert!(
+        r.peak_bytes < r_f32.peak_bytes,
+        "packed residency ({}) must undercut f32 residency ({})",
+        r.peak_bytes,
+        r_f32.peak_bytes
+    );
+    assert!(r.prefetches > 0, "lazy generate decode must issue background prefetches");
+
+    std::fs::remove_file(&p).ok();
 }
 
 // ---------------------------------------------------------------------------

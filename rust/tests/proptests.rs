@@ -544,6 +544,78 @@ fn prop_qmatmul_bitwise_matches_dequant_matmul() {
     }
 }
 
+/// The decode hot path: `qmatvec` must equal dequantize-then-`matmul` at
+/// `m == 1` *and* the corresponding `qmatmul` row, bitwise, at **every**
+/// forced SIMD tier (scalar / SSE2 / AVX2, clamped to what the CPU has —
+/// tiers differ only in lane count, never in per-element order). Shapes
+/// straddle the blocked-path threshold, scales hit the same edge cases as
+/// the qmatmul property above, and A gets planted zeros for the naive
+/// path's zero-skip.
+#[test]
+fn prop_qmatvec_bitwise_matches_qmatmul_row() {
+    use cbq::runtime::backend::kernels as k;
+    use cbq::runtime::backend::kernels::SimdTier;
+    for seed in 0..cases(150) {
+        let mut g = Gen::new(seed + 75000);
+        let (kk, n) = (g.usize_in(1, 96), g.usize_in(1, 80));
+        let bits = [2u8, 4, 8][g.usize_in(0, 2)];
+        let half = 1i32 << (bits - 1);
+        let codes: Vec<i32> = (0..kk * n)
+            .map(|_| g.0.next_below(2 * half as u64) as i32 - half)
+            .collect();
+        let s_w: Vec<f32> = (0..n)
+            .map(|_| match g.usize_in(0, 5) {
+                0 => 0.0,                 // EPS-floored
+                1 => -0.25,               // negative: also EPS-floored
+                2 => quant::EPS / 4.0,    // below the floor
+                3 => 2.9e4,               // huge
+                _ => g.f32_in(1e-3, 2.0),
+            })
+            .collect();
+        let a: Vec<f32> = (0..kk)
+            .map(|_| if g.usize_in(0, 4) == 0 { 0.0 } else { g.f32_in(-2.0, 2.0) })
+            .collect();
+
+        let q = k::QPanels::pack(&codes, kk, n, bits, &s_w);
+        let deq: Vec<f32> = (0..kk * n)
+            .map(|i| codes[i] as f32 * s_w[i % n].max(quant::EPS))
+            .collect();
+        let oracle = k::matmul(&a, 1, kk, &deq, n);
+        for tier in [SimdTier::Scalar, SimdTier::Sse2, SimdTier::Avx2] {
+            assert_eq!(
+                k::qmatvec_with_tier(&a, kk, &q, tier),
+                oracle,
+                "seed {seed}: qmatvec {kk}x{n} bits {bits} tier {}",
+                tier.name()
+            );
+            assert_eq!(
+                k::qmatvec_with_tier(&a, kk, &q, tier),
+                k::qmatmul_with_tier(&a, 1, kk, &q, tier),
+                "seed {seed}: qmatvec vs qmatmul row {kk}x{n} bits {bits} tier {}",
+                tier.name()
+            );
+        }
+        // default entry points and the transposed packer feed the same
+        // kernels
+        assert_eq!(k::qmatvec(&a, kk, &q), oracle, "seed {seed}: qmatvec default tier");
+        let codes_t: Vec<i32> = {
+            let mut t = vec![0i32; n * kk];
+            for p in 0..kk {
+                for j in 0..n {
+                    t[j * kk + p] = codes[p * n + j];
+                }
+            }
+            t
+        };
+        let qt = k::QPanels::pack_transb(&codes_t, kk, n, bits, &s_w);
+        assert_eq!(
+            k::qmatvec_transb(&a, kk, &qt),
+            oracle,
+            "seed {seed}: qmatvec_transb {kk}x{n} bits {bits}"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------------
 // packed-tensor invariants (snapshot store)
 // ---------------------------------------------------------------------------
