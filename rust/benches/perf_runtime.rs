@@ -40,7 +40,7 @@ use cbq::serve::clock::ticks_to_secs;
 use cbq::serve::scheduler::{synth_trace, Scheduler, SchedulerCfg, TraceSpec};
 use cbq::serve::{
     batcher, synth_gen_trace, Batcher, EngineOptions, GenCfg, GenTraceSpec, GenerateEngine,
-    LoadMode, ModelRegistry, RealClock, RowExecutor as _, ServeEngine,
+    LoadMode, ModelRegistry, RealClock, RowExecutor as _, ServeEngine, ServeMetrics,
 };
 use cbq::tensor::Tensor;
 
@@ -282,6 +282,33 @@ fn main() {
         ]);
     }
     t.print();
+
+    // ---- metrics overhead (always-on stats layer) -------------------------
+    // the hot-path cost of a ServeMetrics instance riding along must be
+    // noise: run the identical batched burst with and without one attached
+    // (2x each, best-of to shave scheduler jitter). CI's perf-smoke job
+    // gates on `tokens_per_s_on >= 0.95 * tokens_per_s_off`.
+    let best_of = |with_metrics: bool| -> f64 {
+        (0..2)
+            .map(|_| {
+                let b = Batcher::coalescing(&engine).with_dispatch(dispatch);
+                let b = if with_metrics {
+                    b.with_metrics(std::sync::Arc::new(ServeMetrics::new()))
+                } else {
+                    b
+                };
+                let (_, st) = b.run(&engine, &requests).unwrap();
+                st.tokens_per_s()
+            })
+            .fold(0.0f64, f64::max)
+    };
+    let tokens_per_s_off = best_of(false);
+    let tokens_per_s_on = best_of(true);
+    let overhead_ratio = tokens_per_s_on / tokens_per_s_off.max(1e-9);
+    println!(
+        "metrics overhead: {tokens_per_s_on:.0} tok/s with metrics vs {tokens_per_s_off:.0} \
+         without ({overhead_ratio:.3}x)"
+    );
 
     // ---- mmap vs eager: cold start + steady state -------------------------
     // cold start = registry load + engine bind + first response (the
@@ -614,6 +641,15 @@ fn main() {
                 ("occupancy", J::num(st_par.occupancy())),
                 ("peak_in_flight", J::num(st_par.peak_in_flight as f64)),
                 ("lane_occupancy", J::num(st_par.lane_occupancy())),
+            ]),
+        ),
+        (
+            "metrics",
+            J::obj(vec![
+                ("enabled", J::Bool(true)),
+                ("tokens_per_s_on", J::num(tokens_per_s_on)),
+                ("tokens_per_s_off", J::num(tokens_per_s_off)),
+                ("overhead_ratio", J::num(overhead_ratio)),
             ]),
         ),
         (

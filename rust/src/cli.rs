@@ -85,6 +85,14 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    /// `--key` as f64, with a default when absent.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a float, got `{v}`")),
+            None => Ok(default),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +127,14 @@ mod tests {
         let a = args("x --n abc");
         assert!(a.get_usize("n", 1).is_err());
         assert!(a.get_u64("n", 1).is_err());
+    }
+
+    #[test]
+    fn f64_values_parse_with_default() {
+        let a = args("serve-bench --slo-p99-ms 2.5");
+        assert_eq!(a.get_f64("slo-p99-ms", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("absent", 7.5).unwrap(), 7.5);
+        assert!(args("x --n abc").get_f64("n", 1.0).is_err());
     }
 
     #[test]

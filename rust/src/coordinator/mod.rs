@@ -13,13 +13,6 @@
 //! [`Backend`] (PJRT-compiled AOT HLO, or the native CPU interpreter);
 //! this module owns state, scheduling, optimization and bookkeeping.
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 pub mod qstate;
 
 use std::collections::BTreeMap;
@@ -41,9 +34,14 @@ pub use qstate::LinearQ;
 /// A fully-quantized model: baked (fake-quantized) weights + the activation
 /// quantization state eval needs.
 pub struct QuantizedModel {
+    /// Model tensors with weights baked to their quantized grid.
     pub params: ModelParams,
+    /// Per-block, per-linear learned quantization state (keyed by linear
+    /// name).
     pub qstate: Vec<BTreeMap<String, LinearQ>>,
+    /// Weight/activation bit widths the model was quantized at.
     pub bits: crate::config::BitSpec,
+    /// Rounding scheme the weights were baked with.
     pub rounding: RoundingMode,
 }
 
@@ -69,9 +67,11 @@ pub fn window_plan(windows: &[usize], n_layers: usize) -> Vec<(usize, usize)> {
 /// Everything a bench table row reports.
 #[derive(Clone, Debug)]
 pub struct QuantSummary {
+    /// Row label (method + bit widths, e.g. `cbq_w4a16`).
     pub label: String,
     /// perplexity per corpus style name
     pub ppl: BTreeMap<String, f64>,
+    /// Wall-clock seconds the quantization run took.
     pub quant_seconds: f64,
     /// learnable + optimizer state bytes at the peak window
     pub state_bytes: usize,
@@ -79,21 +79,31 @@ pub struct QuantSummary {
     pub act_cache_bytes: usize,
     /// mean reconstruction loss per window (diagnostics / ablations)
     pub window_losses: Vec<f32>,
+    /// Outlier weights truncated by the CFP pre-processing stage.
     pub preproc_weights_truncated: usize,
+    /// Channels rescaled by the CFP pre-processing stage.
     pub preproc_channels_scaled: usize,
 }
 
+/// Quantization driver: owns the calibration data flow, window schedule and
+/// optimizer loop over one model's exported executables.
 pub struct Pipeline<'a> {
+    /// Exported artifact bundle (executables, weights, window set).
     pub art: &'a Artifacts,
     /// Execution backend (PJRT over AOT artifacts, or the native CPU
     /// interpreter) — all model compute dispatches through this trait.
     pub rt: &'a dyn Backend,
+    /// Shape/config of the model being quantized.
     pub cfg: ModelCfg,
+    /// Artifact-bundle name of that config (e.g. `t`, `s`).
     pub cfg_name: String,
+    /// Full-precision reference parameters (the reconstruction target).
     pub fp: ModelParams,
 }
 
 impl<'a> Pipeline<'a> {
+    /// Load the named config's weights off `art` and wrap them with the
+    /// backend into a ready-to-run pipeline.
     pub fn new(art: &'a Artifacts, rt: &'a dyn Backend, cfg_name: &str) -> Result<Self> {
         let cfg = art.cfg(cfg_name)?.clone();
         let weights = art.weights(cfg_name)?;
@@ -105,6 +115,7 @@ impl<'a> Pipeline<'a> {
     // binding builders (flatten_spec contract, see python/compile/model.py)
     // ------------------------------------------------------------------
 
+    /// Bind one block's weight tensors under the `blocks.{j}.*` names.
     pub fn bind_block_weights(b: &mut Bindings, j: usize, blk: &crate::model_state::BlockParams) {
         b.set(format!("blocks.{j}.attn_norm"), blk.attn_norm.clone());
         b.set(format!("blocks.{j}.mlp_norm"), blk.mlp_norm.clone());
@@ -113,6 +124,8 @@ impl<'a> Pipeline<'a> {
         }
     }
 
+    /// Bind one block's quantization state (`qblocks.{j}.*`): step sizes,
+    /// clip, rounding factors and the w/a enable scalars.
     #[allow(clippy::too_many_arguments)]
     pub fn bind_qblock(
         b: &mut Bindings,
@@ -145,6 +158,8 @@ impl<'a> Pipeline<'a> {
         }
     }
 
+    /// Bind the `globals.*` scalars every executable expects (LoRA gate,
+    /// beta anneal, effective-rank gamma, loss-term weights).
     pub fn bind_globals(b: &mut Bindings, use_lora: f32, beta: f32, gamma_c: f32, l2: f32, kld: f32) {
         b.scalar("globals.use_lora", use_lora);
         b.scalar("globals.beta", beta);
@@ -274,6 +289,8 @@ impl<'a> Pipeline<'a> {
     // top-level quantization entry
     // ------------------------------------------------------------------
 
+    /// Quantize the model per `job` (RTN / GPTQ / CBD reconstruction) and
+    /// report the bench-row summary alongside the baked model.
     pub fn run(&mut self, job: &QuantJob) -> Result<(QuantizedModel, QuantSummary)> {
         let t0 = Instant::now();
         let calib = calib::calibration(job.calib_sequences, self.cfg.batch, self.cfg.seq);

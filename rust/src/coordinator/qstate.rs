@@ -2,13 +2,6 @@
 //! coordinator applies to the gradients coming back from the `win_grad_*`
 //! executables (the L2 graphs compute gradients; L3 owns all state).
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 use crate::config::RoundingMode;
 use crate::quant::{self, GAMMA, ZETA};
 use crate::tensor::Tensor;
@@ -33,16 +26,21 @@ pub fn v0_init(w: &Tensor, s_w: &Tensor) -> Tensor {
 /// Adam moments for one parameter tensor.
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// First-moment (mean) estimate, one slot per parameter element.
     pub m: Vec<f32>,
+    /// Second-moment (uncentered variance) estimate.
     pub v: Vec<f32>,
+    /// Step count for bias correction.
     pub t: u32,
 }
 
 impl Adam {
+    /// Fresh zeroed moments for an `n`-element parameter.
     pub fn new(n: usize) -> Self {
         Self { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
     }
 
+    /// One bias-corrected Adam update of `param` in place from `grad`.
     pub fn step(&mut self, param: &mut [f32], grad: &[f32], lr: f32) {
         const B1: f32 = 0.9;
         const B2: f32 = 0.999;
@@ -67,10 +65,13 @@ impl Adam {
 /// Learnable state for one quantized linear.
 #[derive(Clone, Debug)]
 pub struct LinearQ {
+    /// Learned per-column weight step sizes, shape `[fan_out]`.
     pub s_w: Tensor,
+    /// Learned activation clip multiplier (paper's per-linear alpha).
     pub alpha: f32,
-    /// LoRA factors (padded rank R; columns/rows >= `rank` kept at zero).
+    /// Left LoRA factor (padded rank R; columns >= `rank` kept at zero).
     pub a1: Tensor,
+    /// Right LoRA factor (padded rank R; rows >= `rank` kept at zero).
     pub a2: Tensor,
     /// AdaRound warm-start constant: rho(init) = h(V0) = frac(W / s_w), so
     /// soft-quantized weights equal the FP weights at step 0 and the LoRA
@@ -78,7 +79,9 @@ pub struct LinearQ {
     pub v0: Tensor,
     /// Dense rounding matrix (only for RoundingMode::DenseAdaRound).
     pub v_dense: Option<Tensor>,
+    /// Weight bit width this linear quantizes to (2, 4 or 8).
     pub bits_w: u8,
+    /// Quantizer clamp bound derived from `bits_w` (`2^(bits-1) - 1`).
     pub qmax_w: f32,
     adam_s: Adam,
     adam_alpha: Adam,

@@ -5,13 +5,6 @@
 //! `lm_eval_*` (final-norm + LM head + masked NLL) executables; the host
 //! only does embedding gathers and score bookkeeping.
 
-
-// TODO(docs): this module's public surface predates the crate-wide
-// `#![warn(missing_docs)]` gate (see lib.rs); it opts out locally until
-// a follow-up documentation pass. New public items here should still be
-// documented.
-#![allow(missing_docs)]
-
 use std::collections::BTreeMap;
 
 use anyhow::Result;
@@ -24,9 +17,13 @@ use crate::tensor::{Tensor, TensorI32};
 /// Zero-shot results: accuracy per task + Mutual-style ranking metrics.
 #[derive(Clone, Debug, Default)]
 pub struct TaskResults {
+    /// Zero-shot accuracy keyed by task name.
     pub accuracy: BTreeMap<String, f64>,
+    /// Mean reciprocal rank on the ranking task.
     pub mrr: f64,
+    /// Fraction of ranking items whose true response ranks first.
     pub recall1: f64,
+    /// Fraction of ranking items whose true response ranks in the top two.
     pub recall2: f64,
 }
 

@@ -75,12 +75,8 @@
 // Index-heavy numerical kernels read clearer with explicit loops; several
 // executables take wide-but-flat argument lists mirroring the manifest.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
-// Public API documentation is enforced (CI denies rustdoc warnings via the
-// `docs` job). Modules whose surface predates the gate opt out locally
-// with `#![allow(missing_docs)]` + a TODO(docs) note (now only the
-// coordinator internals and `eval`); everything in `tensor/`, `snapshot/`,
-// `serve/`, `runtime/`, `calib/`, `cfp/`, `json` and `config` is fully
-// documented.
+// Public API documentation is enforced crate-wide with no local opt-outs
+// (CI denies rustdoc warnings via the `docs` job).
 #![warn(missing_docs)]
 
 pub mod calib;

@@ -40,7 +40,7 @@ use cbq::report::{fmt_bytes, fmt_f, heatmap, Table};
 use cbq::runtime::{self, synth, Artifacts, Backend};
 use cbq::serve::{
     batcher, Batcher, ClassLat, EngineOptions, LoadMode, ModelRegistry, RowExecutor, ServeEngine,
-    ServeStats,
+    ServeMetrics, ServeStats,
 };
 use cbq::snapshot;
 
@@ -133,6 +133,22 @@ COMMANDS
             the next window prefetching in the background. --no-packed /
             CBQ_PACKED=0 reverts to eager f32 decode — token streams are
             bitwise-identical either way
+            observability (all serve-bench modes): --metrics-json out.json
+            [--metrics-interval 100] [--slo-p99-ms MS]
+            an always-on stats layer (atomic counters + per-class
+            latency histograms in clock ticks) records every run;
+            --metrics-json dumps it as a `cbq-metrics-v1` document:
+            bucket bounds, periodic snapshots every --metrics-interval
+            ms (live mode; default 100) plus a final one, and the alert
+            log (queue_stale, occupancy_collapse, eviction_thrash,
+            slo_shed, slo_recover — also streamed to stderr as JSON
+            lines the moment they fire). --slo-p99-ms (live mode) arms
+            the SLO controller: while the Interactive end-to-end p99
+            exceeds the target, Background arrivals are shed (counted
+            apart from rejected) and pending Background stops aging;
+            recovery requires consecutive healthy windows (hysteresis).
+            Under the simulated clock the whole shed/recover/alert
+            sequence replays bitwise-identically for any --dispatch
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
 ";
@@ -216,6 +232,7 @@ fn serve_stats_json(s: &ServeStats) -> Value {
         ("tokens_per_s", Value::num(s.tokens_per_s())),
         ("requests_per_s", Value::num(s.requests_per_s())),
         ("rejected", Value::num(s.rejected as f64)),
+        ("shed", Value::num(s.shed as f64)),
         ("wall_seconds", Value::num(s.wall_seconds)),
         ("dispatch_lanes", Value::num(s.dispatch_lanes as f64)),
         ("peak_in_flight", Value::num(s.peak_in_flight as f64)),
@@ -238,6 +255,173 @@ fn class_lat_json(c: &ClassLat) -> Value {
         ("service_p95_s", Value::num(c.service_p95_s)),
         ("service_p99_s", Value::num(c.service_p99_s)),
     ])
+}
+
+/// JSON-lines alert delivery on stderr: one object per alert, written the
+/// moment the condition fires (the in-memory log keeps them too).
+struct StderrAlerts;
+
+impl cbq::serve::AlertSink for StderrAlerts {
+    fn emit(&self, a: &cbq::serve::Alert) {
+        eprintln!(
+            "{}",
+            json::dump(&Value::obj(vec![
+                ("alert", Value::str(a.kind.name())),
+                ("at_ticks", Value::num(a.at_ticks as f64)),
+                ("detail", Value::str(a.detail.clone())),
+            ]))
+        );
+    }
+}
+
+/// The gauge fields of a sampled [`cbq::serve::ResidencyStats`], as they
+/// appear inside a metrics snapshot.
+fn residency_stats_json(r: &cbq::serve::ResidencyStats) -> Value {
+    Value::obj(vec![
+        ("resident_windows", Value::num(r.resident_windows as f64)),
+        ("resident_bytes", Value::num(r.resident_bytes as f64)),
+        ("peak_windows", Value::num(r.peak_windows as f64)),
+        ("peak_bytes", Value::num(r.peak_bytes as f64)),
+        ("faults", Value::num(r.faults as f64)),
+        ("hits", Value::num(r.hits as f64)),
+        ("evictions", Value::num(r.evictions as f64)),
+        ("prefetches", Value::num(r.prefetches as f64)),
+        ("prefetch_hits", Value::num(r.prefetch_hits as f64)),
+    ])
+}
+
+fn class_hist_json(c: &cbq::serve::ClassHist) -> Value {
+    let hist = |counts: &[u64], p50: u64, p99: u64| {
+        Value::obj(vec![
+            ("counts", Value::arr(counts.iter().map(|&n| Value::num(n as f64)).collect())),
+            ("p50_ticks", Value::num(p50 as f64)),
+            ("p99_ticks", Value::num(p99 as f64)),
+        ])
+    };
+    Value::obj(vec![
+        ("class", Value::str(c.class)),
+        ("queue", hist(&c.queue_counts, c.queue_p50_ticks, c.queue_p99_ticks)),
+        ("service", hist(&c.service_counts, c.service_p50_ticks, c.service_p99_ticks)),
+        ("latency", hist(&c.latency_counts, c.latency_p50_ticks, c.latency_p99_ticks)),
+    ])
+}
+
+fn metrics_snapshot_json(s: &cbq::serve::MetricsSnapshot) -> Value {
+    Value::obj(vec![
+        ("at_ticks", Value::num(s.at_ticks as f64)),
+        (
+            "counters",
+            Value::obj(vec![
+                ("offered", Value::num(s.offered as f64)),
+                ("admitted", Value::num(s.admitted as f64)),
+                ("rejected", Value::num(s.rejected as f64)),
+                ("shed", Value::num(s.shed as f64)),
+                ("dispatches", Value::num(s.dispatches as f64)),
+                ("tokens", Value::num(s.tokens as f64)),
+                ("cycles", Value::num(s.cycles as f64)),
+            ]),
+        ),
+        (
+            "gauges",
+            match &s.residency {
+                Some(r) => residency_stats_json(r),
+                None => Value::Null,
+            },
+        ),
+        ("classes", Value::arr(s.classes.iter().map(class_hist_json).collect())),
+        ("alerts", Value::num(s.alerts as f64)),
+    ])
+}
+
+/// The `cbq-metrics-v1` document `--metrics-json` writes: histogram bucket
+/// bounds (shared by every class), the SLO configuration, all snapshots in
+/// emission order and the full alert log. The top bucket bound is
+/// `u64::MAX` and serializes lossily through f64 — consumers should treat
+/// the last bound as "+inf".
+fn metrics_json_doc(m: &ServeMetrics, slo_ticks: Option<u64>) -> Value {
+    Value::obj(vec![
+        ("schema", Value::str("cbq-metrics-v1")),
+        (
+            "bucket_bounds_ticks",
+            Value::arr(
+                cbq::serve::metrics::bucket_bounds()
+                    .iter()
+                    .map(|&b| Value::num(b as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "slo",
+            Value::obj(vec![
+                ("active", Value::Bool(slo_ticks.is_some())),
+                (
+                    "p99_target_ticks",
+                    slo_ticks.map(|t| Value::num(t as f64)).unwrap_or(Value::Null),
+                ),
+            ]),
+        ),
+        ("snapshots", Value::arr(m.snapshots().iter().map(metrics_snapshot_json).collect())),
+        (
+            "alerts",
+            Value::arr(
+                m.alerts()
+                    .iter()
+                    .map(|a| {
+                        Value::obj(vec![
+                            ("kind", Value::str(a.kind.name())),
+                            ("at_ticks", Value::num(a.at_ticks as f64)),
+                            ("detail", Value::str(a.detail.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Shared `--metrics-json` epilogue: push the final snapshot at `at_ticks`,
+/// dump the document, confirm on stdout. A `None` path is a no-op.
+fn write_metrics_json(
+    path: Option<&str>,
+    m: &ServeMetrics,
+    slo_ticks: Option<u64>,
+    at_ticks: u64,
+) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    m.push_snapshot(at_ticks);
+    std::fs::write(path, json::dump(&metrics_json_doc(m, slo_ticks)))?;
+    println!(
+        "wrote metrics to {path} ({} snapshots, {} alerts)",
+        m.snapshots().len(),
+        m.alerts().len()
+    );
+    Ok(())
+}
+
+/// `--slo-p99-ms` / `--metrics-json` / `--metrics-interval`, shared by the
+/// serve-bench modes. Returns `(slo_p99_ticks, metrics_path,
+/// metrics_interval_ticks)`; the SLO controller and periodic snapshots
+/// stay off unless their flags are present.
+fn metrics_args(args: &Args) -> Result<(Option<u64>, Option<&str>, Option<u64>)> {
+    use cbq::serve::TICKS_PER_SEC;
+    let slo_ticks = match args.get("slo-p99-ms") {
+        Some(_) => {
+            let ms = args.get_f64("slo-p99-ms", 0.0)?;
+            anyhow::ensure!(ms > 0.0, "--slo-p99-ms must be > 0 milliseconds");
+            Some((((ms / 1e3) * TICKS_PER_SEC as f64) as u64).max(1))
+        }
+        None => None,
+    };
+    let metrics_path = args.get("metrics-json");
+    let interval_ticks = match metrics_path {
+        Some(_) => {
+            let ms = args.get_f64("metrics-interval", 100.0)?;
+            anyhow::ensure!(ms > 0.0, "--metrics-interval must be > 0 milliseconds");
+            Some((((ms / 1e3) * TICKS_PER_SEC as f64) as u64).max(1))
+        }
+        None => None,
+    };
+    Ok((slo_ticks, metrics_path, interval_ticks))
 }
 
 /// Residency options from the CLI/environment: `--resident-windows` wins
@@ -358,6 +542,7 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
     let queue_cap = args.get_usize("queue-cap", 0)?;
     let priorities = args.flag("priorities");
     let real = args.flag("real-clock");
+    let (slo_ticks, metrics_path, interval_ticks) = metrics_args(args)?;
 
     let mean_gap = (TICKS_PER_SEC as f64 / rate as f64).max(1.0) as u64;
     let spec = TraceSpec {
@@ -378,6 +563,13 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
         if queue_cap == 0 { "unlimited".to_string() } else { queue_cap.to_string() },
         if priorities { "on" } else { "off (all batch)" },
     );
+    if let Some(t) = slo_ticks {
+        println!(
+            "SLO controller armed: interactive e2e p99 target {:.2}ms ({t} ticks) — \
+             Background sheds on violation, recovers with hysteresis",
+            t as f64 / TICKS_PER_SEC as f64 * 1e3,
+        );
+    }
 
     // warm-up dispatch so the first cycle pays no first-call costs
     engine.execute(&trace[0].request.rows[..1])?;
@@ -385,31 +577,43 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
     let scfg = SchedulerCfg {
         queue_cap: if queue_cap == 0 { None } else { Some(queue_cap) },
         dispatch,
+        slo_p99_ticks: slo_ticks,
+        metrics_interval_ticks: interval_ticks,
         ..Default::default()
     };
+    let metrics = ServeMetrics::with_sink(Box::new(StderrAlerts));
     let sim = SimClock::new();
     let realc = RealClock::new();
     let clock: &dyn Clock = if real { &realc } else { &sim };
-    let out = Scheduler::new(clock, scfg.clone()).run(&engine, &trace)?;
+    if engine.is_lazy() {
+        metrics.sample_residency(engine.residency(), clock.now());
+    }
+    let out =
+        Scheduler::new(clock, scfg.clone()).run_with_metrics(&engine, &trace, Some(&metrics))?;
+    if engine.is_lazy() {
+        metrics.sample_residency(engine.residency(), clock.now());
+    }
 
     // optional determinism verification: replay the trace under the
-    // simulated clock at a second lane count; responses AND decisions must
-    // come out identical. When the measured run was already simulated it
-    // IS the baseline — no need to re-execute the model for it.
+    // simulated clock at two lane counts, each with a fresh metrics
+    // instance (so the measured run's residency samples cannot leak in);
+    // responses, decisions AND the alert/snapshot stream must come out
+    // identical
     let verified = if args.flag("verify-determinism") {
         let other = if dispatch == 1 { 4 } else { 1 };
-        let baseline = if real {
-            let c1 = SimClock::new();
-            Scheduler::new(&c1, scfg.clone()).run(&engine, &trace)?
-        } else {
-            out.clone()
-        };
+        let c1 = SimClock::new();
+        let m1 = ServeMetrics::new();
+        let baseline =
+            Scheduler::new(&c1, scfg.clone()).run_with_metrics(&engine, &trace, Some(&m1))?;
         let c2 = SimClock::new();
+        let m2 = ServeMetrics::new();
         let b = Scheduler::new(&c2, SchedulerCfg { dispatch: other, ..scfg.clone() })
-            .run(&engine, &trace)?;
+            .run_with_metrics(&engine, &trace, Some(&m2))?;
         if baseline.responses != b.responses
             || baseline.decisions != b.decisions
             || baseline.cycles != b.cycles
+            || m1.alerts() != m2.alerts()
+            || m1.snapshot(0) != m2.snapshot(0)
         {
             bail!(
                 "deterministic replay FAILED: dispatch {dispatch} vs {other} diverged under \
@@ -418,7 +622,7 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
         }
         println!(
             "deterministic replay verified: dispatch {dispatch} vs {other} identical \
-             (responses + decisions)"
+             (responses + decisions + alerts + metrics)"
         );
         Some(true)
     } else {
@@ -432,11 +636,15 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
             out.cycles,
             engine.plan_len()
         ),
-        &["requests", "admitted", "rejected", "dispatches", "occupancy", "tok/s", "req/s", "wall"],
+        &[
+            "requests", "admitted", "shed", "rejected", "dispatches", "occupancy", "tok/s",
+            "req/s", "wall",
+        ],
     );
     t.row(&[
         s.requests.to_string(),
-        (s.requests - s.rejected).to_string(),
+        (s.requests - s.rejected - s.shed).to_string(),
+        s.shed.to_string(),
         s.rejected.to_string(),
         s.dispatches.to_string(),
         format!("{:.1}%", s.occupancy() * 100.0),
@@ -495,8 +703,14 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
                     ("queue_cap", Value::num(queue_cap as f64)),
                     ("dispatch", Value::num(dispatch as f64)),
                     ("cycles", Value::num(out.cycles as f64)),
-                    ("admitted", Value::num((s.requests - s.rejected) as f64)),
+                    ("admitted", Value::num((s.requests - s.rejected - s.shed) as f64)),
+                    ("shed", Value::num(s.shed as f64)),
                     ("rejected", Value::num(s.rejected as f64)),
+                    (
+                        "slo_p99_ticks",
+                        slo_ticks.map(|t| Value::num(t as f64)).unwrap_or(Value::Null),
+                    ),
+                    ("alerts", Value::num(metrics.alerts().len() as f64)),
                     ("tokens_per_s", Value::num(s.tokens_per_s())),
                     ("requests_per_s", Value::num(s.requests_per_s())),
                     ("occupancy", Value::num(s.occupancy())),
@@ -515,6 +729,7 @@ fn cmd_serve_live(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<()> 
             ("residency", residency_json(&engine)),
         ]),
     )?;
+    write_metrics_json(metrics_path, &metrics, slo_ticks, clock.now())?;
     Ok(())
 }
 
@@ -552,6 +767,10 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
     let slots = args.get_usize("slots", 4)?;
     anyhow::ensure!(slots >= 1, "--slots must be >= 1");
     let real = args.flag("real-clock");
+    // generate records metrics after the decode loop, so the SLO
+    // controller and periodic snapshots (scheduler-loop features) do not
+    // apply here — only the always-on counters/histograms and the dump
+    let (_, metrics_path, _) = metrics_args(args)?;
 
     let spec = GenTraceSpec {
         requests: n_requests,
@@ -588,10 +807,17 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
     // steady-state decode, not first-touch materialization
     gen.decode_reference(&trace[0].request.prompt, 1)?;
 
+    let metrics = ServeMetrics::with_sink(Box::new(StderrAlerts));
     let sim = SimClock::new();
     let realc = RealClock::new();
     let clock: &dyn Clock = if real { &realc } else { &sim };
-    let (outcomes, stats) = gen.run(&trace, &gcfg, clock)?;
+    if engine.is_lazy() {
+        metrics.sample_residency(engine.residency(), clock.now());
+    }
+    let (outcomes, stats) = gen.run_with_metrics(&trace, &gcfg, clock, Some(&metrics))?;
+    if engine.is_lazy() {
+        metrics.sample_residency(engine.residency(), clock.now());
+    }
 
     // equivalence gate: every completed request's token stream must equal
     // the one-request-at-a-time greedy reference over the same prompt
@@ -612,20 +838,24 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
     }
 
     // optional determinism verification: replay under the simulated clock
-    // at a second lane count; token streams, ticks and the per-step
-    // admission log must come out identical
+    // at two lane counts, each with a fresh metrics instance; token
+    // streams, ticks, the per-step admission log AND the recorded
+    // counters/histograms must come out identical
     let verified = if args.flag("verify-determinism") {
         let other = if dispatch == 1 { 4 } else { 1 };
-        let (base_out, base_stats) = if real {
-            let c1 = SimClock::new();
-            gen.run(&trace, &gcfg, &c1)?
-        } else {
-            (outcomes.clone(), stats.clone())
-        };
+        let c1 = SimClock::new();
+        let m1 = ServeMetrics::new();
+        let (base_out, base_stats) = gen.run_with_metrics(&trace, &gcfg, &c1, Some(&m1))?;
         let c2 = SimClock::new();
-        let (out2, stats2) =
-            gen.run(&trace, &GenCfg { dispatch: other, ..gcfg.clone() }, &c2)?;
-        if base_out != out2 || base_stats.steps != stats2.steps {
+        let m2 = ServeMetrics::new();
+        let (out2, stats2) = gen.run_with_metrics(
+            &trace,
+            &GenCfg { dispatch: other, ..gcfg.clone() },
+            &c2,
+            Some(&m2),
+        )?;
+        if base_out != out2 || base_stats.steps != stats2.steps || m1.snapshot(0) != m2.snapshot(0)
+        {
             bail!(
                 "deterministic replay FAILED: dispatch {dispatch} vs {other} diverged under \
                  the simulated clock"
@@ -633,7 +863,7 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
         }
         println!(
             "deterministic replay verified: dispatch {dispatch} vs {other} identical \
-             (token streams + emission ticks + admission log)"
+             (token streams + emission ticks + admission log + metrics)"
         );
         Some(true)
     } else {
@@ -699,6 +929,7 @@ fn cmd_serve_generate(args: &Args, art: &Artifacts, rt: &dyn Backend) -> Result<
             ("residency", residency_json(&engine)),
         ]),
     )?;
+    write_metrics_json(metrics_path, &metrics, None, clock.now())?;
     Ok(())
 }
 
@@ -1149,6 +1380,7 @@ fn main() -> Result<()> {
             let n_hidden = args.get_usize("hidden-requests", 8)?;
             let queue_cap = args.get_usize("queue-cap", 0)?;
             let dispatch = args.get_usize("dispatch", 1)?.max(1);
+            let (_, metrics_path, _) = metrics_args(&args)?;
             let requests = batcher::standard_mix(seq, n_ppl, n_choice, n_hidden);
             anyhow::ensure!(!requests.is_empty(), "request mix is empty — raise --ppl-requests");
             println!(
@@ -1182,9 +1414,14 @@ fn main() -> Result<()> {
                 e.execute(&requests[0].rows[..1])?;
             }
 
+            // the always-on metrics layer rides along on the batched
+            // (production-shaped) run only — the one-by-one reference is a
+            // comparison baseline, and double-recording would skew counters
+            let metrics = std::sync::Arc::new(ServeMetrics::new());
             let (resp_b, stats_b) = Batcher::coalescing(&engine)
                 .with_queue_cap(queue_cap)
                 .with_dispatch(dispatch)
+                .with_metrics(metrics.clone())
                 .run(&engine, &requests)?;
             let (resp_s, stats_s) = Batcher::sequential()
                 .with_queue_cap(queue_cap)
@@ -1254,6 +1491,14 @@ fn main() -> Result<()> {
                     ),
                 ]),
             )?;
+            // burst runs have no tick clock; stamp the dump from measured
+            // wall time so at_ticks stays monotone with the live modes
+            let at_ticks =
+                (stats_b.wall_seconds * cbq::serve::TICKS_PER_SEC as f64) as u64;
+            if engine.is_lazy() {
+                metrics.sample_residency(engine.residency(), at_ticks);
+            }
+            write_metrics_json(metrics_path, &metrics, None, at_ticks)?;
         }
         "zeroshot" => {
             let model = model_arg(&args, &art);

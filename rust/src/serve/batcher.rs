@@ -19,10 +19,12 @@
 //! the serial schedule regardless of completion order.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use super::metrics::ServeMetrics;
 use crate::calib::{self, corpus::Style, TaskKind};
 
 /// One row of model work: `seq` input tokens, `seq` next-token targets and a
@@ -159,7 +161,8 @@ pub struct ClassLat {
     pub submitted: usize,
     /// Requests of this class served to completion.
     pub completed: usize,
-    /// Requests of this class turned away at admission.
+    /// Requests of this class turned away at admission (queue capacity
+    /// or, in live runs with the SLO controller active, shedding).
     pub rejected: usize,
     /// Median queue wait (arrival → dispatch), seconds.
     pub queue_p50_s: f64,
@@ -190,6 +193,10 @@ pub struct ServeStats {
     pub tokens: usize,
     /// requests turned away by the bounded admission queue
     pub rejected: usize,
+    /// requests shed by the SLO controller (live scheduler runs only;
+    /// counted apart from `rejected` so overload-control load loss is
+    /// distinguishable from capacity loss)
+    pub shed: usize,
     /// Wall-clock duration of the run in seconds.
     pub wall_seconds: f64,
     /// configured dispatch concurrency this run executed with (1 = serial)
@@ -212,20 +219,35 @@ impl ServeStats {
     }
 
     /// Fraction of lane-time the dispatch lanes spent inside the executor
-    /// (1.0 = every lane busy for the whole run).
+    /// (1.0 = every lane busy for the whole run). Reports 0 when no wall
+    /// time elapsed (instant simulated traces) — never `inf`/NaN.
     pub fn lane_occupancy(&self) -> f64 {
-        self.lane_busy_seconds / (self.dispatch_lanes.max(1) as f64 * self.wall_seconds.max(1e-12))
+        if self.wall_seconds > 0.0 {
+            self.lane_busy_seconds / (self.dispatch_lanes.max(1) as f64 * self.wall_seconds)
+        } else {
+            0.0
+        }
     }
 
-    /// Real tokens served per second of wall time.
+    /// Real tokens served per second of wall time. Reports 0 when no wall
+    /// time elapsed (instant simulated traces) — never `inf`/NaN.
     pub fn tokens_per_s(&self) -> f64 {
-        self.tokens as f64 / self.wall_seconds.max(1e-12)
+        if self.wall_seconds > 0.0 {
+            self.tokens as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
     }
 
-    /// Served (admitted) requests per second — rejected requests did no
-    /// model work and do not count as throughput.
+    /// Served (admitted) requests per second — rejected and shed requests
+    /// did no model work and do not count as throughput. Reports 0 when no
+    /// wall time elapsed (instant simulated traces) — never `inf`/NaN.
     pub fn requests_per_s(&self) -> f64 {
-        (self.requests - self.rejected) as f64 / self.wall_seconds.max(1e-12)
+        if self.wall_seconds > 0.0 {
+            self.requests.saturating_sub(self.rejected + self.shed) as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
     }
 }
 
@@ -283,17 +305,33 @@ pub struct Batcher {
     queue_cap: Option<usize>,
     /// How many independent dispatches may execute concurrently.
     dispatch: usize,
+    /// Always-on stats layer to record each run into (standalone burst
+    /// runs; the live scheduler records itself and leaves this unset to
+    /// avoid double-counting its inner batcher).
+    metrics: Option<Arc<ServeMetrics>>,
 }
 
 impl Batcher {
     /// Coalesce rows from all requests into maximal dispatches.
     pub fn coalescing(exec: &dyn RowExecutor) -> Self {
-        Self { rows_per_dispatch: exec.batch_rows().max(1), queue_cap: None, dispatch: 1 }
+        Self {
+            rows_per_dispatch: exec.batch_rows().max(1),
+            queue_cap: None,
+            dispatch: 1,
+            metrics: None,
+        }
     }
 
     /// One row per dispatch (the naive serving baseline).
     pub fn sequential() -> Self {
-        Self { rows_per_dispatch: 1, queue_cap: None, dispatch: 1 }
+        Self { rows_per_dispatch: 1, queue_cap: None, dispatch: 1, metrics: None }
+    }
+
+    /// Record every `run` into `metrics` (admission counters, dispatches,
+    /// tokens, one cycle per run). Responses and stats are unchanged.
+    pub fn with_metrics(mut self, metrics: Arc<ServeMetrics>) -> Self {
+        self.metrics = Some(metrics);
+        self
     }
 
     /// Execute up to `n` window dispatches concurrently (0/1 = serial).
@@ -431,6 +469,15 @@ impl Batcher {
             stats.peak_in_flight = peak.load(Ordering::SeqCst);
         }
         stats.wall_seconds = t0.elapsed().as_secs_f64();
+
+        if let Some(m) = &self.metrics {
+            m.add_offered(requests.len() as u64);
+            m.add_admitted((requests.len() - stats.rejected) as u64);
+            m.add_rejected(stats.rejected as u64);
+            m.add_dispatches(stats.dispatches as u64);
+            m.add_tokens(stats.tokens as u64);
+            m.add_cycles(1);
+        }
 
         let responses = requests
             .iter()
@@ -848,5 +895,55 @@ mod tests {
         let m = Mock::new(2, 4);
         let reqs = vec![Request { kind: RequestKind::Ppl, rows: vec![row(&[1, 2, 3])] }];
         assert!(Batcher::coalescing(&m).run(&m, &reqs).is_err());
+    }
+
+    /// Regression: an instant run (simulated clocks, empty bursts) used to
+    /// report `inf` rates from the `max(1e-12)` pseudo-guard.
+    #[test]
+    fn zero_elapsed_rates_are_zero_not_inf() {
+        let s = ServeStats {
+            requests: 5,
+            tokens: 100,
+            rows: 10,
+            lane_busy_seconds: 1.0,
+            wall_seconds: 0.0,
+            ..Default::default()
+        };
+        assert_eq!(s.tokens_per_s(), 0.0);
+        assert_eq!(s.requests_per_s(), 0.0);
+        assert_eq!(s.lane_occupancy(), 0.0);
+        // shed requests do not count as served throughput
+        let t = ServeStats {
+            requests: 10,
+            rejected: 2,
+            shed: 3,
+            wall_seconds: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(t.requests_per_s(), 2.5);
+    }
+
+    #[test]
+    fn with_metrics_records_burst_counters() {
+        let seq = 4;
+        let reqs: Vec<Request> = (0..6)
+            .map(|i| Request {
+                kind: RequestKind::Ppl,
+                rows: vec![row(&[i, i + 1, i + 2, i + 3, i + 4])],
+            })
+            .collect();
+        let m = Mock::new(4, seq);
+        let metrics = Arc::new(ServeMetrics::new());
+        let (_, stats) = Batcher::coalescing(&m)
+            .with_queue_cap(4)
+            .with_metrics(metrics.clone())
+            .run(&m, &reqs)
+            .unwrap();
+        assert_eq!(metrics.offered(), 6);
+        assert_eq!(metrics.rejected(), 2);
+        assert_eq!(metrics.admitted(), 4);
+        assert_eq!(metrics.dispatches(), stats.dispatches as u64);
+        assert_eq!(metrics.tokens(), stats.tokens as u64);
+        assert_eq!(metrics.cycles(), 1);
     }
 }

@@ -40,6 +40,7 @@ use std::mem;
 use anyhow::{anyhow, ensure, Result};
 
 use super::clock::{ticks_to_secs, Clock};
+use super::metrics::{percentile, ServeMetrics};
 use super::scheduler::{Lcg, Priority};
 use super::ServeEngine;
 use crate::model_state::embed_lookup;
@@ -451,6 +452,22 @@ impl<'a, 'rt> GenerateEngine<'a, 'rt> {
         cfg: &GenCfg,
         clock: &dyn Clock,
     ) -> Result<(Vec<GenOutcome>, GenStats)> {
+        self.run_with_metrics(arrivals, cfg, clock, None)
+    }
+
+    /// [`Self::run`], additionally recording into `metrics`: admission
+    /// counters, decode steps as dispatches/cycles, emitted tokens, and
+    /// per-class histograms (queue = arrival → slot, service = slot →
+    /// finish, latency = per-token emission gaps). Recording happens after
+    /// the decode loop finishes, so the hot path is untouched and results
+    /// are identical with or without a metrics instance.
+    pub fn run_with_metrics(
+        &self,
+        arrivals: &[GenArrival],
+        cfg: &GenCfg,
+        clock: &dyn Clock,
+        metrics: Option<&ServeMetrics>,
+    ) -> Result<(Vec<GenOutcome>, GenStats)> {
         ensure!(cfg.slots >= 1, "continuous batching needs at least one decode slot");
         let d = self.cfg().d_model;
         // stable arrival order: by tick, ties by trace index
@@ -598,20 +615,29 @@ impl<'a, 'rt> GenerateEngine<'a, 'rt> {
         stats.tok_p99 = percentile(&lats, 0.99);
         let secs = ticks_to_secs(stats.wall_ticks);
         stats.tokens_per_s = if secs > 0.0 { stats.tokens as f64 / secs } else { 0.0 };
+        if let Some(m) = metrics {
+            m.add_offered(stats.requests);
+            m.add_admitted(stats.requests - stats.rejected);
+            m.add_rejected(stats.rejected);
+            m.add_dispatches(stats.decode_steps);
+            m.add_cycles(stats.decode_steps);
+            m.add_tokens(stats.tokens);
+            for o in &outcomes {
+                if o.rejected {
+                    continue;
+                }
+                m.record_queue(o.class, o.admitted.saturating_sub(o.arrival));
+                m.record_service(o.class, o.finish.saturating_sub(o.admitted));
+                let mut prev = o.arrival;
+                for &t in &o.token_ticks {
+                    m.record_latency(o.class, t.saturating_sub(prev));
+                    prev = t;
+                }
+            }
+        }
         outcomes.sort_by_key(|o| o.seq);
         Ok((outcomes, stats))
     }
-}
-
-/// Nearest-rank percentile over an ascending-sorted slice (`0` when
-/// empty) — the scheduler's definition, kept identical so generate and
-/// live-serve latency figures are comparable.
-fn percentile(sorted: &[u64], p: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
-    sorted[rank - 1]
 }
 
 #[cfg(test)]

@@ -1,0 +1,784 @@
+//! Always-on serve metrics: cheap shared counters, fixed-bucket latency
+//! histograms, residency gauges, JSON-able alert events, and the SLO
+//! controller that closes the loop.
+//!
+//! Design (modeled on pg-stream's `monitor.rs`): every hot-path update is
+//! a single relaxed atomic add — recording a latency sample indexes a
+//! power-of-two bucket and bumps one `AtomicU64`, so the layer can stay on
+//! in production serving without a measurable tax (CI gates < 5% on serve
+//! tokens/s). Everything cold (alerts, snapshots, residency samples) sits
+//! behind mutexes touched once per drain cycle at most.
+//!
+//! All times are [`Clock`](super::clock::Clock) ticks (1 µs). Histogram
+//! buckets are powers of two, so a percentile estimate returns the upper
+//! bound of the bucket the nearest-rank sample landed in — an
+//! overestimate by at most 2x, deterministic, and identical under the
+//! simulated and real clocks given the same tick sequence.
+//!
+//! The [`SloController`] consumes the Interactive *latency* histogram
+//! (arrival → complete) in deltas between evaluations: when the rolling
+//! window's p99 estimate exceeds the target it flips to shedding (the
+//! scheduler then rejects Background arrivals and stops aging Background
+//! pending), and it only recovers after `recover_cycles` consecutive
+//! healthy windows — hysteresis, so an oscillating tail doesn't flap the
+//! admission policy. Every decision is a pure function of histogram
+//! deltas, which are themselves lane-count independent under `SimClock`,
+//! so a seeded overload trace replays the identical shed/recover alert
+//! sequence at any `--dispatch`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use super::scheduler::Priority;
+use super::ResidencyStats;
+
+/// Number of histogram buckets. Bucket `i < 39` covers ticks in
+/// `(2^(i-1), 2^i]` (bucket 0 is `[0, 1]`); bucket 39 is the overflow
+/// bucket up to `u64::MAX`.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Minimum eviction delta between residency samples before the
+/// eviction-thrash detector can consider firing.
+pub const THRASH_MIN_EVICTIONS: u64 = 4;
+
+/// Upper bounds (inclusive, in ticks) of the histogram buckets, strictly
+/// increasing: `1, 2, 4, …, 2^38, u64::MAX`.
+pub fn bucket_bounds() -> [u64; HIST_BUCKETS] {
+    let mut b = [0u64; HIST_BUCKETS];
+    for (i, slot) in b.iter_mut().enumerate() {
+        *slot = if i < HIST_BUCKETS - 1 { 1u64 << i } else { u64::MAX };
+    }
+    b
+}
+
+/// Index of the first bucket whose upper bound is >= `v`.
+fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        ((64 - (v - 1).leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Nearest-rank percentile over a sorted slice (deterministic, no
+/// interpolation). Empty input reports 0. This is *the* percentile
+/// definition for the whole serve stack — the scheduler's per-class
+/// latency stats, the generate loop's per-token percentiles, and the
+/// histogram estimates below all share it so the semantics cannot drift.
+pub fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Nearest-rank percentile over bucket counts: returns the upper bound of
+/// the bucket holding the nearest-rank sample (0 when empty).
+fn percentile_of(counts: &[u64; HIST_BUCKETS], p: f64) -> u64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+    let bounds = bucket_bounds();
+    let mut cum = 0u64;
+    for i in 0..HIST_BUCKETS {
+        cum += counts[i];
+        if cum >= rank {
+            return bounds[i];
+        }
+    }
+    bounds[HIST_BUCKETS - 1]
+}
+
+/// Lock a mutex, recovering the data if a panicking thread poisoned it —
+/// metrics must never take the serve path down with it.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A fixed-bucket latency histogram in ticks. Recording is one relaxed
+/// atomic increment; reads snapshot all buckets relaxed (consistent
+/// enough for monitoring — no sample is ever lost or double-counted,
+/// only the cross-bucket cut may be mid-update).
+#[derive(Debug, Default)]
+pub struct LatHistogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+}
+
+impl LatHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self { counts: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record one sample of `ticks`.
+    pub fn record(&self, ticks: u64) {
+        self.counts[bucket_index(ticks)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the bucket counts.
+    pub fn counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
+    }
+
+    /// Total samples recorded.
+    pub fn total(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// Nearest-rank percentile estimate: the upper bound (in ticks) of the
+    /// bucket the nearest-rank sample fell in; 0 when empty.
+    pub fn percentile_ticks(&self, p: f64) -> u64 {
+        percentile_of(&self.counts(), p)
+    }
+}
+
+/// What kind of condition an [`Alert`] reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertKind {
+    /// Oldest pending request has waited more than 2x the p99 target.
+    QueueStale,
+    /// A drain cycle used under a quarter of the row budget with work
+    /// still pending (the batch is starving while demand exists).
+    OccupancyCollapse,
+    /// The mmap window cache evicted at least [`THRASH_MIN_EVICTIONS`]
+    /// windows since the last sample without at least as many cache hits.
+    EvictionThrash,
+    /// The SLO controller started shedding Background load.
+    SloShed,
+    /// The SLO controller recovered and stopped shedding.
+    SloRecover,
+}
+
+impl AlertKind {
+    /// Stable lower-snake name used in JSON output.
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertKind::QueueStale => "queue_stale",
+            AlertKind::OccupancyCollapse => "occupancy_collapse",
+            AlertKind::EvictionThrash => "eviction_thrash",
+            AlertKind::SloShed => "slo_shed",
+            AlertKind::SloRecover => "slo_recover",
+        }
+    }
+}
+
+/// One alert event: what fired, when (clock ticks), and a human-readable
+/// detail string. Deterministic under `SimClock` — seeded overload traces
+/// replay the identical alert sequence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Alert {
+    /// The condition that fired.
+    pub kind: AlertKind,
+    /// Clock tick at which it fired.
+    pub at_ticks: u64,
+    /// Deterministic human-readable context.
+    pub detail: String,
+}
+
+/// Pluggable alert delivery. Implementations must be cheap and must not
+/// block the serve path (a JSON-lines stderr writer, a test collector, …).
+pub trait AlertSink: Send + Sync {
+    /// Deliver one alert at emission time (called before the alert is
+    /// appended to the in-memory log).
+    fn emit(&self, alert: &Alert);
+}
+
+/// Per-class histogram summary inside a [`MetricsSnapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassHist {
+    /// Class name (`interactive`/`batch`/`background`).
+    pub class: &'static str,
+    /// Queue-wait (arrival → dispatch) bucket counts.
+    pub queue_counts: Vec<u64>,
+    /// Queue-wait p50 estimate in ticks.
+    pub queue_p50_ticks: u64,
+    /// Queue-wait p99 estimate in ticks.
+    pub queue_p99_ticks: u64,
+    /// Service (dispatch → complete) bucket counts.
+    pub service_counts: Vec<u64>,
+    /// Service p50 estimate in ticks.
+    pub service_p50_ticks: u64,
+    /// Service p99 estimate in ticks.
+    pub service_p99_ticks: u64,
+    /// End-to-end latency (arrival → complete) bucket counts.
+    pub latency_counts: Vec<u64>,
+    /// Latency p50 estimate in ticks.
+    pub latency_p50_ticks: u64,
+    /// Latency p99 estimate in ticks.
+    pub latency_p99_ticks: u64,
+}
+
+/// A point-in-time copy of every counter, gauge and histogram.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Clock tick the snapshot was taken at.
+    pub at_ticks: u64,
+    /// Requests offered to admission.
+    pub offered: u64,
+    /// Requests admitted.
+    pub admitted: u64,
+    /// Requests rejected (queue capacity).
+    pub rejected: u64,
+    /// Requests shed by the SLO controller.
+    pub shed: u64,
+    /// Window dispatches executed.
+    pub dispatches: u64,
+    /// Tokens processed.
+    pub tokens: u64,
+    /// Drain/decode cycles completed.
+    pub cycles: u64,
+    /// Last sampled mmap residency stats, if any were sampled.
+    pub residency: Option<ResidencyStats>,
+    /// Per-class histogram summaries, in [`Priority::ALL`] order.
+    pub classes: Vec<ClassHist>,
+    /// Alerts emitted so far.
+    pub alerts: usize,
+}
+
+#[derive(Debug, Default)]
+struct ThrashState {
+    last: Option<ResidencyStats>,
+    active: bool,
+}
+
+/// The shared always-on stats layer. One instance is threaded (by
+/// reference or `Arc`) through `Batcher`, `Scheduler` and
+/// `GenerateEngine`; all of them record into the same counters.
+#[derive(Default)]
+pub struct ServeMetrics {
+    offered: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    shed: AtomicU64,
+    dispatches: AtomicU64,
+    tokens: AtomicU64,
+    cycles: AtomicU64,
+    queue: [LatHistogram; 3],
+    service: [LatHistogram; 3],
+    latency: [LatHistogram; 3],
+    gauge: Mutex<ThrashState>,
+    alerts: Mutex<Vec<Alert>>,
+    snapshots: Mutex<Vec<MetricsSnapshot>>,
+    sink: Option<Box<dyn AlertSink>>,
+}
+
+impl std::fmt::Debug for ServeMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeMetrics")
+            .field("offered", &self.offered())
+            .field("admitted", &self.admitted())
+            .field("rejected", &self.rejected())
+            .field("shed", &self.shed())
+            .field("dispatches", &self.dispatches())
+            .field("tokens", &self.tokens())
+            .field("cycles", &self.cycles())
+            .finish_non_exhaustive()
+    }
+}
+
+impl ServeMetrics {
+    /// A fresh metrics instance with no alert sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fresh metrics instance delivering alerts through `sink` as they
+    /// fire (they are also kept in the in-memory log either way).
+    pub fn with_sink(sink: Box<dyn AlertSink>) -> Self {
+        Self { sink: Some(sink), ..Self::default() }
+    }
+
+    /// Count `n` requests offered to admission.
+    pub fn add_offered(&self, n: u64) {
+        self.offered.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Requests offered so far.
+    pub fn offered(&self) -> u64 {
+        self.offered.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` requests admitted.
+    pub fn add_admitted(&self, n: u64) {
+        self.admitted.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Requests admitted so far.
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` requests rejected at admission (queue capacity).
+    pub fn add_rejected(&self, n: u64) {
+        self.rejected.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Requests rejected so far.
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` requests shed by the SLO controller.
+    pub fn add_shed(&self, n: u64) {
+        self.shed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Requests shed so far.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` window dispatches.
+    pub fn add_dispatches(&self, n: u64) {
+        self.dispatches.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Window dispatches so far.
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` tokens processed.
+    pub fn add_tokens(&self, n: u64) {
+        self.tokens.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Tokens processed so far.
+    pub fn tokens(&self) -> u64 {
+        self.tokens.load(Ordering::Relaxed)
+    }
+
+    /// Count `n` drain/decode cycles.
+    pub fn add_cycles(&self, n: u64) {
+        self.cycles.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Cycles so far.
+    pub fn cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    /// Record one queue-wait sample (arrival → dispatch) for `class`.
+    pub fn record_queue(&self, class: Priority, ticks: u64) {
+        self.queue[class.index()].record(ticks);
+    }
+
+    /// Record one service sample (dispatch → complete) for `class`.
+    pub fn record_service(&self, class: Priority, ticks: u64) {
+        self.service[class.index()].record(ticks);
+    }
+
+    /// Record one end-to-end latency sample (arrival → complete) for
+    /// `class` — the series the SLO controller watches.
+    pub fn record_latency(&self, class: Priority, ticks: u64) {
+        self.latency[class.index()].record(ticks);
+    }
+
+    /// Snapshot the end-to-end latency bucket counts for `class`.
+    pub fn latency_counts(&self, class: Priority) -> [u64; HIST_BUCKETS] {
+        self.latency[class.index()].counts()
+    }
+
+    /// Feed a residency sample into the gauges and run the eviction-thrash
+    /// detector: a rising edge (>= [`THRASH_MIN_EVICTIONS`] evictions
+    /// since the previous sample, and at least as many evictions as cache
+    /// hits over the same span) emits one [`AlertKind::EvictionThrash`].
+    pub fn sample_residency(&self, r: ResidencyStats, at_ticks: u64) {
+        let fire = {
+            let mut g = lock(&self.gauge);
+            let fire = match g.last {
+                Some(prev) => {
+                    let dev = r.evictions.saturating_sub(prev.evictions);
+                    let dh = r.hits.saturating_sub(prev.hits);
+                    let thrash = dev >= THRASH_MIN_EVICTIONS && dev >= dh;
+                    let rising = thrash && !g.active;
+                    g.active = thrash;
+                    if rising {
+                        Some((dev, dh))
+                    } else {
+                        None
+                    }
+                }
+                None => None,
+            };
+            g.last = Some(r);
+            fire
+        };
+        if let Some((dev, dh)) = fire {
+            self.alert(
+                AlertKind::EvictionThrash,
+                at_ticks,
+                format!("{dev} evictions vs {dh} hits since last residency sample"),
+            );
+        }
+    }
+
+    /// The most recent residency sample, if any.
+    pub fn residency(&self) -> Option<ResidencyStats> {
+        lock(&self.gauge).last
+    }
+
+    /// Emit one alert: deliver through the sink (if any), then append to
+    /// the in-memory log.
+    pub fn alert(&self, kind: AlertKind, at_ticks: u64, detail: String) {
+        let a = Alert { kind, at_ticks, detail };
+        if let Some(s) = &self.sink {
+            s.emit(&a);
+        }
+        lock(&self.alerts).push(a);
+    }
+
+    /// All alerts emitted so far, in emission order.
+    pub fn alerts(&self) -> Vec<Alert> {
+        lock(&self.alerts).clone()
+    }
+
+    /// Build a point-in-time snapshot of every counter and histogram.
+    pub fn snapshot(&self, at_ticks: u64) -> MetricsSnapshot {
+        let classes = Priority::ALL
+            .iter()
+            .map(|&c| {
+                let i = c.index();
+                let (q, s, l) =
+                    (self.queue[i].counts(), self.service[i].counts(), self.latency[i].counts());
+                ClassHist {
+                    class: c.name(),
+                    queue_p50_ticks: percentile_of(&q, 0.50),
+                    queue_p99_ticks: percentile_of(&q, 0.99),
+                    queue_counts: q.to_vec(),
+                    service_p50_ticks: percentile_of(&s, 0.50),
+                    service_p99_ticks: percentile_of(&s, 0.99),
+                    service_counts: s.to_vec(),
+                    latency_p50_ticks: percentile_of(&l, 0.50),
+                    latency_p99_ticks: percentile_of(&l, 0.99),
+                    latency_counts: l.to_vec(),
+                }
+            })
+            .collect();
+        MetricsSnapshot {
+            at_ticks,
+            offered: self.offered(),
+            admitted: self.admitted(),
+            rejected: self.rejected(),
+            shed: self.shed(),
+            dispatches: self.dispatches(),
+            tokens: self.tokens(),
+            cycles: self.cycles(),
+            residency: self.residency(),
+            classes,
+            alerts: lock(&self.alerts).len(),
+        }
+    }
+
+    /// Take a snapshot at `at_ticks` and append it to the periodic log.
+    pub fn push_snapshot(&self, at_ticks: u64) {
+        let s = self.snapshot(at_ticks);
+        lock(&self.snapshots).push(s);
+    }
+
+    /// The periodic snapshot log, in push order.
+    pub fn snapshots(&self) -> Vec<MetricsSnapshot> {
+        lock(&self.snapshots).clone()
+    }
+}
+
+/// SLO controller parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SloCfg {
+    /// The Interactive end-to-end p99 target in ticks.
+    pub p99_target_ticks: u64,
+    /// Minimum new latency samples before an evaluation window closes
+    /// (smaller deltas keep accumulating into the same window).
+    pub min_samples: u64,
+    /// Consecutive healthy windows required to stop shedding (hysteresis).
+    pub recover_cycles: u32,
+}
+
+impl SloCfg {
+    /// A config with the given p99 target and the default window size (8
+    /// samples) and hysteresis (3 healthy windows).
+    pub fn new(p99_target_ticks: u64) -> Self {
+        Self { p99_target_ticks, min_samples: 8, recover_cycles: 3 }
+    }
+}
+
+/// The SLO feedback loop: watches the Interactive end-to-end latency
+/// histogram in deltas and decides when to shed / recover Background
+/// load. Purely deterministic — state depends only on the sequence of
+/// histogram counts it is shown.
+#[derive(Debug)]
+pub struct SloController {
+    cfg: SloCfg,
+    shedding: bool,
+    healthy: u32,
+    last: [u64; HIST_BUCKETS],
+}
+
+impl SloController {
+    /// A controller that has seen no samples yet.
+    pub fn new(cfg: SloCfg) -> Self {
+        Self { cfg, shedding: false, healthy: 0, last: [0; HIST_BUCKETS] }
+    }
+
+    /// Re-baseline on `m`'s current Interactive latency counts, so a
+    /// controller attached to an already-used metrics instance does not
+    /// treat historical samples as its first window.
+    pub fn prime(&mut self, m: &ServeMetrics) {
+        self.last = m.latency_counts(Priority::Interactive);
+    }
+
+    /// Whether Background load should currently be shed.
+    pub fn shedding(&self) -> bool {
+        self.shedding
+    }
+
+    /// Close an evaluation window if enough new Interactive latency
+    /// samples arrived, update the shed state machine, and return the
+    /// alert to emit on a state change (shed or recover edge).
+    pub fn evaluate(&mut self, m: &ServeMetrics) -> Option<(AlertKind, String)> {
+        let cur = m.latency_counts(Priority::Interactive);
+        let mut delta = [0u64; HIST_BUCKETS];
+        let mut total = 0u64;
+        for i in 0..HIST_BUCKETS {
+            delta[i] = cur[i].saturating_sub(self.last[i]);
+            total += delta[i];
+        }
+        if total < self.cfg.min_samples.max(1) {
+            // window not full yet: keep accumulating against the same
+            // baseline (do NOT advance `last`)
+            return None;
+        }
+        let p99 = percentile_of(&delta, 0.99);
+        self.last = cur;
+        if p99 > self.cfg.p99_target_ticks {
+            let was = self.shedding;
+            self.shedding = true;
+            self.healthy = 0;
+            if !was {
+                return Some((
+                    AlertKind::SloShed,
+                    format!(
+                        "interactive p99 {p99}t > target {}t over {total} samples",
+                        self.cfg.p99_target_ticks
+                    ),
+                ));
+            }
+        } else if self.shedding {
+            self.healthy += 1;
+            if self.healthy >= self.cfg.recover_cycles.max(1) {
+                self.shedding = false;
+                self.healthy = 0;
+                return Some((
+                    AlertKind::SloRecover,
+                    format!(
+                        "interactive p99 {p99}t <= target {}t, hysteresis met",
+                        self.cfg.p99_target_ticks
+                    ),
+                ));
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(percentile(&v, 0.50), 50);
+        assert_eq!(percentile(&v, 0.95), 100);
+        assert_eq!(percentile(&v, 0.99), 100);
+        assert_eq!(percentile(&v, 1.0), 100);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        assert_eq!(percentile(&[], 0.99), 0);
+    }
+
+    #[test]
+    fn bucket_bounds_monotone_and_index_maps_into_bounds() {
+        let b = bucket_bounds();
+        assert_eq!(b.len(), HIST_BUCKETS);
+        assert_eq!(b[0], 1);
+        assert_eq!(b[39], u64::MAX);
+        for w in b.windows(2) {
+            assert!(w[0] < w[1], "bounds must be strictly increasing");
+        }
+        for v in [0u64, 1, 2, 3, 1000, 1024, 1025, 1 << 38, (1 << 38) + 1, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(v <= b[i], "{v} must fit its bucket bound {}", b[i]);
+            if i > 0 {
+                assert!(v > b[i - 1], "{v} must not fit the previous bucket");
+            }
+        }
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_percentile_estimates_bucket_upper_bound() {
+        let h = LatHistogram::new();
+        assert_eq!(h.percentile_ticks(0.99), 0, "empty histogram reports 0");
+        for _ in 0..9 {
+            h.record(1000);
+        }
+        h.record(5000);
+        assert_eq!(h.total(), 10);
+        // 1000 lands in the (512, 1024] bucket, 5000 in (4096, 8192]
+        assert_eq!(h.percentile_ticks(0.50), 1024);
+        assert_eq!(h.percentile_ticks(0.99), 8192);
+    }
+
+    #[test]
+    fn slo_controller_sheds_and_recovers_with_hysteresis() {
+        let m = ServeMetrics::new();
+        let mut ctl = SloController::new(SloCfg {
+            p99_target_ticks: 2000,
+            min_samples: 4,
+            recover_cycles: 2,
+        });
+        assert!(!ctl.shedding());
+        // window 1: slow → shed edge
+        for _ in 0..4 {
+            m.record_latency(Priority::Interactive, 5000);
+        }
+        let a = ctl.evaluate(&m).expect("violation must emit a shed alert");
+        assert_eq!(a.0, AlertKind::SloShed);
+        assert!(ctl.shedding());
+        // window 2: still slow → no second shed alert, streak stays reset
+        for _ in 0..4 {
+            m.record_latency(Priority::Interactive, 5000);
+        }
+        assert!(ctl.evaluate(&m).is_none());
+        assert!(ctl.shedding());
+        // window 3: healthy (1024 <= 2000) → streak 1 of 2, still shedding
+        for _ in 0..4 {
+            m.record_latency(Priority::Interactive, 1000);
+        }
+        assert!(ctl.evaluate(&m).is_none());
+        assert!(ctl.shedding());
+        // window 4: slow again → the healthy streak must reset
+        for _ in 0..4 {
+            m.record_latency(Priority::Interactive, 5000);
+        }
+        assert!(ctl.evaluate(&m).is_none());
+        // windows 5+6: two consecutive healthy windows → recover edge
+        for _ in 0..4 {
+            m.record_latency(Priority::Interactive, 1000);
+        }
+        assert!(ctl.evaluate(&m).is_none());
+        for _ in 0..4 {
+            m.record_latency(Priority::Interactive, 1000);
+        }
+        let a = ctl.evaluate(&m).expect("hysteresis met must emit a recover alert");
+        assert_eq!(a.0, AlertKind::SloRecover);
+        assert!(!ctl.shedding());
+    }
+
+    #[test]
+    fn slo_controller_accumulates_below_min_samples_and_primes() {
+        let m = ServeMetrics::new();
+        // historical samples the controller must NOT see as its window
+        for _ in 0..10 {
+            m.record_latency(Priority::Interactive, 9000);
+        }
+        let mut ctl = SloController::new(SloCfg {
+            p99_target_ticks: 2000,
+            min_samples: 4,
+            recover_cycles: 2,
+        });
+        ctl.prime(&m);
+        assert!(ctl.evaluate(&m).is_none(), "primed baseline: no new samples");
+        // 2 new samples < min_samples: accumulate, window stays open
+        m.record_latency(Priority::Interactive, 5000);
+        m.record_latency(Priority::Interactive, 5000);
+        assert!(ctl.evaluate(&m).is_none());
+        // 2 more close the window at 4 samples and trip the target
+        m.record_latency(Priority::Interactive, 5000);
+        m.record_latency(Priority::Interactive, 5000);
+        let a = ctl.evaluate(&m).expect("accumulated window must close");
+        assert_eq!(a.0, AlertKind::SloShed);
+    }
+
+    #[test]
+    fn eviction_thrash_fires_on_rising_edges_only() {
+        let m = ServeMetrics::new();
+        let base = ResidencyStats::default();
+        m.sample_residency(base, 0);
+        assert!(m.alerts().is_empty(), "first sample has no delta");
+        // spike: 6 evictions, 1 hit → fire
+        let spike = ResidencyStats { evictions: 6, hits: 1, ..base };
+        m.sample_residency(spike, 100);
+        // still thrashing: 6 more evictions, 0 hits → no second alert
+        let spike2 = ResidencyStats { evictions: 12, hits: 1, ..base };
+        m.sample_residency(spike2, 200);
+        // calm: many hits, few evictions → detector disarms
+        let calm = ResidencyStats { evictions: 13, hits: 50, ..base };
+        m.sample_residency(calm, 300);
+        // second spike → second rising edge
+        let spike3 = ResidencyStats { evictions: 20, hits: 51, ..base };
+        m.sample_residency(spike3, 400);
+        let alerts = m.alerts();
+        assert_eq!(alerts.len(), 2, "two rising edges, two alerts: {alerts:?}");
+        assert!(alerts.iter().all(|a| a.kind == AlertKind::EvictionThrash));
+        assert_eq!(alerts[0].at_ticks, 100);
+        assert_eq!(alerts[1].at_ticks, 400);
+        assert_eq!(m.residency(), Some(spike3), "gauge keeps the latest sample");
+    }
+
+    #[test]
+    fn counters_and_snapshot_roundtrip() {
+        let m = ServeMetrics::new();
+        m.add_offered(10);
+        m.add_admitted(6);
+        m.add_rejected(1);
+        m.add_shed(3);
+        m.add_dispatches(4);
+        m.add_tokens(240);
+        m.add_cycles(2);
+        m.record_queue(Priority::Batch, 100);
+        m.record_service(Priority::Batch, 1000);
+        m.record_latency(Priority::Batch, 1100);
+        let s = m.snapshot(777);
+        assert_eq!(s.at_ticks, 777);
+        assert_eq!(
+            (s.offered, s.admitted, s.rejected, s.shed),
+            (10, 6, 1, 3),
+            "conservation fields survive the snapshot"
+        );
+        assert_eq!((s.dispatches, s.tokens, s.cycles), (4, 240, 2));
+        assert_eq!(s.classes.len(), 3);
+        assert_eq!(s.classes[1].class, "batch");
+        assert_eq!(s.classes[1].queue_counts.iter().sum::<u64>(), 1);
+        assert_eq!(s.classes[1].queue_p99_ticks, 128);
+        assert_eq!(s.classes[1].service_p99_ticks, 1024);
+        assert_eq!(s.classes[1].latency_p99_ticks, 2048);
+        assert_eq!(s.classes[0].queue_counts.iter().sum::<u64>(), 0);
+        assert!(s.residency.is_none());
+        m.push_snapshot(778);
+        assert_eq!(m.snapshots().len(), 1);
+        assert_eq!(m.snapshots()[0].at_ticks, 778);
+    }
+
+    #[test]
+    fn sink_receives_alerts_at_emission() {
+        struct Collect(std::sync::Arc<Mutex<Vec<(AlertKind, u64)>>>);
+        impl AlertSink for Collect {
+            fn emit(&self, a: &Alert) {
+                lock(&self.0).push((a.kind, a.at_ticks));
+            }
+        }
+        let seen = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let m = ServeMetrics::with_sink(Box::new(Collect(seen.clone())));
+        m.alert(AlertKind::QueueStale, 5, "old".into());
+        m.alert(AlertKind::SloShed, 9, "slow".into());
+        let log = m.alerts();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].kind, AlertKind::QueueStale);
+        assert_eq!(log[1].at_ticks, 9);
+        assert_eq!(*lock(&seen), vec![(AlertKind::QueueStale, 5), (AlertKind::SloShed, 9)]);
+    }
+}

@@ -49,6 +49,7 @@
 pub mod batcher;
 pub mod clock;
 pub mod generate;
+pub mod metrics;
 pub mod registry;
 pub mod scheduler;
 
@@ -72,6 +73,10 @@ pub use clock::{Clock, RealClock, SimClock, TICKS_PER_SEC};
 pub use generate::{
     synth_gen_trace, GenArrival, GenCfg, GenOutcome, GenRequest, GenStats, GenTraceSpec,
     GenerateEngine,
+};
+pub use metrics::{
+    percentile, Alert, AlertKind, AlertSink, ClassHist, LatHistogram, MetricsSnapshot,
+    ServeMetrics, SloCfg, SloController,
 };
 pub use registry::{LoadMode, LoadedSnapshot, ModelRegistry};
 pub use scheduler::{
@@ -230,6 +235,11 @@ fn evict_idle(
         let w = c.entries.remove(&k).expect("victim key just observed");
         c.resident_bytes -= w.bytes;
         c.evictions += 1;
+        // the DontNeed hint below discards any pages a prefetch warmed, so
+        // a stale marker would count the next re-fault as a spurious
+        // prefetch_hit (and markers for never-re-faulted windows would
+        // accumulate forever)
+        c.prefetched.remove(&k);
         // best-effort page hint: the evicted window's file pages are cold
         // now (a re-fault re-reads them from the file — MAP_PRIVATE
         // read-only pages are always clean, so this never loses data)
@@ -547,6 +557,12 @@ impl<'rt> ServeEngine<'rt> {
                         let c = &mut *guard;
                         c.tick += 1;
                         let tick = c.tick;
+                        // a concurrent schedule_prefetch may have marked
+                        // this window while we materialized unlocked; the
+                        // window is resident either way now, so the marker
+                        // is stale — without this, a later evict + re-fault
+                        // would count a spurious prefetch_hit
+                        c.prefetched.remove(&i);
                         if let Some(win) = c.entries.get_mut(&i) {
                             // another lane won the race while we were
                             // unlocked: share its pin, drop ours
@@ -756,5 +772,62 @@ impl RowExecutor for ServeEngine<'_> {
             .enumerate()
             .map(|(r, _)| RowOut { nll: nll.data[r], count: count.data[r] })
             .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::PinnedInner;
+
+    fn dummy_window(bytes: u64, last_use: u64) -> LazyWindow {
+        LazyWindow {
+            pinned: Arc::new(Pinned {
+                exec_name: "t".into(),
+                inner: PinnedInner::Native(BTreeMap::new()),
+            }),
+            bytes,
+            last_use,
+            span: None,
+        }
+    }
+
+    /// The stale-marker state only arises via a race (schedule_prefetch
+    /// marking a window while step_pinned materializes it unlocked), so
+    /// this constructs it directly: a window that is both resident and
+    /// marked must lose its marker when evicted — otherwise its next
+    /// re-fault counts a spurious prefetch_hit and the marker set grows
+    /// without bound for windows that never re-fault.
+    #[test]
+    fn evict_idle_clears_stale_prefetch_marker() {
+        let mut c = WindowCache::default();
+        c.entries.insert(0, dummy_window(100, 1));
+        c.entries.insert(1, dummy_window(100, 2));
+        c.resident_bytes = 200;
+        c.prefetched.insert(0);
+        c.prefetched.insert(1);
+        evict_idle(&mut c, 0, 0, 1, None);
+        assert_eq!(c.entries.len(), 1);
+        assert_eq!(c.evictions, 1);
+        assert!(c.entries.contains_key(&1), "LRU must keep the more recent window");
+        assert!(
+            !c.prefetched.contains(&0),
+            "eviction must clear the victim's marker (its warmed pages are DontNeed'd)"
+        );
+        assert!(c.prefetched.contains(&1), "the surviving window's marker is untouched");
+    }
+
+    #[test]
+    fn evict_idle_respects_byte_budget_and_counts() {
+        let mut c = WindowCache::default();
+        for i in 0..3usize {
+            c.entries.insert(i, dummy_window(100, i as u64));
+        }
+        c.resident_bytes = 300;
+        evict_idle(&mut c, 0, 0, usize::MAX, Some(150));
+        assert_eq!(c.entries.len(), 1);
+        assert_eq!(c.resident_bytes, 100);
+        assert_eq!(c.evictions, 2);
+        assert!(c.entries.contains_key(&2), "eviction order must be LRU");
     }
 }

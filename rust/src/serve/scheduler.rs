@@ -25,6 +25,19 @@
 //! wall clock anywhere in the decision path. `rust/tests/scheduler.rs`
 //! asserts exactly that, plus conservation and starvation-freedom
 //! invariants over seeded traces.
+//!
+//! Observability + SLO control: [`Scheduler::run_with_metrics`] records
+//! admission counters, per-class queue/service/latency histograms and
+//! alert events into a shared [`ServeMetrics`], and — when
+//! [`SchedulerCfg::slo_p99_ticks`] is set — drives an [`SloController`]
+//! that sheds Background arrivals (and stops aging pending Background)
+//! while the Interactive p99 estimate violates its target, recovering
+//! with hysteresis. All controller inputs are modeled ticks and histogram
+//! deltas, both lane-count independent, so the shed/recover alert
+//! sequence replays bitwise under [`super::clock::SimClock`] at any
+//! `dispatch` — `rust/tests/scheduler.rs` asserts that too. With the SLO
+//! disabled (the default) the decision path is byte-identical to the
+//! pre-metrics scheduler.
 
 use anyhow::{ensure, Result};
 
@@ -32,6 +45,7 @@ use super::batcher::{
     Batcher, ClassLat, Request, RequestKind, Response, RowExecutor, ServeStats, WorkRow,
 };
 use super::clock::{ticks_to_secs, Clock};
+use super::metrics::{percentile, AlertKind, ServeMetrics, SloCfg, SloController};
 
 /// Request priority classes, highest first.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -105,6 +119,22 @@ pub struct SchedulerCfg {
     /// Modeled ticks per window dispatch under a simulated clock. A real
     /// clock ignores this and uses measured time.
     pub service_ticks_per_dispatch: u64,
+    /// Interactive end-to-end p99 SLO target in ticks (`--slo-p99-ms`).
+    /// `None` (the default) disables the SLO controller entirely — no
+    /// shedding, no SLO alerts, decisions byte-identical to earlier
+    /// revisions. When set, an [`SloController`] watches the Interactive
+    /// latency histogram and sheds Background load on violation.
+    pub slo_p99_ticks: Option<u64>,
+    /// Minimum Interactive latency samples per controller evaluation
+    /// window (smaller deltas keep accumulating).
+    pub slo_min_samples: u64,
+    /// Consecutive healthy controller windows required before shedding
+    /// stops (recovery hysteresis).
+    pub slo_recover_cycles: u32,
+    /// Push a [`MetricsSnapshot`](super::metrics::MetricsSnapshot) into
+    /// the metrics instance at least this many ticks apart
+    /// (`--metrics-interval`); `None` disables periodic snapshots.
+    pub metrics_interval_ticks: Option<u64>,
 }
 
 impl Default for SchedulerCfg {
@@ -116,6 +146,10 @@ impl Default for SchedulerCfg {
             weights: [300_000, 200_000, 100_000],
             aging: 1,
             service_ticks_per_dispatch: 1_000,
+            slo_p99_ticks: None,
+            slo_min_samples: 8,
+            slo_recover_cycles: 3,
+            metrics_interval_ticks: None,
         }
     }
 }
@@ -134,6 +168,10 @@ pub struct Decision {
     pub rows: usize,
     /// Whether admission accepted the request.
     pub admitted: bool,
+    /// Whether the SLO controller shed the request at admission (a shed
+    /// request is never admitted and its response stays
+    /// [`Response::Rejected`]; distinct from a queue-capacity reject).
+    pub shed: bool,
     /// Drain cycle that dispatched it; `usize::MAX` if never dispatched
     /// (rejected requests stay that way).
     pub cycle: usize,
@@ -172,14 +210,35 @@ impl<'c> Scheduler<'c> {
         Self { cfg, clock }
     }
 
-    fn score(&self, d: &Decision, now: u64) -> u64 {
-        let age = now.saturating_sub(d.arrival);
+    fn score(&self, d: &Decision, now: u64, shed_bg: bool) -> u64 {
+        // while the SLO controller sheds, pending Background stops aging
+        // (ages down relative to everyone else): Interactive/Batch drain
+        // first until the tail recovers
+        let age = if shed_bg && d.class == Priority::Background {
+            0
+        } else {
+            now.saturating_sub(d.arrival)
+        };
         self.cfg.weights[d.class.index()].saturating_add(self.cfg.aging.saturating_mul(age))
     }
 
-    /// Run the trace to completion: every arrival is admitted or rejected
-    /// exactly once, and every admitted request is dispatched.
+    /// Run the trace to completion: every arrival is admitted, shed, or
+    /// rejected exactly once, and every admitted request is dispatched.
     pub fn run(&self, exec: &dyn RowExecutor, trace: &[Arrival]) -> Result<LiveOutcome> {
+        self.run_with_metrics(exec, trace, None)
+    }
+
+    /// [`Self::run`], recording into `metrics` (counters, per-class
+    /// histograms, alerts, periodic snapshots) and driving the SLO
+    /// controller when [`SchedulerCfg::slo_p99_ticks`] is set. With
+    /// `None`, a throwaway local instance absorbs the recording — the
+    /// decision path is identical either way.
+    pub fn run_with_metrics(
+        &self,
+        exec: &dyn RowExecutor,
+        trace: &[Arrival],
+        metrics: Option<&ServeMetrics>,
+    ) -> Result<LiveOutcome> {
         for w in trace.windows(2) {
             ensure!(w[0].at <= w[1].at, "trace arrivals must be time-sorted");
         }
@@ -191,7 +250,27 @@ impl<'c> Scheduler<'c> {
         let drain_rows =
             if self.cfg.drain_rows == 0 { cap_rows * 4 } else { self.cfg.drain_rows };
 
+        // with no caller-supplied metrics a throwaway instance absorbs the
+        // recording, so the decision path never branches on `metrics`
+        let own = ServeMetrics::new();
+        let m = metrics.unwrap_or(&own);
+        let mut ctl = self.cfg.slo_p99_ticks.map(|t| {
+            let mut c = SloController::new(SloCfg {
+                p99_target_ticks: t.max(1),
+                min_samples: self.cfg.slo_min_samples.max(1),
+                recover_cycles: self.cfg.slo_recover_cycles.max(1),
+            });
+            // re-baseline on whatever the metrics instance already holds:
+            // historical samples must not count toward the first window
+            c.prime(m);
+            c
+        });
+        let snap_iv = self.cfg.metrics_interval_ticks.map(|iv| iv.max(1));
+        let mut stale_active = false;
+        let mut collapse_active = false;
+
         let start = self.clock.now();
+        let mut next_snap = snap_iv.map(|iv| start + iv);
         let mut decisions: Vec<Decision> = trace
             .iter()
             .enumerate()
@@ -201,6 +280,7 @@ impl<'c> Scheduler<'c> {
                 arrival: start + a.at,
                 rows: a.request.rows.len(),
                 admitted: false,
+                shed: false,
                 cycle: usize::MAX,
                 dispatch_time: 0,
                 complete_time: 0,
@@ -228,6 +308,17 @@ impl<'c> Scheduler<'c> {
                 let a = &trace[next_ev];
                 let rows = a.request.rows.len();
                 ensure!(rows > 0, "trace request {next_ev} has no rows");
+                m.add_offered(1);
+                // SLO shedding comes before capacity: a shed request never
+                // occupies queue rows, and is counted apart from rejects
+                let shedding = ctl.as_ref().map(|c| c.shedding()).unwrap_or(false);
+                if shedding && a.class == Priority::Background {
+                    decisions[next_ev].shed = true;
+                    agg.shed += 1;
+                    m.add_shed(1);
+                    next_ev += 1;
+                    continue;
+                }
                 let admit = match self.cfg.queue_cap {
                     Some(c) => queued_rows + rows <= c,
                     None => true,
@@ -236,8 +327,10 @@ impl<'c> Scheduler<'c> {
                     decisions[next_ev].admitted = true;
                     pending.push(next_ev);
                     queued_rows += rows;
+                    m.add_admitted(1);
                 } else {
                     agg.rejected += 1;
+                    m.add_rejected(1);
                 }
                 next_ev += 1;
             }
@@ -245,11 +338,28 @@ impl<'c> Scheduler<'c> {
                 continue;
             }
 
+            // queue-staleness alert: rising edge when the oldest pending
+            // request has waited more than 2x the p99 target
+            if let Some(target) = self.cfg.slo_p99_ticks {
+                let oldest = pending.iter().map(|&s| decisions[s].arrival).min().unwrap_or(now);
+                let age = now.saturating_sub(oldest);
+                let stale = age > 2 * target.max(1);
+                if stale && !stale_active {
+                    m.alert(
+                        AlertKind::QueueStale,
+                        now,
+                        format!("oldest pending waited {age}t > 2x p99 target {target}t"),
+                    );
+                }
+                stale_active = stale;
+            }
+
             // rank pending by score (desc), then seq (asc): a deterministic
             // total order — ties never depend on queue insertion history
+            let shed_bg = ctl.as_ref().map(|c| c.shedding()).unwrap_or(false);
             pending.sort_by(|&a, &b| {
-                self.score(&decisions[b], now)
-                    .cmp(&self.score(&decisions[a], now))
+                self.score(&decisions[b], now, shed_bg)
+                    .cmp(&self.score(&decisions[a], now, shed_bg))
                     .then(a.cmp(&b))
             });
             // drain a strict prefix: the top request always goes (even if
@@ -270,6 +380,21 @@ impl<'c> Scheduler<'c> {
                 }
             }
             let selected: Vec<usize> = pending.drain(..n_take).collect();
+            // occupancy-collapse alert: rising edge when a cycle drains
+            // under a quarter of one executor batch while work is pending
+            // (oversized requests fragmenting the strict-prefix drain)
+            let collapsed = !pending.is_empty() && used * 4 < cap_rows;
+            if collapsed && !collapse_active {
+                m.alert(
+                    AlertKind::OccupancyCollapse,
+                    now,
+                    format!(
+                        "drained {used} rows (< 1/4 of batch {cap_rows}) with {} pending",
+                        pending.len()
+                    ),
+                );
+            }
+            collapse_active = collapsed;
             let reqs: Vec<Request> =
                 selected.iter().map(|&s| trace[s].request.clone()).collect();
             let (resp, st) = batcher.run(exec, &reqs)?;
@@ -291,8 +416,25 @@ impl<'c> Scheduler<'c> {
                 d.dispatch_time = now;
                 d.complete_time = done;
                 queued_rows -= d.rows; // re-credit admission capacity
+                m.record_queue(d.class, now.saturating_sub(d.arrival));
+                m.record_service(d.class, done.saturating_sub(now));
+                m.record_latency(d.class, done.saturating_sub(d.arrival));
             }
             cycles += 1;
+            m.add_dispatches(st.dispatches as u64);
+            m.add_tokens(st.tokens as u64);
+            m.add_cycles(1);
+            if let Some(c) = ctl.as_mut() {
+                if let Some((kind, detail)) = c.evaluate(m) {
+                    m.alert(kind, done, detail);
+                }
+            }
+            if let (Some(iv), Some(ns)) = (snap_iv, next_snap) {
+                if done >= ns {
+                    m.push_snapshot(done);
+                    next_snap = Some(done + iv);
+                }
+            }
 
             agg.dispatches += st.dispatches;
             agg.rows += st.rows;
@@ -312,16 +454,6 @@ impl<'c> Scheduler<'c> {
         agg.class_lat = class_latency(&decisions);
         Ok(LiveOutcome { responses, stats: agg, decisions, cycles })
     }
-}
-
-/// Nearest-rank percentile over a sorted slice (deterministic, no
-/// interpolation). Empty input reports 0.
-fn percentile(sorted: &[u64], p: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
-    }
-    let rank = ((p * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
-    sorted[rank - 1]
 }
 
 /// Fold the decision log into per-class latency stats (all three classes

@@ -9,6 +9,10 @@
 //!   responses to the eager engine while peak residency stays bounded
 //!   (asserted through `Storage`/`Pinned` heap introspection), and
 //!   eviction-then-retouch re-materializes bitwise-identical tensors;
+//! * residency accounting is exact under thrash: every touch under a
+//!   1-slot cache is a fault, each fault past the first evicts exactly
+//!   once, and a re-fault after eviction never claims a stale prefetch
+//!   hit (the warm marker dies with the eviction);
 //! * packed-domain pinning (codes + scales, no dequantized f32) serves
 //!   bitwise-identically to both f32 engines while pinning >= 4x fewer
 //!   bytes at 4 bits, and background prefetch warms the next window;
@@ -272,6 +276,65 @@ fn mmap_serving_is_bitwise_identical_with_bounded_residency() {
     // from the map and must reproduce the responses bit for bit
     let (resp_m2, _) = Batcher::coalescing(&lazy).run(&lazy, &requests).unwrap();
     assert_eq!(resp_m2, resp_e, "retouched windows diverged from eager");
+
+    std::fs::remove_file(&p).ok();
+}
+
+#[test]
+fn evict_then_refault_counts_fault_not_prefetch_hit() {
+    let _env = env_guard();
+    let (art, rt) = setup();
+    let p = tmp("accounting.cbqs");
+    let (cfg, _) = export_snapshot(&art, &rt, &p);
+
+    let mut reg = ModelRegistry::new();
+    let eager_snap = reg.load_with("acct-eager", &p, LoadMode::Eager).unwrap();
+    let mmap_snap = reg.load_with("acct-mmap", &p, LoadMode::Mmap).unwrap();
+    let eager = ServeEngine::new(&rt, &art, eager_snap).unwrap();
+    let lazy = ServeEngine::with_options(
+        &rt,
+        &art,
+        mmap_snap,
+        EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: false },
+    )
+    .unwrap();
+    let plan_len = lazy.plan_len() as u64;
+    assert!(plan_len >= 2, "need >= 2 windows for eviction traffic");
+
+    // regression (residency accounting): a window evicted and later
+    // re-faulted must count a plain fault — never a stale prefetch hit from
+    // a warm marker that survived the eviction — and every fault after the
+    // very first one evicts the single resident slot, exactly once
+    let requests = batcher::standard_mix(cfg.seq, 8, 3, 2);
+    let (resp_e, _) = Batcher::coalescing(&eager).run(&eager, &requests).unwrap();
+    let (resp_1, st_1) = Batcher::coalescing(&lazy).run(&lazy, &requests).unwrap();
+    assert_eq!(resp_1, resp_e, "pass A diverged from eager");
+    let r1 = lazy.residency();
+
+    // under a 1-window budget the 2-step plan alternates windows, so no
+    // touch ever finds its window still resident
+    assert_eq!(r1.hits, 0, "1-window budget over a 2-step plan cannot hit: {r1:?}");
+    assert_eq!(r1.faults, st_1.dispatches as u64 * plan_len, "every window touch faults");
+    assert_eq!(
+        r1.evictions,
+        r1.faults - 1,
+        "each fault but the first evicts the one resident window: {r1:?}"
+    );
+
+    // pass B re-faults every window from the map: counters double, the
+    // responses stay bit-identical, and warm-marker hits never exceed the
+    // warms actually issued
+    let (resp_2, st_2) = Batcher::coalescing(&lazy).run(&lazy, &requests).unwrap();
+    assert_eq!(resp_2, resp_e, "pass B diverged from eager");
+    let r2 = lazy.residency();
+    assert_eq!(st_2.dispatches, st_1.dispatches, "same mix must batch the same way");
+    assert_eq!(r2.hits, 0);
+    assert_eq!(r2.faults, 2 * r1.faults, "pass B must re-fault every window");
+    assert_eq!(r2.evictions, r2.faults - 1);
+    assert!(
+        r2.prefetch_hits <= r2.prefetches,
+        "a hit without a live warm means the marker leaked across eviction: {r2:?}"
+    );
 
     std::fs::remove_file(&p).ok();
 }

@@ -795,6 +795,41 @@ fn prop_serve_stats_all_rejected_no_underflow() {
     }
 }
 
+/// Zero-elapsed stats: whatever the counters say, a `wall_seconds` of 0
+/// (a run faster than the clock tick, or a synthetic snapshot) must yield
+/// exactly 0.0 for every rate — never NaN, never +inf, never a negative
+/// from the shed/rejected subtraction.
+#[test]
+fn prop_serve_stats_zero_elapsed_rates_are_exact_zero() {
+    use cbq::serve::ServeStats;
+    for seed in 0..cases(100) {
+        let mut g = Gen::new(seed + 95000);
+        let stats = ServeStats {
+            requests: g.usize_in(0, 50),
+            dispatches: g.usize_in(0, 20),
+            rows: g.usize_in(0, 64),
+            row_capacity: g.usize_in(0, 64),
+            tokens: g.usize_in(0, 4096),
+            rejected: g.usize_in(0, 50),
+            shed: g.usize_in(0, 50),
+            wall_seconds: 0.0,
+            dispatch_lanes: g.usize_in(0, 4),
+            peak_in_flight: g.usize_in(0, 4),
+            lane_busy_seconds: g.usize_in(0, 10) as f64,
+            ..ServeStats::default()
+        };
+        assert_eq!(stats.tokens_per_s(), 0.0, "seed {seed}: tokens/s with zero wall");
+        assert_eq!(stats.requests_per_s(), 0.0, "seed {seed}: req/s with zero wall");
+        assert_eq!(stats.lane_occupancy(), 0.0, "seed {seed}: occupancy with zero wall");
+        // and with shed + rejected exceeding requests, a positive wall still
+        // never underflows (saturating admitted count)
+        let mut s2 = stats.clone();
+        s2.wall_seconds = 1.0;
+        let rps = s2.requests_per_s();
+        assert!(rps.is_finite() && rps >= 0.0, "seed {seed}: req/s {rps}");
+    }
+}
+
 /// Packed entries survive the shared entry codec byte-exactly for every
 /// supported bit width (the CBQS on-disk path).
 #[test]

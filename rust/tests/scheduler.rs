@@ -26,7 +26,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use cbq::serve::clock::{RealClock, SimClock};
 use cbq::serve::scheduler::{synth_trace, Arrival, Priority, Scheduler, SchedulerCfg, TraceSpec};
 use cbq::serve::{
-    Batcher, LiveOutcome, Request, RequestKind, Response, RowExecutor, RowOut, WorkRow,
+    AlertKind, Batcher, LiveOutcome, Request, RequestKind, Response, RowExecutor, RowOut,
+    ServeMetrics, WorkRow,
 };
 
 const SEQ: usize = 6;
@@ -447,6 +448,122 @@ fn oversized_request_dispatches_alone_in_chunks() {
     assert_eq!(out.cycles, 1);
     assert_eq!(out.stats.dispatches, 3, "10 rows at batch 4 = 4+4+2");
     assert!(matches!(out.responses[0], Response::Ppl { .. }));
+}
+
+// ---------------------------------------------------------------------------
+// SLO controller: shed -> recover under overload
+// ---------------------------------------------------------------------------
+
+/// The seeded overload trace: a dense Interactive burst that blows the p99
+/// target, a Background wave that must be shed in its entirety, then a
+/// sparse Interactive tail whose healthy windows drive recovery.
+fn overload_trace() -> Vec<Arrival> {
+    let mut trace = Vec::new();
+    for i in 0..20u64 {
+        trace.push(Arrival { at: i * 100, class: Priority::Interactive, request: ppl1(i as u32) });
+    }
+    for i in 0..16u64 {
+        trace.push(Arrival {
+            at: 2_000 + i * 400,
+            class: Priority::Background,
+            request: ppl1(100 + i as u32),
+        });
+    }
+    for i in 0..8u64 {
+        trace.push(Arrival {
+            at: 20_000 + i * 10_000,
+            class: Priority::Interactive,
+            request: ppl1(200 + i as u32),
+        });
+    }
+    trace.sort_by_key(|a| a.at);
+    trace
+}
+
+fn overload_cfg(dispatch: usize) -> SchedulerCfg {
+    SchedulerCfg {
+        slo_p99_ticks: Some(3_000),
+        slo_min_samples: 2,
+        slo_recover_cycles: 2,
+        dispatch,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn slo_controller_sheds_and_recovers_deterministically() {
+    let trace = overload_trace();
+    let run = |dispatch: usize| {
+        let m = Mock::new(BATCH, SEQ);
+        let clock = SimClock::new();
+        let metrics = ServeMetrics::new();
+        let out = Scheduler::new(&clock, overload_cfg(dispatch))
+            .run_with_metrics(&m, &trace, Some(&metrics))
+            .unwrap();
+        (out, metrics)
+    };
+    let (out, metrics) = run(1);
+
+    // the exact alert timeline, hand-traced at 1000 ticks/dispatch: the
+    // 10-deep Interactive burst drains in one 3-dispatch cycle ending at
+    // t=4000 with window p99 4096t > 3000t -> shed; the sparse tail's
+    // 1000t latencies close 2-sample healthy windows until the second one
+    // ends shedding at t=51000
+    let alerts = metrics.alerts();
+    let kinds: Vec<(AlertKind, u64)> = alerts.iter().map(|a| (a.kind, a.at_ticks)).collect();
+    assert_eq!(kinds, vec![(AlertKind::SloShed, 4_000), (AlertKind::SloRecover, 51_000)]);
+
+    // every shed decision is a Background arrival inside the shed window:
+    // never admitted, answered Rejected, never dispatched
+    let shed: Vec<_> = out.decisions.iter().filter(|d| d.shed).collect();
+    assert_eq!(shed.len(), 16, "the whole Background wave lands in the shed window");
+    for d in &shed {
+        assert_eq!(d.class, Priority::Background, "only Background may be shed");
+        assert!(!d.admitted, "a shed request must not be admitted");
+        assert_eq!(out.responses[d.seq], Response::Rejected);
+        assert_eq!(d.cycle, usize::MAX, "a shed request must never dispatch");
+    }
+    assert_eq!(out.stats.shed, 16);
+    assert_eq!(out.stats.rejected, 0, "shedding is not a capacity reject");
+
+    // conservation across all three admission outcomes — in the decision
+    // log, the aggregate stats and the metrics counters
+    let admitted = out.decisions.iter().filter(|d| d.admitted).count();
+    assert_eq!(admitted, 28);
+    assert_eq!(admitted + out.stats.shed + out.stats.rejected, trace.len());
+    assert_eq!(metrics.offered(), trace.len() as u64);
+    assert_eq!(metrics.admitted() + metrics.shed() + metrics.rejected(), metrics.offered());
+    assert_eq!(metrics.shed(), 16);
+
+    // bitwise replay: other lane counts and a rerun at the same lane count
+    // reproduce the responses, decisions, alert timeline and every
+    // recorded counter/histogram
+    for lanes in [1usize, 2, 4] {
+        let (o2, m2) = run(lanes);
+        assert_eq!(o2.responses, out.responses, "{lanes} lanes changed responses");
+        assert_eq!(o2.decisions, out.decisions, "{lanes} lanes changed decisions");
+        assert_eq!(o2.cycles, out.cycles, "{lanes} lanes changed cycle count");
+        assert_eq!(m2.alerts(), alerts, "{lanes} lanes changed the alert timeline");
+        assert_eq!(m2.snapshot(0), metrics.snapshot(0), "{lanes} lanes changed metrics");
+    }
+}
+
+#[test]
+fn slo_off_by_default_never_sheds() {
+    // the same overload trace with the controller disarmed: nothing is
+    // shed, every request is admitted (no queue cap), and no alert fires
+    let trace = overload_trace();
+    let m = Mock::new(BATCH, SEQ);
+    let clock = SimClock::new();
+    let metrics = ServeMetrics::new();
+    let out = Scheduler::new(&clock, SchedulerCfg::default())
+        .run_with_metrics(&m, &trace, Some(&metrics))
+        .unwrap();
+    assert!(out.decisions.iter().all(|d| d.admitted && !d.shed));
+    assert_eq!(out.stats.shed, 0);
+    assert_eq!(metrics.shed(), 0);
+    assert!(metrics.alerts().is_empty(), "no SLO target -> no alerts");
+    assert!(out.responses.iter().all(|r| !matches!(r, Response::Rejected)));
 }
 
 #[test]
