@@ -1,0 +1,402 @@
+//! Grammar-aware corpus generation: valid CBQS containers and encodable
+//! scheduler traces, both pure functions of a [`FuzzRng`] stream.
+//!
+//! Containers are emitted through the *real* `snapshot::format` writers
+//! (never a reimplementation), so every corpus file is valid by
+//! construction and the mutation engine starts from the exact byte layout
+//! production snapshots have. Traces are serialized through the small
+//! `CBQT` codec defined here so the byte-mutation machinery can attack
+//! trace ingestion the same way it attacks the container parser.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use super::rng::FuzzRng;
+use crate::json::Value;
+use crate::serve::scheduler::{Arrival, Priority};
+use crate::serve::{Request, RequestKind, WorkRow};
+use crate::snapshot::format;
+use crate::tensor::io::{Entry, PackedTensor, MAX_NAME_LEN};
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// content hashing (FNV-1a 64)
+// ---------------------------------------------------------------------------
+
+/// Incremental FNV-1a 64-bit hash — the fuzzer's stable content digest.
+/// Chosen over `DefaultHasher` because its output is pinned across Rust
+/// versions and platforms, which fixture files require.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    /// Standard FNV-1a offset basis.
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold raw bytes into the hash.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// Fold a u64 (little-endian) into the hash.
+    pub fn update_u64(&mut self, v: u64) {
+        self.update(&v.to_le_bytes());
+    }
+
+    /// Final hash value.
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Canonical content hash of a loaded entry map: folds every name, dtype,
+/// shape and payload (f32 bit patterns / packed code bytes) in `BTreeMap`
+/// order. Two loads of the same logical model hash equal iff they are
+/// bit-exact.
+pub fn entries_hash(entries: &BTreeMap<String, Entry>) -> u64 {
+    let mut h = Fnv64::new();
+    h.update_u64(entries.len() as u64);
+    for (name, e) in entries {
+        h.update_u64(name.len() as u64);
+        h.update(name.as_bytes());
+        match e {
+            Entry::F32(t) => {
+                h.update(&[0u8]);
+                h.update_u64(t.dims.len() as u64);
+                for &d in &t.dims {
+                    h.update_u64(d as u64);
+                }
+                for &v in t.data.iter() {
+                    h.update(&v.to_bits().to_le_bytes());
+                }
+            }
+            Entry::Packed(p) => {
+                h.update(&[2u8, p.bits]);
+                h.update_u64(p.dims.len() as u64);
+                for &d in &p.dims {
+                    h.update_u64(d as u64);
+                }
+                h.update(&p.data);
+            }
+        }
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// container corpus
+// ---------------------------------------------------------------------------
+
+/// One generated corpus container: the on-disk bytes (already framed by
+/// the real writer), the frame version used, and the content hash of the
+/// entries it must load back to.
+#[derive(Clone, Debug)]
+pub struct ContainerCase {
+    /// Raw container file bytes.
+    pub bytes: Vec<u8>,
+    /// 1 or 2 — which writer produced it.
+    pub version: u32,
+    /// [`entries_hash`] of the written entries (the bit-exact oracle).
+    pub clean_hash: u64,
+}
+
+fn gen_name(rng: &mut FuzzRng, i: usize) -> String {
+    match rng.below(6) {
+        0 => format!("blocks.{}.wq.q", rng.below(32)),
+        1 => format!("blocks.{}.w1.scale", rng.below(32)),
+        2 => format!("t{i}"),
+        3 => "x".repeat(rng.range(1, 64)),
+        // edge: maximal and near-maximal header names
+        4 => "n".repeat(MAX_NAME_LEN),
+        _ => format!("lora.{}.{}", rng.below(8), rng.below(4)),
+    }
+}
+
+fn gen_entry(rng: &mut FuzzRng) -> Entry {
+    // shapes: scalar (empty dims), vectors, small matrices
+    let dims: Vec<usize> = match rng.below(5) {
+        0 => vec![],
+        1 => vec![rng.range(1, 17)],
+        _ => vec![rng.range(1, 9), rng.range(1, 9)],
+    };
+    let count: usize = dims.iter().product();
+    if rng.chance(1, 2) {
+        let data: Vec<f32> = (0..count).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+        Entry::F32(Tensor::new(dims, data))
+    } else {
+        let bits = rng.range(1, 8) as u8;
+        let half = 1i32 << (bits - 1);
+        let codes: Vec<i32> =
+            (0..count).map(|_| rng.below(2 * half as u64) as i32 - half).collect();
+        Entry::Packed(PackedTensor::pack(&codes, dims, bits).expect("codes in range"))
+    }
+}
+
+/// Generate one valid container (v1 or v2, chosen by the stream) into
+/// `scratch` and return its bytes + oracle hash. The file is removed
+/// before returning — mutation works on the in-memory bytes.
+pub fn gen_container(rng: &mut FuzzRng, scratch: &std::path::Path) -> Result<ContainerCase> {
+    let n = rng.range(0, 5);
+    let entries: Vec<(String, Entry, i32)> = (0..n)
+        .map(|i| {
+            let name = gen_name(rng, i);
+            let e = gen_entry(rng);
+            let group = if rng.chance(1, 3) { rng.below(1 << 10) as i32 } else { -1 };
+            (name, e, group)
+        })
+        .collect();
+    let header = Value::obj(vec![
+        ("format", Value::str("CBQS")),
+        ("fuzz_case", Value::num(rng.below(1 << 20) as f64)),
+    ]);
+    let version = if rng.chance(1, 3) { 1 } else { 2 };
+    if version == 1 {
+        let v1: Vec<(String, Entry)> =
+            entries.iter().map(|(n, e, _)| (n.clone(), e.clone())).collect();
+        format::write_container_v1(scratch, &header, &v1)?;
+    } else {
+        format::write_container(scratch, &header, &entries)?;
+    }
+    let bytes = std::fs::read(scratch)?;
+    std::fs::remove_file(scratch).ok();
+    let map: BTreeMap<String, Entry> =
+        entries.into_iter().map(|(n, e, _)| (n, e)).collect();
+    Ok(ContainerCase { bytes, version, clean_hash: entries_hash(&map) })
+}
+
+// ---------------------------------------------------------------------------
+// CBQT trace codec
+// ---------------------------------------------------------------------------
+
+/// Magic of the fuzzer's trace serialization.
+pub const TRACE_MAGIC: &[u8; 4] = b"CBQT";
+/// Codec version.
+pub const TRACE_VERSION: u32 = 1;
+/// Hardening cap on decoded element counts (arrivals, rows, tokens) so a
+/// mutated length field cannot drive an OOM allocation.
+pub const TRACE_MAX_ITEMS: usize = 1 << 20;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize a scheduler trace to `CBQT` bytes. Rows are stored
+/// field-for-field (inputs/targets/mask bit patterns), so decode rebuilds
+/// the exact [`WorkRow`]s — including degenerate ones a mutation produced.
+pub fn encode_trace(trace: &[Arrival]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(TRACE_MAGIC);
+    put_u32(&mut out, TRACE_VERSION);
+    put_u32(&mut out, trace.len() as u32);
+    for a in trace {
+        put_u64(&mut out, a.at);
+        out.push(a.class.index() as u8);
+        let (kind, correct) = match &a.request.kind {
+            RequestKind::Ppl => (0u8, 0u32),
+            RequestKind::Choice { correct } => (1, *correct as u32),
+            RequestKind::Hidden => (2, 0),
+        };
+        out.push(kind);
+        put_u32(&mut out, correct);
+        put_u32(&mut out, a.request.rows.len() as u32);
+        for r in &a.request.rows {
+            put_u32(&mut out, r.inputs.len() as u32);
+            for &t in &r.inputs {
+                put_u32(&mut out, t as u32);
+            }
+            put_u32(&mut out, r.targets.len() as u32);
+            for &t in &r.targets {
+                put_u32(&mut out, t as u32);
+            }
+            put_u32(&mut out, r.mask.len() as u32);
+            for &m in &r.mask {
+                put_u32(&mut out, m.to_bits());
+            }
+        }
+    }
+    out
+}
+
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len());
+        let Some(end) = end else { bail!("trace truncated at byte {}", self.pos) };
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bounded(&mut self, what: &str) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(n <= TRACE_MAX_ITEMS, "trace {what} count {n} exceeds cap");
+        // a count can never promise more elements than bytes remain
+        ensure!(n <= self.b.len() - self.pos, "trace {what} count {n} overruns frame");
+        Ok(n)
+    }
+}
+
+/// Decode `CBQT` bytes back to a trace. Every length is bounds-checked
+/// against the remaining frame and the [`TRACE_MAX_ITEMS`] cap; class and
+/// kind tags out of range are clean errors. This is itself a hardened
+/// parser — the trace fuzz target attacks it byte-wise before the
+/// scheduler ever sees the result.
+pub fn decode_trace(bytes: &[u8]) -> Result<Vec<Arrival>> {
+    let mut rd = Rd { b: bytes, pos: 0 };
+    ensure!(rd.take(4)? == TRACE_MAGIC, "bad trace magic");
+    let ver = rd.u32()?;
+    ensure!(ver == TRACE_VERSION, "unsupported trace version {ver}");
+    let n = rd.bounded("arrival")?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let at = rd.u64()?;
+        let class = match rd.u8()? {
+            0 => Priority::Interactive,
+            1 => Priority::Batch,
+            2 => Priority::Background,
+            c => bail!("trace class tag {c} out of range"),
+        };
+        let kind_tag = rd.u8()?;
+        let correct = rd.u32()? as usize;
+        let kind = match kind_tag {
+            0 => RequestKind::Ppl,
+            1 => RequestKind::Choice { correct },
+            2 => RequestKind::Hidden,
+            k => bail!("trace request kind tag {k} out of range"),
+        };
+        let n_rows = rd.bounded("row")?;
+        let mut rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            let n_in = rd.bounded("input token")?;
+            let inputs: Vec<i32> =
+                (0..n_in).map(|_| rd.u32().map(|v| v as i32)).collect::<Result<_>>()?;
+            let n_tg = rd.bounded("target token")?;
+            let targets: Vec<i32> =
+                (0..n_tg).map(|_| rd.u32().map(|v| v as i32)).collect::<Result<_>>()?;
+            let n_mk = rd.bounded("mask")?;
+            let mask: Vec<f32> =
+                (0..n_mk).map(|_| rd.u32().map(f32::from_bits)).collect::<Result<_>>()?;
+            rows.push(WorkRow { inputs, targets, mask });
+        }
+        out.push(Arrival { at, class, request: Request { kind, rows } });
+    }
+    ensure!(rd.pos == bytes.len(), "trailing garbage after trace ({} bytes)", bytes.len() - rd.pos);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::scheduler::{synth_trace, TraceSpec};
+
+    fn spec(seed: u64) -> TraceSpec {
+        TraceSpec { seed, requests: 24, mean_gap_ticks: 300, seq: 6, vocab: 40, priorities: true }
+    }
+
+    #[test]
+    fn trace_codec_round_trips_bit_exactly() {
+        let trace = synth_trace(&spec(9));
+        let bytes = encode_trace(&trace);
+        let back = decode_trace(&bytes).unwrap();
+        assert_eq!(back.len(), trace.len());
+        for (a, b) in trace.iter().zip(&back) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.request.rows.len(), b.request.rows.len());
+            for (ra, rb) in a.request.rows.iter().zip(&b.request.rows) {
+                assert_eq!(ra.inputs, rb.inputs);
+                assert_eq!(ra.targets, rb.targets);
+                assert_eq!(
+                    ra.mask.iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
+                    rb.mask.iter().map(|m| m.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trace_decode_rejects_malformed_frames() {
+        let bytes = encode_trace(&synth_trace(&spec(3)));
+        assert!(decode_trace(&bytes[..bytes.len() - 1]).is_err(), "truncation");
+        let mut garbage = bytes.clone();
+        garbage.push(0);
+        assert!(decode_trace(&garbage).is_err(), "trailing garbage");
+        let mut magic = bytes.clone();
+        magic[0] ^= 0xFF;
+        assert!(decode_trace(&magic).is_err(), "magic");
+        // class tag out of range: first arrival's class byte sits right
+        // after magic(4) + version(4) + n(4) + at(8)
+        let mut cls = bytes.clone();
+        cls[20] = 9;
+        assert!(decode_trace(&cls).is_err(), "class tag");
+        // huge arrival count must be a clean error, not an OOM
+        let mut huge = bytes.clone();
+        huge[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_trace(&huge).is_err(), "count cap");
+    }
+
+    #[test]
+    fn corpus_containers_load_back_to_their_hash() {
+        let mut rng = FuzzRng::new(77);
+        let scratch = std::env::temp_dir().join(format!("cbq_corpus_{}", std::process::id()));
+        for i in 0..12 {
+            let case = gen_container(&mut rng, &scratch).unwrap();
+            let p = scratch.with_extension(format!("case{i}"));
+            std::fs::write(&p, &case.bytes).unwrap();
+            let (_, entries) = format::read_container(&p).unwrap();
+            assert_eq!(
+                entries_hash(&entries),
+                case.clean_hash,
+                "case {i} (v{}) must load bit-exactly",
+                case.version
+            );
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn entries_hash_separates_content_and_shape() {
+        let t = |dims: Vec<usize>, data: Vec<f32>| Entry::F32(Tensor::new(dims, data));
+        let mk = |e: Entry| {
+            let mut m = BTreeMap::new();
+            m.insert("a".to_string(), e);
+            entries_hash(&m)
+        };
+        let base = mk(t(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        assert_ne!(base, mk(t(vec![4], vec![1.0, 2.0, 3.0, 4.0])), "shape");
+        assert_ne!(base, mk(t(vec![2, 2], vec![1.0, 2.0, 3.0, 4.5])), "content");
+        assert_eq!(base, mk(t(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0])), "stable");
+    }
+}

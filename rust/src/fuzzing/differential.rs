@@ -1,0 +1,274 @@
+//! Fuzz target: differential oracles — randomized configurations pushed
+//! through independently-implemented paths that must agree **bitwise**.
+//!
+//! Two legs:
+//!
+//! * **kernels** (every iteration) — random `m×k×n` shapes straddling the
+//!   blocked-path threshold, every packed bit-width, adversarial scale
+//!   columns (exact zero, negative, below the `EPS` floor, huge) and
+//!   planted zeros in the activation matrix; `qmatmul`/`qmatvec` under
+//!   every forced SIMD tier (scalar, SSE2, AVX2 — tiers clamp to what the
+//!   host supports) must equal the f32 dequant-then-matmul oracle bit for
+//!   bit, and `qmatvec` must equal the matching single-row `qmatmul`;
+//! * **serving** (every ~8th iteration) — the same randomized request mix
+//!   served by the eager-load engine, the lazy (`mmap`, one resident
+//!   window, eviction active) engine, and the packed-domain engine; all
+//!   three response vectors must compare equal.
+//!
+//! Any disagreement or panic is a finding. The digest folds the oracle
+//! outputs' bit patterns, so CI's double-invocation check also certifies
+//! that the *numerics* replay across runs, not just the verdicts.
+
+use anyhow::Result;
+
+use super::corpus::Fnv64;
+use super::env::FuzzEnv;
+use super::rng::FuzzRng;
+use super::{catch, with_quiet_panics, Finding, FuzzOpts, FuzzReport};
+use crate::quant;
+use crate::runtime::backend::kernels as k;
+use crate::runtime::backend::kernels::SimdTier;
+use crate::serve::{batcher, Batcher, EngineOptions, LoadMode, Response};
+
+/// The three forced tiers every kernel case runs under. `*_with_tier`
+/// clamps to the host's best tier, so requesting AVX2 on a plain-SSE2 host
+/// degrades safely instead of faulting.
+const TIERS: [SimdTier; 3] = [SimdTier::Scalar, SimdTier::Sse2, SimdTier::Avx2];
+
+/// One randomized kernel case: returns `Ok(hash-of-outputs)` or a
+/// human-readable disagreement description.
+fn kernel_case(rng: &mut FuzzRng) -> std::result::Result<u64, String> {
+    let (m, kk, n) = (rng.range(1, 12), rng.range(1, 64), rng.range(1, 48));
+    let bits = [2u8, 3, 4, 5, 6, 7, 8][rng.index(7)];
+    let half = 1i32 << (bits - 1);
+    let codes: Vec<i32> =
+        (0..kk * n).map(|_| rng.below(2 * half as u64) as i32 - half).collect();
+    // scale columns: mostly ordinary positive, with planted edge cases
+    // (exact zero and negatives hit the EPS floor; tiny and huge stress
+    // the multiply) — the same corpus the proptests certify
+    let s_w: Vec<f32> = (0..n)
+        .map(|_| match rng.below(6) {
+            0 => 0.0,
+            1 => -0.25,
+            2 => quant::EPS / 4.0,
+            3 => 2.9e4,
+            _ => rng.f32_in(1e-3, 2.0),
+        })
+        .collect();
+    let a: Vec<f32> = (0..m * kk)
+        .map(|_| if rng.chance(1, 5) { 0.0 } else { rng.f32_in(-2.0, 2.0) })
+        .collect();
+
+    let q = k::QPanels::pack(&codes, kk, n, bits, &s_w);
+    let deq: Vec<f32> =
+        (0..kk * n).map(|i| codes[i] as f32 * s_w[i % n].max(quant::EPS)).collect();
+    if q.dequant() != deq {
+        return Err(format!("dequant mismatch ({kk}x{n} bits {bits})"));
+    }
+    let oracle = k::matmul(&a, m, kk, &deq, n);
+    for tier in TIERS {
+        if k::qmatmul_with_tier(&a, m, kk, &q, tier) != oracle {
+            return Err(format!(
+                "qmatmul {m}x{kk}x{n} bits {bits} tier {} diverges from dequant oracle",
+                tier.name()
+            ));
+        }
+    }
+    // matvec leg: first row of A against the same panels
+    let row = &a[..kk];
+    let row_oracle = k::matmul(row, 1, kk, &deq, n);
+    for tier in TIERS {
+        let v = k::qmatvec_with_tier(row, kk, &q, tier);
+        if v != row_oracle {
+            return Err(format!(
+                "qmatvec {kk}x{n} bits {bits} tier {} diverges from dequant oracle",
+                tier.name()
+            ));
+        }
+        if v != k::qmatmul_with_tier(row, 1, kk, &q, tier) {
+            return Err(format!(
+                "qmatvec vs 1-row qmatmul {kk}x{n} bits {bits} tier {} diverge",
+                tier.name()
+            ));
+        }
+    }
+    let mut h = Fnv64::new();
+    for &x in &oracle {
+        h.update(&x.to_bits().to_le_bytes());
+    }
+    Ok(h.finish())
+}
+
+/// Stable digest of a response vector (folds exact bit patterns).
+fn responses_hash(resps: &[Response]) -> u64 {
+    let mut h = Fnv64::new();
+    for r in resps {
+        match r {
+            Response::Ppl { nll, count } => {
+                h.update_u64(1);
+                h.update_u64(nll.to_bits());
+                h.update_u64(count.to_bits());
+            }
+            Response::Choice { pick, correct, scores } => {
+                h.update_u64(2);
+                h.update_u64(*pick as u64);
+                h.update_u64(*correct as u64);
+                for s in scores {
+                    h.update(&s.to_bits().to_le_bytes());
+                }
+            }
+            Response::Hidden { tokens } => {
+                h.update_u64(3);
+                h.update_u64(*tokens as u64);
+            }
+            Response::Rejected => h.update_u64(4),
+        }
+    }
+    h.finish()
+}
+
+/// One randomized serve case: the same request mix through the eager, lazy
+/// (single resident window, eviction on every hop) and packed engines.
+fn serve_case(env: &mut FuzzEnv, rng: &mut FuzzRng) -> std::result::Result<u64, String> {
+    let seq = env.cfg.seq;
+    let mix =
+        batcher::standard_mix(seq, rng.range(1, 4), rng.range(0, 2), rng.range(0, 2));
+    let eager_snap = env.snap("diff-eager", LoadMode::Eager).map_err(|e| format!("{e:#}"))?;
+    let lazy_snap = env.snap("diff-lazy", LoadMode::Mmap).map_err(|e| format!("{e:#}"))?;
+    let packed_snap = env.snap("diff-packed", LoadMode::Mmap).map_err(|e| format!("{e:#}"))?;
+    let env_ro: &FuzzEnv = env;
+    let legs: [(&str, Option<EngineOptions>, _); 3] = [
+        ("eager", None, eager_snap),
+        (
+            "lazy",
+            Some(EngineOptions { resident_windows: Some(1), resident_bytes: None, packed: false }),
+            lazy_snap,
+        ),
+        (
+            "packed",
+            Some(EngineOptions { resident_windows: None, resident_bytes: None, packed: true }),
+            packed_snap,
+        ),
+    ];
+    let mut first: Option<(Vec<Response>, u64)> = None;
+    for (name, opts, snap) in legs {
+        let eng = env_ro.engine(snap, opts).map_err(|e| format!("{name}: {e:#}"))?;
+        let out = catch(|| Batcher::coalescing(&eng).run(&eng, &mix))
+            .map_err(|msg| format!("{name} engine panicked: {msg}"))?;
+        let (resps, _) = out.map_err(|e| format!("{name} engine errored: {e:#}"))?;
+        match &first {
+            None => {
+                let h = responses_hash(&resps);
+                first = Some((resps, h));
+            }
+            Some((base, _)) => {
+                if &resps != base {
+                    return Err(format!(
+                        "{name} engine responses diverge from eager ({} requests)",
+                        mix.len()
+                    ));
+                }
+            }
+        }
+    }
+    Ok(first.map(|(_, h)| h).unwrap_or_default())
+}
+
+/// Run the differential fuzz target.
+pub fn run(opts: &FuzzOpts) -> Result<FuzzReport> {
+    let mut rng = FuzzRng::new(opts.seed);
+    let mut digest = Fnv64::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut cases_ok = 0u64;
+    let cases_rejected = 0u64; // differentials never "cleanly reject"
+    let mut env: Option<FuzzEnv> = None;
+
+    with_quiet_panics(|| -> Result<()> {
+        for iter in 0..opts.iters {
+            match catch(|| kernel_case(&mut rng.clone())) {
+                Err(msg) => {
+                    digest.update_u64(3);
+                    findings.push(Finding {
+                        iter,
+                        summary: format!("kernel case panicked: {msg}"),
+                        fixture: None, // repro = --target differential --seed
+                    });
+                }
+                Ok(Err(msg)) => {
+                    digest.update_u64(4);
+                    findings.push(Finding { iter, summary: msg, fixture: None });
+                }
+                Ok(Ok(h)) => {
+                    digest.update_u64(1);
+                    digest.update_u64(h);
+                    cases_ok += 1;
+                }
+            }
+            // the RNG state must advance identically whether or not the
+            // case panicked mid-draw, so the case above ran on a clone;
+            // re-sync by burning a fixed stride
+            for _ in 0..8 {
+                rng.next_u64();
+            }
+
+            if iter % 8 == 0 {
+                if env.is_none() {
+                    env = Some(FuzzEnv::build(&opts.scratch)?);
+                }
+                let env_ref = env.as_mut().unwrap();
+                match serve_case(env_ref, &mut rng) {
+                    Ok(h) => {
+                        digest.update_u64(11);
+                        digest.update_u64(h);
+                        cases_ok += 1;
+                    }
+                    Err(msg) => {
+                        digest.update_u64(12);
+                        findings.push(Finding {
+                            iter,
+                            summary: format!("serve differential: {msg}"),
+                            fixture: None,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    })?;
+
+    Ok(FuzzReport {
+        target: "differential".to_string(),
+        seed: opts.seed,
+        iters: opts.iters,
+        digest: digest.finish(),
+        cases_ok,
+        cases_rejected,
+        findings,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_cases_agree_and_replay() {
+        let mut r1 = FuzzRng::new(3);
+        let mut r2 = FuzzRng::new(3);
+        for _ in 0..24 {
+            let a = kernel_case(&mut r1).expect("kernel paths must agree bitwise");
+            let b = kernel_case(&mut r2).expect("kernel paths must agree bitwise");
+            assert_eq!(a, b, "kernel case digest must replay from the seed");
+        }
+    }
+
+    #[test]
+    fn responses_hash_separates_variants() {
+        let a = responses_hash(&[Response::Ppl { nll: 1.0, count: 2.0 }]);
+        let b = responses_hash(&[Response::Ppl { nll: 1.0, count: 3.0 }]);
+        let c = responses_hash(&[Response::Hidden { tokens: 8 }]);
+        let d = responses_hash(&[Response::Rejected]);
+        assert!(a != b && a != c && a != d && c != d);
+        assert_eq!(a, responses_hash(&[Response::Ppl { nll: 1.0, count: 2.0 }]));
+    }
+}

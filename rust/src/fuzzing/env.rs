@@ -1,0 +1,86 @@
+//! Shared fuzz environment: one tiny synthetic model, quantized and
+//! exported once per run, serving as the substrate for every engine-level
+//! fuzz leg (serve differentials, generate-trace ingestion).
+//!
+//! Built exactly like the integration tests build theirs (`cbq synth` →
+//! RTN quantize → `snapshot::save`), so the fuzzer attacks the same stack
+//! the tests certify — just with adversarial inputs. Construction is
+//! deterministic: the synthetic spec is fixed, so every run fuzzes the
+//! identical model.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::{BitSpec, QuantJob};
+use crate::coordinator::Pipeline;
+use crate::runtime::{synth, Artifacts, ModelCfg, NativeBackend};
+use crate::serve::{EngineOptions, LoadMode, LoadedSnapshot, ModelRegistry, ServeEngine};
+
+/// The lazily-built engine substrate. Hold one per fuzz run; engines are
+/// constructed per case from snapshots the registry shares.
+pub struct FuzzEnv {
+    /// Synthetic artifacts (manifest + pretrained weights + corpus).
+    pub art: Artifacts,
+    /// Native CPU backend bound to the artifacts.
+    pub rt: NativeBackend,
+    /// The exported quantized snapshot every engine loads.
+    pub snap_path: PathBuf,
+    /// Model config of the exported snapshot (seq/vocab bounds for trace
+    /// generation).
+    pub cfg: ModelCfg,
+    registry: ModelRegistry,
+}
+
+impl FuzzEnv {
+    /// Synthesize, quantize (fast RTN path) and export the fuzz model
+    /// under `scratch`. ~seconds; done once per run, only for targets
+    /// that need engines.
+    pub fn build(scratch: &Path) -> Result<FuzzEnv> {
+        let dir = scratch.join("fuzz_artifacts");
+        let mut spec = synth::SynthSpec::tiny();
+        // 4 layers => a 2-window serve plan, so the lazy engine's eviction
+        // path is actually on the fuzzed surface
+        spec.n_layers = 4;
+        spec.pretrain_steps = 40;
+        synth::generate(&dir, &spec).context("synthesizing fuzz artifacts")?;
+        let art = Artifacts::load(&dir).context("loading fuzz artifacts")?;
+        let rt = NativeBackend::new(&art).context("native backend for fuzzing")?;
+        let snap_path = scratch.join("fuzz_model.cbqs");
+        let model = art.default_model().to_string();
+        let (cfg, qm) = {
+            let mut pipe = Pipeline::new(&art, &rt, &model)?;
+            let mut job = QuantJob::rtn(BitSpec::new(4, 16));
+            job.calib_sequences = 4;
+            let (qm, _) = pipe.run(&job)?;
+            (pipe.cfg.clone(), qm)
+        };
+        crate::snapshot::save(&snap_path, &cfg, &qm).context("exporting fuzz snapshot")?;
+        Ok(FuzzEnv { art, rt, snap_path, cfg, registry: ModelRegistry::new() })
+    }
+
+    /// Load (or re-share) the fuzz snapshot under `name` in `mode`. The
+    /// mutable borrow ends at return, so several snapshots can feed
+    /// engines that live side by side.
+    pub fn snap(&mut self, name: &str, mode: LoadMode) -> Result<Arc<LoadedSnapshot>> {
+        self.registry.load_with(name, &self.snap_path, mode)
+    }
+
+    /// Build an engine over a snapshot from [`FuzzEnv::snap`]. `opts:
+    /// None` uses eager-style defaults with packing off — explicit, never
+    /// environment-dependent, so fuzz runs replay regardless of
+    /// `CBQ_PACKED`/`CBQ_RESIDENT_MB` in the caller's shell.
+    pub fn engine(
+        &self,
+        snap: Arc<LoadedSnapshot>,
+        opts: Option<EngineOptions>,
+    ) -> Result<ServeEngine<'_>> {
+        let opts = opts.unwrap_or(EngineOptions {
+            resident_windows: None,
+            resident_bytes: None,
+            packed: false,
+        });
+        ServeEngine::with_options(&self.rt, &self.art, snap, opts)
+    }
+}

@@ -1,0 +1,285 @@
+//! Deterministic adversarial harness: structure-aware fuzzing of the CBQS
+//! container parser, scheduler/generate trace ingestion, and the serving /
+//! kernel differential oracles.
+//!
+//! Design rules (ROADMAP item 4, "seeded + deterministic so failures
+//! replay"):
+//!
+//! * **No external deps, no entropy.** Everything derives from one
+//!   [`rng::FuzzRng`] (the scheduler's LCG) — `cbq fuzz --target <t>
+//!   --seed S --iters N` replays the identical corpus, mutations and
+//!   verdicts on every platform, twice in a row.
+//! * **Grammar-aware corpora.** Containers come out of the *real*
+//!   `snapshot::format` writers and traces out of the real synthesizers,
+//!   then get mutated — so every case starts from the production byte
+//!   layout instead of random noise the parser rejects in the first
+//!   16 bytes.
+//! * **Three oracles.** A parser must never panic and never accept a
+//!   checksum-covered corruption silently; trace ingestion must keep the
+//!   scheduler/generate conservation + replay invariants or fail cleanly;
+//!   and the eager/lazy/packed engines and scalar/SSE2/AVX2 kernels must
+//!   agree bitwise on randomized inputs.
+//! * **Failures persist.** A finding is minimized (end-truncation while
+//!   the failure class reproduces) and written as a `CBQF` fixture under
+//!   `rust/tests/fixtures/`, which `tests/fuzz_regressions.rs` replays
+//!   forever.
+
+pub mod corpus;
+pub mod differential;
+pub mod env;
+pub mod mutate;
+pub mod rng;
+pub mod snapshot_target;
+pub mod trace_target;
+
+use std::panic::{self, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use corpus::Fnv64;
+
+/// Valid `--target` names, in the order CI runs them.
+pub const TARGETS: &[&str] = &["snapshot", "trace", "differential"];
+
+/// One fuzz run's parameters.
+#[derive(Clone, Debug)]
+pub struct FuzzOpts {
+    /// Master seed: the whole run is a pure function of it.
+    pub seed: u64,
+    /// Iteration budget.
+    pub iters: u64,
+    /// Scratch directory for case files (and the differential target's
+    /// synthetic model). Created on demand, cleaned per case.
+    pub scratch: PathBuf,
+    /// Where to persist minimized finding fixtures (`None` = don't).
+    pub fixtures: Option<PathBuf>,
+}
+
+impl FuzzOpts {
+    /// Options with the default scratch location (`$TMPDIR/cbq_fuzz_<pid>`).
+    pub fn new(seed: u64, iters: u64) -> Self {
+        Self {
+            seed,
+            iters,
+            scratch: std::env::temp_dir().join(format!("cbq_fuzz_{}", std::process::id())),
+            fixtures: None,
+        }
+    }
+}
+
+/// One confirmed failure: what happened, on which iteration, and the
+/// minimized fixture that reproduces it (when persistence is enabled).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Iteration (0-based) the failure surfaced on.
+    pub iter: u64,
+    /// Failure class + mutation trail, human-readable.
+    pub summary: String,
+    /// Path of the persisted minimized fixture, if any.
+    pub fixture: Option<PathBuf>,
+}
+
+/// Outcome of a whole fuzz run. `digest` folds every case's verdict and
+/// mutated-bytes checksum — two runs with equal seed/iters must report the
+/// identical digest (the CLI prints it; CI compares two invocations).
+#[derive(Clone, Debug)]
+pub struct FuzzReport {
+    /// Target name (`snapshot` / `trace` / `differential`).
+    pub target: String,
+    /// Seed the run used.
+    pub seed: u64,
+    /// Iterations executed.
+    pub iters: u64,
+    /// Order-sensitive FNV-1a digest of every case's outcome. Never folds
+    /// error *messages* (they may embed scratch paths) — only outcome
+    /// codes, content hashes and byte checksums.
+    pub digest: u64,
+    /// Cases that parsed/ran clean (bit-exact load, invariant-clean run).
+    pub cases_ok: u64,
+    /// Cases rejected with a clean error (the expected fate of most
+    /// mutations).
+    pub cases_rejected: u64,
+    /// Confirmed failures (empty on a healthy tree).
+    pub findings: Vec<Finding>,
+}
+
+/// Run one fuzz target by name.
+pub fn run_target(target: &str, opts: &FuzzOpts) -> Result<FuzzReport> {
+    std::fs::create_dir_all(&opts.scratch)
+        .with_context(|| format!("creating fuzz scratch {:?}", opts.scratch))?;
+    match target {
+        "snapshot" => snapshot_target::run(opts),
+        "trace" => trace_target::run(opts),
+        "differential" => differential::run(opts),
+        other => bail!("unknown fuzz target `{other}` (expected one of {TARGETS:?})"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// panic capture
+// ---------------------------------------------------------------------------
+
+/// Run `f`, converting a panic into `Err(message)`. Wrapped around every
+/// parser/engine call under fuzz: a panic is always a finding, never an
+/// abort of the run.
+pub fn catch<T>(f: impl FnOnce() -> T) -> std::result::Result<T, String> {
+    panic::catch_unwind(AssertUnwindSafe(f)).map_err(|e| {
+        if let Some(s) = e.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = e.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    })
+}
+
+/// Silence the default panic hook while `f` runs (fuzzing provokes panics
+/// on purpose; the default hook's backtrace spam would bury real
+/// findings). Panics inside `f` must be contained by [`catch`] — every
+/// fuzz loop does — so the previous hook is always restored on return.
+pub fn with_quiet_panics<T>(f: impl FnOnce() -> T) -> T {
+    let prev = panic::take_hook();
+    panic::set_hook(Box::new(|_| {}));
+    let out = f();
+    panic::set_hook(prev);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// CBQF fixture files
+// ---------------------------------------------------------------------------
+
+/// Fixture magic.
+pub const FIXTURE_MAGIC: &[u8; 4] = b"CBQF";
+/// Fixture codec version.
+pub const FIXTURE_VERSION: u32 = 1;
+/// Fixture payload is a CBQS container attacked by the snapshot target.
+pub const FIXTURE_TARGET_SNAPSHOT: u8 = 0;
+/// Fixture payload is a `CBQT` trace attacked by the trace target.
+pub const FIXTURE_TARGET_TRACE: u8 = 1;
+/// The parser/ingestor must reject the payload with a clean error.
+pub const FIXTURE_EXPECT_REJECT: u8 = 0;
+/// The payload must be accepted: bit-exact load (snapshot, against
+/// `clean_hash`) or an invariant-clean run (trace).
+pub const FIXTURE_EXPECT_ACCEPT: u8 = 1;
+/// The payload may be accepted or rejected, but must never panic — and an
+/// accepted snapshot load must still be bit-exact when `clean_hash` is
+/// non-zero, and an accepted trace run must still hold its invariants.
+/// (Used for minimized panic findings, whose post-fix fate is open.)
+pub const FIXTURE_EXPECT_NO_PANIC: u8 = 2;
+
+/// A minimized repro case persisted under `rust/tests/fixtures/` —
+/// self-describing, so `tests/fuzz_regressions.rs` replays it without any
+/// out-of-band knowledge.
+#[derive(Clone, Debug)]
+pub struct Fixture {
+    /// [`FIXTURE_TARGET_SNAPSHOT`] or [`FIXTURE_TARGET_TRACE`].
+    pub target: u8,
+    /// [`FIXTURE_EXPECT_REJECT`] or [`FIXTURE_EXPECT_ACCEPT`].
+    pub expect: u8,
+    /// For accept-expectation snapshot fixtures: the [`corpus::entries_hash`]
+    /// the load must reproduce. 0 when unused.
+    pub clean_hash: u64,
+    /// The attacked bytes (container file or `CBQT` trace).
+    pub payload: Vec<u8>,
+}
+
+/// Serialize a fixture to its `CBQF` file.
+pub fn write_fixture(path: &Path, fx: &Fixture) -> Result<()> {
+    let mut out = Vec::with_capacity(fx.payload.len() + 32);
+    out.extend_from_slice(FIXTURE_MAGIC);
+    out.extend_from_slice(&FIXTURE_VERSION.to_le_bytes());
+    out.push(fx.target);
+    out.push(fx.expect);
+    out.extend_from_slice(&fx.clean_hash.to_le_bytes());
+    out.extend_from_slice(&(fx.payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fx.payload);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    std::fs::write(path, out).with_context(|| format!("writing fixture {path:?}"))
+}
+
+/// Parse a `CBQF` file.
+pub fn read_fixture(path: &Path) -> Result<Fixture> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading fixture {path:?}"))?;
+    ensure!(bytes.len() >= 26, "fixture {path:?} too short ({} bytes)", bytes.len());
+    ensure!(&bytes[..4] == FIXTURE_MAGIC, "fixture {path:?} has bad magic");
+    let ver = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    ensure!(ver == FIXTURE_VERSION, "fixture {path:?} has unsupported version {ver}");
+    let target = bytes[8];
+    let expect = bytes[9];
+    ensure!(
+        target <= FIXTURE_TARGET_TRACE && expect <= FIXTURE_EXPECT_NO_PANIC,
+        "fixture {path:?} has out-of-range target/expect tags"
+    );
+    let clean_hash = u64::from_le_bytes(bytes[10..18].try_into().unwrap());
+    let plen = u64::from_le_bytes(bytes[18..26].try_into().unwrap()) as usize;
+    ensure!(26 + plen == bytes.len(), "fixture {path:?} payload length mismatch");
+    Ok(Fixture { target, expect, clean_hash, payload: bytes[26..].to_vec() })
+}
+
+/// Replay one fixture against today's parsers, returning `Err` when its
+/// expectation no longer holds — the regression-suite entry point.
+pub fn replay_fixture(path: &Path) -> Result<()> {
+    let fx = read_fixture(path)?;
+    let scratch = std::env::temp_dir()
+        .join(format!("cbq_fuzz_replay_{}_{:x}", std::process::id(), fnv_of(&fx.payload)));
+    let res = with_quiet_panics(|| match fx.target {
+        FIXTURE_TARGET_SNAPSHOT => {
+            snapshot_target::replay_bytes(&fx.payload, fx.expect, fx.clean_hash, &scratch)
+        }
+        _ => trace_target::replay_bytes(&fx.payload, fx.expect),
+    });
+    std::fs::remove_file(&scratch).ok();
+    res.with_context(|| format!("fixture {path:?}"))
+}
+
+fn fnv_of(bytes: &[u8]) -> u64 {
+    let mut h = Fnv64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_codec_round_trips() {
+        let fx = Fixture {
+            target: FIXTURE_TARGET_TRACE,
+            expect: FIXTURE_EXPECT_REJECT,
+            clean_hash: 0xDEAD_BEEF_u64,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        let p = std::env::temp_dir().join(format!("cbq_fx_{}.cbqf", std::process::id()));
+        write_fixture(&p, &fx).unwrap();
+        let back = read_fixture(&p).unwrap();
+        assert_eq!(back.target, fx.target);
+        assert_eq!(back.expect, fx.expect);
+        assert_eq!(back.clean_hash, fx.clean_hash);
+        assert_eq!(back.payload, fx.payload);
+        // corrupting the framing is a clean error
+        let mut raw = std::fs::read(&p).unwrap();
+        raw.truncate(10);
+        std::fs::write(&p, &raw).unwrap();
+        assert!(read_fixture(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn catch_converts_panics_to_errors() {
+        assert_eq!(with_quiet_panics(|| catch(|| 41 + 1)), Ok(42));
+        let e = with_quiet_panics(|| catch(|| panic!("boom {}", 7))).unwrap_err();
+        assert!(e.contains("boom 7"), "{e}");
+    }
+
+    #[test]
+    fn unknown_target_is_a_clean_error() {
+        let e = run_target("nope", &FuzzOpts::new(1, 1)).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown fuzz target"));
+    }
+}

@@ -1,0 +1,407 @@
+//! Structure-aware mutations over CBQS container bytes.
+//!
+//! The fuzzer does not throw random bytes at the parser — it starts from a
+//! *valid* container emitted by the real `snapshot::format` writers and
+//! applies mutations that are aware of the v1/v2 framing: truncations,
+//! trailing garbage, bit flips, version/magic corruption, and — the
+//! interesting family — **checksum-consistent field corruption**: a record's
+//! offset, length, dims, bits or name length is overwritten (including
+//! `u64`-overflow values that make `offset + len` wrap) and the covering
+//! CRC is then *recomputed*, so the corruption survives the checksum gate
+//! and the parser's own bounds checks are what must catch it.
+//!
+//! Every mutation reports whether it fixed up the covering CRC
+//! ([`Mutation::crc_fixed`]): a CRC-consistent mutation produces a file the
+//! format genuinely cannot distinguish from an intentionally different one,
+//! so the oracle only demands "no panic, no over-read" there — whereas a
+//! CRC-breaking mutation that still loads with altered content is a
+//! **silent-corruption** finding.
+
+use super::rng::FuzzRng;
+
+/// Byte span of the v1 frame prefix: magic + version + payload_len.
+const V1_HEADER: usize = 12;
+/// Byte span of the v2 frame prefix: magic + version + meta_len (u64).
+const V2_PREFIX: usize = 16;
+
+/// One applied mutation: a human-readable description (for findings and
+/// fixture names) plus whether the covering checksum was recomputed.
+#[derive(Clone, Debug)]
+pub struct Mutation {
+    /// What was done, e.g. `"v2 record 3 offset := 0xffffffffffffffc0"`.
+    pub desc: String,
+    /// Did the mutation fix up the covering CRC so the corruption passes
+    /// the checksum gate? (Changes the oracle: see module docs.)
+    pub crc_fixed: bool,
+}
+
+/// Container version sniffed from the 8-byte prefix (`None` when the file
+/// is too short or not CBQS-framed).
+pub fn sniff_version(bytes: &[u8]) -> Option<u32> {
+    if bytes.len() < 8 || &bytes[..4] != b"CBQS" {
+        return None;
+    }
+    Some(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]))
+}
+
+// ---------------------------------------------------------------------------
+// CRC fix-up helpers
+// ---------------------------------------------------------------------------
+
+/// Recompute the v2 metadata CRC (covers bytes `0..16+meta_len`) after a
+/// meta-region mutation. No-op when the frame is too short to hold it.
+pub fn fix_meta_crc_v2(bytes: &mut [u8]) {
+    if bytes.len() < V2_PREFIX + 4 {
+        return;
+    }
+    let meta_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let Some(crc_at) = V2_PREFIX.checked_add(meta_len) else { return };
+    if crc_at + 4 > bytes.len() {
+        return;
+    }
+    let crc = crate::snapshot::format::crc32(&bytes[..crc_at]);
+    bytes[crc_at..crc_at + 4].copy_from_slice(&crc.to_le_bytes());
+}
+
+/// Recompute the v1 trailing CRC (covers the whole payload) after a
+/// payload mutation. No-op when the frame is not exactly
+/// `12 + payload_len + 4` bytes.
+pub fn fix_payload_crc_v1(bytes: &mut [u8]) {
+    if bytes.len() < V1_HEADER + 4 {
+        return;
+    }
+    let plen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    if V1_HEADER + plen + 4 != bytes.len() {
+        return;
+    }
+    let crc = crate::snapshot::format::crc32(&bytes[V1_HEADER..V1_HEADER + plen]);
+    let at = V1_HEADER + plen;
+    bytes[at..at + 4].copy_from_slice(&crc.to_le_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// v2 meta layout (absolute field offsets, parsed defensively)
+// ---------------------------------------------------------------------------
+
+/// Absolute byte offsets of one v2 record's mutable fields.
+#[derive(Clone, Debug)]
+pub struct RecordFields {
+    /// Offset of the `name_len` u32.
+    pub name_len_at: usize,
+    /// Offset of the `dtype` byte.
+    pub dtype_at: usize,
+    /// Offset of the `bits` byte.
+    pub bits_at: usize,
+    /// Offset of the `ndim` byte.
+    pub ndim_at: usize,
+    /// Offsets of each `dims[i]` u32.
+    pub dims_at: Vec<usize>,
+    /// Offset of the `group` i32.
+    pub group_at: usize,
+    /// Offset of the payload `offset` u64.
+    pub offset_at: usize,
+    /// Offset of the payload `len` u64.
+    pub len_at: usize,
+    /// Offset of the payload `crc` u32.
+    pub crc_at: usize,
+}
+
+/// Field map of a v2 meta block. Parsed with the same framing rules as the
+/// reader but *defensively* — any inconsistency yields `None` and the
+/// caller falls back to blind byte mutations.
+pub fn parse_v2_layout(bytes: &[u8]) -> Option<Vec<RecordFields>> {
+    if sniff_version(bytes) != Some(2) || bytes.len() < V2_PREFIX {
+        return None;
+    }
+    let meta_len = u64::from_le_bytes(bytes[8..16].try_into().ok()?) as usize;
+    let meta_end = V2_PREFIX.checked_add(meta_len)?;
+    if meta_end + 4 > bytes.len() {
+        return None;
+    }
+    let mut pos = V2_PREFIX;
+    let rd_u32 = |p: usize| -> Option<u32> {
+        bytes.get(p..p + 4).map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+    };
+    let header_len = rd_u32(pos)? as usize;
+    pos = pos.checked_add(4)?.checked_add(header_len)?;
+    let n_records = rd_u32(pos)? as usize;
+    pos += 4;
+    if n_records > (1 << 20) {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n_records);
+    for _ in 0..n_records {
+        let name_len_at = pos;
+        let name_len = rd_u32(pos)? as usize;
+        pos = pos.checked_add(4)?.checked_add(name_len)?;
+        let dtype_at = pos;
+        let bits_at = pos + 1;
+        let ndim_at = pos + 2;
+        let ndim = *bytes.get(ndim_at)? as usize;
+        pos += 3;
+        let dims_at: Vec<usize> = (0..ndim).map(|i| pos + 4 * i).collect();
+        pos = pos.checked_add(4 * ndim)?;
+        let group_at = pos;
+        let offset_at = pos + 4;
+        let len_at = pos + 12;
+        let crc_at = pos + 20;
+        pos = pos.checked_add(24)?;
+        if pos > meta_end {
+            return None;
+        }
+        out.push(RecordFields {
+            name_len_at,
+            dtype_at,
+            bits_at,
+            ndim_at,
+            dims_at,
+            group_at,
+            offset_at,
+            len_at,
+            crc_at,
+        });
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// mutation engine
+// ---------------------------------------------------------------------------
+
+fn write_u32(bytes: &mut [u8], at: usize, v: u32) {
+    bytes[at..at + 4].copy_from_slice(&v.to_le_bytes());
+}
+
+fn write_u64(bytes: &mut [u8], at: usize, v: u64) {
+    bytes[at..at + 8].copy_from_slice(&v.to_le_bytes());
+}
+
+/// Apply one structure-aware mutation to `bytes` in place and describe it.
+/// The choice of mutation, its position and its value all come from `rng`,
+/// so a seed replays the identical mutation schedule.
+pub fn mutate_container(bytes: &mut Vec<u8>, rng: &mut FuzzRng) -> Mutation {
+    let version = sniff_version(bytes);
+    // targeted v2 field corruption gets the biggest share of the budget —
+    // it is the family only a structure-aware fuzzer can produce
+    let strategy = if version == Some(2) { rng.below(10) } else { rng.below(7) };
+    match strategy {
+        0 => {
+            // truncation: anywhere, with a bias toward the framing edges
+            let cut = if rng.chance(1, 3) {
+                rng.range(0, 20.min(bytes.len()))
+            } else {
+                rng.range(0, bytes.len().saturating_sub(1))
+            };
+            bytes.truncate(cut);
+            Mutation { desc: format!("truncate to {cut} bytes"), crc_fixed: false }
+        }
+        1 => {
+            let extra = rng.range(1, 64);
+            for _ in 0..extra {
+                let b = rng.byte();
+                bytes.push(b);
+            }
+            Mutation { desc: format!("append {extra} trailing bytes"), crc_fixed: false }
+        }
+        2 => {
+            if bytes.is_empty() {
+                return Mutation { desc: "flip on empty file (noop)".into(), crc_fixed: false };
+            }
+            let at = rng.index(bytes.len());
+            let mask = rng.flip_mask();
+            bytes[at] ^= mask;
+            Mutation { desc: format!("flip bit {mask:#04x} at {at}"), crc_fixed: false }
+        }
+        3 => {
+            if bytes.is_empty() {
+                return Mutation { desc: "zero on empty file (noop)".into(), crc_fixed: false };
+            }
+            let at = rng.index(bytes.len());
+            let n = rng.range(1, 16).min(bytes.len() - at);
+            bytes[at..at + n].fill(0);
+            Mutation { desc: format!("zero {n} bytes at {at}"), crc_fixed: false }
+        }
+        4 => {
+            if bytes.len() >= 8 {
+                let v = [0u32, 3, 0xEE, u32::MAX][rng.index(4)];
+                write_u32(bytes, 4, v);
+                Mutation { desc: format!("version := {v}"), crc_fixed: false }
+            } else {
+                Mutation { desc: "version on short file (noop)".into(), crc_fixed: false }
+            }
+        }
+        5 => {
+            if bytes.len() >= 4 {
+                let at = rng.index(4);
+                bytes[at] = bytes[at].wrapping_add(1 + rng.byte() % 254);
+                Mutation { desc: format!("magic byte {at} corrupted"), crc_fixed: false }
+            } else {
+                Mutation { desc: "magic on short file (noop)".into(), crc_fixed: false }
+            }
+        }
+        6 => {
+            // framing-length corruption: v2 meta_len / v1 payload_len
+            if version == Some(2) && bytes.len() >= V2_PREFIX {
+                let v = [0u64, 1, u64::MAX, u64::MAX - 63, bytes.len() as u64 * 2]
+                    [rng.index(5)];
+                write_u64(bytes, 8, v);
+                Mutation { desc: format!("meta_len := {v:#x}"), crc_fixed: false }
+            } else if bytes.len() >= V1_HEADER {
+                let v = [0u32, 1, u32::MAX, bytes.len() as u32 * 2][rng.index(4)];
+                write_u32(bytes, 8, v);
+                Mutation { desc: format!("payload_len := {v:#x}"), crc_fixed: false }
+            } else {
+                Mutation { desc: "framing on short file (noop)".into(), crc_fixed: false }
+            }
+        }
+        // v2-only targeted families below (strategy 7..=9)
+        _ => {
+            let Some(records) = parse_v2_layout(bytes) else {
+                // layout no longer parses (previous mutation broke it):
+                // degrade to a raw flip
+                if bytes.is_empty() {
+                    return Mutation {
+                        desc: "layout flip on empty file (noop)".into(),
+                        crc_fixed: false,
+                    };
+                }
+                let at = rng.index(bytes.len());
+                bytes[at] ^= rng.flip_mask();
+                return Mutation { desc: format!("raw flip at {at}"), crc_fixed: false };
+            };
+            if records.is_empty() {
+                // zero-record container: splash the header JSON instead
+                let at = rng.range(V2_PREFIX, (bytes.len() - 5).max(V2_PREFIX));
+                bytes[at] ^= rng.flip_mask();
+                fix_meta_crc_v2(bytes);
+                return Mutation {
+                    desc: format!("meta splash at {at} (crc fixed)"),
+                    crc_fixed: true,
+                };
+            }
+            let r = &records[rng.index(records.len())];
+            let (at, field) = match rng.below(8) {
+                0 => {
+                    // unaligned / out-of-file / overlapping payload offset
+                    let v = [
+                        1u64,
+                        bytes.len() as u64,                   // exactly at EOF
+                        bytes.len() as u64 * 4,               // past EOF
+                        u64::MAX - 7,                         // offset+len wraps
+                        (bytes.len() as u64 / 2) | 1,         // unaligned mid-file
+                    ][rng.index(5)];
+                    write_u64(bytes, r.offset_at, v);
+                    (r.offset_at, format!("offset := {v:#x}"))
+                }
+                1 => {
+                    let v = [u64::MAX, u64::MAX / 2, bytes.len() as u64 * 8, 0][rng.index(4)];
+                    write_u64(bytes, r.len_at, v);
+                    (r.len_at, format!("len := {v:#x}"))
+                }
+                2 => {
+                    let v = [0u8, 9, 64, 255][rng.index(4)];
+                    bytes[r.bits_at] = v;
+                    (r.bits_at, format!("bits := {v}"))
+                }
+                3 => {
+                    let v = [0u8, 9, 200, 255][rng.index(4)];
+                    bytes[r.ndim_at] = v;
+                    (r.ndim_at, format!("ndim := {v}"))
+                }
+                4 if !r.dims_at.is_empty() => {
+                    let d = r.dims_at[rng.index(r.dims_at.len())];
+                    let v = [0u32, u32::MAX, 0x8000_0000][rng.index(3)];
+                    write_u32(bytes, d, v);
+                    (d, format!("dim := {v:#x}"))
+                }
+                5 => {
+                    let v = [u32::MAX, 1 << 21, 0x7FFF_FFFF][rng.index(3)];
+                    write_u32(bytes, r.group_at, v);
+                    (r.group_at, format!("group := {v:#x}"))
+                }
+                6 => {
+                    let v = [u32::MAX, 1 << 16, 4097][rng.index(3)];
+                    write_u32(bytes, r.name_len_at, v);
+                    (r.name_len_at, format!("name_len := {v}"))
+                }
+                _ => {
+                    let v = [3u8, 255][rng.index(2)];
+                    bytes[r.dtype_at] = v;
+                    (r.dtype_at, format!("dtype := {v}"))
+                }
+            };
+            let crc_fixed = rng.chance(3, 4); // mostly fix the CRC (the hard case)
+            if crc_fixed {
+                fix_meta_crc_v2(bytes);
+            }
+            Mutation {
+                desc: format!(
+                    "v2 field at {at}: {field}{}",
+                    if crc_fixed { " (crc fixed)" } else { "" }
+                ),
+                crc_fixed,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+    use crate::snapshot::format::{self, crc32};
+    use crate::tensor::io::Entry;
+    use crate::tensor::Tensor;
+
+    fn v2_bytes(name: &str) -> Vec<u8> {
+        let p = std::env::temp_dir().join(format!("cbq_mut_{}_{name}", std::process::id()));
+        let entries = vec![
+            ("a".to_string(), Entry::F32(Tensor::new(vec![2, 3], vec![1.0; 6])), -1),
+            ("b.q".to_string(), Entry::F32(Tensor::new(vec![4], vec![0.5; 4])), 0),
+        ];
+        format::write_container(&p, &Value::obj(vec![("format", Value::str("CBQS"))]), &entries)
+            .unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        raw
+    }
+
+    #[test]
+    fn layout_parse_finds_every_record() {
+        let raw = v2_bytes("layout");
+        let recs = parse_v2_layout(&raw).expect("layout should parse");
+        assert_eq!(recs.len(), 2);
+        // the offset field of record 0 holds a 64-aligned in-file offset
+        let off = u64::from_le_bytes(raw[recs[0].offset_at..recs[0].offset_at + 8].try_into().unwrap());
+        assert_eq!(off % 64, 0);
+        assert!(off < raw.len() as u64);
+        // the bits byte of an f32 record holds its storage width
+        assert_eq!(raw[recs[0].bits_at], 32);
+    }
+
+    #[test]
+    fn meta_crc_fixup_restores_validity() {
+        let mut raw = v2_bytes("crcfix");
+        let meta_len = u64::from_le_bytes(raw[8..16].try_into().unwrap()) as usize;
+        let crc_at = 16 + meta_len;
+        // break a meta byte, then fix: stored CRC must equal a fresh CRC
+        raw[18] ^= 0x10;
+        fix_meta_crc_v2(&mut raw);
+        let stored = u32::from_le_bytes(raw[crc_at..crc_at + 4].try_into().unwrap());
+        assert_eq!(stored, crc32(&raw[..crc_at]));
+    }
+
+    #[test]
+    fn mutations_are_seed_deterministic() {
+        let base = v2_bytes("det");
+        let run = |seed: u64| {
+            let mut b = base.clone();
+            let mut rng = FuzzRng::new(seed);
+            let descs: Vec<String> =
+                (0..32).map(|_| mutate_container(&mut b, &mut rng).desc).collect();
+            (b, descs)
+        };
+        assert_eq!(run(42), run(42), "same seed must replay the same mutations");
+        assert_ne!(run(42).0, run(43).0, "different seeds should diverge");
+    }
+}

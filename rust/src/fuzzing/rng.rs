@@ -1,0 +1,106 @@
+//! Deterministic randomness for the fuzzer.
+//!
+//! Wraps the scheduler's [`Lcg`] (the PR 4 trace generator's PRNG) with the
+//! small vocabulary of draws a structure-aware fuzzer needs: bounded
+//! integers, weighted coin flips, byte fills and index picks. No wall
+//! clock, no OS entropy — the whole fuzz run is a pure function of the
+//! seed, which is what makes `cbq fuzz --seed S` replay bit-for-bit.
+
+use crate::serve::scheduler::Lcg;
+
+/// Seeded fuzzing RNG: every draw is derived from the [`Lcg`] stream, so
+/// equal seeds produce equal mutation schedules on every platform.
+#[derive(Clone, Debug)]
+pub struct FuzzRng(Lcg);
+
+impl FuzzRng {
+    /// Seeded constructor; the seed is premixed by the underlying [`Lcg`].
+    pub fn new(seed: u64) -> Self {
+        Self(Lcg::new(seed))
+    }
+
+    /// Next raw 64-bit draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.0.next_u64()
+    }
+
+    /// Uniform draw in `[0, n)` (`n == 0` returns 0).
+    pub fn below(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        self.0.below(n)
+    }
+
+    /// Uniform `usize` in `[lo, hi]` (inclusive; `hi < lo` returns `lo`).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        if hi <= lo {
+            return lo;
+        }
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// True with probability `num`/`den`.
+    pub fn chance(&mut self, num: u64, den: u64) -> bool {
+        self.below(den.max(1)) < num
+    }
+
+    /// One random byte.
+    pub fn byte(&mut self) -> u8 {
+        self.below(256) as u8
+    }
+
+    /// A random non-zero byte mask (for bit flips that must change the
+    /// target byte).
+    pub fn flip_mask(&mut self) -> u8 {
+        1u8 << self.below(8)
+    }
+
+    /// Uniform index into a non-empty slice length (`len == 0` returns 0;
+    /// callers must guard emptiness themselves).
+    pub fn index(&mut self, len: usize) -> usize {
+        self.below(len as u64) as usize
+    }
+
+    /// Uniform f32 in `[lo, hi)` — enough resolution for scale/weight
+    /// corpora, derived from the high bits like the proptest generators.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        lo + (hi - lo) * u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_seeds_replay_equal_streams() {
+        let mut a = FuzzRng::new(7);
+        let mut b = FuzzRng::new(7);
+        for _ in 0..256 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = FuzzRng::new(8);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| c.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn draws_respect_bounds() {
+        let mut r = FuzzRng::new(11);
+        for _ in 0..512 {
+            let v = r.range(3, 9);
+            assert!((3..=9).contains(&v));
+            assert!(r.below(5) < 5);
+            let f = r.f32_in(-1.5, 2.5);
+            assert!((-1.5..2.5).contains(&f));
+            assert!(r.flip_mask().count_ones() == 1);
+        }
+        assert_eq!(r.range(4, 4), 4);
+        assert_eq!(r.range(9, 3), 9);
+        assert_eq!(r.below(0), 0);
+    }
+}

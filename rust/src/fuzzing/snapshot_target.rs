@@ -1,0 +1,365 @@
+//! Fuzz target: the CBQS v1/v2 container parser.
+//!
+//! Each iteration generates a valid container through the real writers,
+//! applies 1–3 structure-aware mutations ([`super::mutate`]) and feeds the
+//! result to `open_container` in **both** open modes, materializing every
+//! record. The oracle:
+//!
+//! * a panic anywhere is a finding;
+//! * a load that succeeds must be bit-exact against the clean container's
+//!   [`corpus::entries_hash`] — *unless* a mutation recomputed the
+//!   covering CRC, in which case the format genuinely cannot distinguish
+//!   the file from an intentionally different one and only panics count;
+//! * when both modes accept, they must agree with each other bitwise
+//!   (eager/lazy differential).
+//!
+//! Findings are minimized by end-truncation (while the failure class
+//! reproduces) and persisted as `CBQF` fixtures.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use super::corpus::{self, Fnv64};
+use super::mutate;
+use super::rng::FuzzRng;
+use super::{
+    catch, with_quiet_panics, write_fixture, Finding, Fixture, FuzzOpts, FuzzReport,
+    FIXTURE_EXPECT_ACCEPT, FIXTURE_EXPECT_NO_PANIC, FIXTURE_EXPECT_REJECT,
+    FIXTURE_TARGET_SNAPSHOT,
+};
+use crate::snapshot::format::{self, OpenMode};
+
+/// How one mutated container fared against the oracle.
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Verdict {
+    /// Loaded bit-exactly in every mode that accepted it.
+    LoadExact,
+    /// Rejected with a clean error in both modes.
+    CleanError,
+    /// Accepted with different content, but a CRC-fixed mutation makes
+    /// that indistinguishable from a legitimately different file.
+    AllowedDivergence,
+    /// Parser panicked (message withheld from the digest — it may embed
+    /// scratch paths).
+    Panic(String),
+    /// Accepted a CRC-covered corruption silently (hash mismatch with no
+    /// CRC fix-up), or the two open modes disagreed on content.
+    SilentCorruption(String),
+}
+
+impl Verdict {
+    /// Stable code folded into the run digest (never the message).
+    fn code(&self) -> u64 {
+        match self {
+            Verdict::LoadExact => 1,
+            Verdict::CleanError => 2,
+            Verdict::AllowedDivergence => 3,
+            Verdict::Panic(_) => 4,
+            Verdict::SilentCorruption(_) => 5,
+        }
+    }
+
+    fn is_finding(&self) -> bool {
+        matches!(self, Verdict::Panic(_) | Verdict::SilentCorruption(_))
+    }
+}
+
+/// Open `path` in `mode` and materialize every record, returning the
+/// content hash. `Ok(Err)` is a clean parser rejection; the outer `Err`
+/// is a captured panic message.
+fn load_hash(path: &Path, mode: OpenMode) -> std::result::Result<Result<u64>, String> {
+    catch(|| {
+        let c = format::open_container(path, mode)?;
+        let mut entries = std::collections::BTreeMap::new();
+        for rec in &c.records {
+            entries.insert(rec.name.clone(), c.materialize(rec)?);
+        }
+        Ok(corpus::entries_hash(&entries))
+    })
+}
+
+/// Judge one mutated byte string against the oracle. `crc_fixed` reports
+/// whether any applied mutation recomputed the covering CRC.
+fn judge(bytes: &[u8], clean_hash: u64, crc_fixed: bool, case_path: &Path) -> Verdict {
+    if std::fs::write(case_path, bytes).is_err() {
+        return Verdict::CleanError; // scratch unwritable: skip, don't crash
+    }
+    let mut hashes: Vec<Option<u64>> = Vec::with_capacity(2);
+    for mode in [OpenMode::Eager, OpenMode::Lazy] {
+        match load_hash(case_path, mode) {
+            Err(msg) => return Verdict::Panic(msg),
+            Ok(Err(_)) => hashes.push(None),
+            Ok(Ok(h)) => hashes.push(Some(h)),
+        }
+    }
+    let accepted: Vec<u64> = hashes.iter().flatten().copied().collect();
+    if accepted.is_empty() {
+        return Verdict::CleanError;
+    }
+    if accepted.len() == 2 && accepted[0] != accepted[1] {
+        return Verdict::SilentCorruption(format!(
+            "eager and lazy loads disagree: {:#x} vs {:#x}",
+            accepted[0], accepted[1]
+        ));
+    }
+    if accepted.iter().all(|&h| h == clean_hash) {
+        return Verdict::LoadExact;
+    }
+    if crc_fixed {
+        Verdict::AllowedDivergence
+    } else {
+        Verdict::SilentCorruption(format!(
+            "load accepted CRC-covered corruption: hash {:#x} != clean {:#x}",
+            accepted[0], clean_hash
+        ))
+    }
+}
+
+/// Shrink a failing case by end-truncation: repeatedly drop the largest
+/// tail suffix that keeps the *same* failure class reproducing.
+fn minimize(bytes: &[u8], clean_hash: u64, crc_fixed: bool, scratch: &Path) -> Vec<u8> {
+    let failing = judge(bytes, clean_hash, crc_fixed, scratch);
+    debug_assert!(failing.is_finding());
+    let same_class = |v: &Verdict| v.code() == failing.code();
+    let mut best = bytes.to_vec();
+    let mut chunk = best.len() / 2;
+    while chunk > 0 {
+        while best.len() > chunk {
+            let candidate = &best[..best.len() - chunk];
+            if same_class(&judge(candidate, clean_hash, crc_fixed, scratch)) {
+                best = candidate.to_vec();
+            } else {
+                break;
+            }
+        }
+        chunk /= 2;
+    }
+    best
+}
+
+/// Replay a fixture payload (regression suite): `expect` reject means both
+/// open modes must return a clean error without panicking; `expect` accept
+/// means both must load bit-exactly to `clean_hash`; `expect` no-panic
+/// means any clean outcome is fine — but an accepted load must still be
+/// bit-exact when `clean_hash` is non-zero.
+pub fn replay_bytes(payload: &[u8], expect: u8, clean_hash: u64, scratch: &Path) -> Result<()> {
+    std::fs::write(scratch, payload)?;
+    for mode in [OpenMode::Eager, OpenMode::Lazy] {
+        match load_hash(scratch, mode) {
+            Err(msg) => bail!("parser panicked under {mode:?}: {msg}"),
+            Ok(Err(e)) => {
+                if expect == FIXTURE_EXPECT_ACCEPT {
+                    bail!("expected clean load under {mode:?}, got error: {e:#}");
+                }
+            }
+            Ok(Ok(h)) => {
+                if expect == FIXTURE_EXPECT_REJECT {
+                    bail!("expected rejection under {mode:?}, but payload loaded (hash {h:#x})");
+                }
+                let must_match = expect == FIXTURE_EXPECT_ACCEPT
+                    || (expect == FIXTURE_EXPECT_NO_PANIC && clean_hash != 0);
+                if must_match && h != clean_hash {
+                    bail!("load under {mode:?} not bit-exact: {h:#x} != {clean_hash:#x}");
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the snapshot fuzz target.
+pub fn run(opts: &FuzzOpts) -> Result<FuzzReport> {
+    let mut rng = FuzzRng::new(opts.seed);
+    let mut digest = Fnv64::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    let (mut cases_ok, mut cases_rejected) = (0u64, 0u64);
+    let gen_path = opts.scratch.join("snapshot_gen.cbqs");
+    let case_path = opts.scratch.join("snapshot_case.cbqs");
+
+    with_quiet_panics(|| -> Result<()> {
+        for iter in 0..opts.iters {
+            let case = corpus::gen_container(&mut rng, &gen_path)?;
+            digest.update_u64(case.clean_hash);
+
+            let mut bytes = case.bytes.clone();
+            let n_mut = rng.range(1, 3);
+            let mut crc_fixed = false;
+            let mut trail: Vec<String> = Vec::with_capacity(n_mut);
+            for _ in 0..n_mut {
+                let m = mutate::mutate_container(&mut bytes, &mut rng);
+                crc_fixed |= m.crc_fixed;
+                trail.push(m.desc);
+            }
+            digest.update_u64(format::crc32(&bytes) as u64);
+
+            let verdict = judge(&bytes, case.clean_hash, crc_fixed, &case_path);
+            digest.update_u64(verdict.code());
+            match &verdict {
+                Verdict::LoadExact | Verdict::AllowedDivergence => cases_ok += 1,
+                Verdict::CleanError => cases_rejected += 1,
+                Verdict::Panic(msg) | Verdict::SilentCorruption(msg) => {
+                    let minimized = minimize(&bytes, case.clean_hash, crc_fixed, &case_path);
+                    // a silent-corruption repro must *reject* once fixed; a
+                    // panic repro's post-fix fate is open (no-panic, and
+                    // bit-exact if it loads — unless a CRC fix-up makes the
+                    // content legitimately different)
+                    let (expect, hash) = if matches!(verdict, Verdict::SilentCorruption(_)) {
+                        (FIXTURE_EXPECT_REJECT, case.clean_hash)
+                    } else {
+                        (FIXTURE_EXPECT_NO_PANIC, if crc_fixed { 0 } else { case.clean_hash })
+                    };
+                    let fixture = opts.fixtures.as_ref().map(|dir| -> Result<PathBuf> {
+                        let p = dir.join(format!(
+                            "snapshot_seed{}_iter{iter}.cbqf",
+                            opts.seed
+                        ));
+                        write_fixture(
+                            &p,
+                            &Fixture {
+                                target: FIXTURE_TARGET_SNAPSHOT,
+                                expect,
+                                clean_hash: hash,
+                                payload: minimized.clone(),
+                            },
+                        )?;
+                        Ok(p)
+                    });
+                    let fixture = match fixture {
+                        Some(Ok(p)) => Some(p),
+                        _ => None,
+                    };
+                    findings.push(Finding {
+                        iter,
+                        summary: format!(
+                            "{} — v{} container, mutations: [{}] ({} bytes minimized to {})",
+                            msg,
+                            case.version,
+                            trail.join("; "),
+                            bytes.len(),
+                            minimized.len()
+                        ),
+                        fixture,
+                    });
+                }
+            }
+        }
+        Ok(())
+    })?;
+    std::fs::remove_file(&case_path).ok();
+
+    Ok(FuzzReport {
+        target: "snapshot".to_string(),
+        seed: opts.seed,
+        iters: opts.iters,
+        digest: digest.finish(),
+        cases_ok,
+        cases_rejected,
+        findings,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cbq_snapfuzz_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn short_run_is_clean_and_reproducible() {
+        let dir = scratch("repro");
+        let opts = FuzzOpts { seed: 7, iters: 40, scratch: dir.clone(), fixtures: None };
+        let a = run(&opts).unwrap();
+        let b = run(&opts).unwrap();
+        assert_eq!(a.digest, b.digest, "equal seeds must replay to equal digests");
+        assert_eq!(a.cases_ok, b.cases_ok);
+        assert_eq!(a.cases_rejected, b.cases_rejected);
+        assert!(
+            a.findings.is_empty(),
+            "snapshot parser findings on a healthy tree: {:#?}",
+            a.findings
+        );
+        assert_eq!(a.cases_ok + a.cases_rejected, 40);
+        // different seed, different walk
+        let c = run(&FuzzOpts { seed: 8, iters: 40, scratch: dir.clone(), fixtures: None })
+            .unwrap();
+        assert_ne!(a.digest, c.digest);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The injected-bug drill from the acceptance criteria, inverted: the
+    /// oracle itself must catch a "parser" that silently accepts corrupted
+    /// content. We simulate the buggy parser by handing `judge` a *wrong*
+    /// clean-hash for a pristine file — equivalent to the parser returning
+    /// wrong content — and for real corruption we assert the true parser
+    /// already rejects what the oracle would otherwise flag.
+    #[test]
+    fn oracle_flags_silent_corruption() {
+        let dir = scratch("oracle");
+        let case_path = dir.join("case.cbqs");
+        let mut rng = FuzzRng::new(3);
+        let case = corpus::gen_container(&mut rng, &dir.join("gen.cbqs")).unwrap();
+
+        // pristine bytes + correct hash: exact
+        let v = judge(&case.bytes, case.clean_hash, false, &case_path);
+        assert_eq!(v, Verdict::LoadExact);
+
+        // pristine bytes + wrong expected hash (a stand-in for a decoder
+        // that returns corrupted tensors): the oracle must flag it
+        let v = judge(&case.bytes, case.clean_hash ^ 1, false, &case_path);
+        assert!(
+            matches!(v, Verdict::SilentCorruption(_)),
+            "oracle must flag a non-bit-exact accepted load, got {v:?}"
+        );
+
+        // flipping one checksum-covered byte without fixing the CRC must
+        // already be rejected by the real parser (clean error, no panic)
+        let mut corrupt = case.bytes.clone();
+        let mid = corrupt.len() / 2;
+        corrupt[mid] ^= 0x40;
+        let v = with_quiet_panics(|| judge(&corrupt, case.clean_hash, false, &case_path));
+        assert!(
+            matches!(v, Verdict::CleanError | Verdict::LoadExact),
+            "CRC-covered flip must be rejected cleanly (or be a padding no-op), got {v:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn minimization_shrinks_while_preserving_failure_class() {
+        let dir = scratch("minim");
+        let case_path = dir.join("case.cbqs");
+        let mut rng = FuzzRng::new(5);
+        let case = corpus::gen_container(&mut rng, &dir.join("gen.cbqs")).unwrap();
+        // a wrong clean-hash makes the pristine file "fail" — minimization
+        // must shrink it while the SilentCorruption class keeps reproducing
+        let wrong = case.clean_hash ^ 0xFF;
+        let v = judge(&case.bytes, wrong, false, &case_path);
+        assert!(v.is_finding());
+        let min = minimize(&case.bytes, wrong, false, &case_path);
+        assert!(min.len() <= case.bytes.len());
+        let v2 = judge(&min, wrong, false, &case_path);
+        assert_eq!(v2.code(), v.code(), "minimized case must reproduce the same class");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replay_bytes_enforces_expectations() {
+        let dir = scratch("replay");
+        let mut rng = FuzzRng::new(9);
+        let case = corpus::gen_container(&mut rng, &dir.join("gen.cbqs")).unwrap();
+        let p = dir.join("replay.cbqs");
+        // accept-expectation on the pristine container passes
+        replay_bytes(&case.bytes, FIXTURE_EXPECT_ACCEPT, case.clean_hash, &p).unwrap();
+        // reject-expectation on the pristine container fails (it loads)
+        assert!(replay_bytes(&case.bytes, FIXTURE_EXPECT_REJECT, case.clean_hash, &p).is_err());
+        // truncated-to-8-bytes must satisfy a reject expectation
+        replay_bytes(&case.bytes[..8.min(case.bytes.len())], FIXTURE_EXPECT_REJECT, 0, &p)
+            .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

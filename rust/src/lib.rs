@@ -34,6 +34,10 @@
 //!   the engine pins windows lazily into a bounded LRU
 //!   (`--resident-windows` / `CBQ_RESIDENT_MB`) — bitwise-identical
 //!   responses at a fraction of the resident footprint.
+//! - [`fuzzing`] — seeded, structure-aware adversarial harness (`cbq
+//!   fuzz`): mutates real `CBQS` containers and serve traces, and runs
+//!   differential oracles across engines and SIMD tiers; failures persist
+//!   as minimized fixtures the regression suite replays (`docs/TESTING.md`).
 //!
 //! The layer map and end-to-end data flow are drawn out in
 //! `docs/ARCHITECTURE.md`.
@@ -85,6 +89,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod fuzzing;
 pub mod gptq;
 pub mod hessian;
 pub mod json;

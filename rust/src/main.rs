@@ -18,6 +18,9 @@
 //!   zeroshot    quantize then run the zero-shot task suite
 //!   hessian     finite-difference dependency analysis (paper Fig. 1)
 //!   info        print the artifact manifest summary
+//!   fuzz        seeded adversarial harness: CBQS-container / trace-ingestion
+//!               fuzzing + engine/SIMD differential oracles, deterministic
+//!               per seed, nonzero exit on findings
 //!
 //! Execution backend: `--backend native|pjrt|auto` (or `CBQ_BACKEND`).
 //! `native` interprets the manifest semantics on the host CPU — no HLO
@@ -151,6 +154,15 @@ COMMANDS
             sequence replays bitwise-identically for any --dispatch
   zeroshot  --model s --method cbq --w 4 --a 16 --items 32 --calib 32
   hessian   --model t --bits 8,4,2
+  fuzz      --target snapshot|trace|differential [--seed 7] [--iters 500]
+            [--fixtures DIR] [--json out.json]
+            seeded structure-aware adversarial harness (needs no
+            artifacts): mutates real CBQS containers / serve traces and
+            runs engine + SIMD-tier differential oracles. Fully
+            deterministic — equal seed/iters reprint the identical digest,
+            so CI runs every target twice and compares. Exits nonzero on
+            any finding; --fixtures persists minimized repro files that
+            tests/fuzz_regressions.rs replays forever (docs/TESTING.md)
 ";
 
 fn parse_method(args: &Args, bits: BitSpec) -> Result<QuantJob> {
@@ -1186,6 +1198,77 @@ fn cmd_snapshot_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `cbq fuzz` — one deterministic adversarial fuzz run. Exit status is
+/// nonzero when any finding survives, so CI can gate on it directly; the
+/// printed digest lets a second invocation certify bitwise replay.
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use cbq::fuzzing::{self, FuzzOpts, TARGETS};
+    let target = args.get("target").unwrap_or("snapshot");
+    if !TARGETS.contains(&target) {
+        bail!("--target must be one of {TARGETS:?}, got `{target}`");
+    }
+    let seed = args.get_u64("seed", 7)?;
+    let iters = args.get_u64("iters", 500)?;
+    let mut opts = FuzzOpts::new(seed, iters);
+    if let Some(dir) = args.get("fixtures") {
+        opts.fixtures = Some(std::path::PathBuf::from(dir));
+    }
+    let report = fuzzing::run_target(target, &opts)?;
+    println!(
+        "fuzz target={} seed={} iters={} digest={:016x} ok={} rejected={} findings={}",
+        report.target,
+        report.seed,
+        report.iters,
+        report.digest,
+        report.cases_ok,
+        report.cases_rejected,
+        report.findings.len()
+    );
+    for f in &report.findings {
+        eprintln!("FINDING iter {}: {}", f.iter, f.summary);
+        if let Some(p) = &f.fixture {
+            eprintln!("  minimized fixture: {}", p.display());
+        }
+    }
+    write_json(
+        args,
+        &Value::obj(vec![
+            ("schema", Value::str("cbq-fuzz-v1")),
+            ("target", Value::str(report.target.as_str())),
+            ("seed", Value::num(report.seed as f64)),
+            ("iters", Value::num(report.iters as f64)),
+            ("digest", Value::str(format!("{:016x}", report.digest))),
+            ("cases_ok", Value::num(report.cases_ok as f64)),
+            ("cases_rejected", Value::num(report.cases_rejected as f64)),
+            (
+                "findings",
+                Value::arr(
+                    report
+                        .findings
+                        .iter()
+                        .map(|f| {
+                            Value::obj(vec![
+                                ("iter", Value::num(f.iter as f64)),
+                                ("summary", Value::str(f.summary.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )?;
+    if !report.findings.is_empty() {
+        bail!(
+            "{} finding(s); replay with `cbq fuzz --target {} --seed {} --iters {}`",
+            report.findings.len(),
+            report.target,
+            report.seed,
+            report.iters
+        );
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let Some(cmd) = args.command() else {
@@ -1197,6 +1280,7 @@ fn main() -> Result<()> {
     match cmd {
         "synth" => return cmd_synth(&args),
         "snapshot-info" => return cmd_snapshot_info(&args),
+        "fuzz" => return cmd_fuzz(&args),
         _ => {}
     }
 

@@ -41,9 +41,11 @@ pub struct WorkRow {
 
 impl WorkRow {
     /// Build from a (seq+1)-token row; positions before `score_from` are
-    /// masked out (0 scores everything, i.e. plain perplexity).
+    /// masked out (0 scores everything, i.e. plain perplexity). An empty
+    /// token slice (adversarial / fuzzed traces) yields an empty row —
+    /// dispatch-time validation rejects zero-row work with a clean error.
     pub fn from_tokens(tokens: &[u32], score_from: usize) -> Self {
-        let seq = tokens.len() - 1;
+        let seq = tokens.len().saturating_sub(1);
         let mut mask = vec![0.0f32; seq];
         for (s, m) in mask.iter_mut().enumerate() {
             if s + 1 >= score_from {
@@ -52,7 +54,7 @@ impl WorkRow {
         }
         Self {
             inputs: tokens[..seq].iter().map(|&t| t as i32).collect(),
-            targets: tokens[1..].iter().map(|&t| t as i32).collect(),
+            targets: tokens.get(1..).unwrap_or(&[]).iter().map(|&t| t as i32).collect(),
             mask,
         }
     }
@@ -707,6 +709,18 @@ mod tests {
         assert_eq!(r.mask, vec![0.0, 0.0, 1.0, 1.0]);
         assert_eq!(r.inputs, vec![10, 11, 12, 13]);
         assert_eq!(r.targets, vec![11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn from_tokens_handles_degenerate_rows() {
+        // empty and single-token rows must not underflow/panic; they
+        // produce zero-length rows that dispatch validation rejects
+        for toks in [&[][..], &[42u32][..]] {
+            let r = WorkRow::from_tokens(toks, 0);
+            assert!(r.inputs.is_empty());
+            assert!(r.targets.is_empty());
+            assert!(r.mask.is_empty());
+        }
     }
 
     #[test]

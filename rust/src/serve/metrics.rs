@@ -600,6 +600,38 @@ mod tests {
     }
 
     #[test]
+    fn percentile_empty_and_edge_p_are_pinned() {
+        // the fuzz targets fold these values into replay digests, so the
+        // empty/edge behavior is contract, not convenience: empty input is
+        // exactly 0 for every p (never a panic, never garbage)
+        for p in [0.0, 0.5, 0.99, 1.0, 2.0, -1.0, f64::NAN] {
+            assert_eq!(percentile(&[], p), 0, "empty slice, p={p}");
+        }
+        // rank clamps into [1, len]: p=0 (and below) hits the first sample,
+        // p>=1 the last
+        let v = [10u64, 20, 30];
+        assert_eq!(percentile(&v, 0.0), 10);
+        assert_eq!(percentile(&v, -0.5), 10);
+        assert_eq!(percentile(&v, 1.0), 30);
+        assert_eq!(percentile(&v, 7.0), 30);
+    }
+
+    #[test]
+    fn histogram_percentile_empty_and_edge_p_are_pinned() {
+        let h = LatHistogram::new();
+        // zero recorded samples: exactly 0 at every p, including the edges
+        for p in [0.0, 0.5, 0.99, 1.0, 2.0, -1.0, f64::NAN] {
+            assert_eq!(h.percentile_ticks(p), 0, "empty histogram, p={p}");
+        }
+        // one sample: every p reports that sample's bucket bound (the rank
+        // clamps into [1, total])
+        h.record(1000); // (512, 1024] bucket
+        for p in [0.0, 0.5, 1.0, 3.0] {
+            assert_eq!(h.percentile_ticks(p), 1024, "single sample, p={p}");
+        }
+    }
+
+    #[test]
     fn bucket_bounds_monotone_and_index_maps_into_bounds() {
         let b = bucket_bounds();
         assert_eq!(b.len(), HIST_BUCKETS);

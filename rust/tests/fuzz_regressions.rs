@@ -1,0 +1,71 @@
+//! Fuzz regression suite: every minimized `CBQF` fixture under
+//! `rust/tests/fixtures/` replays against today's parsers forever, plus
+//! short deterministic fuzz runs as an always-on smoke gate.
+//!
+//! A fixture is self-describing (target, expectation, clean hash,
+//! payload), so this suite needs no out-of-band knowledge: drop a file in
+//! the directory and it is enforced from the next `cargo test` on. CI's
+//! `fuzz-smoke` job runs the same binaries at larger budgets.
+
+use cbq::fuzzing::{self, FuzzOpts};
+
+fn fixtures_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("cbq_fuzzreg_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn every_committed_fixture_replays() {
+    let dir = fixtures_dir();
+    let mut paths: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("fixture dir {dir:?} must exist: {e}"))
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "cbqf"))
+        .collect();
+    paths.sort();
+    assert!(
+        !paths.is_empty(),
+        "no .cbqf fixtures under {dir:?} — the seeded regression corpus is missing"
+    );
+    for p in &paths {
+        fuzzing::replay_fixture(p).unwrap_or_else(|e| {
+            panic!("fixture {} no longer holds: {e:#}", p.display());
+        });
+    }
+}
+
+/// Two invocations of the same seeded run must report the identical digest
+/// with zero findings — the property `cbq fuzz` (and CI's double-run
+/// comparison) rests on.
+fn smoke(target: &str, seed: u64, iters: u64) {
+    let mut opts = FuzzOpts::new(seed, iters);
+    opts.scratch = scratch(target);
+    let a = fuzzing::run_target(target, &opts).expect("fuzz run must not error");
+    let b = fuzzing::run_target(target, &opts).expect("fuzz run must not error");
+    assert_eq!(a.digest, b.digest, "{target}: digest must replay bitwise across invocations");
+    assert_eq!(a.cases_ok + a.cases_rejected, b.cases_ok + b.cases_rejected);
+    for f in &a.findings {
+        eprintln!("{target} FINDING iter {}: {}", f.iter, f.summary);
+    }
+    assert!(a.findings.is_empty(), "{target}: {} finding(s) on a healthy tree", a.findings.len());
+    std::fs::remove_dir_all(&opts.scratch).ok();
+}
+
+#[test]
+fn snapshot_target_smoke_is_clean_and_reproducible() {
+    smoke("snapshot", 7, 60);
+}
+
+#[test]
+fn trace_target_smoke_is_clean_and_reproducible() {
+    smoke("trace", 7, 24);
+}
+
+#[test]
+fn differential_target_smoke_is_clean_and_reproducible() {
+    smoke("differential", 7, 9);
+}

@@ -485,10 +485,13 @@ fn prop_blocked_matmul_matches_tensor_oracle() {
 #[test]
 fn prop_qmatmul_bitwise_matches_dequant_matmul() {
     use cbq::runtime::backend::kernels as k;
+    use cbq::runtime::backend::kernels::SimdTier;
     for seed in 0..cases(150) {
         let mut g = Gen::new(seed + 70000);
         let (m, kk, n) = (g.usize_in(1, 40), g.usize_in(1, 48), g.usize_in(1, 40));
-        let bits = [2u8, 4, 8][g.usize_in(0, 2)];
+        // straddling widths (3/5/6/7) decode scalar under every tier but
+        // must still agree bitwise with the vectorized 2/4/8 paths' oracle
+        let bits = [2u8, 3, 4, 5, 6, 7, 8][g.usize_in(0, 6)];
         let half = 1i32 << (bits - 1);
         let codes: Vec<i32> = (0..kk * n)
             .map(|_| g.0.next_below(2 * half as u64) as i32 - half)
@@ -523,6 +526,17 @@ fn prop_qmatmul_bitwise_matches_dequant_matmul() {
             k::matmul_naive(&a, m, kk, &deq, n),
             "seed {seed}: qmatmul_naive {m}x{kk}x{n} bits {bits}"
         );
+        // every forced SIMD tier must agree bitwise — including widths the
+        // vector decode doesn't cover (tiers clamp to scalar decode there)
+        let blocked = k::matmul(&a, m, kk, &deq, n);
+        for tier in [SimdTier::Scalar, SimdTier::Sse2, SimdTier::Avx2] {
+            assert_eq!(
+                k::qmatmul_with_tier(&a, m, kk, &q, tier),
+                blocked,
+                "seed {seed}: qmatmul {m}x{kk}x{n} bits {bits} tier {}",
+                tier.name()
+            );
+        }
 
         // the transposed packer feeds the same kernel and must match the
         // f32 result over the same logical matrix
@@ -558,7 +572,9 @@ fn prop_qmatvec_bitwise_matches_qmatmul_row() {
     for seed in 0..cases(150) {
         let mut g = Gen::new(seed + 75000);
         let (kk, n) = (g.usize_in(1, 96), g.usize_in(1, 80));
-        let bits = [2u8, 4, 8][g.usize_in(0, 2)];
+        // include the straddling widths: they decode scalar under every
+        // tier, and the tiers must still agree bitwise
+        let bits = [2u8, 3, 4, 5, 6, 7, 8][g.usize_in(0, 6)];
         let half = 1i32 << (bits - 1);
         let codes: Vec<i32> = (0..kk * n)
             .map(|_| g.0.next_below(2 * half as u64) as i32 - half)

@@ -343,3 +343,58 @@ fn prop_packed_grid_dequant_matches_fake_quant() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// edge containers (fuzz-harness satellite): shapes at the format's limits
+// must round-trip bit-exactly through BOTH frame versions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn edge_containers_round_trip_v1_and_v2() {
+    use cbq::json::Value;
+    use cbq::snapshot::format::{self, OpenMode};
+    use cbq::tensor::io::Entry;
+
+    let header = Value::obj(vec![("format", Value::str("CBQS")), ("edge", Value::num(1.0))]);
+    // a scalar: rank 0, one element (the format allows empty dims)
+    let scalar = Entry::F32(Tensor::new(vec![], vec![3.25]));
+    // a packed tensor under the longest legal name
+    let long_name = "n".repeat(io::MAX_NAME_LEN);
+    let packed =
+        Entry::Packed(PackedTensor::pack(&[-2, 1, 0, -1, 1, 0], vec![2, 3], 2).unwrap());
+
+    let cases: Vec<(&str, Vec<(String, Entry)>)> = vec![
+        ("empty", vec![]), // zero tensors: header-only container
+        ("scalar", vec![("s".to_string(), scalar)]),
+        ("maxname", vec![(long_name, packed)]),
+    ];
+
+    for (tag, entries) in &cases {
+        // v1 frame
+        let p1 = tmp(&format!("cbqs_edge_v1_{tag}.cbqs"));
+        format::write_container_v1(&p1, &header, entries).unwrap();
+        let (h1, back1) = format::read_container(&p1).unwrap();
+        assert_eq!(h1, header, "{tag}: v1 header");
+        assert_eq!(back1.len(), entries.len(), "{tag}: v1 entry count");
+        for (name, e) in entries {
+            assert_eq!(back1.get(name), Some(e), "{tag}: v1 entry {name:.32}");
+        }
+        std::fs::remove_file(&p1).ok();
+
+        // v2 frame (offset table + per-tensor CRCs), eager AND lazy reads
+        let with_groups: Vec<(String, Entry, i32)> =
+            entries.iter().map(|(n, e)| (n.clone(), e.clone(), -1)).collect();
+        let p2 = tmp(&format!("cbqs_edge_v2_{tag}.cbqs"));
+        format::write_container(&p2, &header, &with_groups).unwrap();
+        let (h2, back2) = format::read_container(&p2).unwrap();
+        assert_eq!(h2, header, "{tag}: v2 header");
+        assert_eq!(back2, back1, "{tag}: v1 and v2 must decode identically");
+        let lazy = format::open_container(&p2, OpenMode::Lazy).unwrap();
+        assert_eq!(lazy.records.len(), entries.len(), "{tag}: v2 record count");
+        for rec in &lazy.records {
+            let e = lazy.materialize(rec).unwrap();
+            assert_eq!(back2.get(&rec.name), Some(&e), "{tag}: lazy materialize {:.32}", rec.name);
+        }
+        std::fs::remove_file(&p2).ok();
+    }
+}
